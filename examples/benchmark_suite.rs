@@ -1,0 +1,57 @@
+//! Full KernelGen sweep — the paper's evaluation in one binary.
+//!
+//! Runs the complete pipeline over all 16 benchmarks on the coordinator's
+//! thread pool and prints Table 2, Figure 2 (all four architectures), and
+//! the Figure 3 stall breakdown for a chosen benchmark.
+//!
+//!     cargo run --release --example benchmark_suite [fig3-bench]
+
+use ptxasw::coordinator::{report, run_suite, PipelineConfig};
+use ptxasw::shuffle::Variant;
+use ptxasw::suite::suite;
+use std::time::Instant;
+
+fn main() {
+    let fig3_pick = std::env::args().nth(1).unwrap_or_else(|| "gaussblur".into());
+    let cfg = PipelineConfig {
+        variants: vec![Variant::NoLoad, Variant::NoCorner, Variant::Full],
+        ..PipelineConfig::default()
+    };
+    let benches = suite();
+    let t0 = Instant::now();
+    let results = run_suite(&benches, &cfg);
+    let wall = t0.elapsed();
+
+    let ok: Vec<_> = results
+        .iter()
+        .map(|r| r.as_ref().expect("pipeline"))
+        .collect();
+
+    println!("=== Table 2 ===");
+    println!("{}", report::table2(&ok));
+    println!("=== Figure 2 (speed-up vs Original; occupancy of PTXASW) ===");
+    println!("{}", report::figure2(&ok, &cfg.archs, &cfg.variants));
+    if let Some(r) = ok.iter().find(|r| r.name == fig3_pick) {
+        println!("=== Figure 3 (stall breakdown: {fig3_pick}) ===");
+        println!("{}", report::figure3(r, &cfg.archs));
+    }
+
+    // validity audit: PTXASW must be bit-exact everywhere
+    let mut valid = 0;
+    let mut invalid_probes = 0;
+    for r in &ok {
+        for (v, o) in &r.variants {
+            match (v, o.valid) {
+                (Variant::Full, Some(true)) => valid += 1,
+                (Variant::Full, Some(false)) => panic!("{}: PTXASW corrupted output!", r.name),
+                (_, Some(false)) => invalid_probes += 1,
+                _ => {}
+            }
+        }
+    }
+    println!(
+        "PTXASW bit-exact on {valid}/16 benchmarks; \
+         {invalid_probes} perf-probe variants invalid as expected; \
+         full sweep in {wall:.2?}"
+    );
+}

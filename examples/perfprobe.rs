@@ -1,0 +1,29 @@
+use ptxasw::sim::run;
+use ptxasw::suite::{by_name, workload, generate};
+use ptxasw::emu::emulate;
+use ptxasw::shuffle::{detect, DetectOpts};
+use std::time::Instant;
+
+fn main() {
+    // simulator throughput on tricubic (largest kernel)
+    let b = by_name("tricubic").unwrap();
+    let w = workload(&b, 64, 16, 12, 1);
+    let t0 = Instant::now();
+    let r = run(&w.kernel, &w.cfg, w.mem).unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    println!("sim: {} warp-instr in {:.3}s = {:.2} M warp-instr/s ({:.2} M thread-instr/s)",
+        r.stats.warp_instructions, dt,
+        r.stats.warp_instructions as f64 / dt / 1e6,
+        r.stats.thread_instructions as f64 / dt / 1e6);
+    // analysis throughput across whole suite
+    let t1 = Instant::now();
+    let mut total_terms = 0usize;
+    for b in ptxasw::suite::suite() {
+        let k = generate(&b);
+        let res = emulate(&k).unwrap();
+        total_terms += res.pool.len();
+        let _ = detect(&k, &res, DetectOpts::default());
+    }
+    println!("analysis: full 16-benchmark suite in {:.1}ms ({} terms interned)",
+        t1.elapsed().as_secs_f64()*1e3, total_terms);
+}

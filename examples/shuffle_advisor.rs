@@ -1,0 +1,82 @@
+//! §8 guidelines as a tool: given a kernel and a target GPU generation,
+//! report whether shuffle synthesis is advisable and why — the paper's
+//! per-architecture analysis (execution-dependency vs texture-stall vs
+//! cache-efficiency trade-offs) distilled into a decision procedure.
+//!
+//!     cargo run --release --example shuffle_advisor [bench ...]
+
+use ptxasw::coordinator::{run_benchmark, PipelineConfig};
+use ptxasw::perf::Stall;
+use ptxasw::shuffle::Variant;
+use ptxasw::suite::{by_name, suite};
+
+fn main() {
+    let names: Vec<String> = std::env::args().skip(1).collect();
+    let benches = if names.is_empty() {
+        suite()
+    } else {
+        names
+            .iter()
+            .map(|n| by_name(n).unwrap_or_else(|| panic!("unknown benchmark `{n}`")))
+            .collect()
+    };
+
+    let cfg = PipelineConfig::default();
+    println!(
+        "{:<12} {:<8} {:>8} {:>7} {:>9}  advice",
+        "benchmark", "arch", "speedup", "Δocc", "tex-stall"
+    );
+    for b in benches {
+        let r = match run_benchmark(&b, &cfg) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("{e}");
+                continue;
+            }
+        };
+        if r.detection.shuffle_count() == 0 {
+            println!("{:<12} {:<8} {:>8} {:>7} {:>9}  no shuffle opportunities", r.name, "-", "-", "-", "-");
+            continue;
+        }
+        for (ai, arch) in cfg.archs.iter().enumerate() {
+            let speedup = r.speedup(Variant::Full, ai).unwrap();
+            let base = &r.baseline.reports[ai];
+            let full = &r
+                .variants
+                .iter()
+                .find(|(v, _)| *v == Variant::Full)
+                .unwrap()
+                .1
+                .reports[ai];
+            let docc = full.occupancy - base.occupancy;
+            let tex = base
+                .stall_fractions()
+                .iter()
+                .find(|(n, _)| *n == Stall::Texture.name())
+                .map(|(_, f)| *f)
+                .unwrap_or(0.0);
+            // §8 decision procedure
+            let advice = if speedup >= 1.05 && tex > 0.10 {
+                "APPLY — texture stalls replaced by shuffles"
+            } else if speedup >= 1.05 {
+                "APPLY — memory traffic reduction wins"
+            } else if speedup >= 0.98 {
+                "NEUTRAL — within noise; prefer original for simplicity"
+            } else if arch.name == "Volta" {
+                "AVOID — cache already hides loads; corner cases cost occupancy"
+            } else if docc < -0.05 {
+                "AVOID — register pressure drops occupancy"
+            } else {
+                "AVOID — corner-case overhead exceeds latency savings"
+            };
+            println!(
+                "{:<12} {:<8} {:>7.3}x {:>+7.2} {:>8.1}%  {advice}",
+                r.name,
+                arch.name,
+                speedup,
+                docc,
+                tex * 100.0
+            );
+        }
+    }
+}

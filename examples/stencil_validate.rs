@@ -1,0 +1,84 @@
+//! End-to-end three-layer driver (DESIGN.md "validation ladder" rung 5).
+//!
+//! The same Jacobi stencil runs three ways on a real small workload:
+//!   (a) the AOT Pallas/JAX artifact executed by the Rust PJRT runtime
+//!       (L1+L2, built once by `make artifacts`),
+//!   (b) the warp simulator executing the NVHPC-shaped original PTX (L3),
+//!   (c) the simulator executing the shuffle-synthesized PTX.
+//! Requirements: (b) == (c) bit-exactly, and (a) ≈ (b) to float tolerance
+//! (different fma association). Also reports the modelled speed-up of (c)
+//! on every GPU generation — the headline metric.
+//!
+//!     make artifacts && cargo run --release --example stencil_validate
+
+use ptxasw::coordinator::{run_benchmark, PipelineConfig};
+use ptxasw::runtime::Runtime;
+use ptxasw::shuffle::Variant;
+use ptxasw::sim::run;
+use ptxasw::suite::{by_name, generate, workload};
+use std::time::Instant;
+
+fn main() {
+    // --- layer 1+2: PJRT executes the Pallas/JAX artifact ---
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mut rt = match Runtime::open(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("{e}\nrun `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    println!("PJRT platform: {}", rt.platform());
+    let dims = rt.spec("jacobi").expect("jacobi artifact").args[0]
+        .dims
+        .clone();
+    let (ny, nx) = (dims[0], dims[1]);
+    println!("workload: jacobi {ny}x{nx} f32");
+
+    let bench = by_name("jacobi").unwrap();
+    let w = workload(&bench, nx, ny, 1, 31337);
+    let input = w.mem.read_f32s(w.cfg.params[1], nx * ny).unwrap();
+
+    let t0 = Instant::now();
+    let pjrt_out = rt.run_f32("jacobi", &[&input]).expect("pjrt exec");
+    let t_pjrt = t0.elapsed();
+
+    // --- layer 3: simulate original and synthesized PTX ---
+    let kernel = generate(&bench);
+    let t1 = Instant::now();
+    let base = run(&kernel, &w.cfg, w.mem).expect("sim original");
+    let t_sim = t1.elapsed();
+    let sim_out = base.mem.read_f32s(w.out_ptr, w.out_len).unwrap();
+
+    let cfg = PipelineConfig::default();
+    let result = run_benchmark(&bench, &cfg).expect("pipeline");
+    let full = result
+        .variants
+        .iter()
+        .find(|(v, _)| *v == Variant::Full)
+        .unwrap();
+    assert_eq!(full.1.valid, Some(true), "synthesized PTX must be bit-exact");
+
+    // --- cross-layer numerics ---
+    let mut max_err = 0f32;
+    for (a, b) in pjrt_out.iter().zip(&sim_out) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(max_err < 1e-5, "PJRT vs simulator: max err {max_err}");
+    println!(
+        "cross-check: PJRT(Pallas) vs simulated PTX max abs err = {max_err:.2e}  ✓"
+    );
+    println!(
+        "timings: PJRT exec {t_pjrt:?}; warp-sim ({} warp-instrs) {t_sim:?}",
+        base.stats.warp_instructions
+    );
+
+    // --- headline metric: modelled speed-up per architecture ---
+    println!("\nmodelled PTXASW speed-up (jacobi, {} shuffles):", result.detection.shuffle_count());
+    for (ai, arch) in cfg.archs.iter().enumerate() {
+        let s = result.speedup(Variant::Full, ai).unwrap();
+        let occ = full.1.reports[ai].occupancy;
+        println!("  {:<8} {:>6.3}x  (occupancy {:.2})", arch.name, s, occ);
+    }
+    println!("\nstencil_validate OK — all three layers agree");
+}

@@ -1,0 +1,61 @@
+"""AOT driver: lower every L2 export to `artifacts/<name>.hlo.txt`.
+
+Runs once at build time (`make artifacts`); Python is never on the Rust
+request path. Incremental: skips artifacts newer than the compile sources
+unless `--force`.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--force] [names...]
+"""
+
+import argparse
+import pathlib
+import sys
+
+from . import model
+
+
+def _sources_mtime() -> float:
+    here = pathlib.Path(__file__).parent
+    return max(p.stat().st_mtime for p in here.rglob("*.py"))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=str(pathlib.Path(__file__).parents[2] / "artifacts"))
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("names", nargs="*", help="subset of exports (default: all)")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    names = args.names or sorted(model.EXPORTS)
+    src_mtime = _sources_mtime()
+
+    wrote = 0
+    for name in names:
+        if name not in model.EXPORTS:
+            print(f"unknown export `{name}`; have {sorted(model.EXPORTS)}", file=sys.stderr)
+            return 2
+        path = out_dir / f"{name}.hlo.txt"
+        if not args.force and path.exists() and path.stat().st_mtime >= src_mtime:
+            print(f"  up-to-date {path.name}")
+            continue
+        text = model.lower_to_hlo_text(name)
+        path.write_text(text)
+        print(f"  wrote {path.name} ({len(text)} chars)")
+        wrote += 1
+
+    # shape manifest for the Rust runtime
+    manifest = out_dir / "manifest.txt"
+    lines = []
+    for name in sorted(model.EXPORTS):
+        _, shapes = model.EXPORTS[name]
+        dims = ";".join(",".join(str(d) for d in s) for s in shapes)
+        lines.append(f"{name} f32 {dims}")
+    manifest.write_text("\n".join(lines) + "\n")
+    print(f"  manifest: {len(lines)} entries; {wrote} artifact(s) rebuilt")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,243 @@
+"""Shared tap-set definitions and the generic Pallas stencil kernels.
+
+The tap sets MUST match `rust/src/suite/kernelgen.rs` exactly — the
+end-to-end example (`examples/stencil_validate.rs`) runs the same stencil
+three ways (PJRT-executed Pallas artifact, simulated original PTX,
+simulated shuffle-synthesized PTX) and cross-checks the numerics.
+
+Layout convention: 2D arrays are `[ny, nx]`, 3D arrays `[nz, ny, nx]`,
+with the thread (leading) dimension `i` innermost — the same linearization
+`idx = (k*ny + j)*nx + i` the PTX generator uses.
+
+All Pallas kernels run with ``interpret=True``: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute (see DESIGN.md
+§Hardware-Adaptation).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# --- tap tables (array, di, dj, dk, coef) — keep in sync with kernelgen.rs
+
+JACOBI_C = (0.5, 0.1, 0.025)  # center, edge, corner
+
+
+def jacobi_taps():
+    c0, c1, c2 = JACOBI_C
+    taps = []
+    for dj in (-1, 0, 1):
+        for di in (-1, 0, 1):
+            c = c0 if (di, dj) == (0, 0) else (c1 if abs(di) + abs(dj) == 1 else c2)
+            taps.append((di, dj, c))
+    return taps
+
+
+def gaussblur_taps():
+    w = (0.054, 0.244, 0.403, 0.244, 0.054)
+    return [
+        (di, dj, w[di + 2] * w[dj + 2])
+        for dj in (-2, -1, 0, 1, 2)
+        for di in (-2, -1, 0, 1, 2)
+    ]
+
+
+def gameoflife_taps():
+    return [
+        (di, dj, 0.5 if dj == 0 else 0.125)
+        for dj in (-1, 0, 1)
+        for di in (-1, 0, 1)
+    ]
+
+
+def laplacian_taps():
+    return [
+        (-1, 0, 0, 1.0),
+        (0, 0, 0, -6.0),
+        (1, 0, 0, 1.0),
+        (0, -1, 0, 1.0),
+        (0, 1, 0, 1.0),
+        (0, 0, -1, 1.0),
+        (0, 0, 1, 1.0),
+    ]
+
+
+def gradient_taps():
+    return [
+        (-1, 0, 0, -0.5),
+        (1, 0, 0, 0.5),
+        (0, -1, 0, -0.5),
+        (0, 1, 0, 0.5),
+        (0, 0, -1, -0.5),
+        (0, 0, 1, 0.5),
+    ]
+
+
+def wave13pt_taps():
+    taps = [(di, 0, 0, 0.1) for di in (-2, -1, 0, 1, 2)]
+    taps += [(0, dj, 0, 0.05) for dj in (-2, -1, 1, 2)]
+    taps += [(0, 0, dk, 0.05) for dk in (-2, -1, 1, 2)]
+    return taps
+
+
+# --- generic whole-block Pallas kernels -----------------------------------
+
+
+def _halo2(taps):
+    hi = max(abs(t[0]) for t in taps)
+    hj = max(abs(t[1]) for t in taps)
+    return hi, hj
+
+
+def _halo3(taps):
+    hi = max(abs(t[0]) for t in taps)
+    hj = max(abs(t[1]) for t in taps)
+    hk = max(abs(t[2]) for t in taps)
+    return hi, hj, hk
+
+
+def stencil2d_pallas(taps, shape, dtype=jnp.float32):
+    """Whole-array Pallas stencil: `out[j,i] = Σ c·x[j+dj, i+di]` on the
+    interior, zero on the halo ring."""
+    ny, nx = shape
+    hi, hj = _halo2(taps)
+
+    def kernel(x_ref, o_ref):
+        x = x_ref[...]
+        acc = jnp.zeros((ny - 2 * hj, nx - 2 * hi), dtype)
+        for di, dj, c in taps:
+            sl = x[hj + dj : ny - hj + dj, hi + di : nx - hi + di]
+            acc = acc + dtype(c) * sl
+        out = jnp.zeros((ny, nx), dtype)
+        o_ref[...] = jax.lax.dynamic_update_slice(out, acc, (hj, hi))
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((ny, nx), dtype),
+        interpret=True,
+    )
+
+
+def stencil2d_pallas_tiled(taps, shape, tile_j=8, dtype=jnp.float32):
+    """Row-tiled Pallas stencil: the HBM→VMEM schedule a real TPU would use.
+
+    The input stays in `ANY` memory space; each grid step loads its row
+    tile plus halo with `pl.load` (the explicit DMA), computes, and writes
+    one output tile. This is the VMEM-halo pattern DESIGN.md maps the
+    paper's register-cache insight onto.
+    """
+    ny, nx = shape
+    hi, hj = _halo2(taps)
+    inner = ny - 2 * hj
+    # largest tile ≤ requested that divides the interior row count
+    tile_j = next(t for t in range(min(tile_j, inner), 0, -1) if inner % t == 0)
+    grid = inner // tile_j
+
+    def kernel(x_ref, o_ref):
+        j = pl.program_id(0)
+        row0 = j * tile_j  # first interior row of this tile (offset by hj)
+        x = x_ref[pl.dslice(row0, tile_j + 2 * hj), pl.dslice(0, nx)]
+        acc = jnp.zeros((tile_j, nx - 2 * hi), dtype)
+        for di, dj, c in taps:
+            sl = jax.lax.dynamic_slice(
+                x, (hj + dj, hi + di), (tile_j, nx - 2 * hi)
+            )
+            acc = acc + dtype(c) * sl
+        out_tile = jnp.zeros((tile_j, nx), dtype)
+        out_tile = jax.lax.dynamic_update_slice(out_tile, acc, (0, hi))
+        o_ref[pl.dslice(row0 + hj, tile_j), pl.dslice(0, nx)] = out_tile
+        # first/last grid steps also zero the halo rings (the output
+        # buffer is uninitialized in ANY memory space)
+        @pl.when(j == 0)
+        def _():
+            o_ref[pl.dslice(0, hj), pl.dslice(0, nx)] = jnp.zeros((hj, nx), dtype)
+
+        @pl.when(j == grid - 1)
+        def _():
+            o_ref[pl.dslice(ny - hj, hj), pl.dslice(0, nx)] = jnp.zeros(
+                (hj, nx), dtype
+            )
+
+    def run(x):
+        # zero-init output so the halo ring is well-defined
+        return pl.pallas_call(
+            kernel,
+            grid=(grid,),
+            in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+            out_specs=pl.BlockSpec(memory_space=pl.ANY),
+            out_shape=jax.ShapeDtypeStruct((ny, nx), dtype),
+            interpret=True,
+        )(x)
+
+    return run
+
+
+def stencil3d_pallas(taps, shape, dtype=jnp.float32):
+    """Whole-array 3D Pallas stencil over `[nz, ny, nx]`."""
+    nz, ny, nx = shape
+    hi, hj, hk = _halo3(taps)
+
+    def kernel(x_ref, o_ref):
+        x = x_ref[...]
+        acc = jnp.zeros((nz - 2 * hk, ny - 2 * hj, nx - 2 * hi), dtype)
+        for di, dj, dk, c in taps:
+            sl = x[
+                hk + dk : nz - hk + dk,
+                hj + dj : ny - hj + dj,
+                hi + di : nx - hi + di,
+            ]
+            acc = acc + dtype(c) * sl
+        out = jnp.zeros((nz, ny, nx), dtype)
+        o_ref[...] = jax.lax.dynamic_update_slice(out, acc, (hk, hj, hi))
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((nz, ny, nx), dtype),
+        interpret=True,
+    )
+
+
+def wave13pt_pallas(shape, dtype=jnp.float32):
+    """Two-input wave kernel: 13-point stencil of w0 minus the previous
+    time step w1 (tap coef -1.0), matching the Rust benchmark."""
+    nz, ny, nx = shape
+    taps = wave13pt_taps()
+    hi, hj, hk = _halo3(taps)
+
+    def kernel(w0_ref, w1_ref, o_ref):
+        w0 = w0_ref[...]
+        w1 = w1_ref[...]
+        acc = jnp.zeros((nz - 2 * hk, ny - 2 * hj, nx - 2 * hi), dtype)
+        for di, dj, dk, c in taps:
+            sl = w0[
+                hk + dk : nz - hk + dk,
+                hj + dj : ny - hj + dj,
+                hi + di : nx - hi + di,
+            ]
+            acc = acc + dtype(c) * sl
+        acc = acc + dtype(-1.0) * w1[hk : nz - hk, hj : ny - hj, hi : nx - hi]
+        out = jnp.zeros((nz, ny, nx), dtype)
+        o_ref[...] = jax.lax.dynamic_update_slice(out, acc, (hk, hj, hi))
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((nz, ny, nx), dtype),
+        interpret=True,
+    )
+
+
+# convenience constructors per benchmark --------------------------------------
+
+jacobi = partial(lambda shape, **kw: stencil2d_pallas(jacobi_taps(), shape, **kw))
+jacobi_tiled = partial(
+    lambda shape, **kw: stencil2d_pallas_tiled(jacobi_taps(), shape, **kw)
+)
+gaussblur = partial(lambda shape, **kw: stencil2d_pallas(gaussblur_taps(), shape, **kw))
+gameoflife = partial(
+    lambda shape, **kw: stencil2d_pallas(gameoflife_taps(), shape, **kw)
+)
+laplacian = partial(lambda shape, **kw: stencil3d_pallas(laplacian_taps(), shape, **kw))
+gradient = partial(lambda shape, **kw: stencil3d_pallas(gradient_taps(), shape, **kw))
+wave13pt = partial(lambda shape, **kw: wave13pt_pallas(shape, **kw))

@@ -1,0 +1,70 @@
+"""Pure-jnp correctness oracle for every Pallas kernel.
+
+Written independently of the Pallas implementations (jnp.roll + interior
+masks instead of dynamic_update_slice) so a bug in the kernels cannot be
+mirrored here.
+"""
+
+import jax.numpy as jnp
+
+from . import common
+
+
+def _interior_mask2(shape, hi, hj):
+    ny, nx = shape
+    m = jnp.zeros(shape, bool)
+    return m.at[hj : ny - hj, hi : nx - hi].set(True)
+
+
+def stencil2d_ref(taps, x):
+    hi = max(abs(t[0]) for t in taps)
+    hj = max(abs(t[1]) for t in taps)
+    acc = jnp.zeros_like(x)
+    for di, dj, c in taps:
+        acc = acc + jnp.float32(c) * jnp.roll(x, (-dj, -di), axis=(0, 1))
+    return jnp.where(_interior_mask2(x.shape, hi, hj), acc, 0.0)
+
+
+def stencil3d_ref(taps, x):
+    nz, ny, nx = x.shape
+    hi = max(abs(t[0]) for t in taps)
+    hj = max(abs(t[1]) for t in taps)
+    hk = max(abs(t[2]) for t in taps)
+    acc = jnp.zeros_like(x)
+    for di, dj, dk, c in taps:
+        acc = acc + jnp.float32(c) * jnp.roll(x, (-dk, -dj, -di), axis=(0, 1, 2))
+    m = jnp.zeros(x.shape, bool)
+    m = m.at[hk : nz - hk, hj : ny - hj, hi : nx - hi].set(True)
+    return jnp.where(m, acc, 0.0)
+
+
+def jacobi_ref(x):
+    return stencil2d_ref(common.jacobi_taps(), x)
+
+
+def gaussblur_ref(x):
+    return stencil2d_ref(common.gaussblur_taps(), x)
+
+
+def gameoflife_ref(x):
+    return stencil2d_ref(common.gameoflife_taps(), x)
+
+
+def laplacian_ref(x):
+    return stencil3d_ref(common.laplacian_taps(), x)
+
+
+def gradient_ref(x):
+    return stencil3d_ref(common.gradient_taps(), x)
+
+
+def wave13pt_ref(w0, w1):
+    taps = common.wave13pt_taps()
+    acc = stencil3d_ref(taps, w0)
+    nz, ny, nx = w0.shape
+    hi = max(abs(t[0]) for t in taps)
+    hj = max(abs(t[1]) for t in taps)
+    hk = max(abs(t[2]) for t in taps)
+    m = jnp.zeros(w0.shape, bool)
+    m = m.at[hk : nz - hk, hj : ny - hj, hi : nx - hi].set(True)
+    return jnp.where(m, acc - w1, 0.0)

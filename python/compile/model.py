@@ -1,0 +1,100 @@
+"""L2: the JAX compute graphs that get AOT-lowered for the Rust runtime.
+
+Each benchmark's single-step function calls the L1 Pallas kernel; the
+multi-step variants `lax.scan` over it (fused by XLA into one executable —
+no per-step Python). The Rust coordinator loads the lowered HLO once and
+drives it from the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import common
+
+# --- single-step graphs -------------------------------------------------------
+
+
+def jacobi_step(x):
+    return common.stencil2d_pallas(common.jacobi_taps(), x.shape)(x)
+
+
+def jacobi_step_tiled(x):
+    return common.stencil2d_pallas_tiled(common.jacobi_taps(), x.shape)(x)
+
+
+def gaussblur_step(x):
+    return common.stencil2d_pallas(common.gaussblur_taps(), x.shape)(x)
+
+
+def gameoflife_step(x):
+    return common.stencil2d_pallas(common.gameoflife_taps(), x.shape)(x)
+
+
+def laplacian_step(x):
+    return common.stencil3d_pallas(common.laplacian_taps(), x.shape)(x)
+
+
+def gradient_step(x):
+    return common.stencil3d_pallas(common.gradient_taps(), x.shape)(x)
+
+
+def wave13pt_step(w0, w1):
+    return common.wave13pt_pallas(w0.shape)(w0, w1)
+
+
+# --- multi-step models (scan, not unroll: compact HLO, no recompute) ----------
+
+
+def jacobi_n_steps(x, n):
+    def body(carry, _):
+        return jacobi_step(carry), ()
+
+    out, _ = lax.scan(body, x, (), length=n)
+    return out
+
+
+def wave_n_steps(w0, w1, n):
+    """Leapfrog-ish: new = stencil(w0) - w1; shift time planes."""
+
+    def body(carry, _):
+        w0, w1 = carry
+        new = wave13pt_step(w0, w1)
+        return (new, w0), ()
+
+    (w0, w1), _ = lax.scan(body, (w0, w1), (), length=n)
+    return w0
+
+
+# --- export table --------------------------------------------------------------
+
+# name -> (fn, example-arg shapes); shapes match the Rust e2e example
+SHAPE2D = (16, 96)
+SHAPE3D = (8, 10, 40)
+
+EXPORTS = {
+    "jacobi": (jacobi_step, [SHAPE2D]),
+    "jacobi_tiled": (jacobi_step_tiled, [SHAPE2D]),
+    "gaussblur": (gaussblur_step, [SHAPE2D]),
+    "gameoflife": (gameoflife_step, [SHAPE2D]),
+    "laplacian": (laplacian_step, [SHAPE3D]),
+    "gradient": (gradient_step, [SHAPE3D]),
+    "wave13pt": (wave13pt_step, [SHAPE3D, SHAPE3D]),
+    "jacobi_x4": (lambda x: jacobi_n_steps(x, 4), [SHAPE2D]),
+}
+
+
+def lower_to_hlo_text(name):
+    """Lower one export to HLO text (the interchange format the xla crate's
+    text parser accepts — serialized protos from jax ≥ 0.5 are rejected by
+    xla_extension 0.5.1; see /opt/xla-example/README.md)."""
+    from jax._src.lib import xla_client as xc
+
+    fn, shapes = EXPORTS[name]
+    args = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()

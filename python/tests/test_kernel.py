@@ -1,0 +1,114 @@
+"""L1 correctness: every Pallas kernel against the pure-jnp oracle.
+
+Hypothesis sweeps shapes and data; fixed cases pin the exported shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import common, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(-2.0, 2.0, size=shape).astype(np.float32))
+
+
+STENCILS_2D = [
+    ("jacobi", common.jacobi_taps, ref.jacobi_ref),
+    ("gaussblur", common.gaussblur_taps, ref.gaussblur_ref),
+    ("gameoflife", common.gameoflife_taps, ref.gameoflife_ref),
+]
+
+STENCILS_3D = [
+    ("laplacian", common.laplacian_taps, ref.laplacian_ref),
+    ("gradient", common.gradient_taps, ref.gradient_ref),
+]
+
+
+@pytest.mark.parametrize("name,taps,oracle", STENCILS_2D)
+def test_2d_matches_ref_exported_shape(name, taps, oracle):
+    x = rand((16, 96), seed=hash(name) % 2**32)
+    got = common.stencil2d_pallas(taps(), x.shape)(x)
+    np.testing.assert_allclose(got, oracle(x), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("name,taps,oracle", STENCILS_3D)
+def test_3d_matches_ref_exported_shape(name, taps, oracle):
+    x = rand((8, 10, 40), seed=hash(name) % 2**32)
+    got = common.stencil3d_pallas(taps(), x.shape)(x)
+    np.testing.assert_allclose(got, oracle(x), rtol=1e-5, atol=1e-6)
+
+
+def test_wave13pt_matches_ref():
+    w0 = rand((8, 10, 40), seed=1)
+    w1 = rand((8, 10, 40), seed=2)
+    got = common.wave13pt_pallas(w0.shape)(w0, w1)
+    np.testing.assert_allclose(got, ref.wave13pt_ref(w0, w1), rtol=1e-5, atol=1e-6)
+
+
+def test_tiled_jacobi_matches_plain():
+    x = rand((18, 64), seed=3)  # 16 interior rows = 2 tiles of 8
+    plain = common.stencil2d_pallas(common.jacobi_taps(), x.shape)(x)
+    tiled = common.stencil2d_pallas_tiled(common.jacobi_taps(), x.shape, tile_j=8)(x)
+    np.testing.assert_allclose(tiled, plain, rtol=1e-6, atol=1e-7)
+
+
+def test_halo_ring_is_zero():
+    x = rand((12, 40), seed=4)
+    out = np.asarray(common.stencil2d_pallas(common.gaussblur_taps(), x.shape)(x))
+    assert (out[:2, :] == 0).all() and (out[-2:, :] == 0).all()
+    assert (out[:, :2] == 0).all() and (out[:, -2:] == 0).all()
+    assert np.abs(out[2:-2, 2:-2]).sum() > 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    ny=st.integers(3, 24),
+    nx=st.integers(3, 48),
+    seed=st.integers(0, 2**31),
+)
+def test_prop_jacobi_shapes(ny, nx, seed):
+    x = rand((ny, nx), seed)
+    got = common.stencil2d_pallas(common.jacobi_taps(), x.shape)(x)
+    np.testing.assert_allclose(got, ref.jacobi_ref(x), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    nz=st.integers(3, 8),
+    ny=st.integers(3, 10),
+    nx=st.integers(3, 24),
+    seed=st.integers(0, 2**31),
+)
+def test_prop_laplacian_shapes(nz, ny, nx, seed):
+    x = rand((nz, ny, nx), seed)
+    got = common.stencil3d_pallas(common.laplacian_taps(), x.shape)(x)
+    np.testing.assert_allclose(got, ref.laplacian_ref(x), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_prop_linear_in_input(seed):
+    # stencils are linear: f(a·x) == a·f(x)
+    x = rand((10, 32), seed)
+    f = common.stencil2d_pallas(common.jacobi_taps(), x.shape)
+    np.testing.assert_allclose(f(2.0 * x), 2.0 * f(x), rtol=1e-5, atol=1e-6)
+
+
+def test_tap_tables_match_rust_counts():
+    # keep in sync with kernelgen.rs / Table 2
+    assert len(common.jacobi_taps()) == 9
+    assert len(common.gaussblur_taps()) == 25
+    assert len(common.gameoflife_taps()) == 9
+    assert len(common.laplacian_taps()) == 7
+    assert len(common.gradient_taps()) == 6
+    assert len(common.wave13pt_taps()) == 13
+    # gaussblur weights are a separable normalized-ish blur
+    s = sum(c for _, _, c in common.gaussblur_taps())
+    assert abs(s - sum((0.054, 0.244, 0.403, 0.244, 0.054)) ** 2) < 1e-6

@@ -1,0 +1,102 @@
+//! Figure 2 reproduction: speed-up of NO LOAD / NO CORNER / PTXASW vs the
+//! original, with SM occupancy, for all 16 benchmarks on all four GPU
+//! generations — plus the paper's qualitative shape checks.
+//!
+//!     cargo bench --bench fig2_speedup
+
+use ptxasw::coordinator::{report, run_suite, PipelineConfig};
+use ptxasw::shuffle::Variant;
+use ptxasw::suite::suite;
+
+fn main() {
+    let cfg = PipelineConfig {
+        variants: vec![Variant::NoLoad, Variant::NoCorner, Variant::Full],
+        ..PipelineConfig::default()
+    };
+    let benches = suite();
+    let results = run_suite(&benches, &cfg);
+    let ok: Vec<_> = results
+        .iter()
+        .map(|r| r.as_ref().expect("pipeline"))
+        .collect();
+
+    println!("=== Figure 2: speed-up vs Original ===\n");
+    println!("{}", report::figure2(&ok, &cfg.archs, &cfg.variants));
+
+    // ---- paper shape checks (who wins, where, by roughly what factor) ----
+    let arch_idx = |n: &str| cfg.archs.iter().position(|a| a.name == n).unwrap();
+    let (kep, max, pas, vol) = (
+        arch_idx("Kepler"),
+        arch_idx("Maxwell"),
+        arch_idx("Pascal"),
+        arch_idx("Volta"),
+    );
+    let get = |name: &str| ok.iter().find(|r| r.name == name).unwrap();
+
+    // 1. zero-shuffle benchmarks are exactly flat everywhere
+    for n in ["matmul", "matvec", "sincos", "vecadd"] {
+        for ai in [kep, max, pas, vol] {
+            let s = get(n).speedup(Variant::Full, ai).unwrap();
+            assert!((s - 1.0).abs() < 1e-9, "{n}: {s}");
+        }
+    }
+    println!("shape 1 OK: matmul/matvec/sincos/vecadd unchanged");
+
+    // 2. Maxwell's best case is gaussblur (paper: +132%, texture stalls)
+    let best_maxwell = ok
+        .iter()
+        .filter(|r| r.detection.shuffle_count() > 0)
+        .max_by(|a, b| {
+            a.speedup(Variant::Full, max)
+                .partial_cmp(&b.speedup(Variant::Full, max))
+                .unwrap()
+        })
+        .unwrap();
+    assert_eq!(best_maxwell.name, "gaussblur", "Maxwell best case");
+    let gb = get("gaussblur").speedup(Variant::Full, max).unwrap();
+    assert!(gb > 1.3, "gaussblur Maxwell should win big, got {gb:.3}");
+    println!("shape 2 OK: Maxwell peaks on gaussblur ({gb:.3}x; paper 2.32x)");
+
+    // 3. Volta: performance degradation when >10 shuffles are generated
+    for r in ok.iter().filter(|r| r.detection.shuffle_count() > 10) {
+        let s = r.speedup(Variant::Full, vol).unwrap();
+        assert!(s < 1.0, "{}: Volta with {} shuffles gave {s:.3}x", r.name, r.detection.shuffle_count());
+    }
+    println!("shape 3 OK: Volta degrades whenever >10 shuffles are placed");
+
+    // 4. gaussblur: Volta's performance drops by roughly half of original
+    let gbv = get("gaussblur").speedup(Variant::Full, vol).unwrap();
+    assert!(gbv < 0.75, "gaussblur Volta {gbv:.3}");
+    println!("shape 4 OK: gaussblur halves on Volta ({gbv:.3}x; paper ~0.5x)");
+
+    // 5. per-arch average ordering: Maxwell > Pascal > Volta (paper:
+    //    +10.9% / +1.8% / -15.2%); Kepler mixed (-3.3%)
+    let avg = |ai: usize| -> f64 {
+        let v: Vec<f64> = ok
+            .iter()
+            .map(|r| r.speedup(Variant::Full, ai).unwrap())
+            .collect();
+        v.iter().sum::<f64>() / v.len() as f64
+    };
+    let (am, ap, av, ak) = (avg(max), avg(pas), avg(vol), avg(kep));
+    println!(
+        "averages: Kepler {ak:.3} Maxwell {am:.3} Pascal {ap:.3} Volta {av:.3} \
+         (paper: 0.967 / 1.109 / 1.018 / 0.848)"
+    );
+    assert!(am > ap && ap > av, "Maxwell > Pascal > Volta ordering");
+    assert!(am > 1.0, "Maxwell must gain on average");
+    assert!(av < 1.0, "Volta must lose on average");
+
+    // 6. NO LOAD >= PTXASW on every benchmark/arch (removing work is the
+    //    upper bound of covering it)
+    for r in &ok {
+        for ai in [kep, max, pas, vol] {
+            let nl = r.speedup(Variant::NoLoad, ai).unwrap();
+            let f = r.speedup(Variant::Full, ai).unwrap();
+            assert!(nl >= f - 1e-9, "{} arch{ai}: NO LOAD {nl} < PTXASW {f}", r.name);
+        }
+    }
+    println!("shape 6 OK: NO LOAD bounds PTXASW everywhere");
+
+    println!("\nfig2_speedup OK — paper shapes reproduced");
+}

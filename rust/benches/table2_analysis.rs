@@ -1,0 +1,91 @@
+//! Table 2 reproduction: per-benchmark shuffle/load counts, average deltas
+//! and analysis wall-time, with the paper's values side by side.
+//!
+//!     cargo bench --bench table2_analysis
+
+use ptxasw::emu::emulate;
+use ptxasw::shuffle::{detect, DetectOpts};
+use ptxasw::suite::{generate, suite};
+use std::time::Instant;
+
+/// Paper Table 2 (name, shuffles, loads, delta, analysis seconds).
+const PAPER: [(&str, usize, usize, Option<f64>, f64); 16] = [
+    ("divergence", 1, 6, Some(2.00), 4.281),
+    ("gameoflife", 6, 9, Some(1.50), 3.470),
+    ("gaussblur", 20, 25, Some(2.50), 7.938),
+    ("gradient", 1, 6, Some(2.00), 4.668),
+    ("jacobi", 6, 9, Some(1.50), 4.119),
+    ("lapgsrb", 12, 25, Some(1.83), 14.296),
+    ("laplacian", 2, 7, Some(1.50), 4.816),
+    ("matmul", 0, 8, None, 13.971),
+    ("matvec", 0, 7, None, 4.929),
+    ("sincos", 0, 2, None, 101.424),
+    ("tricubic", 48, 67, Some(2.00), 99.476),
+    ("tricubic2", 48, 67, Some(2.00), 101.855),
+    ("uxx1", 3, 17, Some(2.00), 7.466),
+    ("vecadd", 0, 2, None, 3.281),
+    ("wave13pt", 4, 14, Some(2.50), 6.967),
+    ("whispering", 6, 19, Some(0.83), 6.288),
+];
+
+fn main() {
+    println!("=== Table 2: shuffle synthesis statistics ===\n");
+    println!(
+        "{:<12} {:>4} {:>13} {:>6} {:>12} {:>11} {:>9}",
+        "name", "Lang", "Shuffle/Load", "Delta", "Analysis", "paper(s)", "speedup"
+    );
+    let mut total_ours = 0f64;
+    let mut total_paper = 0f64;
+    let mut mismatches = 0;
+    for (b, row) in suite().iter().zip(PAPER.iter()) {
+        assert_eq!(b.name, row.0);
+        let kernel = generate(b);
+        // best-of-3 timing: emulation + detection
+        let mut best = f64::MAX;
+        let mut det = None;
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            let res = emulate(&kernel).expect("emulation");
+            let d = detect(&kernel, &res, DetectOpts::default());
+            best = best.min(t0.elapsed().as_secs_f64());
+            det = Some(d);
+        }
+        let det = det.unwrap();
+        let delta = det
+            .avg_delta()
+            .map(|d| format!("{d:.2}"))
+            .unwrap_or_else(|| "-".into());
+        let ok = det.shuffle_count() == row.1
+            && det.total_global_loads == row.2
+            && match (det.avg_delta(), row.3) {
+                (None, None) => true,
+                (Some(a), Some(b)) => (a - b).abs() < 0.01,
+                _ => false,
+            };
+        if !ok {
+            mismatches += 1;
+        }
+        total_ours += best;
+        total_paper += row.4;
+        println!(
+            "{:<12} {:>4} {:>6} / {:<4} {:>6} {:>10.1}ms {:>10.1}s {:>8.0}x{}",
+            b.name,
+            b.lang.short(),
+            det.shuffle_count(),
+            det.total_global_loads,
+            delta,
+            best * 1e3,
+            row.4,
+            row.4 / best,
+            if ok { "" } else { "  << MISMATCH" }
+        );
+    }
+    println!(
+        "\ntotals: ours {:.2}s vs paper {:.1}s (Racket/Rosette on i7-5930K) — {:.0}x",
+        total_ours,
+        total_paper,
+        total_paper / total_ours
+    );
+    assert_eq!(mismatches, 0, "{mismatches} Table 2 rows mismatched");
+    println!("table2_analysis OK — all 16 rows match the paper");
+}

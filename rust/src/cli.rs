@@ -1,0 +1,99 @@
+//! Hand-rolled CLI argument parsing (no clap in the offline crate set).
+
+use std::collections::HashMap;
+
+/// Parsed command line: subcommand, positional args, `--key value` /
+/// `--flag` options.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // `--key=value`, `--key value`, or bare flag
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                    && !Self::is_flag(key)
+                {
+                    out.options
+                        .insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else if out.command.is_empty() {
+                out.command = a;
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Known boolean flags (never consume a value).
+    fn is_flag(key: &str) -> bool {
+        matches!(key, "help" | "report" | "list" | "quiet" | "force")
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got `{v}`")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse("asm input.ptx output.ptx");
+        assert_eq!(a.command, "asm");
+        assert_eq!(a.positional, vec!["input.ptx", "output.ptx"]);
+    }
+
+    #[test]
+    fn options_and_flags() {
+        let a = parse("suite --arch Maxwell --max-delta=3 --report");
+        assert_eq!(a.opt("arch"), Some("Maxwell"));
+        assert_eq!(a.opt("max-delta"), Some("3"));
+        assert!(a.flag("report"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn opt_usize_parses() {
+        let a = parse("suite --threads 8");
+        assert_eq!(a.opt_usize("threads", 1).unwrap(), 8);
+        assert_eq!(a.opt_usize("missing", 3).unwrap(), 3);
+        let bad = parse("suite --threads x");
+        assert!(bad.opt_usize("threads", 1).is_err());
+    }
+}

@@ -1,0 +1,242 @@
+//! L3 coordinator: the full PTXASW pipeline over many kernels, fanned out
+//! on a `std::thread` pool (the offline crate universe has no tokio; the
+//! pipeline is CPU-bound anyway).
+//!
+//! Per kernel: generate/parse → symbolically emulate → detect → synthesize
+//! every requested variant → validate on the warp simulator → score with
+//! the per-architecture latency model. The result set carries everything
+//! the Table 2 / Figure 2 / Figure 3 harnesses print.
+
+pub mod report;
+
+use crate::emu::{emulate, EmuError};
+use crate::perf::{model, Arch, PerfReport};
+use crate::ptx::ast::Kernel;
+use crate::shuffle::{detect, synthesize, DetectOpts, Detection, Variant};
+use crate::sim::{run, SimError, SimStats};
+use crate::suite::{workload, Benchmark, Pattern};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub variants: Vec<Variant>,
+    pub detect: DetectOpts,
+    pub archs: Vec<&'static Arch>,
+    pub threads: usize,
+    /// Simulation sizes (nx, ny, nz) for 3D; 2D benchmarks use (nx, ny, 1).
+    pub seed: u64,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> PipelineConfig {
+        PipelineConfig {
+            variants: vec![Variant::NoLoad, Variant::NoCorner, Variant::Full],
+            detect: DetectOpts::default(),
+            archs: crate::perf::all_archs().to_vec(),
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+            seed: 42,
+        }
+    }
+}
+
+/// Outcome of simulating + modelling one kernel version.
+#[derive(Debug)]
+pub struct RunOutcome {
+    pub sim_stats: SimStats,
+    /// One report per configured architecture (same order as `archs`).
+    pub reports: Vec<PerfReport>,
+    /// Output matched the baseline bit-exactly (None for the baseline).
+    pub valid: Option<bool>,
+}
+
+/// Full pipeline result for one benchmark.
+#[derive(Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub lang: &'static str,
+    pub detection: Detection,
+    pub analysis_time: Duration,
+    pub baseline: RunOutcome,
+    pub variants: Vec<(Variant, RunOutcome)>,
+    pub kernel: Kernel,
+}
+
+impl BenchResult {
+    /// Figure 2 quantity: speed-up of a variant vs the original on arch `ai`.
+    pub fn speedup(&self, variant: Variant, ai: usize) -> Option<f64> {
+        let v = self.variants.iter().find(|(v, _)| *v == variant)?;
+        Some(self.baseline.reports[ai].effective_cycles / v.1.reports[ai].effective_cycles)
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum PipelineError {
+    #[error("{0}: emulation failed: {1}")]
+    Emu(String, EmuError),
+    #[error("{0}: simulation failed: {1}")]
+    Sim(String, SimError),
+}
+
+/// Simulation sizes per benchmark (small enough for CI, big enough to
+/// exercise every warp/corner path).
+pub fn sim_sizes(b: &Benchmark) -> (usize, usize, usize) {
+    match &b.pattern {
+        Pattern::MatMul { .. } => (48, 6, 8),
+        Pattern::MatVec { .. } => (96, 1, 3),
+        _ if b.dims == 3 => (40, 10, 8),
+        _ => (96, 8, 1),
+    }
+}
+
+/// Run the pipeline for one benchmark.
+pub fn run_benchmark(b: &Benchmark, cfg: &PipelineConfig) -> Result<BenchResult, PipelineError> {
+    let kernel = crate::suite::generate(b);
+
+    let t0 = Instant::now();
+    let res = emulate(&kernel).map_err(|e| PipelineError::Emu(b.name.into(), e))?;
+    let detection = detect(&kernel, &res, cfg.detect);
+    let analysis_time = t0.elapsed();
+
+    let (nx, ny, nz) = sim_sizes(b);
+    let sim_one = |k: &Kernel| -> Result<(Vec<f32>, SimStats, Vec<PerfReport>), PipelineError> {
+        let mut w = workload(b, nx, ny, nz, cfg.seed);
+        w.cfg.record_trace = true;
+        let r = run(k, &w.cfg, w.mem).map_err(|e| PipelineError::Sim(b.name.into(), e))?;
+        let out = r
+            .mem
+            .read_f32s(w.out_ptr, w.out_len)
+            .map_err(|e| PipelineError::Sim(b.name.into(), SimError::Mem(e)))?;
+        let reports = cfg
+            .archs
+            .iter()
+            .map(|a| model(k, &r.trace, a))
+            .collect();
+        Ok((out, r.stats, reports))
+    };
+
+    let (base_out, base_stats, base_reports) = sim_one(&kernel)?;
+    let baseline = RunOutcome {
+        sim_stats: base_stats,
+        reports: base_reports,
+        valid: None,
+    };
+
+    let mut variants = Vec::new();
+    for &v in &cfg.variants {
+        let sk = synthesize(&kernel, &detection, v);
+        let (out, stats, reports) = sim_one(&sk)?;
+        let valid = out
+            .iter()
+            .zip(&base_out)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        variants.push((
+            v,
+            RunOutcome {
+                sim_stats: stats,
+                reports,
+                valid: Some(valid),
+            },
+        ));
+    }
+
+    Ok(BenchResult {
+        name: b.name.to_string(),
+        lang: b.lang.short(),
+        detection,
+        analysis_time,
+        baseline,
+        variants,
+        kernel,
+    })
+}
+
+/// Run many benchmarks on a thread pool; results come back in input order.
+pub fn run_suite(
+    benches: &[Benchmark],
+    cfg: &PipelineConfig,
+) -> Vec<Result<BenchResult, PipelineError>> {
+    let next = Mutex::new(0usize);
+    let results: Mutex<Vec<Option<Result<BenchResult, PipelineError>>>> =
+        Mutex::new((0..benches.len()).map(|_| None).collect());
+
+    std::thread::scope(|s| {
+        for _ in 0..cfg.threads.max(1).min(benches.len().max(1)) {
+            s.spawn(|| loop {
+                let i = {
+                    let mut n = next.lock().unwrap();
+                    if *n >= benches.len() {
+                        return;
+                    }
+                    let i = *n;
+                    *n += 1;
+                    i
+                };
+                let r = run_benchmark(&benches[i], cfg);
+                results.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.expect("worker completed"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::suite::by_name;
+
+    #[test]
+    fn pipeline_on_jacobi() {
+        let b = by_name("jacobi").unwrap();
+        let cfg = PipelineConfig::default();
+        let r = run_benchmark(&b, &cfg).unwrap();
+        assert_eq!(r.detection.shuffle_count(), 6);
+        // Full must be valid, NoCorner invalid
+        let full = r
+            .variants
+            .iter()
+            .find(|(v, _)| *v == Variant::Full)
+            .unwrap();
+        assert_eq!(full.1.valid, Some(true));
+        let nc = r
+            .variants
+            .iter()
+            .find(|(v, _)| *v == Variant::NoCorner)
+            .unwrap();
+        assert_eq!(nc.1.valid, Some(false));
+        // four arch reports each
+        assert_eq!(r.baseline.reports.len(), 4);
+        // speedups are defined and positive
+        for ai in 0..4 {
+            let s = r.speedup(Variant::Full, ai).unwrap();
+            assert!(s > 0.0, "speedup {s}");
+        }
+    }
+
+    #[test]
+    fn thread_pool_matches_serial() {
+        let benches: Vec<_> = ["vecadd", "gradient"]
+            .iter()
+            .map(|n| by_name(n).unwrap())
+            .collect();
+        let mut cfg = PipelineConfig::default();
+        cfg.threads = 2;
+        let rs = run_suite(&benches, &cfg);
+        assert_eq!(rs.len(), 2);
+        let a = rs[0].as_ref().unwrap();
+        let b = rs[1].as_ref().unwrap();
+        assert_eq!(a.name, "vecadd");
+        assert_eq!(b.name, "gradient");
+        assert_eq!(a.detection.shuffle_count(), 0);
+        assert_eq!(b.detection.shuffle_count(), 1);
+    }
+}

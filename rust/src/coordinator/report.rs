@@ -1,0 +1,128 @@
+//! Text renderers for the paper's tables and figures.
+
+use super::BenchResult;
+use crate::perf::{Arch, STALL_KINDS};
+use crate::shuffle::Variant;
+use std::fmt::Write;
+
+/// Table 2: per-benchmark shuffle/load counts, average delta, analysis time.
+pub fn table2(results: &[&BenchResult]) -> String {
+    let mut s = String::new();
+    writeln!(
+        s,
+        "{:<12} {:>4} {:>13} {:>6} {:>10}",
+        "name", "Lang", "Shuffle/Load", "Delta", "Analysis"
+    )
+    .unwrap();
+    for r in results {
+        let delta = r
+            .detection
+            .avg_delta()
+            .map(|d| format!("{d:.2}"))
+            .unwrap_or_else(|| "-".into());
+        writeln!(
+            s,
+            "{:<12} {:>4} {:>6} / {:<4} {:>6} {:>9.3?}",
+            r.name,
+            r.lang,
+            r.detection.shuffle_count(),
+            r.detection.total_global_loads,
+            delta,
+            r.analysis_time,
+        )
+        .unwrap();
+    }
+    s
+}
+
+/// Figure 2: speed-up bars per architecture (text), plus occupancy.
+pub fn figure2(results: &[&BenchResult], archs: &[&Arch], variants: &[Variant]) -> String {
+    let mut s = String::new();
+    for (ai, arch) in archs.iter().enumerate() {
+        writeln!(s, "== {} ==", arch.name).unwrap();
+        write!(s, "{:<12}", "benchmark").unwrap();
+        for v in variants {
+            write!(s, " {:>10}", v.name()).unwrap();
+        }
+        writeln!(s, " {:>6} {:>5}", "occ", "regs").unwrap();
+        for r in results {
+            write!(s, "{:<12}", r.name).unwrap();
+            for v in variants {
+                match r.speedup(*v, ai) {
+                    Some(x) => write!(s, " {:>9.3}x", x).unwrap(),
+                    None => write!(s, " {:>10}", "-").unwrap(),
+                }
+            }
+            // occupancy/registers of the PTXASW variant (or baseline)
+            let rep = r
+                .variants
+                .iter()
+                .find(|(v, _)| *v == Variant::Full)
+                .map(|(_, o)| &o.reports[ai])
+                .unwrap_or(&r.baseline.reports[ai]);
+            writeln!(s, " {:>5.2} {:>5}", rep.occupancy, rep.regs_per_thread).unwrap();
+        }
+    }
+    s
+}
+
+/// Figure 3: stall-reason breakdown rows, Original then each variant.
+pub fn figure3(r: &BenchResult, archs: &[&Arch]) -> String {
+    let mut s = String::new();
+    for (ai, arch) in archs.iter().enumerate() {
+        writeln!(s, "-- {} / {} --", r.name, arch.name).unwrap();
+        write!(s, "{:<10}", "version").unwrap();
+        for k in STALL_KINDS {
+            write!(s, " {:>12}", k.name()).unwrap();
+        }
+        writeln!(s).unwrap();
+        let mut row = |label: &str, rep: &crate::perf::PerfReport| {
+            write!(s, "{label:<10}").unwrap();
+            for (_, f) in rep.stall_fractions() {
+                write!(s, " {:>11.1}%", f * 100.0).unwrap();
+            }
+            writeln!(s).unwrap();
+        };
+        row("Original", &r.baseline.reports[ai]);
+        for (v, o) in &r.variants {
+            row(v.name(), &o.reports[ai]);
+        }
+    }
+    s
+}
+
+/// One-line summary per benchmark/arch for logs.
+pub fn summary_line(r: &BenchResult, ai: usize) -> String {
+    let f = r.speedup(Variant::Full, ai).unwrap_or(1.0);
+    format!(
+        "{:<12} shfl {:>2}/{:<3} full {:.3}x occ {:.2}",
+        r.name,
+        r.detection.shuffle_count(),
+        r.detection.total_global_loads,
+        f,
+        r.baseline.reports[ai].occupancy
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{run_benchmark, PipelineConfig};
+    use crate::suite::by_name;
+
+    #[test]
+    fn renders_all_reports() {
+        let b = by_name("gradient").unwrap();
+        let cfg = PipelineConfig::default();
+        let r = run_benchmark(&b, &cfg).unwrap();
+        let refs = [&r];
+        let t2 = table2(&refs);
+        assert!(t2.contains("gradient"));
+        assert!(t2.contains("1 / 6"));
+        let f2 = figure2(&refs, &cfg.archs, &cfg.variants);
+        assert!(f2.contains("Kepler") && f2.contains("Volta"));
+        let f3 = figure3(&r, &cfg.archs);
+        assert!(f3.contains("mem_dep"));
+        assert!(!summary_line(&r, 0).is_empty());
+    }
+}

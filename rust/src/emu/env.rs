@@ -1,0 +1,226 @@
+//! Register environment: name interning + per-flow value vectors.
+//!
+//! Registers are interned to dense indices once per kernel so that a flow's
+//! environment is a flat `Vec<Option<TermId>>` — forking a flow at a branch
+//! (paper §4.2 "duplicating the register environment") is a memcpy.
+
+use crate::ptx::ast::{Address, Kernel, Op, Operand, Reg, Statement};
+use crate::sym::TermId;
+use crate::util::FnvMap;
+
+/// Dense register index for one kernel.
+#[derive(Default)]
+pub struct RegInterner {
+    ids: FnvMap<String, u32>,
+    names: Vec<String>,
+}
+
+impl std::fmt::Debug for RegInterner {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "RegInterner({} regs)", self.names.len())
+    }
+}
+
+impl RegInterner {
+    pub fn intern(&mut self, r: &Reg) -> u32 {
+        if let Some(&i) = self.ids.get(&r.0) {
+            return i;
+        }
+        let i = self.names.len() as u32;
+        self.ids.insert(r.0.clone(), i);
+        self.names.push(r.0.clone());
+        i
+    }
+
+    pub fn get(&self, r: &Reg) -> Option<u32> {
+        self.ids.get(&r.0).copied()
+    }
+
+    pub fn name(&self, i: u32) -> &str {
+        &self.names[i as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Intern every register mentioned anywhere in a kernel body.
+    pub fn from_kernel(k: &Kernel) -> RegInterner {
+        let mut it = RegInterner::default();
+        let op_reg = |o: &Operand, it: &mut RegInterner| {
+            if let Operand::Reg(r) = o {
+                it.intern(r);
+            }
+        };
+        let addr_reg = |a: &Address, it: &mut RegInterner| {
+            if let Operand::Reg(r) = &a.base {
+                it.intern(r);
+            }
+        };
+        for st in &k.body {
+            let Statement::Instr { guard, op } = st else {
+                continue;
+            };
+            if let Some(g) = guard {
+                it.intern(&g.reg);
+            }
+            match op {
+                Op::Ld { dst, addr, .. } => {
+                    it.intern(dst);
+                    addr_reg(addr, &mut it);
+                }
+                Op::St { addr, src, .. } => {
+                    addr_reg(addr, &mut it);
+                    op_reg(src, &mut it);
+                }
+                Op::Mov { dst, src, .. } => {
+                    it.intern(dst);
+                    op_reg(src, &mut it);
+                }
+                Op::Cvta { dst, src, .. } => {
+                    it.intern(dst);
+                    op_reg(src, &mut it);
+                }
+                Op::IntBin { dst, a, b, .. } | Op::FltBin { dst, a, b, .. } => {
+                    it.intern(dst);
+                    op_reg(a, &mut it);
+                    op_reg(b, &mut it);
+                }
+                Op::Mad { dst, a, b, c, .. } | Op::Fma { dst, a, b, c, .. } => {
+                    it.intern(dst);
+                    op_reg(a, &mut it);
+                    op_reg(b, &mut it);
+                    op_reg(c, &mut it);
+                }
+                Op::Not { dst, a, .. } | Op::Neg { dst, a, .. } | Op::FltUn { dst, a, .. } => {
+                    it.intern(dst);
+                    op_reg(a, &mut it);
+                }
+                Op::Setp { dst, a, b, .. } => {
+                    it.intern(dst);
+                    op_reg(a, &mut it);
+                    op_reg(b, &mut it);
+                }
+                Op::Selp { dst, a, b, p, .. } => {
+                    it.intern(dst);
+                    op_reg(a, &mut it);
+                    op_reg(b, &mut it);
+                    op_reg(p, &mut it);
+                }
+                Op::Cvt { dst, src, .. } => {
+                    it.intern(dst);
+                    op_reg(src, &mut it);
+                }
+                Op::Shfl {
+                    dst,
+                    pred_out,
+                    src,
+                    b,
+                    c,
+                    mask,
+                    ..
+                } => {
+                    it.intern(dst);
+                    if let Some(p) = pred_out {
+                        it.intern(p);
+                    }
+                    op_reg(src, &mut it);
+                    op_reg(b, &mut it);
+                    op_reg(c, &mut it);
+                    op_reg(mask, &mut it);
+                }
+                Op::Activemask { dst } => {
+                    it.intern(dst);
+                }
+                Op::Bra { .. } | Op::BarSync { .. } | Op::Ret | Op::Exit => {}
+            }
+        }
+        it
+    }
+}
+
+/// One flow's register values. `None` = never written (paper: registers are
+/// always initialized before use in well-formed PTX; a `None` read gets a
+/// fresh uninterpreted value and bumps a diagnostic counter).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegEnv {
+    pub vals: Vec<Option<TermId>>,
+}
+
+impl RegEnv {
+    pub fn new(n: usize) -> RegEnv {
+        RegEnv {
+            vals: vec![None; n],
+        }
+    }
+
+    pub fn get(&self, i: u32) -> Option<TermId> {
+        self.vals[i as usize]
+    }
+
+    pub fn set(&mut self, i: u32, v: TermId) {
+        self.vals[i as usize] = Some(v);
+    }
+
+    /// FNV-1a over the value ids — used for path memoization (§4.2).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for v in &self.vals {
+            let x = match v {
+                Some(t) => t.0 as u64 + 1,
+                None => 0,
+            };
+            h ^= x;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptx::parser::parse_kernel;
+
+    #[test]
+    fn interns_all_registers() {
+        let k = parse_kernel(
+            r#"
+.visible .entry k(.param .u64 a){
+.reg .b32 %r<4>; .reg .b64 %rd<3>; .reg .pred %p<2>;
+ld.param.u64 %rd1, [a];
+cvta.to.global.u64 %rd2, %rd1;
+mov.u32 %r1, %tid.x;
+setp.lt.s32 %p1, %r1, 32;
+@%p1 bra $DONE;
+ld.global.f32 %f1, [%rd2+4];
+$DONE: ret;
+}
+"#,
+        )
+        .unwrap();
+        let it = RegInterner::from_kernel(&k);
+        assert!(it.get(&Reg::new("%rd1")).is_some());
+        assert!(it.get(&Reg::new("%rd2")).is_some());
+        assert!(it.get(&Reg::new("%r1")).is_some());
+        assert!(it.get(&Reg::new("%p1")).is_some());
+        assert!(it.get(&Reg::new("%f1")).is_some());
+        assert!(it.get(&Reg::new("%nope")).is_none());
+    }
+
+    #[test]
+    fn env_fingerprint_changes_with_values() {
+        let mut e = RegEnv::new(4);
+        let f0 = e.fingerprint();
+        e.set(2, TermId(7));
+        let f1 = e.fingerprint();
+        assert_ne!(f0, f1);
+        let mut e2 = RegEnv::new(4);
+        e2.set(2, TermId(7));
+        assert_eq!(e2.fingerprint(), f1);
+    }
+}

@@ -1,0 +1,425 @@
+//! Symbolic semantics of each PTX instruction (paper §4.1).
+//!
+//! Every instruction updates the destination register with a concolic term:
+//! fully-concrete inputs fold to constants, runtime unknowns stay symbolic.
+//! Floating-point arithmetic becomes uninterpreted functions ("we insert
+//! the conversion by uninterpreted functions at loading and storing
+//! bitvectors to and from floating-point data"), which hash-consing turns
+//! into free common-subexpression detection: two loads of the same address
+//! yield the *same* term.
+
+use super::memtrace::{LoadRec, StoreRec};
+use super::Emu;
+use super::Flow;
+use crate::ptx::ast::*;
+use crate::sym::{BvOp, CmpKind, TermId};
+
+impl<'k> Emu<'k> {
+    /// Value of an operand coerced to `width` bits (`signed` controls how a
+    /// narrower register value widens).
+    pub(super) fn term_of(
+        &mut self,
+        flow: &mut Flow,
+        o: &Operand,
+        width: u32,
+        signed: bool,
+    ) -> TermId {
+        match o {
+            Operand::Reg(r) => {
+                let id = self.regs.intern(r);
+                let v = match flow.env.get(id) {
+                    Some(v) => v,
+                    None => {
+                        self.stats.uninit_reads += 1;
+                        let name = format!("uninit.{}", r.0);
+                        let t = self.pool.symbol(&name, width);
+                        flow.env.set(id, t);
+                        t
+                    }
+                };
+                self.coerce(v, width, signed)
+            }
+            Operand::ImmInt(v) => self.pool.constant(*v as u64, width),
+            Operand::ImmF32(b) => self.pool.constant(*b as u64, 32),
+            Operand::ImmF64(b) => self.pool.constant(*b, 64),
+            Operand::Special(sp) => {
+                let t = self.special(*sp);
+                self.coerce(t, width, false)
+            }
+            Operand::Var(v) => {
+                let name = format!("var.{v}");
+                self.pool.symbol(&name, width)
+            }
+        }
+    }
+
+    pub(super) fn special(&mut self, sp: Special) -> TermId {
+        match sp {
+            Special::WarpSize => self.pool.constant(32, 32),
+            _ => self.pool.symbol(sp.name().trim_start_matches('%'), 32),
+        }
+    }
+
+    fn coerce(&mut self, t: TermId, width: u32, signed: bool) -> TermId {
+        let w = self.pool.width(t);
+        if w == width {
+            t
+        } else if w > width {
+            self.pool.trunc(t, width)
+        } else if signed {
+            self.pool.sext(t, width)
+        } else {
+            self.pool.zext(t, width)
+        }
+    }
+
+    /// Byte address of a memory operand as a 64-bit term.
+    pub(super) fn addr_term(&mut self, flow: &mut Flow, addr: &Address) -> TermId {
+        let base = match &addr.base {
+            Operand::Var(name) => {
+                let n = format!("addr.{name}");
+                self.pool.symbol(&n, 64)
+            }
+            other => self.term_of(flow, other, 64, false),
+        };
+        if addr.offset == 0 {
+            base
+        } else {
+            let off = self.pool.constant(addr.offset as u64, 64);
+            self.pool.bin(BvOp::Add, base, off)
+        }
+    }
+
+    /// Write `val` to `dst`, respecting a symbolic guard (predicated
+    /// instructions issue conditional values, paper §4.1).
+    fn write(&mut self, flow: &mut Flow, dst: &Reg, val: TermId, guard: Option<TermId>) {
+        let id = self.regs.intern(dst);
+        let v = match guard {
+            None => val,
+            Some(g) => {
+                let old = match flow.env.get(id) {
+                    Some(o) if self.pool.width(o) == self.pool.width(val) => o,
+                    _ => {
+                        let name = format!("uninit.{}", dst.0);
+                        let w = self.pool.width(val);
+                        self.pool.symbol(&name, w)
+                    }
+                };
+                self.pool.ite(g, val, old)
+            }
+        };
+        flow.env.set(id, v);
+    }
+
+    /// Execute one non-control-flow instruction.
+    pub(super) fn exec_op(
+        &mut self,
+        flow: &mut Flow,
+        stmt: usize,
+        guard: Option<TermId>,
+        op: &Op,
+    ) {
+        match op {
+            Op::Ld {
+                space,
+                nc,
+                ty,
+                dst,
+                addr,
+            } => {
+                let w = ty.bits().max(8);
+                let val = if *space == Space::Param {
+                    // parameter loads: named symbols (a UF of the static address)
+                    let base = match &addr.base {
+                        Operand::Var(n) => n.clone(),
+                        Operand::Reg(r) => r.0.clone(),
+                        _ => "?".into(),
+                    };
+                    let name = if addr.offset == 0 {
+                        format!("param.{base}")
+                    } else {
+                        format!("param.{base}.{}", addr.offset)
+                    };
+                    self.pool.symbol(&name, w)
+                } else {
+                    let a = self.addr_term(flow, addr);
+                    let uf = format!("load.{}.{}", space.suffix(), w);
+                    let val = self.pool.uf(&uf, vec![a], w);
+                    flow.trace.record_load(LoadRec {
+                        stmt,
+                        addr: a,
+                        value: val,
+                        ty: *ty,
+                        space: *space,
+                        nc: *nc,
+                        segment: flow.segment,
+                        guarded: guard.is_some(),
+                        valid: true,
+                    });
+                    self.stats.loads += 1;
+                    val
+                };
+                self.write(flow, dst, val, guard);
+            }
+            Op::St { space, ty, addr, src } => {
+                if *space == Space::Param {
+                    return;
+                }
+                let a = self.addr_term(flow, addr);
+                let v = self.term_of(flow, src, ty.bits().max(8), ty.is_signed());
+                let killed = flow.trace.record_store(
+                    &self.pool,
+                    StoreRec {
+                        stmt,
+                        addr: a,
+                        value: v,
+                        ty: *ty,
+                        space: *space,
+                        segment: flow.segment,
+                    },
+                );
+                if !killed.is_empty() {
+                    flow.assumptions.invalidate_atoms(&killed);
+                    self.stats.invalidated_loads += killed.len() as u64;
+                }
+                self.stats.stores += 1;
+            }
+            Op::Mov { ty, dst, src } => {
+                let v = self.term_of(flow, src, ty.bits().max(8), ty.is_signed());
+                self.write(flow, dst, v, guard);
+            }
+            Op::Cvta { dst, src, .. } => {
+                // address-space cast is the identity on the byte address
+                let v = self.term_of(flow, src, 64, false);
+                self.write(flow, dst, v, guard);
+            }
+            Op::IntBin { op: bop, ty, dst, a, b } => {
+                let w = ty.bits().max(1);
+                let signed = ty.is_signed();
+                let ta = self.term_of(flow, a, w, signed);
+                let v = match bop {
+                    IntBinOp::MulWide => {
+                        let tb = self.term_of(flow, b, w, signed);
+                        let (wa, wb) = if signed {
+                            (self.pool.sext(ta, w * 2), self.pool.sext(tb, w * 2))
+                        } else {
+                            (self.pool.zext(ta, w * 2), self.pool.zext(tb, w * 2))
+                        };
+                        self.pool.bin(BvOp::Mul, wa, wb)
+                    }
+                    _ => {
+                        let tb = self.term_of(flow, b, w, signed);
+                        let bv = match bop {
+                            IntBinOp::Add => BvOp::Add,
+                            IntBinOp::Sub => BvOp::Sub,
+                            IntBinOp::MulLo => BvOp::Mul,
+                            IntBinOp::MulHi => {
+                                // (ext(a)*ext(b)) >> w
+                                let (wa, wb) = if signed {
+                                    (self.pool.sext(ta, w * 2), self.pool.sext(tb, w * 2))
+                                } else {
+                                    (self.pool.zext(ta, w * 2), self.pool.zext(tb, w * 2))
+                                };
+                                let m = self.pool.bin(BvOp::Mul, wa, wb);
+                                let sh = self.pool.constant(w as u64, w * 2);
+                                let hi = self.pool.bin(BvOp::LShr, m, sh);
+                                let v = self.pool.trunc(hi, w);
+                                self.write(flow, dst, v, guard);
+                                return;
+                            }
+                            IntBinOp::Div => {
+                                if signed {
+                                    BvOp::SDiv
+                                } else {
+                                    BvOp::UDiv
+                                }
+                            }
+                            IntBinOp::Rem => {
+                                if signed {
+                                    BvOp::SRem
+                                } else {
+                                    BvOp::URem
+                                }
+                            }
+                            IntBinOp::Min => {
+                                if signed {
+                                    BvOp::SMin
+                                } else {
+                                    BvOp::UMin
+                                }
+                            }
+                            IntBinOp::Max => {
+                                if signed {
+                                    BvOp::SMax
+                                } else {
+                                    BvOp::UMax
+                                }
+                            }
+                            IntBinOp::And => BvOp::And,
+                            IntBinOp::Or => BvOp::Or,
+                            IntBinOp::Xor => BvOp::Xor,
+                            IntBinOp::Shl => BvOp::Shl,
+                            IntBinOp::Shr => {
+                                if signed {
+                                    BvOp::AShr
+                                } else {
+                                    BvOp::LShr
+                                }
+                            }
+                            IntBinOp::MulWide => unreachable!(),
+                        };
+                        self.pool.bin(bv, ta, tb)
+                    }
+                };
+                self.write(flow, dst, v, guard);
+            }
+            Op::Mad { wide, ty, dst, a, b, c } => {
+                let w = ty.bits();
+                let signed = ty.is_signed();
+                let ta = self.term_of(flow, a, w, signed);
+                let tb = self.term_of(flow, b, w, signed);
+                let v = if *wide {
+                    let tc = self.term_of(flow, c, w * 2, signed);
+                    let (wa, wb) = if signed {
+                        (self.pool.sext(ta, w * 2), self.pool.sext(tb, w * 2))
+                    } else {
+                        (self.pool.zext(ta, w * 2), self.pool.zext(tb, w * 2))
+                    };
+                    let m = self.pool.bin(BvOp::Mul, wa, wb);
+                    self.pool.bin(BvOp::Add, m, tc)
+                } else {
+                    let tc = self.term_of(flow, c, w, signed);
+                    let m = self.pool.bin(BvOp::Mul, ta, tb);
+                    self.pool.bin(BvOp::Add, m, tc)
+                };
+                self.write(flow, dst, v, guard);
+            }
+            Op::Not { ty, dst, a } => {
+                let w = ty.bits().max(1);
+                let ta = self.term_of(flow, a, w, false);
+                let v = self.pool.not(ta);
+                self.write(flow, dst, v, guard);
+            }
+            Op::Neg { ty, dst, a } => {
+                let w = ty.bits();
+                let ta = self.term_of(flow, a, w, ty.is_signed());
+                let z = self.pool.constant(0, w);
+                let v = self.pool.bin(BvOp::Sub, z, ta);
+                self.write(flow, dst, v, guard);
+            }
+            Op::FltBin { op: fop, ty, dst, a, b } => {
+                let w = ty.bits();
+                let ta = self.term_of(flow, a, w, false);
+                let tb = self.term_of(flow, b, w, false);
+                let name = format!("f{}.{}", fop.mnemonic().replace('.', "_"), ty.suffix());
+                let v = self.pool.uf(&name, vec![ta, tb], w);
+                self.write(flow, dst, v, guard);
+            }
+            Op::Fma { ty, dst, a, b, c } => {
+                let w = ty.bits();
+                let ta = self.term_of(flow, a, w, false);
+                let tb = self.term_of(flow, b, w, false);
+                let tc = self.term_of(flow, c, w, false);
+                let name = format!("ffma.{}", ty.suffix());
+                let v = self.pool.uf(&name, vec![ta, tb, tc], w);
+                self.write(flow, dst, v, guard);
+            }
+            Op::FltUn { op: fop, ty, dst, a } => {
+                let w = ty.bits();
+                let ta = self.term_of(flow, a, w, false);
+                let name = format!("f{}.{}", fop.mnemonic().replace('.', "_"), ty.suffix());
+                let v = self.pool.uf(&name, vec![ta], w);
+                self.write(flow, dst, v, guard);
+            }
+            Op::Setp { cmp, ty, dst, a, b } => {
+                let w = ty.bits();
+                let v = if ty.is_float() {
+                    let ta = self.term_of(flow, a, w, false);
+                    let tb = self.term_of(flow, b, w, false);
+                    let name = format!("fcmp.{}.{}", cmp.mnemonic(), ty.suffix());
+                    self.pool.uf(&name, vec![ta, tb], 1)
+                } else {
+                    let signed = !matches!(ty, Type::U8 | Type::U16 | Type::U32 | Type::U64);
+                    let ta = self.term_of(flow, a, w, signed);
+                    let tb = self.term_of(flow, b, w, signed);
+                    let kind = match (cmp, signed) {
+                        (CmpOp::Eq, _) => CmpKind::Eq,
+                        (CmpOp::Ne, _) => CmpKind::Ne,
+                        (CmpOp::Lt, true) => CmpKind::Slt,
+                        (CmpOp::Le, true) => CmpKind::Sle,
+                        (CmpOp::Gt, true) => CmpKind::Sgt,
+                        (CmpOp::Ge, true) => CmpKind::Sge,
+                        (CmpOp::Lt, false) => CmpKind::Ult,
+                        (CmpOp::Le, false) => CmpKind::Ule,
+                        (CmpOp::Gt, false) => CmpKind::Ugt,
+                        (CmpOp::Ge, false) => CmpKind::Uge,
+                    };
+                    self.pool.cmp(kind, ta, tb)
+                };
+                self.write(flow, dst, v, guard);
+            }
+            Op::Selp { ty, dst, a, b, p } => {
+                let w = ty.bits();
+                let ta = self.term_of(flow, a, w, ty.is_signed());
+                let tb = self.term_of(flow, b, w, ty.is_signed());
+                let tp = self.term_of(flow, p, 1, false);
+                let v = self.pool.ite(tp, ta, tb);
+                self.write(flow, dst, v, guard);
+            }
+            Op::Cvt { dty, sty, dst, src } => {
+                let sw = sty.bits();
+                let dw = dty.bits();
+                let ts = self.term_of(flow, src, sw, sty.is_signed());
+                let v = if dty.is_float() || sty.is_float() {
+                    let name = format!("cvt.{}.{}", dty.suffix(), sty.suffix());
+                    self.pool.uf(&name, vec![ts], dw)
+                } else if dw == sw {
+                    ts
+                } else if dw < sw {
+                    self.pool.trunc(ts, dw)
+                } else if sty.is_signed() {
+                    self.pool.sext(ts, dw)
+                } else {
+                    self.pool.zext(ts, dw)
+                };
+                self.write(flow, dst, v, guard);
+            }
+            Op::Shfl {
+                mode,
+                dst,
+                pred_out,
+                src,
+                b,
+                c,
+                mask,
+            } => {
+                let ts = self.term_of(flow, src, 32, false);
+                let tb = self.term_of(flow, b, 32, false);
+                let tc = self.term_of(flow, c, 32, false);
+                let tm = self.term_of(flow, mask, 32, false);
+                let tid = self.tid_sym;
+                let tid32 = self.coerce(tid, 32, false);
+                let name = format!("shfl.{}", mode.suffix());
+                let v = self
+                    .pool
+                    .uf(&name, vec![ts, tb, tc, tm, tid32], 32);
+                self.write(flow, dst, v, guard);
+                if let Some(p) = pred_out {
+                    let pname = format!("shfl.{}.p", mode.suffix());
+                    let pv = self.pool.uf(&pname, vec![tb, tc, tm, tid32], 1);
+                    self.write(flow, p, pv, guard);
+                }
+            }
+            Op::Activemask { dst } => {
+                let v = self.pool.symbol("activemask", 32);
+                self.write(flow, dst, v, guard);
+            }
+            Op::BarSync { .. } => {
+                self.stats.barriers += 1;
+            }
+            Op::Bra { .. } | Op::Ret | Op::Exit => {
+                unreachable!("control flow handled by the driver")
+            }
+        }
+    }
+}

@@ -1,0 +1,260 @@
+//! Loop structure + induction-variable recognition (paper §4.2).
+//!
+//! Before emulation we index the kernel: label → statement position, and
+//! for every backward branch the loop region `[header, back_edge]`. At loop
+//! entry the emulator abstracts each register written inside the region:
+//! recognized induction variables `r += step` become
+//! `init + step · loopᵢ()` (the "clip the initial value out and add it"
+//! trick), everything else becomes an opaque per-loop uninterpreted value.
+
+use super::env::RegInterner;
+use crate::ptx::ast::{Kernel, Op, Operand, Statement};
+use std::collections::HashMap;
+
+/// How a loop-variant register is abstracted at loop entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Abstraction {
+    /// `value = init + step * k` where `k` is the loop's iteration UF.
+    Induction { step: i128 },
+    /// `r += inv` with a loop-invariant register step (NVHPC strip-mine
+    /// loops step by `%ntid.x`): `value = init + k`, the UF absorbing the
+    /// unknown-but-constant stride. Keeps the thread-id term of the initial
+    /// value alive in derived addresses — the paper's "clip the initial
+    /// values out and add them" trick.
+    InductionSym,
+    /// `value = fresh UF` (unknown recurrence).
+    Opaque,
+}
+
+/// One natural loop discovered from a backward branch.
+#[derive(Debug, Clone)]
+pub struct LoopInfo {
+    /// Statement index of the header label.
+    pub header: usize,
+    /// Statement index of the backward `bra`.
+    pub back_edge: usize,
+    /// Registers written inside `[header, back_edge]` and their abstraction.
+    pub variants: Vec<(u32, Abstraction)>,
+}
+
+/// Static index of a kernel: labels, loops, statement count.
+#[derive(Debug, Default)]
+pub struct KernelIndex {
+    pub labels: HashMap<String, usize>,
+    /// Keyed by header statement index.
+    pub loops: HashMap<usize, LoopInfo>,
+}
+
+/// The destination register (if any) written by an instruction.
+pub fn written_reg(op: &Op) -> Option<&crate::ptx::ast::Reg> {
+    match op {
+        Op::Ld { dst, .. }
+        | Op::Mov { dst, .. }
+        | Op::Cvta { dst, .. }
+        | Op::IntBin { dst, .. }
+        | Op::Mad { dst, .. }
+        | Op::Not { dst, .. }
+        | Op::Neg { dst, .. }
+        | Op::FltBin { dst, .. }
+        | Op::Fma { dst, .. }
+        | Op::FltUn { dst, .. }
+        | Op::Setp { dst, .. }
+        | Op::Selp { dst, .. }
+        | Op::Cvt { dst, .. }
+        | Op::Shfl { dst, .. }
+        | Op::Activemask { dst } => Some(dst),
+        Op::St { .. } | Op::Bra { .. } | Op::BarSync { .. } | Op::Ret | Op::Exit => None,
+    }
+}
+
+impl KernelIndex {
+    pub fn build(k: &Kernel, regs: &mut RegInterner) -> KernelIndex {
+        let mut labels = HashMap::new();
+        for (i, st) in k.body.iter().enumerate() {
+            if let Statement::Label(l) = st {
+                labels.insert(l.clone(), i);
+            }
+        }
+
+        let mut loops: HashMap<usize, LoopInfo> = HashMap::new();
+        for (i, st) in k.body.iter().enumerate() {
+            let Statement::Instr {
+                op: Op::Bra { target, .. },
+                ..
+            } = st
+            else {
+                continue;
+            };
+            let Some(&h) = labels.get(target) else {
+                continue;
+            };
+            if h > i {
+                continue; // forward branch
+            }
+            let entry = loops.entry(h).or_insert(LoopInfo {
+                header: h,
+                back_edge: i,
+                variants: Vec::new(),
+            });
+            entry.back_edge = entry.back_edge.max(i);
+        }
+
+        // classify loop-variant registers per loop
+        let headers: Vec<usize> = loops.keys().copied().collect();
+        for h in headers {
+            let back = loops[&h].back_edge;
+            // first pass: which registers are written in the region at all
+            let mut write_counts: HashMap<u32, u32> = HashMap::new();
+            for st in &k.body[h..=back] {
+                if let Statement::Instr { op, .. } = st {
+                    if let Some(r) = written_reg(op) {
+                        *write_counts.entry(regs.intern(r)).or_insert(0) += 1;
+                    }
+                }
+            }
+            // second pass: classify (loop-invariant = not written in region)
+            let mut variants: HashMap<u32, Abstraction> = HashMap::new();
+            for st in &k.body[h..=back] {
+                let Statement::Instr { op, .. } = st else {
+                    continue;
+                };
+                let Some(r) = written_reg(op) else { continue };
+                let id = regs.intern(r);
+                let abs = if write_counts[&id] > 1 {
+                    Abstraction::Opaque
+                } else {
+                    match op {
+                        // r = r ± c
+                        Op::IntBin {
+                            op: bop,
+                            dst,
+                            a: Operand::Reg(ra),
+                            b: Operand::ImmInt(c),
+                            ..
+                        } if ra == dst => match bop {
+                            crate::ptx::ast::IntBinOp::Add => {
+                                Abstraction::Induction { step: *c }
+                            }
+                            crate::ptx::ast::IntBinOp::Sub => {
+                                Abstraction::Induction { step: -*c }
+                            }
+                            _ => Abstraction::Opaque,
+                        },
+                        // r = r + inv (loop-invariant register step)
+                        Op::IntBin {
+                            op: crate::ptx::ast::IntBinOp::Add,
+                            dst,
+                            a: Operand::Reg(ra),
+                            b: Operand::Reg(rb),
+                            ..
+                        } if ra == dst
+                            && write_counts
+                                .get(&regs.intern(rb))
+                                .copied()
+                                .unwrap_or(0)
+                                == 0 =>
+                        {
+                            Abstraction::InductionSym
+                        }
+                        _ => Abstraction::Opaque,
+                    }
+                };
+                variants.insert(id, abs);
+            }
+            let mut v: Vec<(u32, Abstraction)> = variants.into_iter().collect();
+            v.sort_by_key(|&(id, _)| id);
+            loops.get_mut(&h).unwrap().variants = v;
+        }
+
+        KernelIndex { labels, loops }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptx::parser::parse_kernel;
+
+    const LOOP_KERNEL: &str = r#"
+.visible .entry k(.param .u64 a, .param .u64 n){
+.reg .b32 %r<6>; .reg .b64 %rd<4>; .reg .pred %p<2>; .reg .f32 %f<3>;
+ld.param.u64 %rd1, [a];
+cvta.to.global.u64 %rd2, %rd1;
+mov.u32 %r1, 0;
+mov.f32 %f1, 0f00000000;
+$LOOP:
+mul.wide.s32 %rd3, %r1, 4;
+add.s64 %rd3, %rd2, %rd3;
+ld.global.f32 %f2, [%rd3];
+add.f32 %f1, %f1, %f2;
+add.s32 %r1, %r1, 1;
+setp.lt.s32 %p1, %r1, 128;
+@%p1 bra $LOOP;
+st.global.f32 [%rd2], %f1;
+ret;
+}
+"#;
+
+    #[test]
+    fn finds_loop_and_induction() {
+        let k = parse_kernel(LOOP_KERNEL).unwrap();
+        let mut regs = RegInterner::from_kernel(&k);
+        let idx = KernelIndex::build(&k, &mut regs);
+        assert_eq!(idx.loops.len(), 1);
+        let (&h, info) = idx.loops.iter().next().unwrap();
+        assert_eq!(h, idx.labels["$LOOP"]);
+        assert!(info.back_edge > h);
+
+        let r1 = regs.get(&crate::ptx::ast::Reg::new("%r1")).unwrap();
+        let f1 = regs.get(&crate::ptx::ast::Reg::new("%f1")).unwrap();
+        let rd3 = regs.get(&crate::ptx::ast::Reg::new("%rd3")).unwrap();
+        let find = |id: u32| info.variants.iter().find(|&&(v, _)| v == id).map(|&(_, a)| a);
+        assert_eq!(find(r1), Some(Abstraction::Induction { step: 1 }));
+        assert_eq!(find(f1), Some(Abstraction::Opaque)); // float accumulator
+        assert_eq!(find(rd3), Some(Abstraction::Opaque)); // written twice
+    }
+
+    #[test]
+    fn forward_branches_make_no_loops() {
+        let k = parse_kernel(
+            r#"
+.visible .entry k(.param .u64 a){
+.reg .pred %p<2>; .reg .b32 %r<3>;
+setp.lt.s32 %p1, %r1, 0;
+@%p1 bra $SKIP;
+mov.u32 %r2, 1;
+$SKIP: ret;
+}
+"#,
+        )
+        .unwrap();
+        let mut regs = RegInterner::from_kernel(&k);
+        let idx = KernelIndex::build(&k, &mut regs);
+        assert!(idx.loops.is_empty());
+        assert_eq!(idx.labels.len(), 1);
+    }
+
+    #[test]
+    fn decrementing_loop_negative_step() {
+        let k = parse_kernel(
+            r#"
+.visible .entry k(.param .u64 a){
+.reg .b32 %r<3>; .reg .pred %p<2>;
+mov.u32 %r1, 128;
+$L:
+sub.s32 %r1, %r1, 2;
+setp.gt.s32 %p1, %r1, 0;
+@%p1 bra $L;
+ret;
+}
+"#,
+        )
+        .unwrap();
+        let mut regs = RegInterner::from_kernel(&k);
+        let idx = KernelIndex::build(&k, &mut regs);
+        let info = idx.loops.values().next().unwrap();
+        let r1 = regs.get(&crate::ptx::ast::Reg::new("%r1")).unwrap();
+        let abs = info.variants.iter().find(|&&(v, _)| v == r1).unwrap().1;
+        assert_eq!(abs, Abstraction::Induction { step: -2 });
+    }
+}

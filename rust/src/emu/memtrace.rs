@@ -1,0 +1,231 @@
+//! Per-flow memory traces (paper §4.3).
+//!
+//! Loads are recorded forwardly through the emulation as uninterpreted
+//! functions of their symbolic address. Stores invalidate earlier loads
+//! that may alias (unless the load went through the non-coherent/read-only
+//! path, which the OpenACC `independent` contract makes store-proof).
+
+use crate::ptx::ast::{Space, Type};
+use crate::sym::{may_alias, TermId, TermPool};
+
+/// One recorded load.
+#[derive(Debug, Clone)]
+pub struct LoadRec {
+    /// Statement index of the `ld` in the kernel body.
+    pub stmt: usize,
+    /// Symbolic byte address.
+    pub addr: TermId,
+    /// The UF application term holding the loaded value.
+    pub value: TermId,
+    pub ty: Type,
+    pub space: Space,
+    /// Non-coherent (`ld.global.nc`) — read-only data, never invalidated.
+    pub nc: bool,
+    /// Straight-line segment id within the flow (§5.1: shuffles are only
+    /// detected between loads of the same straight-line region).
+    pub segment: u32,
+    /// Guard was symbolic (predicated load) — excluded from shuffle pairing.
+    pub guarded: bool,
+    /// Still valid (not overwritten by a later may-aliasing store).
+    pub valid: bool,
+}
+
+/// One recorded store.
+#[derive(Debug, Clone)]
+pub struct StoreRec {
+    pub stmt: usize,
+    pub addr: TermId,
+    pub value: TermId,
+    pub ty: Type,
+    pub space: Space,
+    pub segment: u32,
+}
+
+/// The memory trace of a single execution flow.
+#[derive(Debug, Clone, Default)]
+pub struct MemTrace {
+    pub loads: Vec<LoadRec>,
+    pub stores: Vec<StoreRec>,
+}
+
+impl MemTrace {
+    pub fn record_load(&mut self, rec: LoadRec) {
+        self.loads.push(rec);
+    }
+
+    /// Record a store and invalidate may-aliasing earlier loads. Returns the
+    /// UF value-terms of the loads that were invalidated so the caller can
+    /// also drop assumptions mentioning them (paper: "both loads and
+    /// assumptions are invalidated by stores that possibly overwrite them").
+    pub fn record_store(&mut self, pool: &TermPool, rec: StoreRec) -> Vec<TermId> {
+        let mut killed = Vec::new();
+        let bytes = rec.ty.bytes();
+        for l in self.loads.iter_mut().filter(|l| l.valid) {
+            if l.nc {
+                continue; // read-only data path
+            }
+            if l.space != rec.space {
+                continue; // disjoint state spaces
+            }
+            if may_alias(pool, l.addr, l.ty.bytes(), rec.addr, bytes) {
+                l.valid = false;
+                killed.push(l.value);
+            }
+        }
+        self.stores.push(rec);
+        killed
+    }
+
+    /// Valid (non-invalidated, unguarded) global loads of a given segment.
+    pub fn valid_global_loads(&self) -> impl Iterator<Item = &LoadRec> {
+        self.loads
+            .iter()
+            .filter(|l| l.valid && !l.guarded && l.space == Space::Global)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sym::{BvOp, TermPool};
+
+    fn mk_addr(p: &mut TermPool, base: &str, off: i64) -> TermId {
+        let b = p.symbol(base, 64);
+        let tid = p.symbol("tid.x", 32);
+        let tw = p.sext(tid, 64);
+        let c4 = p.constant(4, 64);
+        let s = p.bin(BvOp::Mul, tw, c4);
+        let t = p.bin(BvOp::Add, b, s);
+        let o = p.constant(off as u64, 64);
+        p.bin(BvOp::Add, t, o)
+    }
+
+    fn load(p: &mut TermPool, stmt: usize, addr: TermId, nc: bool) -> LoadRec {
+        let value = p.uf("load.g32", vec![addr], 32);
+        LoadRec {
+            stmt,
+            addr,
+            value,
+            ty: Type::F32,
+            space: Space::Global,
+            nc,
+            segment: 0,
+            guarded: false,
+            valid: true,
+        }
+    }
+
+    #[test]
+    fn store_invalidates_aliasing_load() {
+        let mut p = TermPool::new();
+        let mut t = MemTrace::default();
+        let a = mk_addr(&mut p, "w0", 0);
+        let l = load(&mut p, 0, a, false);
+        let lv = l.value;
+        t.record_load(l);
+        // store to the exact same address
+        let sv = p.constant(0, 32);
+        let killed = t.record_store(
+            &p,
+            StoreRec {
+                stmt: 1,
+                addr: a,
+                value: sv,
+                ty: Type::F32,
+                space: Space::Global,
+                segment: 0,
+            },
+        );
+        assert_eq!(killed, vec![lv]);
+        assert_eq!(t.valid_global_loads().count(), 0);
+    }
+
+    #[test]
+    fn store_keeps_provably_distinct_load() {
+        let mut p = TermPool::new();
+        let mut t = MemTrace::default();
+        let a = mk_addr(&mut p, "w0", 0);
+        let b = mk_addr(&mut p, "w0", 8); // two words away
+        t.record_load(load(&mut p, 0, a, false));
+        let sv = p.constant(0, 32);
+        let killed = t.record_store(
+            &p,
+            StoreRec {
+                stmt: 1,
+                addr: b,
+                value: sv,
+                ty: Type::F32,
+                space: Space::Global,
+                segment: 0,
+            },
+        );
+        assert!(killed.is_empty());
+        assert_eq!(t.valid_global_loads().count(), 1);
+    }
+
+    #[test]
+    fn nc_load_survives_unknown_store() {
+        let mut p = TermPool::new();
+        let mut t = MemTrace::default();
+        let a = mk_addr(&mut p, "w0", 0);
+        let unk = mk_addr(&mut p, "w1", 0); // symbolic distance from a
+        t.record_load(load(&mut p, 0, a, true));
+        let sv = p.constant(0, 32);
+        let killed = t.record_store(
+            &p,
+            StoreRec {
+                stmt: 1,
+                addr: unk,
+                value: sv,
+                ty: Type::F32,
+                space: Space::Global,
+                segment: 0,
+            },
+        );
+        assert!(killed.is_empty());
+        assert_eq!(t.valid_global_loads().count(), 1);
+    }
+
+    #[test]
+    fn non_nc_load_killed_by_unknown_store() {
+        let mut p = TermPool::new();
+        let mut t = MemTrace::default();
+        let a = mk_addr(&mut p, "w0", 0);
+        let unk = mk_addr(&mut p, "w1", 0);
+        t.record_load(load(&mut p, 0, a, false));
+        let sv = p.constant(0, 32);
+        let killed = t.record_store(
+            &p,
+            StoreRec {
+                stmt: 1,
+                addr: unk,
+                value: sv,
+                ty: Type::F32,
+                space: Space::Global,
+                segment: 0,
+            },
+        );
+        assert_eq!(killed.len(), 1);
+    }
+
+    #[test]
+    fn shared_store_does_not_touch_global_loads() {
+        let mut p = TermPool::new();
+        let mut t = MemTrace::default();
+        let a = mk_addr(&mut p, "w0", 0);
+        t.record_load(load(&mut p, 0, a, false));
+        let sv = p.constant(0, 32);
+        let killed = t.record_store(
+            &p,
+            StoreRec {
+                stmt: 1,
+                addr: a,
+                value: sv,
+                ty: Type::F32,
+                space: Space::Shared,
+                segment: 0,
+            },
+        );
+        assert!(killed.is_empty());
+    }
+}

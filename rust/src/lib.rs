@@ -1,0 +1,16 @@
+//! PTXASW — symbolic emulator + shuffle synthesis for NVIDIA PTX.
+//!
+//! Reproduction of Matsumura et al., *A Symbolic Emulator for Shuffle
+//! Synthesis on the NVIDIA PTX Code* (CC '23). See DESIGN.md for the system
+//! inventory and the substitutions made for the GPU-less testbed.
+pub mod cli;
+pub mod coordinator;
+pub mod emu;
+pub mod perf;
+pub mod ptx;
+pub mod runtime;
+pub mod shuffle;
+pub mod sim;
+pub mod suite;
+pub mod sym;
+pub mod util;

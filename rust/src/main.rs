@@ -1,0 +1,194 @@
+//! `ptxasw` — wrapper of the PTX optimizing assembler (CC '23 reproduction).
+//!
+//! Subcommands:
+//!   asm <in.ptx> [--out FILE]  assembler-wrapper mode: read PTX, synthesize
+//!                              shuffles, print the rewritten PTX (the
+//!                              paper's drop-in `ptxas` hook)
+//!   suite [names...]           run the KernelGen pipeline → Table 2 + Fig 2/3
+//!   apps                       §8.5 application kernels (|N| ≤ 1)
+//!   artifacts [--run name]     list or execute AOT artifacts via PJRT
+//!   help
+
+use ptxasw::cli::Args;
+use ptxasw::coordinator::{report, run_suite, PipelineConfig};
+use ptxasw::perf::by_name as arch_by_name;
+use ptxasw::ptx::{parse, print_module};
+use ptxasw::shuffle::{detect, synthesize, DetectOpts, Variant};
+use ptxasw::suite;
+
+const HELP: &str = "\
+ptxasw — symbolic emulator + shuffle synthesis for NVIDIA PTX
+
+USAGE:
+  ptxasw asm <in.ptx> [--out FILE] [--variant full|noload|nocorner|uniform]
+             [--max-delta N] [--report]
+  ptxasw suite [bench...] [--arch NAME] [--threads N] [--max-delta N] [--fig3 bench]
+  ptxasw apps
+  ptxasw artifacts [--dir DIR] [--run NAME]
+  ptxasw help
+";
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.command.as_str() {
+        "asm" => cmd_asm(&args),
+        "suite" => cmd_suite(&args),
+        "apps" => cmd_apps(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "" | "help" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => Err(format!("unknown command `{other}`\n{HELP}")),
+    }
+    .map(|_| 0)
+    .unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        1
+    });
+    std::process::exit(code);
+}
+
+fn variant_of(s: Option<&str>) -> Result<Variant, String> {
+    Ok(match s.unwrap_or("full") {
+        "full" => Variant::Full,
+        "noload" => Variant::NoLoad,
+        "nocorner" => Variant::NoCorner,
+        "uniform" => Variant::UniformBranch,
+        other => return Err(format!("unknown variant `{other}`")),
+    })
+}
+
+fn cmd_asm(args: &Args) -> Result<(), String> {
+    let input = args
+        .positional
+        .first()
+        .ok_or("asm: missing input file")?;
+    let src = std::fs::read_to_string(input).map_err(|e| format!("{input}: {e}"))?;
+    let mut module = parse(&src).map_err(|e| e.to_string())?;
+    let variant = variant_of(args.opt("variant"))?;
+    let max_delta = args.opt_usize("max-delta", 31)? as i64;
+
+    let mut total = 0;
+    for k in module.kernels.iter_mut() {
+        let res = ptxasw::emu::emulate(k).map_err(|e| format!("{}: {e}", k.name))?;
+        let det = detect(
+            k,
+            &res,
+            DetectOpts {
+                max_abs_delta: max_delta,
+                ..Default::default()
+            },
+        );
+        if args.flag("report") {
+            eprintln!(
+                "{}: {} shuffles over {} global loads (avg delta {:?}; {} flows, {} steps)",
+                k.name,
+                det.shuffle_count(),
+                det.total_global_loads,
+                det.avg_delta(),
+                res.stats.flows_finished,
+                res.stats.steps,
+            );
+        }
+        total += det.shuffle_count();
+        *k = synthesize(k, &det, variant);
+    }
+    let text = print_module(&module);
+    match args.opt("out") {
+        Some(path) => std::fs::write(path, text).map_err(|e| e.to_string())?,
+        None => print!("{text}"),
+    }
+    eprintln!("ptxasw: synthesized {total} shuffle(s) [{}]", variant.name());
+    Ok(())
+}
+
+fn cmd_suite(args: &Args) -> Result<(), String> {
+    let mut cfg = PipelineConfig::default();
+    cfg.threads = args.opt_usize("threads", cfg.threads)?;
+    cfg.detect.max_abs_delta = args.opt_usize("max-delta", 31)? as i64;
+    if let Some(a) = args.opt("arch") {
+        cfg.archs = vec![arch_by_name(a).ok_or(format!("unknown arch `{a}`"))?];
+    }
+    let benches: Vec<_> = if args.positional.is_empty() {
+        suite::suite()
+    } else {
+        args.positional
+            .iter()
+            .map(|n| suite::by_name(n).ok_or(format!("unknown benchmark `{n}`")))
+            .collect::<Result<_, _>>()?
+    };
+    let results = run_suite(&benches, &cfg);
+    let ok: Vec<_> = results
+        .iter()
+        .map(|r| r.as_ref().map_err(|e| e.to_string()))
+        .collect::<Result<_, _>>()?;
+
+    println!("{}", report::table2(&ok));
+    println!("{}", report::figure2(&ok, &cfg.archs, &cfg.variants));
+    if let Some(name) = args.opt("fig3") {
+        let r = ok
+            .iter()
+            .find(|r| r.name == name)
+            .ok_or(format!("`{name}` not among the results"))?;
+        println!("{}", report::figure3(r, &cfg.archs));
+    }
+    Ok(())
+}
+
+fn cmd_apps(args: &Args) -> Result<(), String> {
+    let mut cfg = PipelineConfig::default();
+    cfg.detect.max_abs_delta = 1; // §8.5 restriction
+    cfg.archs = vec![arch_by_name("Pascal").unwrap()];
+    cfg.threads = args.opt_usize("threads", cfg.threads)?;
+    let benches = suite::apps();
+    let results = run_suite(&benches, &cfg);
+    let ok: Vec<_> = results
+        .iter()
+        .map(|r| r.as_ref().map_err(|e| e.to_string()))
+        .collect::<Result<_, _>>()?;
+    println!("{}", report::table2(&ok));
+    println!("{}", report::figure2(&ok, &cfg.archs, &cfg.variants));
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<(), String> {
+    let dir = args.opt("dir").unwrap_or("artifacts");
+    let mut rt = ptxasw::runtime::Runtime::open(dir).map_err(|e| e.to_string())?;
+    println!("platform: {}", rt.platform());
+    if let Some(name) = args.opt("run") {
+        let spec = rt
+            .spec(name)
+            .ok_or(format!("unknown artifact `{name}`"))?
+            .clone();
+        let mut rng = ptxasw::util::Rng::new(7);
+        let inputs: Vec<Vec<f32>> = spec
+            .args
+            .iter()
+            .map(|a| (0..a.elements()).map(|_| rng.f32()).collect())
+            .collect();
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let t0 = std::time::Instant::now();
+        let out = rt.run_f32(name, &refs).map_err(|e| e.to_string())?;
+        let dt = t0.elapsed();
+        let sum: f32 = out.iter().sum();
+        println!(
+            "{name}: {} inputs -> {} outputs in {dt:?} (checksum {sum:.6})",
+            spec.args.len(),
+            out.len()
+        );
+    } else {
+        for n in rt.names() {
+            let spec = rt.spec(n).unwrap();
+            let dims: Vec<String> = spec.args.iter().map(|a| format!("{:?}", a.dims)).collect();
+            println!("  {n}: f32 {}", dims.join(" × "));
+        }
+    }
+    Ok(())
+}

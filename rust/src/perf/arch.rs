@@ -1,0 +1,225 @@
+//! GPU architecture descriptors for the four generations the paper
+//! evaluates (Table 1 + the microbenchmark literature it cites: Jia et
+//! al. 2018, Wong et al. 2010).
+//!
+//! Only *relative* latencies matter for reproducing the paper's shapes:
+//! which benchmarks win on which architecture, where Volta degrades, why
+//! Maxwell's texture-stall kernels fly. Absolute clocks are not claimed.
+
+/// Latency/throughput parameters of one GPU generation.
+#[derive(Debug, Clone)]
+pub struct Arch {
+    pub name: &'static str,
+    pub sm: &'static str,
+    /// Dependent-ALU latency (int/fp32 pipeline depth).
+    pub alu_lat: u32,
+    /// Slow ALU (div/rem/sfu) latency.
+    pub sfu_lat: u32,
+    /// Warp shuffle latency (Table 1 "Shuffle (up)").
+    pub shuffle_lat: u32,
+    /// Shared-memory load latency (Table 1 "SM Read").
+    pub shared_lat: u32,
+    /// L1 hit latency (Table 1 "L1 Hit") — plain `ld.global`.
+    pub l1_lat: u32,
+    /// Read-only / texture-path latency — `ld.global.nc`. On Maxwell and
+    /// Pascal this path is the slow one the paper's §8.2/§8.3 blame.
+    pub tex_lat: u32,
+    /// Full miss latency to device memory.
+    pub gmem_lat: u32,
+    /// Fraction (percent) of warp loads that miss the near cache.
+    pub miss_pct: u32,
+    /// Per-warp outstanding-load budget; exceeding it throttles (§8.1).
+    pub max_outstanding: u32,
+    /// Cycles lost re-fetching after a taken branch (instruction fetch).
+    pub fetch_stall: u32,
+    /// Extra latency on shuffles/predicated issues from register bank
+    /// conflicts (the Pascal "Other" latency of §8.3).
+    pub bank_conflict: u32,
+    /// Register file per SM (32-bit regs).
+    pub regs_per_sm: u32,
+    /// Max resident warps per SM.
+    pub max_warps: u32,
+    /// Architectural register overhead added to max-live for the SASS
+    /// register estimate.
+    pub reg_overhead: u32,
+    /// Cycles per 32-byte sector through the L1/texture pipeline, charged
+    /// per *request* (no reuse discount — a hit still occupies the unit).
+    /// This is the resource shuffles free up: Maxwell/Pascal's texture
+    /// path is slow, Volta's unified L1 is wide (§8.2–8.4).
+    pub sector_cycles: f64,
+    /// Cycles per *unique* 32-byte sector of DRAM traffic per warp —
+    /// per-SM DRAM bandwidth, which shuffle synthesis cannot reduce
+    /// (derived from BW/SMs/clock: K40 25 B/cy, TITAN X 14, P100 10,
+    /// V100 7.5).
+    pub dram_sector_cycles: f64,
+    /// Warp-instructions issued per cycle per SM (scheduler count).
+    pub issue_width: f64,
+}
+
+impl Arch {
+    /// Effective latency of a plain global load (L1 path).
+    pub fn global_load_lat(&self) -> u32 {
+        self.l1_lat + self.gmem_lat * self.miss_pct / 100
+    }
+
+    /// Effective latency of a read-only (`.nc`) load (texture path).
+    pub fn nc_load_lat(&self) -> u32 {
+        self.tex_lat + self.gmem_lat * self.miss_pct / 100
+    }
+
+    /// Occupancy (fraction of max warps) for a per-thread register count.
+    pub fn occupancy(&self, regs_per_thread: u32) -> f64 {
+        let regs = regs_per_thread.max(16);
+        // register allocation granularity of 8
+        let regs = (regs + 7) / 8 * 8;
+        let warps_by_regs = self.regs_per_sm / (regs * 32);
+        (warps_by_regs.min(self.max_warps)) as f64 / self.max_warps as f64
+    }
+}
+
+/// NVIDIA Tesla K40c (shuffle latencies measured on K40c per the paper).
+pub const KEPLER: Arch = Arch {
+    name: "Kepler",
+    sm: "sm_35",
+    alu_lat: 9,
+    sfu_lat: 26,
+    shuffle_lat: 24,
+    shared_lat: 26,
+    l1_lat: 35,
+    tex_lat: 108,
+    gmem_lat: 230,
+    miss_pct: 24,
+    max_outstanding: 5,
+    fetch_stall: 8,
+    bank_conflict: 0,
+    regs_per_sm: 65536,
+    max_warps: 64,
+    reg_overhead: 10,
+    sector_cycles: 0.6,
+    dram_sector_cycles: 1.6,
+    issue_width: 4.0,
+};
+
+/// NVIDIA TITAN X (Maxwell).
+pub const MAXWELL: Arch = Arch {
+    name: "Maxwell",
+    sm: "sm_50",
+    alu_lat: 6,
+    sfu_lat: 20,
+    shuffle_lat: 33,
+    shared_lat: 23,
+    l1_lat: 82,
+    tex_lat: 106,
+    gmem_lat: 368,
+    miss_pct: 20,
+    max_outstanding: 8,
+    fetch_stall: 6,
+    bank_conflict: 0,
+    regs_per_sm: 65536,
+    max_warps: 64,
+    reg_overhead: 10,
+    sector_cycles: 1.0,
+    dram_sector_cycles: 2.0,
+    issue_width: 4.0,
+};
+
+/// NVIDIA Tesla P100.
+pub const PASCAL: Arch = Arch {
+    name: "Pascal",
+    sm: "sm_60",
+    alu_lat: 6,
+    sfu_lat: 20,
+    shuffle_lat: 33,
+    shared_lat: 24,
+    l1_lat: 82,
+    tex_lat: 106,
+    gmem_lat: 350,
+    miss_pct: 18,
+    max_outstanding: 8,
+    fetch_stall: 6,
+    bank_conflict: 14,
+    regs_per_sm: 65536,
+    max_warps: 64,
+    reg_overhead: 10,
+    sector_cycles: 0.7,
+    dram_sector_cycles: 2.2,
+    issue_width: 4.0,
+};
+
+/// NVIDIA Tesla V100 (SXM2).
+pub const VOLTA: Arch = Arch {
+    name: "Volta",
+    sm: "sm_70",
+    alu_lat: 4,
+    sfu_lat: 16,
+    shuffle_lat: 22,
+    shared_lat: 19,
+    l1_lat: 28,
+    tex_lat: 28,
+    gmem_lat: 375,
+    miss_pct: 16,
+    max_outstanding: 10,
+    fetch_stall: 10,
+    bank_conflict: 0,
+    regs_per_sm: 65536,
+    max_warps: 64,
+    reg_overhead: 10,
+    sector_cycles: 0.25,
+    dram_sector_cycles: 1.0,
+    issue_width: 4.0,
+};
+
+/// All four generations in the paper's order.
+pub fn all() -> [&'static Arch; 4] {
+    [&KEPLER, &MAXWELL, &PASCAL, &VOLTA]
+}
+
+pub fn by_name(name: &str) -> Option<&'static Arch> {
+    all()
+        .into_iter()
+        .find(|a| a.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_orderings_hold() {
+        // Table 1: shuffle beats shared memory only on Kepler... actually
+        // shuffle < L1 everywhere except Volta where they're close;
+        // the Maxwell/Pascal L1 is the slow one.
+        for a in all() {
+            assert!(a.shuffle_lat < a.l1_lat + 1, "{}", a.name);
+        }
+        assert!(MAXWELL.l1_lat > KEPLER.l1_lat);
+        assert!(PASCAL.l1_lat > VOLTA.l1_lat);
+        // Volta has the lowest latencies across the board
+        for a in [&KEPLER, &MAXWELL, &PASCAL] {
+            assert!(VOLTA.shuffle_lat <= a.shuffle_lat);
+            assert!(VOLTA.shared_lat <= a.shared_lat);
+            assert!(VOLTA.l1_lat <= a.l1_lat);
+        }
+    }
+
+    #[test]
+    fn occupancy_decreases_with_registers() {
+        for a in all() {
+            let o32 = a.occupancy(32);
+            let o64 = a.occupancy(64);
+            let o128 = a.occupancy(128);
+            assert!(o32 >= o64 && o64 >= o128, "{}", a.name);
+            assert!(o32 <= 1.0 && o128 > 0.0);
+        }
+        // 32 regs → 64 warps exactly on 64k-reg SMs
+        assert!((KEPLER.occupancy(32) - 1.0).abs() < 1e-9);
+        // 64 regs → 32 warps → 50%
+        assert!((KEPLER.occupancy(64) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(by_name("volta").unwrap().name, "Volta");
+        assert!(by_name("Ampere").is_none());
+    }
+}

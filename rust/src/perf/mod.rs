@@ -1,0 +1,7 @@
+//! Performance model: per-architecture latency scoreboard + occupancy.
+
+pub mod arch;
+pub mod model;
+
+pub use arch::{all as all_archs, by_name, Arch, KEPLER, MAXWELL, PASCAL, VOLTA};
+pub use model::{model, PerfReport, Stall, STALL_KINDS};

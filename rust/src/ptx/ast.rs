@@ -1,0 +1,715 @@
+//! Abstract syntax tree for the PTX subset PTXASW understands.
+//!
+//! The subset covers everything the NVHPC OpenACC code generator emits for
+//! the KernelGen benchmarks (Listing 2 of the paper) plus the instructions
+//! PTXASW itself synthesizes (`shfl.sync`, `activemask`, predicate logic).
+
+use std::fmt;
+
+/// Scalar PTX types (`.u32`, `.f32`, ...).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Type {
+    U8,
+    U16,
+    U32,
+    U64,
+    S8,
+    S16,
+    S32,
+    S64,
+    B8,
+    B16,
+    B32,
+    B64,
+    F32,
+    F64,
+    Pred,
+}
+
+impl Type {
+    /// Width in bits. Predicates are modelled as 1 bit.
+    pub fn bits(self) -> u32 {
+        match self {
+            Type::U8 | Type::S8 | Type::B8 => 8,
+            Type::U16 | Type::S16 | Type::B16 => 16,
+            Type::U32 | Type::S32 | Type::B32 | Type::F32 => 32,
+            Type::U64 | Type::S64 | Type::B64 | Type::F64 => 64,
+            Type::Pred => 1,
+        }
+    }
+
+    pub fn bytes(self) -> u64 {
+        (self.bits() as u64 + 7) / 8
+    }
+
+    pub fn is_signed(self) -> bool {
+        matches!(self, Type::S8 | Type::S16 | Type::S32 | Type::S64)
+    }
+
+    pub fn is_float(self) -> bool {
+        matches!(self, Type::F32 | Type::F64)
+    }
+
+    /// Parse a type suffix without the leading dot (e.g. `"u32"`).
+    pub fn from_suffix(s: &str) -> Option<Type> {
+        Some(match s {
+            "u8" => Type::U8,
+            "u16" => Type::U16,
+            "u32" => Type::U32,
+            "u64" => Type::U64,
+            "s8" => Type::S8,
+            "s16" => Type::S16,
+            "s32" => Type::S32,
+            "s64" => Type::S64,
+            "b8" => Type::B8,
+            "b16" => Type::B16,
+            "b32" => Type::B32,
+            "b64" => Type::B64,
+            "f32" => Type::F32,
+            "f64" => Type::F64,
+            "pred" => Type::Pred,
+            _ => return None,
+        })
+    }
+
+    pub fn suffix(self) -> &'static str {
+        match self {
+            Type::U8 => "u8",
+            Type::U16 => "u16",
+            Type::U32 => "u32",
+            Type::U64 => "u64",
+            Type::S8 => "s8",
+            Type::S16 => "s16",
+            Type::S32 => "s32",
+            Type::S64 => "s64",
+            Type::B8 => "b8",
+            Type::B16 => "b16",
+            Type::B32 => "b32",
+            Type::B64 => "b64",
+            Type::F32 => "f32",
+            Type::F64 => "f64",
+            Type::Pred => "pred",
+        }
+    }
+}
+
+impl fmt::Display for Type {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, ".{}", self.suffix())
+    }
+}
+
+/// PTX state spaces relevant to the emulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Space {
+    Param,
+    Global,
+    Shared,
+    Local,
+    Const,
+}
+
+impl Space {
+    pub fn suffix(self) -> &'static str {
+        match self {
+            Space::Param => "param",
+            Space::Global => "global",
+            Space::Shared => "shared",
+            Space::Local => "local",
+            Space::Const => "const",
+        }
+    }
+}
+
+/// A virtual register name, e.g. `%rd7`. Interned per-kernel by the
+/// emulator; the AST keeps the textual name for round-tripping.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Reg(pub String);
+
+impl Reg {
+    pub fn new(s: impl Into<String>) -> Reg {
+        Reg(s.into())
+    }
+}
+
+impl fmt::Display for Reg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+/// Special (pre-defined, read-only) registers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Special {
+    TidX,
+    TidY,
+    TidZ,
+    NtidX,
+    NtidY,
+    NtidZ,
+    CtaidX,
+    CtaidY,
+    CtaidZ,
+    NctaidX,
+    NctaidY,
+    NctaidZ,
+    LaneId,
+    WarpSize,
+}
+
+impl Special {
+    pub fn name(self) -> &'static str {
+        match self {
+            Special::TidX => "%tid.x",
+            Special::TidY => "%tid.y",
+            Special::TidZ => "%tid.z",
+            Special::NtidX => "%ntid.x",
+            Special::NtidY => "%ntid.y",
+            Special::NtidZ => "%ntid.z",
+            Special::CtaidX => "%ctaid.x",
+            Special::CtaidY => "%ctaid.y",
+            Special::CtaidZ => "%ctaid.z",
+            Special::NctaidX => "%nctaid.x",
+            Special::NctaidY => "%nctaid.y",
+            Special::NctaidZ => "%nctaid.z",
+            Special::LaneId => "%laneid",
+            Special::WarpSize => "WARP_SZ",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Special> {
+        Some(match s {
+            "%tid.x" => Special::TidX,
+            "%tid.y" => Special::TidY,
+            "%tid.z" => Special::TidZ,
+            "%ntid.x" => Special::NtidX,
+            "%ntid.y" => Special::NtidY,
+            "%ntid.z" => Special::NtidZ,
+            "%ctaid.x" => Special::CtaidX,
+            "%ctaid.y" => Special::CtaidY,
+            "%ctaid.z" => Special::CtaidZ,
+            "%nctaid.x" => Special::NctaidX,
+            "%nctaid.y" => Special::NctaidY,
+            "%nctaid.z" => Special::NctaidZ,
+            "%laneid" => Special::LaneId,
+            "WARP_SZ" => Special::WarpSize,
+            _ => return None,
+        })
+    }
+}
+
+/// An instruction operand.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Operand {
+    Reg(Reg),
+    /// Integer immediate (sign carried in the i128 so `-1` on u64 works).
+    ImmInt(i128),
+    /// `0f3F800000`-style f32 immediate, stored as raw bits.
+    ImmF32(u32),
+    /// `0dXXXXXXXXXXXXXXXX`-style f64 immediate, stored as raw bits.
+    ImmF64(u64),
+    Special(Special),
+    /// A kernel parameter or shared-variable name used as an address base.
+    Var(String),
+}
+
+impl Operand {
+    pub fn reg(s: &str) -> Operand {
+        Operand::Reg(Reg::new(s))
+    }
+    pub fn as_reg(&self) -> Option<&Reg> {
+        match self {
+            Operand::Reg(r) => Some(r),
+            _ => None,
+        }
+    }
+}
+
+/// `[base+offset]` memory operand.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Address {
+    pub base: Operand,
+    pub offset: i64,
+}
+
+/// Integer binary ops (also used for predicate logic with `Type::Pred`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IntBinOp {
+    Add,
+    Sub,
+    MulLo,
+    MulHi,
+    MulWide,
+    Div,
+    Rem,
+    Min,
+    Max,
+    And,
+    Or,
+    Xor,
+    Shl,
+    Shr,
+}
+
+impl IntBinOp {
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            IntBinOp::Add => "add",
+            IntBinOp::Sub => "sub",
+            IntBinOp::MulLo => "mul.lo",
+            IntBinOp::MulHi => "mul.hi",
+            IntBinOp::MulWide => "mul.wide",
+            IntBinOp::Div => "div",
+            IntBinOp::Rem => "rem",
+            IntBinOp::Min => "min",
+            IntBinOp::Max => "max",
+            IntBinOp::And => "and",
+            IntBinOp::Or => "or",
+            IntBinOp::Xor => "xor",
+            IntBinOp::Shl => "shl",
+            IntBinOp::Shr => "shr",
+        }
+    }
+}
+
+/// Floating-point binary ops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FltBinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Min,
+    Max,
+}
+
+impl FltBinOp {
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            FltBinOp::Add => "add",
+            FltBinOp::Sub => "sub",
+            FltBinOp::Mul => "mul",
+            FltBinOp::Div => "div.rn",
+            FltBinOp::Min => "min",
+            FltBinOp::Max => "max",
+        }
+    }
+}
+
+/// Floating-point unary ops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FltUnOp {
+    Neg,
+    Abs,
+    Sqrt,
+    Rsqrt,
+    Rcp,
+    Sin,
+    Cos,
+    Ex2,
+    Lg2,
+}
+
+impl FltUnOp {
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            FltUnOp::Neg => "neg",
+            FltUnOp::Abs => "abs",
+            FltUnOp::Sqrt => "sqrt.rn",
+            FltUnOp::Rsqrt => "rsqrt.approx",
+            FltUnOp::Rcp => "rcp.rn",
+            FltUnOp::Sin => "sin.approx",
+            FltUnOp::Cos => "cos.approx",
+            FltUnOp::Ex2 => "ex2.approx",
+            FltUnOp::Lg2 => "lg2.approx",
+        }
+    }
+}
+
+/// Comparison predicates for `setp`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CmpOp {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+impl CmpOp {
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            CmpOp::Eq => "eq",
+            CmpOp::Ne => "ne",
+            CmpOp::Lt => "lt",
+            CmpOp::Le => "le",
+            CmpOp::Gt => "gt",
+            CmpOp::Ge => "ge",
+        }
+    }
+
+    pub fn from_suffix(s: &str) -> Option<CmpOp> {
+        Some(match s {
+            "eq" => CmpOp::Eq,
+            "ne" => CmpOp::Ne,
+            "lt" => CmpOp::Lt,
+            "le" => CmpOp::Le,
+            "gt" => CmpOp::Gt,
+            "ge" => CmpOp::Ge,
+            _ => return None,
+        })
+    }
+
+    pub fn negate(self) -> CmpOp {
+        match self {
+            CmpOp::Eq => CmpOp::Ne,
+            CmpOp::Ne => CmpOp::Eq,
+            CmpOp::Lt => CmpOp::Ge,
+            CmpOp::Le => CmpOp::Gt,
+            CmpOp::Gt => CmpOp::Le,
+            CmpOp::Ge => CmpOp::Lt,
+        }
+    }
+}
+
+/// Shuffle modes of `shfl.sync`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ShflMode {
+    Up,
+    Down,
+    Bfly,
+    Idx,
+}
+
+impl ShflMode {
+    pub fn suffix(self) -> &'static str {
+        match self {
+            ShflMode::Up => "up",
+            ShflMode::Down => "down",
+            ShflMode::Bfly => "bfly",
+            ShflMode::Idx => "idx",
+        }
+    }
+}
+
+/// One PTX instruction, without its guard predicate.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// `ld.<space>[.nc].<ty> dst, [addr];`
+    Ld {
+        space: Space,
+        nc: bool,
+        ty: Type,
+        dst: Reg,
+        addr: Address,
+    },
+    /// `st.<space>.<ty> [addr], src;`
+    St {
+        space: Space,
+        ty: Type,
+        addr: Address,
+        src: Operand,
+    },
+    /// `mov.<ty> dst, src;`
+    Mov { ty: Type, dst: Reg, src: Operand },
+    /// `cvta[.to.global].u64 dst, src;`
+    Cvta {
+        to_global: bool,
+        dst: Reg,
+        src: Operand,
+    },
+    /// Integer/bitwise/predicate-logic binary op.
+    IntBin {
+        op: IntBinOp,
+        ty: Type,
+        dst: Reg,
+        a: Operand,
+        b: Operand,
+    },
+    /// `mad.lo.<ty>` / `mad.wide.<ty>` : dst = a*b + c.
+    Mad {
+        wide: bool,
+        ty: Type,
+        dst: Reg,
+        a: Operand,
+        b: Operand,
+        c: Operand,
+    },
+    /// `not.<ty> dst, a;` (bitwise / predicate negation)
+    Not { ty: Type, dst: Reg, a: Operand },
+    /// `neg.<ty> dst, a;` (integer negate)
+    Neg { ty: Type, dst: Reg, a: Operand },
+    /// Float binary op.
+    FltBin {
+        op: FltBinOp,
+        ty: Type,
+        dst: Reg,
+        a: Operand,
+        b: Operand,
+    },
+    /// `fma.rn.<ty> dst, a, b, c;`
+    Fma {
+        ty: Type,
+        dst: Reg,
+        a: Operand,
+        b: Operand,
+        c: Operand,
+    },
+    /// Float unary op.
+    FltUn {
+        op: FltUnOp,
+        ty: Type,
+        dst: Reg,
+        a: Operand,
+    },
+    /// `setp.<cmp>.<ty> p, a, b;`
+    Setp {
+        cmp: CmpOp,
+        ty: Type,
+        dst: Reg,
+        a: Operand,
+        b: Operand,
+    },
+    /// `selp.<ty> dst, a, b, p;`
+    Selp {
+        ty: Type,
+        dst: Reg,
+        a: Operand,
+        b: Operand,
+        p: Operand,
+    },
+    /// `cvt[.rni?][.dty.sty] dst, src;`
+    Cvt {
+        dty: Type,
+        sty: Type,
+        dst: Reg,
+        src: Operand,
+    },
+    /// `bra[.uni] target;`
+    Bra { uni: bool, target: String },
+    /// `shfl.sync.<mode>.b32 dst[|p], src, b, c, mask;`
+    Shfl {
+        mode: ShflMode,
+        dst: Reg,
+        pred_out: Option<Reg>,
+        src: Operand,
+        b: Operand,
+        c: Operand,
+        mask: Operand,
+    },
+    /// `activemask.b32 dst;`
+    Activemask { dst: Reg },
+    /// `bar.sync id;`
+    BarSync { id: u32 },
+    /// `ret;`
+    Ret,
+    /// `exit;` (alias of ret for kernels)
+    Exit,
+}
+
+/// Guard predicate: `@%p` or `@!%p`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Guard {
+    pub reg: Reg,
+    pub negated: bool,
+}
+
+/// A body statement: label or (possibly guarded) instruction.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Statement {
+    Label(String),
+    Instr { guard: Option<Guard>, op: Op },
+}
+
+impl Statement {
+    pub fn instr(op: Op) -> Statement {
+        Statement::Instr { guard: None, op }
+    }
+    pub fn guarded(reg: &str, negated: bool, op: Op) -> Statement {
+        Statement::Instr {
+            guard: Some(Guard {
+                reg: Reg::new(reg),
+                negated,
+            }),
+            op,
+        }
+    }
+}
+
+/// `.reg .f32 %f<4>;`
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegDecl {
+    pub ty: Type,
+    pub prefix: String,
+    pub count: u32,
+}
+
+/// `.shared .align A .b8 name[bytes];`
+#[derive(Debug, Clone, PartialEq)]
+pub struct SharedDecl {
+    pub name: String,
+    pub align: u32,
+    pub bytes: u64,
+}
+
+/// `.param .u64 name`
+#[derive(Debug, Clone, PartialEq)]
+pub struct Param {
+    pub ty: Type,
+    pub name: String,
+}
+
+/// A `.entry` kernel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Kernel {
+    pub name: String,
+    pub params: Vec<Param>,
+    pub regs: Vec<RegDecl>,
+    pub shared: Vec<SharedDecl>,
+    pub body: Vec<Statement>,
+}
+
+impl Kernel {
+    /// Count of declared registers (proxy the paper uses for occupancy).
+    pub fn declared_regs(&self) -> u32 {
+        self.regs.iter().map(|r| r.count).sum()
+    }
+
+    /// Number of global-memory load instructions in the body.
+    pub fn global_loads(&self) -> usize {
+        self.body
+            .iter()
+            .filter(|s| {
+                matches!(
+                    s,
+                    Statement::Instr {
+                        op: Op::Ld {
+                            space: Space::Global,
+                            ..
+                        },
+                        ..
+                    }
+                )
+            })
+            .count()
+    }
+
+    /// Number of `shfl.sync` instructions in the body.
+    pub fn shuffles(&self) -> usize {
+        self.body
+            .iter()
+            .filter(|s| matches!(s, Statement::Instr { op: Op::Shfl { .. }, .. }))
+            .count()
+    }
+}
+
+/// A PTX module (translation unit).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Module {
+    pub version: (u32, u32),
+    pub target: String,
+    pub address_size: u32,
+    pub kernels: Vec<Kernel>,
+}
+
+impl Module {
+    pub fn kernel(&self, name: &str) -> Option<&Kernel> {
+        self.kernels.iter().find(|k| k.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn type_widths() {
+        assert_eq!(Type::U8.bits(), 8);
+        assert_eq!(Type::F32.bits(), 32);
+        assert_eq!(Type::B64.bits(), 64);
+        assert_eq!(Type::Pred.bits(), 1);
+        assert_eq!(Type::F64.bytes(), 8);
+    }
+
+    #[test]
+    fn type_suffix_roundtrip() {
+        for t in [
+            Type::U8,
+            Type::U16,
+            Type::U32,
+            Type::U64,
+            Type::S8,
+            Type::S16,
+            Type::S32,
+            Type::S64,
+            Type::B8,
+            Type::B16,
+            Type::B32,
+            Type::B64,
+            Type::F32,
+            Type::F64,
+            Type::Pred,
+        ] {
+            assert_eq!(Type::from_suffix(t.suffix()), Some(t));
+        }
+        assert_eq!(Type::from_suffix("v4"), None);
+    }
+
+    #[test]
+    fn special_roundtrip() {
+        for s in [
+            Special::TidX,
+            Special::NtidY,
+            Special::CtaidZ,
+            Special::NctaidX,
+            Special::LaneId,
+        ] {
+            assert_eq!(Special::from_name(s.name()), Some(s));
+        }
+    }
+
+    #[test]
+    fn cmp_negation_involutive() {
+        for c in [CmpOp::Eq, CmpOp::Ne, CmpOp::Lt, CmpOp::Le, CmpOp::Gt, CmpOp::Ge] {
+            assert_eq!(c.negate().negate(), c);
+        }
+    }
+
+    #[test]
+    fn kernel_counters() {
+        let k = Kernel {
+            name: "k".into(),
+            params: vec![],
+            regs: vec![
+                RegDecl {
+                    ty: Type::F32,
+                    prefix: "%f".into(),
+                    count: 4,
+                },
+                RegDecl {
+                    ty: Type::B64,
+                    prefix: "%rd".into(),
+                    count: 3,
+                },
+            ],
+            shared: vec![],
+            body: vec![
+                Statement::instr(Op::Ld {
+                    space: Space::Global,
+                    nc: true,
+                    ty: Type::F32,
+                    dst: Reg::new("%f1"),
+                    addr: Address {
+                        base: Operand::reg("%rd1"),
+                        offset: 4,
+                    },
+                }),
+                Statement::instr(Op::Ret),
+            ],
+        };
+        assert_eq!(k.declared_regs(), 7);
+        assert_eq!(k.global_loads(), 1);
+        assert_eq!(k.shuffles(), 0);
+    }
+}

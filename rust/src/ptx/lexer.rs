@@ -1,0 +1,326 @@
+//! Tokenizer for PTX assembly text.
+//!
+//! PTX "words" may contain dots (`ld.global.nc.f32`, `%tid.x`, `.visible`),
+//! dollar signs (labels like `$L__BB0_2`) and percent signs (registers).
+//! The lexer groups those into single `Word` tokens and leaves splitting on
+//! dots to the parser.
+
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    /// Identifier-ish word: opcode, register, directive, label name.
+    Word(String),
+    /// Integer literal (decimal or 0x hex), sign handled by parser.
+    Int(i128),
+    /// `0f3F800000` → raw f32 bits.
+    F32Bits(u32),
+    /// `0d3FF0000000000000` → raw f64 bits.
+    F64Bits(u64),
+    LBrace,
+    RBrace,
+    LParen,
+    RParen,
+    LBracket,
+    RBracket,
+    Comma,
+    Semi,
+    Colon,
+    Pipe,
+    Plus,
+    Minus,
+    At,
+    Bang,
+    Lt,
+    Gt,
+}
+
+impl fmt::Display for Tok {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Tok::Word(w) => write!(f, "{w}"),
+            Tok::Int(v) => write!(f, "{v}"),
+            Tok::F32Bits(b) => write!(f, "0f{b:08X}"),
+            Tok::F64Bits(b) => write!(f, "0d{b:016X}"),
+            Tok::LBrace => write!(f, "{{"),
+            Tok::RBrace => write!(f, "}}"),
+            Tok::LParen => write!(f, "("),
+            Tok::RParen => write!(f, ")"),
+            Tok::LBracket => write!(f, "["),
+            Tok::RBracket => write!(f, "]"),
+            Tok::Comma => write!(f, ","),
+            Tok::Semi => write!(f, ";"),
+            Tok::Colon => write!(f, ":"),
+            Tok::Pipe => write!(f, "|"),
+            Tok::Plus => write!(f, "+"),
+            Tok::Minus => write!(f, "-"),
+            Tok::At => write!(f, "@"),
+            Tok::Bang => write!(f, "!"),
+            Tok::Lt => write!(f, "<"),
+            Tok::Gt => write!(f, ">"),
+        }
+    }
+}
+
+/// A token plus its 1-based source line (for diagnostics).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Spanned {
+    pub tok: Tok,
+    pub line: u32,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("lex error at line {line}: {msg}")]
+pub struct LexError {
+    pub line: u32,
+    pub msg: String,
+}
+
+fn is_word_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_' || c == '%' || c == '$' || c == '.'
+}
+
+fn is_word_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_' || c == '%' || c == '$' || c == '.'
+}
+
+/// Tokenize a full PTX source string.
+pub fn lex(src: &str) -> Result<Vec<Spanned>, LexError> {
+    let mut out = Vec::with_capacity(src.len() / 4);
+    let mut chars = src.char_indices().peekable();
+    let bytes = src.as_bytes();
+    let mut line: u32 = 1;
+
+    while let Some((i, c)) = chars.next() {
+        match c {
+            '\n' => line += 1,
+            c if c.is_whitespace() => {}
+            '/' => match chars.peek() {
+                Some((_, '/')) => {
+                    for (_, c2) in chars.by_ref() {
+                        if c2 == '\n' {
+                            line += 1;
+                            break;
+                        }
+                    }
+                }
+                Some((_, '*')) => {
+                    chars.next();
+                    let mut prev = ' ';
+                    let mut closed = false;
+                    for (_, c2) in chars.by_ref() {
+                        if c2 == '\n' {
+                            line += 1;
+                        }
+                        if prev == '*' && c2 == '/' {
+                            closed = true;
+                            break;
+                        }
+                        prev = c2;
+                    }
+                    if !closed {
+                        return Err(LexError {
+                            line,
+                            msg: "unterminated block comment".into(),
+                        });
+                    }
+                }
+                _ => {
+                    return Err(LexError {
+                        line,
+                        msg: "stray '/'".into(),
+                    })
+                }
+            },
+            '{' => out.push(Spanned { tok: Tok::LBrace, line }),
+            '}' => out.push(Spanned { tok: Tok::RBrace, line }),
+            '(' => out.push(Spanned { tok: Tok::LParen, line }),
+            ')' => out.push(Spanned { tok: Tok::RParen, line }),
+            '[' => out.push(Spanned { tok: Tok::LBracket, line }),
+            ']' => out.push(Spanned { tok: Tok::RBracket, line }),
+            ',' => out.push(Spanned { tok: Tok::Comma, line }),
+            ';' => out.push(Spanned { tok: Tok::Semi, line }),
+            ':' => out.push(Spanned { tok: Tok::Colon, line }),
+            '|' => out.push(Spanned { tok: Tok::Pipe, line }),
+            '+' => out.push(Spanned { tok: Tok::Plus, line }),
+            '-' => out.push(Spanned { tok: Tok::Minus, line }),
+            '@' => out.push(Spanned { tok: Tok::At, line }),
+            '!' => out.push(Spanned { tok: Tok::Bang, line }),
+            '<' => out.push(Spanned { tok: Tok::Lt, line }),
+            '>' => out.push(Spanned { tok: Tok::Gt, line }),
+            c if c.is_ascii_digit() => {
+                let start = i;
+                let mut end = i + 1;
+                while let Some(&(j, c2)) = chars.peek() {
+                    if c2.is_ascii_alphanumeric() {
+                        end = j + c2.len_utf8();
+                        chars.next();
+                    } else {
+                        break;
+                    }
+                }
+                let text = &src[start..end];
+                out.push(Spanned {
+                    tok: lex_number(text, line)?,
+                    line,
+                });
+                let _ = bytes;
+            }
+            c if is_word_start(c) => {
+                let start = i;
+                let mut end = i + c.len_utf8();
+                while let Some(&(j, c2)) = chars.peek() {
+                    if is_word_char(c2) {
+                        end = j + c2.len_utf8();
+                        chars.next();
+                    } else {
+                        break;
+                    }
+                }
+                out.push(Spanned {
+                    tok: Tok::Word(src[start..end].to_string()),
+                    line,
+                });
+            }
+            other => {
+                return Err(LexError {
+                    line,
+                    msg: format!("unexpected character {other:?}"),
+                })
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn lex_number(text: &str, line: u32) -> Result<Tok, LexError> {
+    let err = |msg: String| LexError { line, msg };
+    if let Some(hex) = text.strip_prefix("0f").or_else(|| text.strip_prefix("0F")) {
+        if hex.len() == 8 {
+            return u32::from_str_radix(hex, 16)
+                .map(Tok::F32Bits)
+                .map_err(|e| err(format!("bad f32 literal {text}: {e}")));
+        }
+    }
+    if let Some(hex) = text.strip_prefix("0d").or_else(|| text.strip_prefix("0D")) {
+        if hex.len() == 16 {
+            return u64::from_str_radix(hex, 16)
+                .map(Tok::F64Bits)
+                .map_err(|e| err(format!("bad f64 literal {text}: {e}")));
+        }
+    }
+    if let Some(hex) = text.strip_prefix("0x").or_else(|| text.strip_prefix("0X")) {
+        return i128::from_str_radix(hex, 16)
+            .map(Tok::Int)
+            .map_err(|e| err(format!("bad hex literal {text}: {e}")));
+    }
+    // PTX allows a trailing 'U' on decimal literals.
+    let dec = text.strip_suffix('U').unwrap_or(text);
+    dec.parse::<i128>()
+        .map(Tok::Int)
+        .map_err(|e| err(format!("bad integer literal {text}: {e}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(src: &str) -> Vec<Tok> {
+        lex(src).unwrap().into_iter().map(|s| s.tok).collect()
+    }
+
+    #[test]
+    fn words_keep_dots() {
+        assert_eq!(
+            toks("ld.global.nc.f32 %f1, [%rd7+4];"),
+            vec![
+                Tok::Word("ld.global.nc.f32".into()),
+                Tok::Word("%f1".into()),
+                Tok::Comma,
+                Tok::LBracket,
+                Tok::Word("%rd7".into()),
+                Tok::Plus,
+                Tok::Int(4),
+                Tok::RBracket,
+                Tok::Semi,
+            ]
+        );
+    }
+
+    #[test]
+    fn comments_skipped() {
+        assert_eq!(
+            toks("add.s32 %r1, %r2, %r3; // c = a + b\n/* block\ncomment */ ret;"),
+            vec![
+                Tok::Word("add.s32".into()),
+                Tok::Word("%r1".into()),
+                Tok::Comma,
+                Tok::Word("%r2".into()),
+                Tok::Comma,
+                Tok::Word("%r3".into()),
+                Tok::Semi,
+                Tok::Word("ret".into()),
+                Tok::Semi,
+            ]
+        );
+    }
+
+    #[test]
+    fn float_literals() {
+        assert_eq!(toks("0f3F800000"), vec![Tok::F32Bits(0x3F80_0000)]);
+        assert_eq!(
+            toks("0d3FF0000000000000"),
+            vec![Tok::F64Bits(0x3FF0_0000_0000_0000)]
+        );
+    }
+
+    #[test]
+    fn hex_and_negative() {
+        assert_eq!(toks("0xFF"), vec![Tok::Int(255)]);
+        assert_eq!(toks("-1"), vec![Tok::Minus, Tok::Int(1)]);
+    }
+
+    #[test]
+    fn guard_tokens() {
+        assert_eq!(
+            toks("@!%p1 bra $L_END;"),
+            vec![
+                Tok::At,
+                Tok::Bang,
+                Tok::Word("%p1".into()),
+                Tok::Word("bra".into()),
+                Tok::Word("$L_END".into()),
+                Tok::Semi,
+            ]
+        );
+    }
+
+    #[test]
+    fn reg_decl_tokens() {
+        assert_eq!(
+            toks(".reg .f32 %f<4>;"),
+            vec![
+                Tok::Word(".reg".into()),
+                Tok::Word(".f32".into()),
+                Tok::Word("%f".into()),
+                Tok::Lt,
+                Tok::Int(4),
+                Tok::Gt,
+                Tok::Semi,
+            ]
+        );
+    }
+
+    #[test]
+    fn line_tracking() {
+        let s = lex("add\nsub\nmul").unwrap();
+        assert_eq!(s[0].line, 1);
+        assert_eq!(s[1].line, 2);
+        assert_eq!(s[2].line, 3);
+    }
+
+    #[test]
+    fn unterminated_comment_errors() {
+        assert!(lex("/* nope").is_err());
+    }
+}

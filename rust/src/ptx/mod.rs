@@ -1,0 +1,14 @@
+//! PTX substrate: lexer, AST, parser, printer.
+//!
+//! PTX is the paper's interchange layer: user-level compilers (NVHPC, nvcc)
+//! emit it, PTXASW rewrites it, and the vendor assembler consumes it. Here
+//! the `suite` module plays the role of NVHPC, and `sim` plays the GPU.
+
+pub mod ast;
+pub mod lexer;
+pub mod parser;
+pub mod printer;
+
+pub use ast::*;
+pub use parser::{parse, parse_kernel, ParseError};
+pub use printer::{print_kernel, print_module, print_op};

@@ -1,0 +1,820 @@
+//! Recursive-descent parser for the PTX subset.
+//!
+//! Accepts the module layout NVHPC/nvcc emit (Listing 2 of the paper):
+//! `.version/.target/.address_size` header, `.visible .entry` kernels with
+//! `.param` lists, `.reg`/`.shared` declarations, labels, guarded
+//! instructions. Unknown module-level directives are skipped; unknown
+//! instructions are an error (the emulator must understand every opcode it
+//! runs).
+
+use super::ast::*;
+use super::lexer::{lex, Spanned, Tok};
+
+#[derive(Debug, thiserror::Error)]
+#[error("parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: u32,
+    pub msg: String,
+}
+
+pub fn parse(src: &str) -> Result<Module, ParseError> {
+    let toks = lex(src).map_err(|e| ParseError {
+        line: e.line,
+        msg: e.msg,
+    })?;
+    Parser { toks, pos: 0 }.module()
+}
+
+/// Parse a source string that contains exactly one kernel.
+pub fn parse_kernel(src: &str) -> Result<Kernel, ParseError> {
+    let m = parse(src)?;
+    m.kernels.into_iter().next().ok_or(ParseError {
+        line: 0,
+        msg: "no kernel in module".into(),
+    })
+}
+
+struct Parser {
+    toks: Vec<Spanned>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos).map(|s| &s.tok)
+    }
+
+    fn line(&self) -> u32 {
+        self.toks
+            .get(self.pos.min(self.toks.len().saturating_sub(1)))
+            .map(|s| s.line)
+            .unwrap_or(0)
+    }
+
+    fn err(&self, msg: impl Into<String>) -> ParseError {
+        ParseError {
+            line: self.line(),
+            msg: msg.into(),
+        }
+    }
+
+    fn next(&mut self) -> Option<Tok> {
+        let t = self.toks.get(self.pos).map(|s| s.tok.clone());
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn expect(&mut self, t: &Tok) -> Result<(), ParseError> {
+        match self.next() {
+            Some(ref got) if got == t => Ok(()),
+            Some(got) => Err(self.err(format!("expected `{t}`, got `{got}`"))),
+            None => Err(self.err(format!("expected `{t}`, got end of input"))),
+        }
+    }
+
+    fn eat(&mut self, t: &Tok) -> bool {
+        if self.peek() == Some(t) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn word(&mut self) -> Result<String, ParseError> {
+        match self.next() {
+            Some(Tok::Word(w)) => Ok(w),
+            Some(got) => Err(self.err(format!("expected word, got `{got}`"))),
+            None => Err(self.err("expected word, got end of input")),
+        }
+    }
+
+    fn int(&mut self) -> Result<i128, ParseError> {
+        let neg = self.eat(&Tok::Minus);
+        match self.next() {
+            Some(Tok::Int(v)) => Ok(if neg { -v } else { v }),
+            Some(got) => Err(self.err(format!("expected integer, got `{got}`"))),
+            None => Err(self.err("expected integer, got end of input")),
+        }
+    }
+
+    fn module(&mut self) -> Result<Module, ParseError> {
+        let mut version = (7, 6);
+        let mut target = "sm_70".to_string();
+        let mut address_size = 64;
+        let mut kernels = Vec::new();
+
+        while let Some(tok) = self.peek().cloned() {
+            match tok {
+                Tok::Word(w) if w == ".version" => {
+                    self.pos += 1;
+                    let major = self.int()? as u32;
+                    // minor arrives as a `.N` word because of dot-words
+                    let minor = match self.peek() {
+                        Some(Tok::Word(m)) if m.starts_with('.') => {
+                            let v = m[1..].parse::<u32>().unwrap_or(0);
+                            self.pos += 1;
+                            v
+                        }
+                        _ => 0,
+                    };
+                    version = (major, minor);
+                }
+                Tok::Word(w) if w == ".target" => {
+                    self.pos += 1;
+                    target = self.word()?;
+                    // skip `, texmode_independent` style tails
+                    while self.eat(&Tok::Comma) {
+                        self.word()?;
+                    }
+                }
+                Tok::Word(w) if w == ".address_size" => {
+                    self.pos += 1;
+                    address_size = self.int()? as u32;
+                }
+                Tok::Word(w) if w == ".visible" || w == ".entry" || w == ".weak" => {
+                    kernels.push(self.kernel()?);
+                }
+                Tok::Word(w) if w.starts_with('.') => {
+                    // Unknown module directive (.file, .extern, ...): skip to `;`
+                    // or skip a braced body.
+                    self.pos += 1;
+                    self.skip_directive()?;
+                }
+                _ => return Err(self.err(format!("unexpected token `{tok}` at module level"))),
+            }
+        }
+
+        Ok(Module {
+            version,
+            target,
+            address_size,
+            kernels,
+        })
+    }
+
+    fn skip_directive(&mut self) -> Result<(), ParseError> {
+        let mut depth = 0usize;
+        while let Some(t) = self.peek() {
+            match t {
+                Tok::LBrace => depth += 1,
+                Tok::RBrace => {
+                    depth = depth.saturating_sub(1);
+                    if depth == 0 {
+                        self.pos += 1;
+                        return Ok(());
+                    }
+                }
+                Tok::Semi if depth == 0 => {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                _ => {}
+            }
+            self.pos += 1;
+        }
+        Ok(())
+    }
+
+    fn kernel(&mut self) -> Result<Kernel, ParseError> {
+        // .visible? .entry name ( params ) { body }
+        loop {
+            match self.peek() {
+                Some(Tok::Word(w)) if w == ".visible" || w == ".weak" => {
+                    self.pos += 1;
+                }
+                Some(Tok::Word(w)) if w == ".entry" => {
+                    self.pos += 1;
+                    break;
+                }
+                _ => return Err(self.err("expected `.entry`")),
+            }
+        }
+        let name = self.word()?;
+        let mut params = Vec::new();
+        if self.eat(&Tok::LParen) {
+            while !self.eat(&Tok::RParen) {
+                let d = self.word()?;
+                if d != ".param" {
+                    return Err(self.err(format!("expected `.param`, got `{d}`")));
+                }
+                let ty_word = self.word()?;
+                let ty = Type::from_suffix(ty_word.trim_start_matches('.'))
+                    .ok_or_else(|| self.err(format!("bad param type `{ty_word}`")))?;
+                // optional .ptr / .global / .align N decorations
+                let pname;
+                loop {
+                    let w = self.word()?;
+                    if w == ".ptr" || w == ".global" {
+                        continue;
+                    }
+                    if w == ".align" {
+                        self.int()?;
+                        continue;
+                    }
+                    pname = w;
+                    break;
+                }
+                params.push(Param { ty, name: pname });
+                self.eat(&Tok::Comma);
+            }
+        }
+        // skip performance tuning directives before `{`
+        while let Some(Tok::Word(w)) = self.peek() {
+            if w.starts_with('.') {
+                let _ = self.word()?;
+                // their arguments are ints/commas until `{`
+                while matches!(self.peek(), Some(Tok::Int(_)) | Some(Tok::Comma)) {
+                    self.pos += 1;
+                }
+            } else {
+                break;
+            }
+        }
+        self.expect(&Tok::LBrace)?;
+
+        let mut regs = Vec::new();
+        let mut shared = Vec::new();
+        let mut body = Vec::new();
+
+        loop {
+            match self.peek().cloned() {
+                None => return Err(self.err("unterminated kernel body")),
+                Some(Tok::RBrace) => {
+                    self.pos += 1;
+                    break;
+                }
+                Some(Tok::Word(w)) if w == ".reg" => {
+                    self.pos += 1;
+                    let ty_word = self.word()?;
+                    let ty = Type::from_suffix(ty_word.trim_start_matches('.'))
+                        .ok_or_else(|| self.err(format!("bad reg type `{ty_word}`")))?;
+                    let prefix = self.word()?;
+                    self.expect(&Tok::Lt)?;
+                    let count = self.int()? as u32;
+                    self.expect(&Tok::Gt)?;
+                    self.expect(&Tok::Semi)?;
+                    regs.push(RegDecl { ty, prefix, count });
+                }
+                Some(Tok::Word(w)) if w == ".shared" => {
+                    self.pos += 1;
+                    let mut align = 4;
+                    let mut w2 = self.word()?;
+                    if w2 == ".align" {
+                        align = self.int()? as u32;
+                        w2 = self.word()?;
+                    }
+                    // w2 is the element type (.b8 usually); name follows
+                    if Type::from_suffix(w2.trim_start_matches('.')).is_none() {
+                        return Err(self.err(format!("bad shared decl type `{w2}`")));
+                    }
+                    let name = self.word()?;
+                    self.expect(&Tok::LBracket)?;
+                    let bytes = self.int()? as u64;
+                    self.expect(&Tok::RBracket)?;
+                    self.expect(&Tok::Semi)?;
+                    shared.push(SharedDecl { name, align, bytes });
+                }
+                Some(Tok::At) => {
+                    self.pos += 1;
+                    let negated = self.eat(&Tok::Bang);
+                    let reg = self.word()?;
+                    let op = self.instruction()?;
+                    body.push(Statement::Instr {
+                        guard: Some(Guard {
+                            reg: Reg::new(reg),
+                            negated,
+                        }),
+                        op,
+                    });
+                }
+                Some(Tok::Word(_)) => {
+                    // Label or instruction: label iff followed by `:`
+                    if matches!(self.toks.get(self.pos + 1).map(|s| &s.tok), Some(Tok::Colon)) {
+                        let label = self.word()?;
+                        self.pos += 1; // colon
+                        body.push(Statement::Label(label));
+                    } else {
+                        let op = self.instruction()?;
+                        body.push(Statement::Instr { guard: None, op });
+                    }
+                }
+                Some(other) => {
+                    return Err(self.err(format!("unexpected token `{other}` in kernel body")))
+                }
+            }
+        }
+
+        Ok(Kernel {
+            name,
+            params,
+            regs,
+            shared,
+            body,
+        })
+    }
+
+    fn operand(&mut self) -> Result<Operand, ParseError> {
+        match self.peek().cloned() {
+            Some(Tok::Word(w)) => {
+                self.pos += 1;
+                if let Some(sp) = Special::from_name(&w) {
+                    Ok(Operand::Special(sp))
+                } else if w.starts_with('%') {
+                    Ok(Operand::Reg(Reg(w)))
+                } else {
+                    Ok(Operand::Var(w))
+                }
+            }
+            Some(Tok::Int(_)) | Some(Tok::Minus) => Ok(Operand::ImmInt(self.int()?)),
+            Some(Tok::F32Bits(b)) => {
+                self.pos += 1;
+                Ok(Operand::ImmF32(b))
+            }
+            Some(Tok::F64Bits(b)) => {
+                self.pos += 1;
+                Ok(Operand::ImmF64(b))
+            }
+            other => Err(self.err(format!("expected operand, got `{other:?}`"))),
+        }
+    }
+
+    fn reg_operand(&mut self) -> Result<Reg, ParseError> {
+        match self.operand()? {
+            Operand::Reg(r) => Ok(r),
+            other => Err(self.err(format!("expected register, got `{other:?}`"))),
+        }
+    }
+
+    fn address(&mut self) -> Result<Address, ParseError> {
+        self.expect(&Tok::LBracket)?;
+        let base = self.operand()?;
+        let mut offset = 0i64;
+        if self.eat(&Tok::Plus) {
+            offset = self.int()? as i64;
+        } else if self.peek() == Some(&Tok::Minus) {
+            offset = self.int()? as i64;
+        }
+        self.expect(&Tok::RBracket)?;
+        Ok(Address { base, offset })
+    }
+
+    fn instruction(&mut self) -> Result<Op, ParseError> {
+        let opcode = self.word()?;
+        let parts: Vec<&str> = opcode.split('.').collect();
+        let mnemonic = parts[0];
+        let mods: Vec<&str> = parts[1..].to_vec();
+        let op = self.dispatch(mnemonic, &mods, &opcode)?;
+        self.expect(&Tok::Semi)?;
+        Ok(op)
+    }
+
+    fn last_type(&self, mods: &[&str], opcode: &str) -> Result<Type, ParseError> {
+        mods.iter()
+            .rev()
+            .find_map(|m| Type::from_suffix(m))
+            .ok_or_else(|| self.err(format!("no type suffix in `{opcode}`")))
+    }
+
+    fn space_of(&self, mods: &[&str]) -> Option<Space> {
+        mods.iter().find_map(|m| match *m {
+            "param" => Some(Space::Param),
+            "global" => Some(Space::Global),
+            "shared" => Some(Space::Shared),
+            "local" => Some(Space::Local),
+            "const" => Some(Space::Const),
+            _ => None,
+        })
+    }
+
+    fn dispatch(&mut self, mnemonic: &str, mods: &[&str], opcode: &str) -> Result<Op, ParseError> {
+        match mnemonic {
+            "ld" => {
+                let space = self.space_of(mods).unwrap_or(Space::Global);
+                let nc = mods.contains(&"nc");
+                let ty = self.last_type(mods, opcode)?;
+                let dst = self.reg_operand()?;
+                self.expect(&Tok::Comma)?;
+                let addr = self.address()?;
+                Ok(Op::Ld {
+                    space,
+                    nc,
+                    ty,
+                    dst,
+                    addr,
+                })
+            }
+            "st" => {
+                let space = self.space_of(mods).unwrap_or(Space::Global);
+                let ty = self.last_type(mods, opcode)?;
+                let addr = self.address()?;
+                self.expect(&Tok::Comma)?;
+                let src = self.operand()?;
+                Ok(Op::St {
+                    space,
+                    ty,
+                    addr,
+                    src,
+                })
+            }
+            "mov" => {
+                let ty = self.last_type(mods, opcode)?;
+                let dst = self.reg_operand()?;
+                self.expect(&Tok::Comma)?;
+                let src = self.operand()?;
+                Ok(Op::Mov { ty, dst, src })
+            }
+            "cvta" => {
+                let to_global = mods.contains(&"to") && mods.contains(&"global");
+                let dst = self.reg_operand()?;
+                self.expect(&Tok::Comma)?;
+                let src = self.operand()?;
+                Ok(Op::Cvta { to_global, dst, src })
+            }
+            "add" | "sub" | "mul" | "div" | "rem" | "min" | "max" | "and" | "or" | "xor"
+            | "shl" | "shr" => {
+                let ty = self.last_type(mods, opcode)?;
+                let dst = self.reg_operand()?;
+                self.expect(&Tok::Comma)?;
+                let a = self.operand()?;
+                self.expect(&Tok::Comma)?;
+                let b = self.operand()?;
+                if ty.is_float() {
+                    let op = match mnemonic {
+                        "add" => FltBinOp::Add,
+                        "sub" => FltBinOp::Sub,
+                        "mul" => FltBinOp::Mul,
+                        "div" => FltBinOp::Div,
+                        "min" => FltBinOp::Min,
+                        "max" => FltBinOp::Max,
+                        _ => {
+                            return Err(
+                                self.err(format!("op `{opcode}` invalid for float type"))
+                            )
+                        }
+                    };
+                    Ok(Op::FltBin { op, ty, dst, a, b })
+                } else {
+                    let op = match mnemonic {
+                        "add" => IntBinOp::Add,
+                        "sub" => IntBinOp::Sub,
+                        "mul" => {
+                            if mods.contains(&"wide") {
+                                IntBinOp::MulWide
+                            } else if mods.contains(&"hi") {
+                                IntBinOp::MulHi
+                            } else {
+                                IntBinOp::MulLo
+                            }
+                        }
+                        "div" => IntBinOp::Div,
+                        "rem" => IntBinOp::Rem,
+                        "min" => IntBinOp::Min,
+                        "max" => IntBinOp::Max,
+                        "and" => IntBinOp::And,
+                        "or" => IntBinOp::Or,
+                        "xor" => IntBinOp::Xor,
+                        "shl" => IntBinOp::Shl,
+                        "shr" => IntBinOp::Shr,
+                        _ => unreachable!(),
+                    };
+                    Ok(Op::IntBin { op, ty, dst, a, b })
+                }
+            }
+            "mad" => {
+                let wide = mods.contains(&"wide");
+                let ty = self.last_type(mods, opcode)?;
+                let dst = self.reg_operand()?;
+                self.expect(&Tok::Comma)?;
+                let a = self.operand()?;
+                self.expect(&Tok::Comma)?;
+                let b = self.operand()?;
+                self.expect(&Tok::Comma)?;
+                let c = self.operand()?;
+                Ok(Op::Mad {
+                    wide,
+                    ty,
+                    dst,
+                    a,
+                    b,
+                    c,
+                })
+            }
+            "fma" => {
+                let ty = self.last_type(mods, opcode)?;
+                let dst = self.reg_operand()?;
+                self.expect(&Tok::Comma)?;
+                let a = self.operand()?;
+                self.expect(&Tok::Comma)?;
+                let b = self.operand()?;
+                self.expect(&Tok::Comma)?;
+                let c = self.operand()?;
+                Ok(Op::Fma { ty, dst, a, b, c })
+            }
+            "not" => {
+                let ty = self.last_type(mods, opcode)?;
+                let dst = self.reg_operand()?;
+                self.expect(&Tok::Comma)?;
+                let a = self.operand()?;
+                Ok(Op::Not { ty, dst, a })
+            }
+            "neg" | "abs" => {
+                let ty = self.last_type(mods, opcode)?;
+                let dst = self.reg_operand()?;
+                self.expect(&Tok::Comma)?;
+                let a = self.operand()?;
+                if ty.is_float() {
+                    let op = if mnemonic == "neg" { FltUnOp::Neg } else { FltUnOp::Abs };
+                    Ok(Op::FltUn { op, ty, dst, a })
+                } else if mnemonic == "neg" {
+                    Ok(Op::Neg { ty, dst, a })
+                } else {
+                    // integer abs: model as max(a, -a) at emulation; keep as Neg-less op
+                    Err(self.err("integer abs not supported"))
+                }
+            }
+            "sqrt" | "rsqrt" | "rcp" | "sin" | "cos" | "ex2" | "lg2" => {
+                let ty = self.last_type(mods, opcode)?;
+                let op = match mnemonic {
+                    "sqrt" => FltUnOp::Sqrt,
+                    "rsqrt" => FltUnOp::Rsqrt,
+                    "rcp" => FltUnOp::Rcp,
+                    "sin" => FltUnOp::Sin,
+                    "cos" => FltUnOp::Cos,
+                    "ex2" => FltUnOp::Ex2,
+                    "lg2" => FltUnOp::Lg2,
+                    _ => unreachable!(),
+                };
+                let dst = self.reg_operand()?;
+                self.expect(&Tok::Comma)?;
+                let a = self.operand()?;
+                Ok(Op::FltUn { op, ty, dst, a })
+            }
+            "setp" => {
+                let cmp = mods
+                    .iter()
+                    .find_map(|m| CmpOp::from_suffix(m))
+                    .ok_or_else(|| self.err(format!("no cmp op in `{opcode}`")))?;
+                let ty = self.last_type(mods, opcode)?;
+                let dst = self.reg_operand()?;
+                self.expect(&Tok::Comma)?;
+                let a = self.operand()?;
+                self.expect(&Tok::Comma)?;
+                let b = self.operand()?;
+                Ok(Op::Setp { cmp, ty, dst, a, b })
+            }
+            "selp" => {
+                let ty = self.last_type(mods, opcode)?;
+                let dst = self.reg_operand()?;
+                self.expect(&Tok::Comma)?;
+                let a = self.operand()?;
+                self.expect(&Tok::Comma)?;
+                let b = self.operand()?;
+                self.expect(&Tok::Comma)?;
+                let p = self.operand()?;
+                Ok(Op::Selp { ty, dst, a, b, p })
+            }
+            "cvt" => {
+                let types: Vec<Type> = mods.iter().filter_map(|m| Type::from_suffix(m)).collect();
+                if types.len() != 2 {
+                    return Err(self.err(format!("cvt needs two type suffixes: `{opcode}`")));
+                }
+                let (dty, sty) = (types[0], types[1]);
+                let dst = self.reg_operand()?;
+                self.expect(&Tok::Comma)?;
+                let src = self.operand()?;
+                Ok(Op::Cvt { dty, sty, dst, src })
+            }
+            "bra" => {
+                let uni = mods.contains(&"uni");
+                let target = self.word()?;
+                Ok(Op::Bra { uni, target })
+            }
+            "shfl" => {
+                let mode = if mods.contains(&"up") {
+                    ShflMode::Up
+                } else if mods.contains(&"down") {
+                    ShflMode::Down
+                } else if mods.contains(&"bfly") {
+                    ShflMode::Bfly
+                } else if mods.contains(&"idx") {
+                    ShflMode::Idx
+                } else {
+                    return Err(self.err(format!("no shfl mode in `{opcode}`")));
+                };
+                let dst = self.reg_operand()?;
+                let pred_out = if self.eat(&Tok::Pipe) {
+                    Some(self.reg_operand()?)
+                } else {
+                    None
+                };
+                self.expect(&Tok::Comma)?;
+                let src = self.operand()?;
+                self.expect(&Tok::Comma)?;
+                let b = self.operand()?;
+                self.expect(&Tok::Comma)?;
+                let c = self.operand()?;
+                self.expect(&Tok::Comma)?;
+                let mask = self.operand()?;
+                Ok(Op::Shfl {
+                    mode,
+                    dst,
+                    pred_out,
+                    src,
+                    b,
+                    c,
+                    mask,
+                })
+            }
+            "activemask" => {
+                let dst = self.reg_operand()?;
+                Ok(Op::Activemask { dst })
+            }
+            "bar" | "barrier" => {
+                let id = match self.peek() {
+                    Some(Tok::Int(_)) => self.int()? as u32,
+                    _ => 0,
+                };
+                Ok(Op::BarSync { id })
+            }
+            "ret" => Ok(Op::Ret),
+            "exit" => Ok(Op::Exit),
+            other => Err(self.err(format!("unknown instruction `{other}` in `{opcode}`"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ADD_KERNEL: &str = r#"
+.version 7.6
+.target sm_70
+.address_size 64
+.visible .entry add(.param .u64 c, .param .u64 a,
+ .param .u64 b, .param .u64 f){
+.reg .pred %p<2>;
+.reg .f32 %f<4>;.reg .b32 %r<6>;.reg .b64 %rd<15>;
+ld.param.u64 %rd1, [c];
+ld.param.u64 %rd2, [a];
+ld.param.u64 %rd3, [b];
+ld.param.u64 %rd4, [f];
+cvta.to.global.u64 %rd5, %rd4;
+mov.u32 %r2, %ntid.x;
+mov.u32 %r3, %ctaid.x;
+mov.u32 %r4, %tid.x; mad.lo.s32 %r1, %r3, %r2,%r4;
+mul.wide.s32 %rd6, %r1, 4; add.s64 %rd7,%rd5,%rd6;
+// if (!f[i]) goto $LABEL_EXIT;
+ld.global.u32 %r5, [%rd7]; setp.eq.s32 %p1,%r5,0;
+@%p1 bra $LABEL_EXIT;
+cvta.u64 %rd8, %rd2; add.s64 %rd10, %rd8, %rd6;
+cvta.u64 %rd11,%rd3; add.s64 %rd12, %rd11,%rd6;
+ld.global.f32 %f1, [%rd12];
+ld.global.f32 %f2, [%rd10]; add.f32 %f3, %f2, %f1;
+cvta.u64 %rd13,%rd1; add.s64 %rd14, %rd13,%rd6;
+st.global.f32 [%rd14], %f3;
+$LABEL_EXIT: ret;
+}
+"#;
+
+    #[test]
+    fn parses_paper_listing2() {
+        let m = parse(ADD_KERNEL).unwrap();
+        assert_eq!(m.version, (7, 6));
+        assert_eq!(m.target, "sm_70");
+        assert_eq!(m.address_size, 64);
+        assert_eq!(m.kernels.len(), 1);
+        let k = &m.kernels[0];
+        assert_eq!(k.name, "add");
+        assert_eq!(k.params.len(), 4);
+        assert_eq!(k.params[0].name, "c");
+        assert_eq!(k.declared_regs(), 2 + 4 + 6 + 15);
+        assert_eq!(k.global_loads(), 3);
+        // label present
+        assert!(k
+            .body
+            .iter()
+            .any(|s| matches!(s, Statement::Label(l) if l == "$LABEL_EXIT")));
+        // guarded branch present
+        assert!(k.body.iter().any(|s| matches!(
+            s,
+            Statement::Instr {
+                guard: Some(Guard { negated: false, .. }),
+                op: Op::Bra { .. }
+            }
+        )));
+    }
+
+    #[test]
+    fn parses_shfl_with_pred_out() {
+        let src = r#"
+.visible .entry k(.param .u64 a){
+.reg .b32 %r<4>; .reg .pred %p<2>;
+activemask.b32 %r1;
+shfl.sync.up.b32 %r2|%p1, %r3, 2, 0, %r1;
+@%p1 ld.global.nc.f32 %r2, [%rd1+4];
+ret;
+}
+"#;
+        let k = parse_kernel(src).unwrap();
+        let shfl = k
+            .body
+            .iter()
+            .find_map(|s| match s {
+                Statement::Instr {
+                    op: Op::Shfl { mode, pred_out, b, .. },
+                    ..
+                } => Some((mode, pred_out.clone(), b.clone())),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(*shfl.0, ShflMode::Up);
+        assert_eq!(shfl.1, Some(Reg::new("%p1")));
+        assert_eq!(shfl.2, Operand::ImmInt(2));
+    }
+
+    #[test]
+    fn parses_float_imm_and_negative_offsets() {
+        let src = r#"
+.visible .entry k(.param .u64 a){
+.reg .f32 %f<3>; .reg .b64 %rd<3>;
+mov.f32 %f1, 0f3F800000;
+ld.global.f32 %f2, [%rd1+-8];
+fma.rn.f32 %f1, %f1, %f2, 0f40000000;
+ret;
+}
+"#;
+        let k = parse_kernel(src).unwrap();
+        assert!(k.body.iter().any(|s| matches!(
+            s,
+            Statement::Instr {
+                op: Op::Mov {
+                    src: Operand::ImmF32(0x3F80_0000),
+                    ..
+                },
+                ..
+            }
+        )));
+        assert!(k.body.iter().any(|s| matches!(
+            s,
+            Statement::Instr {
+                op: Op::Ld { addr: Address { offset: -8, .. }, .. },
+                ..
+            }
+        )));
+    }
+
+    #[test]
+    fn parses_shared_decl() {
+        let src = r#"
+.visible .entry k(.param .u64 a){
+.shared .align 4 .b8 smem[4096];
+.reg .f32 %f<2>;
+st.shared.f32 [smem+16], %f1;
+ld.shared.f32 %f1, [smem+20];
+bar.sync 0;
+ret;
+}
+"#;
+        let k = parse_kernel(src).unwrap();
+        assert_eq!(k.shared.len(), 1);
+        assert_eq!(k.shared[0].bytes, 4096);
+        assert_eq!(k.shared[0].align, 4);
+    }
+
+    #[test]
+    fn unknown_instruction_is_error() {
+        let src = ".visible .entry k(){ frobnicate.u32 %r1, %r2; ret; }";
+        assert!(parse(src).is_err());
+    }
+
+    #[test]
+    fn selp_and_cvt() {
+        let src = r#"
+.visible .entry k(.param .u64 a){
+.reg .b32 %r<4>; .reg .f32 %f<3>; .reg .pred %p<2>;
+setp.lt.s32 %p1, %r1, 32;
+selp.b32 %r2, %r1, 0, %p1;
+cvt.rn.f32.s32 %f1, %r2;
+cvt.u64.u32 %rd1, %r2;
+ret;
+}
+"#;
+        let k = parse_kernel(src).unwrap();
+        let cvts: Vec<_> = k
+            .body
+            .iter()
+            .filter_map(|s| match s {
+                Statement::Instr {
+                    op: Op::Cvt { dty, sty, .. },
+                    ..
+                } => Some((*dty, *sty)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(cvts, vec![(Type::F32, Type::S32), (Type::U64, Type::U32)]);
+    }
+}

@@ -1,0 +1,196 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them on CPU.
+//!
+//! The compile path (`make artifacts` → `python/compile/aot.py`) lowers the
+//! L2 JAX graphs (which call the L1 Pallas kernels) to HLO **text** —
+//! serialized `HloModuleProto`s from jax ≥ 0.5 carry 64-bit instruction
+//! ids that xla_extension 0.5.1 rejects, while the text parser reassigns
+//! ids cleanly. This module wraps the `xla` crate: client construction,
+//! artifact discovery via `artifacts/manifest.txt`, compilation caching,
+//! and typed f32 execution. Python never runs on this path.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("artifact directory {0} not found — run `make artifacts` first")]
+    NoArtifacts(PathBuf),
+    #[error("unknown artifact `{0}` (not in manifest)")]
+    UnknownArtifact(String),
+    #[error("artifact `{name}` expects {expect} inputs, got {got}")]
+    ArityMismatch {
+        name: String,
+        expect: usize,
+        got: usize,
+    },
+    #[error("xla error: {0}")]
+    Xla(#[from] xla::Error),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("bad manifest line `{0}`")]
+    BadManifest(String),
+}
+
+/// Shape of one executable input (f32, dims in row-major order).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArgSpec {
+    pub dims: Vec<usize>,
+}
+
+impl ArgSpec {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One loadable artifact (an L2 export).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub args: Vec<ArgSpec>,
+    pub path: PathBuf,
+}
+
+/// PJRT CPU runtime with a compilation cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    specs: HashMap<String, ArtifactSpec>,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open the runtime over an artifact directory (reads `manifest.txt`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime, RuntimeError> {
+        let dir = dir.as_ref();
+        let manifest = dir.join("manifest.txt");
+        if !manifest.exists() {
+            return Err(RuntimeError::NoArtifacts(dir.to_path_buf()));
+        }
+        let mut specs = HashMap::new();
+        for line in std::fs::read_to_string(&manifest)?.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            // "<name> f32 <d0,d1[;d0,d1...]>"
+            let mut parts = line.split_whitespace();
+            let (Some(name), Some(_dtype), Some(dims)) =
+                (parts.next(), parts.next(), parts.next())
+            else {
+                return Err(RuntimeError::BadManifest(line.to_string()));
+            };
+            let args = dims
+                .split(';')
+                .map(|arg| {
+                    arg.split(',')
+                        .map(|d| d.parse::<usize>())
+                        .collect::<Result<Vec<_>, _>>()
+                        .map(|dims| ArgSpec { dims })
+                })
+                .collect::<Result<Vec<_>, _>>()
+                .map_err(|_| RuntimeError::BadManifest(line.to_string()))?;
+            specs.insert(
+                name.to_string(),
+                ArtifactSpec {
+                    name: name.to_string(),
+                    args,
+                    path: dir.join(format!("{name}.hlo.txt")),
+                },
+            );
+        }
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()?,
+            specs,
+            compiled: HashMap::new(),
+        })
+    }
+
+    /// Artifact names available in the manifest.
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.specs.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.get(name)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (once) and cache an artifact.
+    pub fn load(&mut self, name: &str) -> Result<(), RuntimeError> {
+        if self.compiled.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self
+            .specs
+            .get(name)
+            .ok_or_else(|| RuntimeError::UnknownArtifact(name.to_string()))?;
+        let proto = xla::HloModuleProto::from_text_file(&spec.path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.compiled.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact on f32 inputs; returns the flat f32 output.
+    pub fn run_f32(&mut self, name: &str, inputs: &[&[f32]]) -> Result<Vec<f32>, RuntimeError> {
+        self.load(name)?;
+        let spec = &self.specs[name];
+        if inputs.len() != spec.args.len() {
+            return Err(RuntimeError::ArityMismatch {
+                name: name.to_string(),
+                expect: spec.args.len(),
+                got: inputs.len(),
+            });
+        }
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (arg, data) in spec.args.iter().zip(inputs) {
+            assert_eq!(
+                arg.elements(),
+                data.len(),
+                "{name}: input element count mismatch"
+            );
+            let dims: Vec<i64> = arg.dims.iter().map(|&d| d as i64).collect();
+            lits.push(xla::Literal::vec1(data).reshape(&dims)?);
+        }
+        let exe = &self.compiled[name];
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let dir = std::env::temp_dir().join("ptxasw_rt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "alpha f32 16,96\nbeta f32 8,10,40;8,10,40\n",
+        )
+        .unwrap();
+        let rt = Runtime::open(&dir).unwrap();
+        assert_eq!(rt.names(), vec!["alpha", "beta"]);
+        assert_eq!(rt.spec("alpha").unwrap().args[0].dims, vec![16, 96]);
+        assert_eq!(rt.spec("beta").unwrap().args.len(), 2);
+        assert_eq!(rt.spec("beta").unwrap().args[1].elements(), 3200);
+    }
+
+    #[test]
+    fn missing_dir_is_clean_error() {
+        match Runtime::open("/nonexistent/path/xyz") {
+            Err(RuntimeError::NoArtifacts(_)) => {}
+            Err(e) => panic!("wrong error: {e}"),
+            Ok(_) => panic!("expected failure"),
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! Control-flow graph over kernel statements.
+//!
+//! Built before shuffle detection (paper §5.1 "for faster analysis, we
+//! construct control-flow graphs before shuffle detection"); also consumed
+//! by the liveness analysis and the performance model's block-level walk.
+
+use crate::ptx::ast::{Kernel, Op, Statement};
+use std::collections::HashMap;
+
+/// A basic block: a maximal straight-line statement range.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Block {
+    /// Index into `Cfg::blocks`.
+    pub id: usize,
+    /// Statement range `[start, end)` in the kernel body.
+    pub start: usize,
+    pub end: usize,
+    /// Successor block ids.
+    pub succs: Vec<usize>,
+    /// Predecessor block ids.
+    pub preds: Vec<usize>,
+}
+
+#[derive(Debug)]
+pub struct Cfg {
+    pub blocks: Vec<Block>,
+    /// Statement index → owning block id.
+    pub block_of: Vec<usize>,
+}
+
+impl Cfg {
+    pub fn build(k: &Kernel) -> Cfg {
+        let n = k.body.len();
+        let mut labels: HashMap<&str, usize> = HashMap::new();
+        for (i, st) in k.body.iter().enumerate() {
+            if let Statement::Label(l) = st {
+                labels.insert(l.as_str(), i);
+            }
+        }
+
+        // leaders: stmt 0, every label, every stmt after a branch/ret
+        let mut leader = vec![false; n.max(1)];
+        if n > 0 {
+            leader[0] = true;
+        }
+        for (i, st) in k.body.iter().enumerate() {
+            match st {
+                Statement::Label(_) => leader[i] = true,
+                Statement::Instr { op, .. } => {
+                    if matches!(op, Op::Bra { .. } | Op::Ret | Op::Exit) && i + 1 < n {
+                        leader[i + 1] = true;
+                    }
+                }
+            }
+        }
+
+        let mut blocks = Vec::new();
+        let mut block_of = vec![0usize; n];
+        let mut start = 0;
+        for i in 0..n {
+            if i > start && leader[i] {
+                blocks.push(Block {
+                    id: blocks.len(),
+                    start,
+                    end: i,
+                    succs: Vec::new(),
+                    preds: Vec::new(),
+                });
+                start = i;
+            }
+        }
+        if n > 0 {
+            blocks.push(Block {
+                id: blocks.len(),
+                start,
+                end: n,
+                succs: Vec::new(),
+                preds: Vec::new(),
+            });
+        }
+        for b in &blocks {
+            for i in b.start..b.end {
+                block_of[i] = b.id;
+            }
+        }
+
+        // edges
+        let mut edges: Vec<(usize, usize)> = Vec::new();
+        for b in &blocks {
+            let last = b.end - 1;
+            match &k.body[last] {
+                Statement::Instr { guard, op } => match op {
+                    Op::Bra { target, .. } => {
+                        if let Some(&t) = labels.get(target.as_str()) {
+                            edges.push((b.id, block_of[t]));
+                        }
+                        if guard.is_some() && b.end < n {
+                            edges.push((b.id, block_of[b.end]));
+                        }
+                    }
+                    Op::Ret | Op::Exit => {}
+                    _ => {
+                        if b.end < n {
+                            edges.push((b.id, block_of[b.end]));
+                        }
+                    }
+                },
+                Statement::Label(_) => {
+                    if b.end < n {
+                        edges.push((b.id, block_of[b.end]));
+                    }
+                }
+            }
+        }
+        for (f, t) in edges {
+            blocks[f].succs.push(t);
+            blocks[t].preds.push(f);
+        }
+
+        Cfg { blocks, block_of }
+    }
+
+    /// Are `a` and `b` (statement indices) in the same basic block?
+    pub fn same_block(&self, a: usize, b: usize) -> bool {
+        self.block_of[a] == self.block_of[b]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptx::parser::parse_kernel;
+
+    const K: &str = r#"
+.visible .entry k(.param .u64 a){
+.reg .b32 %r<4>; .reg .pred %p<2>; .reg .b64 %rd<4>; .reg .f32 %f<4>;
+mov.u32 %r1, %tid.x;
+setp.lt.s32 %p1, %r1, 16;
+@%p1 bra $SKIP;
+ld.global.f32 %f1, [%rd1];
+ld.global.f32 %f2, [%rd1+4];
+$SKIP:
+st.global.f32 [%rd1], %f1;
+ret;
+}
+"#;
+
+    #[test]
+    fn builds_blocks_and_edges() {
+        let k = parse_kernel(K).unwrap();
+        let cfg = Cfg::build(&k);
+        // blocks: [entry..bra], [two loads], [label..ret]
+        assert_eq!(cfg.blocks.len(), 3);
+        assert_eq!(cfg.blocks[0].succs.len(), 2); // taken + fallthrough
+        assert_eq!(cfg.blocks[1].succs, vec![2]);
+        assert!(cfg.blocks[2].succs.is_empty());
+        assert_eq!(cfg.blocks[2].preds.len(), 2);
+        // the two loads share a block; the store does not
+        assert!(cfg.same_block(3, 4));
+        assert!(!cfg.same_block(4, 6));
+    }
+
+    #[test]
+    fn loop_back_edge() {
+        let k = parse_kernel(
+            r#"
+.visible .entry k(.param .u64 a){
+.reg .b32 %r<3>; .reg .pred %p<2>;
+mov.u32 %r1, 0;
+$L:
+add.s32 %r1, %r1, 1;
+setp.lt.s32 %p1, %r1, 10;
+@%p1 bra $L;
+ret;
+}
+"#,
+        )
+        .unwrap();
+        let cfg = Cfg::build(&k);
+        // find the block ending in the conditional bra; it must point at the
+        // block containing the label $L and at the ret block
+        let bra_block = cfg
+            .blocks
+            .iter()
+            .find(|b| b.succs.len() == 2)
+            .expect("conditional branch block");
+        let label_block = cfg.block_of[1]; // stmt 1 is $L
+        assert!(bra_block.succs.contains(&label_block));
+    }
+
+    #[test]
+    fn empty_kernel() {
+        let k = parse_kernel(".visible .entry k(){ ret; }").unwrap();
+        let cfg = Cfg::build(&k);
+        assert_eq!(cfg.blocks.len(), 1);
+    }
+}

@@ -1,0 +1,387 @@
+//! Shuffle-candidate detection from symbolic memory traces (paper §5.1).
+//!
+//! For every pair of valid global loads in the same straight-line segment of
+//! the same flow, the solver looks for the integer `N` with
+//! `A(%tid.x + N) = B(%tid.x)`, `|N| ≤ 31`. A candidate survives only if it
+//! has the *same* delta in every execution flow its destination appears in,
+//! and only direct loads serve as sources (no shuffles over shuffled
+//! elements). Per destination, the smallest |N| wins — fewest corner cases.
+
+use crate::emu::EmulationResult;
+use crate::ptx::ast::{Kernel, Op, Space, Statement};
+use crate::sym::solve_delta;
+use std::collections::{BTreeMap, BTreeSet, HashSet};
+
+/// One chosen shuffle: cover the load at `dst_stmt` with the value loaded at
+/// `src_stmt`, shifted across the warp by `delta` lanes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Candidate {
+    pub dst_stmt: usize,
+    pub src_stmt: usize,
+    /// `N`: negative → `shfl.sync.up`, positive → `shfl.sync.down`,
+    /// zero → plain register reuse (`mov`).
+    pub delta: i64,
+}
+
+/// Detection configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct DetectOpts {
+    /// Reject candidates with `|N|` above this bound (paper §8.5 uses 1).
+    pub max_abs_delta: i64,
+    /// Also cover shared-memory loads (paper §6: the synthesis "works on
+    /// shared memory", though the latency win is nil — see Table 1).
+    pub include_shared: bool,
+}
+
+impl Default for DetectOpts {
+    fn default() -> DetectOpts {
+        DetectOpts {
+            max_abs_delta: 31,
+            include_shared: false,
+        }
+    }
+}
+
+/// Detection result (the numbers Table 2 reports).
+#[derive(Debug, Clone, Default)]
+pub struct Detection {
+    pub chosen: Vec<Candidate>,
+    /// Static count of global-load statements in the kernel.
+    pub total_global_loads: usize,
+    pub emu_stats: Option<crate::emu::EmuStats>,
+}
+
+impl Detection {
+    /// Average |N| over the chosen shuffles (Table 2 "Delta").
+    pub fn avg_delta(&self) -> Option<f64> {
+        if self.chosen.is_empty() {
+            return None;
+        }
+        let s: i64 = self.chosen.iter().map(|c| c.delta.abs()).sum();
+        Some(s as f64 / self.chosen.len() as f64)
+    }
+
+    pub fn shuffle_count(&self) -> usize {
+        self.chosen.len()
+    }
+}
+
+/// Run detection on an emulation result.
+pub fn detect(kernel: &Kernel, res: &EmulationResult, opts: DetectOpts) -> Detection {
+    let total_global_loads = kernel
+        .body
+        .iter()
+        .filter(|s| {
+            matches!(
+                s,
+                Statement::Instr {
+                    op: Op::Ld {
+                        space: Space::Global,
+                        ..
+                    },
+                    ..
+                }
+            )
+        })
+        .count();
+
+    // per destination stmt: candidate (src, delta) sets per flow
+    // dst -> (flows seen, intersection of candidate sets)
+    let mut per_dst: BTreeMap<usize, (u32, BTreeSet<(usize, i64)>)> = BTreeMap::new();
+    // all flows a dst load appears in (even with zero candidates) must agree
+    let mut dst_appearances: BTreeMap<usize, u32> = BTreeMap::new();
+
+    for flow in &res.flows {
+        let loads: Vec<_> = flow
+            .trace
+            .loads
+            .iter()
+            .filter(|l| l.valid && !l.guarded && l.ty.bits() == 32)
+            .filter(|l| {
+                l.space == Space::Global || (opts.include_shared && l.space == Space::Shared)
+            })
+            .collect();
+        let mut flow_dsts: BTreeMap<usize, BTreeSet<(usize, i64)>> = BTreeMap::new();
+        for l in &loads {
+            flow_dsts.entry(l.stmt).or_default();
+        }
+        for (i, b) in loads.iter().enumerate() {
+            for a in &loads[..i] {
+                if a.stmt == b.stmt || a.segment != b.segment {
+                    continue;
+                }
+                if a.ty != b.ty || a.space != b.space {
+                    continue;
+                }
+                if let Some(n) = solve_delta(&res.pool, a.addr, b.addr, res.tid_sym) {
+                    if n.abs() <= opts.max_abs_delta {
+                        flow_dsts.entry(b.stmt).or_default().insert((a.stmt, n));
+                    }
+                }
+            }
+        }
+        for (dst, set) in flow_dsts {
+            *dst_appearances.entry(dst).or_insert(0) += 1;
+            per_dst
+                .entry(dst)
+                .and_modify(|(n, acc)| {
+                    *n += 1;
+                    // intersection across flows: same source and same N
+                    acc.retain(|c| set.contains(c));
+                })
+                .or_insert_with(|| (1, set));
+        }
+    }
+
+    // greedy selection in program order; shuffled loads cannot be sources
+    let mut shuffled: HashSet<usize> = HashSet::new();
+    let mut chosen = Vec::new();
+    for (dst, (flows_with_cands, cands)) in &per_dst {
+        // consistency: candidate set must have survived every appearance
+        if *flows_with_cands != dst_appearances[dst] {
+            continue;
+        }
+        let best = cands
+            .iter()
+            .filter(|(src, _)| !shuffled.contains(src))
+            .min_by_key(|(src, n)| (n.abs(), *src));
+        if let Some(&(src, delta)) = best {
+            chosen.push(Candidate {
+                dst_stmt: *dst,
+                src_stmt: src,
+                delta,
+            });
+            shuffled.insert(*dst);
+        }
+    }
+
+    Detection {
+        chosen,
+        total_global_loads,
+        emu_stats: Some(res.stats),
+    }
+}
+
+/// Convenience: emulate + detect with default options.
+pub fn analyze(kernel: &Kernel) -> Result<Detection, crate::emu::EmuError> {
+    let res = crate::emu::emulate(kernel)?;
+    Ok(detect(kernel, &res, DetectOpts::default()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::emu::emulate;
+    use crate::ptx::parser::parse_kernel;
+
+    /// 1D 3-point stencil: out[i] = a[i-1] + a[i] + a[i+1].
+    /// Expect 2 shuffles: a[i] ← a[i-1] (N=1), a[i+1] ← a[i-1] (N=2).
+    const STENCIL3: &str = r#"
+.visible .entry s3(.param .u64 out, .param .u64 a){
+.reg .b32 %r<6>; .reg .b64 %rd<8>; .reg .f32 %f<6>; .reg .pred %p<2>;
+ld.param.u64 %rd1, [out];
+ld.param.u64 %rd2, [a];
+cvta.to.global.u64 %rd3, %rd2;
+cvta.to.global.u64 %rd4, %rd1;
+mov.u32 %r2, %ntid.x;
+mov.u32 %r3, %ctaid.x;
+mov.u32 %r4, %tid.x;
+mad.lo.s32 %r1, %r3, %r2, %r4;
+mul.wide.s32 %rd5, %r1, 4;
+add.s64 %rd6, %rd3, %rd5;
+ld.global.nc.f32 %f1, [%rd6];
+ld.global.nc.f32 %f2, [%rd6+4];
+ld.global.nc.f32 %f3, [%rd6+8];
+add.f32 %f4, %f1, %f2;
+add.f32 %f5, %f4, %f3;
+add.s64 %rd7, %rd4, %rd5;
+st.global.f32 [%rd7], %f5;
+ret;
+}
+"#;
+
+    #[test]
+    fn detects_stencil_shuffles() {
+        let k = parse_kernel(STENCIL3).unwrap();
+        let res = emulate(&k).unwrap();
+        let det = detect(&k, &res, DetectOpts::default());
+        assert_eq!(det.total_global_loads, 3);
+        assert_eq!(det.shuffle_count(), 2);
+        // loads at stmts 10,11,12: dst 11 ← src 10 (N=1); dst 12 ← src 10 (N=2)
+        let mut deltas: Vec<i64> = det.chosen.iter().map(|c| c.delta).collect();
+        deltas.sort();
+        assert_eq!(deltas, vec![1, 2]);
+        assert_eq!(det.avg_delta(), Some(1.5));
+        // both shuffles source from the first (unshuffled) load
+        let srcs: Vec<usize> = det.chosen.iter().map(|c| c.src_stmt).collect();
+        assert!(srcs.iter().all(|&s| s == det.chosen[0].src_stmt));
+    }
+
+    #[test]
+    fn max_abs_delta_limits_selection() {
+        let k = parse_kernel(STENCIL3).unwrap();
+        let res = emulate(&k).unwrap();
+        let det = detect(&k, &res, DetectOpts { max_abs_delta: 1, ..Default::default() });
+        // only the N=1 candidate fits; N=2 via the middle load is rejected
+        // because the middle load became a shuffle destination itself —
+        // but its candidate (src=middle, N=1) is still admissible.
+        for c in &det.chosen {
+            assert!(c.delta.abs() <= 1);
+        }
+        assert_eq!(det.shuffle_count(), 1);
+    }
+
+    #[test]
+    fn no_shared_array_no_shuffles() {
+        // vecadd: c[i] = a[i] + b[i] — no two loads share an array
+        let k = parse_kernel(
+            r#"
+.visible .entry vadd(.param .u64 c, .param .u64 a, .param .u64 b){
+.reg .b32 %r<6>; .reg .b64 %rd<10>; .reg .f32 %f<4>;
+ld.param.u64 %rd1, [c];
+ld.param.u64 %rd2, [a];
+ld.param.u64 %rd3, [b];
+cvta.to.global.u64 %rd4, %rd2;
+cvta.to.global.u64 %rd5, %rd3;
+cvta.to.global.u64 %rd6, %rd1;
+mov.u32 %r2, %ntid.x;
+mov.u32 %r3, %ctaid.x;
+mov.u32 %r4, %tid.x;
+mad.lo.s32 %r1, %r3, %r2, %r4;
+mul.wide.s32 %rd7, %r1, 4;
+add.s64 %rd8, %rd4, %rd7;
+add.s64 %rd9, %rd5, %rd7;
+ld.global.nc.f32 %f1, [%rd8];
+ld.global.nc.f32 %f2, [%rd9];
+add.f32 %f3, %f1, %f2;
+add.s64 %rd8, %rd6, %rd7;
+st.global.f32 [%rd8], %f3;
+ret;
+}
+"#,
+        )
+        .unwrap();
+        let det = analyze(&k).unwrap();
+        assert_eq!(det.total_global_loads, 2);
+        assert_eq!(det.shuffle_count(), 0);
+        assert_eq!(det.avg_delta(), None);
+    }
+
+    #[test]
+    fn non_tid_dimension_not_shuffled() {
+        // loads differ along a non-leading (row) dimension: addresses differ
+        // by nx*4 bytes where nx is symbolic — no constant delta exists
+        let k = parse_kernel(
+            r#"
+.visible .entry rows(.param .u64 out, .param .u64 a, .param .u32 nx){
+.reg .b32 %r<8>; .reg .b64 %rd<8>; .reg .f32 %f<4>;
+ld.param.u64 %rd1, [out];
+ld.param.u64 %rd2, [a];
+ld.param.u32 %r5, [nx];
+cvta.to.global.u64 %rd3, %rd2;
+mov.u32 %r4, %tid.x;
+mad.lo.s32 %r1, %r5, 1, %r4;
+mul.wide.s32 %rd5, %r1, 4;
+add.s64 %rd6, %rd3, %rd5;
+mul.wide.s32 %rd7, %r5, 4;
+ld.global.nc.f32 %f1, [%rd6];
+add.s64 %rd6, %rd6, %rd7;
+ld.global.nc.f32 %f2, [%rd6];
+add.f32 %f3, %f1, %f2;
+cvta.to.global.u64 %rd4, %rd1;
+st.global.f32 [%rd4], %f3;
+ret;
+}
+"#,
+        )
+        .unwrap();
+        let det = analyze(&k).unwrap();
+        assert_eq!(det.shuffle_count(), 0);
+    }
+
+    #[test]
+    fn same_address_gives_zero_delta() {
+        let k = parse_kernel(
+            r#"
+.visible .entry dup(.param .u64 out, .param .u64 a){
+.reg .b32 %r<6>; .reg .b64 %rd<8>; .reg .f32 %f<4>;
+ld.param.u64 %rd1, [out];
+ld.param.u64 %rd2, [a];
+cvta.to.global.u64 %rd3, %rd2;
+mov.u32 %r4, %tid.x;
+mul.wide.s32 %rd5, %r4, 4;
+add.s64 %rd6, %rd3, %rd5;
+ld.global.nc.f32 %f1, [%rd6];
+ld.global.nc.f32 %f2, [%rd6];
+add.f32 %f3, %f1, %f2;
+cvta.to.global.u64 %rd4, %rd1;
+st.global.f32 [%rd4], %f3;
+ret;
+}
+"#,
+        )
+        .unwrap();
+        let det = analyze(&k).unwrap();
+        assert_eq!(det.shuffle_count(), 1);
+        assert_eq!(det.chosen[0].delta, 0);
+    }
+
+    #[test]
+    fn guard_divergence_keeps_consistent_candidates() {
+        // the two loads sit behind a guard — both flows must agree
+        let k = parse_kernel(
+            r#"
+.visible .entry g(.param .u64 out, .param .u64 a, .param .u32 n){
+.reg .b32 %r<8>; .reg .b64 %rd<8>; .reg .f32 %f<4>; .reg .pred %p<2>;
+ld.param.u64 %rd1, [out];
+ld.param.u64 %rd2, [a];
+ld.param.u32 %r5, [n];
+cvta.to.global.u64 %rd3, %rd2;
+mov.u32 %r4, %tid.x;
+setp.ge.s32 %p1, %r4, %r5;
+@%p1 bra $EXIT;
+mul.wide.s32 %rd5, %r4, 4;
+add.s64 %rd6, %rd3, %rd5;
+ld.global.nc.f32 %f1, [%rd6];
+ld.global.nc.f32 %f2, [%rd6+4];
+add.f32 %f3, %f1, %f2;
+cvta.to.global.u64 %rd4, %rd1;
+add.s64 %rd7, %rd4, %rd5;
+st.global.f32 [%rd7], %f3;
+$EXIT: ret;
+}
+"#,
+        )
+        .unwrap();
+        let det = analyze(&k).unwrap();
+        assert_eq!(det.shuffle_count(), 1);
+        assert_eq!(det.chosen[0].delta, 1);
+    }
+
+    #[test]
+    fn f64_loads_not_shuffled() {
+        // 32-bit shuffles only (paper §2.3)
+        let k = parse_kernel(
+            r#"
+.visible .entry d(.param .u64 out, .param .u64 a){
+.reg .b32 %r<6>; .reg .b64 %rd<8>; .reg .f64 %fd<4>;
+ld.param.u64 %rd2, [a];
+cvta.to.global.u64 %rd3, %rd2;
+mov.u32 %r4, %tid.x;
+mul.wide.s32 %rd5, %r4, 8;
+add.s64 %rd6, %rd3, %rd5;
+ld.global.nc.f64 %fd1, [%rd6];
+ld.global.nc.f64 %fd2, [%rd6+8];
+add.f64 %fd3, %fd1, %fd2;
+ld.param.u64 %rd1, [out];
+cvta.to.global.u64 %rd4, %rd1;
+st.global.f64 [%rd4], %fd3;
+ret;
+}
+"#,
+        )
+        .unwrap();
+        let det = analyze(&k).unwrap();
+        assert_eq!(det.shuffle_count(), 0);
+    }
+}

@@ -1,0 +1,266 @@
+//! Live-variable analysis over the CFG.
+//!
+//! Used two ways: (1) paper §5.1 — exclude shuffle sources whose value may
+//! reflect a different loop iteration than the destination (the source
+//! register must stay live and unclobbered from source load to destination
+//! load); (2) the performance model uses max-live as its SASS register-count
+//! estimate, since the declared virtual registers overstate real pressure.
+
+use super::cfg::Cfg;
+use crate::emu::env::RegInterner;
+use crate::emu::induction::written_reg;
+use crate::ptx::ast::{Address, Kernel, Op, Operand, Statement};
+
+/// Per-statement use/def sets (register ids).
+#[derive(Debug, Clone, Default)]
+pub struct UseDef {
+    pub uses: Vec<u32>,
+    pub defs: Vec<u32>,
+}
+
+fn add_operand(uses: &mut Vec<u32>, regs: &mut RegInterner, o: &Operand) {
+    if let Operand::Reg(r) = o {
+        uses.push(regs.intern(r));
+    }
+}
+
+fn add_addr(uses: &mut Vec<u32>, regs: &mut RegInterner, a: &Address) {
+    if let Operand::Reg(r) = &a.base {
+        uses.push(regs.intern(r));
+    }
+}
+
+/// Use/def sets for every statement.
+pub fn use_defs(k: &Kernel, regs: &mut RegInterner) -> Vec<UseDef> {
+    k.body
+        .iter()
+        .map(|st| {
+            let mut ud = UseDef::default();
+            let Statement::Instr { guard, op } = st else {
+                return ud;
+            };
+            if let Some(g) = guard {
+                ud.uses.push(regs.intern(&g.reg));
+                // a guarded write is also a read of the old value
+                if let Some(d) = written_reg(op) {
+                    ud.uses.push(regs.intern(d));
+                }
+            }
+            match op {
+                Op::Ld { addr, .. } => add_addr(&mut ud.uses, regs, addr),
+                Op::St { addr, src, .. } => {
+                    add_addr(&mut ud.uses, regs, addr);
+                    add_operand(&mut ud.uses, regs, src);
+                }
+                Op::Mov { src, .. } | Op::Cvta { src, .. } | Op::Cvt { src, .. } => {
+                    add_operand(&mut ud.uses, regs, src)
+                }
+                Op::IntBin { a, b, .. } | Op::FltBin { a, b, .. } | Op::Setp { a, b, .. } => {
+                    add_operand(&mut ud.uses, regs, a);
+                    add_operand(&mut ud.uses, regs, b);
+                }
+                Op::Mad { a, b, c, .. } | Op::Fma { a, b, c, .. } => {
+                    add_operand(&mut ud.uses, regs, a);
+                    add_operand(&mut ud.uses, regs, b);
+                    add_operand(&mut ud.uses, regs, c);
+                }
+                Op::Selp { a, b, p, .. } => {
+                    add_operand(&mut ud.uses, regs, a);
+                    add_operand(&mut ud.uses, regs, b);
+                    add_operand(&mut ud.uses, regs, p);
+                }
+                Op::Not { a, .. } | Op::Neg { a, .. } | Op::FltUn { a, .. } => {
+                    add_operand(&mut ud.uses, regs, a)
+                }
+                Op::Shfl { src, b, c, mask, .. } => {
+                    add_operand(&mut ud.uses, regs, src);
+                    add_operand(&mut ud.uses, regs, b);
+                    add_operand(&mut ud.uses, regs, c);
+                    add_operand(&mut ud.uses, regs, mask);
+                }
+                Op::Activemask { .. }
+                | Op::Bra { .. }
+                | Op::BarSync { .. }
+                | Op::Ret
+                | Op::Exit => {}
+            }
+            if let Some(d) = written_reg(op) {
+                ud.defs.push(regs.intern(d));
+            }
+            if let Op::Shfl { pred_out: Some(p), .. } = op {
+                ud.defs.push(regs.intern(p));
+            }
+            ud
+        })
+        .collect()
+}
+
+/// Result of the backward dataflow.
+#[derive(Debug)]
+pub struct Liveness {
+    /// live-in set per statement (bitset over register ids).
+    pub live_in: Vec<Vec<u64>>,
+    pub nregs: usize,
+}
+
+fn set(bits: &mut [u64], i: u32) {
+    bits[(i / 64) as usize] |= 1 << (i % 64);
+}
+fn get(bits: &[u64], i: u32) -> bool {
+    bits[(i / 64) as usize] >> (i % 64) & 1 == 1
+}
+fn clear(bits: &mut [u64], i: u32) {
+    bits[(i / 64) as usize] &= !(1 << (i % 64));
+}
+fn or_into(dst: &mut [u64], src: &[u64]) -> bool {
+    let mut changed = false;
+    for (d, s) in dst.iter_mut().zip(src) {
+        let n = *d | *s;
+        changed |= n != *d;
+        *d = n;
+    }
+    changed
+}
+
+impl Liveness {
+    pub fn compute(k: &Kernel, cfg: &Cfg, regs: &mut RegInterner) -> Liveness {
+        let uds = use_defs(k, regs);
+        let nregs = regs.len();
+        let words = nregs.div_ceil(64).max(1);
+        let nstmt = k.body.len();
+        let mut live_in = vec![vec![0u64; words]; nstmt.max(1)];
+
+        // iterate to fixpoint over blocks in reverse
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for b in cfg.blocks.iter().rev() {
+                // live-out of block = union of successors' live-in
+                let mut live: Vec<u64> = vec![0; words];
+                for &s in &b.succs {
+                    let first = cfg.blocks[s].start;
+                    let snapshot = live_in[first].clone();
+                    or_into(&mut live, &snapshot);
+                }
+                // walk statements backwards
+                for i in (b.start..b.end).rev() {
+                    for &d in &uds[i].defs {
+                        clear(&mut live, d);
+                    }
+                    for &u in &uds[i].uses {
+                        set(&mut live, u);
+                    }
+                    changed |= or_into(&mut live_in[i], &live);
+                    live.copy_from_slice(&live_in[i]);
+                }
+            }
+        }
+
+        Liveness { live_in, nregs }
+    }
+
+    pub fn is_live_in(&self, stmt: usize, reg: u32) -> bool {
+        get(&self.live_in[stmt], reg)
+    }
+
+    /// Maximum number of simultaneously-live registers — the SASS register
+    /// estimate the perf model feeds into the occupancy calculation.
+    pub fn max_live(&self) -> u32 {
+        self.live_in
+            .iter()
+            .map(|bits| bits.iter().map(|w| w.count_ones()).sum::<u32>())
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptx::ast::Reg;
+    use crate::ptx::parser::parse_kernel;
+
+    #[test]
+    fn straight_line_liveness() {
+        let k = parse_kernel(
+            r#"
+.visible .entry k(.param .u64 a){
+.reg .b32 %r<4>; .reg .b64 %rd<3>; .reg .f32 %f<4>;
+ld.param.u64 %rd1, [a];
+cvta.to.global.u64 %rd2, %rd1;
+ld.global.f32 %f1, [%rd2];
+ld.global.f32 %f2, [%rd2+4];
+add.f32 %f3, %f1, %f2;
+st.global.f32 [%rd2], %f3;
+ret;
+}
+"#,
+        )
+        .unwrap();
+        let cfg = Cfg::build(&k);
+        let mut regs = RegInterner::from_kernel(&k);
+        let lv = Liveness::compute(&k, &cfg, &mut regs);
+        let f1 = regs.get(&Reg::new("%f1")).unwrap();
+        let f3 = regs.get(&Reg::new("%f3")).unwrap();
+        // %f1 live between its def (stmt 2) and use (stmt 4)
+        assert!(lv.is_live_in(3, f1));
+        assert!(lv.is_live_in(4, f1));
+        assert!(!lv.is_live_in(5, f1));
+        // %f3 live into the store
+        assert!(lv.is_live_in(5, f3));
+        assert!(lv.max_live() >= 3);
+    }
+
+    #[test]
+    fn loop_keeps_accumulator_live() {
+        let k = parse_kernel(
+            r#"
+.visible .entry k(.param .u64 a){
+.reg .b32 %r<3>; .reg .pred %p<2>; .reg .f32 %f<3>; .reg .b64 %rd<3>;
+mov.u32 %r1, 0;
+mov.f32 %f1, 0f00000000;
+$L:
+add.f32 %f1, %f1, %f1;
+add.s32 %r1, %r1, 1;
+setp.lt.s32 %p1, %r1, 10;
+@%p1 bra $L;
+st.global.f32 [%rd1], %f1;
+ret;
+}
+"#,
+        )
+        .unwrap();
+        let cfg = Cfg::build(&k);
+        let mut regs = RegInterner::from_kernel(&k);
+        let lv = Liveness::compute(&k, &cfg, &mut regs);
+        let f1 = regs.get(&Reg::new("%f1")).unwrap();
+        let r1 = regs.get(&Reg::new("%r1")).unwrap();
+        // both live around the back edge (live-in at the label statement)
+        assert!(lv.is_live_in(2, f1));
+        assert!(lv.is_live_in(2, r1));
+    }
+
+    #[test]
+    fn guarded_write_reads_old_value() {
+        let k = parse_kernel(
+            r#"
+.visible .entry k(.param .u64 a){
+.reg .b32 %r<4>; .reg .pred %p<2>;
+mov.u32 %r1, 0;
+mov.u32 %r2, %tid.x;
+setp.lt.s32 %p1, %r2, 4;
+@%p1 mov.u32 %r1, 1;
+st.global.b32 [%rd1], %r1;
+ret;
+}
+"#,
+        )
+        .unwrap();
+        let cfg = Cfg::build(&k);
+        let mut regs = RegInterner::from_kernel(&k);
+        let lv = Liveness::compute(&k, &cfg, &mut regs);
+        let r1 = regs.get(&Reg::new("%r1")).unwrap();
+        // %r1 must be live INTO the guarded mov (its old value may survive)
+        assert!(lv.is_live_in(3, r1));
+    }
+}

@@ -1,0 +1,11 @@
+//! Shuffle synthesis: detection over memory traces + PTX rewriting (§5).
+
+pub mod cfg;
+pub mod detect;
+pub mod liveness;
+pub mod synth;
+
+pub use cfg::Cfg;
+pub use detect::{analyze, detect, Candidate, DetectOpts, Detection};
+pub use liveness::Liveness;
+pub use synth::{synthesize, Variant};

@@ -1,0 +1,539 @@
+//! Shuffle code generation (paper §5.2, Listing 6).
+//!
+//! For each chosen candidate the source load is extended with a `mov` into
+//! a dedicated source register; the destination load is replaced by a
+//! `shfl.sync` plus a corner-case checker: lanes with no in-warp source
+//! (`%wid < N` for `.up`) or lanes of an incomplete warp re-issue the
+//! original load under a predicate. The warp-lane id is computed once at
+//! kernel entry and shared among all shuffles.
+//!
+//! Besides the paper's default synthesis, the evaluation variants are
+//! generated here too: NO LOAD (covered loads deleted — invalid results,
+//! measures the pure memory saving), NO CORNER (shuffle only, no checker),
+//! and the §8.3 uniform-branch alternative that guards the whole shuffle
+//! with `@%incomplete bra` (kills register-bank-conflict latency on Pascal
+//! at the cost of an extra branch).
+
+use super::detect::{Candidate, Detection};
+use crate::ptx::ast::*;
+use std::collections::BTreeMap;
+
+/// Which synthesis flavour to emit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// Paper default: shuffle + corner-case predicate (valid results).
+    Full,
+    /// Delete covered loads, insert nothing (invalid results).
+    NoLoad,
+    /// Shuffle without corner handling (invalid results).
+    NoCorner,
+    /// §8.3: uniform branch around the shuffle (valid results).
+    UniformBranch,
+}
+
+impl Variant {
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Full => "PTXASW",
+            Variant::NoLoad => "NO LOAD",
+            Variant::NoCorner => "NO CORNER",
+            Variant::UniformBranch => "UNIFORM",
+        }
+    }
+
+    pub const ALL: [Variant; 4] = [
+        Variant::Full,
+        Variant::NoLoad,
+        Variant::NoCorner,
+        Variant::UniformBranch,
+    ];
+}
+
+/// Synthesize a new kernel with the chosen shuffles applied.
+pub fn synthesize(kernel: &Kernel, det: &Detection, variant: Variant) -> Kernel {
+    if det.chosen.is_empty() {
+        return kernel.clone();
+    }
+    let dst_map: BTreeMap<usize, Candidate> =
+        det.chosen.iter().map(|c| (c.dst_stmt, *c)).collect();
+
+    // unique source statements → source register
+    let mut src_regs: BTreeMap<usize, (Reg, Type)> = BTreeMap::new();
+    let mut nf = 0u32;
+    let mut nb = 0u32;
+    for c in &det.chosen {
+        src_regs.entry(c.src_stmt).or_insert_with(|| {
+            let ty = load_type(kernel, c.src_stmt);
+            let r = if ty == Type::F32 {
+                let r = Reg::new(format!("%zsf{nf}"));
+                nf += 1;
+                r
+            } else {
+                let r = Reg::new(format!("%zsb{nb}"));
+                nb += 1;
+                r
+            };
+            (r, ty)
+        });
+    }
+
+    let shuffling = !matches!(variant, Variant::NoLoad);
+    let needs_wid = shuffling
+        && matches!(variant, Variant::Full | Variant::UniformBranch)
+        && det.chosen.iter().any(|c| c.delta != 0);
+
+    let mut nm = 0u32; // mask regs
+    let mut np = 0u32; // pred regs
+    let mut nlabel = 0u32;
+    let mut body: Vec<Statement> = Vec::with_capacity(kernel.body.len() + det.chosen.len() * 6);
+
+    // shared %wid = %tid.x % 32 at kernel entry
+    let wid = Reg::new("%zw0");
+    if needs_wid {
+        body.push(Statement::instr(Op::Mov {
+            ty: Type::U32,
+            dst: wid.clone(),
+            src: Operand::Special(Special::TidX),
+        }));
+        body.push(Statement::instr(Op::IntBin {
+            op: IntBinOp::Rem,
+            ty: Type::U32,
+            dst: wid.clone(),
+            a: Operand::Reg(wid.clone()),
+            b: Operand::ImmInt(32),
+        }));
+    }
+
+    for (i, stmt) in kernel.body.iter().enumerate() {
+        if let Some(c) = dst_map.get(&i) {
+            let Statement::Instr {
+                guard: None,
+                op: op @ Op::Ld { .. },
+            } = stmt
+            else {
+                // detection only proposes unguarded loads; be safe
+                body.push(stmt.clone());
+                continue;
+            };
+            let (src_reg, _src_ty) = &src_regs[&c.src_stmt];
+            let Op::Ld { ty, dst, .. } = op else { unreachable!() };
+            emit_covered_load(
+                &mut body,
+                variant,
+                c,
+                op,
+                *ty,
+                dst,
+                src_reg,
+                &wid,
+                &mut nm,
+                &mut np,
+                &mut nlabel,
+            );
+            continue;
+        }
+        body.push(stmt.clone());
+        if shuffling || true {
+            // source mov is emitted for all variants that keep the loads;
+            // NO LOAD deletes destinations but sources still execute.
+        }
+        if let Some((r, ty)) = src_regs.get(&i) {
+            if shuffling {
+                let Statement::Instr {
+                    op: Op::Ld { dst, .. },
+                    ..
+                } = stmt
+                else {
+                    continue;
+                };
+                body.push(Statement::instr(Op::Mov {
+                    ty: mov_ty(*ty),
+                    dst: r.clone(),
+                    src: Operand::Reg(dst.clone()),
+                }));
+            }
+        }
+    }
+
+    // extend register declarations
+    let mut regs = kernel.regs.clone();
+    if needs_wid {
+        regs.push(RegDecl {
+            ty: Type::B32,
+            prefix: "%zw".into(),
+            count: 1,
+        });
+    }
+    if shuffling {
+        if nf > 0 {
+            regs.push(RegDecl {
+                ty: Type::F32,
+                prefix: "%zsf".into(),
+                count: nf,
+            });
+        }
+        if nb > 0 {
+            regs.push(RegDecl {
+                ty: Type::B32,
+                prefix: "%zsb".into(),
+                count: nb,
+            });
+        }
+        if nm > 0 {
+            regs.push(RegDecl {
+                ty: Type::B32,
+                prefix: "%zm".into(),
+                count: nm,
+            });
+        }
+        if np > 0 {
+            regs.push(RegDecl {
+                ty: Type::Pred,
+                prefix: "%zp".into(),
+                count: np,
+            });
+        }
+    }
+
+    Kernel {
+        name: kernel.name.clone(),
+        params: kernel.params.clone(),
+        regs,
+        shared: kernel.shared.clone(),
+        body,
+    }
+}
+
+fn mov_ty(t: Type) -> Type {
+    match t {
+        Type::F32 => Type::F32,
+        _ => Type::B32,
+    }
+}
+
+fn load_type(kernel: &Kernel, stmt: usize) -> Type {
+    match &kernel.body[stmt] {
+        Statement::Instr {
+            op: Op::Ld { ty, .. },
+            ..
+        } => *ty,
+        _ => Type::B32,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn emit_covered_load(
+    body: &mut Vec<Statement>,
+    variant: Variant,
+    c: &Candidate,
+    orig_ld: &Op,
+    ty: Type,
+    dst: &Reg,
+    src_reg: &Reg,
+    wid: &Reg,
+    nm: &mut u32,
+    np: &mut u32,
+    nlabel: &mut u32,
+) {
+    if variant == Variant::NoLoad {
+        return; // load deleted, nothing synthesized
+    }
+    if c.delta == 0 {
+        // pure register reuse
+        body.push(Statement::instr(Op::Mov {
+            ty: mov_ty(ty),
+            dst: dst.clone(),
+            src: Operand::Reg(src_reg.clone()),
+        }));
+        return;
+    }
+
+    let n = c.delta.unsigned_abs() as i128;
+    let (mode, clamp, oor_cmp, oor_val) = if c.delta < 0 {
+        // value comes from lane (wid - |N|): shift up
+        (ShflMode::Up, 0i128, CmpOp::Lt, n)
+    } else {
+        // value comes from lane (wid + N): shift down
+        (ShflMode::Down, 31i128, CmpOp::Gt, 31 - n)
+    };
+
+    let mask = Reg::new(format!("%zm{}", *nm));
+    *nm += 1;
+    body.push(Statement::instr(Op::Activemask { dst: mask.clone() }));
+
+    let shfl = Op::Shfl {
+        mode,
+        dst: dst.clone(),
+        pred_out: None,
+        src: Operand::Reg(src_reg.clone()),
+        b: Operand::ImmInt(n),
+        c: Operand::ImmInt(clamp),
+        mask: Operand::Reg(mask.clone()),
+    };
+
+    match variant {
+        Variant::NoCorner => {
+            body.push(Statement::instr(shfl));
+        }
+        Variant::Full => {
+            let incomplete = Reg::new(format!("%zp{}", *np));
+            let oor = Reg::new(format!("%zp{}", *np + 1));
+            let pred = Reg::new(format!("%zp{}", *np + 2));
+            *np += 3;
+            body.push(Statement::instr(Op::Setp {
+                cmp: CmpOp::Ne,
+                ty: Type::S32,
+                dst: incomplete.clone(),
+                a: Operand::Reg(mask.clone()),
+                b: Operand::ImmInt(-1),
+            }));
+            body.push(Statement::instr(Op::Setp {
+                cmp: oor_cmp,
+                ty: Type::U32,
+                dst: oor.clone(),
+                a: Operand::Reg(wid.clone()),
+                b: Operand::ImmInt(oor_val),
+            }));
+            body.push(Statement::instr(Op::IntBin {
+                op: IntBinOp::Or,
+                ty: Type::Pred,
+                dst: pred.clone(),
+                a: Operand::Reg(incomplete),
+                b: Operand::Reg(oor),
+            }));
+            body.push(Statement::instr(shfl));
+            body.push(Statement::guarded(&pred.0, false, orig_ld.clone()));
+        }
+        Variant::UniformBranch => {
+            let incomplete = Reg::new(format!("%zp{}", *np));
+            let oor = Reg::new(format!("%zp{}", *np + 1));
+            *np += 2;
+            let corner = format!("$ZC_{}", *nlabel);
+            let done = format!("$ZD_{}", *nlabel);
+            *nlabel += 1;
+            body.push(Statement::instr(Op::Setp {
+                cmp: CmpOp::Ne,
+                ty: Type::S32,
+                dst: incomplete.clone(),
+                a: Operand::Reg(mask.clone()),
+                b: Operand::ImmInt(-1),
+            }));
+            body.push(Statement::guarded(
+                &incomplete.0,
+                false,
+                Op::Bra {
+                    uni: false,
+                    target: corner.clone(),
+                },
+            ));
+            body.push(Statement::instr(Op::Setp {
+                cmp: oor_cmp,
+                ty: Type::U32,
+                dst: oor.clone(),
+                a: Operand::Reg(wid.clone()),
+                b: Operand::ImmInt(oor_val),
+            }));
+            body.push(Statement::instr(shfl));
+            body.push(Statement::guarded(&oor.0, false, orig_ld.clone()));
+            body.push(Statement::instr(Op::Bra {
+                uni: true,
+                target: done.clone(),
+            }));
+            body.push(Statement::Label(corner));
+            body.push(Statement::instr(orig_ld.clone()));
+            body.push(Statement::Label(done));
+        }
+        Variant::NoLoad => unreachable!("handled above"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptx::parser::{parse_kernel, parse};
+    use crate::ptx::printer::print_kernel;
+    use crate::shuffle::detect::analyze;
+
+    const STENCIL3: &str = r#"
+.visible .entry s3(.param .u64 out, .param .u64 a){
+.reg .b32 %r<6>; .reg .b64 %rd<8>; .reg .f32 %f<6>; .reg .pred %p<2>;
+ld.param.u64 %rd1, [out];
+ld.param.u64 %rd2, [a];
+cvta.to.global.u64 %rd3, %rd2;
+cvta.to.global.u64 %rd4, %rd1;
+mov.u32 %r2, %ntid.x;
+mov.u32 %r3, %ctaid.x;
+mov.u32 %r4, %tid.x;
+mad.lo.s32 %r1, %r3, %r2, %r4;
+mul.wide.s32 %rd5, %r1, 4;
+add.s64 %rd6, %rd3, %rd5;
+ld.global.nc.f32 %f1, [%rd6];
+ld.global.nc.f32 %f2, [%rd6+4];
+ld.global.nc.f32 %f3, [%rd6+8];
+add.f32 %f4, %f1, %f2;
+add.f32 %f5, %f4, %f3;
+add.s64 %rd7, %rd4, %rd5;
+st.global.f32 [%rd7], %f5;
+ret;
+}
+"#;
+
+    fn stencil_detection() -> (Kernel, Detection) {
+        let k = parse_kernel(STENCIL3).unwrap();
+        let det = analyze(&k).unwrap();
+        assert_eq!(det.shuffle_count(), 2);
+        (k, det)
+    }
+
+    #[test]
+    fn full_variant_structure() {
+        let (k, det) = stencil_detection();
+        let s = synthesize(&k, &det, Variant::Full);
+        assert_eq!(s.shuffles(), 2);
+        // corner-case loads are guarded; original 3 loads: 1 unshuffled + 2 guarded
+        let guarded_loads = s
+            .body
+            .iter()
+            .filter(|st| {
+                matches!(
+                    st,
+                    Statement::Instr {
+                        guard: Some(_),
+                        op: Op::Ld { .. }
+                    }
+                )
+            })
+            .count();
+        assert_eq!(guarded_loads, 2);
+        assert_eq!(s.global_loads(), 3);
+        // both deltas positive here → shfl.sync.down with clamp 31
+        for st in &s.body {
+            if let Statement::Instr {
+                op: Op::Shfl { mode, c, .. },
+                ..
+            } = st
+            {
+                assert_eq!(*mode, ShflMode::Down);
+                assert_eq!(*c, Operand::ImmInt(31));
+            }
+        }
+        // wid computed once
+        let rems = s
+            .body
+            .iter()
+            .filter(|st| {
+                matches!(
+                    st,
+                    Statement::Instr {
+                        op: Op::IntBin {
+                            op: IntBinOp::Rem,
+                            ..
+                        },
+                        ..
+                    }
+                )
+            })
+            .count();
+        assert_eq!(rems, 1);
+    }
+
+    #[test]
+    fn full_variant_reparses() {
+        let (k, det) = stencil_detection();
+        let s = synthesize(&k, &det, Variant::Full);
+        let text = print_kernel(&s);
+        let re = parse(&format!(".version 7.6\n.target sm_70\n.address_size 64\n{text}"))
+            .unwrap_or_else(|e| panic!("reparse failed: {e}\n{text}"));
+        assert_eq!(re.kernels[0], s);
+    }
+
+    #[test]
+    fn noload_deletes_covered_loads() {
+        let (k, det) = stencil_detection();
+        let s = synthesize(&k, &det, Variant::NoLoad);
+        assert_eq!(s.global_loads(), 1);
+        assert_eq!(s.shuffles(), 0);
+        // fewer instructions than original
+        assert!(s.body.len() < k.body.len());
+        // no new registers
+        assert_eq!(s.declared_regs(), k.declared_regs());
+    }
+
+    #[test]
+    fn nocorner_shuffles_without_checker() {
+        let (k, det) = stencil_detection();
+        let s = synthesize(&k, &det, Variant::NoCorner);
+        assert_eq!(s.shuffles(), 2);
+        assert_eq!(s.global_loads(), 1);
+        // no predicates added
+        assert!(!s.regs.iter().any(|r| r.prefix == "%zp"));
+    }
+
+    #[test]
+    fn uniform_branch_adds_labels() {
+        let (k, det) = stencil_detection();
+        let s = synthesize(&k, &det, Variant::UniformBranch);
+        assert_eq!(s.shuffles(), 2);
+        let labels = s
+            .body
+            .iter()
+            .filter(|st| matches!(st, Statement::Label(l) if l.starts_with("$Z")))
+            .count();
+        assert_eq!(labels, 4); // corner + done per shuffle
+        let unis = s
+            .body
+            .iter()
+            .filter(|st| {
+                matches!(
+                    st,
+                    Statement::Instr {
+                        op: Op::Bra { uni: true, .. },
+                        ..
+                    }
+                )
+            })
+            .count();
+        assert_eq!(unis, 2);
+        // corner path re-issues the load: 1 unshuffled + 2 predicated + 2 corner
+        assert_eq!(s.global_loads(), 5);
+    }
+
+    #[test]
+    fn empty_detection_is_identity() {
+        let k = parse_kernel(STENCIL3).unwrap();
+        let det = Detection::default();
+        let s = synthesize(&k, &det, Variant::Full);
+        assert_eq!(s, k);
+    }
+
+    #[test]
+    fn zero_delta_emits_mov_only() {
+        let k = parse_kernel(
+            r#"
+.visible .entry dup(.param .u64 out, .param .u64 a){
+.reg .b32 %r<6>; .reg .b64 %rd<8>; .reg .f32 %f<4>;
+ld.param.u64 %rd1, [out];
+ld.param.u64 %rd2, [a];
+cvta.to.global.u64 %rd3, %rd2;
+mov.u32 %r4, %tid.x;
+mul.wide.s32 %rd5, %r4, 4;
+add.s64 %rd6, %rd3, %rd5;
+ld.global.nc.f32 %f1, [%rd6];
+ld.global.nc.f32 %f2, [%rd6];
+add.f32 %f3, %f1, %f2;
+cvta.to.global.u64 %rd4, %rd1;
+st.global.f32 [%rd4], %f3;
+ret;
+}
+"#,
+        )
+        .unwrap();
+        let det = analyze(&k).unwrap();
+        assert_eq!(det.chosen[0].delta, 0);
+        let s = synthesize(&k, &det, Variant::Full);
+        assert_eq!(s.shuffles(), 0);
+        assert_eq!(s.global_loads(), 1);
+        // no wid computation for delta-0-only synthesis
+        assert!(!s.regs.iter().any(|r| r.prefix == "%zw"));
+    }
+}

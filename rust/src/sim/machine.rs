@@ -1,0 +1,1109 @@
+//! Concrete warp-level PTX interpreter.
+//!
+//! Plays the GPU in this testbed (DESIGN.md substitution table): 32-thread
+//! warps in lock-step SIMT with lowest-pc-first reconvergence, per-lane
+//! predication, full `shfl.sync` semantics (PTX ISA: out-of-range sources
+//! return the lane's own value with a false predicate), `activemask`, and a
+//! flat global memory. Used to check bit-exact semantics preservation of
+//! the synthesized kernels and to produce the dynamic instruction trace the
+//! performance model replays.
+//!
+//! Limitation (documented): warps of a block run serialized, so `bar.sync`
+//! is a no-op — enough for the OpenACC-style kernels evaluated here, which
+//! never communicate through shared memory.
+
+use super::memory::{GlobalMem, MemError, SHARED_BASE};
+use crate::emu::env::RegInterner;
+use crate::ptx::ast::*;
+use crate::sym::term::{eval_bin, eval_cmp, to_signed, BvOp, CmpKind};
+use std::collections::HashMap;
+
+/// Launch configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub grid: (u32, u32, u32),
+    pub block: (u32, u32, u32),
+    /// Kernel parameter values in declaration order (pointers or scalars).
+    pub params: Vec<u64>,
+    /// Record the issue trace of block (0,0,0) for the perf model.
+    pub record_trace: bool,
+    pub max_warp_steps: u64,
+}
+
+impl SimConfig {
+    pub fn new(grid_x: u32, block_x: u32, params: Vec<u64>) -> SimConfig {
+        SimConfig {
+            grid: (grid_x, 1, 1),
+            block: (block_x, 1, 1),
+            params,
+            record_trace: false,
+            max_warp_steps: 50_000_000,
+        }
+    }
+
+    pub fn threads_per_block(&self) -> u32 {
+        self.block.0 * self.block.1 * self.block.2
+    }
+}
+
+/// One warp-issue event (for the perf model).
+#[derive(Debug, Clone, Copy)]
+pub struct WarpEvent {
+    /// Kernel body statement index.
+    pub stmt: u32,
+    /// Bitmask of lanes that arrived at the instruction together.
+    pub active: u32,
+    /// Bitmask of lanes that actually executed it (guard-passing).
+    pub exec: u32,
+    /// For global/shared loads & stores: byte address of the lowest
+    /// executing lane (the perf model dedups 32-byte sectors with it).
+    pub addr: u64,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimStats {
+    /// Warp-level instruction issues.
+    pub warp_instructions: u64,
+    /// Thread-level instruction executions (sum of active lanes).
+    pub thread_instructions: u64,
+    pub global_loads: u64,
+    pub nc_loads: u64,
+    pub shared_loads: u64,
+    pub stores: u64,
+    pub shfls: u64,
+    pub branches: u64,
+    pub divergent_branches: u64,
+    pub uninit_reads: u64,
+}
+
+#[derive(Debug)]
+pub struct SimResult {
+    pub mem: GlobalMem,
+    pub stats: SimStats,
+    /// Issue trace of block (0,0,0) when requested: one stream per warp.
+    pub trace: Vec<Vec<WarpEvent>>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum SimError {
+    #[error(transparent)]
+    Mem(#[from] MemError),
+    #[error("unknown branch target `{0}`")]
+    UnknownLabel(String),
+    #[error("unknown parameter `{0}`")]
+    UnknownParam(String),
+    #[error("warp exceeded {0} steps (livelock?)")]
+    StepLimit(u64),
+}
+
+const WARP: usize = 32;
+
+struct Lane {
+    regs: Vec<u64>,
+    written: Vec<bool>,
+    pc: usize,
+    done: bool,
+    tid: (u32, u32, u32),
+}
+
+/// Run a kernel to completion over the whole grid.
+pub fn run(kernel: &Kernel, cfg: &SimConfig, mem: GlobalMem) -> Result<SimResult, SimError> {
+    let mut regs = RegInterner::from_kernel(kernel);
+    // intern guard regs too (already covered by from_kernel)
+    let mut labels: HashMap<&str, usize> = HashMap::new();
+    for (i, st) in kernel.body.iter().enumerate() {
+        if let Statement::Label(l) = st {
+            labels.insert(l.as_str(), i);
+        }
+    }
+    let mut params: HashMap<&str, u64> = HashMap::new();
+    for (i, p) in kernel.params.iter().enumerate() {
+        params.insert(
+            p.name.as_str(),
+            cfg.params.get(i).copied().ok_or_else(|| {
+                SimError::UnknownParam(format!("{} (no value supplied)", p.name))
+            })?,
+        );
+    }
+    // shared-variable window layout
+    let mut shared_bases: HashMap<&str, u64> = HashMap::new();
+    let mut shared_size = 0u64;
+    for sh in &kernel.shared {
+        let a = sh.align.max(1) as u64;
+        shared_size = (shared_size + a - 1) / a * a;
+        shared_bases.insert(sh.name.as_str(), SHARED_BASE + shared_size);
+        shared_size += sh.bytes;
+    }
+
+    let mut m = Machine {
+        kernel,
+        regs: &mut regs,
+        labels,
+        params,
+        shared_bases,
+        mem,
+        shared: vec![0u8; shared_size as usize],
+        stats: SimStats::default(),
+        trace: Vec::new(),
+        cfg,
+    };
+
+    let tpb = cfg.threads_per_block();
+    for bz in 0..cfg.grid.2 {
+        for by in 0..cfg.grid.1 {
+            for bx in 0..cfg.grid.0 {
+                m.shared.iter_mut().for_each(|b| *b = 0);
+                let record = cfg.record_trace && (bx, by, bz) == (0, 0, 0);
+                m.run_block((bx, by, bz), tpb, record)?;
+            }
+        }
+    }
+
+    Ok(SimResult {
+        mem: m.mem,
+        stats: m.stats,
+        trace: m.trace,
+    })
+}
+
+struct Machine<'a> {
+    kernel: &'a Kernel,
+    regs: &'a mut RegInterner,
+    labels: HashMap<&'a str, usize>,
+    params: HashMap<&'a str, u64>,
+    shared_bases: HashMap<&'a str, u64>,
+    mem: GlobalMem,
+    shared: Vec<u8>,
+    stats: SimStats,
+    trace: Vec<Vec<WarpEvent>>,
+    cfg: &'a SimConfig,
+}
+
+impl<'a> Machine<'a> {
+    fn run_block(
+        &mut self,
+        ctaid: (u32, u32, u32),
+        tpb: u32,
+        record: bool,
+    ) -> Result<(), SimError> {
+        let nregs = self.regs.len();
+        let warps = tpb.div_ceil(32);
+        for w in 0..warps {
+            let mut lanes: Vec<Lane> = (0..WARP as u32)
+                .map(|l| {
+                    let t = w * 32 + l;
+                    let tid = linear_to_tid(t, self.cfg.block);
+                    Lane {
+                        regs: vec![0; nregs],
+                        written: vec![false; nregs],
+                        pc: 0,
+                        done: t >= tpb, // fractional warp: extra lanes inactive
+                        tid,
+                    }
+                })
+                .collect();
+            if record {
+                self.trace.push(Vec::new());
+            }
+            self.run_warp(&mut lanes, ctaid, record)?;
+        }
+        Ok(())
+    }
+
+    fn run_warp(
+        &mut self,
+        lanes: &mut [Lane],
+        ctaid: (u32, u32, u32),
+        record: bool,
+    ) -> Result<(), SimError> {
+        let body_len = self.kernel.body.len();
+        let mut steps = 0u64;
+        loop {
+            // lowest-pc-first reconvergence
+            let pc = match lanes.iter().filter(|l| !l.done).map(|l| l.pc).min() {
+                None => return Ok(()),
+                Some(p) => p,
+            };
+            if pc >= body_len {
+                for l in lanes.iter_mut().filter(|l| !l.done && l.pc >= body_len) {
+                    l.done = true;
+                }
+                continue;
+            }
+            steps += 1;
+            if steps > self.cfg.max_warp_steps {
+                return Err(SimError::StepLimit(self.cfg.max_warp_steps));
+            }
+            let active: Vec<usize> = lanes
+                .iter()
+                .enumerate()
+                .filter(|(_, l)| !l.done && l.pc == pc)
+                .map(|(i, _)| i)
+                .collect();
+            let mask: u32 = active.iter().fold(0, |m, &i| m | (1 << i));
+
+            match &self.kernel.body[pc] {
+                Statement::Label(_) => {
+                    for &i in &active {
+                        lanes[i].pc += 1;
+                    }
+                    continue;
+                }
+                Statement::Instr { guard, op } => {
+                    self.stats.warp_instructions += 1;
+                    // per-lane guard evaluation
+                    let exec: Vec<usize> = match guard {
+                        None => active.clone(),
+                        Some(g) => {
+                            let gid = self.regs.intern(&g.reg);
+                            active
+                                .iter()
+                                .copied()
+                                .filter(|&i| {
+                                    let v = lanes[i].regs[gid as usize] & 1 == 1;
+                                    v != g.negated
+                                })
+                                .collect()
+                        }
+                    };
+                    self.stats.thread_instructions += exec.len() as u64;
+                    if record {
+                        let exec_mask: u32 = exec.iter().fold(0, |m, &i| m | (1 << i));
+                        // address of the first executing lane for memory ops
+                        let addr = match op {
+                            Op::Ld { space, addr, .. } | Op::St { space, addr, .. }
+                                if *space != Space::Param =>
+                            {
+                                match exec.first() {
+                                    Some(&l) => self.addr_value(&mut lanes[l], addr, ctaid)?,
+                                    None => 0,
+                                }
+                            }
+                            _ => 0,
+                        };
+                        self.trace.last_mut().unwrap().push(WarpEvent {
+                            stmt: pc as u32,
+                            active: mask,
+                            exec: exec_mask,
+                            addr,
+                        });
+                    }
+                    self.exec(op, lanes, &active, &exec, mask, ctaid)?;
+                }
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn exec(
+        &mut self,
+        op: &Op,
+        lanes: &mut [Lane],
+        active: &[usize],
+        exec: &[usize],
+        maskbits: u32,
+        ctaid: (u32, u32, u32),
+    ) -> Result<(), SimError> {
+        match op {
+            Op::Bra { target, .. } => {
+                self.stats.branches += 1;
+                let t = *self
+                    .labels
+                    .get(target.as_str())
+                    .ok_or_else(|| SimError::UnknownLabel(target.clone()))?;
+                let mut taken = 0usize;
+                for &i in active {
+                    if exec.contains(&i) {
+                        lanes[i].pc = t;
+                        taken += 1;
+                    } else {
+                        lanes[i].pc += 1;
+                    }
+                }
+                if taken != 0 && taken != active.len() {
+                    self.stats.divergent_branches += 1;
+                }
+                return Ok(());
+            }
+            Op::Ret | Op::Exit => {
+                for &i in active {
+                    if exec.contains(&i) {
+                        lanes[i].done = true;
+                    } else {
+                        lanes[i].pc += 1;
+                    }
+                }
+                return Ok(());
+            }
+            Op::Shfl {
+                mode,
+                dst,
+                pred_out,
+                src,
+                b,
+                c,
+                mask,
+                ..
+            } => {
+                self.stats.shfls += 1;
+                let did = self.regs.intern(dst) as usize;
+                let pid = pred_out.as_ref().map(|p| self.regs.intern(p) as usize);
+                // gather source values first (exchange is simultaneous)
+                let mut srcv = [0u64; WARP];
+                for &i in exec {
+                    srcv[i] = self.read_operand(&mut lanes[i], src, 32, ctaid)?;
+                }
+                let exec_mask: u32 = exec.iter().fold(0, |m, &i| m | (1 << i));
+                for &i in exec {
+                    let bv = self.read_operand(&mut lanes[i], b, 32, ctaid)? as u32;
+                    let cv = self.read_operand(&mut lanes[i], c, 32, ctaid)? as u32;
+                    let mv = self.read_operand(&mut lanes[i], mask, 32, ctaid)? as u32;
+                    let lane = i as u32;
+                    let (j, in_range) = match mode {
+                        ShflMode::Up => {
+                            let j = lane.wrapping_sub(bv);
+                            (j, bv <= lane && j >= (cv >> 8 & 0x1f))
+                        }
+                        ShflMode::Down => {
+                            let j = lane + bv;
+                            (j, j <= (cv & 0x1f).max(cv & 0x1f))
+                        }
+                        ShflMode::Bfly => {
+                            let j = lane ^ bv;
+                            (j, j <= (cv & 0x1f))
+                        }
+                        ShflMode::Idx => {
+                            let j = bv & 0x1f;
+                            (j, j <= (cv & 0x1f))
+                        }
+                    };
+                    let valid = in_range
+                        && j < 32
+                        && (mv >> j) & 1 == 1
+                        && (exec_mask >> j) & 1 == 1;
+                    let val = if valid { srcv[j as usize] } else { srcv[i] };
+                    lanes[i].regs[did] = val & 0xFFFF_FFFF;
+                    lanes[i].written[did] = true;
+                    if let Some(p) = pid {
+                        lanes[i].regs[p] = valid as u64;
+                        lanes[i].written[p] = true;
+                    }
+                }
+            }
+            Op::Activemask { dst } => {
+                let did = self.regs.intern(dst) as usize;
+                for &i in exec {
+                    lanes[i].regs[did] = maskbits as u64;
+                    lanes[i].written[did] = true;
+                }
+            }
+            Op::BarSync { .. } => {} // warps serialized; see module docs
+            _ => {
+                for &i in exec {
+                    self.exec_lane(op, &mut lanes[i], ctaid)?;
+                }
+            }
+        }
+        for &i in active {
+            if !matches!(op, Op::Bra { .. } | Op::Ret | Op::Exit) {
+                lanes[i].pc += 1;
+            }
+        }
+        Ok(())
+    }
+
+    fn write(&mut self, lane: &mut Lane, r: &Reg, v: u64) {
+        let id = self.regs.intern(r) as usize;
+        lane.regs[id] = v;
+        lane.written[id] = true;
+    }
+
+    fn read_reg(&mut self, lane: &mut Lane, r: &Reg) -> u64 {
+        let id = self.regs.intern(r) as usize;
+        if !lane.written[id] {
+            self.stats.uninit_reads += 1;
+        }
+        lane.regs[id]
+    }
+
+    fn special_value(&self, sp: Special, lane: &Lane, ctaid: (u32, u32, u32)) -> u64 {
+        let b = self.cfg.block;
+        let g = self.cfg.grid;
+        (match sp {
+            Special::TidX => lane.tid.0,
+            Special::TidY => lane.tid.1,
+            Special::TidZ => lane.tid.2,
+            Special::NtidX => b.0,
+            Special::NtidY => b.1,
+            Special::NtidZ => b.2,
+            Special::CtaidX => ctaid.0,
+            Special::CtaidY => ctaid.1,
+            Special::CtaidZ => ctaid.2,
+            Special::NctaidX => g.0,
+            Special::NctaidY => g.1,
+            Special::NctaidZ => g.2,
+            Special::LaneId => (lane.tid.0
+                + lane.tid.1 * b.0
+                + lane.tid.2 * b.0 * b.1)
+                % 32,
+            Special::WarpSize => 32,
+        }) as u64
+    }
+
+    fn read_operand(
+        &mut self,
+        lane: &mut Lane,
+        o: &Operand,
+        width: u32,
+        ctaid: (u32, u32, u32),
+    ) -> Result<u64, SimError> {
+        let m = if width >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << width) - 1
+        };
+        Ok(match o {
+            Operand::Reg(r) => self.read_reg(lane, r) & m,
+            Operand::ImmInt(v) => (*v as u64) & m,
+            Operand::ImmF32(b) => *b as u64,
+            Operand::ImmF64(b) => *b,
+            Operand::Special(sp) => self.special_value(*sp, lane, ctaid) & m,
+            Operand::Var(v) => self
+                .shared_bases
+                .get(v.as_str())
+                .copied()
+                .ok_or_else(|| SimError::UnknownParam(v.clone()))?,
+        })
+    }
+
+    fn addr_value(
+        &mut self,
+        lane: &mut Lane,
+        addr: &Address,
+        ctaid: (u32, u32, u32),
+    ) -> Result<u64, SimError> {
+        let base = self.read_operand(lane, &addr.base, 64, ctaid)?;
+        Ok(base.wrapping_add(addr.offset as u64))
+    }
+
+    fn load_mem(&mut self, space: Space, addr: u64, bytes: u32) -> Result<u64, SimError> {
+        if space == Space::Shared || addr >= SHARED_BASE {
+            // `.shared` instructions may use window-relative addresses
+            let o = addr.checked_sub(SHARED_BASE).unwrap_or(addr) as usize;
+            let mut v = 0u64;
+            for k in 0..bytes as usize {
+                v |= (self.shared[o + k] as u64) << (8 * k);
+            }
+            Ok(v)
+        } else {
+            Ok(self.mem.load(addr, bytes)?)
+        }
+    }
+
+    fn store_mem(
+        &mut self,
+        space: Space,
+        addr: u64,
+        bytes: u32,
+        v: u64,
+    ) -> Result<(), SimError> {
+        if space == Space::Shared || addr >= SHARED_BASE {
+            // `.shared` instructions may use window-relative addresses
+            let o = addr.checked_sub(SHARED_BASE).unwrap_or(addr) as usize;
+            for k in 0..bytes as usize {
+                self.shared[o + k] = (v >> (8 * k)) as u8;
+            }
+            Ok(())
+        } else {
+            Ok(self.mem.store(addr, bytes, v)?)
+        }
+    }
+
+    fn exec_lane(
+        &mut self,
+        op: &Op,
+        lane: &mut Lane,
+        ctaid: (u32, u32, u32),
+    ) -> Result<(), SimError> {
+        match op {
+            Op::Ld {
+                space,
+                nc,
+                ty,
+                dst,
+                addr,
+            } => {
+                let v = if *space == Space::Param {
+                    let name = match &addr.base {
+                        Operand::Var(n) => n.as_str(),
+                        _ => "?",
+                    };
+                    let base = *self
+                        .params
+                        .get(name)
+                        .ok_or_else(|| SimError::UnknownParam(name.to_string()))?;
+                    // scalar param: the value itself (offset addressing into
+                    // multi-word params is not needed for our kernels)
+                    let _ = addr.offset;
+                    base & width_mask(ty.bits())
+                } else {
+                    let a = self.addr_value(lane, addr, ctaid)?;
+                    match space {
+                        Space::Global | Space::Const | Space::Local => {
+                            self.stats.global_loads += 1;
+                            if *nc {
+                                self.stats.nc_loads += 1;
+                            }
+                        }
+                        Space::Shared => self.stats.shared_loads += 1,
+                        Space::Param => unreachable!(),
+                    }
+                    self.load_mem(*space, a, ty.bytes() as u32)?
+                };
+                self.write(lane, dst, v);
+            }
+            Op::St { space, ty, addr, src } => {
+                let a = self.addr_value(lane, addr, ctaid)?;
+                let v = self.read_operand(lane, src, ty.bits().max(8), ctaid)?;
+                self.stats.stores += 1;
+                self.store_mem(*space, a, ty.bytes() as u32, v)?;
+            }
+            Op::Mov { ty, dst, src } => {
+                let v = self.read_operand(lane, src, ty.bits().max(8), ctaid)?;
+                self.write(lane, dst, v);
+            }
+            Op::Cvta { dst, src, .. } => {
+                let v = self.read_operand(lane, src, 64, ctaid)?;
+                self.write(lane, dst, v);
+            }
+            Op::IntBin { op: bop, ty, dst, a, b } => {
+                let w = ty.bits().max(1);
+                let signed = ty.is_signed();
+                let av = self.read_operand(lane, a, w, ctaid)?;
+                let bv = self.read_operand(lane, b, w, ctaid)?;
+                let v = match bop {
+                    IntBinOp::MulWide => {
+                        if signed {
+                            (to_signed(av, w) * to_signed(bv, w)) as u64
+                                & width_mask(w * 2)
+                        } else {
+                            (av as u128 * bv as u128) as u64 & width_mask(w * 2)
+                        }
+                    }
+                    IntBinOp::MulHi => {
+                        let full = if signed {
+                            (to_signed(av, w) * to_signed(bv, w)) as u64
+                        } else {
+                            ((av as u128 * bv as u128) >> w) as u64
+                        };
+                        if signed {
+                            ((full as u128) >> w) as u64 & width_mask(w)
+                        } else {
+                            full & width_mask(w)
+                        }
+                    }
+                    _ => {
+                        let bv2 = match bop {
+                            IntBinOp::Shl | IntBinOp::Shr => bv, // shift counts
+                            _ => bv,
+                        };
+                        eval_bin(int_bvop(*bop, signed), av, bv2, w)
+                    }
+                };
+                self.write(lane, dst, v);
+            }
+            Op::Mad { wide, ty, dst, a, b, c } => {
+                let w = ty.bits();
+                let signed = ty.is_signed();
+                let av = self.read_operand(lane, a, w, ctaid)?;
+                let bv = self.read_operand(lane, b, w, ctaid)?;
+                let v = if *wide {
+                    let cv = self.read_operand(lane, c, w * 2, ctaid)?;
+                    let prod = if signed {
+                        (to_signed(av, w) * to_signed(bv, w)) as u64
+                    } else {
+                        (av as u128 * bv as u128) as u64
+                    };
+                    prod.wrapping_add(cv) & width_mask(w * 2)
+                } else {
+                    let cv = self.read_operand(lane, c, w, ctaid)?;
+                    av.wrapping_mul(bv).wrapping_add(cv) & width_mask(w)
+                };
+                self.write(lane, dst, v);
+            }
+            Op::Not { ty, dst, a } => {
+                let w = ty.bits().max(1);
+                let av = self.read_operand(lane, a, w, ctaid)?;
+                self.write(lane, dst, !av & width_mask(w));
+            }
+            Op::Neg { ty, dst, a } => {
+                let w = ty.bits();
+                let av = self.read_operand(lane, a, w, ctaid)?;
+                self.write(lane, dst, av.wrapping_neg() & width_mask(w));
+            }
+            Op::FltBin { op: fop, ty, dst, a, b } => {
+                let w = ty.bits();
+                let av = self.read_operand(lane, a, w, ctaid)?;
+                let bv = self.read_operand(lane, b, w, ctaid)?;
+                let v = if *ty == Type::F32 {
+                    let (x, y) = (f32::from_bits(av as u32), f32::from_bits(bv as u32));
+                    f32_bin(*fop, x, y).to_bits() as u64
+                } else {
+                    let (x, y) = (f64::from_bits(av), f64::from_bits(bv));
+                    f64_bin(*fop, x, y).to_bits()
+                };
+                self.write(lane, dst, v);
+            }
+            Op::Fma { ty, dst, a, b, c } => {
+                let w = ty.bits();
+                let av = self.read_operand(lane, a, w, ctaid)?;
+                let bv = self.read_operand(lane, b, w, ctaid)?;
+                let cv = self.read_operand(lane, c, w, ctaid)?;
+                let v = if *ty == Type::F32 {
+                    f32::from_bits(av as u32)
+                        .mul_add(f32::from_bits(bv as u32), f32::from_bits(cv as u32))
+                        .to_bits() as u64
+                } else {
+                    f64::from_bits(av)
+                        .mul_add(f64::from_bits(bv), f64::from_bits(cv))
+                        .to_bits()
+                };
+                self.write(lane, dst, v);
+            }
+            Op::FltUn { op: fop, ty, dst, a } => {
+                let w = ty.bits();
+                let av = self.read_operand(lane, a, w, ctaid)?;
+                let v = if *ty == Type::F32 {
+                    f32_un(*fop, f32::from_bits(av as u32)).to_bits() as u64
+                } else {
+                    f64_un(*fop, f64::from_bits(av)).to_bits()
+                };
+                self.write(lane, dst, v);
+            }
+            Op::Setp { cmp, ty, dst, a, b } => {
+                let w = ty.bits();
+                let av = self.read_operand(lane, a, w, ctaid)?;
+                let bv = self.read_operand(lane, b, w, ctaid)?;
+                let r = if ty.is_float() {
+                    let (x, y) = if *ty == Type::F32 {
+                        (
+                            f32::from_bits(av as u32) as f64,
+                            f32::from_bits(bv as u32) as f64,
+                        )
+                    } else {
+                        (f64::from_bits(av), f64::from_bits(bv))
+                    };
+                    match cmp {
+                        CmpOp::Eq => x == y,
+                        CmpOp::Ne => x != y,
+                        CmpOp::Lt => x < y,
+                        CmpOp::Le => x <= y,
+                        CmpOp::Gt => x > y,
+                        CmpOp::Ge => x >= y,
+                    }
+                } else {
+                    let signed = !matches!(ty, Type::U8 | Type::U16 | Type::U32 | Type::U64);
+                    eval_cmp(cmp_kind(*cmp, signed), av, bv, w)
+                };
+                self.write(lane, dst, r as u64);
+            }
+            Op::Selp { ty, dst, a, b, p } => {
+                let w = ty.bits();
+                let av = self.read_operand(lane, a, w, ctaid)?;
+                let bv = self.read_operand(lane, b, w, ctaid)?;
+                let pv = self.read_operand(lane, p, 1, ctaid)?;
+                self.write(lane, dst, if pv & 1 == 1 { av } else { bv });
+            }
+            Op::Cvt { dty, sty, dst, src } => {
+                let sv = self.read_operand(lane, src, sty.bits(), ctaid)?;
+                let v = convert(sv, *sty, *dty);
+                self.write(lane, dst, v);
+            }
+            Op::Shfl { .. }
+            | Op::Activemask { .. }
+            | Op::BarSync { .. }
+            | Op::Bra { .. }
+            | Op::Ret
+            | Op::Exit => unreachable!("handled at warp level"),
+        }
+        Ok(())
+    }
+}
+
+fn width_mask(w: u32) -> u64 {
+    if w >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << w) - 1
+    }
+}
+
+fn linear_to_tid(t: u32, block: (u32, u32, u32)) -> (u32, u32, u32) {
+    let x = t % block.0;
+    let y = (t / block.0) % block.1;
+    let z = t / (block.0 * block.1);
+    (x, y, z)
+}
+
+fn int_bvop(op: IntBinOp, signed: bool) -> BvOp {
+    match op {
+        IntBinOp::Add => BvOp::Add,
+        IntBinOp::Sub => BvOp::Sub,
+        IntBinOp::MulLo => BvOp::Mul,
+        IntBinOp::Div => {
+            if signed {
+                BvOp::SDiv
+            } else {
+                BvOp::UDiv
+            }
+        }
+        IntBinOp::Rem => {
+            if signed {
+                BvOp::SRem
+            } else {
+                BvOp::URem
+            }
+        }
+        IntBinOp::Min => {
+            if signed {
+                BvOp::SMin
+            } else {
+                BvOp::UMin
+            }
+        }
+        IntBinOp::Max => {
+            if signed {
+                BvOp::SMax
+            } else {
+                BvOp::UMax
+            }
+        }
+        IntBinOp::And => BvOp::And,
+        IntBinOp::Or => BvOp::Or,
+        IntBinOp::Xor => BvOp::Xor,
+        IntBinOp::Shl => BvOp::Shl,
+        IntBinOp::Shr => {
+            if signed {
+                BvOp::AShr
+            } else {
+                BvOp::LShr
+            }
+        }
+        IntBinOp::MulWide | IntBinOp::MulHi => unreachable!(),
+    }
+}
+
+fn cmp_kind(c: CmpOp, signed: bool) -> CmpKind {
+    match (c, signed) {
+        (CmpOp::Eq, _) => CmpKind::Eq,
+        (CmpOp::Ne, _) => CmpKind::Ne,
+        (CmpOp::Lt, true) => CmpKind::Slt,
+        (CmpOp::Le, true) => CmpKind::Sle,
+        (CmpOp::Gt, true) => CmpKind::Sgt,
+        (CmpOp::Ge, true) => CmpKind::Sge,
+        (CmpOp::Lt, false) => CmpKind::Ult,
+        (CmpOp::Le, false) => CmpKind::Ule,
+        (CmpOp::Gt, false) => CmpKind::Ugt,
+        (CmpOp::Ge, false) => CmpKind::Uge,
+    }
+}
+
+fn f32_bin(op: FltBinOp, x: f32, y: f32) -> f32 {
+    match op {
+        FltBinOp::Add => x + y,
+        FltBinOp::Sub => x - y,
+        FltBinOp::Mul => x * y,
+        FltBinOp::Div => x / y,
+        FltBinOp::Min => x.min(y),
+        FltBinOp::Max => x.max(y),
+    }
+}
+
+fn f64_bin(op: FltBinOp, x: f64, y: f64) -> f64 {
+    match op {
+        FltBinOp::Add => x + y,
+        FltBinOp::Sub => x - y,
+        FltBinOp::Mul => x * y,
+        FltBinOp::Div => x / y,
+        FltBinOp::Min => x.min(y),
+        FltBinOp::Max => x.max(y),
+    }
+}
+
+fn f32_un(op: FltUnOp, x: f32) -> f32 {
+    match op {
+        FltUnOp::Neg => -x,
+        FltUnOp::Abs => x.abs(),
+        FltUnOp::Sqrt => x.sqrt(),
+        FltUnOp::Rsqrt => 1.0 / x.sqrt(),
+        FltUnOp::Rcp => 1.0 / x,
+        FltUnOp::Sin => x.sin(),
+        FltUnOp::Cos => x.cos(),
+        FltUnOp::Ex2 => x.exp2(),
+        FltUnOp::Lg2 => x.log2(),
+    }
+}
+
+fn f64_un(op: FltUnOp, x: f64) -> f64 {
+    match op {
+        FltUnOp::Neg => -x,
+        FltUnOp::Abs => x.abs(),
+        FltUnOp::Sqrt => x.sqrt(),
+        FltUnOp::Rsqrt => 1.0 / x.sqrt(),
+        FltUnOp::Rcp => 1.0 / x,
+        FltUnOp::Sin => x.sin(),
+        FltUnOp::Cos => x.cos(),
+        FltUnOp::Ex2 => x.exp2(),
+        FltUnOp::Lg2 => x.log2(),
+    }
+}
+
+fn convert(v: u64, sty: Type, dty: Type) -> u64 {
+    use Type::*;
+    let as_f64 = |v: u64, t: Type| -> f64 {
+        match t {
+            F32 => f32::from_bits(v as u32) as f64,
+            F64 => f64::from_bits(v),
+            _ => {
+                if t.is_signed() {
+                    to_signed(v, t.bits()) as f64
+                } else {
+                    (v & width_mask(t.bits())) as f64
+                }
+            }
+        }
+    };
+    match (sty.is_float(), dty.is_float()) {
+        (false, false) => {
+            // int → int: sign- or zero-extend / truncate
+            let x = if sty.is_signed() {
+                to_signed(v, sty.bits()) as u64
+            } else {
+                v & width_mask(sty.bits())
+            };
+            x & width_mask(dty.bits())
+        }
+        (_, true) => {
+            let f = as_f64(v, sty);
+            if dty == F32 {
+                (f as f32).to_bits() as u64
+            } else {
+                f.to_bits()
+            }
+        }
+        (true, false) => {
+            let f = as_f64(v, sty);
+            // cvt.rzi semantics: round toward zero, saturate
+            let x = f.trunc();
+            if dty.is_signed() {
+                (x as i64 as u64) & width_mask(dty.bits())
+            } else {
+                (x as u64) & width_mask(dty.bits())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptx::parser::parse_kernel;
+    use crate::sim::memory::{Allocator, GlobalMem};
+
+    /// c[i] = a[i] + b[i] over one block of 64 threads.
+    #[test]
+    fn vecadd_runs() {
+        let k = parse_kernel(
+            r#"
+.visible .entry vadd(.param .u64 c, .param .u64 a, .param .u64 b){
+.reg .b32 %r<6>; .reg .b64 %rd<10>; .reg .f32 %f<4>;
+ld.param.u64 %rd1, [c];
+ld.param.u64 %rd2, [a];
+ld.param.u64 %rd3, [b];
+cvta.to.global.u64 %rd4, %rd2;
+cvta.to.global.u64 %rd5, %rd3;
+cvta.to.global.u64 %rd6, %rd1;
+mov.u32 %r2, %ntid.x;
+mov.u32 %r3, %ctaid.x;
+mov.u32 %r4, %tid.x;
+mad.lo.s32 %r1, %r3, %r2, %r4;
+mul.wide.s32 %rd7, %r1, 4;
+add.s64 %rd8, %rd4, %rd7;
+add.s64 %rd9, %rd5, %rd7;
+ld.global.nc.f32 %f1, [%rd8];
+ld.global.nc.f32 %f2, [%rd9];
+add.f32 %f3, %f1, %f2;
+add.s64 %rd8, %rd6, %rd7;
+st.global.f32 [%rd8], %f3;
+ret;
+}
+"#,
+        )
+        .unwrap();
+        let n = 64usize;
+        let mut mem = GlobalMem::new(1 << 16);
+        let mut alloc = Allocator::new(&mem);
+        let (c, a, b) = (
+            alloc.alloc(4 * n as u64),
+            alloc.alloc(4 * n as u64),
+            alloc.alloc(4 * n as u64),
+        );
+        let av: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let bv: Vec<f32> = (0..n).map(|i| 2.0 * i as f32).collect();
+        mem.write_f32s(a, &av).unwrap();
+        mem.write_f32s(b, &bv).unwrap();
+        let cfg = SimConfig::new(2, 32, vec![c, a, b]);
+        let r = run(&k, &cfg, mem).unwrap();
+        let cv = r.mem.read_f32s(c, n).unwrap();
+        for i in 0..n {
+            assert_eq!(cv[i], 3.0 * i as f32);
+        }
+        assert_eq!(r.stats.stores, 64);
+        assert_eq!(r.stats.uninit_reads, 0);
+    }
+
+    /// Guarded early-exit: threads ≥ n skip the store (fractional warp).
+    #[test]
+    fn guard_divergence_and_fractional_warp() {
+        let k = parse_kernel(
+            r#"
+.visible .entry g(.param .u64 out, .param .u32 n){
+.reg .b32 %r<6>; .reg .b64 %rd<6>; .reg .pred %p<2>;
+ld.param.u64 %rd1, [out];
+ld.param.u32 %r5, [n];
+cvta.to.global.u64 %rd2, %rd1;
+mov.u32 %r4, %tid.x;
+setp.ge.s32 %p1, %r4, %r5;
+@%p1 bra $EXIT;
+mul.wide.s32 %rd3, %r4, 4;
+add.s64 %rd4, %rd2, %rd3;
+st.global.b32 [%rd4], %r4;
+$EXIT: ret;
+}
+"#,
+        )
+        .unwrap();
+        let mut mem = GlobalMem::new(1 << 12);
+        let mut alloc = Allocator::new(&mem);
+        let out = alloc.alloc(4 * 48);
+        mem.write_u32s(out, &vec![7777; 48]).unwrap();
+        // block of 40 threads (fractional second warp), n = 20
+        let mut cfg = SimConfig::new(1, 40, vec![out, 20]);
+        cfg.record_trace = true;
+        let r = run(&k, &cfg, mem).unwrap();
+        let vals = r.mem.read_u32s(out, 48).unwrap();
+        for (i, v) in vals.iter().enumerate() {
+            if i < 20 {
+                assert_eq!(*v, i as u32);
+            } else {
+                assert_eq!(*v, 7777, "thread {i} must not store");
+            }
+        }
+        assert!(r.stats.divergent_branches >= 1);
+        assert!(!r.trace.is_empty());
+    }
+
+    /// shfl.sync.up/down semantics incl. out-of-range lanes and pred out.
+    #[test]
+    fn shfl_semantics() {
+        let k = parse_kernel(
+            r#"
+.visible .entry s(.param .u64 up, .param .u64 dn, .param .u64 pu){
+.reg .b32 %r<8>; .reg .b64 %rd<8>; .reg .pred %p<2>;
+ld.param.u64 %rd1, [up];
+ld.param.u64 %rd2, [dn];
+ld.param.u64 %rd3, [pu];
+cvta.to.global.u64 %rd1, %rd1;
+cvta.to.global.u64 %rd2, %rd2;
+cvta.to.global.u64 %rd3, %rd3;
+mov.u32 %r1, %tid.x;
+activemask.b32 %r2;
+shfl.sync.up.b32 %r3|%p1, %r1, 2, 0, %r2;
+shfl.sync.down.b32 %r4, %r1, 3, 31, %r2;
+mul.wide.s32 %rd4, %r1, 4;
+add.s64 %rd5, %rd1, %rd4;
+st.global.b32 [%rd5], %r3;
+add.s64 %rd6, %rd2, %rd4;
+st.global.b32 [%rd6], %r4;
+selp.b32 %r5, 1, 0, %p1;
+add.s64 %rd7, %rd3, %rd4;
+st.global.b32 [%rd7], %r5;
+ret;
+}
+"#,
+        )
+        .unwrap();
+        let mut mem = GlobalMem::new(1 << 12);
+        let mut alloc = Allocator::new(&mem);
+        let (up, dn, pu) = (alloc.alloc(128), alloc.alloc(128), alloc.alloc(128));
+        let cfg = SimConfig::new(1, 32, vec![up, dn, pu]);
+        let r = run(&k, &cfg, mem).unwrap();
+        let upv = r.mem.read_u32s(up, 32).unwrap();
+        let dnv = r.mem.read_u32s(dn, 32).unwrap();
+        let puv = r.mem.read_u32s(pu, 32).unwrap();
+        for i in 0..32u32 {
+            // up by 2: lane i gets lane i-2's tid; lanes 0,1 keep own value
+            let expect_up = if i >= 2 { i - 2 } else { i };
+            assert_eq!(upv[i as usize], expect_up, "up lane {i}");
+            assert_eq!(puv[i as usize], (i >= 2) as u32, "pred lane {i}");
+            // down by 3: lane i gets lane i+3's tid; lanes 29..31 keep own
+            let expect_dn = if i + 3 <= 31 { i + 3 } else { i };
+            assert_eq!(dnv[i as usize], expect_dn, "down lane {i}");
+        }
+        assert_eq!(r.stats.shfls, 2);
+    }
+
+    /// A loop with a trip count from a parameter.
+    #[test]
+    fn loop_sums() {
+        let k = parse_kernel(
+            r#"
+.visible .entry l(.param .u64 out, .param .u64 a, .param .u32 n){
+.reg .b32 %r<8>; .reg .b64 %rd<8>; .reg .f32 %f<4>; .reg .pred %p<2>;
+ld.param.u64 %rd1, [out];
+ld.param.u64 %rd2, [a];
+ld.param.u32 %r5, [n];
+cvta.to.global.u64 %rd3, %rd2;
+cvta.to.global.u64 %rd4, %rd1;
+mov.u32 %r1, 0;
+mov.f32 %f1, 0f00000000;
+mov.b64 %rd5, %rd3;
+$LOOP:
+ld.global.f32 %f2, [%rd5];
+add.f32 %f1, %f1, %f2;
+add.s64 %rd5, %rd5, 4;
+add.s32 %r1, %r1, 1;
+setp.lt.s32 %p1, %r1, %r5;
+@%p1 bra $LOOP;
+mov.u32 %r4, %tid.x;
+mul.wide.s32 %rd6, %r4, 4;
+add.s64 %rd7, %rd4, %rd6;
+st.global.f32 [%rd7], %f1;
+ret;
+}
+"#,
+        )
+        .unwrap();
+        let mut mem = GlobalMem::new(1 << 12);
+        let mut alloc = Allocator::new(&mem);
+        let (out, a) = (alloc.alloc(4), alloc.alloc(64));
+        mem.write_f32s(a, &[1.0, 2.0, 3.0, 4.0, 5.0, 0.0, 0.0, 0.0])
+            .unwrap();
+        let cfg = SimConfig::new(1, 1, vec![out, a, 5]);
+        let r = run(&k, &cfg, mem).unwrap();
+        assert_eq!(r.mem.read_f32s(out, 1).unwrap()[0], 15.0);
+    }
+
+    #[test]
+    fn cvt_f32_s32_roundtrip() {
+        assert_eq!(
+            convert((-7i64) as u64 & 0xFFFF_FFFF, Type::S32, Type::F32),
+            (-7.0f32).to_bits() as u64
+        );
+        assert_eq!(
+            convert((-7.9f32).to_bits() as u64, Type::F32, Type::S32),
+            (-7i64 as u64) & 0xFFFF_FFFF
+        );
+        assert_eq!(convert(300, Type::U32, Type::U8), 300 & 0xFF);
+    }
+}

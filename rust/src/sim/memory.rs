@@ -1,0 +1,177 @@
+//! Byte-addressable memory for the warp simulator.
+//!
+//! Device pointers are plain offsets into one flat global buffer (offset 0
+//! is kept unmapped to catch null derefs). Shared memory lives per block in
+//! a separate window at `SHARED_BASE`.
+
+/// Base virtual address of the per-block shared-memory window.
+pub const SHARED_BASE: u64 = 1 << 47;
+/// First valid global address (null guard page).
+pub const GLOBAL_BASE: u64 = 0x1000;
+
+#[derive(Debug, thiserror::Error)]
+pub enum MemError {
+    #[error("out-of-bounds {kind} of {bytes} bytes at {addr:#x} (global size {size:#x})")]
+    OutOfBounds {
+        kind: &'static str,
+        addr: u64,
+        bytes: u64,
+        size: u64,
+    },
+}
+
+/// Flat global memory.
+#[derive(Debug, Clone)]
+pub struct GlobalMem {
+    bytes: Vec<u8>,
+}
+
+impl GlobalMem {
+    /// Allocate `size` data bytes (addresses `GLOBAL_BASE..GLOBAL_BASE+size`).
+    pub fn new(size: usize) -> GlobalMem {
+        GlobalMem {
+            bytes: vec![0; size],
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.bytes.len()
+    }
+
+    fn offset(&self, addr: u64, n: u64, kind: &'static str) -> Result<usize, MemError> {
+        let end = addr.wrapping_add(n);
+        if addr < GLOBAL_BASE || end > GLOBAL_BASE + self.bytes.len() as u64 || end < addr {
+            return Err(MemError::OutOfBounds {
+                kind,
+                addr,
+                bytes: n,
+                size: self.bytes.len() as u64,
+            });
+        }
+        Ok((addr - GLOBAL_BASE) as usize)
+    }
+
+    pub fn load(&self, addr: u64, bytes: u32) -> Result<u64, MemError> {
+        let o = self.offset(addr, bytes as u64, "load")?;
+        let mut v: u64 = 0;
+        for i in 0..bytes as usize {
+            v |= (self.bytes[o + i] as u64) << (8 * i);
+        }
+        Ok(v)
+    }
+
+    pub fn store(&mut self, addr: u64, bytes: u32, val: u64) -> Result<(), MemError> {
+        let o = self.offset(addr, bytes as u64, "store")?;
+        for i in 0..bytes as usize {
+            self.bytes[o + i] = (val >> (8 * i)) as u8;
+        }
+        Ok(())
+    }
+
+    /// Write an `f32` slice starting at a device pointer.
+    pub fn write_f32s(&mut self, addr: u64, xs: &[f32]) -> Result<(), MemError> {
+        for (i, &x) in xs.iter().enumerate() {
+            self.store(addr + 4 * i as u64, 4, x.to_bits() as u64)?;
+        }
+        Ok(())
+    }
+
+    pub fn read_f32s(&self, addr: u64, n: usize) -> Result<Vec<f32>, MemError> {
+        (0..n)
+            .map(|i| Ok(f32::from_bits(self.load(addr + 4 * i as u64, 4)? as u32)))
+            .collect()
+    }
+
+    pub fn write_u32s(&mut self, addr: u64, xs: &[u32]) -> Result<(), MemError> {
+        for (i, &x) in xs.iter().enumerate() {
+            self.store(addr + 4 * i as u64, 4, x as u64)?;
+        }
+        Ok(())
+    }
+
+    pub fn read_u32s(&self, addr: u64, n: usize) -> Result<Vec<u32>, MemError> {
+        (0..n)
+            .map(|i| Ok(self.load(addr + 4 * i as u64, 4)? as u32))
+            .collect()
+    }
+}
+
+/// A simple bump allocator for laying out arrays in global memory.
+#[derive(Debug)]
+pub struct Allocator {
+    next: u64,
+    limit: u64,
+}
+
+impl Allocator {
+    pub fn new(mem: &GlobalMem) -> Allocator {
+        Allocator {
+            next: GLOBAL_BASE,
+            limit: GLOBAL_BASE + mem.size() as u64,
+        }
+    }
+
+    /// Allocate `bytes` with 256-byte alignment (GPU-like); returns the
+    /// device pointer.
+    pub fn alloc(&mut self, bytes: u64) -> u64 {
+        let p = (self.next + 255) & !255;
+        assert!(
+            p + bytes <= self.limit,
+            "simulator global memory exhausted ({} requested, {} available)",
+            bytes,
+            self.limit - p
+        );
+        self.next = p + bytes;
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_various_widths() {
+        let mut m = GlobalMem::new(64);
+        m.store(GLOBAL_BASE, 4, 0xDEADBEEF).unwrap();
+        assert_eq!(m.load(GLOBAL_BASE, 4).unwrap(), 0xDEADBEEF);
+        m.store(GLOBAL_BASE + 8, 8, u64::MAX - 5).unwrap();
+        assert_eq!(m.load(GLOBAL_BASE + 8, 8).unwrap(), u64::MAX - 5);
+        m.store(GLOBAL_BASE + 16, 1, 0x7F).unwrap();
+        assert_eq!(m.load(GLOBAL_BASE + 16, 1).unwrap(), 0x7F);
+    }
+
+    #[test]
+    fn bounds_checked() {
+        let m = GlobalMem::new(16);
+        assert!(m.load(0, 4).is_err()); // null page
+        assert!(m.load(GLOBAL_BASE + 13, 4).is_err()); // crosses the end
+        assert!(m.load(GLOBAL_BASE + 12, 4).is_ok());
+    }
+
+    #[test]
+    fn f32_helpers() {
+        let mut m = GlobalMem::new(64);
+        m.write_f32s(GLOBAL_BASE, &[1.5, -2.25, 0.0]).unwrap();
+        assert_eq!(m.read_f32s(GLOBAL_BASE, 3).unwrap(), vec![1.5, -2.25, 0.0]);
+    }
+
+    #[test]
+    fn allocator_aligns() {
+        let m = GlobalMem::new(4096);
+        let mut a = Allocator::new(&m);
+        let p1 = a.alloc(10);
+        let p2 = a.alloc(10);
+        assert_eq!(p1 % 256, 0);
+        assert_eq!(p2 % 256, 0);
+        assert!(p2 >= p1 + 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "exhausted")]
+    fn allocator_panics_when_full() {
+        let m = GlobalMem::new(128);
+        let mut a = Allocator::new(&m);
+        a.alloc(4096);
+    }
+}

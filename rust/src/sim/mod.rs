@@ -1,0 +1,7 @@
+//! Concrete warp-level GPU simulator (the testbed's "GPU").
+
+pub mod machine;
+pub mod memory;
+
+pub use machine::{run, SimConfig, SimError, SimResult, SimStats, WarpEvent};
+pub use memory::{Allocator, GlobalMem, MemError, GLOBAL_BASE, SHARED_BASE};

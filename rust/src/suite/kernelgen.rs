@@ -1,0 +1,667 @@
+//! The KernelGen benchmark suite (Table 2), reconstructed from the
+//! published stencil footprints.
+//!
+//! Each benchmark's tap set is chosen to reproduce the paper's Table 2 row
+//! exactly: number of global loads, number of synthesized shuffles, and
+//! average shuffle delta (see DESIGN.md). `workload` builds a simulator
+//! launch plus deterministic input data, and `reference` computes the
+//! expected output on the CPU with the same fma ordering, so validation is
+//! bit-exact.
+
+use super::codegen::{generate, param_names};
+use super::spec::{irow, Benchmark, Lang, Pattern, Tap, TapFunc};
+use crate::ptx::ast::Kernel;
+use crate::sim::{Allocator, GlobalMem, SimConfig};
+use crate::util::Rng;
+
+/// All 16 benchmarks in Table 2 order.
+pub fn suite() -> Vec<Benchmark> {
+    vec![
+        divergence(),
+        gameoflife(),
+        gaussblur(),
+        gradient(),
+        jacobi(),
+        lapgsrb(),
+        laplacian(),
+        matmul(),
+        matvec(),
+        sincos(),
+        tricubic(),
+        tricubic2(),
+        uxx1(),
+        vecadd(),
+        wave13pt(),
+        whispering(),
+    ]
+}
+
+pub fn by_name(name: &str) -> Option<Benchmark> {
+    suite().into_iter().find(|b| b.name == name)
+}
+
+fn divergence() -> Benchmark {
+    // flag guard load + {i±1}, {j±1} of a, center of b: 6 loads, 1 shuffle (N=2)
+    let taps = vec![
+        Tap::new(0, -1, 0, 0, 0.25),
+        Tap::new(0, 1, 0, 0, 0.25),
+        Tap::new(0, 0, -1, 0, 0.25),
+        Tap::new(0, 0, 1, 0, 0.25),
+        Tap::new(1, 0, 0, 0, 1.0),
+    ];
+    Benchmark {
+        name: "divergence",
+        lang: Lang::C,
+        dims: 3,
+        pattern: Pattern::Stencil { taps },
+        divergent: true,
+        expect_shuffles: 1,
+        expect_loads: 6,
+        expect_delta: Some(2.0),
+    }
+}
+
+fn gameoflife() -> Benchmark {
+    let mut taps = Vec::new();
+    for dj in -1..=1 {
+        taps.extend(irow(0, -1, 1, dj, 0, if dj == 0 { 0.5 } else { 0.125 }));
+    }
+    Benchmark {
+        name: "gameoflife",
+        lang: Lang::C,
+        dims: 2,
+        pattern: Pattern::Stencil { taps },
+        divergent: false,
+        expect_shuffles: 6,
+        expect_loads: 9,
+        expect_delta: Some(1.5),
+    }
+}
+
+fn gaussblur() -> Benchmark {
+    let w = [0.054, 0.244, 0.403, 0.244, 0.054f32];
+    let mut taps = Vec::new();
+    for (jw, dj) in (-2..=2).enumerate().map(|(n, d)| (w[n], d)) {
+        for (iw, di) in (-2..=2).enumerate().map(|(n, d)| (w[n], d)) {
+            taps.push(Tap::new(0, di, dj, 0, iw * jw));
+        }
+    }
+    Benchmark {
+        name: "gaussblur",
+        lang: Lang::C,
+        dims: 2,
+        pattern: Pattern::Stencil { taps },
+        divergent: false,
+        expect_shuffles: 20,
+        expect_loads: 25,
+        expect_delta: Some(2.5),
+    }
+}
+
+fn gradient() -> Benchmark {
+    let taps = vec![
+        Tap::new(0, -1, 0, 0, -0.5),
+        Tap::new(0, 1, 0, 0, 0.5),
+        Tap::new(0, 0, -1, 0, -0.5),
+        Tap::new(0, 0, 1, 0, 0.5),
+        Tap::new(0, 0, 0, -1, -0.5),
+        Tap::new(0, 0, 0, 1, 0.5),
+    ];
+    Benchmark {
+        name: "gradient",
+        lang: Lang::C,
+        dims: 3,
+        pattern: Pattern::Stencil { taps },
+        divergent: false,
+        expect_shuffles: 1,
+        expect_loads: 6,
+        expect_delta: Some(2.0),
+    }
+}
+
+fn jacobi() -> Benchmark {
+    // Listing 4: c0*center + c1*(edge neighbors) + c2*(corner neighbors)
+    let (c0, c1, c2) = (0.5f32, 0.1f32, 0.025f32);
+    let mut taps = Vec::new();
+    for dj in -1..=1i64 {
+        for di in -1..=1i64 {
+            let c = match di.abs() + dj.abs() {
+                0 => c0,
+                1 => c1,
+                _ => c2,
+            };
+            taps.push(Tap::new(0, di, dj, 0, c));
+        }
+    }
+    Benchmark {
+        name: "jacobi",
+        lang: Lang::Fortran,
+        dims: 2,
+        pattern: Pattern::Stencil { taps },
+        divergent: false,
+        expect_shuffles: 6,
+        expect_loads: 9,
+        expect_delta: Some(1.5),
+    }
+}
+
+fn lapgsrb() -> Benchmark {
+    // 5-wide leading row + four 3-wide rows + 8 single taps:
+    // 25 loads, 12 shuffles, avg delta (10 + 4*3)/12 = 1.83
+    let mut taps = Vec::new();
+    taps.extend(irow(0, -2, 2, 0, 0, 0.05));
+    for (dj, dk) in [(-1, 0), (1, 0), (0, -1), (0, 1)] {
+        taps.extend(irow(0, -1, 1, dj, dk, 0.03));
+    }
+    for (dj, dk) in [
+        (2, 0),
+        (-2, 0),
+        (0, 2),
+        (0, -2),
+        (1, 1),
+        (-1, 1),
+        (1, -1),
+        (-1, -1),
+    ] {
+        taps.push(Tap::new(0, 0, dj, dk, 0.01));
+    }
+    Benchmark {
+        name: "lapgsrb",
+        lang: Lang::C,
+        dims: 3,
+        pattern: Pattern::Stencil { taps },
+        divergent: false,
+        expect_shuffles: 12,
+        expect_loads: 25,
+        expect_delta: Some(22.0 / 12.0),
+    }
+}
+
+fn laplacian() -> Benchmark {
+    let taps = vec![
+        Tap::new(0, -1, 0, 0, 1.0),
+        Tap::new(0, 0, 0, 0, -6.0),
+        Tap::new(0, 1, 0, 0, 1.0),
+        Tap::new(0, 0, -1, 0, 1.0),
+        Tap::new(0, 0, 1, 0, 1.0),
+        Tap::new(0, 0, 0, -1, 1.0),
+        Tap::new(0, 0, 0, 1, 1.0),
+    ];
+    Benchmark {
+        name: "laplacian",
+        lang: Lang::C,
+        dims: 3,
+        pattern: Pattern::Stencil { taps },
+        divergent: false,
+        expect_shuffles: 2,
+        expect_loads: 7,
+        expect_delta: Some(1.5),
+    }
+}
+
+fn matmul() -> Benchmark {
+    Benchmark {
+        name: "matmul",
+        lang: Lang::Fortran,
+        dims: 2,
+        pattern: Pattern::MatMul { unroll: 4 },
+        divergent: false,
+        expect_shuffles: 0,
+        expect_loads: 8,
+        expect_delta: None,
+    }
+}
+
+fn matvec() -> Benchmark {
+    Benchmark {
+        name: "matvec",
+        lang: Lang::C,
+        dims: 2,
+        pattern: Pattern::MatVec { unroll: 3 },
+        divergent: false,
+        expect_shuffles: 0,
+        expect_loads: 7,
+        expect_delta: None,
+    }
+}
+
+fn sincos() -> Benchmark {
+    Benchmark {
+        name: "sincos",
+        lang: Lang::Fortran,
+        dims: 3,
+        pattern: Pattern::SinCos,
+        divergent: false,
+        expect_shuffles: 0,
+        expect_loads: 2,
+        expect_delta: None,
+    }
+}
+
+fn tricubic_taps(coef: f32) -> Vec<Tap> {
+    // 4x4x4 interpolation neighborhood + 3 coordinate loads
+    let mut taps = Vec::new();
+    for dk in -1..=2 {
+        for dj in -1..=2 {
+            taps.extend(irow(0, -1, 2, dj, dk, coef));
+        }
+    }
+    taps.push(Tap::new(1, 0, 0, 0, 1.0));
+    taps.push(Tap::new(2, 0, 0, 0, 1.0));
+    taps.push(Tap::new(3, 0, 0, 0, 1.0));
+    taps
+}
+
+fn tricubic() -> Benchmark {
+    Benchmark {
+        name: "tricubic",
+        lang: Lang::C,
+        dims: 3,
+        pattern: Pattern::Stencil {
+            taps: tricubic_taps(1.0 / 64.0),
+        },
+        divergent: false,
+        expect_shuffles: 48,
+        expect_loads: 67,
+        expect_delta: Some(2.0),
+    }
+}
+
+fn tricubic2() -> Benchmark {
+    Benchmark {
+        name: "tricubic2",
+        lang: Lang::C,
+        dims: 3,
+        pattern: Pattern::Stencil {
+            taps: tricubic_taps(1.0 / 32.0),
+        },
+        divergent: false,
+        expect_shuffles: 48,
+        expect_loads: 67,
+        expect_delta: Some(2.0),
+    }
+}
+
+fn uxx1() -> Benchmark {
+    // three {i-1, i+1} pairs on different arrays + 11 single taps
+    let mut taps = Vec::new();
+    for a in 0..3 {
+        taps.push(Tap::new(a, -1, 0, 0, 0.5));
+        taps.push(Tap::new(a, 1, 0, 0, 0.5));
+    }
+    for (a, dj, dk) in [
+        (0, 1, 0),
+        (0, -1, 0),
+        (0, 0, 1),
+        (0, 0, -1),
+        (1, 1, 0),
+        (1, -1, 0),
+        (2, 0, 1),
+        (2, 0, -1),
+        (3, 0, 0),
+        (3, 1, 0),
+        (3, 0, 1),
+    ] {
+        taps.push(Tap::new(a, 0, dj, dk, 0.1));
+    }
+    Benchmark {
+        name: "uxx1",
+        lang: Lang::C,
+        dims: 3,
+        pattern: Pattern::Stencil { taps },
+        divergent: false,
+        expect_shuffles: 3,
+        expect_loads: 17,
+        expect_delta: Some(2.0),
+    }
+}
+
+fn vecadd() -> Benchmark {
+    Benchmark {
+        name: "vecadd",
+        lang: Lang::C,
+        dims: 3,
+        pattern: Pattern::VecAdd,
+        divergent: false,
+        expect_shuffles: 0,
+        expect_loads: 2,
+        expect_delta: None,
+    }
+}
+
+fn wave13pt() -> Benchmark {
+    let mut taps = Vec::new();
+    taps.extend(irow(0, -2, 2, 0, 0, 0.1));
+    for dj in [-2i64, -1, 1, 2] {
+        taps.push(Tap::new(0, 0, dj, 0, 0.05));
+    }
+    for dk in [-2i64, -1, 1, 2] {
+        taps.push(Tap::new(0, 0, 0, dk, 0.05));
+    }
+    taps.push(Tap::new(1, 0, 0, 0, -1.0)); // previous time step
+    Benchmark {
+        name: "wave13pt",
+        lang: Lang::C,
+        dims: 3,
+        pattern: Pattern::Stencil { taps },
+        divergent: false,
+        expect_shuffles: 4,
+        expect_loads: 14,
+        expect_delta: Some(2.5),
+    }
+}
+
+fn whispering() -> Benchmark {
+    // deltas {1,2,2,0,0,0} → avg 0.83; 19 loads over 5 arrays
+    let mut taps = Vec::new();
+    taps.extend(irow(0, -1, 1, 0, 0, 0.2)); // 2 shuffles (1,2)
+    taps.push(Tap::new(1, -1, 0, 0, 0.3)); // pair → 1 shuffle (2)
+    taps.push(Tap::new(1, 1, 0, 0, 0.3));
+    for a in 2..5 {
+        // duplicated load → N=0 shuffle each
+        taps.push(Tap::new(a, 0, 0, 0, 0.1));
+        taps.push(Tap::new(a, 0, 0, 0, 0.1));
+    }
+    for (a, dj) in [(0, -1), (0, 1), (1, -1), (1, 1), (2, -1), (2, 1), (3, -1), (4, 1)] {
+        taps.push(Tap::new(a, 0, dj, 0, 0.05));
+    }
+    Benchmark {
+        name: "whispering",
+        lang: Lang::C,
+        dims: 2,
+        pattern: Pattern::Stencil { taps },
+        divergent: false,
+        expect_shuffles: 6,
+        expect_loads: 19,
+        expect_delta: Some(5.0 / 6.0),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Workload construction + CPU reference
+// ---------------------------------------------------------------------------
+
+/// A ready-to-run simulator workload.
+pub struct Workload {
+    pub kernel: Kernel,
+    pub cfg: SimConfig,
+    pub mem: GlobalMem,
+    pub out_ptr: u64,
+    pub out_len: usize,
+    /// Expected output, computed on the CPU with matching fma order.
+    pub expected: Vec<f32>,
+}
+
+/// Deterministic input array.
+fn input_data(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.f32() * 4.0 - 2.0).collect()
+}
+
+/// Build a simulator workload (+ bit-exact CPU reference) for a benchmark.
+pub fn workload(b: &Benchmark, nx: usize, ny: usize, nz: usize, seed: u64) -> Workload {
+    let kernel = generate(b);
+    let mut rng = Rng::new(seed ^ 0xBEEF);
+    let n = nx * ny * nz;
+
+    let mem_size = (n * 4 * 8 + (1 << 16)).next_power_of_two();
+    let mut mem = GlobalMem::new(mem_size);
+    let mut alloc = Allocator::new(&mem);
+
+    match &b.pattern {
+        Pattern::Stencil { taps } => {
+            stencil_workload(b, kernel, taps.clone(), nx, ny, nz, &mut rng, mem, alloc)
+        }
+        Pattern::SinCos => {
+            let taps = vec![
+                Tap::new(0, 0, 0, 0, 1.0).with_func(TapFunc::Sin),
+                Tap::new(1, 0, 0, 0, 1.0).with_func(TapFunc::Cos),
+            ];
+            stencil_workload(b, kernel, taps, nx, ny, nz, &mut rng, mem, alloc)
+        }
+        Pattern::VecAdd => {
+            let taps = vec![Tap::new(0, 0, 0, 0, 1.0), Tap::new(1, 0, 0, 0, 1.0)];
+            stencil_workload(b, kernel, taps, nx, ny, nz, &mut rng, mem, alloc)
+        }
+        Pattern::MatMul { unroll } => {
+            // C[ny×nx] = A[ny×nk] · B[nk×nx], nk = nz rounded to the unroll
+            let nk = nz.div_ceil(*unroll as usize) * *unroll as usize;
+            let c = alloc.alloc((nx * ny * 4) as u64);
+            let a = alloc.alloc((ny * nk * 4) as u64);
+            let bb = alloc.alloc((nk * nx * 4) as u64);
+            let av = input_data(&mut rng, ny * nk);
+            let bv = input_data(&mut rng, nk * nx);
+            mem.write_f32s(a, &av).unwrap();
+            mem.write_f32s(bb, &bv).unwrap();
+            let block = 32u32;
+            let mut cfg = SimConfig::new(ny as u32, block, vec![
+                c,
+                a,
+                bb,
+                nx as u64,
+                ny as u64,
+                nk as u64,
+            ]);
+            cfg.grid = (ny as u32, (nx as u32).div_ceil(block), 1);
+            let mut expected = vec![0f32; nx * ny];
+            for j in 0..ny {
+                for i in 0..nx {
+                    let mut acc = 0f32;
+                    for k in 0..nk {
+                        acc = av[j * nk + k].mul_add(bv[k * nx + i], acc);
+                    }
+                    expected[j * nx + i] = acc;
+                }
+            }
+            Workload {
+                kernel,
+                cfg,
+                mem,
+                out_ptr: c,
+                out_len: nx * ny,
+                expected,
+            }
+        }
+        Pattern::MatVec { unroll } => {
+            let nk = nz.max(1).div_ceil(*unroll as usize) * *unroll as usize * 4;
+            let y = alloc.alloc((nx * 4) as u64);
+            let a = alloc.alloc((nx * nk * 4) as u64);
+            let x = alloc.alloc((nk * 4) as u64);
+            let yv = input_data(&mut rng, nx);
+            let av = input_data(&mut rng, nx * nk);
+            let xv = input_data(&mut rng, nk);
+            mem.write_f32s(y, &yv).unwrap();
+            mem.write_f32s(a, &av).unwrap();
+            mem.write_f32s(x, &xv).unwrap();
+            let block = 32u32;
+            let cfg = SimConfig::new(
+                (nx as u32).div_ceil(block),
+                block,
+                vec![y, a, x, nx as u64, nk as u64],
+            );
+            let mut expected = yv.clone();
+            for i in 0..nx {
+                let mut acc = yv[i];
+                for k in 0..nk {
+                    acc = av[i * nk + k].mul_add(xv[k], acc);
+                }
+                expected[i] = acc;
+            }
+            Workload {
+                kernel,
+                cfg,
+                mem,
+                out_ptr: y,
+                out_len: nx,
+                expected,
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn stencil_workload(
+    b: &Benchmark,
+    kernel: Kernel,
+    taps: Vec<Tap>,
+    nx: usize,
+    ny: usize,
+    nz: usize,
+    rng: &mut Rng,
+    mut mem: GlobalMem,
+    mut alloc: Allocator,
+) -> Workload {
+    let n = nx * ny * nz;
+    let narr = taps.iter().map(|t| t.array).max().unwrap_or(0) as usize + 1;
+    let out = alloc.alloc((n * 4) as u64);
+    let mut ins = Vec::new();
+    let mut in_data = Vec::new();
+    for _ in 0..narr {
+        let p = alloc.alloc((n * 4) as u64);
+        let d = input_data(rng, n);
+        mem.write_f32s(p, &d).unwrap();
+        ins.push(p);
+        in_data.push(d);
+    }
+    let flags: Option<(u64, Vec<u32>)> = if b.divergent {
+        let p = alloc.alloc((n * 4) as u64);
+        let d: Vec<u32> = (0..n).map(|_| (rng.below(4) != 0) as u32).collect();
+        mem.write_u32s(p, &d).unwrap();
+        Some((p, d))
+    } else {
+        None
+    };
+
+    let (hi, hj, hk) = (b.halo_i(), b.halo_j(), b.halo_k());
+    let mut params = vec![out];
+    params.extend(&ins);
+    if let Some((p, _)) = &flags {
+        params.push(*p);
+    }
+    params.push(nx as u64);
+    if b.dims >= 2 {
+        params.push(ny as u64);
+    }
+    if b.dims >= 3 {
+        params.push(nz as u64);
+    }
+    debug_assert_eq!(params.len(), param_names(b).len());
+
+    let cfg = if b.dims == 3 {
+        // gang over k (+halo range), vector covers i with one block
+        let grid = ((nz as i64 - 2 * hk).max(1)) as u32;
+        SimConfig::new(grid, nx.min(512) as u32, params)
+    } else {
+        let grid = ((ny as i64 - 2 * hj).max(1)) as u32;
+        SimConfig::new(grid, 64.min(nx as u32), params)
+    };
+
+    // CPU reference with identical fma ordering
+    let mut expected = vec![0f32; n];
+    let (zlo, zhi) = if b.dims == 3 {
+        (hk, nz as i64 - hk)
+    } else {
+        (0, 1)
+    };
+    for k in zlo..zhi {
+        for j in hj..(ny as i64 - hj) {
+            for i in hi..(nx as i64 - hi) {
+                let idx = ((k * ny as i64 + j) * nx as i64 + i) as usize;
+                if let Some((_, f)) = &flags {
+                    if f[idx] == 0 {
+                        continue;
+                    }
+                }
+                let mut acc = 0f32;
+                for t in &taps {
+                    let tidx = ((k + t.dk) * ny as i64 + (j + t.dj)) * nx as i64 + (i + t.di);
+                    let mut v = in_data[t.array as usize][tidx as usize];
+                    v = match t.func {
+                        TapFunc::None => v,
+                        TapFunc::Sin => v.sin(),
+                        TapFunc::Cos => v.cos(),
+                    };
+                    acc = t.coef.mul_add(v, acc);
+                }
+                expected[idx] = acc;
+            }
+        }
+    }
+
+    Workload {
+        kernel,
+        cfg,
+        mem,
+        out_ptr: out,
+        out_len: n,
+        expected,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_has_16_benchmarks() {
+        let s = suite();
+        assert_eq!(s.len(), 16);
+        let names: Vec<&str> = s.iter().map(|b| b.name).collect();
+        assert_eq!(
+            names,
+            vec![
+                "divergence",
+                "gameoflife",
+                "gaussblur",
+                "gradient",
+                "jacobi",
+                "lapgsrb",
+                "laplacian",
+                "matmul",
+                "matvec",
+                "sincos",
+                "tricubic",
+                "tricubic2",
+                "uxx1",
+                "vecadd",
+                "wave13pt",
+                "whispering"
+            ]
+        );
+    }
+
+    #[test]
+    fn static_load_counts_match_table2() {
+        for b in suite() {
+            let k = generate(&b);
+            assert_eq!(
+                k.global_loads() - b.divergent as usize,
+                b.expect_loads - b.divergent as usize,
+                "{}: generated loads (incl flag) = {}",
+                b.name,
+                k.global_loads()
+            );
+            assert_eq!(k.global_loads(), b.expect_loads, "{}", b.name);
+        }
+    }
+
+    #[test]
+    fn langs_match_table2() {
+        let fortran: Vec<&str> = suite()
+            .iter()
+            .filter(|b| b.lang == Lang::Fortran)
+            .map(|b| b.name)
+            .collect();
+        assert_eq!(fortran, vec!["jacobi", "matmul", "sincos"]);
+    }
+
+    #[test]
+    fn dims_match_paper() {
+        for b in suite() {
+            let expect_2d = matches!(
+                b.name,
+                "gameoflife" | "gaussblur" | "jacobi" | "matmul" | "matvec" | "whispering"
+            );
+            assert_eq!(b.dims == 2, expect_2d, "{}", b.name);
+        }
+    }
+}

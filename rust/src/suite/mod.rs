@@ -1,0 +1,13 @@
+//! The benchmark substrate: KernelGen suite (Table 2) + §8.5 app kernels,
+//! generated as NVHPC-shaped PTX, with simulator workloads and bit-exact
+//! CPU references.
+
+pub mod apps;
+pub mod codegen;
+pub mod kernelgen;
+pub mod spec;
+
+pub use apps::apps;
+pub use codegen::{generate, param_names};
+pub use kernelgen::{by_name, suite, workload, Workload};
+pub use spec::{irow, Benchmark, Lang, Pattern, Tap, TapFunc};

@@ -1,0 +1,169 @@
+//! Benchmark specifications: the stencil footprints of the KernelGen suite
+//! (Table 2) and the §8.5 application kernels, described abstractly so the
+//! code generator (`codegen.rs`) can emit NVHPC-shaped PTX and the harness
+//! can compute reference results.
+
+/// Source language of the original benchmark (Table 2 metadata).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lang {
+    C,
+    Fortran,
+}
+
+impl Lang {
+    pub fn short(self) -> &'static str {
+        match self {
+            Lang::C => "C",
+            Lang::Fortran => "F",
+        }
+    }
+}
+
+/// Optional unary function applied to a loaded value (sincos benchmark).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TapFunc {
+    None,
+    Sin,
+    Cos,
+}
+
+/// One load tap: input array index + per-dimension element offsets
+/// (leading/thread dimension first) + combining coefficient.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Tap {
+    pub array: u32,
+    pub di: i64,
+    pub dj: i64,
+    pub dk: i64,
+    pub coef: f32,
+    pub func: TapFunc,
+}
+
+impl Tap {
+    pub const fn new(array: u32, di: i64, dj: i64, dk: i64, coef: f32) -> Tap {
+        Tap {
+            array,
+            di,
+            dj,
+            dk,
+            coef,
+            func: TapFunc::None,
+        }
+    }
+
+    pub const fn with_func(mut self, f: TapFunc) -> Tap {
+        self.func = f;
+        self
+    }
+}
+
+/// Computational pattern of a benchmark.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Pattern {
+    /// `out[idx] = Σ coefₜ · inₜ[idx + offₜ]` — the stencil family.
+    Stencil { taps: Vec<Tap> },
+    /// Dense `C = A·B` with an unrolled inner k-loop (no shuffles possible).
+    MatMul { unroll: u32 },
+    /// `y = A·x` with an unrolled inner loop (no shuffles possible).
+    MatVec { unroll: u32 },
+    /// `out[i] = sin(a[i]) + cos(b[i])`.
+    SinCos,
+    /// `c[i] = a[i] + b[i]`.
+    VecAdd,
+}
+
+/// A benchmark of the suite.
+#[derive(Debug, Clone)]
+pub struct Benchmark {
+    pub name: &'static str,
+    pub lang: Lang,
+    /// 2 or 3 dimensions (Table 2: 2D vs 3D benchmarks).
+    pub dims: u32,
+    pub pattern: Pattern,
+    /// `divergence`-style data-dependent guard load (Listing 1).
+    pub divergent: bool,
+    /// Expected Table 2 row (shuffles, loads, avg |delta|) for validation.
+    pub expect_shuffles: usize,
+    pub expect_loads: usize,
+    pub expect_delta: Option<f64>,
+}
+
+impl Benchmark {
+    /// Number of distinct input arrays the pattern reads.
+    pub fn input_arrays(&self) -> u32 {
+        match &self.pattern {
+            Pattern::Stencil { taps } => taps.iter().map(|t| t.array).max().unwrap_or(0) + 1,
+            Pattern::MatMul { .. } => 2,
+            Pattern::MatVec { .. } => 2,
+            Pattern::SinCos => 2,
+            Pattern::VecAdd => 2,
+        }
+    }
+
+    /// Halo (guard margin) on the leading dimension.
+    pub fn halo_i(&self) -> i64 {
+        match &self.pattern {
+            Pattern::Stencil { taps } => taps
+                .iter()
+                .map(|t| t.di.abs())
+                .max()
+                .unwrap_or(0),
+            _ => 0,
+        }
+    }
+
+    pub fn halo_j(&self) -> i64 {
+        match &self.pattern {
+            Pattern::Stencil { taps } => taps.iter().map(|t| t.dj.abs()).max().unwrap_or(0),
+            _ => 0,
+        }
+    }
+
+    pub fn halo_k(&self) -> i64 {
+        match &self.pattern {
+            Pattern::Stencil { taps } => taps.iter().map(|t| t.dk.abs()).max().unwrap_or(0),
+            _ => 0,
+        }
+    }
+}
+
+/// Build a row of taps along the leading dimension: offsets `lo..=hi`
+/// (inclusive) at fixed `(dj, dk)` of `array`.
+pub fn irow(array: u32, lo: i64, hi: i64, dj: i64, dk: i64, coef: f32) -> Vec<Tap> {
+    (lo..=hi)
+        .map(|di| Tap::new(array, di, dj, dk, coef))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn irow_builds_inclusive_range() {
+        let r = irow(0, -2, 2, 0, 0, 1.0);
+        assert_eq!(r.len(), 5);
+        assert_eq!(r[0].di, -2);
+        assert_eq!(r[4].di, 2);
+    }
+
+    #[test]
+    fn halo_is_max_abs_offset() {
+        let b = Benchmark {
+            name: "t",
+            lang: Lang::C,
+            dims: 3,
+            pattern: Pattern::Stencil {
+                taps: vec![Tap::new(0, -1, 2, -3, 1.0), Tap::new(1, 2, 0, 0, 1.0)],
+            },
+            divergent: false,
+            expect_shuffles: 0,
+            expect_loads: 2,
+            expect_delta: None,
+        };
+        assert_eq!(b.halo_i(), 2);
+        assert_eq!(b.halo_j(), 2);
+        assert_eq!(b.halo_k(), 3);
+        assert_eq!(b.input_arrays(), 2);
+    }
+}

@@ -1,0 +1,254 @@
+//! Affine normal forms over symbolic atoms.
+//!
+//! The two solver queries the paper sends to Z3 — branch-feasibility under
+//! recorded assumptions (§4.2) and the shuffle-delta equation
+//! `A(%tid.x + N) = B(%tid.x)` (§5.1) — both reduce, for compiler-generated
+//! address arithmetic, to reasoning about *affine* combinations of a small
+//! set of atoms (parameters, loop-iterator UFs, loaded values). This module
+//! extracts `Σ cᵢ·atomᵢ + k` from a term, looking through sign/zero
+//! extensions and widening multiplies the way NVHPC emits them.
+//!
+//! Looking through `sext` is the integer relaxation of the bitvector
+//! problem: it is exact as long as index arithmetic does not overflow 32
+//! bits, which the paper's own induction-variable treatment also assumes
+//! (DESIGN.md lists this as the Z3 substitution).
+
+use super::term::{BvOp, Node, TermId, TermPool};
+use std::collections::BTreeMap;
+
+/// An affine form `Σ coeff·atom + constant` where atoms are irreducible
+/// term ids (symbols, UF applications, or opaque subtrees).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Affine {
+    pub coeffs: BTreeMap<TermId, i128>,
+    pub constant: i128,
+}
+
+impl Affine {
+    pub fn constant(k: i128) -> Affine {
+        Affine {
+            coeffs: BTreeMap::new(),
+            constant: k,
+        }
+    }
+
+    pub fn atom(t: TermId) -> Affine {
+        let mut coeffs = BTreeMap::new();
+        coeffs.insert(t, 1);
+        Affine {
+            coeffs,
+            constant: 0,
+        }
+    }
+
+    pub fn is_constant(&self) -> bool {
+        self.coeffs.is_empty()
+    }
+
+    pub fn add(&self, other: &Affine) -> Affine {
+        let mut out = self.clone();
+        out.constant += other.constant;
+        for (&t, &c) in &other.coeffs {
+            let e = out.coeffs.entry(t).or_insert(0);
+            *e += c;
+            if *e == 0 {
+                out.coeffs.remove(&t);
+            }
+        }
+        out
+    }
+
+    pub fn sub(&self, other: &Affine) -> Affine {
+        self.add(&other.scale(-1))
+    }
+
+    pub fn scale(&self, k: i128) -> Affine {
+        if k == 0 {
+            return Affine::constant(0);
+        }
+        Affine {
+            coeffs: self.coeffs.iter().map(|(&t, &c)| (t, c * k)).collect(),
+            constant: self.constant * k,
+        }
+    }
+
+    /// Coefficient of `atom` (0 if absent).
+    pub fn coeff(&self, atom: TermId) -> i128 {
+        self.coeffs.get(&atom).copied().unwrap_or(0)
+    }
+
+    /// The form with `atom` removed.
+    pub fn without(&self, atom: TermId) -> Affine {
+        let mut out = self.clone();
+        out.coeffs.remove(&atom);
+        out
+    }
+}
+
+/// Extract the affine form of `t`, treating non-affine subtrees as atoms.
+///
+/// `deep_atoms`: when extracting fails inside an extension, the whole
+/// extension node becomes the atom, so two addresses that share the
+/// extension subtree still cancel in a difference.
+pub fn extract(pool: &TermPool, t: TermId) -> Affine {
+    match pool.node(t) {
+        Node::Const { bits, width } => Affine::constant(super::term::to_signed(*bits, *width)),
+        Node::Sym { .. } | Node::Uf { .. } => Affine::atom(t),
+        Node::Bin { op, a, b, .. } => {
+            let (a, b) = (*a, *b);
+            match op {
+                BvOp::Add => extract(pool, a).add(&extract(pool, b)),
+                BvOp::Sub => extract(pool, a).sub(&extract(pool, b)),
+                BvOp::Mul => {
+                    let fa = extract(pool, a);
+                    let fb = extract(pool, b);
+                    if fb.is_constant() {
+                        fa.scale(fb.constant)
+                    } else if fa.is_constant() {
+                        fb.scale(fa.constant)
+                    } else {
+                        Affine::atom(t)
+                    }
+                }
+                BvOp::Shl => {
+                    let fb = extract(pool, b);
+                    if fb.is_constant() && (0..63).contains(&fb.constant) {
+                        extract(pool, a).scale(1i128 << fb.constant)
+                    } else {
+                        Affine::atom(t)
+                    }
+                }
+                _ => Affine::atom(t),
+            }
+        }
+        // `sext` preserves the signed value exactly, so looking through it is
+        // sound in the signed affine domain (the relaxation is only the
+        // assume-no-overflow of the inner arithmetic). `zext` does NOT
+        // preserve signed values (bit pattern 0x8000_0000 zexts to a large
+        // positive), so it stays atomic — which also lets the solver's
+        // `form_nonneg` recognize provably non-negative forms.
+        Node::SExt { a, .. } => extract(pool, *a),
+        _ => Affine::atom(t),
+    }
+}
+
+/// `d(addr)/d(tid)` and the residue: write `extract(t)` as
+/// `stride·tid + rest`, where `tid` may occur either as a direct atom or
+/// inside atoms we can linearize. Returns `(stride, rest)`.
+pub fn split_on(pool: &TermPool, t: TermId, tid_atom: TermId) -> (i128, Affine) {
+    let f = linearize_atom_through(pool, extract(pool, t), tid_atom);
+    let stride = f.coeff(tid_atom);
+    (stride, f.without(tid_atom))
+}
+
+/// Re-expand atoms that *contain* `target` linearly (e.g. an opaque
+/// `Mul(nonconst, nonconst)` will stay opaque, but `UF` atoms never expand;
+/// only recursion through extract already handled extensions). Since
+/// `extract` already looks through extensions, the only remaining hidden
+/// occurrences are inside genuinely non-linear atoms — leave those opaque.
+fn linearize_atom_through(_pool: &TermPool, f: Affine, _target: TermId) -> Affine {
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sym::term::{BvOp, TermPool};
+
+    #[test]
+    fn extracts_simple_affine() {
+        let mut p = TermPool::new();
+        let x = p.symbol("x", 64);
+        let c4 = p.constant(4, 64);
+        let c8 = p.constant(8, 64);
+        let t1 = p.bin(BvOp::Mul, x, c4);
+        let t = p.bin(BvOp::Add, t1, c8);
+        let f = extract(&p, t);
+        assert_eq!(f.coeff(x), 4);
+        assert_eq!(f.constant, 8);
+    }
+
+    #[test]
+    fn looks_through_sext_and_mulwide() {
+        // NVHPC address pattern: base + sext32→64(idx) * 4 + off
+        let mut p = TermPool::new();
+        let base = p.symbol("base", 64);
+        let idx = p.symbol("idx", 32);
+        let widened = p.sext(idx, 64);
+        let c4 = p.constant(4, 64);
+        let scaled = p.bin(BvOp::Mul, widened, c4);
+        let t0 = p.bin(BvOp::Add, base, scaled);
+        let c12 = p.constant(12, 64);
+        let addr = p.bin(BvOp::Add, t0, c12);
+        let f = extract(&p, addr);
+        assert_eq!(f.coeff(base), 1);
+        assert_eq!(f.coeff(idx), 4);
+        assert_eq!(f.constant, 12);
+    }
+
+    #[test]
+    fn shl_becomes_scale() {
+        let mut p = TermPool::new();
+        let x = p.symbol("x", 64);
+        let c3 = p.constant(3, 64);
+        let t = p.bin(BvOp::Shl, x, c3);
+        assert_eq!(extract(&p, t).coeff(x), 8);
+    }
+
+    #[test]
+    fn difference_cancels_shared_atoms() {
+        let mut p = TermPool::new();
+        let base = p.symbol("base", 64);
+        let i = p.symbol("i", 32);
+        let iw = p.sext(i, 64);
+        let c4 = p.constant(4, 64);
+        let si = p.bin(BvOp::Mul, iw, c4);
+        let a0 = p.bin(BvOp::Add, base, si);
+        let c12 = p.constant(12, 64);
+        let c4b = p.constant(4, 64);
+        let a = p.bin(BvOp::Add, a0, c12);
+        let b = p.bin(BvOp::Add, a0, c4b);
+        let d = extract(&p, b).sub(&extract(&p, a));
+        assert!(d.is_constant());
+        assert_eq!(d.constant, -8);
+    }
+
+    #[test]
+    fn nonlinear_stays_atomic() {
+        let mut p = TermPool::new();
+        let x = p.symbol("x", 64);
+        let y = p.symbol("y", 64);
+        let t = p.bin(BvOp::Mul, x, y);
+        let f = extract(&p, t);
+        assert_eq!(f.coeff(t), 1);
+        assert_eq!(f.constant, 0);
+        // difference of the same nonlinear atom cancels
+        let d = f.sub(&extract(&p, t));
+        assert_eq!(d, Affine::constant(0));
+    }
+
+    #[test]
+    fn split_on_tid() {
+        let mut p = TermPool::new();
+        let tid = p.symbol("tid.x", 32);
+        let base = p.symbol("base", 64);
+        let tw = p.sext(tid, 64);
+        let c4 = p.constant(4, 64);
+        let scaled = p.bin(BvOp::Mul, tw, c4);
+        let addr = p.bin(BvOp::Add, base, scaled);
+        let (stride, rest) = split_on(&p, addr, tid);
+        assert_eq!(stride, 4);
+        assert_eq!(rest.coeff(base), 1);
+        assert_eq!(rest.coeff(tid), 0);
+    }
+
+    #[test]
+    fn negative_constants() {
+        let mut p = TermPool::new();
+        let x = p.symbol("x", 32);
+        let c = p.constant((-4i64) as u64, 32);
+        let t = p.bin(BvOp::Add, x, c);
+        let f = extract(&p, t);
+        assert_eq!(f.constant, -4);
+    }
+}

@@ -1,0 +1,14 @@
+//! Symbolic bitvector engine: terms, affine normal forms, SMT-lite solver.
+//!
+//! Replaces the paper's Rosette + Z3 stack (see DESIGN.md substitution
+//! table). `term` is the hash-consed concolic term arena, `affine` the
+//! linear normal-form extraction, `solver` the assumption store and the
+//! shuffle-delta procedure.
+
+pub mod affine;
+pub mod solver;
+pub mod term;
+
+pub use affine::{extract, split_on, Affine};
+pub use solver::{const_distance, may_alias, solve_delta, Assumptions, Conflict, Truth};
+pub use term::{eval, BvOp, CmpKind, Node, SymId, TermId, TermPool, UfId};

@@ -1,0 +1,596 @@
+//! SMT-lite: the two decision procedures PTXASW needs from its solver.
+//!
+//! The paper plugs Z3 in for (a) pruning unrealizable control-flow paths
+//! under the recorded branch assumptions (§4.2) and (b) solving the shuffle
+//! delta equation `A(%tid.x + N) = B(%tid.x)` (§5.1). Both queries, over
+//! the address/guard arithmetic compilers emit, live in the linear fragment
+//! — so this module implements a sound *incomplete* decision procedure on
+//! affine normal forms: interval + disequality reasoning per linear form
+//! for (a), and exact rational solving for (b).
+//!
+//! Soundness contract: `check` may answer `Unknown` freely, but must never
+//! claim `True`/`False` for a satisfiable opposite — pruning a realizable
+//! path would corrupt the memory trace. Unsigned comparisons are therefore
+//! only decided through structural equality or constant folding unless the
+//! linear form is known non-negative.
+
+use super::affine::{extract, split_on, Affine};
+use super::term::{CmpKind, Node, TermId, TermPool};
+use std::collections::BTreeMap;
+
+/// Three-valued answer of the assumption engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Truth {
+    True,
+    False,
+    Unknown,
+}
+
+impl Truth {
+    pub fn known(self) -> Option<bool> {
+        match self {
+            Truth::True => Some(true),
+            Truth::False => Some(false),
+            Truth::Unknown => None,
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[error("assumption conflicts with recorded facts")]
+pub struct Conflict;
+
+/// Canonical key of a linear form: its coefficient vector. Sign-normalized
+/// so `x - y` and `y - x` share a key.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+struct FormKey(Vec<(TermId, i128)>);
+
+/// Facts known about one linear form `g` (the non-constant part).
+#[derive(Debug, Clone, Default)]
+struct FormFacts {
+    lo: Option<i128>,
+    hi: Option<i128>,
+    ne: Vec<i128>,
+    /// Known non-negative even without explicit bounds (e.g. zext provenance).
+    nonneg: bool,
+}
+
+impl FormFacts {
+    fn admits(&self, v: i128) -> bool {
+        if let Some(lo) = self.lo {
+            if v < lo {
+                return false;
+            }
+        }
+        if let Some(hi) = self.hi {
+            if v > hi {
+                return false;
+            }
+        }
+        !self.ne.contains(&v)
+    }
+
+    fn fixed(&self) -> Option<i128> {
+        match (self.lo, self.hi) {
+            (Some(l), Some(h)) if l == h => Some(l),
+            _ => None,
+        }
+    }
+}
+
+/// A set of branch assumptions with conflict detection (paper §4.2).
+#[derive(Debug, Clone, Default)]
+pub struct Assumptions {
+    /// Linear facts per canonical form.
+    forms: BTreeMap<FormKey, FormFacts>,
+    /// Opaque predicate facts (non-linear / unsigned-undecidable preds).
+    opaque: BTreeMap<TermId, bool>,
+}
+
+/// One normalized constraint: `g + c ⋈ 0` under signed semantics where `g`
+/// is keyed by `key` (after sign normalization `flip` applies).
+struct Linear {
+    key: FormKey,
+    /// Constant after normalization: constraint is `g ⋈ rhs`.
+    rhs: i128,
+    kind: CmpKind,
+}
+
+fn canonicalize(f: &Affine, kind: CmpKind) -> Linear {
+    let mut coeffs: Vec<(TermId, i128)> = f.coeffs.iter().map(|(&t, &c)| (t, c)).collect();
+    let mut rhs = -f.constant; // g + c ⋈ 0  ⇔  g ⋈ -c
+    let mut kind = kind;
+    let flip = coeffs.first().map(|&(_, c)| c < 0).unwrap_or(false);
+    if flip {
+        for e in coeffs.iter_mut() {
+            e.1 = -e.1;
+        }
+        rhs = -rhs;
+        kind = match kind {
+            CmpKind::Slt => CmpKind::Sgt,
+            CmpKind::Sle => CmpKind::Sge,
+            CmpKind::Sgt => CmpKind::Slt,
+            CmpKind::Sge => CmpKind::Sle,
+            CmpKind::Ult => CmpKind::Ugt,
+            CmpKind::Ule => CmpKind::Uge,
+            CmpKind::Ugt => CmpKind::Ult,
+            CmpKind::Uge => CmpKind::Ule,
+            k => k,
+        };
+    }
+    Linear {
+        key: FormKey(coeffs),
+        rhs,
+        kind,
+    }
+}
+
+/// Is the linear form syntactically non-negative (all atoms known-unsigned
+/// with non-negative coefficients and non-negative constant)? Used to admit
+/// unsigned comparisons into the signed interval engine.
+fn form_nonneg(pool: &TermPool, f: &Affine) -> bool {
+    if f.constant < 0 {
+        return false;
+    }
+    f.coeffs
+        .iter()
+        .all(|(&t, &c)| c >= 0 && matches!(pool.node(t), Node::ZExt { .. }))
+}
+
+impl Assumptions {
+    pub fn new() -> Assumptions {
+        Assumptions::default()
+    }
+
+    /// Normalize a width-1 predicate term into a linear constraint when the
+    /// comparison kind is decidable in the signed affine domain.
+    fn linearize(&self, pool: &TermPool, p: TermId) -> Option<Linear> {
+        let Node::Cmp { kind, a, b } = pool.node(p) else {
+            return None;
+        };
+        let fa = extract(pool, *a);
+        let fb = extract(pool, *b);
+        let diff = fa.sub(&fb);
+        let signed_ok = matches!(
+            kind,
+            CmpKind::Eq | CmpKind::Ne | CmpKind::Slt | CmpKind::Sle | CmpKind::Sgt | CmpKind::Sge
+        );
+        if !signed_ok {
+            // admit unsigned kinds only when provably non-negative operand forms
+            if !(form_nonneg(pool, &fa) && form_nonneg(pool, &fb)) {
+                return None;
+            }
+        }
+        let kind = match kind {
+            CmpKind::Ult => CmpKind::Slt,
+            CmpKind::Ule => CmpKind::Sle,
+            CmpKind::Ugt => CmpKind::Sgt,
+            CmpKind::Uge => CmpKind::Sge,
+            k => *k,
+        };
+        Some(canonicalize(&diff, kind))
+    }
+
+    /// Decide the truth of `p` under the recorded assumptions.
+    pub fn check(&self, pool: &TermPool, p: TermId) -> Truth {
+        if let Some(c) = pool.as_const(p) {
+            return if c & 1 == 1 { Truth::True } else { Truth::False };
+        }
+        if let Some(&v) = self.opaque.get(&p) {
+            return if v { Truth::True } else { Truth::False };
+        }
+        // not-of-opaque
+        if let Node::Not { a, .. } = pool.node(p) {
+            if let Some(&v) = self.opaque.get(a) {
+                return if v { Truth::False } else { Truth::True };
+            }
+        }
+        let Some(lin) = self.linearize(pool, p) else {
+            return Truth::Unknown;
+        };
+        let Some(facts) = self.forms.get(&lin.key) else {
+            return Truth::Unknown;
+        };
+        decide(facts, lin.kind, lin.rhs)
+    }
+
+    /// Record `p == v`. Returns `Err(Conflict)` when it contradicts the
+    /// existing facts (the paper removes such flows).
+    pub fn assume(&mut self, pool: &TermPool, p: TermId, v: bool) -> Result<(), Conflict> {
+        match self.check(pool, p) {
+            Truth::True if !v => return Err(Conflict),
+            Truth::False if v => return Err(Conflict),
+            _ => {}
+        }
+        if let Some(lin) = self.linearize(pool, p) {
+            let facts = self.forms.entry(lin.key).or_default();
+            apply(facts, lin.kind, lin.rhs, v)?;
+            return Ok(());
+        }
+        // opaque fact — also strip one Not for normalization
+        if let Node::Not { a, .. } = pool.node(p) {
+            let a = *a;
+            if self.opaque.get(&a) == Some(&v) {
+                return Err(Conflict);
+            }
+            self.opaque.insert(a, !v);
+            return Ok(());
+        }
+        if self.opaque.get(&p) == Some(&!v) {
+            return Err(Conflict);
+        }
+        self.opaque.insert(p, v);
+        Ok(())
+    }
+
+    /// Drop facts that mention any of the given atoms (store invalidation —
+    /// same mechanism the paper uses for conflicting assumptions, §4.3).
+    pub fn invalidate_atoms(&mut self, atoms: &[TermId]) {
+        self.forms
+            .retain(|k, _| !k.0.iter().any(|(t, _)| atoms.contains(t)));
+        self.opaque.retain(|&t, _| !atoms.contains(&t));
+    }
+
+    pub fn fact_count(&self) -> usize {
+        self.forms.len() + self.opaque.len()
+    }
+}
+
+fn decide(facts: &FormFacts, kind: CmpKind, rhs: i128) -> Truth {
+    if let Some(v) = facts.fixed() {
+        let b = match kind {
+            CmpKind::Eq => v == rhs,
+            CmpKind::Ne => v != rhs,
+            CmpKind::Slt => v < rhs,
+            CmpKind::Sle => v <= rhs,
+            CmpKind::Sgt => v > rhs,
+            CmpKind::Sge => v >= rhs,
+            _ => return Truth::Unknown,
+        };
+        return if b { Truth::True } else { Truth::False };
+    }
+    let lo = facts.lo.or(if facts.nonneg { Some(0) } else { None });
+    let hi = facts.hi;
+    match kind {
+        CmpKind::Eq => {
+            if !facts.admits(rhs) {
+                Truth::False
+            } else {
+                Truth::Unknown
+            }
+        }
+        CmpKind::Ne => {
+            if !facts.admits(rhs) {
+                Truth::True
+            } else if facts.ne.contains(&rhs) {
+                Truth::True
+            } else {
+                Truth::Unknown
+            }
+        }
+        CmpKind::Slt => match (lo, hi) {
+            (_, Some(h)) if h < rhs => Truth::True,
+            (Some(l), _) if l >= rhs => Truth::False,
+            _ => Truth::Unknown,
+        },
+        CmpKind::Sle => match (lo, hi) {
+            (_, Some(h)) if h <= rhs => Truth::True,
+            (Some(l), _) if l > rhs => Truth::False,
+            _ => Truth::Unknown,
+        },
+        CmpKind::Sgt => match (lo, hi) {
+            (Some(l), _) if l > rhs => Truth::True,
+            (_, Some(h)) if h <= rhs => Truth::False,
+            _ => Truth::Unknown,
+        },
+        CmpKind::Sge => match (lo, hi) {
+            (Some(l), _) if l >= rhs => Truth::True,
+            (_, Some(h)) if h < rhs => Truth::False,
+            _ => Truth::Unknown,
+        },
+        _ => Truth::Unknown,
+    }
+}
+
+fn apply(facts: &mut FormFacts, kind: CmpKind, rhs: i128, v: bool) -> Result<(), Conflict> {
+    // rewrite negated constraints into positive ones
+    let (kind, rhs) = if v {
+        (kind, rhs)
+    } else {
+        match kind {
+            CmpKind::Eq => (CmpKind::Ne, rhs),
+            CmpKind::Ne => (CmpKind::Eq, rhs),
+            CmpKind::Slt => (CmpKind::Sge, rhs),
+            CmpKind::Sle => (CmpKind::Sgt, rhs),
+            CmpKind::Sgt => (CmpKind::Sle, rhs),
+            CmpKind::Sge => (CmpKind::Slt, rhs),
+            _ => return Ok(()),
+        }
+    };
+    match kind {
+        CmpKind::Eq => {
+            if !facts.admits(rhs) {
+                return Err(Conflict);
+            }
+            facts.lo = Some(rhs);
+            facts.hi = Some(rhs);
+        }
+        CmpKind::Ne => {
+            if facts.fixed() == Some(rhs) {
+                return Err(Conflict);
+            }
+            if !facts.ne.contains(&rhs) {
+                facts.ne.push(rhs);
+            }
+        }
+        CmpKind::Slt => tighten_hi(facts, rhs - 1)?,
+        CmpKind::Sle => tighten_hi(facts, rhs)?,
+        CmpKind::Sgt => tighten_lo(facts, rhs + 1)?,
+        CmpKind::Sge => tighten_lo(facts, rhs)?,
+        _ => {}
+    }
+    Ok(())
+}
+
+fn tighten_hi(facts: &mut FormFacts, h: i128) -> Result<(), Conflict> {
+    let nh = facts.hi.map_or(h, |old| old.min(h));
+    if let Some(lo) = facts.lo {
+        if lo > nh {
+            return Err(Conflict);
+        }
+    }
+    facts.hi = Some(nh);
+    Ok(())
+}
+
+fn tighten_lo(facts: &mut FormFacts, l: i128) -> Result<(), Conflict> {
+    let nl = facts.lo.map_or(l, |old| old.max(l));
+    if let Some(hi) = facts.hi {
+        if nl > hi {
+            return Err(Conflict);
+        }
+    }
+    facts.lo = Some(nl);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Shuffle-delta solving (paper §5.1)
+// ---------------------------------------------------------------------------
+
+/// Find the integer `N` with `A(tid + N) = B(tid)` and `-31 ≤ N ≤ 31`,
+/// where `tid_atom` is the term the thread id was emulated as.
+///
+/// Writes both addresses as `stride·tid + rest`; the equation holds for all
+/// tids iff the strides agree and `rest_B - rest_A` is a constant multiple
+/// of the stride.
+pub fn solve_delta(
+    pool: &TermPool,
+    a_addr: TermId,
+    b_addr: TermId,
+    tid_atom: TermId,
+) -> Option<i64> {
+    let (sa, ra) = split_on(pool, a_addr, tid_atom);
+    let (sb, rb) = split_on(pool, b_addr, tid_atom);
+    if sa == 0 || sa != sb {
+        return None;
+    }
+    let d = rb.sub(&ra);
+    if !d.is_constant() {
+        return None;
+    }
+    if d.constant % sa != 0 {
+        return None;
+    }
+    let n = d.constant / sa;
+    if (-31..=31).contains(&n) {
+        Some(n as i64)
+    } else {
+        None
+    }
+}
+
+/// Byte distance `B - A` when it is constant (used for overlap checks and
+/// alias analysis). `None` when the difference is symbolic.
+pub fn const_distance(pool: &TermPool, a_addr: TermId, b_addr: TermId) -> Option<i128> {
+    let d = extract(pool, b_addr).sub(&extract(pool, a_addr));
+    if d.is_constant() {
+        Some(d.constant)
+    } else {
+        None
+    }
+}
+
+/// May the `b_bytes` at `b_addr` overlap the `a_bytes` at `a_addr`?
+/// Conservative: unknown distance ⇒ may alias.
+pub fn may_alias(
+    pool: &TermPool,
+    a_addr: TermId,
+    a_bytes: u64,
+    b_addr: TermId,
+    b_bytes: u64,
+) -> bool {
+    match const_distance(pool, a_addr, b_addr) {
+        Some(d) => d > -(b_bytes as i128) && d < a_bytes as i128,
+        None => true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sym::term::{BvOp, TermPool};
+
+    fn addr(p: &mut TermPool, base: TermId, idx: TermId, scale: u64, off: i64) -> TermId {
+        let w = p.sext(idx, 64);
+        let c = p.constant(scale, 64);
+        let s = p.bin(BvOp::Mul, w, c);
+        let t = p.bin(BvOp::Add, base, s);
+        let o = p.constant(off as u64, 64);
+        p.bin(BvOp::Add, t, o)
+    }
+
+    #[test]
+    fn solves_jacobi_delta() {
+        // paper example: w0(i-1,j+1) at rd31+12, w0(i-1,j-1) at rd31+4 → N = -2
+        let mut p = TermPool::new();
+        let tid = p.symbol("tid.x", 32);
+        let base = p.symbol("base", 64);
+        let a = addr(&mut p, base, tid, 4, 12);
+        let b = addr(&mut p, base, tid, 4, 4);
+        assert_eq!(solve_delta(&p, a, b, tid), Some(-2));
+        // same address → N = 0
+        assert_eq!(solve_delta(&p, a, a, tid), Some(0));
+        // reverse direction → +2
+        assert_eq!(solve_delta(&p, b, a, tid), Some(2));
+    }
+
+    #[test]
+    fn rejects_mismatched_stride_or_nonconst() {
+        let mut p = TermPool::new();
+        let tid = p.symbol("tid.x", 32);
+        let base = p.symbol("base", 64);
+        let base2 = p.symbol("base2", 64);
+        let a4 = addr(&mut p, base, tid, 4, 0);
+        let a8 = addr(&mut p, base, tid, 8, 0);
+        assert_eq!(solve_delta(&p, a4, a8, tid), None);
+        let b = addr(&mut p, base2, tid, 4, 4);
+        assert_eq!(solve_delta(&p, a4, b, tid), None); // different arrays
+    }
+
+    #[test]
+    fn rejects_unaligned_and_distant() {
+        let mut p = TermPool::new();
+        let tid = p.symbol("tid.x", 32);
+        let base = p.symbol("base", 64);
+        let a = addr(&mut p, base, tid, 4, 0);
+        let b2 = addr(&mut p, base, tid, 4, 2); // not a multiple of stride
+        assert_eq!(solve_delta(&p, a, b2, tid), None);
+        let b_far = addr(&mut p, base, tid, 4, 4 * 32); // N = 32 > 31
+        assert_eq!(solve_delta(&p, a, b_far, tid), None);
+    }
+
+    #[test]
+    fn delta_without_tid_stride_rejected() {
+        let mut p = TermPool::new();
+        let tid = p.symbol("tid.x", 32);
+        let base = p.symbol("base", 64);
+        let j = p.symbol("j", 32);
+        let a = addr(&mut p, base, j, 4, 0); // address independent of tid
+        let b = addr(&mut p, base, j, 4, 4);
+        assert_eq!(solve_delta(&p, a, b, tid), None);
+    }
+
+    #[test]
+    fn assumption_conflict_detected() {
+        let mut p = TermPool::new();
+        let x = p.symbol("x", 32);
+        let z = p.constant(0, 32);
+        let eq = p.cmp(CmpKind::Eq, x, z);
+        let mut a = Assumptions::new();
+        a.assume(&p, eq, true).unwrap();
+        assert_eq!(a.check(&p, eq), Truth::True);
+        assert_eq!(a.assume(&p, eq, false), Err(Conflict));
+    }
+
+    #[test]
+    fn interval_implication() {
+        let mut p = TermPool::new();
+        let x = p.symbol("x", 32);
+        let c100 = p.constant(100, 32);
+        let c200 = p.constant(200, 32);
+        let c50 = p.constant(50, 32);
+        let lt100 = p.cmp(CmpKind::Slt, x, c100);
+        let lt200 = p.cmp(CmpKind::Slt, x, c200);
+        let lt50 = p.cmp(CmpKind::Slt, x, c50);
+        let mut a = Assumptions::new();
+        a.assume(&p, lt100, true).unwrap();
+        assert_eq!(a.check(&p, lt200), Truth::True);
+        assert_eq!(a.check(&p, lt50), Truth::Unknown);
+        // x < 100 and x >= 100 conflict
+        let ge100 = p.cmp(CmpKind::Sge, x, c100);
+        assert_eq!(a.check(&p, ge100), Truth::False);
+    }
+
+    #[test]
+    fn sign_normalized_keys_match() {
+        // x < y recorded; query y > x must be True
+        let mut p = TermPool::new();
+        let x = p.symbol("x", 32);
+        let y = p.symbol("y", 32);
+        let xy = p.cmp(CmpKind::Slt, x, y);
+        let yx = p.cmp(CmpKind::Sgt, y, x);
+        let mut a = Assumptions::new();
+        a.assume(&p, xy, true).unwrap();
+        assert_eq!(a.check(&p, yx), Truth::True);
+    }
+
+    #[test]
+    fn unsigned_on_possibly_negative_stays_unknown() {
+        let mut p = TermPool::new();
+        let x = p.symbol("x", 32);
+        let c = p.constant(10, 32);
+        let ult = p.cmp(CmpKind::Ult, x, c);
+        let mut a = Assumptions::new();
+        a.assume(&p, ult, true).unwrap();
+        // a second, looser unsigned bound must NOT be decided (x may be "negative" i.e. huge)
+        let c2 = p.constant(20, 32);
+        let ult2 = p.cmp(CmpKind::Ult, x, c2);
+        assert_eq!(a.check(&p, ult2), Truth::Unknown);
+    }
+
+    #[test]
+    fn unsigned_on_zext_is_decided() {
+        let mut p = TermPool::new();
+        let x32 = p.symbol("x", 32);
+        let x = p.zext(x32, 64);
+        let c = p.constant(10, 64);
+        let c2 = p.constant(20, 64);
+        let ult = p.cmp(CmpKind::Ult, x, c);
+        let ult2 = p.cmp(CmpKind::Ult, x, c2);
+        let mut a = Assumptions::new();
+        a.assume(&p, ult, true).unwrap();
+        assert_eq!(a.check(&p, ult2), Truth::True);
+    }
+
+    #[test]
+    fn opaque_predicates_roundtrip() {
+        let mut p = TermPool::new();
+        let q = p.symbol("q", 1);
+        let mut a = Assumptions::new();
+        assert_eq!(a.check(&p, q), Truth::Unknown);
+        a.assume(&p, q, true).unwrap();
+        assert_eq!(a.check(&p, q), Truth::True);
+        let nq = p.not(q);
+        assert_eq!(a.check(&p, nq), Truth::False);
+        assert_eq!(a.assume(&p, nq, true), Err(Conflict));
+    }
+
+    #[test]
+    fn invalidate_atoms_drops_facts() {
+        let mut p = TermPool::new();
+        let l = p.uf("load", vec![], 32);
+        let z = p.constant(0, 32);
+        let eq = p.cmp(CmpKind::Eq, l, z);
+        let mut a = Assumptions::new();
+        a.assume(&p, eq, true).unwrap();
+        assert_eq!(a.check(&p, eq), Truth::True);
+        a.invalidate_atoms(&[l]);
+        assert_eq!(a.check(&p, eq), Truth::Unknown);
+    }
+
+    #[test]
+    fn may_alias_logic() {
+        let mut p = TermPool::new();
+        let tid = p.symbol("tid.x", 32);
+        let base = p.symbol("base", 64);
+        let other = p.symbol("other", 64);
+        let a = addr(&mut p, base, tid, 4, 0);
+        let b = addr(&mut p, base, tid, 4, 4);
+        assert!(!may_alias(&p, a, 4, b, 4)); // adjacent words
+        assert!(may_alias(&p, a, 4, a, 4)); // same word
+        assert!(may_alias(&p, a, 8, b, 4)); // 8-byte overlaps next word
+        let c = addr(&mut p, other, tid, 4, 0);
+        assert!(may_alias(&p, a, 4, c, 4)); // unknown distance
+    }
+}

@@ -1,0 +1,50 @@
+//! Small shared utilities: deterministic RNG and a property-test harness.
+//!
+//! The offline crate universe has no `rand`/`proptest`, so property-based
+//! tests run on a hand-rolled xorshift generator. Failures print the seed so
+//! a shrunk case can be replayed with `Rng::new(seed)`.
+
+pub mod rng;
+
+pub use rng::Rng;
+
+/// FNV-1a hasher — far cheaper than SipHash for the short register-name
+/// keys on the simulator/emulator hot paths (no DoS concern: inputs are
+/// our own PTX).
+#[derive(Default, Clone)]
+pub struct Fnv(u64);
+
+impl std::hash::Hasher for Fnv {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+    fn write(&mut self, bytes: &[u8]) {
+        let mut h = if self.0 == 0 { 0xcbf2_9ce4_8422_2325 } else { self.0 };
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        self.0 = h;
+    }
+}
+
+/// `BuildHasher` for [`Fnv`].
+pub type FnvBuild = std::hash::BuildHasherDefault<Fnv>;
+/// HashMap with FNV hashing.
+pub type FnvMap<K, V> = std::collections::HashMap<K, V, FnvBuild>;
+
+/// Run `f` for `cases` deterministic random cases; panic with the seed on
+/// the first failure. Poor man's proptest.
+pub fn check_cases(name: &str, cases: u64, mut f: impl FnMut(&mut Rng)) {
+    for case in 0..cases {
+        let seed = 0x9E37_79B9_7F4A_7C15u64
+            .wrapping_mul(case + 1)
+            .wrapping_add(0xD1B5_4A32_D192_ED03);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property `{name}` failed at case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}

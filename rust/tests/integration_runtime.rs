@@ -1,0 +1,105 @@
+//! Runtime integration: PJRT-executed Pallas/JAX artifacts vs the warp
+//! simulator running the generated PTX of the same stencils — the
+//! three-layer composition proof. Requires `make artifacts`.
+
+use ptxasw::runtime::Runtime;
+use ptxasw::sim::run;
+use ptxasw::suite::{by_name, workload};
+use ptxasw::util::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let d = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    d.join("manifest.txt").exists().then_some(d)
+}
+
+#[test]
+fn pjrt_executes_jacobi_artifact() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let mut rt = Runtime::open(dir).unwrap();
+    assert!(rt.names().contains(&"jacobi"));
+    let spec = rt.spec("jacobi").unwrap().clone();
+    let n = spec.args[0].elements();
+    let mut rng = Rng::new(11);
+    let x: Vec<f32> = (0..n).map(|_| rng.f32() * 4.0 - 2.0).collect();
+    let out = rt.run_f32("jacobi", &[&x]).unwrap();
+    assert_eq!(out.len(), n);
+    // halo ring is zero; interior is not
+    let (ny, nx) = (spec.args[0].dims[0], spec.args[0].dims[1]);
+    for i in 0..nx {
+        assert_eq!(out[i], 0.0);
+        assert_eq!(out[(ny - 1) * nx + i], 0.0);
+    }
+    assert!(out.iter().any(|&v| v != 0.0));
+}
+
+#[test]
+fn pjrt_matches_simulated_ptx_jacobi() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let mut rt = Runtime::open(dir).unwrap();
+    let dims = rt.spec("jacobi").unwrap().args[0].dims.clone();
+    let (ny, nx) = (dims[0], dims[1]);
+
+    // same input through both worlds
+    let b = by_name("jacobi").unwrap();
+    let w = workload(&b, nx, ny, 1, 123);
+    let input = w
+        .mem
+        .read_f32s(w.cfg.params[1], nx * ny)
+        .unwrap();
+
+    let pjrt_out = rt.run_f32("jacobi", &[&input]).unwrap();
+    let r = run(&w.kernel, &w.cfg, w.mem).unwrap();
+    let sim_out = r.mem.read_f32s(w.out_ptr, w.out_len).unwrap();
+
+    let mut max_err = 0f32;
+    for (a, b) in pjrt_out.iter().zip(&sim_out) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(
+        max_err < 1e-5,
+        "PJRT vs simulator mismatch: max abs err {max_err}"
+    );
+}
+
+#[test]
+fn tiled_and_plain_artifacts_agree() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let mut rt = Runtime::open(dir).unwrap();
+    let n = rt.spec("jacobi").unwrap().args[0].elements();
+    let mut rng = Rng::new(5);
+    let x: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+    let plain = rt.run_f32("jacobi", &[&x]).unwrap();
+    let tiled = rt.run_f32("jacobi_tiled", &[&x]).unwrap();
+    for (a, b) in plain.iter().zip(&tiled) {
+        assert!((a - b).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn scan_artifact_equals_four_applications() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let mut rt = Runtime::open(dir).unwrap();
+    let n = rt.spec("jacobi").unwrap().args[0].elements();
+    let mut rng = Rng::new(6);
+    let x: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+    let mut iterated = x.clone();
+    for _ in 0..4 {
+        iterated = rt.run_f32("jacobi", &[&iterated]).unwrap();
+    }
+    let scanned = rt.run_f32("jacobi_x4", &[&x]).unwrap();
+    for (a, b) in scanned.iter().zip(&iterated) {
+        assert!((a - b).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,164 @@
+//! Suite-level integration: the full pipeline (generate → emulate → detect
+//! → synthesize → simulate) over all 16 KernelGen benchmarks and the §8.5
+//! app kernels.
+//!
+//! Checks three levels:
+//!  1. Table 2 reproduction: shuffle/load counts and average deltas.
+//!  2. Simulation correctness: generated PTX matches the CPU reference
+//!     bit-exactly.
+//!  3. Semantics preservation: the PTXASW and UNIFORM variants stay
+//!     bit-exact after synthesis; NO LOAD / NO CORNER still run.
+
+use ptxasw::emu::emulate;
+use ptxasw::shuffle::{detect, synthesize, DetectOpts, Variant};
+use ptxasw::sim::run;
+use ptxasw::suite::{apps, suite, workload, Pattern};
+
+fn sizes_for(b: &ptxasw::suite::Benchmark) -> (usize, usize, usize) {
+    match &b.pattern {
+        Pattern::MatMul { .. } => (48, 6, 8),
+        Pattern::MatVec { .. } => (96, 1, 3),
+        _ if b.dims == 3 => (40, 10, 8),
+        _ => (96, 8, 1),
+    }
+}
+
+#[test]
+fn table2_shuffles_loads_deltas() {
+    let mut rows = Vec::new();
+    for b in suite() {
+        let k = ptxasw::suite::generate(&b);
+        let res = emulate(&k).unwrap_or_else(|e| panic!("{}: emulation failed: {e}", b.name));
+        let det = detect(&k, &res, DetectOpts::default());
+        rows.push((
+            b.name,
+            det.shuffle_count(),
+            det.total_global_loads,
+            det.avg_delta(),
+        ));
+        assert_eq!(
+            det.shuffle_count(),
+            b.expect_shuffles,
+            "{}: shuffles (got {:?})",
+            b.name,
+            det.chosen
+        );
+        assert_eq!(det.total_global_loads, b.expect_loads, "{}: loads", b.name);
+        match (det.avg_delta(), b.expect_delta) {
+            (None, None) => {}
+            (Some(got), Some(want)) => {
+                assert!(
+                    (got - want).abs() < 1e-6,
+                    "{}: delta {} != {}",
+                    b.name,
+                    got,
+                    want
+                );
+            }
+            (got, want) => panic!("{}: delta {got:?} vs {want:?}", b.name),
+        }
+    }
+    // sanity print for the harness
+    for (n, s, l, d) in rows {
+        eprintln!("{n:12} {s:3}/{l:3} delta={d:?}");
+    }
+}
+
+#[test]
+fn generated_kernels_match_cpu_reference() {
+    for b in suite() {
+        let (nx, ny, nz) = sizes_for(&b);
+        let w = workload(&b, nx, ny, nz, 42);
+        let r = run(&w.kernel, &w.cfg, w.mem).unwrap_or_else(|e| panic!("{}: {e}", b.name));
+        let got = r.mem.read_f32s(w.out_ptr, w.out_len).unwrap();
+        let diff = got
+            .iter()
+            .zip(&w.expected)
+            .enumerate()
+            .find(|(_, (a, b))| a.to_bits() != b.to_bits());
+        assert!(
+            diff.is_none(),
+            "{}: first mismatch at {:?}",
+            b.name,
+            diff.map(|(i, (a, e))| (i, *a, *e))
+        );
+    }
+}
+
+#[test]
+fn synthesized_variants_preserve_semantics() {
+    for b in suite() {
+        if b.expect_shuffles == 0 {
+            continue;
+        }
+        let (nx, ny, nz) = sizes_for(&b);
+        let k = ptxasw::suite::generate(&b);
+        let res = emulate(&k).unwrap();
+        let det = detect(&k, &res, DetectOpts::default());
+        for v in [Variant::Full, Variant::UniformBranch] {
+            let sk = synthesize(&k, &det, v);
+            let w = workload(&b, nx, ny, nz, 777);
+            let r =
+                run(&sk, &w.cfg, w.mem).unwrap_or_else(|e| panic!("{} {}: {e}", b.name, v.name()));
+            let got = r.mem.read_f32s(w.out_ptr, w.out_len).unwrap();
+            let bad = got
+                .iter()
+                .zip(&w.expected)
+                .filter(|(a, b)| a.to_bits() != b.to_bits())
+                .count();
+            assert_eq!(bad, 0, "{} {}: {bad} mismatches", b.name, v.name());
+        }
+        // perf variants run without faulting
+        for v in [Variant::NoLoad, Variant::NoCorner] {
+            let sk = synthesize(&k, &det, v);
+            let w = workload(&b, nx, ny, nz, 777);
+            run(&sk, &w.cfg, w.mem).unwrap_or_else(|e| panic!("{} {}: {e}", b.name, v.name()));
+        }
+    }
+}
+
+#[test]
+fn app_kernels_match_section85() {
+    for b in apps() {
+        let k = ptxasw::suite::generate(&b);
+        let res = emulate(&k).unwrap();
+        // §8.5 restricts synthesis to |N| ≤ 1
+        let det = detect(&k, &res, DetectOpts { max_abs_delta: 1, ..Default::default() });
+        assert_eq!(det.total_global_loads, b.expect_loads, "{}: loads", b.name);
+        assert_eq!(
+            det.shuffle_count(),
+            b.expect_shuffles,
+            "{}: shuffles",
+            b.name
+        );
+        if let Some(d) = b.expect_delta {
+            let got = det.avg_delta().unwrap();
+            assert!((got - d).abs() < 1e-6, "{}: |N| = {got}", b.name);
+        }
+    }
+}
+
+#[test]
+fn app_kernels_simulate_and_preserve() {
+    // the big rhs4th3fort kernel end-to-end with |N| ≤ 1 synthesis
+    let b = ptxasw::suite::apps::rhs4th3fort();
+    let k = ptxasw::suite::generate(&b);
+    let res = emulate(&k).unwrap();
+    let det = detect(&k, &res, DetectOpts { max_abs_delta: 1, ..Default::default() });
+    let sk = synthesize(&k, &det, Variant::Full);
+
+    let w = workload(&b, 40, 12, 12, 9);
+    let r = run(&k, &w.cfg, w.mem).unwrap();
+    let orig = r.mem.read_f32s(w.out_ptr, w.out_len).unwrap();
+    let exp_bad = orig
+        .iter()
+        .zip(&w.expected)
+        .filter(|(a, b)| a.to_bits() != b.to_bits())
+        .count();
+    assert_eq!(exp_bad, 0, "original vs CPU reference");
+
+    let w2 = workload(&b, 40, 12, 12, 9);
+    let r2 = run(&sk, &w2.cfg, w2.mem).unwrap();
+    let synth = r2.mem.read_f32s(w2.out_ptr, w2.out_len).unwrap();
+    assert_eq!(orig, synth, "synthesized vs original");
+}

@@ -1,0 +1,224 @@
+//! Validation-ladder rung 2 (DESIGN.md): the symbolic emulator and the
+//! concrete warp simulator implement the *same* PTX semantics.
+//!
+//! For random straight-line integer kernels, the value term the emulator
+//! derives for the final store — evaluated under a concrete assignment of
+//! parameters/thread ids, with load-UFs reading the same concrete memory —
+//! must equal what the simulator actually stored, lane by lane.
+//!
+//! Also: the shuffle-delta procedure agrees with brute force over
+//! candidate N on randomized affine addresses.
+
+use ptxasw::emu::emulate;
+use ptxasw::ptx::parser::parse_kernel;
+use ptxasw::sim::{run, Allocator, GlobalMem, SimConfig, GLOBAL_BASE};
+use ptxasw::sym::{eval, solve_delta, BvOp, SymId, TermPool, UfId};
+use ptxasw::util::{check_cases, Rng};
+
+/// Build a random straight-line kernel over s32/u32 arithmetic seeded from
+/// two scalar params and the thread id; stores one result per thread.
+fn random_kernel(rng: &mut Rng, nops: usize) -> String {
+    let ops32 = [
+        ("add.s32", 2),
+        ("sub.s32", 2),
+        ("mul.lo.s32", 2),
+        ("and.b32", 2),
+        ("or.b32", 2),
+        ("xor.b32", 2),
+        ("min.s32", 2),
+        ("max.s32", 2),
+        ("min.u32", 2),
+        ("max.u32", 2),
+        ("shr.s32", 2),
+        ("shr.u32", 2),
+        ("not.b32", 1),
+        ("neg.s32", 1),
+    ];
+    // registers %r1..%r4 hold live values; each op overwrites a random one
+    let mut body = String::new();
+    for _ in 0..nops {
+        let (op, arity) = *rng.pick(&ops32);
+        let dst = 1 + rng.below(4);
+        let a = 1 + rng.below(4);
+        if arity == 2 {
+            // second operand: register or small immediate (shift-safe)
+            if rng.bool() {
+                let b = 1 + rng.below(4);
+                body.push_str(&format!("{op} %r{dst}, %r{a}, %r{b};\n"));
+            } else {
+                let imm = if op.starts_with("shr") {
+                    rng.below(31) as i64
+                } else {
+                    rng.range_i64(-64, 64)
+                };
+                body.push_str(&format!("{op} %r{dst}, %r{a}, {imm};\n"));
+            }
+        } else {
+            body.push_str(&format!("{op} %r{dst}, %r{a};\n"));
+        }
+        // occasionally a mad / selp / setp tangle
+        if rng.below(5) == 0 {
+            let c = 1 + rng.below(4);
+            body.push_str(&format!(
+                "mad.lo.s32 %r{dst}, %r{a}, %r{c}, %r{};\n",
+                1 + rng.below(4)
+            ));
+        }
+        if rng.below(6) == 0 {
+            let x = 1 + rng.below(4);
+            let y = 1 + rng.below(4);
+            body.push_str(&format!("setp.lt.s32 %p1, %r{x}, %r{y};\n"));
+            body.push_str(&format!("selp.b32 %r{dst}, %r{x}, %r{y}, %p1;\n"));
+        }
+    }
+    format!(
+        r#"
+.visible .entry rprog(.param .u64 out, .param .u64 a, .param .u32 s0, .param .u32 s1){{
+.reg .b32 %r<8>; .reg .b64 %rd<8>; .reg .pred %p<2>;
+ld.param.u64 %rd1, [out];
+ld.param.u64 %rd2, [a];
+ld.param.u32 %r1, [s0];
+ld.param.u32 %r2, [s1];
+cvta.to.global.u64 %rd3, %rd2;
+cvta.to.global.u64 %rd4, %rd1;
+mov.u32 %r3, %tid.x;
+mul.wide.u32 %rd5, %r3, 4;
+add.s64 %rd6, %rd3, %rd5;
+ld.global.b32 %r4, [%rd6];
+{body}add.s64 %rd7, %rd4, %rd5;
+st.global.b32 [%rd7], %r1;
+ret;
+}}
+"#
+    )
+}
+
+#[test]
+fn prop_symbolic_matches_concrete() {
+    check_cases("symbolic-vs-concrete", 60, |rng: &mut Rng| {
+        let nops = 4 + rng.below(8) as usize;
+        let src = random_kernel(rng, nops);
+        let k = parse_kernel(&src).unwrap_or_else(|e| panic!("{e}\n{src}"));
+
+        // concrete run: 1 warp
+        let mut mem = GlobalMem::new(1 << 12);
+        let mut alloc = Allocator::new(&mem);
+        let out = alloc.alloc(4 * 32);
+        let a = alloc.alloc(4 * 32);
+        let avals: Vec<u32> = (0..32).map(|_| rng.next_u32()).collect();
+        mem.write_u32s(a, &avals).unwrap();
+        let s0 = rng.next_u32() as u64;
+        let s1 = rng.next_u32() as u64;
+        let cfg = SimConfig::new(1, 32, vec![out, a, s0, s1]);
+        let r = run(&k, &cfg, mem).unwrap();
+        let got = r.mem.read_u32s(out, 32).unwrap();
+
+        // symbolic run: single flow, take the store's value term
+        let res = emulate(&k).unwrap();
+        assert_eq!(res.flows.len(), 1, "straight-line kernel");
+        let store = res.flows[0]
+            .trace
+            .stores
+            .last()
+            .expect("one store recorded");
+        let value_term = store.value;
+
+        // evaluate the term for each lane under the concrete assignment
+        let pool: &TermPool = &res.pool;
+        for lane in 0..32u64 {
+            let sym_val = |s: SymId| -> u64 {
+                match pool.sym_name(s) {
+                    "tid.x" => lane,
+                    "ntid.x" => 32,
+                    "ctaid.x" => 0,
+                    "nctaid.x" => 1,
+                    "param.out" => out,
+                    "param.a" => a,
+                    "param.s0" => s0,
+                    "param.s1" => s1,
+                    other => panic!("unexpected symbol `{other}`"),
+                }
+            };
+            let uf_val = |f: UfId, args: &[u64]| -> u64 {
+                let name = pool.uf_name(f);
+                assert!(
+                    name.starts_with("load.global"),
+                    "unexpected UF `{name}`"
+                );
+                let addr = args[0];
+                assert!(addr >= GLOBAL_BASE);
+                // read the ORIGINAL memory (loads precede the store)
+                let idx = ((addr - a) / 4) as usize;
+                avals[idx] as u64
+            };
+            let want = eval(pool, value_term, &sym_val, &uf_val) as u32;
+            assert_eq!(
+                got[lane as usize], want,
+                "lane {lane} diverged\n{src}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_delta_solver_matches_brute_force() {
+    check_cases("delta-brute-force", 200, |rng: &mut Rng| {
+        let mut p = TermPool::new();
+        let tid = p.symbol("tid.x", 32);
+        let base = p.symbol("base", 64);
+        let other = p.symbol("other", 64);
+
+        // two random affine addresses over {base|other} + stride*tid + off
+        let mk = |p: &mut TermPool, use_other: bool, stride: i64, off: i64| {
+            let b = if use_other { other } else { base };
+            let tw = p.sext(tid, 64);
+            let c = p.constant(stride as u64, 64);
+            let s = p.bin(BvOp::Mul, tw, c);
+            let t = p.bin(BvOp::Add, b, s);
+            let o = p.constant(off as u64, 64);
+            p.bin(BvOp::Add, t, o)
+        };
+        let stride_a = *rng.pick(&[4i64, 8, 4, 4]);
+        let stride_b = if rng.below(8) == 0 { 8 } else { stride_a };
+        let off_a = rng.range_i64(-40, 40) * 4;
+        let off_b = rng.range_i64(-40, 40) * 4;
+        let cross = rng.below(8) == 0;
+        let a_addr = mk(&mut p, false, stride_a, off_a);
+        let b_addr = mk(&mut p, cross, stride_b, off_b);
+
+        let got = solve_delta(&p, a_addr, b_addr, tid);
+
+        // brute force: N valid iff A(t+N) == B(t) for all t, checked by
+        // evaluating both terms under several random assignments
+        let mut brute: Option<i64> = None;
+        'n: for n in -31i64..=31 {
+            for _ in 0..4 {
+                let base_v = rng.next_u64() & 0xFFFF_FFF0;
+                let other_v = rng.next_u64() & 0xFFFF_FFF0;
+                let t = rng.below(1 << 20) as u64;
+                let sv_a = |s: SymId| match p.sym_name(s) {
+                    "tid.x" => t.wrapping_add(n as u64),
+                    "base" => base_v,
+                    "other" => other_v,
+                    _ => unreachable!(),
+                };
+                let sv_b = |s: SymId| match p.sym_name(s) {
+                    "tid.x" => t,
+                    "base" => base_v,
+                    "other" => other_v,
+                    _ => unreachable!(),
+                };
+                let uf = |_: UfId, _: &[u64]| 0u64;
+                if eval(&p, a_addr, &sv_a, &uf) != eval(&p, b_addr, &sv_b, &uf) {
+                    continue 'n;
+                }
+            }
+            brute = Some(n);
+            break;
+        }
+        assert_eq!(
+            got, brute,
+            "strides {stride_a}/{stride_b} offs {off_a}/{off_b} cross {cross}"
+        );
+    });
+}
