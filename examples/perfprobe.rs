@@ -1,29 +1,77 @@
+//! Performance probe: simulator throughput, analysis throughput through
+//! the staged pipeline, and the artifact cache's cold→warm behaviour.
+//!
+//!     cargo run --release --example perfprobe [--stats]
+
+use ptxasw::coordinator::report;
+use ptxasw::pipeline::Pipeline;
+use ptxasw::shuffle::DetectOpts;
 use ptxasw::sim::run;
-use ptxasw::suite::{by_name, workload, generate};
-use ptxasw::emu::emulate;
-use ptxasw::shuffle::{detect, DetectOpts};
+use ptxasw::suite::{by_name, generate, workload};
 use std::time::Instant;
 
 fn main() {
+    let want_stats = std::env::args().any(|a| a == "--stats");
+
     // simulator throughput on tricubic (largest kernel)
     let b = by_name("tricubic").unwrap();
     let w = workload(&b, 64, 16, 12, 1);
     let t0 = Instant::now();
     let r = run(&w.kernel, &w.cfg, w.mem).unwrap();
     let dt = t0.elapsed().as_secs_f64();
-    println!("sim: {} warp-instr in {:.3}s = {:.2} M warp-instr/s ({:.2} M thread-instr/s)",
-        r.stats.warp_instructions, dt,
+    println!(
+        "sim: {} warp-instr in {:.3}s = {:.2} M warp-instr/s ({:.2} M thread-instr/s)",
+        r.stats.warp_instructions,
+        dt,
         r.stats.warp_instructions as f64 / dt / 1e6,
-        r.stats.thread_instructions as f64 / dt / 1e6);
-    // analysis throughput across whole suite
+        r.stats.thread_instructions as f64 / dt / 1e6
+    );
+
+    // analysis throughput across the whole suite, via the pass manager.
+    // Hash once via intake so the timed loops measure emulate/detect and
+    // cache service, not repeated fingerprinting.
+    let p = Pipeline::new();
+    let parsed: Vec<_> = ptxasw::suite::suite()
+        .iter()
+        .map(|b| p.intake(generate(b)))
+        .collect();
     let t1 = Instant::now();
     let mut total_terms = 0usize;
-    for b in ptxasw::suite::suite() {
-        let k = generate(&b);
-        let res = emulate(&k).unwrap();
-        total_terms += res.pool.len();
-        let _ = detect(&k, &res, DetectOpts::default());
+    for pa in &parsed {
+        let emu = p.emulated_hashed(&pa.kernel, pa.hash).unwrap();
+        total_terms += emu.result.pool.len();
+        let _ = p
+            .detected_hashed(&pa.kernel, pa.hash, DetectOpts::default())
+            .unwrap();
     }
-    println!("analysis: full 16-benchmark suite in {:.1}ms ({} terms interned)",
-        t1.elapsed().as_secs_f64()*1e3, total_terms);
+    let cold = t1.elapsed();
+    println!(
+        "analysis (cold): full 16-benchmark suite in {:.1}ms ({} terms interned)",
+        cold.as_secs_f64() * 1e3,
+        total_terms
+    );
+
+    // warm pass: every artifact is served from the content-addressed cache
+    let before = p.stats().cache;
+    let t2 = Instant::now();
+    for pa in &parsed {
+        let _ = p
+            .detected_hashed(&pa.kernel, pa.hash, DetectOpts::default())
+            .unwrap();
+    }
+    let warm = t2.elapsed();
+    let after = p.stats().cache;
+    let (hits, misses) = (
+        after.hits() - before.hits(),
+        after.misses() - before.misses(),
+    );
+    println!(
+        "analysis (warm): {:.3}ms — {hits}/{} lookups served from cache",
+        warm.as_secs_f64() * 1e3,
+        hits + misses
+    );
+
+    if want_stats {
+        println!("{}", report::pipeline_stats(&p.stats()));
+    }
 }

@@ -43,7 +43,7 @@ impl Args {
 
     /// Known boolean flags (never consume a value).
     fn is_flag(key: &str) -> bool {
-        matches!(key, "help" | "report" | "list" | "quiet" | "force")
+        matches!(key, "help" | "report" | "list" | "quiet" | "force" | "stats")
     }
 
     pub fn flag(&self, name: &str) -> bool {
@@ -86,6 +86,14 @@ mod tests {
         assert_eq!(a.opt("max-delta"), Some("3"));
         assert!(a.flag("report"));
         assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn stats_is_a_bare_flag() {
+        // `--stats` must not swallow the following positional
+        let a = parse("suite --stats jacobi");
+        assert!(a.flag("stats"));
+        assert_eq!(a.positional, vec!["jacobi"]);
     }
 
     #[test]

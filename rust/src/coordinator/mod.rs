@@ -1,22 +1,61 @@
-//! L3 coordinator: the full PTXASW pipeline over many kernels, fanned out
-//! on a `std::thread` pool (the offline crate universe has no tokio; the
-//! pipeline is CPU-bound anyway).
+//! L3 coordinator: schedules the staged PTXASW pipeline over many kernels
+//! on a work-stealing task pool.
 //!
-//! Per kernel: generate/parse → symbolically emulate → detect → synthesize
-//! every requested variant → validate on the warp simulator → score with
-//! the per-architecture latency model. The result set carries everything
-//! the Table 2 / Figure 2 / Figure 3 harnesses print.
+//! # Pipeline architecture
+//!
+//! Work is expressed against the [`crate::pipeline`] pass manager, whose
+//! typed artifact chain is
+//!
+//! ```text
+//! Parsed → Emulated → Detected → Synthesized → Validated → Scored
+//! ```
+//!
+//! The first four stages are content-addressed by a stable kernel hash
+//! and cached in the pipeline's [`crate::pipeline::ArtifactCache`]: one
+//! emulation and one detection are computed per unique kernel no matter
+//! how many synthesis variants, architectures, or repeated suite runs
+//! consume them. Emulations share a single
+//! [`crate::sym::SessionInterner`], so symbol/UF names are interned once
+//! per session rather than once per kernel.
+//!
+//! # Scheduling
+//!
+//! A suite run is decomposed into (benchmark × variant × arch) tasks on a
+//! [`queue::WorkQueue`] (global injector + per-worker deques with
+//! stealing), rather than the old one-task-per-benchmark pool:
+//!
+//! * `Analyze(bench)` — generate/parse, emulate + detect (through the
+//!   cache), simulate the baseline; spawns the per-variant tasks and the
+//!   baseline's per-arch scoring tasks.
+//! * `Variant(bench, variant)` — synthesize (cache), simulate, check
+//!   bit-exactness against the baseline output; spawns per-arch scoring.
+//! * `Score(bench, slot, arch)` — run the latency model for one kernel
+//!   version on one architecture.
+//!
+//! Each benchmark's pieces are counted down; the task that retires the
+//! last piece assembles the [`BenchResult`]. Results come back in input
+//! order, identical to a serial run (verified by tests). Cache hit/miss
+//! counters and per-stage wall time are exposed via
+//! [`crate::pipeline::Pipeline::stats`] and rendered by
+//! [`report::pipeline_stats`] (the CLI `--stats` flag).
 
+pub mod queue;
 pub mod report;
 
-use crate::emu::{emulate, EmuError};
-use crate::perf::{model, Arch, PerfReport};
+use crate::emu::EmuError;
+use crate::perf::{Arch, PerfReport};
+use crate::pipeline::{stages, Pipeline};
 use crate::ptx::ast::Kernel;
-use crate::shuffle::{detect, synthesize, DetectOpts, Detection, Variant};
-use crate::sim::{run, SimError, SimStats};
+use crate::ptx::printer::ContentHash;
+use crate::shuffle::{DetectOpts, Detection, Variant};
+use crate::sim::{SimError, SimStats};
 use crate::suite::{workload, Benchmark, Pattern};
-use std::sync::Mutex;
-use std::time::{Duration, Instant};
+use queue::WorkQueue;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+pub use crate::pipeline::PipelineStats;
 
 /// Pipeline configuration.
 #[derive(Debug, Clone)]
@@ -25,7 +64,7 @@ pub struct PipelineConfig {
     pub detect: DetectOpts,
     pub archs: Vec<&'static Arch>,
     pub threads: usize,
-    /// Simulation sizes (nx, ny, nz) for 3D; 2D benchmarks use (nx, ny, 1).
+    /// Workload RNG seed (simulation sizes come from [`sim_sizes`]).
     pub seed: u64,
 }
 
@@ -73,12 +112,28 @@ impl BenchResult {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum PipelineError {
-    #[error("{0}: emulation failed: {1}")]
     Emu(String, EmuError),
-    #[error("{0}: simulation failed: {1}")]
     Sim(String, SimError),
+}
+
+impl std::fmt::Display for PipelineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PipelineError::Emu(name, e) => write!(f, "{name}: emulation failed: {e}"),
+            PipelineError::Sim(name, e) => write!(f, "{name}: simulation failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for PipelineError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            PipelineError::Emu(_, e) => Some(e),
+            PipelineError::Sim(_, e) => Some(e),
+        }
+    }
 }
 
 /// Simulation sizes per benchmark (small enough for CI, big enough to
@@ -92,101 +147,321 @@ pub fn sim_sizes(b: &Benchmark) -> (usize, usize, usize) {
     }
 }
 
-/// Run the pipeline for one benchmark.
+/// Run the pipeline for one benchmark on a fresh (private) pipeline.
 pub fn run_benchmark(b: &Benchmark, cfg: &PipelineConfig) -> Result<BenchResult, PipelineError> {
-    let kernel = crate::suite::generate(b);
-
-    let t0 = Instant::now();
-    let res = emulate(&kernel).map_err(|e| PipelineError::Emu(b.name.into(), e))?;
-    let detection = detect(&kernel, &res, cfg.detect);
-    let analysis_time = t0.elapsed();
-
-    let (nx, ny, nz) = sim_sizes(b);
-    let sim_one = |k: &Kernel| -> Result<(Vec<f32>, SimStats, Vec<PerfReport>), PipelineError> {
-        let mut w = workload(b, nx, ny, nz, cfg.seed);
-        w.cfg.record_trace = true;
-        let r = run(k, &w.cfg, w.mem).map_err(|e| PipelineError::Sim(b.name.into(), e))?;
-        let out = r
-            .mem
-            .read_f32s(w.out_ptr, w.out_len)
-            .map_err(|e| PipelineError::Sim(b.name.into(), SimError::Mem(e)))?;
-        let reports = cfg
-            .archs
-            .iter()
-            .map(|a| model(k, &r.trace, a))
-            .collect();
-        Ok((out, r.stats, reports))
-    };
-
-    let (base_out, base_stats, base_reports) = sim_one(&kernel)?;
-    let baseline = RunOutcome {
-        sim_stats: base_stats,
-        reports: base_reports,
-        valid: None,
-    };
-
-    let mut variants = Vec::new();
-    for &v in &cfg.variants {
-        let sk = synthesize(&kernel, &detection, v);
-        let (out, stats, reports) = sim_one(&sk)?;
-        let valid = out
-            .iter()
-            .zip(&base_out)
-            .all(|(a, b)| a.to_bits() == b.to_bits());
-        variants.push((
-            v,
-            RunOutcome {
-                sim_stats: stats,
-                reports,
-                valid: Some(valid),
-            },
-        ));
-    }
-
-    Ok(BenchResult {
-        name: b.name.to_string(),
-        lang: b.lang.short(),
-        detection,
-        analysis_time,
-        baseline,
-        variants,
-        kernel,
-    })
+    run_benchmark_on(&Pipeline::new(), b, cfg)
 }
 
-/// Run many benchmarks on a thread pool; results come back in input order.
+/// Run one benchmark against a shared pipeline (cache reuse across calls).
+pub fn run_benchmark_on(
+    p: &Pipeline,
+    b: &Benchmark,
+    cfg: &PipelineConfig,
+) -> Result<BenchResult, PipelineError> {
+    run_suite_on(p, std::slice::from_ref(b), cfg)
+        .pop()
+        .expect("one result for one benchmark")
+}
+
+/// Run many benchmarks on a fresh pipeline; results in input order.
 pub fn run_suite(
     benches: &[Benchmark],
     cfg: &PipelineConfig,
 ) -> Vec<Result<BenchResult, PipelineError>> {
-    let next = Mutex::new(0usize);
-    let results: Mutex<Vec<Option<Result<BenchResult, PipelineError>>>> =
-        Mutex::new((0..benches.len()).map(|_| None).collect());
+    run_suite_on(&Pipeline::new(), benches, cfg)
+}
 
+/// Run many benchmarks against a shared pipeline on the work-stealing
+/// pool; results come back in input order, bit-identical to a serial run.
+pub fn run_suite_on(
+    p: &Pipeline,
+    benches: &[Benchmark],
+    cfg: &PipelineConfig,
+) -> Vec<Result<BenchResult, PipelineError>> {
+    let nvar = cfg.variants.len();
+    let narch = cfg.archs.len();
+    // pieces per benchmark: analyze+baseline, baseline scores, and per
+    // variant one simulation plus its scores
+    let pieces = 1 + narch + nvar * (1 + narch);
+    let workers = cfg.threads.max(1);
+
+    let run = SuiteRun {
+        p,
+        cfg,
+        benches,
+        cells: benches
+            .iter()
+            .map(|_| BenchCell::new(nvar, narch, pieces))
+            .collect(),
+        results: Mutex::new((0..benches.len()).map(|_| None).collect()),
+        queue: WorkQueue::new(workers),
+    };
+    for bi in 0..benches.len() {
+        run.queue.push(Task::Analyze { bi });
+    }
+    let r = &run;
     std::thread::scope(|s| {
-        for _ in 0..cfg.threads.max(1).min(benches.len().max(1)) {
-            s.spawn(|| loop {
-                let i = {
-                    let mut n = next.lock().unwrap();
-                    if *n >= benches.len() {
-                        return;
-                    }
-                    let i = *n;
-                    *n += 1;
-                    i
-                };
-                let r = run_benchmark(&benches[i], cfg);
-                results.lock().unwrap()[i] = Some(r);
+        for w in 0..r.queue.workers() {
+            s.spawn(move || {
+                while let Some(t) = r.queue.pop(w) {
+                    r.exec(w, t);
+                    r.queue.retire();
+                }
             });
         }
     });
-
-    results
+    run.results
         .into_inner()
         .unwrap()
         .into_iter()
-        .map(|o| o.expect("worker completed"))
+        .map(|o| o.expect("benchmark completed"))
         .collect()
+}
+
+/// One schedulable unit; `slot` 0 is the baseline, `1 + vi` a variant.
+#[derive(Debug, Clone, Copy)]
+enum Task {
+    Analyze { bi: usize },
+    Variant { bi: usize, vi: usize },
+    Score { bi: usize, slot: usize, ai: usize },
+}
+
+/// Per-version assembly cell (baseline or one variant).
+struct SlotCell {
+    kernel: Mutex<Option<Arc<Kernel>>>,
+    validated: Mutex<Option<Arc<stages::Validated>>>,
+    reports: Mutex<Vec<Option<PerfReport>>>,
+}
+
+impl SlotCell {
+    fn new(narch: usize) -> SlotCell {
+        SlotCell {
+            kernel: Mutex::new(None),
+            validated: Mutex::new(None),
+            reports: Mutex::new((0..narch).map(|_| None).collect()),
+        }
+    }
+}
+
+/// Per-benchmark assembly cell: tasks fill it, the last piece finalizes.
+struct BenchCell {
+    hash: Mutex<Option<ContentHash>>,
+    detection: Mutex<Option<Detection>>,
+    analysis_time: Mutex<Duration>,
+    /// `slots[0]` = baseline, `slots[1 + vi]` = variant `vi`.
+    slots: Vec<SlotCell>,
+    error: Mutex<Option<PipelineError>>,
+    /// Total pieces this benchmark decomposes into — the single source of
+    /// truth a failing analyze task retires wholesale.
+    pieces: usize,
+    remaining: AtomicUsize,
+}
+
+impl BenchCell {
+    fn new(nvar: usize, narch: usize, pieces: usize) -> BenchCell {
+        BenchCell {
+            hash: Mutex::new(None),
+            detection: Mutex::new(None),
+            analysis_time: Mutex::new(Duration::ZERO),
+            slots: (0..1 + nvar).map(|_| SlotCell::new(narch)).collect(),
+            error: Mutex::new(None),
+            pieces,
+            remaining: AtomicUsize::new(pieces),
+        }
+    }
+}
+
+type ResultCells = Mutex<Vec<Option<Result<BenchResult, PipelineError>>>>;
+
+struct SuiteRun<'a> {
+    p: &'a Pipeline,
+    cfg: &'a PipelineConfig,
+    benches: &'a [Benchmark],
+    cells: Vec<BenchCell>,
+    results: ResultCells,
+    queue: WorkQueue<Task>,
+}
+
+impl SuiteRun<'_> {
+    fn exec(&self, w: usize, task: Task) {
+        match task {
+            Task::Analyze { bi } => self.exec_analyze(w, bi),
+            Task::Variant { bi, vi } => self.exec_variant(w, bi, vi),
+            Task::Score { bi, slot, ai } => self.exec_score(bi, slot, ai),
+        }
+    }
+
+    fn exec_analyze(&self, w: usize, bi: usize) {
+        let b = &self.benches[bi];
+        let cell = &self.cells[bi];
+        let nvar = self.cfg.variants.len();
+        let narch = self.cfg.archs.len();
+        let all_pieces = cell.pieces;
+
+        let parsed = self.p.intake(crate::suite::generate(b));
+        let det = match self.p.detected_hashed(&parsed.kernel, parsed.hash, self.cfg.detect) {
+            Ok(d) => d,
+            Err(e) => {
+                return self.fail(bi, all_pieces, PipelineError::Emu(b.name.into(), e));
+            }
+        };
+        *cell.hash.lock().unwrap() = Some(parsed.hash);
+        *cell.detection.lock().unwrap() = Some(det.detection.clone());
+        *cell.analysis_time.lock().unwrap() = det.analysis_time();
+
+        let (nx, ny, nz) = sim_sizes(b);
+        let wl = workload(b, nx, ny, nz, self.cfg.seed);
+        let v = match stages::validate(self.p, &parsed.kernel, wl, None) {
+            Ok(v) => v,
+            Err(e) => {
+                return self.fail(bi, all_pieces, PipelineError::Sim(b.name.into(), e));
+            }
+        };
+        *cell.slots[0].kernel.lock().unwrap() = Some(parsed.kernel.clone());
+        *cell.slots[0].validated.lock().unwrap() = Some(Arc::new(v));
+
+        for ai in 0..narch {
+            self.queue.push_local(w, Task::Score { bi, slot: 0, ai });
+        }
+        for vi in 0..nvar {
+            self.queue.push_local(w, Task::Variant { bi, vi });
+        }
+        self.retire_pieces(bi, 1);
+    }
+
+    fn exec_variant(&self, w: usize, bi: usize, vi: usize) {
+        let b = &self.benches[bi];
+        let cell = &self.cells[bi];
+        let narch = self.cfg.archs.len();
+        let variant = self.cfg.variants[vi];
+
+        let kernel = cell.slots[0].kernel.lock().unwrap().clone().expect("baseline kernel set");
+        let hash = cell.hash.lock().unwrap().expect("hash set");
+        // synthesis goes through the cache: the detection (and through it
+        // the single emulation) is a guaranteed hit here
+        let synth = match self
+            .p
+            .synthesized_hashed(&kernel, hash, self.cfg.detect, variant)
+        {
+            Ok(s) => s,
+            Err(e) => {
+                return self.fail(bi, 1 + narch, PipelineError::Emu(b.name.into(), e));
+            }
+        };
+        let baseline = cell.slots[0]
+            .validated
+            .lock()
+            .unwrap()
+            .clone()
+            .expect("baseline simulated");
+        let (nx, ny, nz) = sim_sizes(b);
+        let wl = workload(b, nx, ny, nz, self.cfg.seed);
+        let v = match stages::validate(self.p, &synth.kernel, wl, Some(&baseline.out)) {
+            Ok(v) => v,
+            Err(e) => {
+                return self.fail(bi, 1 + narch, PipelineError::Sim(b.name.into(), e));
+            }
+        };
+        let slot = &cell.slots[1 + vi];
+        *slot.kernel.lock().unwrap() = Some(synth.kernel.clone());
+        *slot.validated.lock().unwrap() = Some(Arc::new(v));
+        for ai in 0..narch {
+            self.queue.push_local(
+                w,
+                Task::Score {
+                    bi,
+                    slot: 1 + vi,
+                    ai,
+                },
+            );
+        }
+        self.retire_pieces(bi, 1);
+    }
+
+    fn exec_score(&self, bi: usize, slot: usize, ai: usize) {
+        let sc = &self.cells[bi].slots[slot];
+        let kernel = sc.kernel.lock().unwrap().clone().expect("slot kernel set");
+        let validated = sc.validated.lock().unwrap().clone().expect("slot simulated");
+        let rep = stages::score(self.p, &kernel, &validated, self.cfg.archs[ai]);
+        sc.reports.lock().unwrap()[ai] = Some(rep);
+        self.retire_pieces(bi, 1);
+    }
+
+    /// Record the first error and retire the pieces the failed task owned
+    /// (its own plus every child it will now never spawn).
+    fn fail(&self, bi: usize, pieces: usize, err: PipelineError) {
+        {
+            let mut e = self.cells[bi].error.lock().unwrap();
+            if e.is_none() {
+                *e = Some(err);
+            }
+        }
+        self.retire_pieces(bi, pieces);
+    }
+
+    fn retire_pieces(&self, bi: usize, n: usize) {
+        if self.cells[bi].remaining.fetch_sub(n, Ordering::SeqCst) == n {
+            self.finalize(bi);
+        }
+    }
+
+    /// All pieces retired: assemble the [`BenchResult`] (or the error).
+    fn finalize(&self, bi: usize) {
+        let b = &self.benches[bi];
+        let cell = &self.cells[bi];
+        let res = if let Some(err) = cell.error.lock().unwrap().take() {
+            Err(err)
+        } else {
+            let baseline = take_outcome(&cell.slots[0]);
+            let variants = self
+                .cfg
+                .variants
+                .iter()
+                .enumerate()
+                .map(|(vi, &v)| (v, take_outcome(&cell.slots[1 + vi])))
+                .collect();
+            let kernel = (*cell.slots[0]
+                .kernel
+                .lock()
+                .unwrap()
+                .clone()
+                .expect("baseline kernel set"))
+            .clone();
+            Ok(BenchResult {
+                name: b.name.to_string(),
+                lang: b.lang.short(),
+                detection: cell.detection.lock().unwrap().take().expect("detection set"),
+                analysis_time: *cell.analysis_time.lock().unwrap(),
+                baseline,
+                variants,
+                kernel,
+            })
+        };
+        self.results.lock().unwrap()[bi] = Some(res);
+    }
+}
+
+fn take_outcome(slot: &SlotCell) -> RunOutcome {
+    let v = slot
+        .validated
+        .lock()
+        .unwrap()
+        .take()
+        .expect("slot simulated");
+    let scored = stages::Scored {
+        reports: slot
+            .reports
+            .lock()
+            .unwrap()
+            .iter_mut()
+            .map(|r| r.take().expect("slot scored"))
+            .collect(),
+    };
+    RunOutcome {
+        sim_stats: v.stats,
+        reports: scored.reports,
+        valid: v.valid,
+    }
 }
 
 #[cfg(test)]
@@ -222,21 +497,84 @@ mod tests {
         }
     }
 
+    /// The work-stealing pool must produce results identical to a serial
+    /// run — same order, same detections, same validity, bit-identical
+    /// modelled cycles.
     #[test]
     fn thread_pool_matches_serial() {
+        let benches: Vec<_> = ["vecadd", "gradient", "jacobi"]
+            .iter()
+            .map(|n| by_name(n).unwrap())
+            .collect();
+        let serial_cfg = PipelineConfig {
+            threads: 1,
+            ..PipelineConfig::default()
+        };
+        let par_cfg = PipelineConfig {
+            threads: 4,
+            ..serial_cfg.clone()
+        };
+
+        let serial = run_suite(&benches, &serial_cfg);
+        let parallel = run_suite(&benches, &par_cfg);
+        assert_eq!(serial.len(), parallel.len());
+        for (s, p) in serial.iter().zip(&parallel) {
+            let (s, p) = (s.as_ref().unwrap(), p.as_ref().unwrap());
+            assert_eq!(s.name, p.name);
+            assert_eq!(s.detection.chosen, p.detection.chosen);
+            assert_eq!(s.detection.total_global_loads, p.detection.total_global_loads);
+            assert_eq!(s.baseline.reports.len(), p.baseline.reports.len());
+            for (sv, pv) in s.variants.iter().zip(&p.variants) {
+                assert_eq!(sv.0, pv.0);
+                assert_eq!(sv.1.valid, pv.1.valid);
+                for (sr, pr) in sv.1.reports.iter().zip(&pv.1.reports) {
+                    assert_eq!(
+                        sr.effective_cycles.to_bits(),
+                        pr.effective_cycles.to_bits(),
+                        "{}: modelled cycles diverged between serial and parallel",
+                        s.name
+                    );
+                }
+            }
+        }
+        // original expectations
+        assert_eq!(serial[0].as_ref().unwrap().detection.shuffle_count(), 0);
+        assert_eq!(serial[1].as_ref().unwrap().detection.shuffle_count(), 1);
+    }
+
+    /// Acceptance: one emulation per unique kernel, ≥ 1 cache hit per
+    /// synthesized variant, and a second suite run over the same pipeline
+    /// is served entirely from the cache.
+    #[test]
+    fn suite_emulates_each_unique_kernel_once() {
         let benches: Vec<_> = ["vecadd", "gradient"]
             .iter()
             .map(|n| by_name(n).unwrap())
             .collect();
-        let mut cfg = PipelineConfig::default();
-        cfg.threads = 2;
-        let rs = run_suite(&benches, &cfg);
-        assert_eq!(rs.len(), 2);
-        let a = rs[0].as_ref().unwrap();
-        let b = rs[1].as_ref().unwrap();
-        assert_eq!(a.name, "vecadd");
-        assert_eq!(b.name, "gradient");
-        assert_eq!(a.detection.shuffle_count(), 0);
-        assert_eq!(b.detection.shuffle_count(), 1);
+        let cfg = PipelineConfig::default();
+        let nvar = cfg.variants.len() as u64;
+        let p = Pipeline::new();
+
+        let first = run_suite_on(&p, &benches, &cfg);
+        assert!(first.iter().all(|r| r.is_ok()));
+        let s1 = p.stats().cache;
+        assert_eq!(s1.emulate_misses, 2, "one emulation per unique kernel");
+        assert_eq!(s1.detect_misses, 2);
+        assert!(
+            s1.detect_hits >= nvar * 2,
+            "each synthesized variant must hit the cached detection \
+             (hits {}, want ≥ {})",
+            s1.detect_hits,
+            nvar * 2
+        );
+
+        let second = run_suite_on(&p, &benches, &cfg);
+        let s2 = p.stats().cache;
+        assert_eq!(s2.emulate_misses, 2, "re-runs must not re-emulate");
+        assert_eq!(s2.synth_misses, s1.synth_misses, "re-runs must not re-synthesize");
+        for (a, b) in first.iter().zip(&second) {
+            let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+            assert_eq!(a.detection.chosen, b.detection.chosen);
+        }
     }
 }

@@ -91,6 +91,66 @@ pub fn figure3(r: &BenchResult, archs: &[&Arch]) -> String {
     s
 }
 
+/// `--stats` report: cache hit rates per artifact family and per-stage
+/// wall time for a pipeline session.
+pub fn pipeline_stats(s: &crate::pipeline::PipelineStats) -> String {
+    use crate::pipeline::STAGES;
+    let mut out = String::new();
+    writeln!(out, "== pipeline stats ==").unwrap();
+    writeln!(
+        out,
+        "{:<12} {:>8} {:>8} {:>9}",
+        "artifact", "hits", "misses", "hit-rate"
+    )
+    .unwrap();
+    let mut cache_row = |name: &str, hits: u64, misses: u64| {
+        let total = hits + misses;
+        let rate = if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
+        };
+        writeln!(
+            out,
+            "{name:<12} {hits:>8} {misses:>8} {:>8.1}%",
+            rate * 100.0
+        )
+        .unwrap();
+    };
+    cache_row("emulated", s.cache.emulate_hits, s.cache.emulate_misses);
+    cache_row("detected", s.cache.detect_hits, s.cache.detect_misses);
+    cache_row("synthesized", s.cache.synth_hits, s.cache.synth_misses);
+    writeln!(
+        out,
+        "overall hit rate: {:.1}% ({} hits / {} misses)",
+        s.cache.hit_rate() * 100.0,
+        s.cache.hits(),
+        s.cache.misses()
+    )
+    .unwrap();
+    writeln!(out).unwrap();
+    writeln!(out, "{:<12} {:>8} {:>12} {:>12}", "stage", "runs", "total", "mean").unwrap();
+    for stage in STAGES {
+        let runs = s.stage_count(stage);
+        let total = s.stage_time(stage);
+        let mean = if runs == 0 {
+            std::time::Duration::ZERO
+        } else {
+            total / runs as u32
+        };
+        writeln!(
+            out,
+            "{:<12} {:>8} {:>11.3?} {:>11.3?}",
+            stage.name(),
+            runs,
+            total,
+            mean
+        )
+        .unwrap();
+    }
+    out
+}
+
 /// One-line summary per benchmark/arch for logs.
 pub fn summary_line(r: &BenchResult, ai: usize) -> String {
     let f = r.speedup(Variant::Full, ai).unwrap_or(1.0);
@@ -124,5 +184,22 @@ mod tests {
         let f3 = figure3(&r, &cfg.archs);
         assert!(f3.contains("mem_dep"));
         assert!(!summary_line(&r, 0).is_empty());
+    }
+
+    #[test]
+    fn renders_pipeline_stats() {
+        let p = crate::pipeline::Pipeline::new();
+        let b = by_name("vecadd").unwrap();
+        let cfg = PipelineConfig::default();
+        crate::coordinator::run_benchmark_on(&p, &b, &cfg).unwrap();
+        let s = p.stats();
+        let text = pipeline_stats(&s);
+        assert!(text.contains("emulated"));
+        assert!(text.contains("synthesize"));
+        assert!(text.contains("hit-rate"));
+        // the suite ran, so emulate/validate/score all have runs
+        assert!(s.stage_count(crate::pipeline::Stage::Emulate) >= 1);
+        assert!(s.stage_count(crate::pipeline::Stage::Validate) >= 1);
+        assert!(s.stage_count(crate::pipeline::Stage::Score) >= 1);
     }
 }

@@ -14,11 +14,12 @@ pub mod induction;
 pub mod memtrace;
 
 use crate::ptx::ast::{Kernel, Op, Statement};
-use crate::sym::{Assumptions, TermId, TermPool, Truth};
+use crate::sym::{Assumptions, SessionInterner, TermId, TermPool, Truth};
 use env::{RegEnv, RegInterner};
 use induction::{Abstraction, KernelIndex};
 use memtrace::MemTrace;
 use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
 
 /// Safety limits for path exploration.
 #[derive(Debug, Clone, Copy)]
@@ -99,15 +100,24 @@ pub struct EmulationResult {
     pub stats: EmuStats,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug, Clone)]
 pub enum EmuError {
-    #[error("unknown branch target `{0}`")]
     UnknownLabel(String),
-    #[error("flow limit exceeded ({0} flows)")]
     FlowLimit(usize),
-    #[error("total step limit exceeded")]
     StepLimit,
 }
+
+impl std::fmt::Display for EmuError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EmuError::UnknownLabel(l) => write!(f, "unknown branch target `{l}`"),
+            EmuError::FlowLimit(n) => write!(f, "flow limit exceeded ({n} flows)"),
+            EmuError::StepLimit => write!(f, "total step limit exceeded"),
+        }
+    }
+}
+
+impl std::error::Error for EmuError {}
 
 /// The emulator: owns the term pool and the per-kernel static index.
 pub struct Emu<'k> {
@@ -122,13 +132,24 @@ pub struct Emu<'k> {
     next_flow_id: u32,
 }
 
-/// Emulate a kernel with default limits.
+/// Emulate a kernel with default limits (private, single-use session).
 pub fn emulate(kernel: &Kernel) -> Result<EmulationResult, EmuError> {
     emulate_with(kernel, Limits::default())
 }
 
 pub fn emulate_with(kernel: &Kernel, limits: Limits) -> Result<EmulationResult, EmuError> {
-    let mut pool = TermPool::new();
+    emulate_in_session(kernel, limits, Arc::new(SessionInterner::new()))
+}
+
+/// Emulate a kernel whose symbol/UF names are interned in a shared
+/// session — the pipeline's artifact cache passes one session for a whole
+/// suite run so `%tid.x`, param names and UF names are interned once.
+pub fn emulate_in_session(
+    kernel: &Kernel,
+    limits: Limits,
+    session: Arc<SessionInterner>,
+) -> Result<EmulationResult, EmuError> {
+    let mut pool = TermPool::in_session(session);
     let mut regs = RegInterner::from_kernel(kernel);
     let index = KernelIndex::build(kernel, &mut regs);
     let tid_sym = pool.symbol("tid.x", 32);

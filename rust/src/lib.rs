@@ -7,6 +7,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod emu;
 pub mod perf;
+pub mod pipeline;
 pub mod ptx;
 pub mod runtime;
 pub mod shuffle;

@@ -8,12 +8,17 @@
 //!   apps                       §8.5 application kernels (|N| ≤ 1)
 //!   artifacts [--run name]     list or execute AOT artifacts via PJRT
 //!   help
+//!
+//! Every analysis path goes through the staged pass manager
+//! (`ptxasw::pipeline`); `--stats` prints its cache hit rates and
+//! per-stage wall time.
 
 use ptxasw::cli::Args;
-use ptxasw::coordinator::{report, run_suite, PipelineConfig};
+use ptxasw::coordinator::{report, run_suite_on, PipelineConfig};
 use ptxasw::perf::by_name as arch_by_name;
+use ptxasw::pipeline::Pipeline;
 use ptxasw::ptx::{parse, print_module};
-use ptxasw::shuffle::{detect, synthesize, DetectOpts, Variant};
+use ptxasw::shuffle::{DetectOpts, Variant};
 use ptxasw::suite;
 
 const HELP: &str = "\
@@ -21,11 +26,14 @@ ptxasw — symbolic emulator + shuffle synthesis for NVIDIA PTX
 
 USAGE:
   ptxasw asm <in.ptx> [--out FILE] [--variant full|noload|nocorner|uniform]
-             [--max-delta N] [--report]
-  ptxasw suite [bench...] [--arch NAME] [--threads N] [--max-delta N] [--fig3 bench]
-  ptxasw apps
+             [--max-delta N] [--report] [--stats]
+  ptxasw suite [bench...] [--arch NAME] [--threads N] [--max-delta N]
+             [--fig3 bench] [--stats]
+  ptxasw apps [--threads N] [--stats]
   ptxasw artifacts [--dir DIR] [--run NAME]
   ptxasw help
+
+  --stats   print pipeline cache hit rates and per-stage wall time
 ";
 
 fn main() {
@@ -73,32 +81,40 @@ fn cmd_asm(args: &Args) -> Result<(), String> {
     let src = std::fs::read_to_string(input).map_err(|e| format!("{input}: {e}"))?;
     let mut module = parse(&src).map_err(|e| e.to_string())?;
     let variant = variant_of(args.opt("variant"))?;
-    let max_delta = args.opt_usize("max-delta", 31)? as i64;
+    let opts = DetectOpts {
+        max_abs_delta: args.opt_usize("max-delta", 31)? as i64,
+        ..DetectOpts::default()
+    };
 
+    let p = Pipeline::new();
     let mut total = 0;
     for k in module.kernels.iter_mut() {
-        let res = ptxasw::emu::emulate(k).map_err(|e| format!("{}: {e}", k.name))?;
-        let det = detect(
-            k,
-            &res,
-            DetectOpts {
-                max_abs_delta: max_delta,
-                ..Default::default()
-            },
-        );
+        // identical kernels in one module share emulation via the cache
+        let parsed = p.intake(k.clone());
+        let det = p
+            .detected_hashed(&parsed.kernel, parsed.hash, opts)
+            .map_err(|e| format!("{}: {e}", k.name))?;
         if args.flag("report") {
+            let (flows, steps) = det
+                .detection
+                .emu_stats
+                .map(|s| (s.flows_finished, s.steps))
+                .unwrap_or((0, 0));
             eprintln!(
                 "{}: {} shuffles over {} global loads (avg delta {:?}; {} flows, {} steps)",
                 k.name,
-                det.shuffle_count(),
-                det.total_global_loads,
-                det.avg_delta(),
-                res.stats.flows_finished,
-                res.stats.steps,
+                det.detection.shuffle_count(),
+                det.detection.total_global_loads,
+                det.detection.avg_delta(),
+                flows,
+                steps,
             );
         }
-        total += det.shuffle_count();
-        *k = synthesize(k, &det, variant);
+        total += det.detection.shuffle_count();
+        let synth = p
+            .synthesized_hashed(&parsed.kernel, parsed.hash, opts, variant)
+            .map_err(|e| format!("{}: {e}", k.name))?;
+        *k = (*synth.kernel).clone();
     }
     let text = print_module(&module);
     match args.opt("out") {
@@ -106,16 +122,27 @@ fn cmd_asm(args: &Args) -> Result<(), String> {
         None => print!("{text}"),
     }
     eprintln!("ptxasw: synthesized {total} shuffle(s) [{}]", variant.name());
+    if args.flag("stats") {
+        eprintln!("{}", report::pipeline_stats(&p.stats()));
+    }
     Ok(())
 }
 
 fn cmd_suite(args: &Args) -> Result<(), String> {
-    let mut cfg = PipelineConfig::default();
-    cfg.threads = args.opt_usize("threads", cfg.threads)?;
-    cfg.detect.max_abs_delta = args.opt_usize("max-delta", 31)? as i64;
-    if let Some(a) = args.opt("arch") {
-        cfg.archs = vec![arch_by_name(a).ok_or(format!("unknown arch `{a}`"))?];
-    }
+    let base = PipelineConfig::default();
+    let archs = match args.opt("arch") {
+        Some(a) => vec![arch_by_name(a).ok_or(format!("unknown arch `{a}`"))?],
+        None => base.archs.clone(),
+    };
+    let cfg = PipelineConfig {
+        threads: args.opt_usize("threads", base.threads)?,
+        detect: DetectOpts {
+            max_abs_delta: args.opt_usize("max-delta", 31)? as i64,
+            ..base.detect
+        },
+        archs,
+        ..base
+    };
     let benches: Vec<_> = if args.positional.is_empty() {
         suite::suite()
     } else {
@@ -124,7 +151,8 @@ fn cmd_suite(args: &Args) -> Result<(), String> {
             .map(|n| suite::by_name(n).ok_or(format!("unknown benchmark `{n}`")))
             .collect::<Result<_, _>>()?
     };
-    let results = run_suite(&benches, &cfg);
+    let p = Pipeline::new();
+    let results = run_suite_on(&p, &benches, &cfg);
     let ok: Vec<_> = results
         .iter()
         .map(|r| r.as_ref().map_err(|e| e.to_string()))
@@ -139,22 +167,35 @@ fn cmd_suite(args: &Args) -> Result<(), String> {
             .ok_or(format!("`{name}` not among the results"))?;
         println!("{}", report::figure3(r, &cfg.archs));
     }
+    if args.flag("stats") {
+        println!("{}", report::pipeline_stats(&p.stats()));
+    }
     Ok(())
 }
 
 fn cmd_apps(args: &Args) -> Result<(), String> {
-    let mut cfg = PipelineConfig::default();
-    cfg.detect.max_abs_delta = 1; // §8.5 restriction
-    cfg.archs = vec![arch_by_name("Pascal").unwrap()];
-    cfg.threads = args.opt_usize("threads", cfg.threads)?;
+    let base = PipelineConfig::default();
+    let cfg = PipelineConfig {
+        detect: DetectOpts {
+            max_abs_delta: 1, // §8.5 restriction
+            ..base.detect
+        },
+        archs: vec![arch_by_name("Pascal").unwrap()],
+        threads: args.opt_usize("threads", base.threads)?,
+        ..base
+    };
     let benches = suite::apps();
-    let results = run_suite(&benches, &cfg);
+    let p = Pipeline::new();
+    let results = run_suite_on(&p, &benches, &cfg);
     let ok: Vec<_> = results
         .iter()
         .map(|r| r.as_ref().map_err(|e| e.to_string()))
         .collect::<Result<_, _>>()?;
     println!("{}", report::table2(&ok));
     println!("{}", report::figure2(&ok, &cfg.archs, &cfg.variants));
+    if args.flag("stats") {
+        println!("{}", report::pipeline_stats(&p.stats()));
+    }
     Ok(())
 }
 

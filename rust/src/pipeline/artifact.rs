@@ -1,0 +1,180 @@
+//! Content-addressed artifacts and the thread-safe cache that stores them.
+//!
+//! Every artifact is keyed by the [`ContentHash`] of the kernel it was
+//! derived from (plus the options that shaped it), so the three synthesis
+//! variants of one benchmark share a single emulation and identical
+//! kernels across suite runs are computed once. Slots are
+//! `Arc<OnceLock<…>>`: the map mutex is held only for the entry lookup,
+//! concurrent requests for the *same* key block on the slot (exactly one
+//! computes), and requests for different keys proceed in parallel.
+
+use crate::emu::{EmuError, EmulationResult};
+use crate::ptx::ast::Kernel;
+use crate::ptx::printer::ContentHash;
+use crate::shuffle::{DetectOpts, Detection, Variant};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+/// Stage 1 artifact: a kernel admitted into the pipeline, with its
+/// content address.
+#[derive(Debug, Clone)]
+pub struct Parsed {
+    pub kernel: Arc<Kernel>,
+    pub hash: ContentHash,
+}
+
+/// Stage 2 artifact: one symbolic emulation of a kernel.
+#[derive(Debug)]
+pub struct Emulated {
+    pub kernel: Arc<Kernel>,
+    pub hash: ContentHash,
+    pub result: EmulationResult,
+    /// Wall time of the original (cache-missing) emulation.
+    pub elapsed: Duration,
+}
+
+/// Stage 3 artifact: shuffle detection over an emulation.
+#[derive(Debug)]
+pub struct Detected {
+    pub detection: Detection,
+    /// Wall time of the detection pass alone.
+    pub elapsed: Duration,
+    /// Wall time of the emulation this detection consumed.
+    pub emu_elapsed: Duration,
+}
+
+impl Detected {
+    /// The paper's Table 2 "Analysis" quantity: emulate + detect.
+    pub fn analysis_time(&self) -> Duration {
+        self.emu_elapsed + self.elapsed
+    }
+}
+
+/// Stage 4 artifact: a synthesized kernel variant.
+#[derive(Debug)]
+pub struct Synthesized {
+    pub kernel: Arc<Kernel>,
+    pub variant: Variant,
+    /// Content address of the *source* kernel the variant was derived from.
+    pub source: ContentHash,
+}
+
+/// Which artifact family a cache event belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Emulated,
+    Detected,
+    Synthesized,
+}
+
+/// Monotonic hit/miss counters, one pair per artifact family.
+#[derive(Debug, Default)]
+pub struct CacheCounters {
+    emulate_hits: AtomicU64,
+    emulate_misses: AtomicU64,
+    detect_hits: AtomicU64,
+    detect_misses: AtomicU64,
+    synth_hits: AtomicU64,
+    synth_misses: AtomicU64,
+}
+
+impl CacheCounters {
+    pub fn record(&self, kind: ArtifactKind, computed: bool) {
+        let cell = match (kind, computed) {
+            (ArtifactKind::Emulated, false) => &self.emulate_hits,
+            (ArtifactKind::Emulated, true) => &self.emulate_misses,
+            (ArtifactKind::Detected, false) => &self.detect_hits,
+            (ArtifactKind::Detected, true) => &self.detect_misses,
+            (ArtifactKind::Synthesized, false) => &self.synth_hits,
+            (ArtifactKind::Synthesized, true) => &self.synth_misses,
+        };
+        cell.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> CacheSnapshot {
+        CacheSnapshot {
+            emulate_hits: self.emulate_hits.load(Ordering::Relaxed),
+            emulate_misses: self.emulate_misses.load(Ordering::Relaxed),
+            detect_hits: self.detect_hits.load(Ordering::Relaxed),
+            detect_misses: self.detect_misses.load(Ordering::Relaxed),
+            synth_hits: self.synth_hits.load(Ordering::Relaxed),
+            synth_misses: self.synth_misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of the cache counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheSnapshot {
+    pub emulate_hits: u64,
+    pub emulate_misses: u64,
+    pub detect_hits: u64,
+    pub detect_misses: u64,
+    pub synth_hits: u64,
+    pub synth_misses: u64,
+}
+
+impl CacheSnapshot {
+    pub fn hits(&self) -> u64 {
+        self.emulate_hits + self.detect_hits + self.synth_hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.emulate_misses + self.detect_misses + self.synth_misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits() + self.misses();
+        if total == 0 {
+            0.0
+        } else {
+            self.hits() as f64 / total as f64
+        }
+    }
+}
+
+/// One cache slot: exactly one thread computes, everyone else blocks on
+/// the `OnceLock` and clones the finished value (or the error).
+pub type CacheSlot<T> = Arc<OnceLock<Result<Arc<T>, EmuError>>>;
+
+type SlotMap<K, T> = Mutex<HashMap<K, CacheSlot<T>>>;
+
+/// Detection key: kernel + the full [`DetectOpts`] that shaped it.
+pub type DetectKey = (ContentHash, DetectOpts);
+/// Synthesis key: detection key + variant.
+pub type SynthKey = (ContentHash, DetectOpts, Variant);
+
+/// Thread-safe, content-addressed artifact store.
+#[derive(Debug, Default)]
+pub struct ArtifactCache {
+    emulated: SlotMap<ContentHash, Emulated>,
+    detected: SlotMap<DetectKey, Detected>,
+    synthesized: SlotMap<SynthKey, Synthesized>,
+    pub counters: CacheCounters,
+}
+
+impl ArtifactCache {
+    pub fn emu_slot(&self, key: ContentHash) -> CacheSlot<Emulated> {
+        self.emulated.lock().unwrap().entry(key).or_default().clone()
+    }
+
+    pub fn detect_slot(&self, key: DetectKey) -> CacheSlot<Detected> {
+        self.detected.lock().unwrap().entry(key).or_default().clone()
+    }
+
+    pub fn synth_slot(&self, key: SynthKey) -> CacheSlot<Synthesized> {
+        self.synthesized
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_default()
+            .clone()
+    }
+
+    /// Number of emulation artifacts resident in the cache.
+    pub fn emulated_len(&self) -> usize {
+        self.emulated.lock().unwrap().len()
+    }
+}

@@ -1,0 +1,396 @@
+//! The staged pass manager for the PTXASW pipeline.
+//!
+//! The paper's tool is a tail-of-pipeline phase; production traffic needs
+//! the phases to be explicit, cacheable and batched. This module stages
+//! the end-to-end flow as typed artifacts
+//!
+//! ```text
+//! Parsed → Emulated → Detected → Synthesized → Validated → Scored
+//! ```
+//!
+//! with the first four stages content-addressed by a stable hash of the
+//! kernel ([`crate::ptx::kernel_fingerprint`]) and stored in a
+//! thread-safe [`ArtifactCache`]. A [`Pipeline`] owns one
+//! [`SessionInterner`] shared by every emulation it runs, so symbol and
+//! UF names (`%tid.x`, params, `load.global.*`) are interned once per
+//! session instead of once per kernel. Per-stage wall time and cache
+//! hit/miss counters are exposed through [`Pipeline::stats`] for the CLI
+//! `--stats` flag and the coordinator's suite report.
+
+pub mod artifact;
+pub mod stages;
+
+pub use artifact::{
+    ArtifactCache, ArtifactKind, CacheSnapshot, Detected, Emulated, Parsed, Synthesized,
+};
+pub use stages::{score, validate, Scored, Validated};
+
+use crate::emu::{emulate_in_session, EmuError, Limits};
+use crate::ptx::ast::Kernel;
+use crate::ptx::parser::{parse, ParseError};
+use crate::ptx::printer::{kernel_fingerprint, ContentHash};
+use crate::shuffle::{detect, synthesize, DetectOpts, Variant};
+use crate::sym::SessionInterner;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// The pipeline's stages, in execution order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    Parse,
+    Emulate,
+    Detect,
+    Synthesize,
+    Validate,
+    Score,
+}
+
+/// All stages in execution order (for reports).
+pub const STAGES: [Stage; 6] = [
+    Stage::Parse,
+    Stage::Emulate,
+    Stage::Detect,
+    Stage::Synthesize,
+    Stage::Validate,
+    Stage::Score,
+];
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Parse => "parse",
+            Stage::Emulate => "emulate",
+            Stage::Detect => "detect",
+            Stage::Synthesize => "synthesize",
+            Stage::Validate => "validate",
+            Stage::Score => "score",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            Stage::Parse => 0,
+            Stage::Emulate => 1,
+            Stage::Detect => 2,
+            Stage::Synthesize => 3,
+            Stage::Validate => 4,
+            Stage::Score => 5,
+        }
+    }
+}
+
+/// Accumulated wall time and invocation counts per stage.
+#[derive(Debug, Default)]
+struct StageTimings {
+    nanos: [AtomicU64; STAGES.len()],
+    runs: [AtomicU64; STAGES.len()],
+}
+
+impl StageTimings {
+    fn record(&self, stage: Stage, elapsed: Duration) {
+        let i = stage.index();
+        self.nanos[i].fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+        self.runs[i].fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Point-in-time view of the pipeline's counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PipelineStats {
+    pub cache: CacheSnapshot,
+    pub stage_nanos: [u64; STAGES.len()],
+    pub stage_runs: [u64; STAGES.len()],
+}
+
+impl PipelineStats {
+    pub fn stage_time(&self, stage: Stage) -> Duration {
+        Duration::from_nanos(self.stage_nanos[stage.index()])
+    }
+
+    pub fn stage_count(&self, stage: Stage) -> u64 {
+        self.stage_runs[stage.index()]
+    }
+}
+
+/// The pass manager: shared interner session + artifact cache + counters.
+///
+/// One `Pipeline` per logical session; `run_suite`-style drivers create a
+/// fresh one per call unless handed an existing pipeline to share the
+/// cache across runs.
+#[derive(Debug, Default)]
+pub struct Pipeline {
+    session: Arc<SessionInterner>,
+    limits: Limits,
+    cache: ArtifactCache,
+    timings: StageTimings,
+}
+
+impl Pipeline {
+    pub fn new() -> Pipeline {
+        Pipeline::default()
+    }
+
+    /// A pipeline with non-default emulation limits.
+    pub fn with_limits(limits: Limits) -> Pipeline {
+        Pipeline {
+            limits,
+            ..Pipeline::default()
+        }
+    }
+
+    /// The interner session every emulation of this pipeline shares.
+    pub fn session(&self) -> &Arc<SessionInterner> {
+        &self.session
+    }
+
+    /// The underlying artifact store (counters, residency).
+    pub fn cache(&self) -> &ArtifactCache {
+        &self.cache
+    }
+
+    /// Time a closure against a stage's wall-time counters.
+    pub fn time<T>(&self, stage: Stage, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.timings.record(stage, t0.elapsed());
+        out
+    }
+
+    /// Admit an already-built kernel (e.g. from the suite generator),
+    /// computing its content address.
+    pub fn intake(&self, kernel: Kernel) -> Parsed {
+        self.time(Stage::Parse, || {
+            let kernel = Arc::new(kernel);
+            let hash = kernel_fingerprint(&kernel);
+            Parsed { kernel, hash }
+        })
+    }
+
+    /// Parse PTX source into per-kernel [`Parsed`] artifacts.
+    pub fn parse_source(&self, src: &str) -> Result<Vec<Parsed>, ParseError> {
+        self.time(Stage::Parse, || {
+            let module = parse(src)?;
+            Ok(module
+                .kernels
+                .into_iter()
+                .map(|k| {
+                    let kernel = Arc::new(k);
+                    let hash = kernel_fingerprint(&kernel);
+                    Parsed { kernel, hash }
+                })
+                .collect())
+        })
+    }
+
+    /// Emulation artifact for a kernel (computing the hash here).
+    pub fn emulated(&self, kernel: &Arc<Kernel>) -> Result<Arc<Emulated>, EmuError> {
+        self.emulated_hashed(kernel, kernel_fingerprint(kernel))
+    }
+
+    /// Emulation artifact when the caller already knows the content hash.
+    /// The hash must be `kernel_fingerprint(kernel)`.
+    pub fn emulated_hashed(
+        &self,
+        kernel: &Arc<Kernel>,
+        hash: ContentHash,
+    ) -> Result<Arc<Emulated>, EmuError> {
+        let slot = self.cache.emu_slot(hash);
+        let mut computed = false;
+        let out = slot
+            .get_or_init(|| {
+                computed = true;
+                let t0 = Instant::now();
+                let result = emulate_in_session(kernel, self.limits, self.session.clone())?;
+                let elapsed = t0.elapsed();
+                self.timings.record(Stage::Emulate, elapsed);
+                Ok(Arc::new(Emulated {
+                    kernel: kernel.clone(),
+                    hash,
+                    result,
+                    elapsed,
+                }))
+            })
+            .clone();
+        self.cache.counters.record(ArtifactKind::Emulated, computed);
+        out
+    }
+
+    /// Detection artifact; consumes the cached [`Emulated`] artifact —
+    /// `detect` itself never emulates.
+    pub fn detected(
+        &self,
+        kernel: &Arc<Kernel>,
+        opts: DetectOpts,
+    ) -> Result<Arc<Detected>, EmuError> {
+        self.detected_hashed(kernel, kernel_fingerprint(kernel), opts)
+    }
+
+    pub fn detected_hashed(
+        &self,
+        kernel: &Arc<Kernel>,
+        hash: ContentHash,
+        opts: DetectOpts,
+    ) -> Result<Arc<Detected>, EmuError> {
+        let key = (hash, opts);
+        let slot = self.cache.detect_slot(key);
+        let mut computed = false;
+        let out = slot
+            .get_or_init(|| {
+                computed = true;
+                let emu = self.emulated_hashed(kernel, hash)?;
+                let t0 = Instant::now();
+                let detection = detect(kernel, &emu.result, opts);
+                let elapsed = t0.elapsed();
+                self.timings.record(Stage::Detect, elapsed);
+                Ok(Arc::new(Detected {
+                    detection,
+                    elapsed,
+                    emu_elapsed: emu.elapsed,
+                }))
+            })
+            .clone();
+        self.cache.counters.record(ArtifactKind::Detected, computed);
+        out
+    }
+
+    /// Synthesized-variant artifact; reuses the cached detection (and
+    /// through it the single emulation).
+    pub fn synthesized(
+        &self,
+        kernel: &Arc<Kernel>,
+        opts: DetectOpts,
+        variant: Variant,
+    ) -> Result<Arc<Synthesized>, EmuError> {
+        self.synthesized_hashed(kernel, kernel_fingerprint(kernel), opts, variant)
+    }
+
+    pub fn synthesized_hashed(
+        &self,
+        kernel: &Arc<Kernel>,
+        hash: ContentHash,
+        opts: DetectOpts,
+        variant: Variant,
+    ) -> Result<Arc<Synthesized>, EmuError> {
+        let key = (hash, opts, variant);
+        let slot = self.cache.synth_slot(key);
+        let mut computed = false;
+        let out = slot
+            .get_or_init(|| {
+                computed = true;
+                let det = self.detected_hashed(kernel, hash, opts)?;
+                let t0 = Instant::now();
+                let synthesized = synthesize(kernel, &det.detection, variant);
+                self.timings.record(Stage::Synthesize, t0.elapsed());
+                Ok(Arc::new(Synthesized {
+                    kernel: Arc::new(synthesized),
+                    variant,
+                    source: hash,
+                }))
+            })
+            .clone();
+        self.cache
+            .counters
+            .record(ArtifactKind::Synthesized, computed);
+        out
+    }
+
+    /// Snapshot of cache counters and per-stage timings.
+    pub fn stats(&self) -> PipelineStats {
+        let mut s = PipelineStats {
+            cache: self.cache.counters.snapshot(),
+            ..Default::default()
+        };
+        for stage in STAGES {
+            let i = stage.index();
+            s.stage_nanos[i] = self.timings.nanos[i].load(Ordering::Relaxed);
+            s.stage_runs[i] = self.timings.runs[i].load(Ordering::Relaxed);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptx::parser::parse_kernel;
+
+    const K: &str = r#"
+.visible .entry s3(.param .u64 out, .param .u64 a){
+.reg .b32 %r<6>; .reg .b64 %rd<8>; .reg .f32 %f<6>;
+ld.param.u64 %rd1, [out];
+ld.param.u64 %rd2, [a];
+cvta.to.global.u64 %rd3, %rd2;
+cvta.to.global.u64 %rd4, %rd1;
+mov.u32 %r4, %tid.x;
+mul.wide.s32 %rd5, %r4, 4;
+add.s64 %rd6, %rd3, %rd5;
+ld.global.nc.f32 %f1, [%rd6];
+ld.global.nc.f32 %f2, [%rd6+4];
+ld.global.nc.f32 %f3, [%rd6+8];
+add.f32 %f4, %f1, %f2;
+add.f32 %f5, %f4, %f3;
+add.s64 %rd7, %rd4, %rd5;
+st.global.f32 [%rd7], %f5;
+ret;
+}
+"#;
+
+    #[test]
+    fn emulation_is_computed_once_per_content_hash() {
+        let p = Pipeline::new();
+        let k = Arc::new(parse_kernel(K).unwrap());
+        let e1 = p.emulated(&k).unwrap();
+        // a *separately parsed* but identical kernel hits the same slot
+        let k2 = Arc::new(parse_kernel(K).unwrap());
+        let e2 = p.emulated(&k2).unwrap();
+        assert!(Arc::ptr_eq(&e1, &e2), "identical kernels must share the artifact");
+        let s = p.stats().cache;
+        assert_eq!(s.emulate_misses, 1);
+        assert_eq!(s.emulate_hits, 1);
+        assert_eq!(p.cache().emulated_len(), 1);
+    }
+
+    #[test]
+    fn variants_share_one_emulation() {
+        let p = Pipeline::new();
+        let k = Arc::new(parse_kernel(K).unwrap());
+        let opts = DetectOpts::default();
+        for v in [Variant::NoLoad, Variant::NoCorner, Variant::Full] {
+            let s = p.synthesized(&k, opts, v).unwrap();
+            assert_eq!(s.variant, v);
+        }
+        let s = p.stats();
+        assert_eq!(s.cache.emulate_misses, 1, "exactly one emulation");
+        assert_eq!(s.cache.detect_misses, 1, "exactly one detection");
+        // each variant after the first found the detection in the cache
+        assert_eq!(s.cache.detect_hits, 2);
+        assert_eq!(s.cache.synth_misses, 3);
+        // stage counters saw one emulate pass and three synthesize passes
+        assert_eq!(s.stage_count(Stage::Emulate), 1);
+        assert_eq!(s.stage_count(Stage::Synthesize), 3);
+    }
+
+    #[test]
+    fn mutated_kernel_gets_its_own_artifact() {
+        let p = Pipeline::new();
+        let k = Arc::new(parse_kernel(K).unwrap());
+        let mutated = Arc::new(parse_kernel(&K.replace("[%rd6+8]", "[%rd6+12]")).unwrap());
+        p.emulated(&k).unwrap();
+        p.emulated(&mutated).unwrap();
+        let s = p.stats().cache;
+        assert_eq!(s.emulate_misses, 2);
+        assert_eq!(s.emulate_hits, 0);
+        assert_eq!(p.cache().emulated_len(), 2);
+    }
+
+    #[test]
+    fn parse_source_assigns_content_addresses() {
+        let p = Pipeline::new();
+        let src = format!(".version 7.6\n.target sm_70\n.address_size 64\n{K}");
+        let parsed = p.parse_source(&src).unwrap();
+        assert_eq!(parsed.len(), 1);
+        let again = p.intake((*parsed[0].kernel).clone());
+        assert_eq!(parsed[0].hash, again.hash);
+    }
+}

@@ -1,0 +1,73 @@
+//! The two workload-dependent stages at the tail of the typed chain
+//! `Parsed → Emulated → Detected → Synthesized → Validated → Scored`.
+//!
+//! Unlike the first four stages, validation and scoring depend on a
+//! concrete simulator workload (grid sizes, input data, seed), so they are
+//! not content-addressed — the coordinator drives them as tasks and the
+//! pass manager only accounts their wall time.
+
+use crate::perf::{model, Arch, PerfReport};
+use crate::pipeline::{Pipeline, Stage};
+use crate::ptx::ast::Kernel;
+use crate::sim::{run, SimError, SimStats, WarpEvent};
+use crate::suite::Workload;
+
+/// Stage 5 artifact: one simulator execution of a kernel version, with
+/// the bit-exactness verdict against the baseline output.
+#[derive(Debug)]
+pub struct Validated {
+    pub out: Vec<f32>,
+    pub stats: SimStats,
+    pub trace: Vec<Vec<WarpEvent>>,
+    /// `Some(true)` iff the output matched the baseline bit-exactly
+    /// (`None` for the baseline itself).
+    pub valid: Option<bool>,
+}
+
+/// Stage 6 artifact: the per-architecture reports for one kernel
+/// version, assembled by the coordinator once every [`score`] task for a
+/// slot has retired.
+#[derive(Debug)]
+pub struct Scored {
+    pub reports: Vec<PerfReport>,
+}
+
+/// Run a kernel version on the warp simulator and compare against the
+/// baseline output (when given).
+pub fn validate(
+    p: &Pipeline,
+    kernel: &Kernel,
+    w: Workload,
+    baseline_out: Option<&[f32]>,
+) -> Result<Validated, SimError> {
+    p.time(Stage::Validate, || {
+        let Workload {
+            mut cfg,
+            mem,
+            out_ptr,
+            out_len,
+            ..
+        } = w;
+        cfg.record_trace = true;
+        let r = run(kernel, &cfg, mem)?;
+        let out = r.mem.read_f32s(out_ptr, out_len)?;
+        let valid = baseline_out.map(|base| {
+            base.len() == out.len()
+                && base
+                    .iter()
+                    .zip(&out)
+                    .all(|(a, b)| a.to_bits() == b.to_bits())
+        });
+        Ok(Validated {
+            out,
+            stats: r.stats,
+            trace: r.trace,
+            valid,
+        })
+    })
+}
+
+/// Score one validated kernel version on one architecture.
+pub fn score(p: &Pipeline, kernel: &Kernel, v: &Validated, arch: &Arch) -> PerfReport {
+    p.time(Stage::Score, || model(kernel, &v.trace, arch))
+}

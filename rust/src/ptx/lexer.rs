@@ -69,12 +69,19 @@ pub struct Spanned {
     pub line: u32,
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("lex error at line {line}: {msg}")]
+#[derive(Debug)]
 pub struct LexError {
     pub line: u32,
     pub msg: String,
 }
+
+impl std::fmt::Display for LexError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "lex error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for LexError {}
 
 fn is_word_start(c: char) -> bool {
     c.is_ascii_alphabetic() || c == '_' || c == '%' || c == '$' || c == '.'

@@ -11,4 +11,4 @@ pub mod printer;
 
 pub use ast::*;
 pub use parser::{parse, parse_kernel, ParseError};
-pub use printer::{print_kernel, print_module, print_op};
+pub use printer::{kernel_fingerprint, print_kernel, print_module, print_op, ContentHash};

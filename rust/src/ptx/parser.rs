@@ -10,12 +10,19 @@
 use super::ast::*;
 use super::lexer::{lex, Spanned, Tok};
 
-#[derive(Debug, thiserror::Error)]
-#[error("parse error at line {line}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub line: u32,
     pub msg: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 pub fn parse(src: &str) -> Result<Module, ParseError> {
     let toks = lex(src).map_err(|e| ParseError {

@@ -7,28 +7,74 @@
 //! ids cleanly. This module wraps the `xla` crate: client construction,
 //! artifact discovery via `artifacts/manifest.txt`, compilation caching,
 //! and typed f32 execution. Python never runs on this path.
+//!
+//! The `xla` crate is not part of the offline crate universe, so the
+//! execution backend is gated behind the `xla` cargo feature. Without it,
+//! manifest parsing and artifact discovery still work (enough for the CLI
+//! `artifacts` listing and the unit tests); `load`/`run_f32` report a
+//! clean [`RuntimeError::Backend`] error.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RuntimeError {
-    #[error("artifact directory {0} not found — run `make artifacts` first")]
+    /// Artifact directory not found — run `make artifacts` first.
     NoArtifacts(PathBuf),
-    #[error("unknown artifact `{0}` (not in manifest)")]
+    /// Not in the manifest.
     UnknownArtifact(String),
-    #[error("artifact `{name}` expects {expect} inputs, got {got}")]
     ArityMismatch {
         name: String,
         expect: usize,
         got: usize,
     },
-    #[error("xla error: {0}")]
-    Xla(#[from] xla::Error),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("bad manifest line `{0}`")]
+    /// Execution-backend failure (XLA error, or backend compiled out).
+    Backend(String),
+    Io(std::io::Error),
     BadManifest(String),
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::NoArtifacts(d) => write!(
+                f,
+                "artifact directory {} not found — run `make artifacts` first",
+                d.display()
+            ),
+            RuntimeError::UnknownArtifact(n) => {
+                write!(f, "unknown artifact `{n}` (not in manifest)")
+            }
+            RuntimeError::ArityMismatch { name, expect, got } => {
+                write!(f, "artifact `{name}` expects {expect} inputs, got {got}")
+            }
+            RuntimeError::Backend(e) => write!(f, "xla error: {e}"),
+            RuntimeError::Io(e) => write!(f, "io error: {e}"),
+            RuntimeError::BadManifest(l) => write!(f, "bad manifest line `{l}`"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            RuntimeError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for RuntimeError {
+    fn from(e: std::io::Error) -> RuntimeError {
+        RuntimeError::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> RuntimeError {
+        RuntimeError::Backend(e.to_string())
+    }
 }
 
 /// Shape of one executable input (f32, dims in row-major order).
@@ -53,9 +99,8 @@ pub struct ArtifactSpec {
 
 /// PJRT CPU runtime with a compilation cache.
 pub struct Runtime {
-    client: xla::PjRtClient,
+    backend: Backend,
     specs: HashMap<String, ArtifactSpec>,
-    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
 impl Runtime {
@@ -99,9 +144,8 @@ impl Runtime {
             );
         }
         Ok(Runtime {
-            client: xla::PjRtClient::cpu()?,
+            backend: Backend::new()?,
             specs,
-            compiled: HashMap::new(),
         })
     }
 
@@ -117,23 +161,16 @@ impl Runtime {
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.platform()
     }
 
     /// Compile (once) and cache an artifact.
     pub fn load(&mut self, name: &str) -> Result<(), RuntimeError> {
-        if self.compiled.contains_key(name) {
-            return Ok(());
-        }
         let spec = self
             .specs
             .get(name)
             .ok_or_else(|| RuntimeError::UnknownArtifact(name.to_string()))?;
-        let proto = xla::HloModuleProto::from_text_file(&spec.path)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        self.compiled.insert(name.to_string(), exe);
-        Ok(())
+        self.backend.load(spec)
     }
 
     /// Execute an artifact on f32 inputs; returns the flat f32 output.
@@ -147,21 +184,93 @@ impl Runtime {
                 got: inputs.len(),
             });
         }
-        let mut lits = Vec::with_capacity(inputs.len());
         for (arg, data) in spec.args.iter().zip(inputs) {
             assert_eq!(
                 arg.elements(),
                 data.len(),
                 "{name}: input element count mismatch"
             );
+        }
+        self.backend.run_f32(&self.specs[name], inputs)
+    }
+}
+
+#[cfg(feature = "xla")]
+struct Backend {
+    client: xla::PjRtClient,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+#[cfg(feature = "xla")]
+impl Backend {
+    fn new() -> Result<Backend, RuntimeError> {
+        Ok(Backend {
+            client: xla::PjRtClient::cpu()?,
+            compiled: HashMap::new(),
+        })
+    }
+
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn load(&mut self, spec: &ArtifactSpec) -> Result<(), RuntimeError> {
+        if self.compiled.contains_key(&spec.name) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(&spec.path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.compiled.insert(spec.name.clone(), exe);
+        Ok(())
+    }
+
+    fn run_f32(
+        &mut self,
+        spec: &ArtifactSpec,
+        inputs: &[&[f32]],
+    ) -> Result<Vec<f32>, RuntimeError> {
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (arg, data) in spec.args.iter().zip(inputs) {
             let dims: Vec<i64> = arg.dims.iter().map(|&d| d as i64).collect();
             lits.push(xla::Literal::vec1(data).reshape(&dims)?);
         }
-        let exe = &self.compiled[name];
+        let exe = &self.compiled[&spec.name];
         let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
         // aot.py lowers with return_tuple=True → unwrap the 1-tuple
         let out = result.to_tuple1()?;
         Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// Stub backend: manifest handling works, execution reports cleanly.
+#[cfg(not(feature = "xla"))]
+struct Backend;
+
+#[cfg(not(feature = "xla"))]
+impl Backend {
+    fn new() -> Result<Backend, RuntimeError> {
+        Ok(Backend)
+    }
+
+    fn platform(&self) -> String {
+        "stub (built without the `xla` feature)".to_string()
+    }
+
+    fn load(&mut self, _spec: &ArtifactSpec) -> Result<(), RuntimeError> {
+        Err(RuntimeError::Backend(
+            "PJRT backend compiled out — rebuild with `--features xla`".to_string(),
+        ))
+    }
+
+    fn run_f32(
+        &mut self,
+        _spec: &ArtifactSpec,
+        _inputs: &[&[f32]],
+    ) -> Result<Vec<f32>, RuntimeError> {
+        Err(RuntimeError::Backend(
+            "PJRT backend compiled out — rebuild with `--features xla`".to_string(),
+        ))
     }
 }
 

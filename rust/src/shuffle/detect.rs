@@ -23,8 +23,10 @@ pub struct Candidate {
     pub delta: i64,
 }
 
-/// Detection configuration.
-#[derive(Debug, Clone, Copy)]
+/// Detection configuration. `Eq + Hash` so the pipeline's artifact cache
+/// can key on the whole struct — a future field automatically becomes
+/// part of the cache key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct DetectOpts {
     /// Reject candidates with `|N|` above this bound (paper §8.5 uses 1).
     pub max_abs_delta: i64,
@@ -162,10 +164,14 @@ pub fn detect(kernel: &Kernel, res: &EmulationResult, opts: DetectOpts) -> Detec
     }
 }
 
-/// Convenience: emulate + detect with default options.
+/// Convenience: analyze a kernel with default options through a one-shot
+/// [`crate::pipeline::Pipeline`]. The emulation happens exactly once, as a
+/// cached artifact the detection pass consumes — `detect` itself never
+/// emulates (it is a pure function of an [`EmulationResult`]).
 pub fn analyze(kernel: &Kernel) -> Result<Detection, crate::emu::EmuError> {
-    let res = crate::emu::emulate(kernel)?;
-    Ok(detect(kernel, &res, DetectOpts::default()))
+    let p = crate::pipeline::Pipeline::new();
+    let det = p.detected(&std::sync::Arc::new(kernel.clone()), DetectOpts::default())?;
+    Ok(det.detection.clone())
 }
 
 #[cfg(test)]
@@ -215,6 +221,34 @@ ret;
         // both shuffles source from the first (unshuffled) load
         let srcs: Vec<usize> = det.chosen.iter().map(|c| c.src_stmt).collect();
         assert!(srcs.iter().all(|&s| s == det.chosen[0].src_stmt));
+    }
+
+    #[test]
+    fn detect_consumes_cached_emulation_and_never_emulates() {
+        use crate::pipeline::{Pipeline, Stage};
+        use std::sync::Arc;
+
+        let k = Arc::new(parse_kernel(STENCIL3).unwrap());
+        let p = Pipeline::new();
+        let emu = p.emulated(&k).unwrap();
+        let before = p.stats();
+        // `detect` is a pure function of the emulation artifact: running it
+        // must not emulate (no new stage run, no new cache traffic)
+        let det = detect(&k, &emu.result, DetectOpts::default());
+        assert_eq!(det.shuffle_count(), 2);
+        let after = p.stats();
+        assert_eq!(after.stage_count(Stage::Emulate), 1);
+        assert_eq!(
+            before.cache.emulate_misses,
+            after.cache.emulate_misses
+        );
+        // detection through the pass manager reuses the same artifact
+        let d2 = p.detected(&k, DetectOpts::default()).unwrap();
+        assert_eq!(d2.detection.chosen, det.chosen);
+        let s = p.stats();
+        assert_eq!(s.stage_count(Stage::Emulate), 1, "still exactly one emulation");
+        assert_eq!(s.cache.emulate_misses, 1);
+        assert!(s.cache.emulate_hits >= 1);
     }
 
     #[test]

@@ -84,16 +84,38 @@ pub struct SimResult {
     pub trace: Vec<Vec<WarpEvent>>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug, Clone)]
 pub enum SimError {
-    #[error(transparent)]
-    Mem(#[from] MemError),
-    #[error("unknown branch target `{0}`")]
+    Mem(MemError),
     UnknownLabel(String),
-    #[error("unknown parameter `{0}`")]
     UnknownParam(String),
-    #[error("warp exceeded {0} steps (livelock?)")]
     StepLimit(u64),
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::Mem(e) => write!(f, "{e}"),
+            SimError::UnknownLabel(l) => write!(f, "unknown branch target `{l}`"),
+            SimError::UnknownParam(p) => write!(f, "unknown parameter `{p}`"),
+            SimError::StepLimit(n) => write!(f, "warp exceeded {n} steps (livelock?)"),
+        }
+    }
+}
+
+impl std::error::Error for SimError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SimError::Mem(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<MemError> for SimError {
+    fn from(e: MemError) -> SimError {
+        SimError::Mem(e)
+    }
 }
 
 const WARP: usize = 32;

@@ -9,9 +9,8 @@ pub const SHARED_BASE: u64 = 1 << 47;
 /// First valid global address (null guard page).
 pub const GLOBAL_BASE: u64 = 0x1000;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug, Clone)]
 pub enum MemError {
-    #[error("out-of-bounds {kind} of {bytes} bytes at {addr:#x} (global size {size:#x})")]
     OutOfBounds {
         kind: &'static str,
         addr: u64,
@@ -19,6 +18,23 @@ pub enum MemError {
         size: u64,
     },
 }
+
+impl std::fmt::Display for MemError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let MemError::OutOfBounds {
+            kind,
+            addr,
+            bytes,
+            size,
+        } = self;
+        write!(
+            f,
+            "out-of-bounds {kind} of {bytes} bytes at {addr:#x} (global size {size:#x})"
+        )
+    }
+}
+
+impl std::error::Error for MemError {}
 
 /// Flat global memory.
 #[derive(Debug, Clone)]

@@ -11,4 +11,4 @@ pub mod term;
 
 pub use affine::{extract, split_on, Affine};
 pub use solver::{const_distance, may_alias, solve_delta, Assumptions, Conflict, Truth};
-pub use term::{eval, BvOp, CmpKind, Node, SymId, TermId, TermPool, UfId};
+pub use term::{eval, BvOp, CmpKind, Node, SessionInterner, SymId, TermId, TermPool, UfId};

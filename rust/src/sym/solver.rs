@@ -36,9 +36,16 @@ impl Truth {
     }
 }
 
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
-#[error("assumption conflicts with recorded facts")]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Conflict;
+
+impl std::fmt::Display for Conflict {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "assumption conflicts with recorded facts")
+    }
+}
+
+impl std::error::Error for Conflict {}
 
 /// Canonical key of a linear form: its coefficient vector. Sign-normalized
 /// so `x - y` and `y - x` share a key.

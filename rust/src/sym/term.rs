@@ -8,7 +8,9 @@
 //! Floating-point arithmetic is wrapped in uninterpreted functions as well,
 //! so float values round-trip bit-exactly through the bitvector world.
 
+use crate::util::FnvMap;
 use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
 
 /// Interned term handle.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -147,20 +149,130 @@ pub fn to_signed(bits: u64, width: u32) -> i128 {
     }
 }
 
-/// Hash-consing arena for terms plus the symbol / UF interners.
+/// Session-level interner for symbol and UF *names*, shared by every
+/// [`TermPool`] spawned from the same pipeline session.
+///
+/// Ids handed out are globally stable for the lifetime of the session, so
+/// two emulations of different kernels agree on what `SymId` means and the
+/// pools stop re-interning the same `%tid.x`/param strings per kernel.
+/// Thread-safe: concurrent emulations intern through an `RwLock`; the hot
+/// path (already-interned name) takes only the read lock.
 #[derive(Debug, Default)]
+pub struct SessionInterner {
+    inner: RwLock<InternerTables>,
+}
+
+#[derive(Debug, Default)]
+struct InternerTables {
+    syms: Vec<Arc<str>>,
+    sym_index: HashMap<Arc<str>, u32>,
+    ufs: Vec<Arc<str>>,
+    uf_index: HashMap<Arc<str>, u32>,
+}
+
+/// Shared intern body: read-lock-free-path callers come here only after
+/// missing; double-checks under the write lock, then appends.
+fn intern_into(
+    names: &mut Vec<Arc<str>>,
+    index: &mut HashMap<Arc<str>, u32>,
+    name: &str,
+) -> (u32, Arc<str>) {
+    if let Some(&i) = index.get(name) {
+        return (i, names[i as usize].clone());
+    }
+    let arc: Arc<str> = Arc::from(name);
+    let i = names.len() as u32;
+    names.push(arc.clone());
+    index.insert(arc.clone(), i);
+    (i, arc)
+}
+
+impl SessionInterner {
+    pub fn new() -> SessionInterner {
+        SessionInterner::default()
+    }
+
+    pub fn intern_sym(&self, name: &str) -> (SymId, Arc<str>) {
+        {
+            let t = self.inner.read().unwrap();
+            if let Some(&i) = t.sym_index.get(name) {
+                return (SymId(i), t.syms[i as usize].clone());
+            }
+        }
+        let mut t = self.inner.write().unwrap();
+        let t = &mut *t;
+        let (i, arc) = intern_into(&mut t.syms, &mut t.sym_index, name);
+        (SymId(i), arc)
+    }
+
+    pub fn intern_uf(&self, name: &str) -> (UfId, Arc<str>) {
+        {
+            let t = self.inner.read().unwrap();
+            if let Some(&i) = t.uf_index.get(name) {
+                return (UfId(i), t.ufs[i as usize].clone());
+            }
+        }
+        let mut t = self.inner.write().unwrap();
+        let t = &mut *t;
+        let (i, arc) = intern_into(&mut t.ufs, &mut t.uf_index, name);
+        (UfId(i), arc)
+    }
+
+    /// Distinct symbol names interned so far.
+    pub fn sym_count(&self) -> usize {
+        self.inner.read().unwrap().syms.len()
+    }
+
+    /// Distinct UF names interned so far.
+    pub fn uf_count(&self) -> usize {
+        self.inner.read().unwrap().ufs.len()
+    }
+}
+
+/// Hash-consing arena for terms. The term nodes are per-emulation; the
+/// symbol / UF *name* tables live in a shared [`SessionInterner`] so the
+/// artifact cache can reuse one session across many kernels. Each pool
+/// keeps a local mirror of the names it touched, which keeps `&str`
+/// lookups lock-free after the first intern.
+#[derive(Debug)]
 pub struct TermPool {
     nodes: Vec<Node>,
     index: HashMap<Node, TermId>,
-    syms: Vec<String>,
-    sym_index: HashMap<String, SymId>,
-    ufs: Vec<String>,
-    uf_index: HashMap<String, UfId>,
+    session: Arc<SessionInterner>,
+    sym_names: FnvMap<u32, Arc<str>>,
+    sym_ids: HashMap<Arc<str>, u32>,
+    uf_names: FnvMap<u32, Arc<str>>,
+    uf_ids: HashMap<Arc<str>, u32>,
+}
+
+impl Default for TermPool {
+    fn default() -> TermPool {
+        TermPool::in_session(Arc::new(SessionInterner::new()))
+    }
 }
 
 impl TermPool {
+    /// A pool with its own private (single-emulation) session.
     pub fn new() -> TermPool {
         TermPool::default()
+    }
+
+    /// A pool whose symbol/UF names are interned in a shared session.
+    pub fn in_session(session: Arc<SessionInterner>) -> TermPool {
+        TermPool {
+            nodes: Vec::new(),
+            index: HashMap::new(),
+            session,
+            sym_names: FnvMap::default(),
+            sym_ids: HashMap::new(),
+            uf_names: FnvMap::default(),
+            uf_ids: HashMap::new(),
+        }
+    }
+
+    /// The session this pool interns names into.
+    pub fn session(&self) -> &Arc<SessionInterner> {
+        &self.session
     }
 
     pub fn len(&self) -> usize {
@@ -180,30 +292,36 @@ impl TermPool {
     }
 
     pub fn sym_name(&self, s: SymId) -> &str {
-        &self.syms[s.0 as usize]
+        self.sym_names
+            .get(&s.0)
+            .map(|a| &**a)
+            .expect("symbol not interned through this pool")
     }
 
     pub fn uf_name(&self, u: UfId) -> &str {
-        &self.ufs[u.0 as usize]
+        self.uf_names
+            .get(&u.0)
+            .map(|a| &**a)
+            .expect("UF not interned through this pool")
     }
 
     pub fn intern_sym(&mut self, name: &str) -> SymId {
-        if let Some(&s) = self.sym_index.get(name) {
-            return s;
+        if let Some(&i) = self.sym_ids.get(name) {
+            return SymId(i);
         }
-        let s = SymId(self.syms.len() as u32);
-        self.syms.push(name.to_string());
-        self.sym_index.insert(name.to_string(), s);
+        let (s, arc) = self.session.intern_sym(name);
+        self.sym_ids.insert(arc.clone(), s.0);
+        self.sym_names.insert(s.0, arc);
         s
     }
 
     pub fn intern_uf(&mut self, name: &str) -> UfId {
-        if let Some(&u) = self.uf_index.get(name) {
-            return u;
+        if let Some(&i) = self.uf_ids.get(name) {
+            return UfId(i);
         }
-        let u = UfId(self.ufs.len() as u32);
-        self.ufs.push(name.to_string());
-        self.uf_index.insert(name.to_string(), u);
+        let (u, arc) = self.session.intern_uf(name);
+        self.uf_ids.insert(arc.clone(), u.0);
+        self.uf_names.insert(u.0, arc);
         u
     }
 
@@ -660,6 +778,39 @@ pub fn eval(
 mod tests {
     use super::*;
     use crate::util::{check_cases, Rng};
+
+    #[test]
+    fn session_interner_shares_ids_across_pools() {
+        let session = Arc::new(SessionInterner::new());
+        let mut p1 = TermPool::in_session(session.clone());
+        let mut p2 = TermPool::in_session(session.clone());
+        let a = p1.symbol("tid.x", 32);
+        let b = p2.symbol("tid.x", 32);
+        // same SymId in both pools, interned exactly once in the session
+        match (p1.node(a), p2.node(b)) {
+            (Node::Sym { sym: s1, .. }, Node::Sym { sym: s2, .. }) => assert_eq!(s1, s2),
+            other => panic!("expected symbols, got {other:?}"),
+        }
+        assert_eq!(session.sym_count(), 1);
+        assert_eq!(p1.sym_name(SymId(0)), "tid.x");
+        assert_eq!(p2.sym_name(SymId(0)), "tid.x");
+        let u1 = p1.intern_uf("load.global.f32");
+        let u2 = p2.intern_uf("load.global.f32");
+        assert_eq!(u1, u2);
+        assert_eq!(session.uf_count(), 1);
+    }
+
+    #[test]
+    fn private_pools_keep_independent_sessions() {
+        let mut p1 = TermPool::new();
+        let mut p2 = TermPool::new();
+        p1.intern_sym("only-in-p1");
+        assert_eq!(p1.session().sym_count(), 1);
+        assert_eq!(p2.session().sym_count(), 0);
+        p2.intern_sym("x");
+        p2.intern_sym("y");
+        assert_eq!(p2.session().sym_count(), 2);
+    }
 
     #[test]
     fn hash_consing_dedups() {
