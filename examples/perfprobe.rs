@@ -1,10 +1,11 @@
 //! Performance probe: simulator throughput, analysis throughput through
-//! the staged pipeline, and the artifact cache's cold→warm behaviour.
+//! the staged pipeline, the artifact cache's cold→warm behaviour, and the
+//! on-disk store's cross-process warm path.
 //!
 //!     cargo run --release --example perfprobe [--stats]
 
-use ptxasw::coordinator::report;
-use ptxasw::pipeline::Pipeline;
+use ptxasw::coordinator::{report, run_suite_on, PipelineConfig};
+use ptxasw::pipeline::{DiskStore, Pipeline, Stage};
 use ptxasw::shuffle::DetectOpts;
 use ptxasw::sim::run;
 use ptxasw::suite::{by_name, generate, workload};
@@ -71,7 +72,37 @@ fn main() {
         hits + misses
     );
 
+    // on-disk persistence: a second pipeline over the same cache
+    // directory (stand-in for a fresh process) must serve the whole
+    // benchmark — simulation included — from disk
+    let dir = std::env::temp_dir().join(format!("ptxasw-perfprobe-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let bench = [by_name("jacobi").unwrap()];
+    let cfg = PipelineConfig::default();
+
+    let cold_p = Pipeline::new().with_disk(DiskStore::open_default(&dir).unwrap());
+    let t3 = Instant::now();
+    assert!(run_suite_on(&cold_p, &bench, &cfg).iter().all(|r| r.is_ok()));
+    let disk_cold = t3.elapsed();
+
+    let warm_p = Pipeline::new().with_disk(DiskStore::open_default(&dir).unwrap());
+    let t4 = Instant::now();
+    assert!(run_suite_on(&warm_p, &bench, &cfg).iter().all(|r| r.is_ok()));
+    let disk_warm = t4.elapsed();
+    let ws = warm_p.stats();
+    println!(
+        "disk store (jacobi): cold {:.1}ms → warm {:.1}ms \
+         ({} disk hits; {} emulations, {} simulations on the warm run)",
+        disk_cold.as_secs_f64() * 1e3,
+        disk_warm.as_secs_f64() * 1e3,
+        ws.disk.hits,
+        ws.stage_count(Stage::Emulate),
+        ws.stage_count(Stage::Validate),
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+
     if want_stats {
         println!("{}", report::pipeline_stats(&p.stats()));
+        println!("{}", report::pipeline_stats(&ws));
     }
 }

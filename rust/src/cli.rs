@@ -43,7 +43,10 @@ impl Args {
 
     /// Known boolean flags (never consume a value).
     fn is_flag(key: &str) -> bool {
-        matches!(key, "help" | "report" | "list" | "quiet" | "force" | "stats")
+        matches!(
+            key,
+            "help" | "report" | "list" | "quiet" | "force" | "stats" | "no-disk-cache"
+        )
     }
 
     pub fn flag(&self, name: &str) -> bool {
@@ -93,6 +96,14 @@ mod tests {
         // `--stats` must not swallow the following positional
         let a = parse("suite --stats jacobi");
         assert!(a.flag("stats"));
+        assert_eq!(a.positional, vec!["jacobi"]);
+    }
+
+    #[test]
+    fn disk_cache_flags() {
+        let a = parse("suite --no-disk-cache jacobi --cache-dir /tmp/x");
+        assert!(a.flag("no-disk-cache"));
+        assert_eq!(a.opt("cache-dir"), Some("/tmp/x"));
         assert_eq!(a.positional, vec!["jacobi"]);
     }
 

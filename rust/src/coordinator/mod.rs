@@ -10,11 +10,16 @@
 //! Parsed → Emulated → Detected → Synthesized → Validated → Scored
 //! ```
 //!
-//! The first four stages are content-addressed by a stable kernel hash
-//! and cached in the pipeline's [`crate::pipeline::ArtifactCache`]: one
-//! emulation and one detection are computed per unique kernel no matter
-//! how many synthesis variants, architectures, or repeated suite runs
-//! consume them. Emulations share a single
+//! Every stage is content-addressed and cached in the pipeline's
+//! [`crate::pipeline::ArtifactCache`]: the analysis stages by a stable
+//! kernel hash, validation/scoring by that hash combined with the
+//! [`crate::suite::WorkloadFingerprint`] of the simulator workload (which
+//! is itself a cached stage, generated once per benchmark instead of once
+//! per task). One emulation and one detection are computed per unique
+//! kernel no matter how many synthesis variants, architectures, or
+//! repeated suite runs consume them, and re-runs over the same pipeline —
+//! or over a pipeline attached to the same on-disk store — skip
+//! simulation too. Emulations share a single
 //! [`crate::sym::SessionInterner`], so symbol/UF names are interned once
 //! per session rather than once per kernel.
 //!
@@ -49,7 +54,7 @@ use crate::ptx::ast::Kernel;
 use crate::ptx::printer::ContentHash;
 use crate::shuffle::{DetectOpts, Detection, Variant};
 use crate::sim::{SimError, SimStats};
-use crate::suite::{workload, Benchmark, Pattern};
+use crate::suite::{Benchmark, Pattern, WorkloadFingerprint};
 use queue::WorkQueue;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -229,6 +234,8 @@ enum Task {
 /// Per-version assembly cell (baseline or one variant).
 struct SlotCell {
     kernel: Mutex<Option<Arc<Kernel>>>,
+    /// Content address of this version's kernel (keys `Validated`/`Scored`).
+    hash: Mutex<Option<ContentHash>>,
     validated: Mutex<Option<Arc<stages::Validated>>>,
     reports: Mutex<Vec<Option<PerfReport>>>,
 }
@@ -237,6 +244,7 @@ impl SlotCell {
     fn new(narch: usize) -> SlotCell {
         SlotCell {
             kernel: Mutex::new(None),
+            hash: Mutex::new(None),
             validated: Mutex::new(None),
             reports: Mutex::new((0..narch).map(|_| None).collect()),
         }
@@ -246,6 +254,8 @@ impl SlotCell {
 /// Per-benchmark assembly cell: tasks fill it, the last piece finalizes.
 struct BenchCell {
     hash: Mutex<Option<ContentHash>>,
+    /// Workload fingerprint shared by every version of this benchmark.
+    wfp: Mutex<Option<WorkloadFingerprint>>,
     detection: Mutex<Option<Detection>>,
     analysis_time: Mutex<Duration>,
     /// `slots[0]` = baseline, `slots[1 + vi]` = variant `vi`.
@@ -261,6 +271,7 @@ impl BenchCell {
     fn new(nvar: usize, narch: usize, pieces: usize) -> BenchCell {
         BenchCell {
             hash: Mutex::new(None),
+            wfp: Mutex::new(None),
             detection: Mutex::new(None),
             analysis_time: Mutex::new(Duration::ZERO),
             slots: (0..1 + nvar).map(|_| SlotCell::new(narch)).collect(),
@@ -309,16 +320,17 @@ impl SuiteRun<'_> {
         *cell.detection.lock().unwrap() = Some(det.detection.clone());
         *cell.analysis_time.lock().unwrap() = det.analysis_time();
 
-        let (nx, ny, nz) = sim_sizes(b);
-        let wl = workload(b, nx, ny, nz, self.cfg.seed);
-        let v = match stages::validate(self.p, &parsed.kernel, wl, None) {
+        let wl = self.p.workload_art(b, sim_sizes(b), self.cfg.seed);
+        *cell.wfp.lock().unwrap() = Some(wl.fingerprint);
+        let v = match self.p.validated(&parsed.kernel, parsed.hash, &wl, None) {
             Ok(v) => v,
             Err(e) => {
                 return self.fail(bi, all_pieces, PipelineError::Sim(b.name.into(), e));
             }
         };
         *cell.slots[0].kernel.lock().unwrap() = Some(parsed.kernel.clone());
-        *cell.slots[0].validated.lock().unwrap() = Some(Arc::new(v));
+        *cell.slots[0].hash.lock().unwrap() = Some(parsed.hash);
+        *cell.slots[0].validated.lock().unwrap() = Some(v);
 
         for ai in 0..narch {
             self.queue.push_local(w, Task::Score { bi, slot: 0, ai });
@@ -354,9 +366,12 @@ impl SuiteRun<'_> {
             .unwrap()
             .clone()
             .expect("baseline simulated");
-        let (nx, ny, nz) = sim_sizes(b);
-        let wl = workload(b, nx, ny, nz, self.cfg.seed);
-        let v = match stages::validate(self.p, &synth.kernel, wl, Some(&baseline.out)) {
+        // served from the workload cache — generated once per benchmark
+        let wl = self.p.workload_art(b, sim_sizes(b), self.cfg.seed);
+        let v = match self
+            .p
+            .validated(&synth.kernel, synth.hash, &wl, Some((hash, baseline.out.as_slice())))
+        {
             Ok(v) => v,
             Err(e) => {
                 return self.fail(bi, 1 + narch, PipelineError::Sim(b.name.into(), e));
@@ -364,7 +379,8 @@ impl SuiteRun<'_> {
         };
         let slot = &cell.slots[1 + vi];
         *slot.kernel.lock().unwrap() = Some(synth.kernel.clone());
-        *slot.validated.lock().unwrap() = Some(Arc::new(v));
+        *slot.hash.lock().unwrap() = Some(synth.hash);
+        *slot.validated.lock().unwrap() = Some(v);
         for ai in 0..narch {
             self.queue.push_local(
                 w,
@@ -381,9 +397,13 @@ impl SuiteRun<'_> {
     fn exec_score(&self, bi: usize, slot: usize, ai: usize) {
         let sc = &self.cells[bi].slots[slot];
         let kernel = sc.kernel.lock().unwrap().clone().expect("slot kernel set");
+        let hash = sc.hash.lock().unwrap().expect("slot hash set");
+        let wfp = self.cells[bi].wfp.lock().unwrap().expect("workload fingerprint set");
         let validated = sc.validated.lock().unwrap().clone().expect("slot simulated");
-        let rep = stages::score(self.p, &kernel, &validated, self.cfg.archs[ai]);
-        sc.reports.lock().unwrap()[ai] = Some(rep);
+        let scored = self
+            .p
+            .scored(&kernel, hash, wfp, &validated, self.cfg.archs[ai]);
+        sc.reports.lock().unwrap()[ai] = Some(scored.report.clone());
         self.retire_pieces(bi, 1);
     }
 
@@ -448,18 +468,16 @@ fn take_outcome(slot: &SlotCell) -> RunOutcome {
         .unwrap()
         .take()
         .expect("slot simulated");
-    let scored = stages::Scored {
-        reports: slot
-            .reports
-            .lock()
-            .unwrap()
-            .iter_mut()
-            .map(|r| r.take().expect("slot scored"))
-            .collect(),
-    };
+    let reports = slot
+        .reports
+        .lock()
+        .unwrap()
+        .iter_mut()
+        .map(|r| r.take().expect("slot scored"))
+        .collect();
     RunOutcome {
         sim_stats: v.stats,
-        reports: scored.reports,
+        reports,
         valid: v.valid,
     }
 }
@@ -572,9 +590,36 @@ mod tests {
         let s2 = p.stats().cache;
         assert_eq!(s2.emulate_misses, 2, "re-runs must not re-emulate");
         assert_eq!(s2.synth_misses, s1.synth_misses, "re-runs must not re-synthesize");
+        assert_eq!(
+            s2.validate_misses, s1.validate_misses,
+            "re-runs must not re-simulate"
+        );
+        assert_eq!(
+            s2.workload_misses, s1.workload_misses,
+            "re-runs must not regenerate workloads"
+        );
+        assert_eq!(s2.score_misses, s1.score_misses, "re-runs must not re-score");
+        assert!(s2.validate_hits > s1.validate_hits);
         for (a, b) in first.iter().zip(&second) {
             let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
             assert_eq!(a.detection.chosen, b.detection.chosen);
         }
+    }
+
+    /// The workload stage is generated once per benchmark and shared by
+    /// the baseline and all variants; validation is workload-keyed.
+    #[test]
+    fn workload_generated_once_per_benchmark() {
+        let b = by_name("vecadd").unwrap();
+        let cfg = PipelineConfig::default();
+        let p = Pipeline::new();
+        run_benchmark_on(&p, &b, &cfg).unwrap();
+        let s = p.stats().cache;
+        assert_eq!(s.workload_misses, 1, "one workload generation");
+        // baseline + each variant re-resolved the cached workload
+        assert_eq!(s.workload_hits as usize, cfg.variants.len());
+        // baseline + variants each simulated exactly once
+        assert_eq!(s.validate_misses as usize, 1 + cfg.variants.len());
+        assert_eq!(s.validate_hits, 0);
     }
 }

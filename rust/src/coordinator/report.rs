@@ -91,43 +91,83 @@ pub fn figure3(r: &BenchResult, archs: &[&Arch]) -> String {
     s
 }
 
-/// `--stats` report: cache hit rates per artifact family and per-stage
-/// wall time for a pipeline session.
+/// `--stats` report: cache hit rates per artifact family (memory and
+/// disk) and per-stage wall time for a pipeline session.
 pub fn pipeline_stats(s: &crate::pipeline::PipelineStats) -> String {
     use crate::pipeline::STAGES;
     let mut out = String::new();
     writeln!(out, "== pipeline stats ==").unwrap();
     writeln!(
         out,
-        "{:<12} {:>8} {:>8} {:>9}",
-        "artifact", "hits", "misses", "hit-rate"
+        "{:<12} {:>8} {:>8} {:>8} {:>9}",
+        "artifact", "hits", "disk", "misses", "hit-rate"
     )
     .unwrap();
-    let mut cache_row = |name: &str, hits: u64, misses: u64| {
-        let total = hits + misses;
+    let mut cache_row = |name: &str, hits: u64, disk: u64, misses: u64| {
+        let total = hits + disk + misses;
         let rate = if total == 0 {
             0.0
         } else {
-            hits as f64 / total as f64
+            (hits + disk) as f64 / total as f64
         };
         writeln!(
             out,
-            "{name:<12} {hits:>8} {misses:>8} {:>8.1}%",
+            "{name:<12} {hits:>8} {disk:>8} {misses:>8} {:>8.1}%",
             rate * 100.0
         )
         .unwrap();
     };
-    cache_row("emulated", s.cache.emulate_hits, s.cache.emulate_misses);
-    cache_row("detected", s.cache.detect_hits, s.cache.detect_misses);
-    cache_row("synthesized", s.cache.synth_hits, s.cache.synth_misses);
+    cache_row("workload", s.cache.workload_hits, 0, s.cache.workload_misses);
+    cache_row("emulated", s.cache.emulate_hits, 0, s.cache.emulate_misses);
+    cache_row(
+        "detected",
+        s.cache.detect_hits,
+        s.cache.detect_disk_hits,
+        s.cache.detect_misses,
+    );
+    cache_row(
+        "synthesized",
+        s.cache.synth_hits,
+        s.cache.synth_disk_hits,
+        s.cache.synth_misses,
+    );
+    cache_row(
+        "validated",
+        s.cache.validate_hits,
+        s.cache.validate_disk_hits,
+        s.cache.validate_misses,
+    );
+    cache_row(
+        "scored",
+        s.cache.score_hits,
+        s.cache.score_disk_hits,
+        s.cache.score_misses,
+    );
     writeln!(
         out,
-        "overall hit rate: {:.1}% ({} hits / {} misses)",
+        "overall hit rate: {:.1}% ({} hits / {} disk / {} misses)",
         s.cache.hit_rate() * 100.0,
         s.cache.hits(),
+        s.cache.disk_hits(),
         s.cache.misses()
     )
     .unwrap();
+    if s.disk.enabled {
+        writeln!(
+            out,
+            "disk cache: {} hits, {} misses, {} stores, {} evictions, {} corrupt \
+             (resident {} bytes)",
+            s.disk.hits,
+            s.disk.misses,
+            s.disk.stores,
+            s.disk.evictions,
+            s.disk.corrupt,
+            s.disk.resident_bytes
+        )
+        .unwrap();
+    } else {
+        writeln!(out, "disk cache: disabled").unwrap();
+    }
     writeln!(out).unwrap();
     writeln!(out, "{:<12} {:>8} {:>12} {:>12}", "stage", "runs", "total", "mean").unwrap();
     for stage in STAGES {
@@ -197,6 +237,10 @@ mod tests {
         assert!(text.contains("emulated"));
         assert!(text.contains("synthesize"));
         assert!(text.contains("hit-rate"));
+        assert!(text.contains("workload"));
+        assert!(text.contains("validated"));
+        assert!(text.contains("scored"));
+        assert!(text.contains("disk cache: disabled"));
         // the suite ran, so emulate/validate/score all have runs
         assert!(s.stage_count(crate::pipeline::Stage::Emulate) >= 1);
         assert!(s.stage_count(crate::pipeline::Stage::Validate) >= 1);

@@ -16,25 +16,59 @@
 use ptxasw::cli::Args;
 use ptxasw::coordinator::{report, run_suite_on, PipelineConfig};
 use ptxasw::perf::by_name as arch_by_name;
-use ptxasw::pipeline::Pipeline;
+use ptxasw::pipeline::{DiskStore, Pipeline};
 use ptxasw::ptx::{parse, print_module};
 use ptxasw::shuffle::{DetectOpts, Variant};
 use ptxasw::suite;
+use std::path::PathBuf;
 
 const HELP: &str = "\
 ptxasw — symbolic emulator + shuffle synthesis for NVIDIA PTX
 
 USAGE:
   ptxasw asm <in.ptx> [--out FILE] [--variant full|noload|nocorner|uniform]
-             [--max-delta N] [--report] [--stats]
+             [--max-delta N] [--report] [--stats] [cache flags]
   ptxasw suite [bench...] [--arch NAME] [--threads N] [--max-delta N]
-             [--fig3 bench] [--stats]
-  ptxasw apps [--threads N] [--stats]
+             [--fig3 bench] [--stats] [cache flags]
+  ptxasw apps [--threads N] [--stats] [cache flags]
   ptxasw artifacts [--dir DIR] [--run NAME]
   ptxasw help
 
-  --stats   print pipeline cache hit rates and per-stage wall time
+  --stats           print pipeline cache hit rates (memory + disk) and
+                    per-stage wall time
+  cache flags:
+  --cache-dir DIR   persist pipeline artifacts under DIR (default:
+                    $RUST_PALLAS_CACHE_DIR, else ~/.cache/rust_pallas);
+                    warm re-runs skip emulation and simulation
+  --no-disk-cache   in-memory caching only (no files written)
 ";
+
+/// Build the session pipeline, attaching the on-disk artifact store
+/// unless `--no-disk-cache` is given. A missing default cache location is
+/// not an error (the disk layer is an accelerator, not a dependency); an
+/// explicit `--cache-dir` that cannot be opened is.
+fn build_pipeline(args: &Args) -> Result<Pipeline, String> {
+    let p = Pipeline::new();
+    if args.flag("no-disk-cache") {
+        return Ok(p);
+    }
+    let explicit = args.opt("cache-dir").map(PathBuf::from);
+    let dir = match explicit.clone().or_else(ptxasw::pipeline::default_dir) {
+        Some(d) => d,
+        None => return Ok(p),
+    };
+    match DiskStore::open_default(&dir) {
+        Ok(store) => Ok(p.with_disk(store)),
+        Err(e) if explicit.is_some() => Err(format!("--cache-dir {}: {e}", dir.display())),
+        Err(e) => {
+            eprintln!(
+                "warning: disk cache disabled ({}: {e})",
+                dir.display()
+            );
+            Ok(p)
+        }
+    }
+}
 
 fn main() {
     let args = match Args::parse(std::env::args().skip(1)) {
@@ -86,7 +120,7 @@ fn cmd_asm(args: &Args) -> Result<(), String> {
         ..DetectOpts::default()
     };
 
-    let p = Pipeline::new();
+    let p = build_pipeline(args)?;
     let mut total = 0;
     for k in module.kernels.iter_mut() {
         // identical kernels in one module share emulation via the cache
@@ -151,7 +185,7 @@ fn cmd_suite(args: &Args) -> Result<(), String> {
             .map(|n| suite::by_name(n).ok_or(format!("unknown benchmark `{n}`")))
             .collect::<Result<_, _>>()?
     };
-    let p = Pipeline::new();
+    let p = build_pipeline(args)?;
     let results = run_suite_on(&p, &benches, &cfg);
     let ok: Vec<_> = results
         .iter()
@@ -185,7 +219,7 @@ fn cmd_apps(args: &Args) -> Result<(), String> {
         ..base
     };
     let benches = suite::apps();
-    let p = Pipeline::new();
+    let p = build_pipeline(args)?;
     let results = run_suite_on(&p, &benches, &cfg);
     let ok: Vec<_> = results
         .iter()

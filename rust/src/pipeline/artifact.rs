@@ -3,7 +3,11 @@
 //! Every artifact is keyed by the [`ContentHash`] of the kernel it was
 //! derived from (plus the options that shaped it), so the three synthesis
 //! variants of one benchmark share a single emulation and identical
-//! kernels across suite runs are computed once. Slots are
+//! kernels across suite runs are computed once. The two workload-dependent
+//! stages at the tail (`Validated`, `Scored`) add a
+//! [`WorkloadFingerprint`] to the key — sizes, RNG seed and the
+//! input-generation spec — so repeated simulation of the same (kernel,
+//! workload) pair is also served from cache. Slots are
 //! `Arc<OnceLock<…>>`: the map mutex is held only for the entry lookup,
 //! concurrent requests for the *same* key block on the slot (exactly one
 //! computes), and requests for different keys proceed in parallel.
@@ -12,6 +16,8 @@ use crate::emu::{EmuError, EmulationResult};
 use crate::ptx::ast::Kernel;
 use crate::ptx::printer::ContentHash;
 use crate::shuffle::{DetectOpts, Detection, Variant};
+use crate::sim::SimError;
+use crate::suite::{Workload, WorkloadFingerprint};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
@@ -25,6 +31,16 @@ pub struct Parsed {
     pub hash: ContentHash,
 }
 
+/// Workload artifact: one benchmark's simulator launch + deterministic
+/// input data + CPU reference, keyed by its [`WorkloadFingerprint`].
+/// Generated once per (spec, sizes, seed) and shared by the baseline and
+/// every synthesis variant.
+#[derive(Debug)]
+pub struct WorkloadArt {
+    pub workload: Workload,
+    pub fingerprint: WorkloadFingerprint,
+}
+
 /// Stage 2 artifact: one symbolic emulation of a kernel.
 #[derive(Debug)]
 pub struct Emulated {
@@ -36,6 +52,12 @@ pub struct Emulated {
 }
 
 /// Stage 3 artifact: shuffle detection over an emulation.
+///
+/// The wall times are properties of the *original* computation and
+/// travel with the artifact: an artifact served from the on-disk store
+/// reports the analysis cost measured when it was first built (possibly
+/// in another process), not this session's near-zero lookup time — the
+/// `--stats` stage table is the per-session view (0 runs on a warm hit).
 #[derive(Debug)]
 pub struct Detected {
     pub detection: Detection,
@@ -46,7 +68,9 @@ pub struct Detected {
 }
 
 impl Detected {
-    /// The paper's Table 2 "Analysis" quantity: emulate + detect.
+    /// The paper's Table 2 "Analysis" quantity: emulate + detect — the
+    /// original computation's cost, historical on cache hits (see the
+    /// struct docs).
     pub fn analysis_time(&self) -> Duration {
         self.emu_elapsed + self.elapsed
     }
@@ -59,48 +83,98 @@ pub struct Synthesized {
     pub variant: Variant,
     /// Content address of the *source* kernel the variant was derived from.
     pub source: ContentHash,
+    /// Content address of the synthesized kernel itself (keys the
+    /// downstream `Validated`/`Scored` artifacts).
+    pub hash: ContentHash,
 }
 
 /// Which artifact family a cache event belongs to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ArtifactKind {
+    Workload,
     Emulated,
     Detected,
     Synthesized,
+    Validated,
+    Scored,
 }
 
-/// Monotonic hit/miss counters, one pair per artifact family.
+/// How a cache lookup was served.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheEvent {
+    /// Served from the in-memory slot.
+    Hit,
+    /// Recovered from the on-disk store (no recompute).
+    DiskHit,
+    /// Computed fresh.
+    Miss,
+}
+
+/// Monotonic hit/disk-hit/miss counters, one triple per artifact family.
 #[derive(Debug, Default)]
 pub struct CacheCounters {
+    workload_hits: AtomicU64,
+    workload_misses: AtomicU64,
     emulate_hits: AtomicU64,
     emulate_misses: AtomicU64,
     detect_hits: AtomicU64,
+    detect_disk_hits: AtomicU64,
     detect_misses: AtomicU64,
     synth_hits: AtomicU64,
+    synth_disk_hits: AtomicU64,
     synth_misses: AtomicU64,
+    validate_hits: AtomicU64,
+    validate_disk_hits: AtomicU64,
+    validate_misses: AtomicU64,
+    score_hits: AtomicU64,
+    score_disk_hits: AtomicU64,
+    score_misses: AtomicU64,
 }
 
 impl CacheCounters {
-    pub fn record(&self, kind: ArtifactKind, computed: bool) {
-        let cell = match (kind, computed) {
-            (ArtifactKind::Emulated, false) => &self.emulate_hits,
-            (ArtifactKind::Emulated, true) => &self.emulate_misses,
-            (ArtifactKind::Detected, false) => &self.detect_hits,
-            (ArtifactKind::Detected, true) => &self.detect_misses,
-            (ArtifactKind::Synthesized, false) => &self.synth_hits,
-            (ArtifactKind::Synthesized, true) => &self.synth_misses,
+    pub fn record(&self, kind: ArtifactKind, event: CacheEvent) {
+        use ArtifactKind::*;
+        use CacheEvent::*;
+        let cell = match (kind, event) {
+            (Workload, Hit) => &self.workload_hits,
+            // workloads and emulations are never disk-persisted
+            (Workload, DiskHit | Miss) => &self.workload_misses,
+            (Emulated, Hit) => &self.emulate_hits,
+            (Emulated, DiskHit | Miss) => &self.emulate_misses,
+            (Detected, Hit) => &self.detect_hits,
+            (Detected, DiskHit) => &self.detect_disk_hits,
+            (Detected, Miss) => &self.detect_misses,
+            (Synthesized, Hit) => &self.synth_hits,
+            (Synthesized, DiskHit) => &self.synth_disk_hits,
+            (Synthesized, Miss) => &self.synth_misses,
+            (Validated, Hit) => &self.validate_hits,
+            (Validated, DiskHit) => &self.validate_disk_hits,
+            (Validated, Miss) => &self.validate_misses,
+            (Scored, Hit) => &self.score_hits,
+            (Scored, DiskHit) => &self.score_disk_hits,
+            (Scored, Miss) => &self.score_misses,
         };
         cell.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> CacheSnapshot {
         CacheSnapshot {
+            workload_hits: self.workload_hits.load(Ordering::Relaxed),
+            workload_misses: self.workload_misses.load(Ordering::Relaxed),
             emulate_hits: self.emulate_hits.load(Ordering::Relaxed),
             emulate_misses: self.emulate_misses.load(Ordering::Relaxed),
             detect_hits: self.detect_hits.load(Ordering::Relaxed),
+            detect_disk_hits: self.detect_disk_hits.load(Ordering::Relaxed),
             detect_misses: self.detect_misses.load(Ordering::Relaxed),
             synth_hits: self.synth_hits.load(Ordering::Relaxed),
+            synth_disk_hits: self.synth_disk_hits.load(Ordering::Relaxed),
             synth_misses: self.synth_misses.load(Ordering::Relaxed),
+            validate_hits: self.validate_hits.load(Ordering::Relaxed),
+            validate_disk_hits: self.validate_disk_hits.load(Ordering::Relaxed),
+            validate_misses: self.validate_misses.load(Ordering::Relaxed),
+            score_hits: self.score_hits.load(Ordering::Relaxed),
+            score_disk_hits: self.score_disk_hits.load(Ordering::Relaxed),
+            score_misses: self.score_misses.load(Ordering::Relaxed),
         }
     }
 }
@@ -108,54 +182,102 @@ impl CacheCounters {
 /// Point-in-time copy of the cache counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheSnapshot {
+    pub workload_hits: u64,
+    pub workload_misses: u64,
     pub emulate_hits: u64,
     pub emulate_misses: u64,
     pub detect_hits: u64,
+    pub detect_disk_hits: u64,
     pub detect_misses: u64,
     pub synth_hits: u64,
+    pub synth_disk_hits: u64,
     pub synth_misses: u64,
+    pub validate_hits: u64,
+    pub validate_disk_hits: u64,
+    pub validate_misses: u64,
+    pub score_hits: u64,
+    pub score_disk_hits: u64,
+    pub score_misses: u64,
 }
 
 impl CacheSnapshot {
+    /// In-memory hits across every family.
     pub fn hits(&self) -> u64 {
-        self.emulate_hits + self.detect_hits + self.synth_hits
+        self.workload_hits
+            + self.emulate_hits
+            + self.detect_hits
+            + self.synth_hits
+            + self.validate_hits
+            + self.score_hits
     }
 
+    /// Artifacts recovered from the on-disk store (no recompute).
+    pub fn disk_hits(&self) -> u64 {
+        self.detect_disk_hits
+            + self.synth_disk_hits
+            + self.validate_disk_hits
+            + self.score_disk_hits
+    }
+
+    /// Artifacts computed fresh.
     pub fn misses(&self) -> u64 {
-        self.emulate_misses + self.detect_misses + self.synth_misses
+        self.workload_misses
+            + self.emulate_misses
+            + self.detect_misses
+            + self.synth_misses
+            + self.validate_misses
+            + self.score_misses
     }
 
+    /// Fraction of lookups served without recompute (memory or disk).
     pub fn hit_rate(&self) -> f64 {
-        let total = self.hits() + self.misses();
+        let served = self.hits() + self.disk_hits();
+        let total = served + self.misses();
         if total == 0 {
             0.0
         } else {
-            self.hits() as f64 / total as f64
+            served as f64 / total as f64
         }
     }
 }
 
 /// One cache slot: exactly one thread computes, everyone else blocks on
 /// the `OnceLock` and clones the finished value (or the error).
-pub type CacheSlot<T> = Arc<OnceLock<Result<Arc<T>, EmuError>>>;
+pub type CacheSlot<T, E = EmuError> = Arc<OnceLock<Result<Arc<T>, E>>>;
 
-type SlotMap<K, T> = Mutex<HashMap<K, CacheSlot<T>>>;
+type SlotMap<K, T, E = EmuError> = Mutex<HashMap<K, CacheSlot<T, E>>>;
+
+/// Infallible slot (workload generation cannot fail).
+pub type PlainSlot<T> = Arc<OnceLock<Arc<T>>>;
+type PlainMap<K, T> = Mutex<HashMap<K, PlainSlot<T>>>;
 
 /// Detection key: kernel + the full [`DetectOpts`] that shaped it.
 pub type DetectKey = (ContentHash, DetectOpts);
 /// Synthesis key: detection key + variant.
 pub type SynthKey = (ContentHash, DetectOpts, Variant);
+/// Validation key: kernel version + workload + (for variants) the
+/// baseline kernel whose output the bit-exactness verdict is against.
+pub type ValidateKey = (ContentHash, WorkloadFingerprint, Option<ContentHash>);
+/// Scoring key: kernel version + workload + architecture.
+pub type ScoreKey = (ContentHash, WorkloadFingerprint, &'static str);
 
 /// Thread-safe, content-addressed artifact store.
 #[derive(Debug, Default)]
 pub struct ArtifactCache {
+    workloads: PlainMap<WorkloadFingerprint, WorkloadArt>,
     emulated: SlotMap<ContentHash, Emulated>,
     detected: SlotMap<DetectKey, Detected>,
     synthesized: SlotMap<SynthKey, Synthesized>,
+    validated: SlotMap<ValidateKey, super::stages::Validated, SimError>,
+    scored: PlainMap<ScoreKey, super::stages::Scored>,
     pub counters: CacheCounters,
 }
 
 impl ArtifactCache {
+    pub fn workload_slot(&self, key: WorkloadFingerprint) -> PlainSlot<WorkloadArt> {
+        self.workloads.lock().unwrap().entry(key).or_default().clone()
+    }
+
     pub fn emu_slot(&self, key: ContentHash) -> CacheSlot<Emulated> {
         self.emulated.lock().unwrap().entry(key).or_default().clone()
     }
@@ -173,8 +295,21 @@ impl ArtifactCache {
             .clone()
     }
 
+    pub fn validate_slot(&self, key: ValidateKey) -> CacheSlot<super::stages::Validated, SimError> {
+        self.validated.lock().unwrap().entry(key).or_default().clone()
+    }
+
+    pub fn score_slot(&self, key: ScoreKey) -> PlainSlot<super::stages::Scored> {
+        self.scored.lock().unwrap().entry(key).or_default().clone()
+    }
+
     /// Number of emulation artifacts resident in the cache.
     pub fn emulated_len(&self) -> usize {
         self.emulated.lock().unwrap().len()
+    }
+
+    /// Number of validated (simulated) artifacts resident in the cache.
+    pub fn validated_len(&self) -> usize {
+        self.validated.lock().unwrap().len()
     }
 }

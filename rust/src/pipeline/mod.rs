@@ -8,37 +8,55 @@
 //! Parsed → Emulated → Detected → Synthesized → Validated → Scored
 //! ```
 //!
-//! with the first four stages content-addressed by a stable hash of the
-//! kernel ([`crate::ptx::kernel_fingerprint`]) and stored in a
-//! thread-safe [`ArtifactCache`]. A [`Pipeline`] owns one
-//! [`SessionInterner`] shared by every emulation it runs, so symbol and
-//! UF names (`%tid.x`, params, `load.global.*`) are interned once per
-//! session instead of once per kernel. Per-stage wall time and cache
-//! hit/miss counters are exposed through [`Pipeline::stats`] for the CLI
-//! `--stats` flag and the coordinator's suite report.
+//! with **every** stage content-addressed: the analysis stages by a stable
+//! hash of the kernel ([`crate::ptx::kernel_fingerprint`]), the two
+//! workload-dependent tail stages by that hash combined with a
+//! [`crate::suite::WorkloadFingerprint`] (sizes, RNG seed,
+//! input-generation spec). Benchmark input generation is itself a cached
+//! stage ([`Pipeline::workload_art`]), so the baseline and every synthesis
+//! variant share one generated workload.
+//!
+//! Artifacts live in a thread-safe in-memory [`ArtifactCache`], optionally
+//! backed by an on-disk [`DiskStore`] ([`Pipeline::with_disk`]): detected,
+//! synthesized, validated and scored artifacts persist across processes,
+//! so a warm re-run skips emulation *and* simulation entirely. A
+//! [`Pipeline`] owns one [`SessionInterner`] shared by every emulation it
+//! runs, so symbol and UF names (`%tid.x`, params, `load.global.*`) are
+//! interned once per session instead of once per kernel. Per-stage wall
+//! time and cache hit/miss counters (memory and disk) are exposed through
+//! [`Pipeline::stats`] for the CLI `--stats` flag and the coordinator's
+//! suite report.
 
 pub mod artifact;
 pub mod stages;
+pub mod store;
 
 pub use artifact::{
-    ArtifactCache, ArtifactKind, CacheSnapshot, Detected, Emulated, Parsed, Synthesized,
+    ArtifactCache, ArtifactKind, CacheEvent, CacheSnapshot, Detected, Emulated, Parsed,
+    Synthesized, WorkloadArt,
 };
 pub use stages::{score, validate, Scored, Validated};
+pub use store::{default_dir, DiskSnapshot, DiskStore, KeyBuilder, StoreKind, DEFAULT_MAX_BYTES};
 
 use crate::emu::{emulate_in_session, EmuError, Limits};
+use crate::perf::Arch;
 use crate::ptx::ast::Kernel;
 use crate::ptx::parser::{parse, ParseError};
 use crate::ptx::printer::{kernel_fingerprint, ContentHash};
 use crate::shuffle::{detect, synthesize, DetectOpts, Variant};
+use crate::sim::SimError;
+use crate::suite::{Benchmark, WorkloadFingerprint};
 use crate::sym::SessionInterner;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// The pipeline's stages, in execution order.
+/// The pipeline's stages, in execution order. `Workload` is the cached
+/// input-generation stage feeding `Validate`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Stage {
     Parse,
+    Workload,
     Emulate,
     Detect,
     Synthesize,
@@ -47,8 +65,9 @@ pub enum Stage {
 }
 
 /// All stages in execution order (for reports).
-pub const STAGES: [Stage; 6] = [
+pub const STAGES: [Stage; 7] = [
     Stage::Parse,
+    Stage::Workload,
     Stage::Emulate,
     Stage::Detect,
     Stage::Synthesize,
@@ -60,6 +79,7 @@ impl Stage {
     pub fn name(self) -> &'static str {
         match self {
             Stage::Parse => "parse",
+            Stage::Workload => "workload",
             Stage::Emulate => "emulate",
             Stage::Detect => "detect",
             Stage::Synthesize => "synthesize",
@@ -71,11 +91,12 @@ impl Stage {
     pub fn index(self) -> usize {
         match self {
             Stage::Parse => 0,
-            Stage::Emulate => 1,
-            Stage::Detect => 2,
-            Stage::Synthesize => 3,
-            Stage::Validate => 4,
-            Stage::Score => 5,
+            Stage::Workload => 1,
+            Stage::Emulate => 2,
+            Stage::Detect => 3,
+            Stage::Synthesize => 4,
+            Stage::Validate => 5,
+            Stage::Score => 6,
         }
     }
 }
@@ -99,6 +120,7 @@ impl StageTimings {
 #[derive(Debug, Clone, Copy, Default)]
 pub struct PipelineStats {
     pub cache: CacheSnapshot,
+    pub disk: DiskSnapshot,
     pub stage_nanos: [u64; STAGES.len()],
     pub stage_runs: [u64; STAGES.len()],
 }
@@ -113,17 +135,20 @@ impl PipelineStats {
     }
 }
 
-/// The pass manager: shared interner session + artifact cache + counters.
+/// The pass manager: shared interner session + artifact cache + counters,
+/// with optional on-disk persistence.
 ///
 /// One `Pipeline` per logical session; `run_suite`-style drivers create a
 /// fresh one per call unless handed an existing pipeline to share the
-/// cache across runs.
+/// cache across runs. Two pipelines (or processes) opened over the same
+/// cache directory share artifacts through the [`DiskStore`].
 #[derive(Debug, Default)]
 pub struct Pipeline {
     session: Arc<SessionInterner>,
     limits: Limits,
     cache: ArtifactCache,
     timings: StageTimings,
+    store: Option<Arc<DiskStore>>,
 }
 
 impl Pipeline {
@@ -137,6 +162,18 @@ impl Pipeline {
             limits,
             ..Pipeline::default()
         }
+    }
+
+    /// Attach an on-disk artifact store; detected/synthesized/validated/
+    /// scored artifacts persist across pipelines and processes.
+    pub fn with_disk(mut self, store: DiskStore) -> Pipeline {
+        self.store = Some(Arc::new(store));
+        self
+    }
+
+    /// The attached disk store, if any.
+    pub fn disk(&self) -> Option<&DiskStore> {
+        self.store.as_deref()
     }
 
     /// The interner session every emulation of this pipeline shares.
@@ -155,6 +192,21 @@ impl Pipeline {
         let out = f();
         self.timings.record(stage, t0.elapsed());
         out
+    }
+
+    fn disk_load<T>(
+        &self,
+        kind: StoreKind,
+        key: ContentHash,
+        decode: impl FnOnce(&[u8]) -> Option<T>,
+    ) -> Option<T> {
+        self.store.as_ref()?.load_decoded(kind, key, decode)
+    }
+
+    fn disk_store(&self, kind: StoreKind, key: ContentHash, payload: Vec<u8>) {
+        if let Some(s) = &self.store {
+            s.store(kind, key, &payload);
+        }
     }
 
     /// Admit an already-built kernel (e.g. from the suite generator),
@@ -183,6 +235,35 @@ impl Pipeline {
         })
     }
 
+    /// Workload artifact: simulator launch + deterministic inputs + CPU
+    /// reference for a benchmark, generated once per
+    /// [`WorkloadFingerprint`] and shared by the baseline and every
+    /// variant. In-memory only — regeneration is cheap and deterministic;
+    /// the expensive artifacts *derived* from it persist to disk.
+    pub fn workload_art(
+        &self,
+        b: &Benchmark,
+        (nx, ny, nz): (usize, usize, usize),
+        seed: u64,
+    ) -> Arc<WorkloadArt> {
+        let fingerprint = crate::suite::workload_fingerprint(b, nx, ny, nz, seed);
+        let slot = self.cache.workload_slot(fingerprint);
+        let mut event = CacheEvent::Hit;
+        let out = slot
+            .get_or_init(|| {
+                event = CacheEvent::Miss;
+                self.time(Stage::Workload, || {
+                    Arc::new(WorkloadArt {
+                        workload: crate::suite::workload(b, nx, ny, nz, seed),
+                        fingerprint,
+                    })
+                })
+            })
+            .clone();
+        self.cache.counters.record(ArtifactKind::Workload, event);
+        out
+    }
+
     /// Emulation artifact for a kernel (computing the hash here).
     pub fn emulated(&self, kernel: &Arc<Kernel>) -> Result<Arc<Emulated>, EmuError> {
         self.emulated_hashed(kernel, kernel_fingerprint(kernel))
@@ -196,10 +277,10 @@ impl Pipeline {
         hash: ContentHash,
     ) -> Result<Arc<Emulated>, EmuError> {
         let slot = self.cache.emu_slot(hash);
-        let mut computed = false;
+        let mut event = CacheEvent::Hit;
         let out = slot
             .get_or_init(|| {
-                computed = true;
+                event = CacheEvent::Miss;
                 let t0 = Instant::now();
                 let result = emulate_in_session(kernel, self.limits, self.session.clone())?;
                 let elapsed = t0.elapsed();
@@ -212,12 +293,17 @@ impl Pipeline {
                 }))
             })
             .clone();
-        self.cache.counters.record(ArtifactKind::Emulated, computed);
+        self.cache.counters.record(ArtifactKind::Emulated, event);
         out
     }
 
+    fn detect_disk_key(hash: ContentHash, opts: DetectOpts) -> ContentHash {
+        KeyBuilder::new("detected").hash(hash).opts(opts).finish()
+    }
+
     /// Detection artifact; consumes the cached [`Emulated`] artifact —
-    /// `detect` itself never emulates.
+    /// `detect` itself never emulates, and a disk-served detection skips
+    /// the emulation too.
     pub fn detected(
         &self,
         kernel: &Arc<Kernel>,
@@ -234,24 +320,40 @@ impl Pipeline {
     ) -> Result<Arc<Detected>, EmuError> {
         let key = (hash, opts);
         let slot = self.cache.detect_slot(key);
-        let mut computed = false;
+        let mut event = CacheEvent::Hit;
         let out = slot
             .get_or_init(|| {
-                computed = true;
+                let dkey = Pipeline::detect_disk_key(hash, opts);
+                if let Some(art) = self.disk_load(StoreKind::Detected, dkey, store::decode_detected)
+                {
+                    event = CacheEvent::DiskHit;
+                    return Ok(Arc::new(art));
+                }
+                event = CacheEvent::Miss;
                 let emu = self.emulated_hashed(kernel, hash)?;
                 let t0 = Instant::now();
                 let detection = detect(kernel, &emu.result, opts);
                 let elapsed = t0.elapsed();
                 self.timings.record(Stage::Detect, elapsed);
-                Ok(Arc::new(Detected {
+                let art = Detected {
                     detection,
                     elapsed,
                     emu_elapsed: emu.elapsed,
-                }))
+                };
+                self.disk_store(StoreKind::Detected, dkey, store::encode_detected(&art));
+                Ok(Arc::new(art))
             })
             .clone();
-        self.cache.counters.record(ArtifactKind::Detected, computed);
+        self.cache.counters.record(ArtifactKind::Detected, event);
         out
+    }
+
+    fn synth_disk_key(hash: ContentHash, opts: DetectOpts, variant: Variant) -> ContentHash {
+        KeyBuilder::new("synthesized")
+            .hash(hash)
+            .opts(opts)
+            .u64(store::variant_key_byte(variant))
+            .finish()
     }
 
     /// Synthesized-variant artifact; reuses the cached detection (and
@@ -274,31 +376,132 @@ impl Pipeline {
     ) -> Result<Arc<Synthesized>, EmuError> {
         let key = (hash, opts, variant);
         let slot = self.cache.synth_slot(key);
-        let mut computed = false;
+        let mut event = CacheEvent::Hit;
         let out = slot
             .get_or_init(|| {
-                computed = true;
+                let dkey = Pipeline::synth_disk_key(hash, opts, variant);
+                if let Some(art) =
+                    self.disk_load(StoreKind::Synthesized, dkey, store::decode_synthesized)
+                {
+                    event = CacheEvent::DiskHit;
+                    return Ok(Arc::new(art));
+                }
+                event = CacheEvent::Miss;
                 let det = self.detected_hashed(kernel, hash, opts)?;
                 let t0 = Instant::now();
                 let synthesized = synthesize(kernel, &det.detection, variant);
                 self.timings.record(Stage::Synthesize, t0.elapsed());
-                Ok(Arc::new(Synthesized {
+                let art = Synthesized {
+                    hash: kernel_fingerprint(&synthesized),
                     kernel: Arc::new(synthesized),
                     variant,
                     source: hash,
-                }))
+                };
+                self.disk_store(StoreKind::Synthesized, dkey, store::encode_synthesized(&art));
+                Ok(Arc::new(art))
             })
             .clone();
         self.cache
             .counters
-            .record(ArtifactKind::Synthesized, computed);
+            .record(ArtifactKind::Synthesized, event);
         out
     }
 
-    /// Snapshot of cache counters and per-stage timings.
+    fn validate_disk_key(
+        hash: ContentHash,
+        wfp: WorkloadFingerprint,
+        baseline: Option<ContentHash>,
+    ) -> ContentHash {
+        let mut k = KeyBuilder::new("validated");
+        k.hash(hash).u64(wfp.0).u64(wfp.1);
+        match baseline {
+            None => k.u64(0),
+            Some(b) => k.u64(1).hash(b),
+        };
+        k.finish()
+    }
+
+    /// Validated artifact: one simulator execution of a kernel version
+    /// over a workload, keyed by (kernel, workload, baseline). `baseline`
+    /// carries the content hash of the baseline kernel plus its output —
+    /// the bit-exactness verdict is part of the artifact.
+    pub fn validated(
+        &self,
+        kernel: &Arc<Kernel>,
+        hash: ContentHash,
+        w: &WorkloadArt,
+        baseline: Option<(ContentHash, &[f32])>,
+    ) -> Result<Arc<Validated>, SimError> {
+        let key = (hash, w.fingerprint, baseline.map(|(h, _)| h));
+        let slot = self.cache.validate_slot(key);
+        let mut event = CacheEvent::Hit;
+        let out = slot
+            .get_or_init(|| {
+                let dkey = Pipeline::validate_disk_key(hash, w.fingerprint, baseline.map(|(h, _)| h));
+                if let Some(art) =
+                    self.disk_load(StoreKind::Validated, dkey, store::decode_validated)
+                {
+                    event = CacheEvent::DiskHit;
+                    return Ok(Arc::new(art));
+                }
+                event = CacheEvent::Miss;
+                let v = stages::validate(self, kernel, &w.workload, baseline.map(|(_, o)| o))?;
+                self.disk_store(StoreKind::Validated, dkey, store::encode_validated(&v));
+                Ok(Arc::new(v))
+            })
+            .clone();
+        self.cache.counters.record(ArtifactKind::Validated, event);
+        out
+    }
+
+    fn score_disk_key(hash: ContentHash, wfp: WorkloadFingerprint, arch: &str) -> ContentHash {
+        KeyBuilder::new("scored")
+            .hash(hash)
+            .u64(wfp.0)
+            .u64(wfp.1)
+            .bytes(arch.as_bytes())
+            .finish()
+    }
+
+    /// Scored artifact: the latency-model report for one (kernel,
+    /// workload, architecture) triple.
+    pub fn scored(
+        &self,
+        kernel: &Arc<Kernel>,
+        hash: ContentHash,
+        wfp: WorkloadFingerprint,
+        v: &Validated,
+        arch: &'static Arch,
+    ) -> Arc<Scored> {
+        let key = (hash, wfp, arch.name);
+        let slot = self.cache.score_slot(key);
+        let mut event = CacheEvent::Hit;
+        let out = slot
+            .get_or_init(|| {
+                let dkey = Pipeline::score_disk_key(hash, wfp, arch.name);
+                if let Some(art) = self.disk_load(StoreKind::Scored, dkey, store::decode_scored) {
+                    event = CacheEvent::DiskHit;
+                    return Arc::new(art);
+                }
+                event = CacheEvent::Miss;
+                let s = stages::score(self, kernel, v, arch);
+                self.disk_store(StoreKind::Scored, dkey, store::encode_scored(&s));
+                Arc::new(s)
+            })
+            .clone();
+        self.cache.counters.record(ArtifactKind::Scored, event);
+        out
+    }
+
+    /// Snapshot of cache counters (memory + disk) and per-stage timings.
     pub fn stats(&self) -> PipelineStats {
         let mut s = PipelineStats {
             cache: self.cache.counters.snapshot(),
+            disk: self
+                .store
+                .as_ref()
+                .map(|d| d.snapshot())
+                .unwrap_or_default(),
             ..Default::default()
         };
         for stage in STAGES {
@@ -392,5 +595,50 @@ ret;
         assert_eq!(parsed.len(), 1);
         let again = p.intake((*parsed[0].kernel).clone());
         assert_eq!(parsed[0].hash, again.hash);
+    }
+
+    #[test]
+    fn workload_is_generated_once_per_fingerprint() {
+        let p = Pipeline::new();
+        let b = crate::suite::by_name("vecadd").unwrap();
+        let w1 = p.workload_art(&b, (16, 2, 1), 42);
+        let w2 = p.workload_art(&b, (16, 2, 1), 42);
+        assert!(Arc::ptr_eq(&w1, &w2), "same inputs must share the artifact");
+        // different seed → different artifact
+        let w3 = p.workload_art(&b, (16, 2, 1), 43);
+        assert_ne!(w1.fingerprint, w3.fingerprint);
+        let s = p.stats().cache;
+        assert_eq!(s.workload_misses, 2);
+        assert_eq!(s.workload_hits, 1);
+        assert_eq!(s.stage_count(Stage::Workload), 2);
+    }
+
+    #[test]
+    fn validated_and_scored_are_workload_keyed() {
+        let p = Pipeline::new();
+        let b = crate::suite::by_name("vecadd").unwrap();
+        let w = p.workload_art(&b, (16, 2, 2), 7);
+        let parsed = p.intake(w.workload.kernel.clone());
+        let arch = crate::perf::by_name("Pascal").unwrap();
+
+        let v1 = p.validated(&parsed.kernel, parsed.hash, &w, None).unwrap();
+        let v2 = p.validated(&parsed.kernel, parsed.hash, &w, None).unwrap();
+        assert!(Arc::ptr_eq(&v1, &v2), "second validation must be a cache hit");
+        let s1 = p.scored(&parsed.kernel, parsed.hash, w.fingerprint, &v1, arch);
+        let s2 = p.scored(&parsed.kernel, parsed.hash, w.fingerprint, &v1, arch);
+        assert!(Arc::ptr_eq(&s1, &s2));
+
+        let s = p.stats();
+        assert_eq!(s.cache.validate_misses, 1);
+        assert_eq!(s.cache.validate_hits, 1);
+        assert_eq!(s.cache.score_misses, 1);
+        assert_eq!(s.cache.score_hits, 1);
+        assert_eq!(s.stage_count(Stage::Validate), 1, "one simulation");
+        assert_eq!(s.stage_count(Stage::Score), 1);
+
+        // a different workload re-simulates
+        let w2 = p.workload_art(&b, (16, 2, 2), 8);
+        p.validated(&parsed.kernel, parsed.hash, &w2, None).unwrap();
+        assert_eq!(p.stats().cache.validate_misses, 2);
     }
 }

@@ -1,10 +1,13 @@
 //! The two workload-dependent stages at the tail of the typed chain
 //! `Parsed → Emulated → Detected → Synthesized → Validated → Scored`.
 //!
-//! Unlike the first four stages, validation and scoring depend on a
-//! concrete simulator workload (grid sizes, input data, seed), so they are
-//! not content-addressed — the coordinator drives them as tasks and the
-//! pass manager only accounts their wall time.
+//! Validation and scoring depend on a concrete simulator workload (grid
+//! sizes, input data, seed), so they are keyed by
+//! ([`crate::ptx::kernel_fingerprint`], [`crate::suite::WorkloadFingerprint`])
+//! instead of the kernel hash alone — see [`crate::pipeline::Pipeline::validated`]
+//! and [`crate::pipeline::Pipeline::scored`] for the cached entry points.
+//! The free functions here are the *compute* path those entry points fall
+//! back to on a cache miss.
 
 use crate::perf::{model, Arch, PerfReport};
 use crate::pipeline::{Pipeline, Stage};
@@ -24,33 +27,27 @@ pub struct Validated {
     pub valid: Option<bool>,
 }
 
-/// Stage 6 artifact: the per-architecture reports for one kernel
-/// version, assembled by the coordinator once every [`score`] task for a
-/// slot has retired.
+/// Stage 6 artifact: the latency-model report for one kernel version on
+/// one architecture.
 #[derive(Debug)]
 pub struct Scored {
-    pub reports: Vec<PerfReport>,
+    pub report: PerfReport,
 }
 
 /// Run a kernel version on the warp simulator and compare against the
-/// baseline output (when given).
+/// baseline output (when given). The workload is borrowed — its memory
+/// image is cloned so the cached artifact stays pristine.
 pub fn validate(
     p: &Pipeline,
     kernel: &Kernel,
-    w: Workload,
+    w: &Workload,
     baseline_out: Option<&[f32]>,
 ) -> Result<Validated, SimError> {
     p.time(Stage::Validate, || {
-        let Workload {
-            mut cfg,
-            mem,
-            out_ptr,
-            out_len,
-            ..
-        } = w;
+        let mut cfg = w.cfg.clone();
         cfg.record_trace = true;
-        let r = run(kernel, &cfg, mem)?;
-        let out = r.mem.read_f32s(out_ptr, out_len)?;
+        let r = run(kernel, &cfg, w.mem.clone())?;
+        let out = r.mem.read_f32s(w.out_ptr, w.out_len)?;
         let valid = baseline_out.map(|base| {
             base.len() == out.len()
                 && base
@@ -68,6 +65,8 @@ pub fn validate(
 }
 
 /// Score one validated kernel version on one architecture.
-pub fn score(p: &Pipeline, kernel: &Kernel, v: &Validated, arch: &Arch) -> PerfReport {
-    p.time(Stage::Score, || model(kernel, &v.trace, arch))
+pub fn score(p: &Pipeline, kernel: &Kernel, v: &Validated, arch: &Arch) -> Scored {
+    p.time(Stage::Score, || Scored {
+        report: model(kernel, &v.trace, arch),
+    })
 }

@@ -1,0 +1,819 @@
+//! On-disk persistence for pipeline artifacts.
+//!
+//! The in-memory [`crate::pipeline::ArtifactCache`] makes repeated lookups
+//! free *within* a process; this module extends the content addressing
+//! across processes, so a recompile-heavy workflow (the ACC-Saturator /
+//! JACC use case: the same kernels re-analyzed on every build) pays for
+//! emulation, simulation and scoring once per machine instead of once per
+//! run.
+//!
+//! Layout (one file per artifact, under a format-version directory):
+//!
+//! ```text
+//! <cache-dir>/v1/<kind>/<32-hex-key>.art   artifact (header + payload)
+//! <cache-dir>/v1/<kind>/<32-hex-key>.lru   empty touch marker (last use)
+//! ```
+//!
+//! `<kind>` is one of `detected`, `synthesized`, `validated`, `scored`.
+//! Emulations and workloads are *not* persisted: an emulation's term graph
+//! is interner-relative, and a workload is cheap to regenerate from its
+//! fingerprint inputs — the expensive stages downstream of both are.
+//!
+//! Every file is `MAGIC ∥ version ∥ kind ∥ payload ∥ fnv64(payload)`.
+//! Loads are corruption-tolerant: any header/checksum/decode mismatch
+//! deletes the file, counts it, and falls back to recompute. Writes go
+//! through a temp file + rename so readers never observe a torn artifact.
+//! The store is LRU size-bounded: after each write the store evicts
+//! least-recently-used artifacts (by touch-marker mtime) until the
+//! resident set fits `max_bytes`.
+
+use crate::perf::PerfReport;
+use crate::pipeline::artifact::{Detected, Synthesized};
+use crate::pipeline::stages::{Scored, Validated};
+use crate::ptx::parser::parse_kernel;
+use crate::ptx::printer::{print_kernel, ContentHash};
+use crate::shuffle::{Candidate, DetectOpts, Detection, Variant};
+use crate::sim::{SimStats, WarpEvent};
+use crate::util::fnv64;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, SystemTime};
+
+/// Bump when the artifact encoding changes; old `v<N>` trees are simply
+/// ignored (and eventually reclaimed by the user, not by us).
+pub const STORE_VERSION: u32 = 1;
+const MAGIC: [u8; 4] = *b"RPST";
+/// Default resident-set bound: 256 MiB.
+pub const DEFAULT_MAX_BYTES: u64 = 256 * 1024 * 1024;
+
+/// Artifact families the store persists.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreKind {
+    Detected,
+    Synthesized,
+    Validated,
+    Scored,
+}
+
+pub const STORE_KINDS: [StoreKind; 4] = [
+    StoreKind::Detected,
+    StoreKind::Synthesized,
+    StoreKind::Validated,
+    StoreKind::Scored,
+];
+
+impl StoreKind {
+    pub fn dir(self) -> &'static str {
+        match self {
+            StoreKind::Detected => "detected",
+            StoreKind::Synthesized => "synthesized",
+            StoreKind::Validated => "validated",
+            StoreKind::Scored => "scored",
+        }
+    }
+
+    fn tag(self) -> u8 {
+        match self {
+            StoreKind::Detected => 1,
+            StoreKind::Synthesized => 2,
+            StoreKind::Validated => 3,
+            StoreKind::Scored => 4,
+        }
+    }
+}
+
+/// Point-in-time view of the store's counters (all zero when no store is
+/// attached to the pipeline).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DiskSnapshot {
+    pub enabled: bool,
+    pub hits: u64,
+    pub misses: u64,
+    pub stores: u64,
+    pub evictions: u64,
+    /// Corrupt / truncated / undecodable files discarded on load.
+    pub corrupt: u64,
+    pub resident_bytes: u64,
+}
+
+/// The persistent artifact store. One per cache directory; safe to share
+/// across threads (and, best-effort, across processes: writes are atomic
+/// renames, and a file evicted under a concurrent reader just recomputes).
+#[derive(Debug)]
+pub struct DiskStore {
+    root: PathBuf,
+    max_bytes: u64,
+    evict_lock: Mutex<()>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    stores: AtomicU64,
+    evictions: AtomicU64,
+    corrupt: AtomicU64,
+    resident: AtomicU64,
+}
+
+/// The default cache directory: `$RUST_PALLAS_CACHE_DIR`, else
+/// `$HOME/.cache/rust_pallas`, else `None` (disk cache disabled).
+pub fn default_dir() -> Option<PathBuf> {
+    if let Some(d) = std::env::var_os("RUST_PALLAS_CACHE_DIR") {
+        return Some(PathBuf::from(d));
+    }
+    std::env::var_os("HOME").map(|h| PathBuf::from(h).join(".cache").join("rust_pallas"))
+}
+
+impl DiskStore {
+    /// Open (creating if needed) a store rooted at `dir`, bounded to
+    /// `max_bytes` of resident artifacts.
+    pub fn open(dir: &Path, max_bytes: u64) -> std::io::Result<DiskStore> {
+        let root = dir.join(format!("v{STORE_VERSION}"));
+        for kind in STORE_KINDS {
+            std::fs::create_dir_all(root.join(kind.dir()))?;
+        }
+        let store = DiskStore {
+            root,
+            max_bytes,
+            evict_lock: Mutex::new(()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            stores: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            corrupt: AtomicU64::new(0),
+            resident: AtomicU64::new(0),
+        };
+        store.resident.store(store.scan().iter().map(|e| e.size).sum(), Ordering::Relaxed);
+        Ok(store)
+    }
+
+    /// Open with the default size bound.
+    pub fn open_default(dir: &Path) -> std::io::Result<DiskStore> {
+        DiskStore::open(dir, DEFAULT_MAX_BYTES)
+    }
+
+    pub fn snapshot(&self) -> DiskSnapshot {
+        DiskSnapshot {
+            enabled: true,
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            stores: self.stores.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            corrupt: self.corrupt.load(Ordering::Relaxed),
+            resident_bytes: self.resident.load(Ordering::Relaxed),
+        }
+    }
+
+    fn art_path(&self, kind: StoreKind, key: ContentHash) -> PathBuf {
+        self.root.join(kind.dir()).join(format!("{key}.art"))
+    }
+
+    /// Load and verify an artifact's payload. Any malformed file is
+    /// removed and counted; the caller recomputes.
+    pub fn load(&self, kind: StoreKind, key: ContentHash) -> Option<Vec<u8>> {
+        self.load_decoded(kind, key, |payload| Some(payload.to_vec()))
+    }
+
+    /// Load, verify *and decode* an artifact in one accounting unit: a
+    /// file whose container checks out but whose payload fails the typed
+    /// decoder (format drift within one `STORE_VERSION`) is treated
+    /// exactly like a corrupt file — removed, counted, recomputed — and
+    /// is never reported as a disk hit.
+    pub fn load_decoded<T>(
+        &self,
+        kind: StoreKind,
+        key: ContentHash,
+        decode: impl FnOnce(&[u8]) -> Option<T>,
+    ) -> Option<T> {
+        let path = self.art_path(kind, key);
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(_) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        };
+        match decode_container(&bytes, kind).and_then(decode) {
+            Some(artifact) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                // bump the LRU clock; failure is harmless (falls back to
+                // the artifact's own mtime)
+                let _ = std::fs::File::create(path.with_extension("lru"));
+                Some(artifact)
+            }
+            None => {
+                self.corrupt.fetch_add(1, Ordering::Relaxed);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                let _ = std::fs::remove_file(&path);
+                let _ = std::fs::remove_file(path.with_extension("lru"));
+                None
+            }
+        }
+    }
+
+    /// Persist an artifact payload, then evict down to the size bound.
+    /// I/O failures are swallowed: the disk layer is an accelerator, never
+    /// a correctness dependency.
+    pub fn store(&self, kind: StoreKind, key: ContentHash, payload: &[u8]) {
+        let path = self.art_path(kind, key);
+        let mut bytes = Vec::with_capacity(payload.len() + 17);
+        bytes.extend_from_slice(&MAGIC);
+        bytes.extend_from_slice(&STORE_VERSION.to_le_bytes());
+        bytes.push(kind.tag());
+        bytes.extend_from_slice(payload);
+        bytes.extend_from_slice(&fnv64(payload).to_le_bytes());
+
+        // pid + global nonce: two stores in one process racing on the
+        // same key must not interleave writes into one temp file
+        static TMP_NONCE: AtomicU64 = AtomicU64::new(0);
+        let tmp = path.with_extension(format!(
+            "tmp{}-{}",
+            std::process::id(),
+            TMP_NONCE.fetch_add(1, Ordering::Relaxed)
+        ));
+        let old = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+        if std::fs::write(&tmp, &bytes).is_ok() && std::fs::rename(&tmp, &path).is_ok() {
+            self.stores.fetch_add(1, Ordering::Relaxed);
+            let new = bytes.len() as u64;
+            if new >= old {
+                self.resident.fetch_add(new - old, Ordering::Relaxed);
+            } else {
+                self.resident.fetch_sub(old - new, Ordering::Relaxed);
+            }
+            self.evict_to_limit();
+        } else {
+            let _ = std::fs::remove_file(&tmp);
+        }
+    }
+
+    /// All resident artifacts with size and last-use time.
+    fn scan(&self) -> Vec<Entry> {
+        let mut out = Vec::new();
+        for kind in STORE_KINDS {
+            let dir = self.root.join(kind.dir());
+            let Ok(rd) = std::fs::read_dir(&dir) else { continue };
+            for e in rd.flatten() {
+                let path = e.path();
+                if path.extension().and_then(|x| x.to_str()) != Some("art") {
+                    continue;
+                }
+                let Ok(meta) = e.metadata() else { continue };
+                let touched = std::fs::metadata(path.with_extension("lru"))
+                    .and_then(|m| m.modified())
+                    .or_else(|_| meta.modified())
+                    .unwrap_or(SystemTime::UNIX_EPOCH);
+                out.push(Entry {
+                    path,
+                    size: meta.len(),
+                    touched,
+                });
+            }
+        }
+        out
+    }
+
+    /// Remove least-recently-used artifacts until the resident set fits
+    /// `max_bytes`, overshooting down to a 90% low-water mark so a cache
+    /// sitting at its bound does not pay a full directory scan on every
+    /// subsequent write. The counter is only ever *decremented* by what
+    /// was actually removed — overwriting it with a scan total would
+    /// clobber concurrent `store()` increments and leave the bound
+    /// violated.
+    fn evict_to_limit(&self) {
+        if self.resident.load(Ordering::Relaxed) <= self.max_bytes {
+            return;
+        }
+        let low_water = self.max_bytes - self.max_bytes / 10;
+        let _guard = self.evict_lock.lock().unwrap();
+        let mut entries = self.scan();
+        let mut total: u64 = entries.iter().map(|e| e.size).sum();
+        entries.sort_by(|a, b| a.touched.cmp(&b.touched).then(a.path.cmp(&b.path)));
+        for e in entries {
+            if total <= low_water {
+                break;
+            }
+            if std::fs::remove_file(&e.path).is_ok() {
+                let _ = std::fs::remove_file(e.path.with_extension("lru"));
+                total -= e.size;
+                let _ = self
+                    .resident
+                    .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                        Some(v.saturating_sub(e.size))
+                    });
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+struct Entry {
+    path: PathBuf,
+    size: u64,
+    touched: SystemTime,
+}
+
+// ---------------------------------------------------------------------------
+// Disk keys
+// ---------------------------------------------------------------------------
+
+/// Stable 128-bit key builder for disk filenames over the shared
+/// [`crate::util::Fnv128`] scheme (the `kernel_fingerprint` scheme —
+/// never the process-seeded `DefaultHasher`, keys must be identical
+/// run-to-run).
+pub struct KeyBuilder(crate::util::Fnv128);
+
+impl KeyBuilder {
+    pub fn new(tag: &str) -> KeyBuilder {
+        let mut h = crate::util::Fnv128::new();
+        h.write(tag.as_bytes());
+        KeyBuilder(h)
+    }
+
+    pub fn bytes(&mut self, bs: &[u8]) -> &mut KeyBuilder {
+        self.0.write(bs);
+        self
+    }
+
+    pub fn u64(&mut self, v: u64) -> &mut KeyBuilder {
+        self.0.write_u64(v);
+        self
+    }
+
+    pub fn hash(&mut self, h: ContentHash) -> &mut KeyBuilder {
+        self.u64(h.0).u64(h.1)
+    }
+
+    /// Key the full detection-options struct (exhaustive, see
+    /// [`DetectOpts::key_into`]).
+    pub fn opts(&mut self, o: DetectOpts) -> &mut KeyBuilder {
+        o.key_into(&mut self.0);
+        self
+    }
+
+    pub fn finish(&self) -> ContentHash {
+        let (k0, k1) = self.0.finish();
+        ContentHash(k0, k1)
+    }
+}
+
+fn decode_container(bytes: &[u8], kind: StoreKind) -> Option<&[u8]> {
+    if bytes.len() < 17 || bytes[0..4] != MAGIC {
+        return None;
+    }
+    let version = u32::from_le_bytes(bytes[4..8].try_into().ok()?);
+    if version != STORE_VERSION || bytes[8] != kind.tag() {
+        return None;
+    }
+    let payload = &bytes[9..bytes.len() - 8];
+    let want = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().ok()?);
+    (fnv64(payload) == want).then_some(payload)
+}
+
+// ---------------------------------------------------------------------------
+// Binary codec (little-endian, length-prefixed; no external deps)
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+pub(crate) struct Enc {
+    pub buf: Vec<u8>,
+}
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn i64(&mut self, v: i64) {
+        self.u64(v as u64);
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+}
+
+pub(crate) struct Dec<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(b: &'a [u8]) -> Dec<'a> {
+        Dec { b, i: 0 }
+    }
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.i.checked_add(n)?;
+        let s = self.b.get(self.i..end)?;
+        self.i = end;
+        Some(s)
+    }
+    fn u8(&mut self) -> Option<u8> {
+        Some(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Option<u32> {
+        Some(u32::from_le_bytes(self.take(4)?.try_into().ok()?))
+    }
+    fn u64(&mut self) -> Option<u64> {
+        Some(u64::from_le_bytes(self.take(8)?.try_into().ok()?))
+    }
+    fn i64(&mut self) -> Option<i64> {
+        Some(self.u64()? as i64)
+    }
+    fn f64(&mut self) -> Option<f64> {
+        Some(f64::from_bits(self.u64()?))
+    }
+    fn len(&mut self) -> Option<usize> {
+        let n = self.u64()?;
+        // refuse lengths the remaining buffer cannot possibly hold — a
+        // corrupt length must not drive an OOM allocation
+        (n <= (self.b.len() - self.i) as u64).then_some(n as usize)
+    }
+    fn str(&mut self) -> Option<&'a str> {
+        let n = self.len()?;
+        std::str::from_utf8(self.take(n)?).ok()
+    }
+    fn done(&self) -> bool {
+        self.i == self.b.len()
+    }
+}
+
+fn variant_tag(v: Variant) -> u8 {
+    match v {
+        Variant::Full => 0,
+        Variant::NoLoad => 1,
+        Variant::NoCorner => 2,
+        Variant::UniformBranch => 3,
+    }
+}
+
+fn variant_from(tag: u8) -> Option<Variant> {
+    Some(match tag {
+        0 => Variant::Full,
+        1 => Variant::NoLoad,
+        2 => Variant::NoCorner,
+        3 => Variant::UniformBranch,
+        _ => return None,
+    })
+}
+
+/// Stable byte encoding of a `Variant` for disk keys.
+pub fn variant_key_byte(v: Variant) -> u64 {
+    variant_tag(v) as u64
+}
+
+fn enc_emu_stats(e: &mut Enc, s: &crate::emu::EmuStats) {
+    for v in [
+        s.flows_started,
+        s.flows_finished,
+        s.flows_pruned,
+        s.flows_memoized,
+        s.steps,
+        s.loads,
+        s.stores,
+        s.invalidated_loads,
+        s.uninit_reads,
+        s.barriers,
+        s.forks,
+        s.branches_decided,
+    ] {
+        e.u64(v);
+    }
+}
+
+fn dec_emu_stats(d: &mut Dec) -> Option<crate::emu::EmuStats> {
+    Some(crate::emu::EmuStats {
+        flows_started: d.u64()?,
+        flows_finished: d.u64()?,
+        flows_pruned: d.u64()?,
+        flows_memoized: d.u64()?,
+        steps: d.u64()?,
+        loads: d.u64()?,
+        stores: d.u64()?,
+        invalidated_loads: d.u64()?,
+        uninit_reads: d.u64()?,
+        barriers: d.u64()?,
+        forks: d.u64()?,
+        branches_decided: d.u64()?,
+    })
+}
+
+pub(crate) fn encode_detected(a: &Detected) -> Vec<u8> {
+    let mut e = Enc::default();
+    e.u64(a.detection.chosen.len() as u64);
+    for c in &a.detection.chosen {
+        e.u64(c.dst_stmt as u64);
+        e.u64(c.src_stmt as u64);
+        e.i64(c.delta);
+    }
+    e.u64(a.detection.total_global_loads as u64);
+    match &a.detection.emu_stats {
+        None => e.u8(0),
+        Some(s) => {
+            e.u8(1);
+            enc_emu_stats(&mut e, s);
+        }
+    }
+    e.u64(a.elapsed.as_nanos() as u64);
+    e.u64(a.emu_elapsed.as_nanos() as u64);
+    e.buf
+}
+
+pub(crate) fn decode_detected(bytes: &[u8]) -> Option<Detected> {
+    let mut d = Dec::new(bytes);
+    let n = d.len()?;
+    let mut chosen = Vec::with_capacity(n);
+    for _ in 0..n {
+        chosen.push(Candidate {
+            dst_stmt: d.u64()? as usize,
+            src_stmt: d.u64()? as usize,
+            delta: d.i64()?,
+        });
+    }
+    let total_global_loads = d.u64()? as usize;
+    let emu_stats = match d.u8()? {
+        0 => None,
+        1 => Some(dec_emu_stats(&mut d)?),
+        _ => return None,
+    };
+    let elapsed = Duration::from_nanos(d.u64()?);
+    let emu_elapsed = Duration::from_nanos(d.u64()?);
+    d.done().then_some(Detected {
+        detection: Detection {
+            chosen,
+            total_global_loads,
+            emu_stats,
+        },
+        elapsed,
+        emu_elapsed,
+    })
+}
+
+pub(crate) fn encode_synthesized(a: &Synthesized) -> Vec<u8> {
+    let mut e = Enc::default();
+    e.u8(variant_tag(a.variant));
+    e.u64(a.source.0);
+    e.u64(a.source.1);
+    e.u64(a.hash.0);
+    e.u64(a.hash.1);
+    e.str(&print_kernel(&a.kernel));
+    e.buf
+}
+
+pub(crate) fn decode_synthesized(bytes: &[u8]) -> Option<Synthesized> {
+    let mut d = Dec::new(bytes);
+    let variant = variant_from(d.u8()?)?;
+    let source = ContentHash(d.u64()?, d.u64()?);
+    let hash = ContentHash(d.u64()?, d.u64()?);
+    let kernel = parse_kernel(d.str()?).ok()?;
+    d.done().then_some(Synthesized {
+        kernel: Arc::new(kernel),
+        variant,
+        source,
+        hash,
+    })
+}
+
+pub(crate) fn encode_validated(a: &Validated) -> Vec<u8> {
+    let mut e = Enc::default();
+    e.u8(match a.valid {
+        None => 0,
+        Some(false) => 1,
+        Some(true) => 2,
+    });
+    e.u64(a.out.len() as u64);
+    for &x in &a.out {
+        e.u32(x.to_bits());
+    }
+    let s = &a.stats;
+    for v in [
+        s.warp_instructions,
+        s.thread_instructions,
+        s.global_loads,
+        s.nc_loads,
+        s.shared_loads,
+        s.stores,
+        s.shfls,
+        s.branches,
+        s.divergent_branches,
+        s.uninit_reads,
+    ] {
+        e.u64(v);
+    }
+    e.u64(a.trace.len() as u64);
+    for warp in &a.trace {
+        e.u64(warp.len() as u64);
+        for ev in warp {
+            e.u32(ev.stmt);
+            e.u32(ev.active);
+            e.u32(ev.exec);
+            e.u64(ev.addr);
+        }
+    }
+    e.buf
+}
+
+pub(crate) fn decode_validated(bytes: &[u8]) -> Option<Validated> {
+    let mut d = Dec::new(bytes);
+    let valid = match d.u8()? {
+        0 => None,
+        1 => Some(false),
+        2 => Some(true),
+        _ => return None,
+    };
+    let n = d.len()?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(f32::from_bits(d.u32()?));
+    }
+    let stats = SimStats {
+        warp_instructions: d.u64()?,
+        thread_instructions: d.u64()?,
+        global_loads: d.u64()?,
+        nc_loads: d.u64()?,
+        shared_loads: d.u64()?,
+        stores: d.u64()?,
+        shfls: d.u64()?,
+        branches: d.u64()?,
+        divergent_branches: d.u64()?,
+        uninit_reads: d.u64()?,
+    };
+    let nwarps = d.len()?;
+    let mut trace = Vec::with_capacity(nwarps);
+    for _ in 0..nwarps {
+        let nev = d.len()?;
+        let mut warp = Vec::with_capacity(nev);
+        for _ in 0..nev {
+            warp.push(WarpEvent {
+                stmt: d.u32()?,
+                active: d.u32()?,
+                exec: d.u32()?,
+                addr: d.u64()?,
+            });
+        }
+        trace.push(warp);
+    }
+    d.done().then_some(Validated {
+        out,
+        stats,
+        trace,
+        valid,
+    })
+}
+
+pub(crate) fn encode_scored(a: &Scored) -> Vec<u8> {
+    let mut e = Enc::default();
+    let r = &a.report;
+    e.str(r.arch);
+    e.f64(r.serial_cycles);
+    e.f64(r.issue_cycles);
+    for s in r.stalls {
+        e.f64(s);
+    }
+    e.f64(r.occupancy);
+    e.u32(r.regs_per_thread);
+    e.f64(r.mem_cycles);
+    e.f64(r.dram_cycles);
+    e.f64(r.effective_cycles);
+    e.buf
+}
+
+pub(crate) fn decode_scored(bytes: &[u8]) -> Option<Scored> {
+    let mut d = Dec::new(bytes);
+    // resolve through the arch table so `arch` stays a &'static str
+    let arch = crate::perf::by_name(d.str()?)?.name;
+    let serial_cycles = d.f64()?;
+    let issue_cycles = d.f64()?;
+    let mut stalls = [0f64; 8];
+    for s in &mut stalls {
+        *s = d.f64()?;
+    }
+    let occupancy = d.f64()?;
+    let regs_per_thread = d.u32()?;
+    let mem_cycles = d.f64()?;
+    let dram_cycles = d.f64()?;
+    let effective_cycles = d.f64()?;
+    d.done().then_some(Scored {
+        report: PerfReport {
+            arch,
+            serial_cycles,
+            issue_cycles,
+            stalls,
+            occupancy,
+            regs_per_thread,
+            mem_cycles,
+            dram_cycles,
+            effective_cycles,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "ptxasw-store-unit-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn roundtrip_and_counters() {
+        let dir = tmp("roundtrip");
+        let s = DiskStore::open(&dir, 1 << 20).unwrap();
+        let key = ContentHash(1, 2);
+        assert!(s.load(StoreKind::Validated, key).is_none());
+        s.store(StoreKind::Validated, key, b"hello artifact");
+        assert_eq!(s.load(StoreKind::Validated, key).unwrap(), b"hello artifact");
+        // a second store instance over the same dir sees the artifact
+        let s2 = DiskStore::open(&dir, 1 << 20).unwrap();
+        assert_eq!(s2.load(StoreKind::Validated, key).unwrap(), b"hello artifact");
+        let snap = s.snapshot();
+        assert_eq!((snap.hits, snap.misses, snap.stores), (1, 1, 1));
+        assert!(snap.resident_bytes > 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn kind_and_key_isolation() {
+        let dir = tmp("isolation");
+        let s = DiskStore::open(&dir, 1 << 20).unwrap();
+        s.store(StoreKind::Detected, ContentHash(7, 7), b"det");
+        assert!(s.load(StoreKind::Scored, ContentHash(7, 7)).is_none());
+        assert!(s.load(StoreKind::Detected, ContentHash(7, 8)).is_none());
+        assert_eq!(s.load(StoreKind::Detected, ContentHash(7, 7)).unwrap(), b"det");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_files_are_discarded() {
+        let dir = tmp("corrupt");
+        let s = DiskStore::open(&dir, 1 << 20).unwrap();
+        let key = ContentHash(3, 4);
+        s.store(StoreKind::Scored, key, b"payload-bytes");
+        let path = s.art_path(StoreKind::Scored, key);
+
+        // flip a payload byte → checksum mismatch
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[10] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(s.load(StoreKind::Scored, key).is_none());
+        assert!(!path.exists(), "corrupt file must be removed");
+
+        // truncated file
+        s.store(StoreKind::Scored, key, b"payload-bytes");
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..7]).unwrap();
+        assert!(s.load(StoreKind::Scored, key).is_none());
+        assert!(s.snapshot().corrupt >= 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lru_eviction_respects_bound_and_recency() {
+        let dir = tmp("evict");
+        // payloads of 1000 bytes + 17 header per artifact; the bound
+        // fits two of them above the 90% low-water mark (2160), so
+        // storing a third evicts exactly the least-recently-used one
+        let s = DiskStore::open(&dir, 2400).unwrap();
+        let payload = vec![0u8; 1000];
+        s.store(StoreKind::Validated, ContentHash(1, 0), &payload);
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        s.store(StoreKind::Validated, ContentHash(2, 0), &payload);
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        // touch the older artifact so it becomes most-recently-used
+        assert!(s.load(StoreKind::Validated, ContentHash(1, 0)).is_some());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        s.store(StoreKind::Validated, ContentHash(3, 0), &payload);
+
+        // bound respected…
+        let total: u64 = s.scan().iter().map(|e| e.size).sum();
+        assert!(total <= 2400, "resident {total} exceeds the bound");
+        assert!(s.snapshot().evictions >= 1);
+        // …and the least-recently-used artifact (2) was the one evicted
+        assert!(s.load(StoreKind::Validated, ContentHash(1, 0)).is_some());
+        assert!(s.load(StoreKind::Validated, ContentHash(2, 0)).is_none());
+        assert!(s.load(StoreKind::Validated, ContentHash(3, 0)).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn key_builder_is_stable() {
+        let a = KeyBuilder::new("t").u64(1).hash(ContentHash(2, 3)).finish();
+        let b = KeyBuilder::new("t").u64(1).hash(ContentHash(2, 3)).finish();
+        assert_eq!(a, b);
+        let c = KeyBuilder::new("t").u64(2).hash(ContentHash(2, 3)).finish();
+        assert_ne!(a, c);
+        let d = KeyBuilder::new("u").u64(1).hash(ContentHash(2, 3)).finish();
+        assert_ne!(a, d);
+    }
+}

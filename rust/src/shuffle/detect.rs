@@ -44,6 +44,23 @@ impl Default for DetectOpts {
     }
 }
 
+impl DetectOpts {
+    /// Feed every field into a stable 128-bit key (the disk cache's
+    /// counterpart of the in-memory `(ContentHash, DetectOpts)` key).
+    /// Exhaustive destructuring on purpose: adding a field refuses to
+    /// compile here until it is made part of the key, keeping the
+    /// "a future field automatically becomes part of the cache key"
+    /// guarantee true on disk as well.
+    pub fn key_into(&self, h: &mut crate::util::Fnv128) {
+        let DetectOpts {
+            max_abs_delta,
+            include_shared,
+        } = *self;
+        h.write_u64(max_abs_delta as u64);
+        h.write_u64(include_shared as u64);
+    }
+}
+
 /// Detection result (the numbers Table 2 reports).
 #[derive(Debug, Clone, Default)]
 pub struct Detection {

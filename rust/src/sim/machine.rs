@@ -381,29 +381,46 @@ impl<'a> Machine<'a> {
                     let cv = self.read_operand(&mut lanes[i], c, 32, ctaid)? as u32;
                     let mv = self.read_operand(&mut lanes[i], mask, 32, ctaid)? as u32;
                     let lane = i as u32;
-                    let (j, in_range) = match mode {
+                    // PTX ISA `c`-operand encoding: clamp value in bits
+                    // 0–4, segment mask in bits 8–12. Lanes are bounded to
+                    // their segment:
+                    //   maxLane = (lane & segmask) | (cval & ~segmask)
+                    //   minLane =  lane & segmask
+                    // maxLane is the upper bound for Down/Bfly/Idx and the
+                    // *lower* bound for Up (where the conventional clamp
+                    // value is 0, making it the segment base).
+                    let bval = bv & 0x1f;
+                    let cval = cv & 0x1f;
+                    let segmask = (cv >> 8) & 0x1f;
+                    let max_lane = (lane & segmask) | (cval & !segmask & 0x1f);
+                    let min_lane = lane & segmask;
+                    // source index as i32: Up can go below the segment
+                    // base (even negative), Down/Bfly above the clamp
+                    let (j, pval) = match mode {
                         ShflMode::Up => {
-                            let j = lane.wrapping_sub(bv);
-                            (j, bv <= lane && j >= (cv >> 8 & 0x1f))
+                            let j = lane as i32 - bval as i32;
+                            (j, j >= max_lane as i32)
                         }
                         ShflMode::Down => {
-                            let j = lane + bv;
-                            (j, j <= (cv & 0x1f).max(cv & 0x1f))
+                            let j = (lane + bval) as i32;
+                            (j, j <= max_lane as i32)
                         }
                         ShflMode::Bfly => {
-                            let j = lane ^ bv;
-                            (j, j <= (cv & 0x1f))
+                            let j = (lane ^ bval) as i32;
+                            (j, j <= max_lane as i32)
                         }
                         ShflMode::Idx => {
-                            let j = bv & 0x1f;
-                            (j, j <= (cv & 0x1f))
+                            let j = (min_lane | (bval & !segmask & 0x1f)) as i32;
+                            (j, j <= max_lane as i32)
                         }
                     };
-                    let valid = in_range
-                        && j < 32
-                        && (mv >> j) & 1 == 1
-                        && (exec_mask >> j) & 1 == 1;
-                    let val = if valid { srcv[j as usize] } else { srcv[i] };
+                    // out-of-segment source: read the lane's own value
+                    // (in-range j is always < 32 by construction)
+                    let src_lane = if pval { j as u32 } else { lane };
+                    let valid = pval
+                        && (mv >> src_lane) & 1 == 1
+                        && (exec_mask >> src_lane) & 1 == 1;
+                    let val = if valid { srcv[src_lane as usize] } else { srcv[i] };
                     lanes[i].regs[did] = val & 0xFFFF_FFFF;
                     lanes[i].written[did] = true;
                     if let Some(p) = pid {
@@ -508,17 +525,54 @@ impl<'a> Machine<'a> {
         Ok(base.wrapping_add(addr.offset as u64))
     }
 
-    fn load_mem(&mut self, space: Space, addr: u64, bytes: u32) -> Result<u64, SimError> {
-        if space == Space::Shared || addr >= SHARED_BASE {
-            // `.shared` instructions may use window-relative addresses
-            let o = addr.checked_sub(SHARED_BASE).unwrap_or(addr) as usize;
-            let mut v = 0u64;
-            for k in 0..bytes as usize {
-                v |= (self.shared[o + k] as u64) << (8 * k);
-            }
-            Ok(v)
+    /// Resolve an address into the per-block shared window, bounds-checked.
+    ///
+    /// `.shared` accesses accept window-relative addresses (offsets below
+    /// the window size, as PTX shared-state-space addressing starts at 0)
+    /// or generic addresses at `SHARED_BASE`; anything else — including a
+    /// below-base address that is not a valid window offset — is an
+    /// out-of-bounds error, never a silent alias onto global memory.
+    /// Returns `None` when the access belongs to global memory.
+    fn shared_offset(
+        &self,
+        space: Space,
+        addr: u64,
+        bytes: u32,
+        kind: &'static str,
+    ) -> Result<Option<usize>, SimError> {
+        let window = self.shared.len() as u64;
+        let o = if addr >= SHARED_BASE {
+            addr - SHARED_BASE
+        } else if space == Space::Shared {
+            addr // window-relative
         } else {
-            Ok(self.mem.load(addr, bytes)?)
+            return Ok(None);
+        };
+        let in_bounds = o
+            .checked_add(bytes as u64)
+            .map(|end| end <= window)
+            .unwrap_or(false);
+        if !in_bounds {
+            return Err(SimError::Mem(MemError::OutOfBounds {
+                kind,
+                addr,
+                bytes: bytes as u64,
+                size: window,
+            }));
+        }
+        Ok(Some(o as usize))
+    }
+
+    fn load_mem(&mut self, space: Space, addr: u64, bytes: u32) -> Result<u64, SimError> {
+        match self.shared_offset(space, addr, bytes, "shared load")? {
+            Some(o) => {
+                let mut v = 0u64;
+                for k in 0..bytes as usize {
+                    v |= (self.shared[o + k] as u64) << (8 * k);
+                }
+                Ok(v)
+            }
+            None => Ok(self.mem.load(addr, bytes)?),
         }
     }
 
@@ -529,15 +583,14 @@ impl<'a> Machine<'a> {
         bytes: u32,
         v: u64,
     ) -> Result<(), SimError> {
-        if space == Space::Shared || addr >= SHARED_BASE {
-            // `.shared` instructions may use window-relative addresses
-            let o = addr.checked_sub(SHARED_BASE).unwrap_or(addr) as usize;
-            for k in 0..bytes as usize {
-                self.shared[o + k] = (v >> (8 * k)) as u8;
+        match self.shared_offset(space, addr, bytes, "shared store")? {
+            Some(o) => {
+                for k in 0..bytes as usize {
+                    self.shared[o + k] = (v >> (8 * k)) as u8;
+                }
+                Ok(())
             }
-            Ok(())
-        } else {
-            Ok(self.mem.store(addr, bytes, v)?)
+            None => Ok(self.mem.store(addr, bytes, v)?),
         }
     }
 
@@ -1114,6 +1167,194 @@ ret;
         let cfg = SimConfig::new(1, 1, vec![out, a, 5]);
         let r = run(&k, &cfg, mem).unwrap();
         assert_eq!(r.mem.read_f32s(out, 1).unwrap()[0], 15.0);
+    }
+
+    /// Run one full-warp `shfl.sync.<mode>` with immediate `b`/`c`
+    /// operands; returns (result, predicate) per lane. Lane values are
+    /// the lane ids, so the result *is* the source-lane table.
+    fn run_shfl(mode: &str, b: u32, c: u32) -> (Vec<u32>, Vec<u32>) {
+        let src = format!(
+            r#"
+.visible .entry sh(.param .u64 dst, .param .u64 prd){{
+.reg .b32 %r<8>; .reg .b64 %rd<8>; .reg .pred %p<2>;
+ld.param.u64 %rd1, [dst];
+ld.param.u64 %rd2, [prd];
+cvta.to.global.u64 %rd1, %rd1;
+cvta.to.global.u64 %rd2, %rd2;
+mov.u32 %r1, %tid.x;
+activemask.b32 %r2;
+shfl.sync.{mode}.b32 %r3|%p1, %r1, {b}, {c}, %r2;
+selp.b32 %r4, 1, 0, %p1;
+mul.wide.s32 %rd3, %r1, 4;
+add.s64 %rd4, %rd1, %rd3;
+st.global.b32 [%rd4], %r3;
+add.s64 %rd5, %rd2, %rd3;
+st.global.b32 [%rd5], %r4;
+ret;
+}}
+"#
+        );
+        let k = parse_kernel(&src).unwrap();
+        let mem = GlobalMem::new(1 << 12);
+        let mut alloc = Allocator::new(&mem);
+        let (dst, prd) = (alloc.alloc(128), alloc.alloc(128));
+        let cfg = SimConfig::new(1, 32, vec![dst, prd]);
+        let r = run(&k, &cfg, mem).unwrap();
+        (
+            r.mem.read_u32s(dst, 32).unwrap(),
+            r.mem.read_u32s(prd, 32).unwrap(),
+        )
+    }
+
+    /// PTX ISA `c` encoding: clamp in bits 0–4, segment mask in bits
+    /// 8–12. `c = 0x181f` splits the warp into 8-lane segments with the
+    /// clamp at each segment's end: down-by-2 shifts within the segment
+    /// and the last two lanes of each segment fall out of range.
+    #[test]
+    fn shfl_down_segmented_clamp_table() {
+        let (vals, preds) = run_shfl("down", 2, 0x181f);
+        #[rustfmt::skip]
+        let expect = [
+             2,  3,  4,  5,  6,  7,  6,  7,
+            10, 11, 12, 13, 14, 15, 14, 15,
+            18, 19, 20, 21, 22, 23, 22, 23,
+            26, 27, 28, 29, 30, 31, 30, 31,
+        ];
+        let expect_p = [1, 1, 1, 1, 1, 1, 0, 0].repeat(4);
+        assert_eq!(vals, expect, "down source lanes");
+        assert_eq!(preds, expect_p, "down predicates");
+    }
+
+    /// Up-by-3 over 8-lane segments (`c = 0x1800`, clamp 0): the lower
+    /// bound is the *lane's segment base* (lane & segmask), not the raw
+    /// segment-mask bits — the first three lanes of every segment keep
+    /// their own value with a false predicate.
+    #[test]
+    fn shfl_up_segmented_base_table() {
+        let (vals, preds) = run_shfl("up", 3, 0x1800);
+        #[rustfmt::skip]
+        let expect = [
+             0,  1,  2,  0,  1,  2,  3,  4,
+             8,  9, 10,  8,  9, 10, 11, 12,
+            16, 17, 18, 16, 17, 18, 19, 20,
+            24, 25, 26, 24, 25, 26, 27, 28,
+        ];
+        let expect_p = [0, 0, 0, 1, 1, 1, 1, 1].repeat(4);
+        assert_eq!(vals, expect, "up source lanes");
+        assert_eq!(preds, expect_p, "up predicates");
+    }
+
+    /// Up with a nonzero clamp (`c = 4`, no segments): per the ISA,
+    /// maxLane is Up's *lower* bound, so lanes whose source index
+    /// `lane - 1` falls below 4 keep their own value with a false
+    /// predicate — even though the index itself is ≥ 0.
+    #[test]
+    fn shfl_up_nonzero_clamp_table() {
+        let (vals, preds) = run_shfl("up", 1, 4);
+        let expect: Vec<u32> = (0..32u32).map(|l| if l >= 5 { l - 1 } else { l }).collect();
+        let expect_p: Vec<u32> = (0..32u32).map(|l| (l >= 5) as u32).collect();
+        assert_eq!(vals, expect, "up source lanes");
+        assert_eq!(preds, expect_p, "up predicates");
+    }
+
+    /// Butterfly with the full-warp clamp (`c = 0x1f`): every lane pairs
+    /// with `lane ^ 1`, always in range.
+    #[test]
+    fn shfl_bfly_xor_table() {
+        let (vals, preds) = run_shfl("bfly", 1, 0x1f);
+        let expect: Vec<u32> = (0..32u32).map(|l| l ^ 1).collect();
+        assert_eq!(vals, expect, "bfly source lanes");
+        assert_eq!(preds, vec![1; 32], "bfly predicates");
+    }
+
+    /// Idx must honour the segment mask: `j = (lane & segmask) |
+    /// (b & ~segmask)`. With 8-lane segments and b = 9, every lane reads
+    /// its segment's lane 1 (9 & ~0x18 = 1) — not global lane 9.
+    #[test]
+    fn shfl_idx_segmented_table() {
+        let (vals, preds) = run_shfl("idx", 9, 0x181f);
+        #[rustfmt::skip]
+        let expect = [
+             1,  1,  1,  1,  1,  1,  1,  1,
+             9,  9,  9,  9,  9,  9,  9,  9,
+            17, 17, 17, 17, 17, 17, 17, 17,
+            25, 25, 25, 25, 25, 25, 25, 25,
+        ];
+        assert_eq!(vals, expect, "idx source lanes");
+        assert_eq!(preds, vec![1; 32], "idx predicates");
+    }
+
+    /// A `.shared` access outside the block's shared window must be an
+    /// out-of-bounds error — never a silent alias onto itself or global
+    /// memory (the old `checked_sub(SHARED_BASE).unwrap_or(addr)` bug).
+    #[test]
+    fn shared_out_of_window_is_an_error() {
+        let k = parse_kernel(
+            r#"
+.visible .entry bad(.param .u64 out){
+.reg .b32 %r<4>; .reg .b64 %rd<4>;
+.shared .align 4 .b8 win[64];
+mov.u32 %r1, 7;
+st.shared.b32 [4096], %r1;
+ret;
+}
+"#,
+        )
+        .unwrap();
+        let mem = GlobalMem::new(1 << 14);
+        let mut alloc = Allocator::new(&mem);
+        let out = alloc.alloc(4);
+        let cfg = SimConfig::new(1, 1, vec![out]);
+        let err = run(&k, &cfg, mem).unwrap_err();
+        assert!(
+            matches!(err, SimError::Mem(MemError::OutOfBounds { .. })),
+            "expected OutOfBounds, got {err:?}"
+        );
+    }
+
+    /// Window-relative `.shared` addressing (offsets below the window
+    /// size) keeps working and stays bounds-checked at the window edge.
+    #[test]
+    fn shared_window_relative_roundtrips_and_is_bounded() {
+        let k = parse_kernel(
+            r#"
+.visible .entry ok(.param .u64 out){
+.reg .b32 %r<4>; .reg .b64 %rd<4>;
+.shared .align 4 .b8 win[64];
+ld.param.u64 %rd1, [out];
+cvta.to.global.u64 %rd1, %rd1;
+mov.u32 %r1, 1234;
+st.shared.b32 [8], %r1;
+ld.shared.b32 %r2, [8];
+st.global.b32 [%rd1], %r2;
+ret;
+}
+"#,
+        )
+        .unwrap();
+        let mem = GlobalMem::new(1 << 12);
+        let mut alloc = Allocator::new(&mem);
+        let out = alloc.alloc(4);
+        let cfg = SimConfig::new(1, 1, vec![out]);
+        let r = run(&k, &cfg, mem).unwrap();
+        assert_eq!(r.mem.read_u32s(out, 1).unwrap()[0], 1234);
+
+        // one byte past the window edge errors
+        let k2 = parse_kernel(
+            r#"
+.visible .entry edge(.param .u64 out){
+.reg .b32 %r<4>; .reg .b64 %rd<4>;
+.shared .align 4 .b8 win[64];
+mov.u32 %r1, 7;
+st.shared.b32 [61], %r1;
+ret;
+}
+"#,
+        )
+        .unwrap();
+        let mem2 = GlobalMem::new(1 << 12);
+        let cfg2 = SimConfig::new(1, 1, vec![0x1000]);
+        assert!(run(&k2, &cfg2, mem2).is_err(), "store crossing the window edge");
     }
 
     #[test]

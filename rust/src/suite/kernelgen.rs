@@ -381,7 +381,54 @@ fn whispering() -> Benchmark {
 // Workload construction + CPU reference
 // ---------------------------------------------------------------------------
 
+/// Bump when the *meaning* of the workload inputs changes (input data
+/// distribution, layout, launch shape): stale fingerprints must not alias
+/// freshly generated workloads.
+pub const WORKLOAD_SPEC_VERSION: u32 = 1;
+
+/// Stable 128-bit fingerprint of a simulator workload: the benchmark's
+/// input-generation spec (pattern, dims, divergence), the grid sizes and
+/// the RNG seed. Combined with `ptx::kernel_fingerprint` it keys the
+/// `Validated`/`Scored` pipeline artifacts, so re-runs of an identical
+/// workload skip simulation entirely.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct WorkloadFingerprint(pub u64, pub u64);
+
+impl std::fmt::Display for WorkloadFingerprint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:016x}{:016x}", self.0, self.1)
+    }
+}
+
+/// Fingerprint the workload [`workload`] would build for these inputs.
+///
+/// The canonical form is a text rendering of every input that shapes the
+/// generated data, keyed with the shared [`crate::util::Fnv128`] scheme,
+/// so the key is reproducible run-to-run and process-to-process — never
+/// `DefaultHasher`.
+pub fn workload_fingerprint(
+    b: &Benchmark,
+    nx: usize,
+    ny: usize,
+    nz: usize,
+    seed: u64,
+) -> WorkloadFingerprint {
+    use std::fmt::Write;
+    let mut text = String::with_capacity(256);
+    write!(
+        text,
+        "v{WORKLOAD_SPEC_VERSION};{};{:?};dims={};div={};{:?};{nx}x{ny}x{nz};seed={seed}",
+        b.name, b.lang, b.dims, b.divergent, b.pattern
+    )
+    .unwrap();
+    let mut h = crate::util::Fnv128::new();
+    h.write(text.as_bytes());
+    let (w0, w1) = h.finish();
+    WorkloadFingerprint(w0, w1)
+}
+
 /// A ready-to-run simulator workload.
+#[derive(Debug)]
 pub struct Workload {
     pub kernel: Kernel,
     pub cfg: SimConfig,
@@ -642,6 +689,21 @@ mod tests {
             );
             assert_eq!(k.global_loads(), b.expect_loads, "{}", b.name);
         }
+    }
+
+    #[test]
+    fn workload_fingerprints_are_stable_and_distinct() {
+        let b = by_name("jacobi").unwrap();
+        let a = workload_fingerprint(&b, 8, 8, 1, 42);
+        assert_eq!(a, workload_fingerprint(&b, 8, 8, 1, 42), "must be deterministic");
+        assert_ne!(a, workload_fingerprint(&b, 8, 8, 1, 43), "seed is part of the key");
+        assert_ne!(a, workload_fingerprint(&b, 16, 8, 1, 42), "sizes are part of the key");
+        let other = by_name("gradient").unwrap();
+        assert_ne!(
+            a,
+            workload_fingerprint(&other, 8, 8, 1, 42),
+            "the input-generation spec is part of the key"
+        );
     }
 
     #[test]

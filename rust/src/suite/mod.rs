@@ -9,5 +9,8 @@ pub mod spec;
 
 pub use apps::apps;
 pub use codegen::{generate, param_names};
-pub use kernelgen::{by_name, suite, workload, Workload};
+pub use kernelgen::{
+    by_name, suite, workload, workload_fingerprint, Workload, WorkloadFingerprint,
+    WORKLOAD_SPEC_VERSION,
+};
 pub use spec::{irow, Benchmark, Lang, Pattern, Tap, TapFunc};

@@ -28,10 +28,98 @@ impl std::hash::Hasher for Fnv {
     }
 }
 
+/// Dual-stream FNV-1a with a splitmix64 finisher: the stable 128-bit key
+/// scheme shared by kernel fingerprints (`ptx::kernel_fingerprint`),
+/// workload fingerprints (`suite::workload_fingerprint`) and the disk
+/// store's keys (`pipeline::store::KeyBuilder`). One implementation on
+/// purpose: these keys must stay byte-identical run-to-run and
+/// process-to-process (never the process-seeded `DefaultHasher`), and the
+/// call sites must never drift apart.
+#[derive(Debug, Clone)]
+pub struct Fnv128 {
+    h1: u64,
+    h2: u64,
+}
+
+impl Default for Fnv128 {
+    fn default() -> Fnv128 {
+        Fnv128::new()
+    }
+}
+
+impl Fnv128 {
+    pub fn new() -> Fnv128 {
+        Fnv128 {
+            h1: 0xcbf2_9ce4_8422_2325,
+            h2: 0x8422_2325_cbf2_9ce4,
+        }
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) -> &mut Fnv128 {
+        for &b in bytes {
+            self.h1 = (self.h1 ^ b as u64).wrapping_mul(0x1000_0000_01b3);
+            self.h2 = (self.h2 ^ b as u64).wrapping_mul(0x1000_01b3_0000_01b3);
+        }
+        self
+    }
+
+    pub fn write_u64(&mut self, v: u64) -> &mut Fnv128 {
+        self.write(&v.to_le_bytes())
+    }
+
+    /// The finalized 128-bit key as two avalanched words.
+    pub fn finish(&self) -> (u64, u64) {
+        (mix64(self.h1), mix64(self.h2))
+    }
+}
+
+/// splitmix64 finalizer — avalanches the weak tail bits of FNV.
+fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// One-shot FNV-1a 64 of a byte slice — the checksum flavour of [`Fnv`],
+/// kept here so the constants live in exactly one module.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    use std::hash::Hasher;
+    let mut h = Fnv::default();
+    h.write(bytes);
+    h.finish()
+}
+
 /// `BuildHasher` for [`Fnv`].
 pub type FnvBuild = std::hash::BuildHasherDefault<Fnv>;
 /// HashMap with FNV hashing.
 pub type FnvMap<K, V> = std::collections::HashMap<K, V, FnvBuild>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv128_is_deterministic_and_chunking_invariant() {
+        let mut a = Fnv128::new();
+        a.write(b"hello world");
+        let mut b = Fnv128::new();
+        b.write(b"hello ");
+        b.write(b"world");
+        assert_eq!(a.finish(), b.finish(), "chunking must not change the key");
+
+        let mut c = Fnv128::new();
+        c.write(b"hello worlc");
+        assert_ne!(a.finish(), c.finish());
+
+        let mut d = Fnv128::new();
+        d.write_u64(7);
+        let mut e = Fnv128::new();
+        e.write(&7u64.to_le_bytes());
+        assert_eq!(d.finish(), e.finish(), "write_u64 is little-endian bytes");
+    }
+}
 
 /// Run `f` for `cases` deterministic random cases; panic with the seed on
 /// the first failure. Poor man's proptest.

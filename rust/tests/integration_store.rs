@@ -1,0 +1,203 @@
+//! Cross-process cache persistence: a pipeline opened over a warmed cache
+//! directory must serve detection, synthesis, simulation and scoring from
+//! disk (zero emulations, zero simulations); corrupt or truncated store
+//! files must recompute instead of panicking; the store must stay within
+//! its size bound via LRU eviction.
+
+use ptxasw::coordinator::{report, run_suite_on, BenchResult, PipelineConfig, PipelineError};
+use ptxasw::pipeline::{DiskStore, Pipeline, Stage, DEFAULT_MAX_BYTES};
+use ptxasw::suite::{by_name, Benchmark};
+use std::path::{Path, PathBuf};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("ptxasw-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn benches() -> Vec<Benchmark> {
+    ["vecadd", "gradient"]
+        .iter()
+        .map(|n| by_name(n).unwrap())
+        .collect()
+}
+
+/// All `.art` files under a cache directory, recursively.
+fn art_files(dir: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        let Ok(rd) = std::fs::read_dir(&d) else { continue };
+        for e in rd.flatten() {
+            let p = e.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().and_then(|x| x.to_str()) == Some("art") {
+                out.push(p);
+            }
+        }
+    }
+    out
+}
+
+fn unwrap_all(results: Vec<Result<BenchResult, PipelineError>>) -> Vec<BenchResult> {
+    results
+        .into_iter()
+        .map(|r| r.unwrap_or_else(|e| panic!("benchmark failed: {e}")))
+        .collect()
+}
+
+fn assert_same_results(a: &[BenchResult], b: &[BenchResult]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.name, y.name);
+        assert_eq!(x.detection.chosen, y.detection.chosen);
+        assert_eq!(x.detection.total_global_loads, y.detection.total_global_loads);
+        assert_eq!(x.baseline.valid, y.baseline.valid);
+        for ((xv, xo), (yv, yo)) in x.variants.iter().zip(&y.variants) {
+            assert_eq!(xv, yv);
+            assert_eq!(xo.valid, yo.valid, "{}: validity diverged", x.name);
+            for (xr, yr) in xo.reports.iter().zip(&yo.reports) {
+                assert_eq!(
+                    xr.effective_cycles.to_bits(),
+                    yr.effective_cycles.to_bits(),
+                    "{}: modelled cycles diverged between runs",
+                    x.name
+                );
+            }
+        }
+    }
+}
+
+/// Acceptance: a second identical suite run in the same process *and* in
+/// a fresh process (same cache dir) performs zero emulations and zero
+/// simulations.
+#[test]
+fn warm_runs_skip_emulation_and_simulation() {
+    let dir = tmpdir("warm");
+    let cfg = PipelineConfig::default();
+    let bs = benches();
+
+    let p1 = Pipeline::new().with_disk(DiskStore::open(&dir, DEFAULT_MAX_BYTES).unwrap());
+    let first = unwrap_all(run_suite_on(&p1, &bs, &cfg));
+    let s1 = p1.stats();
+    assert!(s1.disk.stores > 0, "cold run must persist artifacts");
+    assert!(s1.cache.validate_misses > 0);
+
+    // same process, same pipeline: everything is a memory hit
+    let again = unwrap_all(run_suite_on(&p1, &bs, &cfg));
+    let s1b = p1.stats();
+    assert_eq!(s1b.cache.emulate_misses, s1.cache.emulate_misses);
+    assert_eq!(s1b.cache.validate_misses, s1.cache.validate_misses);
+    assert_eq!(s1b.stage_count(Stage::Validate), s1.stage_count(Stage::Validate));
+    assert_same_results(&first, &again);
+
+    // fresh pipeline + fresh store over the same directory — the
+    // stand-in for a fresh process
+    let p2 = Pipeline::new().with_disk(DiskStore::open(&dir, DEFAULT_MAX_BYTES).unwrap());
+    let second = unwrap_all(run_suite_on(&p2, &bs, &cfg));
+    let s2 = p2.stats();
+    assert_eq!(s2.stage_count(Stage::Emulate), 0, "zero emulations on warm run");
+    assert_eq!(s2.stage_count(Stage::Validate), 0, "zero simulations on warm run");
+    assert_eq!(s2.stage_count(Stage::Score), 0, "zero model runs on warm run");
+    assert_eq!(s2.cache.emulate_misses, 0);
+    assert_eq!(s2.cache.validate_misses, 0);
+    assert_eq!(s2.cache.score_misses, 0);
+    assert!(s2.cache.disk_hits() > 0, "artifacts must come from disk");
+    assert!(s2.disk.hits > 0);
+    assert_same_results(&first, &second);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Corrupted or truncated store files fall back to recompute — results
+/// identical to a cache-less run, no panic, corruption counted.
+#[test]
+fn corrupt_and_truncated_artifacts_recompute() {
+    let dir = tmpdir("corrupt");
+    let cfg = PipelineConfig::default();
+    let bs = benches();
+
+    let p1 = Pipeline::new().with_disk(DiskStore::open(&dir, DEFAULT_MAX_BYTES).unwrap());
+    unwrap_all(run_suite_on(&p1, &bs, &cfg));
+
+    // mangle every artifact: truncate half, bit-flip the rest
+    let files = art_files(&dir);
+    assert!(!files.is_empty(), "cold run must have written artifacts");
+    for (i, f) in files.iter().enumerate() {
+        let bytes = std::fs::read(f).unwrap();
+        if i % 2 == 0 {
+            std::fs::write(f, &bytes[..bytes.len().min(5)]).unwrap();
+        } else {
+            let mut b = bytes;
+            let mid = b.len() / 2;
+            b[mid] ^= 0xFF;
+            std::fs::write(f, &b).unwrap();
+        }
+    }
+
+    let p2 = Pipeline::new().with_disk(DiskStore::open(&dir, DEFAULT_MAX_BYTES).unwrap());
+    let recomputed = unwrap_all(run_suite_on(&p2, &bs, &cfg));
+    let s = p2.stats();
+    assert!(s.disk.corrupt > 0, "mangled files must be detected");
+    assert!(s.cache.validate_misses > 0, "must fall back to recompute");
+
+    // identical to a run with no disk store at all
+    let clean = unwrap_all(run_suite_on(&Pipeline::new(), &bs, &cfg));
+    assert_same_results(&clean, &recomputed);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The store evicts least-recently-used artifacts to stay within its
+/// size bound.
+#[test]
+fn eviction_keeps_store_within_bound() {
+    let dir = tmpdir("evict");
+    let cfg = PipelineConfig::default();
+    let bound = 64 * 1024;
+
+    let p = Pipeline::new().with_disk(DiskStore::open(&dir, bound).unwrap());
+    unwrap_all(run_suite_on(&p, &benches(), &cfg));
+    let s = p.stats();
+    assert!(s.disk.evictions > 0, "the suite's artifacts exceed the bound");
+
+    let total: u64 = art_files(&dir)
+        .iter()
+        .map(|f| std::fs::metadata(f).map(|m| m.len()).unwrap_or(0))
+        .sum();
+    assert!(
+        total <= bound,
+        "resident artifacts ({total} bytes) exceed the bound ({bound})"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// CI smoke test: when `RUST_PALLAS_CACHE_DIR` points at a cache
+/// directory, run the suite against it. A first (cold) invocation seeds
+/// the store; a second invocation of this same test — CI's second
+/// `cargo test` — must be served from disk with zero emulations and zero
+/// simulations. Skipped when the variable is unset.
+#[test]
+fn ci_warm_cache_smoke() {
+    let Some(dir) = std::env::var_os("RUST_PALLAS_CACHE_DIR") else {
+        eprintln!("ci_warm_cache_smoke: RUST_PALLAS_CACHE_DIR unset, skipping");
+        return;
+    };
+    let dir = PathBuf::from(dir);
+    let warmed = !art_files(&dir).is_empty();
+
+    let p = Pipeline::new().with_disk(DiskStore::open(&dir, DEFAULT_MAX_BYTES).unwrap());
+    unwrap_all(run_suite_on(&p, &benches(), &PipelineConfig::default()));
+    let s = p.stats();
+    println!("{}", report::pipeline_stats(&s));
+
+    if warmed {
+        assert!(s.disk.hits > 0, "warmed cache dir must report disk hits");
+        assert_eq!(s.stage_count(Stage::Emulate), 0, "zero emulations on warm run");
+        assert_eq!(s.stage_count(Stage::Validate), 0, "zero simulations on warm run");
+    } else {
+        assert!(s.disk.stores > 0, "cold run must seed the store");
+    }
+}
