@@ -1,0 +1,179 @@
+//! `simbench` — simulator throughput benchmark (warp-steps/sec).
+//!
+//! Runs every KernelGen suite benchmark through the three simulator
+//! configurations — the reference AST walker, the decoded micro-op engine
+//! serial, and the decoded engine with one worker per CPU — measuring the
+//! best-of-N wall time each, and emits `BENCH_3.json` with per-benchmark
+//! numbers and suite aggregates. The headline metric is warp-level
+//! instruction issues per second (`warp-steps/sec`); the acceptance bar
+//! for this trajectory is decoded ≥ 3× reference on the suite aggregate.
+//!
+//! The run doubles as a correctness gate: every engine's output image is
+//! compared bit-for-bit before a timing is accepted.
+//!
+//!     cargo run --release --example simbench -- [--out FILE] [--repeat N]
+//!                                               [--sim-threads N]
+
+use ptxasw::cli::Args;
+use ptxasw::coordinator::sim_sizes;
+use ptxasw::sim::{decode, run_decoded, run_reference, SimResult};
+use ptxasw::suite;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+struct Row {
+    name: &'static str,
+    warp_steps: u64,
+    blocks: u32,
+    decode_us: f64,
+    reference_s: f64,
+    decoded_s: f64,
+    parallel_s: f64,
+}
+
+fn best_of<T>(repeat: usize, mut f: impl FnMut() -> T) -> (f64, T) {
+    let mut best = f64::INFINITY;
+    let mut out = None;
+    for _ in 0..repeat.max(1) {
+        let t0 = Instant::now();
+        let r = f();
+        best = best.min(t0.elapsed().as_secs_f64());
+        out = Some(r);
+    }
+    (best, out.unwrap())
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
+    let out_path = args.opt("out").unwrap_or("BENCH_3.json").to_string();
+    let repeat = args.opt_usize("repeat", 3).unwrap_or(3);
+    let par_threads = args
+        .opt_usize(
+            "sim-threads",
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        )
+        .unwrap_or(4)
+        .max(2);
+
+    let mut rows = Vec::new();
+    for b in suite::suite() {
+        let (nx, ny, nz) = sim_sizes(&b);
+        let w = suite::workload(&b, nx, ny, nz, 42);
+        let cfg = w.cfg.clone(); // no trace: measure the pure interpreter
+
+        let t0 = Instant::now();
+        let dk = decode(&w.kernel).expect("decode");
+        let decode_us = t0.elapsed().as_secs_f64() * 1e6;
+
+        let mut c1 = cfg.clone();
+        c1.sim_threads = 1;
+        let mut cn = cfg.clone();
+        cn.sim_threads = par_threads;
+        let (reference_s, r_ref) =
+            best_of(repeat, || run_reference(&w.kernel, &cfg, w.mem.clone()).expect("reference"));
+        let (decoded_s, r_dec) =
+            best_of(repeat, || run_decoded(&dk, &c1, w.mem.clone()).expect("decoded"));
+        let (parallel_s, r_par) =
+            best_of(repeat, || run_decoded(&dk, &cn, w.mem.clone()).expect("parallel"));
+
+        check_agree(b.name, &r_ref, &r_dec, "decoded");
+        check_agree(b.name, &r_ref, &r_par, "parallel");
+
+        rows.push(Row {
+            name: b.name,
+            warp_steps: r_ref.stats.warp_instructions,
+            blocks: cfg.grid.0 * cfg.grid.1 * cfg.grid.2,
+            decode_us,
+            reference_s,
+            decoded_s,
+            parallel_s,
+        });
+    }
+
+    let total_steps: u64 = rows.iter().map(|r| r.warp_steps).sum();
+    let total_ref: f64 = rows.iter().map(|r| r.reference_s).sum();
+    let total_dec: f64 = rows.iter().map(|r| r.decoded_s).sum();
+    let total_par: f64 = rows.iter().map(|r| r.parallel_s).sum();
+    let geomean = |f: &dyn Fn(&Row) -> f64| -> f64 {
+        (rows.iter().map(|r| f(r).ln()).sum::<f64>() / rows.len() as f64).exp()
+    };
+    let gm_dec = geomean(&|r| r.reference_s / r.decoded_s);
+    let gm_par = geomean(&|r| r.reference_s / r.parallel_s);
+
+    let mut json = String::new();
+    writeln!(json, "{{").unwrap();
+    writeln!(json, "  \"bench_id\": \"BENCH_3\",").unwrap();
+    writeln!(json, "  \"unit\": \"warp-steps/sec\",").unwrap();
+    writeln!(json, "  \"repeat\": {repeat},").unwrap();
+    writeln!(json, "  \"parallel_threads\": {par_threads},").unwrap();
+    writeln!(json, "  \"benchmarks\": [").unwrap();
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 == rows.len() { "" } else { "," };
+        writeln!(
+            json,
+            "    {{\"name\": \"{}\", \"warp_steps\": {}, \"blocks\": {}, \
+             \"decode_us\": {:.1}, \
+             \"reference_s\": {:.6}, \"decoded_s\": {:.6}, \"parallel_s\": {:.6}, \
+             \"reference_wsps\": {:.0}, \"decoded_wsps\": {:.0}, \"parallel_wsps\": {:.0}, \
+             \"speedup_decoded\": {:.3}, \"speedup_parallel\": {:.3}}}{comma}",
+            r.name,
+            r.warp_steps,
+            r.blocks,
+            r.decode_us,
+            r.reference_s,
+            r.decoded_s,
+            r.parallel_s,
+            r.warp_steps as f64 / r.reference_s,
+            r.warp_steps as f64 / r.decoded_s,
+            r.warp_steps as f64 / r.parallel_s,
+            r.reference_s / r.decoded_s,
+            r.reference_s / r.parallel_s,
+        )
+        .unwrap();
+    }
+    writeln!(json, "  ],").unwrap();
+    writeln!(json, "  \"total_warp_steps\": {total_steps},").unwrap();
+    writeln!(json, "  \"reference_wsps\": {:.0},", total_steps as f64 / total_ref).unwrap();
+    writeln!(json, "  \"decoded_wsps\": {:.0},", total_steps as f64 / total_dec).unwrap();
+    writeln!(json, "  \"parallel_wsps\": {:.0},", total_steps as f64 / total_par).unwrap();
+    writeln!(
+        json,
+        "  \"speedup_decoded_vs_reference\": {:.3},",
+        total_ref / total_dec
+    )
+    .unwrap();
+    writeln!(
+        json,
+        "  \"speedup_parallel_vs_reference\": {:.3},",
+        total_ref / total_par
+    )
+    .unwrap();
+    writeln!(json, "  \"geomean_speedup_decoded\": {gm_dec:.3},").unwrap();
+    writeln!(json, "  \"geomean_speedup_parallel\": {gm_par:.3}").unwrap();
+    writeln!(json, "}}").unwrap();
+
+    std::fs::write(&out_path, &json).expect("write BENCH_3.json");
+    eprintln!("simbench: {} benchmarks, {total_steps} warp-steps", rows.len());
+    eprintln!(
+        "  reference {:>12.0} warp-steps/s",
+        total_steps as f64 / total_ref
+    );
+    eprintln!(
+        "  decoded   {:>12.0} warp-steps/s  ({:.2}x, geomean {:.2}x)",
+        total_steps as f64 / total_dec,
+        total_ref / total_dec,
+        gm_dec
+    );
+    eprintln!(
+        "  parallel  {:>12.0} warp-steps/s  ({:.2}x, geomean {:.2}x, {par_threads} threads)",
+        total_steps as f64 / total_par,
+        total_ref / total_par,
+        gm_par
+    );
+    eprintln!("  wrote {out_path}");
+}
+
+fn check_agree(name: &str, a: &SimResult, b: &SimResult, tag: &str) {
+    assert_eq!(a.mem, b.mem, "{name}: {tag} memory image diverged");
+    assert_eq!(a.stats, b.stats, "{name}: {tag} stats diverged");
+}

@@ -108,6 +108,14 @@ mod tests {
     }
 
     #[test]
+    fn sim_threads_takes_a_value() {
+        let a = parse("suite jacobi --sim-threads 4 --stats");
+        assert_eq!(a.opt_usize("sim-threads", 1).unwrap(), 4);
+        assert!(a.flag("stats"));
+        assert_eq!(a.positional, vec!["jacobi"]);
+    }
+
+    #[test]
     fn opt_usize_parses() {
         let a = parse("suite --threads 8");
         assert_eq!(a.opt_usize("threads", 1).unwrap(), 8);

@@ -10,6 +10,9 @@
 //! Parsed → Emulated → Detected → Synthesized → Validated → Scored
 //! ```
 //!
+//! (plus two kernel-/workload-keyed side stages: `Workload` input
+//! generation and the simulator's `Decoded` micro-op lowering).
+//!
 //! Every stage is content-addressed and cached in the pipeline's
 //! [`crate::pipeline::ArtifactCache`]: the analysis stages by a stable
 //! kernel hash, validation/scoring by that hash combined with the
@@ -36,6 +39,11 @@
 //!   bit-exactness against the baseline output; spawns per-arch scoring.
 //! * `Score(bench, slot, arch)` — run the latency model for one kernel
 //!   version on one architecture.
+//!
+//! Task-level parallelism here composes with the simulator's own
+//! block-level parallelism (`Pipeline::with_sim_threads`, the CLI
+//! `--sim-threads`); both are bit-deterministic, so any combination
+//! yields identical results.
 //!
 //! Each benchmark's pieces are counted down; the task that retires the
 //! last piece assembles the [`BenchResult`]. Results come back in input

@@ -118,6 +118,7 @@ pub fn pipeline_stats(s: &crate::pipeline::PipelineStats) -> String {
         .unwrap();
     };
     cache_row("workload", s.cache.workload_hits, 0, s.cache.workload_misses);
+    cache_row("decoded", s.cache.decode_hits, 0, s.cache.decode_misses);
     cache_row("emulated", s.cache.emulate_hits, 0, s.cache.emulate_misses);
     cache_row(
         "detected",
@@ -238,11 +239,14 @@ mod tests {
         assert!(text.contains("synthesize"));
         assert!(text.contains("hit-rate"));
         assert!(text.contains("workload"));
+        assert!(text.contains("decoded"));
+        assert!(text.contains("decode"));
         assert!(text.contains("validated"));
         assert!(text.contains("scored"));
         assert!(text.contains("disk cache: disabled"));
-        // the suite ran, so emulate/validate/score all have runs
+        // the suite ran, so emulate/decode/validate/score all have runs
         assert!(s.stage_count(crate::pipeline::Stage::Emulate) >= 1);
+        assert!(s.stage_count(crate::pipeline::Stage::Decode) >= 1);
         assert!(s.stage_count(crate::pipeline::Stage::Validate) >= 1);
         assert!(s.stage_count(crate::pipeline::Stage::Score) >= 1);
     }

@@ -28,14 +28,18 @@ ptxasw — symbolic emulator + shuffle synthesis for NVIDIA PTX
 USAGE:
   ptxasw asm <in.ptx> [--out FILE] [--variant full|noload|nocorner|uniform]
              [--max-delta N] [--report] [--stats] [cache flags]
-  ptxasw suite [bench...] [--arch NAME] [--threads N] [--max-delta N]
-             [--fig3 bench] [--stats] [cache flags]
-  ptxasw apps [--threads N] [--stats] [cache flags]
+  ptxasw suite [bench...] [--arch NAME] [--threads N] [--sim-threads N]
+             [--max-delta N] [--fig3 bench] [--stats] [cache flags]
+  ptxasw apps [--threads N] [--sim-threads N] [--stats] [cache flags]
   ptxasw artifacts [--dir DIR] [--run NAME]
   ptxasw help
 
   --stats           print pipeline cache hit rates (memory + disk) and
                     per-stage wall time
+  --sim-threads N   worker threads inside each simulation (blocks of the
+                    grid run in parallel; results are bit-identical for
+                    any N). Default 1 — the suite already parallelizes
+                    across benchmarks with --threads
   cache flags:
   --cache-dir DIR   persist pipeline artifacts under DIR (default:
                     $RUST_PALLAS_CACHE_DIR, else ~/.cache/rust_pallas);
@@ -48,7 +52,7 @@ USAGE:
 /// not an error (the disk layer is an accelerator, not a dependency); an
 /// explicit `--cache-dir` that cannot be opened is.
 fn build_pipeline(args: &Args) -> Result<Pipeline, String> {
-    let p = Pipeline::new();
+    let p = Pipeline::new().with_sim_threads(args.opt_usize("sim-threads", 1)?);
     if args.flag("no-disk-cache") {
         return Ok(p);
     }

@@ -1,7 +1,11 @@
 //! Scoreboard latency model with stall attribution (Figures 2 & 3).
 //!
 //! Replays the simulator's per-warp issue trace through an in-order
-//! single-issue scoreboard: every instruction issues when its source
+//! single-issue scoreboard. `WarpEvent::stmt` always indexes the kernel
+//! *body statement* regardless of which simulator engine produced the
+//! trace (the decoded engine keeps a micro-op → statement side table for
+//! exactly this reason), so the replay below never changes with the
+//! engine. Every instruction issues when its source
 //! registers are ready and the pipeline is free; the wait is attributed to
 //! the stall reason the profiler would sample (execution dependency,
 //! memory dependency, texture, memory throttle, pipe busy, instruction

@@ -92,6 +92,7 @@ pub struct Synthesized {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ArtifactKind {
     Workload,
+    Decoded,
     Emulated,
     Detected,
     Synthesized,
@@ -115,6 +116,8 @@ pub enum CacheEvent {
 pub struct CacheCounters {
     workload_hits: AtomicU64,
     workload_misses: AtomicU64,
+    decode_hits: AtomicU64,
+    decode_misses: AtomicU64,
     emulate_hits: AtomicU64,
     emulate_misses: AtomicU64,
     detect_hits: AtomicU64,
@@ -137,8 +140,10 @@ impl CacheCounters {
         use CacheEvent::*;
         let cell = match (kind, event) {
             (Workload, Hit) => &self.workload_hits,
-            // workloads and emulations are never disk-persisted
+            // workloads, decodings and emulations are never disk-persisted
             (Workload, DiskHit | Miss) => &self.workload_misses,
+            (Decoded, Hit) => &self.decode_hits,
+            (Decoded, DiskHit | Miss) => &self.decode_misses,
             (Emulated, Hit) => &self.emulate_hits,
             (Emulated, DiskHit | Miss) => &self.emulate_misses,
             (Detected, Hit) => &self.detect_hits,
@@ -161,6 +166,8 @@ impl CacheCounters {
         CacheSnapshot {
             workload_hits: self.workload_hits.load(Ordering::Relaxed),
             workload_misses: self.workload_misses.load(Ordering::Relaxed),
+            decode_hits: self.decode_hits.load(Ordering::Relaxed),
+            decode_misses: self.decode_misses.load(Ordering::Relaxed),
             emulate_hits: self.emulate_hits.load(Ordering::Relaxed),
             emulate_misses: self.emulate_misses.load(Ordering::Relaxed),
             detect_hits: self.detect_hits.load(Ordering::Relaxed),
@@ -184,6 +191,8 @@ impl CacheCounters {
 pub struct CacheSnapshot {
     pub workload_hits: u64,
     pub workload_misses: u64,
+    pub decode_hits: u64,
+    pub decode_misses: u64,
     pub emulate_hits: u64,
     pub emulate_misses: u64,
     pub detect_hits: u64,
@@ -204,6 +213,7 @@ impl CacheSnapshot {
     /// In-memory hits across every family.
     pub fn hits(&self) -> u64 {
         self.workload_hits
+            + self.decode_hits
             + self.emulate_hits
             + self.detect_hits
             + self.synth_hits
@@ -222,6 +232,7 @@ impl CacheSnapshot {
     /// Artifacts computed fresh.
     pub fn misses(&self) -> u64 {
         self.workload_misses
+            + self.decode_misses
             + self.emulate_misses
             + self.detect_misses
             + self.synth_misses
@@ -265,6 +276,10 @@ pub type ScoreKey = (ContentHash, WorkloadFingerprint, &'static str);
 #[derive(Debug, Default)]
 pub struct ArtifactCache {
     workloads: PlainMap<WorkloadFingerprint, WorkloadArt>,
+    /// Decoded micro-op kernels, keyed by the kernel fingerprint alone
+    /// (the decoded form is workload-independent); shared by every
+    /// validation — and any future consumer — of one kernel version.
+    decoded: SlotMap<ContentHash, crate::sim::DecodedKernel, SimError>,
     emulated: SlotMap<ContentHash, Emulated>,
     detected: SlotMap<DetectKey, Detected>,
     synthesized: SlotMap<SynthKey, Synthesized>,
@@ -276,6 +291,13 @@ pub struct ArtifactCache {
 impl ArtifactCache {
     pub fn workload_slot(&self, key: WorkloadFingerprint) -> PlainSlot<WorkloadArt> {
         self.workloads.lock().unwrap().entry(key).or_default().clone()
+    }
+
+    pub fn decode_slot(
+        &self,
+        key: ContentHash,
+    ) -> CacheSlot<crate::sim::DecodedKernel, SimError> {
+        self.decoded.lock().unwrap().entry(key).or_default().clone()
     }
 
     pub fn emu_slot(&self, key: ContentHash) -> CacheSlot<Emulated> {
@@ -311,5 +333,10 @@ impl ArtifactCache {
     /// Number of validated (simulated) artifacts resident in the cache.
     pub fn validated_len(&self) -> usize {
         self.validated.lock().unwrap().len()
+    }
+
+    /// Number of decoded micro-op kernels resident in the cache.
+    pub fn decoded_len(&self) -> usize {
+        self.decoded.lock().unwrap().len()
     }
 }

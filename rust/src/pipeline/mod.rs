@@ -52,11 +52,14 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// The pipeline's stages, in execution order. `Workload` is the cached
-/// input-generation stage feeding `Validate`.
+/// input-generation stage feeding `Validate`; `Decode` is the cached
+/// micro-op lowering the simulator executes (kernel-keyed, so one
+/// decoding serves every workload of a kernel version).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Stage {
     Parse,
     Workload,
+    Decode,
     Emulate,
     Detect,
     Synthesize,
@@ -65,9 +68,10 @@ pub enum Stage {
 }
 
 /// All stages in execution order (for reports).
-pub const STAGES: [Stage; 7] = [
+pub const STAGES: [Stage; 8] = [
     Stage::Parse,
     Stage::Workload,
+    Stage::Decode,
     Stage::Emulate,
     Stage::Detect,
     Stage::Synthesize,
@@ -80,6 +84,7 @@ impl Stage {
         match self {
             Stage::Parse => "parse",
             Stage::Workload => "workload",
+            Stage::Decode => "decode",
             Stage::Emulate => "emulate",
             Stage::Detect => "detect",
             Stage::Synthesize => "synthesize",
@@ -92,11 +97,12 @@ impl Stage {
         match self {
             Stage::Parse => 0,
             Stage::Workload => 1,
-            Stage::Emulate => 2,
-            Stage::Detect => 3,
-            Stage::Synthesize => 4,
-            Stage::Validate => 5,
-            Stage::Score => 6,
+            Stage::Decode => 2,
+            Stage::Emulate => 3,
+            Stage::Detect => 4,
+            Stage::Synthesize => 5,
+            Stage::Validate => 6,
+            Stage::Score => 7,
         }
     }
 }
@@ -149,6 +155,15 @@ pub struct Pipeline {
     cache: ArtifactCache,
     timings: StageTimings,
     store: Option<Arc<DiskStore>>,
+    /// Worker threads per simulation (`0`/`1` = serial). Results are
+    /// bit-identical for any value on the simulator's supported domain
+    /// (kernels that never read another block's global writes — such
+    /// reads are scheduling-dependent on real hardware and undefined for
+    /// every engine; see `sim::exec`), so it is *not* part of any cache
+    /// key. Cross-block write-after-write *is* detected
+    /// (`SimStats::cross_block_write_conflicts`); read-after-write is
+    /// currently not (see ROADMAP).
+    sim_threads: usize,
 }
 
 impl Pipeline {
@@ -162,6 +177,19 @@ impl Pipeline {
             limits,
             ..Pipeline::default()
         }
+    }
+
+    /// Use `n` worker threads inside each simulation (the CLI
+    /// `--sim-threads` flag). Orthogonal to the coordinator's task-level
+    /// parallelism; useful when a few large kernels dominate wall time.
+    pub fn with_sim_threads(mut self, n: usize) -> Pipeline {
+        self.sim_threads = n;
+        self
+    }
+
+    /// Worker threads each simulation runs with.
+    pub fn sim_threads(&self) -> usize {
+        self.sim_threads.max(1)
     }
 
     /// Attach an on-disk artifact store; detected/synthesized/validated/
@@ -261,6 +289,30 @@ impl Pipeline {
             })
             .clone();
         self.cache.counters.record(ArtifactKind::Workload, event);
+        out
+    }
+
+    /// Decoded micro-op artifact for a kernel version: the one-time
+    /// lowering the concrete simulator executes, keyed by the kernel
+    /// fingerprint alone (workload-independent — in-memory only, like
+    /// workloads: cheap to rebuild, expensive artifacts derive from it).
+    /// The hash must be `kernel_fingerprint(kernel)`.
+    pub fn decoded(
+        &self,
+        kernel: &Arc<Kernel>,
+        hash: ContentHash,
+    ) -> Result<Arc<crate::sim::DecodedKernel>, SimError> {
+        let slot = self.cache.decode_slot(hash);
+        let mut event = CacheEvent::Hit;
+        let out = slot
+            .get_or_init(|| {
+                event = CacheEvent::Miss;
+                self.time(Stage::Decode, || {
+                    crate::sim::decode(kernel).map(Arc::new)
+                })
+            })
+            .clone();
+        self.cache.counters.record(ArtifactKind::Decoded, event);
         out
     }
 
@@ -445,7 +497,8 @@ impl Pipeline {
                     return Ok(Arc::new(art));
                 }
                 event = CacheEvent::Miss;
-                let v = stages::validate(self, kernel, &w.workload, baseline.map(|(_, o)| o))?;
+                let v =
+                    stages::validate(self, kernel, hash, &w.workload, baseline.map(|(_, o)| o))?;
                 self.disk_store(StoreKind::Validated, dkey, store::encode_validated(&v));
                 Ok(Arc::new(v))
             })

@@ -12,8 +12,10 @@
 use crate::perf::{model, Arch, PerfReport};
 use crate::pipeline::{Pipeline, Stage};
 use crate::ptx::ast::Kernel;
-use crate::sim::{run, SimError, SimStats, WarpEvent};
+use crate::ptx::printer::ContentHash;
+use crate::sim::{run_decoded, SimError, SimStats, WarpEvent};
 use crate::suite::Workload;
+use std::sync::Arc;
 
 /// Stage 5 artifact: one simulator execution of a kernel version, with
 /// the bit-exactness verdict against the baseline output.
@@ -36,17 +38,24 @@ pub struct Scored {
 
 /// Run a kernel version on the warp simulator and compare against the
 /// baseline output (when given). The workload is borrowed — its memory
-/// image is cloned so the cached artifact stays pristine.
+/// image is cloned so the cached artifact stays pristine. Simulation
+/// goes through the cached [`crate::sim::DecodedKernel`] artifact
+/// (`hash` must be the kernel's fingerprint), so the micro-op lowering
+/// happens once per kernel version no matter how many workloads,
+/// variants or re-runs consume it.
 pub fn validate(
     p: &Pipeline,
-    kernel: &Kernel,
+    kernel: &Arc<Kernel>,
+    hash: ContentHash,
     w: &Workload,
     baseline_out: Option<&[f32]>,
 ) -> Result<Validated, SimError> {
+    let decoded = p.decoded(kernel, hash)?;
     p.time(Stage::Validate, || {
         let mut cfg = w.cfg.clone();
         cfg.record_trace = true;
-        let r = run(kernel, &cfg, w.mem.clone())?;
+        cfg.sim_threads = p.sim_threads();
+        let r = run_decoded(&decoded, &cfg, w.mem.clone())?;
         let out = r.mem.read_f32s(w.out_ptr, w.out_len)?;
         let valid = baseline_out.map(|base| {
             base.len() == out.len()

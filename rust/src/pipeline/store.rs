@@ -42,7 +42,8 @@ use std::time::{Duration, SystemTime};
 
 /// Bump when the artifact encoding changes; old `v<N>` trees are simply
 /// ignored (and eventually reclaimed by the user, not by us).
-pub const STORE_VERSION: u32 = 1;
+/// v2: `SimStats` grew `cross_block_write_conflicts`.
+pub const STORE_VERSION: u32 = 2;
 const MAGIC: [u8; 4] = *b"RPST";
 /// Default resident-set bound: 256 MiB.
 pub const DEFAULT_MAX_BYTES: u64 = 256 * 1024 * 1024;
@@ -602,6 +603,7 @@ pub(crate) fn encode_validated(a: &Validated) -> Vec<u8> {
         s.branches,
         s.divergent_branches,
         s.uninit_reads,
+        s.cross_block_write_conflicts,
     ] {
         e.u64(v);
     }
@@ -642,6 +644,7 @@ pub(crate) fn decode_validated(bytes: &[u8]) -> Option<Validated> {
         branches: d.u64()?,
         divergent_branches: d.u64()?,
         uninit_reads: d.u64()?,
+        cross_block_write_conflicts: d.u64()?,
     };
     let nwarps = d.len()?;
     let mut trace = Vec::with_capacity(nwarps);

@@ -1,0 +1,594 @@
+//! One-time lowering of a [`Kernel`] into a flat micro-op form.
+//!
+//! The reference interpreter pays per *executed* instruction for work that
+//! only depends on the *static* kernel: interning register names
+//! (`regs.intern(r)` hashes the register string on every operand read),
+//! resolving branch labels through a `HashMap`, looking up parameter and
+//! shared-variable names, and recomputing width masks. `decode` does all
+//! of that exactly once and produces a [`DecodedKernel`]:
+//!
+//! * registers are pre-interned to dense **slot indices** (the same
+//!   [`RegInterner`] numbering the reference engine uses);
+//! * labels are erased and branch targets resolved to **micro-op
+//!   indices**;
+//! * shared-variable bases are baked as immediate addresses, parameter
+//!   reads carry the parameter's **index** into `SimConfig::params`
+//!   (values stay launch-time, so the decoded form is reusable across
+//!   workloads and content-addressed by the kernel fingerprint alone);
+//! * integer immediates are pre-masked with the width mask of the reading
+//!   site, and every mask/width an op needs is stored in the op;
+//! * a `stmt` side table maps each micro-op back to its kernel-body
+//!   statement index, so [`super::WarpEvent`] traces — and through them
+//!   the perf model — are unchanged.
+//!
+//! Decoding is *eager* about static errors: an unknown branch target,
+//! parameter or shared variable fails `decode` even if the instruction
+//! would never execute (the reference engine only errors when the
+//! offending instruction is reached). The arithmetic itself is not
+//! reinterpreted here — the executor reuses the reference engine's helper
+//! functions, so both engines compute every value with the same code.
+
+use super::machine::{int_bvop, shared_layout, width_mask};
+use super::SimError;
+use crate::emu::env::RegInterner;
+use crate::ptx::ast::*;
+use crate::sym::term::{BvOp, CmpKind};
+
+/// A decoded operand: everything a read needs, with names resolved away.
+#[derive(Debug, Clone, Copy)]
+pub enum Dop {
+    /// Pre-interned register slot; masked with the site's width mask at
+    /// read time (and checked against the written bitmap for the
+    /// uninitialized-read counter).
+    Slot(u32),
+    /// Immediate, pre-masked at decode time exactly as the reference
+    /// engine masks it at read time (float immediates are raw bits).
+    Imm(u64),
+    /// Special register; evaluated per lane, masked at read time.
+    Special(Special),
+}
+
+/// `[base+offset]` with a decoded base.
+#[derive(Debug, Clone, Copy)]
+pub struct Daddr {
+    pub base: Dop,
+    pub offset: u64,
+}
+
+/// One micro-op. Field names mirror the AST op they were lowered from;
+/// `w`/`mask` fields are the pre-resolved operand widths/masks.
+#[derive(Debug, Clone)]
+pub enum Uop {
+    /// `bra` with the target resolved to a micro-op index.
+    Bra { target: u32 },
+    /// `ret` / `exit`.
+    Ret,
+    /// `bar.sync` — warps run serialized, still a no-op.
+    BarSync,
+    Shfl {
+        mode: ShflMode,
+        dst: u32,
+        pred_out: Option<u32>,
+        src: Dop,
+        b: Dop,
+        c: Dop,
+        mask: Dop,
+    },
+    Activemask { dst: u32 },
+    /// `ld.param`: the parameter index into `SimConfig::params` plus the
+    /// result mask (`width_mask(ty.bits())`).
+    LdParam { dst: u32, index: u32, mask: u64 },
+    /// Non-param load; `bytes = ty.bytes()`.
+    Ld {
+        space: Space,
+        nc: bool,
+        bytes: u32,
+        dst: u32,
+        addr: Daddr,
+    },
+    /// Store; `src` is read with `smask` (`width_mask(ty.bits().max(8))`).
+    St {
+        space: Space,
+        bytes: u32,
+        smask: u64,
+        src: Dop,
+        addr: Daddr,
+    },
+    Mov { dst: u32, src: Dop, mask: u64 },
+    Cvta { dst: u32, src: Dop },
+    /// Generic integer binary op on the shared `eval_bin` path.
+    IntBin {
+        op: BvOp,
+        w: u32,
+        mask: u64,
+        dst: u32,
+        a: Dop,
+        b: Dop,
+    },
+    MulWide {
+        signed: bool,
+        w: u32,
+        dst: u32,
+        a: Dop,
+        b: Dop,
+    },
+    MulHi {
+        signed: bool,
+        w: u32,
+        dst: u32,
+        a: Dop,
+        b: Dop,
+    },
+    Mad {
+        wide: bool,
+        signed: bool,
+        w: u32,
+        dst: u32,
+        a: Dop,
+        b: Dop,
+        c: Dop,
+    },
+    Not { w: u32, dst: u32, a: Dop },
+    Neg { w: u32, dst: u32, a: Dop },
+    FltBin {
+        op: FltBinOp,
+        wide: bool,
+        dst: u32,
+        a: Dop,
+        b: Dop,
+    },
+    Fma {
+        wide: bool,
+        dst: u32,
+        a: Dop,
+        b: Dop,
+        c: Dop,
+    },
+    FltUn {
+        op: FltUnOp,
+        wide: bool,
+        dst: u32,
+        a: Dop,
+    },
+    /// Float compare (operands widened to f64 for F32, as the reference
+    /// engine does).
+    SetpF {
+        cmp: CmpOp,
+        wide: bool,
+        dst: u32,
+        a: Dop,
+        b: Dop,
+    },
+    /// Integer compare with the signedness pre-resolved to a [`CmpKind`].
+    SetpI {
+        kind: CmpKind,
+        w: u32,
+        dst: u32,
+        a: Dop,
+        b: Dop,
+    },
+    Selp {
+        w: u32,
+        dst: u32,
+        a: Dop,
+        b: Dop,
+        p: Dop,
+    },
+    Cvt {
+        dty: Type,
+        sty: Type,
+        dst: u32,
+        src: Dop,
+    },
+}
+
+/// One decoded instruction: micro-op + guard + origin statement.
+#[derive(Debug, Clone)]
+pub struct UopEntry {
+    /// Kernel-body statement index this micro-op was lowered from (the
+    /// trace/perf-model side table).
+    pub stmt: u32,
+    /// Guard predicate as `(slot, negated)`.
+    pub guard: Option<(u32, bool)>,
+    pub op: Uop,
+}
+
+/// A kernel lowered to flat micro-ops; immutable and shareable across
+/// threads and workloads (pipeline artifact keyed by the kernel
+/// fingerprint).
+#[derive(Debug, Clone)]
+pub struct DecodedKernel {
+    /// Register-file slots per lane (the [`RegInterner`] universe).
+    pub nregs: u32,
+    /// Per-block shared-memory window size in bytes.
+    pub shared_size: u64,
+    /// Parameter names in declaration order, for launch-time
+    /// missing-value errors.
+    pub param_names: Vec<String>,
+    pub uops: Vec<UopEntry>,
+}
+
+impl DecodedKernel {
+    /// Micro-ops per kernel-body *instruction* executed once (diagnostic).
+    pub fn len(&self) -> usize {
+        self.uops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.uops.is_empty()
+    }
+}
+
+struct Decoder<'a> {
+    kernel: &'a Kernel,
+    regs: RegInterner,
+    shared_bases: std::collections::HashMap<&'a str, u64>,
+}
+
+impl<'a> Decoder<'a> {
+    fn slot(&mut self, r: &Reg) -> u32 {
+        self.regs.intern(r)
+    }
+
+    /// Decode an operand read at `width` bits, replicating the reference
+    /// engine's `read_operand` masking: integer immediates are masked,
+    /// float immediates are raw bits, shared bases are unmasked
+    /// addresses, registers and specials are masked at read time.
+    fn operand(&mut self, o: &Operand, width: u32) -> Result<Dop, SimError> {
+        let m = width_mask(width);
+        Ok(match o {
+            Operand::Reg(r) => Dop::Slot(self.slot(r)),
+            Operand::ImmInt(v) => Dop::Imm((*v as u64) & m),
+            Operand::ImmF32(b) => Dop::Imm(*b as u64),
+            Operand::ImmF64(b) => Dop::Imm(*b),
+            Operand::Special(sp) => Dop::Special(*sp),
+            Operand::Var(v) => Dop::Imm(
+                self.shared_bases
+                    .get(v.as_str())
+                    .copied()
+                    .ok_or_else(|| SimError::UnknownVar(v.clone()))?,
+            ),
+        })
+    }
+
+    /// Address bases are read at 64 bits.
+    fn address(&mut self, a: &Address) -> Result<Daddr, SimError> {
+        Ok(Daddr {
+            base: self.operand(&a.base, 64)?,
+            offset: a.offset as u64,
+        })
+    }
+
+    fn param_index(&self, addr: &Address) -> Result<u32, SimError> {
+        let name = match &addr.base {
+            Operand::Var(n) => n.as_str(),
+            _ => "?",
+        };
+        self.kernel
+            .params
+            .iter()
+            .position(|p| p.name == name)
+            .map(|i| i as u32)
+            .ok_or_else(|| SimError::UnknownParam(name.to_string()))
+        // scalar param: the value itself; offset addressing into
+        // multi-word params is not needed for our kernels
+    }
+
+    fn op(
+        &mut self,
+        op: &Op,
+        branch_target: impl Fn(&str) -> Option<u32>,
+    ) -> Result<Uop, SimError> {
+        Ok(match op {
+            Op::Bra { target, .. } => Uop::Bra {
+                target: branch_target(target)
+                    .ok_or_else(|| SimError::UnknownLabel(target.clone()))?,
+            },
+            Op::Ret | Op::Exit => Uop::Ret,
+            Op::BarSync { .. } => Uop::BarSync,
+            Op::Shfl { mode, dst, pred_out, src, b, c, mask } => Uop::Shfl {
+                mode: *mode,
+                dst: self.slot(dst),
+                pred_out: pred_out.as_ref().map(|p| self.slot(p)),
+                src: self.operand(src, 32)?,
+                b: self.operand(b, 32)?,
+                c: self.operand(c, 32)?,
+                mask: self.operand(mask, 32)?,
+            },
+            Op::Activemask { dst } => Uop::Activemask {
+                dst: self.slot(dst),
+            },
+            Op::Ld { space, nc, ty, dst, addr } => {
+                if *space == Space::Param {
+                    Uop::LdParam {
+                        dst: self.slot(dst),
+                        index: self.param_index(addr)?,
+                        mask: width_mask(ty.bits()),
+                    }
+                } else {
+                    Uop::Ld {
+                        space: *space,
+                        nc: *nc,
+                        bytes: ty.bytes() as u32,
+                        dst: self.slot(dst),
+                        addr: self.address(addr)?,
+                    }
+                }
+            }
+            Op::St { space, ty, addr, src } => Uop::St {
+                space: *space,
+                bytes: ty.bytes() as u32,
+                smask: width_mask(ty.bits().max(8)),
+                src: self.operand(src, ty.bits().max(8))?,
+                addr: self.address(addr)?,
+            },
+            Op::Mov { ty, dst, src } => Uop::Mov {
+                dst: self.slot(dst),
+                src: self.operand(src, ty.bits().max(8))?,
+                mask: width_mask(ty.bits().max(8)),
+            },
+            Op::Cvta { dst, src, .. } => Uop::Cvta {
+                dst: self.slot(dst),
+                src: self.operand(src, 64)?,
+            },
+            Op::IntBin { op: bop, ty, dst, a, b } => {
+                let w = ty.bits().max(1);
+                let signed = ty.is_signed();
+                let (dst, a, b) =
+                    (self.slot(dst), self.operand(a, w)?, self.operand(b, w)?);
+                match bop {
+                    IntBinOp::MulWide => Uop::MulWide { signed, w, dst, a, b },
+                    IntBinOp::MulHi => Uop::MulHi { signed, w, dst, a, b },
+                    _ => Uop::IntBin {
+                        op: int_bvop(*bop, signed),
+                        w,
+                        mask: width_mask(w),
+                        dst,
+                        a,
+                        b,
+                    },
+                }
+            }
+            Op::Mad { wide, ty, dst, a, b, c } => {
+                let w = ty.bits();
+                let cw = if *wide { w * 2 } else { w };
+                Uop::Mad {
+                    wide: *wide,
+                    signed: ty.is_signed(),
+                    w,
+                    dst: self.slot(dst),
+                    a: self.operand(a, w)?,
+                    b: self.operand(b, w)?,
+                    c: self.operand(c, cw)?,
+                }
+            }
+            Op::Not { ty, dst, a } => {
+                let w = ty.bits().max(1);
+                Uop::Not {
+                    w,
+                    dst: self.slot(dst),
+                    a: self.operand(a, w)?,
+                }
+            }
+            Op::Neg { ty, dst, a } => {
+                let w = ty.bits();
+                Uop::Neg {
+                    w,
+                    dst: self.slot(dst),
+                    a: self.operand(a, w)?,
+                }
+            }
+            Op::FltBin { op: fop, ty, dst, a, b } => {
+                let w = ty.bits();
+                Uop::FltBin {
+                    op: *fop,
+                    wide: *ty != Type::F32,
+                    dst: self.slot(dst),
+                    a: self.operand(a, w)?,
+                    b: self.operand(b, w)?,
+                }
+            }
+            Op::Fma { ty, dst, a, b, c } => {
+                let w = ty.bits();
+                Uop::Fma {
+                    wide: *ty != Type::F32,
+                    dst: self.slot(dst),
+                    a: self.operand(a, w)?,
+                    b: self.operand(b, w)?,
+                    c: self.operand(c, w)?,
+                }
+            }
+            Op::FltUn { op: fop, ty, dst, a } => Uop::FltUn {
+                op: *fop,
+                wide: *ty != Type::F32,
+                dst: self.slot(dst),
+                a: self.operand(a, ty.bits())?,
+            },
+            Op::Setp { cmp, ty, dst, a, b } => {
+                let w = ty.bits();
+                let (dst, a, b) =
+                    (self.slot(dst), self.operand(a, w)?, self.operand(b, w)?);
+                if ty.is_float() {
+                    Uop::SetpF {
+                        cmp: *cmp,
+                        wide: *ty != Type::F32,
+                        dst,
+                        a,
+                        b,
+                    }
+                } else {
+                    let signed =
+                        !matches!(ty, Type::U8 | Type::U16 | Type::U32 | Type::U64);
+                    Uop::SetpI {
+                        kind: super::machine::cmp_kind(*cmp, signed),
+                        w,
+                        dst,
+                        a,
+                        b,
+                    }
+                }
+            }
+            Op::Selp { ty, dst, a, b, p } => {
+                let w = ty.bits();
+                Uop::Selp {
+                    w,
+                    dst: self.slot(dst),
+                    a: self.operand(a, w)?,
+                    b: self.operand(b, w)?,
+                    p: self.operand(p, 1)?,
+                }
+            }
+            Op::Cvt { dty, sty, dst, src } => Uop::Cvt {
+                dty: *dty,
+                sty: *sty,
+                dst: self.slot(dst),
+                src: self.operand(src, sty.bits())?,
+            },
+        })
+    }
+}
+
+/// Lower a kernel into its flat micro-op form.
+pub fn decode(kernel: &Kernel) -> Result<DecodedKernel, SimError> {
+    // Same slot numbering as the reference engine (it pre-interns the
+    // whole kernel too), so register files are layout-compatible.
+    let regs = RegInterner::from_kernel(kernel);
+    let (shared_bases, shared_size) = shared_layout(kernel);
+
+    // Statement index → micro-op index of the first instruction at or
+    // after it (labels lower to nothing; a lane stepping past a label in
+    // the reference engine lands on exactly this instruction).
+    let mut stmt_to_uop = Vec::with_capacity(kernel.body.len() + 1);
+    let mut n = 0u32;
+    for st in &kernel.body {
+        stmt_to_uop.push(n);
+        if matches!(st, Statement::Instr { .. }) {
+            n += 1;
+        }
+    }
+    stmt_to_uop.push(n); // branch past the end = retire
+
+    let mut labels: std::collections::HashMap<&str, u32> = std::collections::HashMap::new();
+    for (i, st) in kernel.body.iter().enumerate() {
+        if let Statement::Label(l) = st {
+            labels.insert(l.as_str(), stmt_to_uop[i]);
+        }
+    }
+
+    let mut d = Decoder {
+        kernel,
+        regs,
+        shared_bases,
+    };
+    let mut uops = Vec::with_capacity(n as usize);
+    for (i, st) in kernel.body.iter().enumerate() {
+        let Statement::Instr { guard, op } = st else {
+            continue;
+        };
+        let guard = guard.as_ref().map(|g| (d.regs.intern(&g.reg), g.negated));
+        let op = d.op(op, |l| labels.get(l).copied())?;
+        uops.push(UopEntry {
+            stmt: i as u32,
+            guard,
+            op,
+        });
+    }
+
+    Ok(DecodedKernel {
+        nregs: d.regs.len() as u32,
+        shared_size,
+        param_names: kernel.params.iter().map(|p| p.name.clone()).collect(),
+        uops,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptx::parser::parse_kernel;
+
+    const K: &str = r#"
+.visible .entry d(.param .u64 out, .param .u32 n){
+.reg .b32 %r<6>; .reg .b64 %rd<6>; .reg .pred %p<2>;
+ld.param.u64 %rd1, [out];
+ld.param.u32 %r5, [n];
+cvta.to.global.u64 %rd2, %rd1;
+mov.u32 %r4, %tid.x;
+setp.ge.s32 %p1, %r4, %r5;
+@%p1 bra $EXIT;
+mul.wide.s32 %rd3, %r4, 4;
+add.s64 %rd4, %rd2, %rd3;
+st.global.b32 [%rd4], %r4;
+$EXIT: ret;
+}
+"#;
+
+    #[test]
+    fn labels_erase_and_targets_resolve() {
+        let k = parse_kernel(K).unwrap();
+        let dk = decode(&k).unwrap();
+        // 11 body statements, one of which is the `$EXIT` label
+        assert_eq!(dk.uops.len(), 10);
+        // the guarded bra is uop 5 and must target the final ret (uop 9)
+        let Uop::Bra { target } = &dk.uops[5].op else {
+            panic!("uop 5 is {:?}", dk.uops[5].op)
+        };
+        assert_eq!(*target, 9);
+        // the guard predicate is pre-interned, non-negated
+        let (gslot, negated) = dk.uops[5].guard.expect("bra is guarded");
+        assert!(!negated);
+        // the setp producing it writes the same slot
+        let Uop::SetpI { dst, .. } = &dk.uops[4].op else { panic!() };
+        assert_eq!(*dst, gslot);
+        // the side table points past the label: the ret is body stmt 10
+        assert_eq!(dk.uops[9].stmt, 10);
+        assert!(matches!(dk.uops[9].op, Uop::Ret));
+        assert_eq!(dk.param_names, vec!["out", "n"]);
+    }
+
+    #[test]
+    fn param_loads_carry_indices_and_masks() {
+        let k = parse_kernel(K).unwrap();
+        let dk = decode(&k).unwrap();
+        let Uop::LdParam { index, mask, .. } = &dk.uops[0].op else {
+            panic!()
+        };
+        assert_eq!((*index, *mask), (0, u64::MAX));
+        let Uop::LdParam { index, mask, .. } = &dk.uops[1].op else {
+            panic!()
+        };
+        assert_eq!((*index, *mask), (1, 0xFFFF_FFFF));
+    }
+
+    #[test]
+    fn unknown_label_is_an_eager_decode_error() {
+        let k = parse_kernel(
+            r#"
+.visible .entry bad(.param .u64 out){
+.reg .b32 %r<4>; .reg .pred %p<2>;
+mov.u32 %r1, 0;
+setp.eq.s32 %p1, %r1, 1;
+@%p1 bra $NOWHERE;
+ret;
+}
+"#,
+        )
+        .unwrap();
+        assert!(matches!(decode(&k), Err(SimError::UnknownLabel(l)) if l == "$NOWHERE"));
+    }
+
+    #[test]
+    fn unknown_shared_var_is_an_unknown_var_error() {
+        let k = parse_kernel(
+            r#"
+.visible .entry sv(.param .u64 out){
+.reg .b32 %r<4>; .reg .b64 %rd<4>;
+mov.u64 %rd1, ghost;
+ret;
+}
+"#,
+        )
+        .unwrap();
+        assert!(matches!(decode(&k), Err(SimError::UnknownVar(v)) if v == "ghost"));
+    }
+}

@@ -1,0 +1,759 @@
+//! Executor for the pre-decoded micro-op form, with parallel grid
+//! execution.
+//!
+//! # Why it is fast
+//!
+//! Per warp step the reference engine hashes register-name strings,
+//! chases label `HashMap`s and re-derives width masks; this engine walks
+//! a flat [`Uop`] array whose operands are already slot indices and
+//! pre-masked immediates. Warp state is struct-of-arrays — one
+//! `regs[slot * 32 + lane]` array per warp plus a packed `written`
+//! bitmask per slot — so the 32-lane inner loops touch contiguous
+//! memory.
+//!
+//! # Grid execution semantics
+//!
+//! With one worker (the default) blocks execute directly on the result
+//! image in launch order, exactly like the reference engine — no
+//! snapshots, no logs. With `sim_threads > 1`, blocks are split into
+//! contiguous index ranges on the coordinator's work-stealing
+//! [`WorkQueue`] and every block runs under *snapshot isolation*: it
+//! observes the launch-time memory image plus its own stores (each
+//! worker owns a private copy of global memory; a per-block store log is
+//! applied during the block and undone after), and the logs are merged
+//! into the result image **in launch block order**. The outcome is
+//! therefore bit-identical for any worker count — including the
+//! reference engine's serial order — for every kernel that does not read
+//! another block's global writes (which is scheduling-dependent on real
+//! hardware and out of scope for all engines). Overlapping writes from
+//! different blocks are deterministic (last block in launch order wins,
+//! as in the serial engine) and are surfaced in
+//! [`SimStats::cross_block_write_conflicts`].
+//!
+//! # Fidelity
+//!
+//! Observable behaviour — final [`GlobalMem`], [`SimStats`], and the
+//! block-(0,0,0) [`WarpEvent`] trace — is bit-identical to
+//! [`super::machine::run_reference`]; the differential tests in
+//! `tests/integration_sim.rs` and the unit tests in `machine.rs` hold the
+//! two engines (serial and parallel) to that. The only intentional
+//! deviations: static name/label errors surface at decode time rather
+//! than first execution, and the `max_warp_steps` budget counts micro-ops
+//! (labels are free here, they no longer exist).
+
+use super::decode::{Daddr, DecodedKernel, Dop, Uop};
+use super::machine::{
+    convert, f32_bin, f32_un, f64_bin, f64_un, flt_cmp, linear_to_tid, mul_full, mul_hi,
+    shared_window_offset, shfl_source_lane, special_value, width_mask, SimConfig, SimError,
+    SimResult, SimStats, WarpEvent, WriteShadow,
+};
+use super::memory::GlobalMem;
+use crate::coordinator::queue::WorkQueue;
+use crate::ptx::ast::Space;
+use crate::sym::term::{eval_bin, eval_cmp};
+use std::sync::Mutex;
+
+const WARP: usize = 32;
+
+/// One logged global-memory store: what was written and what it replaced
+/// (for the post-block undo that keeps the worker's image pristine).
+struct StoreRec {
+    addr: u64,
+    bytes: u32,
+    val: u64,
+    old: u64,
+}
+
+/// Everything one block produced: its ordered store log, its stats, and
+/// (block 0 only) its issue trace.
+struct BlockRun {
+    log: Vec<StoreRec>,
+    stats: SimStats,
+    trace: Vec<Vec<WarpEvent>>,
+}
+
+/// A block's result slot, filled by whichever worker ran it.
+type BlockSlot = Mutex<Option<Result<BlockRun, SimError>>>;
+
+/// Run a decoded kernel over the whole grid.
+///
+/// `cfg.sim_threads` workers execute contiguous block ranges; results are
+/// bit-identical for any thread count (see the module docs for the
+/// snapshot-isolation semantics that make this true).
+pub fn run_decoded(
+    dk: &DecodedKernel,
+    cfg: &SimConfig,
+    mem: GlobalMem,
+) -> Result<SimResult, SimError> {
+    // Launch-time parameter check, same order/message as the reference
+    // engine's eager map construction.
+    if cfg.params.len() < dk.param_names.len() {
+        return Err(SimError::UnknownParam(format!(
+            "{} (no value supplied)",
+            dk.param_names[cfg.params.len()]
+        )));
+    }
+    let (gx, gy, gz) = cfg.grid;
+    let nblocks = gx as usize * gy as usize * gz as usize;
+    if nblocks == 0 {
+        return Ok(SimResult {
+            mem,
+            stats: SimStats::default(),
+            trace: Vec::new(),
+        });
+    }
+    let tpb = cfg.threads_per_block();
+    let workers = cfg.sim_threads.max(1).min(nblocks);
+
+    if workers == 1 {
+        // Direct serial path: execute on the result image itself, with
+        // inline conflict accounting — no snapshot, log, undo or merge.
+        // Identical results to the parallel path for every supported
+        // kernel (cross-block RAW is out of scope for all engines).
+        let mut wk = Worker::new(dk, cfg, mem);
+        wk.direct = true;
+        // conflicts are impossible on a single-block grid — skip the shadow
+        wk.shadow = (nblocks > 1).then(|| WriteShadow::new(&wk.mem));
+        let mut stats = SimStats::default();
+        let mut trace = Vec::new();
+        for b in 0..nblocks {
+            let blk = wk.run_block(b, tpb)?;
+            accumulate(&mut stats, &blk.stats);
+            if b == 0 {
+                trace = blk.trace;
+            }
+        }
+        return Ok(SimResult {
+            mem: wk.mem,
+            stats,
+            trace,
+        });
+    }
+
+    let mut runs: Vec<Option<Result<BlockRun, SimError>>> = {
+        let queue: WorkQueue<(usize, usize)> = WorkQueue::new(workers);
+        // ~4 ranges per worker: coarse enough to amortize queue traffic,
+        // fine enough for stealing to balance skewed blocks
+        let chunk = nblocks.div_ceil(workers * 4).max(1);
+        let mut start = 0;
+        while start < nblocks {
+            let end = (start + chunk).min(nblocks);
+            queue.push((start, end));
+            start = end;
+        }
+        let cells: Vec<BlockSlot> = (0..nblocks).map(|_| Mutex::new(None)).collect();
+        let (qr, cr, mr) = (&queue, &cells, &mem);
+        std::thread::scope(|s| {
+            for w in 0..qr.workers() {
+                s.spawn(move || {
+                    let mut wk = Worker::new(dk, cfg, mr.clone());
+                    while let Some((lo, hi)) = qr.pop(w) {
+                        for b in lo..hi {
+                            let r = wk.run_block(b, tpb);
+                            *cr[b].lock().unwrap() = Some(r);
+                        }
+                        qr.retire();
+                    }
+                });
+            }
+        });
+        cells.into_iter().map(|c| c.into_inner().unwrap()).collect()
+    };
+
+    // Deterministic merge in launch block order: first error wins; store
+    // logs replay onto the master image with cross-block conflict
+    // detection (identical to the serial paths' inline accounting).
+    let mut master = mem;
+    let mut stats = SimStats::default();
+    let mut trace = Vec::new();
+    let mut written_by = WriteShadow::new(&master);
+    for (b, run) in runs.iter_mut().enumerate() {
+        let blk = run.take().expect("block executed")?;
+        accumulate(&mut stats, &blk.stats);
+        for rec in &blk.log {
+            master
+                .store(rec.addr, rec.bytes, rec.val)
+                .expect("logged store was bounds-checked during execution");
+            if written_by.note(rec.addr, rec.bytes, b as u32) {
+                stats.cross_block_write_conflicts += 1;
+            }
+        }
+        if b == 0 {
+            trace = blk.trace;
+        }
+    }
+    Ok(SimResult {
+        mem: master,
+        stats,
+        trace,
+    })
+}
+
+/// Field-exhaustive stats accumulation (destructuring makes adding a
+/// `SimStats` field without updating the merge a compile error).
+fn accumulate(dst: &mut SimStats, s: &SimStats) {
+    let SimStats {
+        warp_instructions,
+        thread_instructions,
+        global_loads,
+        nc_loads,
+        shared_loads,
+        stores,
+        shfls,
+        branches,
+        divergent_branches,
+        uninit_reads,
+        cross_block_write_conflicts,
+    } = *s;
+    dst.warp_instructions += warp_instructions;
+    dst.thread_instructions += thread_instructions;
+    dst.global_loads += global_loads;
+    dst.nc_loads += nc_loads;
+    dst.shared_loads += shared_loads;
+    dst.stores += stores;
+    dst.shfls += shfls;
+    dst.branches += branches;
+    dst.divergent_branches += divergent_branches;
+    dst.uninit_reads += uninit_reads;
+    dst.cross_block_write_conflicts += cross_block_write_conflicts;
+}
+
+/// Serial launch order: `bx` fastest, then `by`, then `bz`.
+fn block_coord(idx: usize, grid: (u32, u32, u32)) -> (u32, u32, u32) {
+    let (gx, gy) = (grid.0 as usize, grid.1 as usize);
+    (
+        (idx % gx) as u32,
+        ((idx / gx) % gy) as u32,
+        (idx / (gx * gy)) as u32,
+    )
+}
+
+/// One worker: a global-memory image, block-local shared scratch, and
+/// reusable struct-of-arrays warp state.
+///
+/// In the parallel path `mem` is a private copy kept pristine between
+/// blocks (stores are logged and undone); in the direct serial path
+/// (`direct` set) `mem` IS the result image — stores apply in place with
+/// inline conflict accounting, and no log is kept.
+struct Worker<'a> {
+    dk: &'a DecodedKernel,
+    cfg: &'a SimConfig,
+    mem: GlobalMem,
+    /// Direct serial mode: stores apply in place, nothing is logged.
+    direct: bool,
+    /// Inline last-writer shadow (direct mode, multi-block grids only).
+    shadow: Option<WriteShadow>,
+    cur_block: u32,
+    shared: Vec<u8>,
+    /// Lane registers, slot-major: `regs[slot * 32 + lane]`.
+    regs: Vec<u64>,
+    /// Written bitmask per slot (bit = lane).
+    written: Vec<u32>,
+    pc: [u32; WARP],
+    done: u32,
+    tids: [(u32, u32, u32); WARP],
+    log: Vec<StoreRec>,
+    stats: SimStats,
+    trace: Vec<Vec<WarpEvent>>,
+}
+
+impl<'a> Worker<'a> {
+    fn new(dk: &'a DecodedKernel, cfg: &'a SimConfig, mem: GlobalMem) -> Worker<'a> {
+        Worker {
+            dk,
+            cfg,
+            mem,
+            direct: false,
+            shadow: None,
+            cur_block: 0,
+            shared: Vec::new(),
+            regs: vec![0; dk.nregs as usize * WARP],
+            written: vec![0; dk.nregs as usize],
+            pc: [0; WARP],
+            done: 0,
+            tids: [(0, 0, 0); WARP],
+            log: Vec::new(),
+            stats: SimStats::default(),
+            trace: Vec::new(),
+        }
+    }
+
+    fn run_block(&mut self, bidx: usize, tpb: u32) -> Result<BlockRun, SimError> {
+        let ctaid = block_coord(bidx, self.cfg.grid);
+        self.cur_block = bidx as u32;
+        // block-local scratch: fresh zeroed window, no sharing with other
+        // blocks (clear + resize zero-fills, keeping the allocation)
+        self.shared.clear();
+        self.shared.resize(self.dk.shared_size as usize, 0);
+        self.stats = SimStats::default();
+        self.log.clear();
+        self.trace.clear();
+        let record = self.cfg.record_trace && bidx == 0;
+
+        let mut result = Ok(());
+        for w in 0..tpb.div_ceil(32) {
+            self.reset_warp(w, tpb);
+            if record {
+                self.trace.push(Vec::new());
+            }
+            if let Err(e) = self.run_warp(ctaid, record) {
+                result = Err(e);
+                break;
+            }
+        }
+        // snapshot isolation (parallel path only): undo in reverse so the
+        // private image is the launch image again
+        if !self.direct {
+            for rec in self.log.iter().rev() {
+                self.mem
+                    .store(rec.addr, rec.bytes, rec.old)
+                    .expect("undo of an executed store is in bounds");
+            }
+        }
+        result.map(|()| BlockRun {
+            log: std::mem::take(&mut self.log),
+            stats: self.stats,
+            trace: std::mem::take(&mut self.trace),
+        })
+    }
+
+    fn reset_warp(&mut self, w: u32, tpb: u32) {
+        self.regs.fill(0);
+        self.written.fill(0);
+        self.done = 0;
+        for l in 0..WARP as u32 {
+            let t = w * 32 + l;
+            self.pc[l as usize] = 0;
+            self.tids[l as usize] = linear_to_tid(t, self.cfg.block);
+            if t >= tpb {
+                self.done |= 1 << l; // fractional warp: extra lanes inactive
+            }
+        }
+    }
+
+    /// Read a decoded operand for `lane`, masked with `m` (immediates are
+    /// pre-masked at decode time and pass through).
+    #[inline]
+    fn read(&mut self, lane: usize, d: Dop, m: u64, ctaid: (u32, u32, u32)) -> u64 {
+        match d {
+            Dop::Imm(v) => v,
+            Dop::Slot(s) => {
+                let s = s as usize;
+                if self.written[s] & (1 << lane) == 0 {
+                    self.stats.uninit_reads += 1;
+                }
+                self.regs[s * WARP + lane] & m
+            }
+            Dop::Special(sp) => {
+                special_value(sp, self.tids[lane], self.cfg.block, self.cfg.grid, ctaid) & m
+            }
+        }
+    }
+
+    #[inline]
+    fn write(&mut self, lane: usize, slot: u32, v: u64) {
+        let s = slot as usize;
+        self.regs[s * WARP + lane] = v;
+        self.written[s] |= 1 << lane;
+    }
+
+    #[inline]
+    fn addr_value(&mut self, lane: usize, a: &Daddr, ctaid: (u32, u32, u32)) -> u64 {
+        self.read(lane, a.base, u64::MAX, ctaid).wrapping_add(a.offset)
+    }
+
+    fn load_mem(&mut self, space: Space, addr: u64, bytes: u32) -> Result<u64, SimError> {
+        match shared_window_offset(self.shared.len() as u64, space, addr, bytes, "shared load")? {
+            Some(o) => {
+                let mut v = 0u64;
+                for k in 0..bytes as usize {
+                    v |= (self.shared[o + k] as u64) << (8 * k);
+                }
+                Ok(v)
+            }
+            None => Ok(self.mem.load(addr, bytes)?),
+        }
+    }
+
+    fn store_mem(&mut self, space: Space, addr: u64, bytes: u32, v: u64) -> Result<(), SimError> {
+        match shared_window_offset(self.shared.len() as u64, space, addr, bytes, "shared store")? {
+            Some(o) => {
+                for k in 0..bytes as usize {
+                    self.shared[o + k] = (v >> (8 * k)) as u8;
+                }
+                Ok(())
+            }
+            None => {
+                if self.direct {
+                    // direct serial path: store in place, count conflicts
+                    // inline (same order as the reference engine)
+                    self.mem.store(addr, bytes, v)?;
+                    if let Some(sh) = &mut self.shadow {
+                        if sh.note(addr, bytes, self.cur_block) {
+                            self.stats.cross_block_write_conflicts += 1;
+                        }
+                    }
+                } else {
+                    let old = self.mem.exchange(addr, bytes, v)?;
+                    self.log.push(StoreRec {
+                        addr,
+                        bytes,
+                        val: v,
+                        old,
+                    });
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn run_warp(&mut self, ctaid: (u32, u32, u32), record: bool) -> Result<(), SimError> {
+        let dk = self.dk;
+        let nuops = dk.uops.len() as u32;
+        let mut steps = 0u64;
+        loop {
+            // lowest-pc-first reconvergence over live lanes
+            let live = !self.done;
+            if live == 0 {
+                return Ok(());
+            }
+            let mut pc = u32::MAX;
+            let mut m = live;
+            while m != 0 {
+                let l = m.trailing_zeros() as usize;
+                m &= m - 1;
+                pc = pc.min(self.pc[l]);
+            }
+            if pc >= nuops {
+                let mut m = live;
+                while m != 0 {
+                    let l = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    if self.pc[l] >= nuops {
+                        self.done |= 1 << l;
+                    }
+                }
+                continue;
+            }
+            steps += 1;
+            if steps > self.cfg.max_warp_steps {
+                return Err(SimError::StepLimit(self.cfg.max_warp_steps));
+            }
+            let mut active = 0u32;
+            let mut m = live;
+            while m != 0 {
+                let l = m.trailing_zeros() as usize;
+                m &= m - 1;
+                if self.pc[l] == pc {
+                    active |= 1 << l;
+                }
+            }
+
+            let entry = &dk.uops[pc as usize];
+            self.stats.warp_instructions += 1;
+            // per-lane guard evaluation (plain register read, no
+            // uninitialized-read accounting — as in the reference engine)
+            let exec = match entry.guard {
+                None => active,
+                Some((g, negated)) => {
+                    let g = g as usize;
+                    let mut e = 0u32;
+                    let mut m = active;
+                    while m != 0 {
+                        let l = m.trailing_zeros() as usize;
+                        m &= m - 1;
+                        if (self.regs[g * WARP + l] & 1 == 1) != negated {
+                            e |= 1 << l;
+                        }
+                    }
+                    e
+                }
+            };
+            self.stats.thread_instructions += exec.count_ones() as u64;
+            if record {
+                // address of the first executing lane for memory ops
+                // (this extra base read counts toward uninit_reads, as in
+                // the reference engine's traced path)
+                let addr = match &entry.op {
+                    Uop::Ld { addr, .. } | Uop::St { addr, .. } => {
+                        let a = *addr;
+                        match exec.trailing_zeros() {
+                            32 => 0,
+                            l => self.addr_value(l as usize, &a, ctaid),
+                        }
+                    }
+                    _ => 0,
+                };
+                self.trace.last_mut().unwrap().push(WarpEvent {
+                    stmt: entry.stmt,
+                    active,
+                    exec,
+                    addr,
+                });
+            }
+            self.exec_uop(pc as usize, active, exec, ctaid)?;
+        }
+    }
+
+    fn exec_uop(
+        &mut self,
+        pc: usize,
+        active: u32,
+        exec: u32,
+        ctaid: (u32, u32, u32),
+    ) -> Result<(), SimError> {
+        let dk = self.dk;
+        let op = &dk.uops[pc].op;
+        match op {
+            Uop::Bra { target } => {
+                self.stats.branches += 1;
+                let (t, mut taken) = (*target, 0u32);
+                let mut m = active;
+                while m != 0 {
+                    let l = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    if exec & (1 << l) != 0 {
+                        self.pc[l] = t;
+                        taken += 1;
+                    } else {
+                        self.pc[l] += 1;
+                    }
+                }
+                if taken != 0 && taken != active.count_ones() {
+                    self.stats.divergent_branches += 1;
+                }
+                return Ok(());
+            }
+            Uop::Ret => {
+                let mut m = active;
+                while m != 0 {
+                    let l = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    if exec & (1 << l) != 0 {
+                        self.done |= 1 << l;
+                    } else {
+                        self.pc[l] += 1;
+                    }
+                }
+                return Ok(());
+            }
+            Uop::Shfl { mode, dst, pred_out, src, b, c, mask } => {
+                self.stats.shfls += 1;
+                let (mode, dst, pred_out) = (*mode, *dst, *pred_out);
+                let (src, b, c, mask) = (*src, *b, *c, *mask);
+                // gather source values first (exchange is simultaneous)
+                let mut srcv = [0u64; WARP];
+                let mut m = exec;
+                while m != 0 {
+                    let i = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    srcv[i] = self.read(i, src, 0xFFFF_FFFF, ctaid);
+                }
+                let mut m = exec;
+                while m != 0 {
+                    let i = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    let bv = self.read(i, b, 0xFFFF_FFFF, ctaid) as u32;
+                    let cv = self.read(i, c, 0xFFFF_FFFF, ctaid) as u32;
+                    let mv = self.read(i, mask, 0xFFFF_FFFF, ctaid) as u32;
+                    let lane = i as u32;
+                    // PTX ISA `c`-operand encoding — shared helper, so the
+                    // clamp/segment semantics can never drift per engine
+                    let (src_lane, pval) = shfl_source_lane(mode, lane, bv, cv);
+                    let valid = pval
+                        && (mv >> src_lane) & 1 == 1
+                        && (exec >> src_lane) & 1 == 1;
+                    let val = if valid { srcv[src_lane as usize] } else { srcv[i] };
+                    self.write(i, dst, val & 0xFFFF_FFFF);
+                    if let Some(p) = pred_out {
+                        self.write(i, p, valid as u64);
+                    }
+                }
+            }
+            Uop::Activemask { dst } => {
+                let dst = *dst;
+                let mut m = exec;
+                while m != 0 {
+                    let i = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    self.write(i, dst, active as u64);
+                }
+            }
+            Uop::BarSync => {} // warps serialized; see the reference engine
+            _ => {
+                let mut m = exec;
+                while m != 0 {
+                    let i = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    self.exec_lane(pc, i, ctaid)?;
+                }
+            }
+        }
+        let mut m = active;
+        while m != 0 {
+            let l = m.trailing_zeros() as usize;
+            m &= m - 1;
+            self.pc[l] += 1;
+        }
+        Ok(())
+    }
+
+    fn exec_lane(
+        &mut self,
+        pc: usize,
+        lane: usize,
+        ctaid: (u32, u32, u32),
+    ) -> Result<(), SimError> {
+        let dk = self.dk;
+        match &dk.uops[pc].op {
+            Uop::LdParam { dst, index, mask } => {
+                let v = self.cfg.params[*index as usize] & mask;
+                self.write(lane, *dst, v);
+            }
+            Uop::Ld { space, nc, bytes, dst, addr } => {
+                let (space, nc, bytes, dst, addr) = (*space, *nc, *bytes, *dst, *addr);
+                let a = self.addr_value(lane, &addr, ctaid);
+                match space {
+                    Space::Global | Space::Const | Space::Local => {
+                        self.stats.global_loads += 1;
+                        if nc {
+                            self.stats.nc_loads += 1;
+                        }
+                    }
+                    Space::Shared => self.stats.shared_loads += 1,
+                    Space::Param => unreachable!("lowered to LdParam"),
+                }
+                let v = self.load_mem(space, a, bytes)?;
+                self.write(lane, dst, v);
+            }
+            Uop::St { space, bytes, smask, src, addr } => {
+                let (space, bytes, smask, src, addr) = (*space, *bytes, *smask, *src, *addr);
+                let a = self.addr_value(lane, &addr, ctaid);
+                let v = self.read(lane, src, smask, ctaid);
+                self.stats.stores += 1;
+                self.store_mem(space, a, bytes, v)?;
+            }
+            Uop::Mov { dst, src, mask } => {
+                let v = self.read(lane, *src, *mask, ctaid);
+                self.write(lane, *dst, v);
+            }
+            Uop::Cvta { dst, src } => {
+                let v = self.read(lane, *src, u64::MAX, ctaid);
+                self.write(lane, *dst, v);
+            }
+            Uop::IntBin { op, w, mask, dst, a, b } => {
+                let av = self.read(lane, *a, *mask, ctaid);
+                let bv = self.read(lane, *b, *mask, ctaid);
+                self.write(lane, *dst, eval_bin(*op, av, bv, *w));
+            }
+            Uop::MulWide { signed, w, dst, a, b } => {
+                let (w, m) = (*w, width_mask(*w));
+                let av = self.read(lane, *a, m, ctaid);
+                let bv = self.read(lane, *b, m, ctaid);
+                let v = mul_full(*signed, w, av, bv) & width_mask(w * 2);
+                self.write(lane, *dst, v);
+            }
+            Uop::MulHi { signed, w, dst, a, b } => {
+                let (w, m) = (*w, width_mask(*w));
+                let av = self.read(lane, *a, m, ctaid);
+                let bv = self.read(lane, *b, m, ctaid);
+                self.write(lane, *dst, mul_hi(*signed, w, av, bv));
+            }
+            Uop::Mad { wide, signed, w, dst, a, b, c } => {
+                let (w, m) = (*w, width_mask(*w));
+                let av = self.read(lane, *a, m, ctaid);
+                let bv = self.read(lane, *b, m, ctaid);
+                let v = if *wide {
+                    let cv = self.read(lane, *c, width_mask(w * 2), ctaid);
+                    mul_full(*signed, w, av, bv).wrapping_add(cv) & width_mask(w * 2)
+                } else {
+                    let cv = self.read(lane, *c, m, ctaid);
+                    av.wrapping_mul(bv).wrapping_add(cv) & m
+                };
+                self.write(lane, *dst, v);
+            }
+            Uop::Not { w, dst, a } => {
+                let m = width_mask(*w);
+                let av = self.read(lane, *a, m, ctaid);
+                self.write(lane, *dst, !av & m);
+            }
+            Uop::Neg { w, dst, a } => {
+                let m = width_mask(*w);
+                let av = self.read(lane, *a, m, ctaid);
+                self.write(lane, *dst, av.wrapping_neg() & m);
+            }
+            Uop::FltBin { op, wide, dst, a, b } => {
+                let m = if *wide { u64::MAX } else { 0xFFFF_FFFF };
+                let av = self.read(lane, *a, m, ctaid);
+                let bv = self.read(lane, *b, m, ctaid);
+                let v = if !*wide {
+                    let (x, y) = (f32::from_bits(av as u32), f32::from_bits(bv as u32));
+                    f32_bin(*op, x, y).to_bits() as u64
+                } else {
+                    let (x, y) = (f64::from_bits(av), f64::from_bits(bv));
+                    f64_bin(*op, x, y).to_bits()
+                };
+                self.write(lane, *dst, v);
+            }
+            Uop::Fma { wide, dst, a, b, c } => {
+                let m = if *wide { u64::MAX } else { 0xFFFF_FFFF };
+                let av = self.read(lane, *a, m, ctaid);
+                let bv = self.read(lane, *b, m, ctaid);
+                let cv = self.read(lane, *c, m, ctaid);
+                let v = if !*wide {
+                    f32::from_bits(av as u32)
+                        .mul_add(f32::from_bits(bv as u32), f32::from_bits(cv as u32))
+                        .to_bits() as u64
+                } else {
+                    f64::from_bits(av)
+                        .mul_add(f64::from_bits(bv), f64::from_bits(cv))
+                        .to_bits()
+                };
+                self.write(lane, *dst, v);
+            }
+            Uop::FltUn { op, wide, dst, a } => {
+                let m = if *wide { u64::MAX } else { 0xFFFF_FFFF };
+                let av = self.read(lane, *a, m, ctaid);
+                let v = if !*wide {
+                    f32_un(*op, f32::from_bits(av as u32)).to_bits() as u64
+                } else {
+                    f64_un(*op, f64::from_bits(av)).to_bits()
+                };
+                self.write(lane, *dst, v);
+            }
+            Uop::SetpF { cmp, wide, dst, a, b } => {
+                let m = if *wide { u64::MAX } else { 0xFFFF_FFFF };
+                let av = self.read(lane, *a, m, ctaid);
+                let bv = self.read(lane, *b, m, ctaid);
+                let r = flt_cmp(*cmp, *wide, av, bv);
+                self.write(lane, *dst, r as u64);
+            }
+            Uop::SetpI { kind, w, dst, a, b } => {
+                let m = width_mask(*w);
+                let av = self.read(lane, *a, m, ctaid);
+                let bv = self.read(lane, *b, m, ctaid);
+                let r = eval_cmp(*kind, av, bv, *w);
+                self.write(lane, *dst, r as u64);
+            }
+            Uop::Selp { w, dst, a, b, p } => {
+                let m = width_mask(*w);
+                let av = self.read(lane, *a, m, ctaid);
+                let bv = self.read(lane, *b, m, ctaid);
+                let pv = self.read(lane, *p, 1, ctaid);
+                self.write(lane, *dst, if pv & 1 == 1 { av } else { bv });
+            }
+            Uop::Cvt { dty, sty, dst, src } => {
+                let sv = self.read(lane, *src, width_mask(sty.bits()), ctaid);
+                self.write(lane, *dst, convert(sv, *sty, *dty));
+            }
+            Uop::Bra { .. }
+            | Uop::Ret
+            | Uop::Shfl { .. }
+            | Uop::Activemask { .. }
+            | Uop::BarSync => {
+                unreachable!("handled at warp level")
+            }
+        }
+        Ok(())
+    }
+}

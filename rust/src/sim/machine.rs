@@ -1,4 +1,4 @@
-//! Concrete warp-level PTX interpreter.
+//! Concrete warp-level PTX interpreter — the *reference* engine.
 //!
 //! Plays the GPU in this testbed (DESIGN.md substitution table): 32-thread
 //! warps in lock-step SIMT with lowest-pc-first reconvergence, per-lane
@@ -8,11 +8,19 @@
 //! the synthesized kernels and to produce the dynamic instruction trace the
 //! performance model replays.
 //!
+//! This module walks the AST directly, interning register names on the
+//! fly; it is deliberately simple and serves as the semantic oracle the
+//! pre-decoded micro-op engine ([`crate::sim::exec`]) is differential-
+//! tested against. Production callers go through [`crate::sim::run`],
+//! which lowers the kernel once ([`crate::sim::decode`]) and executes the
+//! flat form. The two engines share the arithmetic helpers at the bottom
+//! of this file so a value can never be computed two different ways.
+//!
 //! Limitation (documented): warps of a block run serialized, so `bar.sync`
 //! is a no-op — enough for the OpenACC-style kernels evaluated here, which
 //! never communicate through shared memory.
 
-use super::memory::{GlobalMem, MemError, SHARED_BASE};
+use super::memory::{GlobalMem, MemError, GLOBAL_BASE, SHARED_BASE};
 use crate::emu::env::RegInterner;
 use crate::ptx::ast::*;
 use crate::sym::term::{eval_bin, eval_cmp, to_signed, BvOp, CmpKind};
@@ -28,6 +36,10 @@ pub struct SimConfig {
     /// Record the issue trace of block (0,0,0) for the perf model.
     pub record_trace: bool,
     pub max_warp_steps: u64,
+    /// Worker threads for the decoded engine's grid execution (blocks are
+    /// split across workers; results are bit-identical for any value).
+    /// The reference engine ignores it. `1` = run on the calling thread.
+    pub sim_threads: usize,
 }
 
 impl SimConfig {
@@ -38,6 +50,7 @@ impl SimConfig {
             params,
             record_trace: false,
             max_warp_steps: 50_000_000,
+            sim_threads: 1,
         }
     }
 
@@ -47,7 +60,7 @@ impl SimConfig {
 }
 
 /// One warp-issue event (for the perf model).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct WarpEvent {
     /// Kernel body statement index.
     pub stmt: u32,
@@ -60,7 +73,7 @@ pub struct WarpEvent {
     pub addr: u64,
 }
 
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct SimStats {
     /// Warp-level instruction issues.
     pub warp_instructions: u64,
@@ -74,6 +87,12 @@ pub struct SimStats {
     pub branches: u64,
     pub divergent_branches: u64,
     pub uninit_reads: u64,
+    /// Global-memory stores whose bytes were also written by a *different*
+    /// block (write-after-write across blocks). The serial simulator used
+    /// to hide this by quietly applying blocks in launch order; it is now
+    /// counted — identically by every engine — because such kernels are
+    /// scheduling-dependent on real hardware.
+    pub cross_block_write_conflicts: u64,
 }
 
 #[derive(Debug)]
@@ -89,6 +108,9 @@ pub enum SimError {
     Mem(MemError),
     UnknownLabel(String),
     UnknownParam(String),
+    /// A shared-variable name used as an operand with no matching
+    /// `.shared` declaration (formerly misreported as `UnknownParam`).
+    UnknownVar(String),
     StepLimit(u64),
 }
 
@@ -98,6 +120,7 @@ impl std::fmt::Display for SimError {
             SimError::Mem(e) => write!(f, "{e}"),
             SimError::UnknownLabel(l) => write!(f, "unknown branch target `{l}`"),
             SimError::UnknownParam(p) => write!(f, "unknown parameter `{p}`"),
+            SimError::UnknownVar(v) => write!(f, "unknown shared variable `{v}`"),
             SimError::StepLimit(n) => write!(f, "warp exceeded {n} steps (livelock?)"),
         }
     }
@@ -128,8 +151,33 @@ struct Lane {
     tid: (u32, u32, u32),
 }
 
-/// Run a kernel to completion over the whole grid.
-pub fn run(kernel: &Kernel, cfg: &SimConfig, mem: GlobalMem) -> Result<SimResult, SimError> {
+/// Compute the per-block shared-memory window layout: `(name → virtual
+/// base, total window bytes)`. Shared by both engines so the address map
+/// can never drift.
+pub(super) fn shared_layout(kernel: &Kernel) -> (HashMap<&str, u64>, u64) {
+    let mut shared_bases: HashMap<&str, u64> = HashMap::new();
+    let mut shared_size = 0u64;
+    for sh in &kernel.shared {
+        let a = sh.align.max(1) as u64;
+        shared_size = (shared_size + a - 1) / a * a;
+        shared_bases.insert(sh.name.as_str(), SHARED_BASE + shared_size);
+        shared_size += sh.bytes;
+    }
+    (shared_bases, shared_size)
+}
+
+/// Run a kernel to completion over the whole grid, walking the AST.
+///
+/// This is the reference engine: every observable ([`GlobalMem`],
+/// [`SimStats`], the block-(0,0,0) trace) is bit-identical to
+/// [`crate::sim::run`] for kernels that do not read another block's
+/// global writes (cross-block read-after-write is scheduling-dependent
+/// on hardware and unsupported by the parallel engine).
+pub fn run_reference(
+    kernel: &Kernel,
+    cfg: &SimConfig,
+    mem: GlobalMem,
+) -> Result<SimResult, SimError> {
     let mut regs = RegInterner::from_kernel(kernel);
     // intern guard regs too (already covered by from_kernel)
     let mut labels: HashMap<&str, usize> = HashMap::new();
@@ -147,16 +195,12 @@ pub fn run(kernel: &Kernel, cfg: &SimConfig, mem: GlobalMem) -> Result<SimResult
             })?,
         );
     }
-    // shared-variable window layout
-    let mut shared_bases: HashMap<&str, u64> = HashMap::new();
-    let mut shared_size = 0u64;
-    for sh in &kernel.shared {
-        let a = sh.align.max(1) as u64;
-        shared_size = (shared_size + a - 1) / a * a;
-        shared_bases.insert(sh.name.as_str(), SHARED_BASE + shared_size);
-        shared_size += sh.bytes;
-    }
+    // shared-variable window layout (computed once, outside the block loop)
+    let (shared_bases, shared_size) = shared_layout(kernel);
 
+    // conflicts are impossible on a single-block grid — skip the shadow
+    let nblocks = cfg.grid.0 as u64 * cfg.grid.1 as u64 * cfg.grid.2 as u64;
+    let written_by = (nblocks > 1).then(|| WriteShadow::new(&mem));
     let mut m = Machine {
         kernel,
         regs: &mut regs,
@@ -164,19 +208,25 @@ pub fn run(kernel: &Kernel, cfg: &SimConfig, mem: GlobalMem) -> Result<SimResult
         params,
         shared_bases,
         mem,
-        shared: vec![0u8; shared_size as usize],
+        shared: Vec::new(),
         stats: SimStats::default(),
         trace: Vec::new(),
         cfg,
+        written_by,
+        cur_block: 0,
     };
 
     let tpb = cfg.threads_per_block();
     for bz in 0..cfg.grid.2 {
         for by in 0..cfg.grid.1 {
             for bx in 0..cfg.grid.0 {
-                m.shared.iter_mut().for_each(|b| *b = 0);
+                // block-local scratch: fully re-zeroed per block (buffer
+                // reused; clear + resize zero-fills every element)
+                m.shared.clear();
+                m.shared.resize(shared_size as usize, 0);
                 let record = cfg.record_trace && (bx, by, bz) == (0, 0, 0);
                 m.run_block((bx, by, bz), tpb, record)?;
+                m.cur_block += 1;
             }
         }
     }
@@ -199,6 +249,10 @@ struct Machine<'a> {
     stats: SimStats,
     trace: Vec<Vec<WarpEvent>>,
     cfg: &'a SimConfig,
+    /// Last-writer shadow for `cross_block_write_conflicts` (`None` on
+    /// single-block grids, where conflicts are impossible).
+    written_by: Option<WriteShadow>,
+    cur_block: u32,
 }
 
 impl<'a> Machine<'a> {
@@ -381,42 +435,8 @@ impl<'a> Machine<'a> {
                     let cv = self.read_operand(&mut lanes[i], c, 32, ctaid)? as u32;
                     let mv = self.read_operand(&mut lanes[i], mask, 32, ctaid)? as u32;
                     let lane = i as u32;
-                    // PTX ISA `c`-operand encoding: clamp value in bits
-                    // 0–4, segment mask in bits 8–12. Lanes are bounded to
-                    // their segment:
-                    //   maxLane = (lane & segmask) | (cval & ~segmask)
-                    //   minLane =  lane & segmask
-                    // maxLane is the upper bound for Down/Bfly/Idx and the
-                    // *lower* bound for Up (where the conventional clamp
-                    // value is 0, making it the segment base).
-                    let bval = bv & 0x1f;
-                    let cval = cv & 0x1f;
-                    let segmask = (cv >> 8) & 0x1f;
-                    let max_lane = (lane & segmask) | (cval & !segmask & 0x1f);
-                    let min_lane = lane & segmask;
-                    // source index as i32: Up can go below the segment
-                    // base (even negative), Down/Bfly above the clamp
-                    let (j, pval) = match mode {
-                        ShflMode::Up => {
-                            let j = lane as i32 - bval as i32;
-                            (j, j >= max_lane as i32)
-                        }
-                        ShflMode::Down => {
-                            let j = (lane + bval) as i32;
-                            (j, j <= max_lane as i32)
-                        }
-                        ShflMode::Bfly => {
-                            let j = (lane ^ bval) as i32;
-                            (j, j <= max_lane as i32)
-                        }
-                        ShflMode::Idx => {
-                            let j = (min_lane | (bval & !segmask & 0x1f)) as i32;
-                            (j, j <= max_lane as i32)
-                        }
-                    };
-                    // out-of-segment source: read the lane's own value
-                    // (in-range j is always < 32 by construction)
-                    let src_lane = if pval { j as u32 } else { lane };
+                    // PTX ISA `c`-operand encoding — see `shfl_source_lane`
+                    let (src_lane, pval) = shfl_source_lane(*mode, lane, bv, cv);
                     let valid = pval
                         && (mv >> src_lane) & 1 == 1
                         && (exec_mask >> src_lane) & 1 == 1;
@@ -465,30 +485,6 @@ impl<'a> Machine<'a> {
         lane.regs[id]
     }
 
-    fn special_value(&self, sp: Special, lane: &Lane, ctaid: (u32, u32, u32)) -> u64 {
-        let b = self.cfg.block;
-        let g = self.cfg.grid;
-        (match sp {
-            Special::TidX => lane.tid.0,
-            Special::TidY => lane.tid.1,
-            Special::TidZ => lane.tid.2,
-            Special::NtidX => b.0,
-            Special::NtidY => b.1,
-            Special::NtidZ => b.2,
-            Special::CtaidX => ctaid.0,
-            Special::CtaidY => ctaid.1,
-            Special::CtaidZ => ctaid.2,
-            Special::NctaidX => g.0,
-            Special::NctaidY => g.1,
-            Special::NctaidZ => g.2,
-            Special::LaneId => (lane.tid.0
-                + lane.tid.1 * b.0
-                + lane.tid.2 * b.0 * b.1)
-                % 32,
-            Special::WarpSize => 32,
-        }) as u64
-    }
-
     fn read_operand(
         &mut self,
         lane: &mut Lane,
@@ -496,22 +492,20 @@ impl<'a> Machine<'a> {
         width: u32,
         ctaid: (u32, u32, u32),
     ) -> Result<u64, SimError> {
-        let m = if width >= 64 {
-            u64::MAX
-        } else {
-            (1u64 << width) - 1
-        };
+        let m = width_mask(width);
         Ok(match o {
             Operand::Reg(r) => self.read_reg(lane, r) & m,
             Operand::ImmInt(v) => (*v as u64) & m,
             Operand::ImmF32(b) => *b as u64,
             Operand::ImmF64(b) => *b,
-            Operand::Special(sp) => self.special_value(*sp, lane, ctaid) & m,
+            Operand::Special(sp) => {
+                special_value(*sp, lane.tid, self.cfg.block, self.cfg.grid, ctaid) & m
+            }
             Operand::Var(v) => self
                 .shared_bases
                 .get(v.as_str())
                 .copied()
-                .ok_or_else(|| SimError::UnknownParam(v.clone()))?,
+                .ok_or_else(|| SimError::UnknownVar(v.clone()))?,
         })
     }
 
@@ -525,46 +519,8 @@ impl<'a> Machine<'a> {
         Ok(base.wrapping_add(addr.offset as u64))
     }
 
-    /// Resolve an address into the per-block shared window, bounds-checked.
-    ///
-    /// `.shared` accesses accept window-relative addresses (offsets below
-    /// the window size, as PTX shared-state-space addressing starts at 0)
-    /// or generic addresses at `SHARED_BASE`; anything else — including a
-    /// below-base address that is not a valid window offset — is an
-    /// out-of-bounds error, never a silent alias onto global memory.
-    /// Returns `None` when the access belongs to global memory.
-    fn shared_offset(
-        &self,
-        space: Space,
-        addr: u64,
-        bytes: u32,
-        kind: &'static str,
-    ) -> Result<Option<usize>, SimError> {
-        let window = self.shared.len() as u64;
-        let o = if addr >= SHARED_BASE {
-            addr - SHARED_BASE
-        } else if space == Space::Shared {
-            addr // window-relative
-        } else {
-            return Ok(None);
-        };
-        let in_bounds = o
-            .checked_add(bytes as u64)
-            .map(|end| end <= window)
-            .unwrap_or(false);
-        if !in_bounds {
-            return Err(SimError::Mem(MemError::OutOfBounds {
-                kind,
-                addr,
-                bytes: bytes as u64,
-                size: window,
-            }));
-        }
-        Ok(Some(o as usize))
-    }
-
     fn load_mem(&mut self, space: Space, addr: u64, bytes: u32) -> Result<u64, SimError> {
-        match self.shared_offset(space, addr, bytes, "shared load")? {
+        match shared_window_offset(self.shared.len() as u64, space, addr, bytes, "shared load")? {
             Some(o) => {
                 let mut v = 0u64;
                 for k in 0..bytes as usize {
@@ -583,14 +539,22 @@ impl<'a> Machine<'a> {
         bytes: u32,
         v: u64,
     ) -> Result<(), SimError> {
-        match self.shared_offset(space, addr, bytes, "shared store")? {
+        match shared_window_offset(self.shared.len() as u64, space, addr, bytes, "shared store")? {
             Some(o) => {
                 for k in 0..bytes as usize {
                     self.shared[o + k] = (v >> (8 * k)) as u8;
                 }
                 Ok(())
             }
-            None => Ok(self.mem.store(addr, bytes, v)?),
+            None => {
+                self.mem.store(addr, bytes, v)?;
+                if let Some(sh) = &mut self.written_by {
+                    if sh.note(addr, bytes, self.cur_block) {
+                        self.stats.cross_block_write_conflicts += 1;
+                    }
+                }
+                Ok(())
+            }
         }
     }
 
@@ -657,26 +621,8 @@ impl<'a> Machine<'a> {
                 let av = self.read_operand(lane, a, w, ctaid)?;
                 let bv = self.read_operand(lane, b, w, ctaid)?;
                 let v = match bop {
-                    IntBinOp::MulWide => {
-                        if signed {
-                            (to_signed(av, w) * to_signed(bv, w)) as u64
-                                & width_mask(w * 2)
-                        } else {
-                            (av as u128 * bv as u128) as u64 & width_mask(w * 2)
-                        }
-                    }
-                    IntBinOp::MulHi => {
-                        let full = if signed {
-                            (to_signed(av, w) * to_signed(bv, w)) as u64
-                        } else {
-                            ((av as u128 * bv as u128) >> w) as u64
-                        };
-                        if signed {
-                            ((full as u128) >> w) as u64 & width_mask(w)
-                        } else {
-                            full & width_mask(w)
-                        }
-                    }
+                    IntBinOp::MulWide => mul_full(signed, w, av, bv) & width_mask(w * 2),
+                    IntBinOp::MulHi => mul_hi(signed, w, av, bv),
                     _ => {
                         let bv2 = match bop {
                             IntBinOp::Shl | IntBinOp::Shr => bv, // shift counts
@@ -694,12 +640,7 @@ impl<'a> Machine<'a> {
                 let bv = self.read_operand(lane, b, w, ctaid)?;
                 let v = if *wide {
                     let cv = self.read_operand(lane, c, w * 2, ctaid)?;
-                    let prod = if signed {
-                        (to_signed(av, w) * to_signed(bv, w)) as u64
-                    } else {
-                        (av as u128 * bv as u128) as u64
-                    };
-                    prod.wrapping_add(cv) & width_mask(w * 2)
+                    mul_full(signed, w, av, bv).wrapping_add(cv) & width_mask(w * 2)
                 } else {
                     let cv = self.read_operand(lane, c, w, ctaid)?;
                     av.wrapping_mul(bv).wrapping_add(cv) & width_mask(w)
@@ -760,22 +701,7 @@ impl<'a> Machine<'a> {
                 let av = self.read_operand(lane, a, w, ctaid)?;
                 let bv = self.read_operand(lane, b, w, ctaid)?;
                 let r = if ty.is_float() {
-                    let (x, y) = if *ty == Type::F32 {
-                        (
-                            f32::from_bits(av as u32) as f64,
-                            f32::from_bits(bv as u32) as f64,
-                        )
-                    } else {
-                        (f64::from_bits(av), f64::from_bits(bv))
-                    };
-                    match cmp {
-                        CmpOp::Eq => x == y,
-                        CmpOp::Ne => x != y,
-                        CmpOp::Lt => x < y,
-                        CmpOp::Le => x <= y,
-                        CmpOp::Gt => x > y,
-                        CmpOp::Ge => x >= y,
-                    }
+                    flt_cmp(*cmp, *ty != Type::F32, av, bv)
                 } else {
                     let signed = !matches!(ty, Type::U8 | Type::U16 | Type::U32 | Type::U64);
                     eval_cmp(cmp_kind(*cmp, signed), av, bv, w)
@@ -805,7 +731,187 @@ impl<'a> Machine<'a> {
     }
 }
 
-fn width_mask(w: u32) -> u64 {
+/// Resolve an address into the per-block shared window, bounds-checked.
+///
+/// `.shared` accesses accept window-relative addresses (offsets below
+/// the window size, as PTX shared-state-space addressing starts at 0)
+/// or generic addresses at `SHARED_BASE`; anything else — including a
+/// below-base address that is not a valid window offset — is an
+/// out-of-bounds error, never a silent alias onto global memory.
+/// Returns `None` when the access belongs to global memory.
+pub(super) fn shared_window_offset(
+    window: u64,
+    space: Space,
+    addr: u64,
+    bytes: u32,
+    kind: &'static str,
+) -> Result<Option<usize>, SimError> {
+    let o = if addr >= SHARED_BASE {
+        addr - SHARED_BASE
+    } else if space == Space::Shared {
+        addr // window-relative
+    } else {
+        return Ok(None);
+    };
+    let in_bounds = o
+        .checked_add(bytes as u64)
+        .map(|end| end <= window)
+        .unwrap_or(false);
+    if !in_bounds {
+        return Err(SimError::Mem(MemError::OutOfBounds {
+            kind,
+            addr,
+            bytes: bytes as u64,
+            size: window,
+        }));
+    }
+    Ok(Some(o as usize))
+}
+
+/// Last-writer shadow of global memory for cross-block conflict
+/// detection: one slot per global byte (`u32::MAX` = never written), flat
+/// like [`GlobalMem`] itself — far cheaper than a per-byte map. Both
+/// engines note stores in launch block order, so the resulting
+/// `cross_block_write_conflicts` count is identical serial vs parallel.
+pub(super) struct WriteShadow {
+    slots: Vec<u32>,
+}
+
+impl WriteShadow {
+    pub(super) fn new(mem: &GlobalMem) -> WriteShadow {
+        WriteShadow {
+            slots: vec![u32::MAX; mem.size()],
+        }
+    }
+
+    /// Mark `bytes` at `addr` as written by `block`; returns `true` when
+    /// any of them was previously written by a *different* block (one
+    /// conflicting store, however many bytes overlap). `addr` must be a
+    /// bounds-checked global address (the caller just stored through it).
+    pub(super) fn note(&mut self, addr: u64, bytes: u32, block: u32) -> bool {
+        let o = (addr - GLOBAL_BASE) as usize;
+        let mut conflict = false;
+        for s in &mut self.slots[o..o + bytes as usize] {
+            conflict |= *s != u32::MAX && *s != block;
+            *s = block;
+        }
+        conflict
+    }
+}
+
+/// PTX ISA `shfl.sync` source-lane computation, shared by both engines
+/// so the subtle `c`-operand semantics can never drift between them.
+///
+/// `c` encodes the clamp value in bits 0–4 and the segment mask in bits
+/// 8–12. Lanes are bounded to their segment:
+///   maxLane = (lane & segmask) | (cval & ~segmask)
+///   minLane =  lane & segmask
+/// maxLane is the upper bound for Down/Bfly/Idx and the *lower* bound for
+/// Up (where the conventional clamp value is 0, making it the segment
+/// base). The source index is signed: Up can go below the segment base
+/// (even negative), Down/Bfly above the clamp. Returns the resolved
+/// source lane (the lane itself when out of segment — always < 32) and
+/// the in-segment predicate.
+pub(super) fn shfl_source_lane(mode: ShflMode, lane: u32, bv: u32, cv: u32) -> (u32, bool) {
+    let bval = bv & 0x1f;
+    let cval = cv & 0x1f;
+    let segmask = (cv >> 8) & 0x1f;
+    let max_lane = (lane & segmask) | (cval & !segmask & 0x1f);
+    let min_lane = lane & segmask;
+    let (j, pval) = match mode {
+        ShflMode::Up => {
+            let j = lane as i32 - bval as i32;
+            (j, j >= max_lane as i32)
+        }
+        ShflMode::Down => {
+            let j = (lane + bval) as i32;
+            (j, j <= max_lane as i32)
+        }
+        ShflMode::Bfly => {
+            let j = (lane ^ bval) as i32;
+            (j, j <= max_lane as i32)
+        }
+        ShflMode::Idx => {
+            let j = (min_lane | (bval & !segmask & 0x1f)) as i32;
+            (j, j <= max_lane as i32)
+        }
+    };
+    (if pval { j as u32 } else { lane }, pval)
+}
+
+/// Full-width product of two `w`-bit values (low 64 bits, unmasked) —
+/// the `mul.wide` / wide-`mad` kernel, shared by both engines.
+pub(super) fn mul_full(signed: bool, w: u32, av: u64, bv: u64) -> u64 {
+    if signed {
+        (to_signed(av, w) * to_signed(bv, w)) as u64
+    } else {
+        (av as u128 * bv as u128) as u64
+    }
+}
+
+/// `mul.hi` semantics, shared by both engines (including its asymmetric
+/// signed/unsigned shift placement).
+pub(super) fn mul_hi(signed: bool, w: u32, av: u64, bv: u64) -> u64 {
+    let full = if signed {
+        (to_signed(av, w) * to_signed(bv, w)) as u64
+    } else {
+        ((av as u128 * bv as u128) >> w) as u64
+    };
+    if signed {
+        ((full as u128) >> w) as u64 & width_mask(w)
+    } else {
+        full & width_mask(w)
+    }
+}
+
+/// Float `setp` comparison, shared by both engines (f32 operands are
+/// widened to f64 before comparing).
+pub(super) fn flt_cmp(cmp: CmpOp, wide: bool, av: u64, bv: u64) -> bool {
+    let (x, y) = if wide {
+        (f64::from_bits(av), f64::from_bits(bv))
+    } else {
+        (
+            f32::from_bits(av as u32) as f64,
+            f32::from_bits(bv as u32) as f64,
+        )
+    };
+    match cmp {
+        CmpOp::Eq => x == y,
+        CmpOp::Ne => x != y,
+        CmpOp::Lt => x < y,
+        CmpOp::Le => x <= y,
+        CmpOp::Gt => x > y,
+        CmpOp::Ge => x >= y,
+    }
+}
+
+/// Value of a special (pre-defined) register for one thread.
+pub(super) fn special_value(
+    sp: Special,
+    tid: (u32, u32, u32),
+    block: (u32, u32, u32),
+    grid: (u32, u32, u32),
+    ctaid: (u32, u32, u32),
+) -> u64 {
+    (match sp {
+        Special::TidX => tid.0,
+        Special::TidY => tid.1,
+        Special::TidZ => tid.2,
+        Special::NtidX => block.0,
+        Special::NtidY => block.1,
+        Special::NtidZ => block.2,
+        Special::CtaidX => ctaid.0,
+        Special::CtaidY => ctaid.1,
+        Special::CtaidZ => ctaid.2,
+        Special::NctaidX => grid.0,
+        Special::NctaidY => grid.1,
+        Special::NctaidZ => grid.2,
+        Special::LaneId => (tid.0 + tid.1 * block.0 + tid.2 * block.0 * block.1) % 32,
+        Special::WarpSize => 32,
+    }) as u64
+}
+
+pub(super) fn width_mask(w: u32) -> u64 {
     if w >= 64 {
         u64::MAX
     } else {
@@ -813,14 +919,14 @@ fn width_mask(w: u32) -> u64 {
     }
 }
 
-fn linear_to_tid(t: u32, block: (u32, u32, u32)) -> (u32, u32, u32) {
+pub(super) fn linear_to_tid(t: u32, block: (u32, u32, u32)) -> (u32, u32, u32) {
     let x = t % block.0;
     let y = (t / block.0) % block.1;
     let z = t / (block.0 * block.1);
     (x, y, z)
 }
 
-fn int_bvop(op: IntBinOp, signed: bool) -> BvOp {
+pub(super) fn int_bvop(op: IntBinOp, signed: bool) -> BvOp {
     match op {
         IntBinOp::Add => BvOp::Add,
         IntBinOp::Sub => BvOp::Sub,
@@ -868,7 +974,7 @@ fn int_bvop(op: IntBinOp, signed: bool) -> BvOp {
     }
 }
 
-fn cmp_kind(c: CmpOp, signed: bool) -> CmpKind {
+pub(super) fn cmp_kind(c: CmpOp, signed: bool) -> CmpKind {
     match (c, signed) {
         (CmpOp::Eq, _) => CmpKind::Eq,
         (CmpOp::Ne, _) => CmpKind::Ne,
@@ -883,7 +989,7 @@ fn cmp_kind(c: CmpOp, signed: bool) -> CmpKind {
     }
 }
 
-fn f32_bin(op: FltBinOp, x: f32, y: f32) -> f32 {
+pub(super) fn f32_bin(op: FltBinOp, x: f32, y: f32) -> f32 {
     match op {
         FltBinOp::Add => x + y,
         FltBinOp::Sub => x - y,
@@ -894,7 +1000,7 @@ fn f32_bin(op: FltBinOp, x: f32, y: f32) -> f32 {
     }
 }
 
-fn f64_bin(op: FltBinOp, x: f64, y: f64) -> f64 {
+pub(super) fn f64_bin(op: FltBinOp, x: f64, y: f64) -> f64 {
     match op {
         FltBinOp::Add => x + y,
         FltBinOp::Sub => x - y,
@@ -905,7 +1011,7 @@ fn f64_bin(op: FltBinOp, x: f64, y: f64) -> f64 {
     }
 }
 
-fn f32_un(op: FltUnOp, x: f32) -> f32 {
+pub(super) fn f32_un(op: FltUnOp, x: f32) -> f32 {
     match op {
         FltUnOp::Neg => -x,
         FltUnOp::Abs => x.abs(),
@@ -919,7 +1025,7 @@ fn f32_un(op: FltUnOp, x: f32) -> f32 {
     }
 }
 
-fn f64_un(op: FltUnOp, x: f64) -> f64 {
+pub(super) fn f64_un(op: FltUnOp, x: f64) -> f64 {
     match op {
         FltUnOp::Neg => -x,
         FltUnOp::Abs => x.abs(),
@@ -933,7 +1039,7 @@ fn f64_un(op: FltUnOp, x: f64) -> f64 {
     }
 }
 
-fn convert(v: u64, sty: Type, dty: Type) -> u64 {
+pub(super) fn convert(v: u64, sty: Type, dty: Type) -> u64 {
     use Type::*;
     let as_f64 = |v: u64, t: Type| -> f64 {
         match t {
@@ -984,6 +1090,31 @@ mod tests {
     use super::*;
     use crate::ptx::parser::parse_kernel;
     use crate::sim::memory::{Allocator, GlobalMem};
+
+    /// Differential harness shadowing the old entry point: every test in
+    /// this module now runs the reference walker, the decoded engine
+    /// (serial) and the decoded engine on two workers, asserts their
+    /// memory / stats / traces are bit-identical, and returns the decoded
+    /// result the assertions below inspect.
+    fn run(k: &Kernel, cfg: &SimConfig, mem: GlobalMem) -> Result<SimResult, SimError> {
+        let r_ref = run_reference(k, cfg, mem.clone());
+        let r_dec = crate::sim::run(k, cfg, mem.clone());
+        let mut cfg_par = cfg.clone();
+        cfg_par.sim_threads = 2;
+        let r_par = crate::sim::run(k, &cfg_par, mem);
+        match (&r_ref, &r_dec, &r_par) {
+            (Ok(a), Ok(b), Ok(c)) => {
+                for (tag, other) in [("decoded", b), ("parallel", c)] {
+                    assert_eq!(a.mem, other.mem, "{tag}: GlobalMem diverged");
+                    assert_eq!(a.stats, other.stats, "{tag}: stats diverged");
+                    assert_eq!(a.trace, other.trace, "{tag}: trace diverged");
+                }
+            }
+            (Err(_), Err(_), Err(_)) => {}
+            (a, b, c) => panic!("engines disagree on success: {a:?} / {b:?} / {c:?}"),
+        }
+        r_dec
+    }
 
     /// c[i] = a[i] + b[i] over one block of 64 threads.
     #[test]

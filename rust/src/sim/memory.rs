@@ -37,7 +37,7 @@ impl std::fmt::Display for MemError {
 impl std::error::Error for MemError {}
 
 /// Flat global memory.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct GlobalMem {
     bytes: Vec<u8>,
 }
@@ -52,6 +52,12 @@ impl GlobalMem {
 
     pub fn size(&self) -> usize {
         self.bytes.len()
+    }
+
+    /// The raw backing bytes (for whole-image comparisons in differential
+    /// tests and benchmarks).
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.bytes
     }
 
     fn offset(&self, addr: u64, n: u64, kind: &'static str) -> Result<usize, MemError> {
@@ -82,6 +88,19 @@ impl GlobalMem {
             self.bytes[o + i] = (val >> (8 * i)) as u8;
         }
         Ok(())
+    }
+
+    /// Store `val` and return the bytes it replaced — the decoded engine's
+    /// per-block store logs need the old value for their undo pass, and a
+    /// failing exchange must report a *store* bounds error.
+    pub fn exchange(&mut self, addr: u64, bytes: u32, val: u64) -> Result<u64, MemError> {
+        let o = self.offset(addr, bytes as u64, "store")?;
+        let mut old = 0u64;
+        for i in 0..bytes as usize {
+            old |= (self.bytes[o + i] as u64) << (8 * i);
+            self.bytes[o + i] = (val >> (8 * i)) as u8;
+        }
+        Ok(old)
     }
 
     /// Write an `f32` slice starting at a device pointer.

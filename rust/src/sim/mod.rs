@@ -1,7 +1,33 @@
 //! Concrete warp-level GPU simulator (the testbed's "GPU").
+//!
+//! Two engines share one set of semantics:
+//!
+//! * [`machine`] — the reference AST walker, the semantic oracle;
+//! * [`decode`] + [`exec`] — a one-time lowering to flat micro-ops
+//!   executed with struct-of-arrays warp state and (optionally) parallel
+//!   block execution. This is what [`run`] uses.
+//!
+//! Both produce bit-identical [`GlobalMem`], [`SimStats`] and
+//! block-(0,0,0) traces for any `sim_threads` value (differential-tested;
+//! see `tests/integration_sim.rs`).
 
+pub mod decode;
+pub mod exec;
 pub mod machine;
 pub mod memory;
 
-pub use machine::{run, SimConfig, SimError, SimResult, SimStats, WarpEvent};
+pub use decode::{decode, DecodedKernel};
+pub use exec::run_decoded;
+pub use machine::{run_reference, SimConfig, SimError, SimResult, SimStats, WarpEvent};
 pub use memory::{Allocator, GlobalMem, MemError, GLOBAL_BASE, SHARED_BASE};
+
+use crate::ptx::ast::Kernel;
+
+/// Run a kernel to completion over the whole grid: decode once, then
+/// execute the micro-op form (`cfg.sim_threads` workers). Callers that
+/// run one kernel many times should decode once via [`decode`] (or the
+/// pipeline's cached `Decoded` artifact) and call [`run_decoded`].
+pub fn run(kernel: &Kernel, cfg: &SimConfig, mem: GlobalMem) -> Result<SimResult, SimError> {
+    let dk = decode::decode(kernel)?;
+    exec::run_decoded(&dk, cfg, mem)
+}

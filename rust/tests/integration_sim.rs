@@ -1,0 +1,306 @@
+//! Differential and divergence tests for the two simulator engines.
+//!
+//! The decoded micro-op engine (serial and parallel) must be bit-identical
+//! to the reference AST walker on every observable: final global memory,
+//! stats, and the block-(0,0,0) issue trace. Divergence control flow is
+//! additionally pinned to hand-computed lane tables so a bug shared by
+//! both engines cannot hide.
+
+use ptxasw::coordinator::sim_sizes;
+use ptxasw::ptx::parser::parse_kernel;
+use ptxasw::ptx::Kernel;
+use ptxasw::sim::{run, run_reference, Allocator, GlobalMem, SimConfig, SimError, SimResult};
+use ptxasw::suite;
+use ptxasw::util::check_cases;
+
+/// Run all engines (reference, decoded serial, decoded on 3 and 7
+/// workers) and assert bit-identical results; returns the decoded result.
+fn engines_agree(k: &Kernel, cfg: &SimConfig, mem: GlobalMem) -> SimResult {
+    let reference = run_reference(k, cfg, mem.clone()).expect("reference run");
+    for threads in [1usize, 3, 7] {
+        let mut c = cfg.clone();
+        c.sim_threads = threads;
+        let r = run(k, &c, mem.clone()).expect("decoded run");
+        assert_eq!(reference.mem, r.mem, "GlobalMem diverged at {threads} threads");
+        assert_eq!(reference.stats, r.stats, "stats diverged at {threads} threads");
+        assert_eq!(reference.trace, r.trace, "trace diverged at {threads} threads");
+    }
+    run(k, cfg, mem).unwrap()
+}
+
+/// If/else diamond: lanes 0–15 take the `bra`, 16–31 fall through, and
+/// everyone reconverges (lowest-pc-first) for a common tail.
+#[test]
+fn diamond_reconvergence_lane_table() {
+    let k = parse_kernel(
+        r#"
+.visible .entry diamond(.param .u64 out){
+.reg .b32 %r<6>; .reg .b64 %rd<4>; .reg .pred %p<2>;
+ld.param.u64 %rd1, [out];
+cvta.to.global.u64 %rd1, %rd1;
+mov.u32 %r1, %tid.x;
+setp.lt.s32 %p1, %r1, 16;
+@%p1 bra $THEN;
+mul.lo.s32 %r2, %r1, 3;
+bra $JOIN;
+$THEN:
+add.s32 %r2, %r1, 100;
+$JOIN:
+add.s32 %r2, %r2, 1;
+mul.wide.s32 %rd2, %r1, 4;
+add.s64 %rd3, %rd1, %rd2;
+st.global.b32 [%rd3], %r2;
+ret;
+}
+"#,
+    )
+    .unwrap();
+    let mem = GlobalMem::new(1 << 12);
+    let mut alloc = Allocator::new(&mem);
+    let out = alloc.alloc(128);
+    let mut cfg = SimConfig::new(1, 32, vec![out]);
+    cfg.record_trace = true;
+    let r = engines_agree(&k, &cfg, mem);
+
+    let vals = r.mem.read_u32s(out, 32).unwrap();
+    for t in 0..32u32 {
+        let expect = if t < 16 { t + 100 + 1 } else { t * 3 + 1 };
+        assert_eq!(vals[t as usize], expect, "lane {t}");
+    }
+    assert_eq!(r.stats.divergent_branches, 1, "only the guarded bra diverges");
+    // the else-path executes first (its pc is lower), then the then-path,
+    // and the tail reconverges to the full warp
+    let trace = &r.trace[0];
+    assert!(trace.iter().any(|e| e.active == 0xFFFF_0000));
+    assert!(trace.iter().any(|e| e.active == 0x0000_FFFF));
+    let tail = trace.last().unwrap();
+    assert_eq!(tail.active, 0xFFFF_FFFF, "reconverged for the ret");
+}
+
+/// Per-lane loop trip counts (`(tid & 3) + 1`): looping lanes run before
+/// the exited lanes' store (lowest pc first), and the store issues once
+/// for the whole warp.
+#[test]
+fn loop_divergence_lane_table() {
+    let k = parse_kernel(
+        r#"
+.visible .entry lp(.param .u64 out){
+.reg .b32 %r<6>; .reg .b64 %rd<4>; .reg .pred %p<2>;
+ld.param.u64 %rd1, [out];
+cvta.to.global.u64 %rd1, %rd1;
+mov.u32 %r1, %tid.x;
+and.b32 %r2, %r1, 3;
+mov.u32 %r3, 0;
+mov.u32 %r4, 0;
+$LOOP:
+add.s32 %r4, %r4, %r1;
+add.s32 %r3, %r3, 1;
+setp.le.s32 %p1, %r3, %r2;
+@%p1 bra $LOOP;
+mul.wide.s32 %rd2, %r1, 4;
+add.s64 %rd3, %rd1, %rd2;
+st.global.b32 [%rd3], %r4;
+ret;
+}
+"#,
+    )
+    .unwrap();
+    let mem = GlobalMem::new(1 << 12);
+    let mut alloc = Allocator::new(&mem);
+    let out = alloc.alloc(128);
+    let mut cfg = SimConfig::new(1, 32, vec![out]);
+    cfg.record_trace = true;
+    let r = engines_agree(&k, &cfg, mem);
+    let vals = r.mem.read_u32s(out, 32).unwrap();
+    for t in 0..32u32 {
+        assert_eq!(vals[t as usize], t * ((t & 3) + 1), "lane {t}");
+    }
+    assert!(r.stats.divergent_branches >= 1);
+    // every lane stores exactly once, as one warp-level issue
+    let stores: Vec<_> = r.trace[0]
+        .iter()
+        .filter(|e| e.exec == 0xFFFF_FFFF)
+        .collect();
+    assert!(!stores.is_empty());
+    assert_eq!(r.stats.stores, 32);
+}
+
+/// Fractional warps (`done: t >= tpb`) and negated-guard predication:
+/// block of 37 threads, only odd tids store.
+#[test]
+fn fractional_warp_and_predicated_off_lanes() {
+    let k = parse_kernel(
+        r#"
+.visible .entry fw(.param .u64 out){
+.reg .b32 %r<6>; .reg .b64 %rd<4>; .reg .pred %p<2>;
+ld.param.u64 %rd1, [out];
+cvta.to.global.u64 %rd1, %rd1;
+mov.u32 %r1, %tid.x;
+and.b32 %r2, %r1, 1;
+setp.eq.s32 %p1, %r2, 0;
+mul.wide.s32 %rd2, %r1, 4;
+add.s64 %rd3, %rd1, %rd2;
+@!%p1 st.global.b32 [%rd3], %r1;
+ret;
+}
+"#,
+    )
+    .unwrap();
+    let mut mem = GlobalMem::new(1 << 12);
+    let mut alloc = Allocator::new(&mem);
+    let out = alloc.alloc(4 * 64);
+    mem.write_u32s(out, &vec![9999; 64]).unwrap();
+    let mut cfg = SimConfig::new(1, 37, vec![out]);
+    cfg.record_trace = true;
+    let r = engines_agree(&k, &cfg, mem);
+    let vals = r.mem.read_u32s(out, 64).unwrap();
+    for t in 0..64u32 {
+        let expect = if t < 37 && t % 2 == 1 { t } else { 9999 };
+        assert_eq!(vals[t as usize], expect, "lane {t}");
+    }
+    // 18 odd tids below 37
+    assert_eq!(r.stats.stores, 18);
+    // two warp streams were traced (37 threads = 1 full + 1 fractional);
+    // the second warp's lanes 5..31 never execute anything
+    assert_eq!(r.trace.len(), 2);
+    assert!(r.trace[1].iter().all(|e| e.active & 0xFFFF_FFE0 == 0));
+    // the guarded store issues with a proper exec subset
+    let st = r.trace[0]
+        .iter()
+        .find(|e| e.exec != e.active && e.exec != 0)
+        .expect("guarded store event");
+    assert_eq!(st.exec, 0xAAAA_AAAA, "odd lanes of warp 0");
+}
+
+/// Every block stores to the same word: deterministic last-block-wins
+/// value plus a conflict count of `nblocks - 1`, identical on every
+/// engine and thread count.
+#[test]
+fn cross_block_write_conflicts_are_counted() {
+    let k = parse_kernel(
+        r#"
+.visible .entry clash(.param .u64 out){
+.reg .b32 %r<4>; .reg .b64 %rd<4>;
+ld.param.u64 %rd1, [out];
+cvta.to.global.u64 %rd1, %rd1;
+mov.u32 %r1, %ctaid.x;
+st.global.b32 [%rd1], %r1;
+ret;
+}
+"#,
+    )
+    .unwrap();
+    let mem = GlobalMem::new(1 << 12);
+    let mut alloc = Allocator::new(&mem);
+    let out = alloc.alloc(4);
+    let cfg = SimConfig::new(4, 1, vec![out]);
+    let r = engines_agree(&k, &cfg, mem);
+    assert_eq!(r.mem.read_u32s(out, 1).unwrap()[0], 3, "launch order wins");
+    assert_eq!(r.stats.cross_block_write_conflicts, 3);
+}
+
+/// Disjoint per-block writes must not count as conflicts.
+#[test]
+fn disjoint_block_writes_do_not_conflict() {
+    let k = parse_kernel(
+        r#"
+.visible .entry dis(.param .u64 out){
+.reg .b32 %r<4>; .reg .b64 %rd<6>;
+ld.param.u64 %rd1, [out];
+cvta.to.global.u64 %rd1, %rd1;
+mov.u32 %r1, %ctaid.x;
+mul.wide.s32 %rd2, %r1, 4;
+add.s64 %rd3, %rd1, %rd2;
+st.global.b32 [%rd3], %r1;
+ret;
+}
+"#,
+    )
+    .unwrap();
+    let mem = GlobalMem::new(1 << 12);
+    let mut alloc = Allocator::new(&mem);
+    let out = alloc.alloc(4 * 8);
+    let cfg = SimConfig::new(8, 1, vec![out]);
+    let r = engines_agree(&k, &cfg, mem);
+    assert_eq!(
+        r.mem.read_u32s(out, 8).unwrap(),
+        (0..8).collect::<Vec<u32>>()
+    );
+    assert_eq!(r.stats.cross_block_write_conflicts, 0);
+}
+
+/// An unknown shared variable is an `UnknownVar` on both engines (the
+/// decoded engine reports it eagerly at decode time).
+#[test]
+fn unknown_shared_var_same_error_on_both_engines() {
+    let k = parse_kernel(
+        r#"
+.visible .entry sv(.param .u64 out){
+.reg .b32 %r<4>; .reg .b64 %rd<4>;
+mov.u64 %rd1, ghost;
+ret;
+}
+"#,
+    )
+    .unwrap();
+    let cfg = SimConfig::new(1, 1, vec![0x1000]);
+    let e1 = run_reference(&k, &cfg, GlobalMem::new(64)).unwrap_err();
+    let e2 = run(&k, &cfg, GlobalMem::new(64)).unwrap_err();
+    for e in [e1, e2] {
+        assert!(
+            matches!(&e, SimError::UnknownVar(v) if v == "ghost"),
+            "want UnknownVar(ghost), got {e:?}"
+        );
+        assert!(e.to_string().contains("unknown shared variable"));
+    }
+}
+
+/// Randomized differential: suite benchmarks with randomized seeds, run
+/// through every engine, must agree bit-for-bit — and the baseline
+/// kernel's output must match the workload's bit-exact CPU reference.
+#[test]
+fn randomized_suite_workloads_differential() {
+    let benches = suite::suite();
+    check_cases("sim-differential", 6, |rng| {
+        for _ in 0..3 {
+            let b = &benches[rng.below(benches.len() as u64) as usize];
+            let (nx, ny, nz) = sim_sizes(b);
+            let seed = rng.next_u64();
+            let w = suite::workload(b, nx, ny, nz, seed);
+            let mut cfg = w.cfg.clone();
+            cfg.record_trace = true;
+            let r = engines_agree(&w.kernel, &cfg, w.mem.clone());
+            let out = r.mem.read_f32s(w.out_ptr, w.out_len).unwrap();
+            assert_eq!(out.len(), w.expected.len());
+            for (i, (a, e)) in out.iter().zip(&w.expected).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    e.to_bits(),
+                    "{}[{i}] diverged from the CPU reference (seed {seed})",
+                    b.name
+                );
+            }
+            assert_eq!(r.stats.cross_block_write_conflicts, 0, "{}", b.name);
+        }
+    });
+}
+
+/// Decoding one suite kernel of each shape and replaying it with
+/// `sim_threads` larger than the grid must also hold.
+#[test]
+fn thread_counts_beyond_grid_are_safe() {
+    let b = suite::by_name("jacobi").unwrap();
+    let (nx, ny, nz) = sim_sizes(&b);
+    let w = suite::workload(&b, nx, ny, nz, 11);
+    let mut cfg = w.cfg.clone();
+    cfg.record_trace = true;
+    let base = run(&w.kernel, &cfg, w.mem.clone()).unwrap();
+    for threads in [0usize, 2, 64] {
+        let mut c = cfg.clone();
+        c.sim_threads = threads;
+        let r = run(&w.kernel, &c, w.mem.clone()).unwrap();
+        assert_eq!(base.mem, r.mem);
+        assert_eq!(base.stats, r.stats);
+        assert_eq!(base.trace, r.trace);
+    }
+}
