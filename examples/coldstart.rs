@@ -1,0 +1,113 @@
+//! `coldstart` — cold-vs-warm emulation timing probe (BENCH_4).
+//!
+//! Measures what the `emulated/` + `decoded/` disk artifacts buy a fresh
+//! process: every suite kernel is symbolically emulated and decoded once
+//! into a cold cache directory, then a second pipeline (the stand-in for
+//! a fresh process) resolves the same artifacts from disk. The warm pass
+//! must perform **zero** emulations and **zero** decodes — the run fails
+//! otherwise — and `BENCH_4.json` records the wall-time ratio.
+//!
+//!     cargo run --release --example coldstart -- [--out FILE] [--repeat N]
+
+use ptxasw::cli::Args;
+use ptxasw::pipeline::{DiskStore, Pipeline, Stage, DEFAULT_MAX_BYTES};
+use ptxasw::suite;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
+    let out_path = args.opt("out").unwrap_or("BENCH_4.json").to_string();
+    let repeat = args.opt_usize("repeat", 3).unwrap_or(3).max(1);
+
+    let dir = std::env::temp_dir().join(format!("ptxasw-coldstart-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let benches = suite::suite();
+    let kernels: Vec<_> = benches.iter().map(suite::generate).collect();
+
+    // cold: emulate + decode everything once, persisting as we go
+    let p_cold = Pipeline::new().with_disk(DiskStore::open(&dir, DEFAULT_MAX_BYTES).unwrap());
+    let t0 = Instant::now();
+    let mut unique = std::collections::HashSet::new();
+    for k in &kernels {
+        let parsed = p_cold.intake(k.clone());
+        unique.insert(parsed.hash);
+        p_cold
+            .emulated_hashed(&parsed.kernel, parsed.hash)
+            .expect("cold emulation");
+        p_cold.decoded(&parsed.kernel, parsed.hash).expect("cold decode");
+    }
+    let cold_s = t0.elapsed().as_secs_f64();
+    let cold_stats = p_cold.stats();
+    assert_eq!(
+        cold_stats.cache.emulate_misses as usize,
+        unique.len(),
+        "cold pass computes every unique emulation"
+    );
+
+    // warm: fresh pipeline + fresh store over the same directory — best
+    // of N to keep the tiny numbers stable
+    let mut warm_s = f64::INFINITY;
+    let mut last = None;
+    for _ in 0..repeat {
+        let p_warm =
+            Pipeline::new().with_disk(DiskStore::open(&dir, DEFAULT_MAX_BYTES).unwrap());
+        let t0 = Instant::now();
+        for k in &kernels {
+            let parsed = p_warm.intake(k.clone());
+            p_warm
+                .emulated_hashed(&parsed.kernel, parsed.hash)
+                .expect("warm load");
+            p_warm.decoded(&parsed.kernel, parsed.hash).expect("warm decode load");
+        }
+        warm_s = warm_s.min(t0.elapsed().as_secs_f64());
+        last = Some(p_warm.stats());
+    }
+    let warm_stats = last.unwrap();
+
+    // correctness gate: the warm pass must never emulate or decode
+    assert_eq!(warm_stats.stage_count(Stage::Emulate), 0, "warm pass re-emulated");
+    assert_eq!(warm_stats.stage_count(Stage::Decode), 0, "warm pass re-decoded");
+    assert_eq!(
+        warm_stats.cache.emulate_disk_hits as usize,
+        unique.len(),
+        "every emulation must come from disk"
+    );
+    assert_eq!(
+        warm_stats.cache.decode_disk_hits as usize,
+        unique.len(),
+        "every decoded kernel must come from disk"
+    );
+
+    let speedup = cold_s / warm_s.max(1e-9);
+    let mut j = String::new();
+    writeln!(j, "{{").unwrap();
+    writeln!(j, "  \"bench\": \"coldstart\",").unwrap();
+    writeln!(j, "  \"kernels\": {},", kernels.len()).unwrap();
+    writeln!(j, "  \"cold_emulate_decode_s\": {cold_s:.6},").unwrap();
+    writeln!(j, "  \"warm_disk_load_s\": {warm_s:.6},").unwrap();
+    writeln!(j, "  \"cold_over_warm\": {speedup:.3},").unwrap();
+    writeln!(
+        j,
+        "  \"emulate_disk_hits\": {},",
+        warm_stats.cache.emulate_disk_hits
+    )
+    .unwrap();
+    writeln!(
+        j,
+        "  \"decode_disk_hits\": {}",
+        warm_stats.cache.decode_disk_hits
+    )
+    .unwrap();
+    writeln!(j, "}}").unwrap();
+
+    std::fs::write(&out_path, &j).expect("write BENCH_4.json");
+    eprintln!(
+        "coldstart: {} kernels — cold {:.3}s, warm {:.3}s ({speedup:.2}x) -> {out_path}",
+        kernels.len(),
+        cold_s,
+        warm_s
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

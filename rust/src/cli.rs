@@ -45,7 +45,14 @@ impl Args {
     fn is_flag(key: &str) -> bool {
         matches!(
             key,
-            "help" | "report" | "list" | "quiet" | "force" | "stats" | "no-disk-cache"
+            "help"
+                | "report"
+                | "list"
+                | "quiet"
+                | "force"
+                | "stats"
+                | "no-disk-cache"
+                | "detect-races"
         )
     }
 

@@ -118,8 +118,18 @@ pub fn pipeline_stats(s: &crate::pipeline::PipelineStats) -> String {
         .unwrap();
     };
     cache_row("workload", s.cache.workload_hits, 0, s.cache.workload_misses);
-    cache_row("decoded", s.cache.decode_hits, 0, s.cache.decode_misses);
-    cache_row("emulated", s.cache.emulate_hits, 0, s.cache.emulate_misses);
+    cache_row(
+        "decoded",
+        s.cache.decode_hits,
+        s.cache.decode_disk_hits,
+        s.cache.decode_misses,
+    );
+    cache_row(
+        "emulated",
+        s.cache.emulate_hits,
+        s.cache.emulate_disk_hits,
+        s.cache.emulate_misses,
+    );
     cache_row(
         "detected",
         s.cache.detect_hits,

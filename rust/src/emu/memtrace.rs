@@ -7,6 +7,72 @@
 
 use crate::ptx::ast::{Space, Type};
 use crate::sym::{may_alias, TermId, TermPool};
+use crate::util::{Dec, Enc};
+
+/// Stable on-disk tag of a [`Type`] (the [`crate::sym::persist`] codec —
+/// exhaustive match so adding a variant without a tag fails to compile).
+pub(crate) fn type_tag(t: Type) -> u8 {
+    match t {
+        Type::U8 => 0,
+        Type::U16 => 1,
+        Type::U32 => 2,
+        Type::U64 => 3,
+        Type::S8 => 4,
+        Type::S16 => 5,
+        Type::S32 => 6,
+        Type::S64 => 7,
+        Type::B8 => 8,
+        Type::B16 => 9,
+        Type::B32 => 10,
+        Type::B64 => 11,
+        Type::F32 => 12,
+        Type::F64 => 13,
+        Type::Pred => 14,
+    }
+}
+
+pub(crate) fn type_from_tag(tag: u8) -> Option<Type> {
+    Some(match tag {
+        0 => Type::U8,
+        1 => Type::U16,
+        2 => Type::U32,
+        3 => Type::U64,
+        4 => Type::S8,
+        5 => Type::S16,
+        6 => Type::S32,
+        7 => Type::S64,
+        8 => Type::B8,
+        9 => Type::B16,
+        10 => Type::B32,
+        11 => Type::B64,
+        12 => Type::F32,
+        13 => Type::F64,
+        14 => Type::Pred,
+        _ => return None,
+    })
+}
+
+/// Stable on-disk tag of a [`Space`].
+pub(crate) fn space_tag(s: Space) -> u8 {
+    match s {
+        Space::Param => 0,
+        Space::Global => 1,
+        Space::Shared => 2,
+        Space::Local => 3,
+        Space::Const => 4,
+    }
+}
+
+pub(crate) fn space_from_tag(tag: u8) -> Option<Space> {
+    Some(match tag {
+        0 => Space::Param,
+        1 => Space::Global,
+        2 => Space::Shared,
+        3 => Space::Local,
+        4 => Space::Const,
+        _ => return None,
+    })
+}
 
 /// One recorded load.
 #[derive(Debug, Clone)]
@@ -81,6 +147,81 @@ impl MemTrace {
         self.loads
             .iter()
             .filter(|l| l.valid && !l.guarded && l.space == Space::Global)
+    }
+
+    /// Every term the trace references (serialization roots for the
+    /// [`crate::sym::persist`] codec).
+    pub fn term_roots(&self, out: &mut Vec<TermId>) {
+        for l in &self.loads {
+            out.push(l.addr);
+            out.push(l.value);
+        }
+        for s in &self.stores {
+            out.push(s.addr);
+            out.push(s.value);
+        }
+    }
+
+    /// Serialize the trace shape; `local` maps a pool `TermId` to its
+    /// local index in the term-graph image being written.
+    pub(crate) fn encode(&self, e: &mut Enc, local: &mut dyn FnMut(TermId) -> u32) {
+        e.u64(self.loads.len() as u64);
+        for l in &self.loads {
+            e.u64(l.stmt as u64);
+            e.u32(local(l.addr));
+            e.u32(local(l.value));
+            e.u8(type_tag(l.ty));
+            e.u8(space_tag(l.space));
+            e.bool(l.nc);
+            e.u32(l.segment);
+            e.bool(l.guarded);
+            e.bool(l.valid);
+        }
+        e.u64(self.stores.len() as u64);
+        for s in &self.stores {
+            e.u64(s.stmt as u64);
+            e.u32(local(s.addr));
+            e.u32(local(s.value));
+            e.u8(type_tag(s.ty));
+            e.u8(space_tag(s.space));
+            e.u32(s.segment);
+        }
+    }
+
+    /// Decode a trace; `term` maps a local index back to a relocated
+    /// `TermId` (bounds-checked — `None` fails the whole decode).
+    pub(crate) fn decode(
+        d: &mut Dec,
+        term: &dyn Fn(u32) -> Option<TermId>,
+    ) -> Option<MemTrace> {
+        let nloads = d.len()?;
+        let mut loads = Vec::with_capacity(nloads);
+        for _ in 0..nloads {
+            loads.push(LoadRec {
+                stmt: d.u64()? as usize,
+                addr: term(d.u32()?)?,
+                value: term(d.u32()?)?,
+                ty: type_from_tag(d.u8()?)?,
+                space: space_from_tag(d.u8()?)?,
+                nc: d.bool()?,
+                segment: d.u32()?,
+                guarded: d.bool()?,
+                valid: d.bool()?,
+            });
+        }
+        let nstores = d.len()?;
+        let mut stores = Vec::with_capacity(nstores);
+        for _ in 0..nstores {
+            stores.push(StoreRec {
+                stmt: d.u64()? as usize,
+                addr: term(d.u32()?)?,
+                value: term(d.u32()?)?,
+                ty: type_from_tag(d.u8()?)?,
+                space: space_from_tag(d.u8()?)?,
+                segment: d.u32()?,
+            });
+        }
+        Some(MemTrace { loads, stores })
     }
 }
 

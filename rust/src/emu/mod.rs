@@ -65,6 +65,67 @@ pub enum FlowEnd {
     StepLimit,
 }
 
+impl FlowEnd {
+    /// Stable on-disk tag (the [`crate::sym::persist`] codec).
+    pub fn tag(self) -> u8 {
+        match self {
+            FlowEnd::Ret => 0,
+            FlowEnd::LoopReentry => 1,
+            FlowEnd::Memoized => 2,
+            FlowEnd::StepLimit => 3,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Option<FlowEnd> {
+        Some(match tag {
+            0 => FlowEnd::Ret,
+            1 => FlowEnd::LoopReentry,
+            2 => FlowEnd::Memoized,
+            3 => FlowEnd::StepLimit,
+            _ => return None,
+        })
+    }
+}
+
+impl EmuStats {
+    /// The counters as a fixed word array (stable serialization order —
+    /// shared by the disk store's `Detected` codec and the
+    /// [`crate::sym::persist`] emulation codec).
+    pub fn to_words(&self) -> [u64; 12] {
+        [
+            self.flows_started,
+            self.flows_finished,
+            self.flows_pruned,
+            self.flows_memoized,
+            self.steps,
+            self.loads,
+            self.stores,
+            self.invalidated_loads,
+            self.uninit_reads,
+            self.barriers,
+            self.forks,
+            self.branches_decided,
+        ]
+    }
+
+    pub fn from_words(w: [u64; 12]) -> EmuStats {
+        EmuStats {
+            flows_started: w[0],
+            flows_finished: w[1],
+            flows_pruned: w[2],
+            flows_memoized: w[3],
+            steps: w[4],
+            loads: w[5],
+            stores: w[6],
+            invalidated_loads: w[7],
+            uninit_reads: w[8],
+            barriers: w[9],
+            forks: w[10],
+            branches_decided: w[11],
+        }
+    }
+}
+
 /// One in-progress execution flow.
 #[derive(Debug, Clone)]
 pub struct Flow {

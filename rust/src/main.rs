@@ -40,10 +40,16 @@ USAGE:
                     grid run in parallel; results are bit-identical for
                     any N). Default 1 — the suite already parallelizes
                     across benchmarks with --threads
+  --detect-races    opt-in diagnostic: run every simulation on the serial
+                    engine with a load-side shadow and fail hard when a
+                    block reads global bytes an earlier block wrote
+                    (cross-block read-after-write is scheduling-dependent
+                    on real hardware). Diagnostic runs are never cached
+                    on disk
   cache flags:
   --cache-dir DIR   persist pipeline artifacts under DIR (default:
                     $RUST_PALLAS_CACHE_DIR, else ~/.cache/rust_pallas);
-                    warm re-runs skip emulation and simulation
+                    warm re-runs skip emulation, decoding and simulation
   --no-disk-cache   in-memory caching only (no files written)
 ";
 
@@ -52,7 +58,9 @@ USAGE:
 /// not an error (the disk layer is an accelerator, not a dependency); an
 /// explicit `--cache-dir` that cannot be opened is.
 fn build_pipeline(args: &Args) -> Result<Pipeline, String> {
-    let p = Pipeline::new().with_sim_threads(args.opt_usize("sim-threads", 1)?);
+    let p = Pipeline::new()
+        .with_sim_threads(args.opt_usize("sim-threads", 1)?)
+        .with_detect_races(args.flag("detect-races"));
     if args.flag("no-disk-cache") {
         return Ok(p);
     }

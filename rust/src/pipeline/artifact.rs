@@ -117,8 +117,10 @@ pub struct CacheCounters {
     workload_hits: AtomicU64,
     workload_misses: AtomicU64,
     decode_hits: AtomicU64,
+    decode_disk_hits: AtomicU64,
     decode_misses: AtomicU64,
     emulate_hits: AtomicU64,
+    emulate_disk_hits: AtomicU64,
     emulate_misses: AtomicU64,
     detect_hits: AtomicU64,
     detect_disk_hits: AtomicU64,
@@ -140,12 +142,14 @@ impl CacheCounters {
         use CacheEvent::*;
         let cell = match (kind, event) {
             (Workload, Hit) => &self.workload_hits,
-            // workloads, decodings and emulations are never disk-persisted
+            // workloads are never disk-persisted (cheap regeneration)
             (Workload, DiskHit | Miss) => &self.workload_misses,
             (Decoded, Hit) => &self.decode_hits,
-            (Decoded, DiskHit | Miss) => &self.decode_misses,
+            (Decoded, DiskHit) => &self.decode_disk_hits,
+            (Decoded, Miss) => &self.decode_misses,
             (Emulated, Hit) => &self.emulate_hits,
-            (Emulated, DiskHit | Miss) => &self.emulate_misses,
+            (Emulated, DiskHit) => &self.emulate_disk_hits,
+            (Emulated, Miss) => &self.emulate_misses,
             (Detected, Hit) => &self.detect_hits,
             (Detected, DiskHit) => &self.detect_disk_hits,
             (Detected, Miss) => &self.detect_misses,
@@ -167,8 +171,10 @@ impl CacheCounters {
             workload_hits: self.workload_hits.load(Ordering::Relaxed),
             workload_misses: self.workload_misses.load(Ordering::Relaxed),
             decode_hits: self.decode_hits.load(Ordering::Relaxed),
+            decode_disk_hits: self.decode_disk_hits.load(Ordering::Relaxed),
             decode_misses: self.decode_misses.load(Ordering::Relaxed),
             emulate_hits: self.emulate_hits.load(Ordering::Relaxed),
+            emulate_disk_hits: self.emulate_disk_hits.load(Ordering::Relaxed),
             emulate_misses: self.emulate_misses.load(Ordering::Relaxed),
             detect_hits: self.detect_hits.load(Ordering::Relaxed),
             detect_disk_hits: self.detect_disk_hits.load(Ordering::Relaxed),
@@ -192,8 +198,10 @@ pub struct CacheSnapshot {
     pub workload_hits: u64,
     pub workload_misses: u64,
     pub decode_hits: u64,
+    pub decode_disk_hits: u64,
     pub decode_misses: u64,
     pub emulate_hits: u64,
+    pub emulate_disk_hits: u64,
     pub emulate_misses: u64,
     pub detect_hits: u64,
     pub detect_disk_hits: u64,
@@ -223,7 +231,9 @@ impl CacheSnapshot {
 
     /// Artifacts recovered from the on-disk store (no recompute).
     pub fn disk_hits(&self) -> u64 {
-        self.detect_disk_hits
+        self.decode_disk_hits
+            + self.emulate_disk_hits
+            + self.detect_disk_hits
             + self.synth_disk_hits
             + self.validate_disk_hits
             + self.score_disk_hits

@@ -17,9 +17,12 @@
 //! variant share one generated workload.
 //!
 //! Artifacts live in a thread-safe in-memory [`ArtifactCache`], optionally
-//! backed by an on-disk [`DiskStore`] ([`Pipeline::with_disk`]): detected,
-//! synthesized, validated and scored artifacts persist across processes,
-//! so a warm re-run skips emulation *and* simulation entirely. A
+//! backed by an on-disk [`DiskStore`] ([`Pipeline::with_disk`]): emulated,
+//! decoded, detected, synthesized, validated and scored artifacts persist
+//! across processes — emulations through the relocatable term-graph codec
+//! ([`crate::sym::persist`]) — so a warm re-run skips symbolic emulation,
+//! micro-op decoding *and* simulation entirely, even for workloads or
+//! detection options the cache has never seen. A
 //! [`Pipeline`] owns one [`SessionInterner`] shared by every emulation it
 //! runs, so symbol and UF names (`%tid.x`, params, `load.global.*`) are
 //! interned once per session instead of once per kernel. Per-stage wall
@@ -161,9 +164,16 @@ pub struct Pipeline {
     /// reads are scheduling-dependent on real hardware and undefined for
     /// every engine; see `sim::exec`), so it is *not* part of any cache
     /// key. Cross-block write-after-write *is* detected
-    /// (`SimStats::cross_block_write_conflicts`); read-after-write is
-    /// currently not (see ROADMAP).
+    /// (`SimStats::cross_block_write_conflicts`); read-after-write is an
+    /// opt-in hard-error diagnostic ([`Pipeline::with_detect_races`]).
     sim_threads: usize,
+    /// Opt-in cross-block read-after-write diagnostic (`--detect-races`):
+    /// simulations run serial with a load-side shadow and an offending
+    /// kernel is a hard `SimError`. Diagnostic runs bypass the *disk*
+    /// store for `Validated` artifacts entirely — a verdict computed
+    /// without the shadow must never satisfy a diagnostic query, and a
+    /// diagnostic result must never leak into normal runs.
+    detect_races: bool,
 }
 
 impl Pipeline {
@@ -190,6 +200,22 @@ impl Pipeline {
     /// Worker threads each simulation runs with.
     pub fn sim_threads(&self) -> usize {
         self.sim_threads.max(1)
+    }
+
+    /// Enable the cross-block read-after-write diagnostic (the CLI
+    /// `--detect-races` flag): every simulation runs on the serial engine
+    /// with a load-side shadow, and a kernel whose block reads bytes an
+    /// earlier block wrote fails hard with
+    /// [`SimError::CrossBlockRace`](crate::sim::SimError). Never cached
+    /// on disk (see the field docs).
+    pub fn with_detect_races(mut self, on: bool) -> Pipeline {
+        self.detect_races = on;
+        self
+    }
+
+    /// Whether the cross-block read-after-write diagnostic is on.
+    pub fn detect_races(&self) -> bool {
+        self.detect_races
     }
 
     /// Attach an on-disk artifact store; detected/synthesized/validated/
@@ -292,11 +318,16 @@ impl Pipeline {
         out
     }
 
+    fn decode_disk_key(hash: ContentHash) -> ContentHash {
+        KeyBuilder::new("decoded").hash(hash).finish()
+    }
+
     /// Decoded micro-op artifact for a kernel version: the one-time
     /// lowering the concrete simulator executes, keyed by the kernel
-    /// fingerprint alone (workload-independent — in-memory only, like
-    /// workloads: cheap to rebuild, expensive artifacts derive from it).
-    /// The hash must be `kernel_fingerprint(kernel)`.
+    /// fingerprint alone (workload-independent) and persisted in the
+    /// disk store's `decoded/` kind, so a fresh process on a warm cache
+    /// dir performs zero decodes for previously seen kernels. The hash
+    /// must be `kernel_fingerprint(kernel)`.
     pub fn decoded(
         &self,
         kernel: &Arc<Kernel>,
@@ -306,10 +337,18 @@ impl Pipeline {
         let mut event = CacheEvent::Hit;
         let out = slot
             .get_or_init(|| {
+                let dkey = Pipeline::decode_disk_key(hash);
+                if let Some(dk) = self.disk_load(StoreKind::Decoded, dkey, store::decode_decoded)
+                {
+                    event = CacheEvent::DiskHit;
+                    return Ok(Arc::new(dk));
+                }
                 event = CacheEvent::Miss;
-                self.time(Stage::Decode, || {
+                let dk = self.time(Stage::Decode, || {
                     crate::sim::decode(kernel).map(Arc::new)
-                })
+                })?;
+                self.disk_store(StoreKind::Decoded, dkey, store::encode_decoded(&dk));
+                Ok(dk)
             })
             .clone();
         self.cache.counters.record(ArtifactKind::Decoded, event);
@@ -321,8 +360,25 @@ impl Pipeline {
         self.emulated_hashed(kernel, kernel_fingerprint(kernel))
     }
 
+    /// Disk key of an emulation: the kernel fingerprint *plus the
+    /// emulation limits* — two processes sharing one cache dir with
+    /// different limits must not exchange results (a tighter limit can
+    /// change which flows finish).
+    fn emulate_disk_key(hash: ContentHash, limits: Limits) -> ContentHash {
+        KeyBuilder::new("emulated")
+            .hash(hash)
+            .u64(limits.max_flows as u64)
+            .u64(limits.max_steps_per_flow)
+            .u64(limits.max_total_steps)
+            .finish()
+    }
+
     /// Emulation artifact when the caller already knows the content hash.
-    /// The hash must be `kernel_fingerprint(kernel)`.
+    /// The hash must be `kernel_fingerprint(kernel)`. Served in order
+    /// from the in-memory slot, the disk store's `emulated/` kind (the
+    /// relocatable term-graph image decodes into this pipeline's
+    /// session — zero symbolic emulations on a warm cache dir), and only
+    /// then computed fresh.
     pub fn emulated_hashed(
         &self,
         kernel: &Arc<Kernel>,
@@ -332,17 +388,26 @@ impl Pipeline {
         let mut event = CacheEvent::Hit;
         let out = slot
             .get_or_init(|| {
+                let dkey = Pipeline::emulate_disk_key(hash, self.limits);
+                if let Some(art) = self.disk_load(StoreKind::Emulated, dkey, |b| {
+                    store::decode_emulated(b, kernel, hash, &self.session)
+                }) {
+                    event = CacheEvent::DiskHit;
+                    return Ok(Arc::new(art));
+                }
                 event = CacheEvent::Miss;
                 let t0 = Instant::now();
                 let result = emulate_in_session(kernel, self.limits, self.session.clone())?;
                 let elapsed = t0.elapsed();
                 self.timings.record(Stage::Emulate, elapsed);
-                Ok(Arc::new(Emulated {
+                let art = Emulated {
                     kernel: kernel.clone(),
                     hash,
                     result,
                     elapsed,
-                }))
+                };
+                self.disk_store(StoreKind::Emulated, dkey, store::encode_emulated(&art));
+                Ok(Arc::new(art))
             })
             .clone();
         self.cache.counters.record(ArtifactKind::Emulated, event);
@@ -489,17 +554,25 @@ impl Pipeline {
         let mut event = CacheEvent::Hit;
         let out = slot
             .get_or_init(|| {
-                let dkey = Pipeline::validate_disk_key(hash, w.fingerprint, baseline.map(|(h, _)| h));
-                if let Some(art) =
-                    self.disk_load(StoreKind::Validated, dkey, store::decode_validated)
-                {
-                    event = CacheEvent::DiskHit;
-                    return Ok(Arc::new(art));
+                // diagnostic runs never touch the disk store: a verdict
+                // simulated without the race shadow must not satisfy a
+                // `--detect-races` query, and vice versa
+                let dkey =
+                    Pipeline::validate_disk_key(hash, w.fingerprint, baseline.map(|(h, _)| h));
+                if !self.detect_races {
+                    if let Some(art) =
+                        self.disk_load(StoreKind::Validated, dkey, store::decode_validated)
+                    {
+                        event = CacheEvent::DiskHit;
+                        return Ok(Arc::new(art));
+                    }
                 }
                 event = CacheEvent::Miss;
                 let v =
                     stages::validate(self, kernel, hash, &w.workload, baseline.map(|(_, o)| o))?;
-                self.disk_store(StoreKind::Validated, dkey, store::encode_validated(&v));
+                if !self.detect_races {
+                    self.disk_store(StoreKind::Validated, dkey, store::encode_validated(&v));
+                }
                 Ok(Arc::new(v))
             })
             .clone();

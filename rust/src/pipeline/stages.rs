@@ -55,6 +55,9 @@ pub fn validate(
         let mut cfg = w.cfg.clone();
         cfg.record_trace = true;
         cfg.sim_threads = p.sim_threads();
+        // diagnostic mode: serial engine + load-side race shadow (the
+        // executor forces one worker itself; see `sim::exec`)
+        cfg.detect_races = p.detect_races();
         let r = run_decoded(&decoded, &cfg, w.mem.clone())?;
         let out = r.mem.read_f32s(w.out_ptr, w.out_len)?;
         let valid = baseline_out.map(|base| {

@@ -14,10 +14,14 @@
 //! <cache-dir>/v1/<kind>/<32-hex-key>.lru   empty touch marker (last use)
 //! ```
 //!
-//! `<kind>` is one of `detected`, `synthesized`, `validated`, `scored`.
-//! Emulations and workloads are *not* persisted: an emulation's term graph
-//! is interner-relative, and a workload is cheap to regenerate from its
-//! fingerprint inputs — the expensive stages downstream of both are.
+//! `<kind>` is one of `emulated`, `decoded`, `detected`, `synthesized`,
+//! `validated`, `scored`. Emulations persist through the relocatable
+//! term-graph codec ([`crate::sym::persist`]) — the image spells symbol/UF
+//! names out and the loader re-interns them through its own session, so
+//! the interner-relative ids never touch disk. Decoded micro-op kernels
+//! persist as plain field images ([`crate::sim::DecodedKernel::to_bytes`]).
+//! Workloads are *not* persisted: they are cheap to regenerate from their
+//! fingerprint inputs.
 //!
 //! Every file is `MAGIC ∥ version ∥ kind ∥ payload ∥ fnv64(payload)`.
 //! Loads are corruption-tolerant: any header/checksum/decode mismatch
@@ -27,14 +31,17 @@
 //! least-recently-used artifacts (by touch-marker mtime) until the
 //! resident set fits `max_bytes`.
 
+use crate::emu::EmuStats;
 use crate::perf::PerfReport;
-use crate::pipeline::artifact::{Detected, Synthesized};
+use crate::pipeline::artifact::{Detected, Emulated, Synthesized};
 use crate::pipeline::stages::{Scored, Validated};
+use crate::ptx::ast::Kernel;
 use crate::ptx::parser::parse_kernel;
 use crate::ptx::printer::{print_kernel, ContentHash};
 use crate::shuffle::{Candidate, DetectOpts, Detection, Variant};
-use crate::sim::{SimStats, WarpEvent};
-use crate::util::fnv64;
+use crate::sim::{DecodedKernel, SimStats, WarpEvent};
+use crate::sym::SessionInterner;
+use crate::util::{fnv64, Dec, Enc};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -43,7 +50,9 @@ use std::time::{Duration, SystemTime};
 /// Bump when the artifact encoding changes; old `v<N>` trees are simply
 /// ignored (and eventually reclaimed by the user, not by us).
 /// v2: `SimStats` grew `cross_block_write_conflicts`.
-pub const STORE_VERSION: u32 = 2;
+/// v3: new `emulated/` (relocatable term-graph images) and `decoded/`
+/// (micro-op kernel) artifact kinds.
+pub const STORE_VERSION: u32 = 3;
 const MAGIC: [u8; 4] = *b"RPST";
 /// Default resident-set bound: 256 MiB.
 pub const DEFAULT_MAX_BYTES: u64 = 256 * 1024 * 1024;
@@ -51,13 +60,17 @@ pub const DEFAULT_MAX_BYTES: u64 = 256 * 1024 * 1024;
 /// Artifact families the store persists.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StoreKind {
+    Emulated,
+    Decoded,
     Detected,
     Synthesized,
     Validated,
     Scored,
 }
 
-pub const STORE_KINDS: [StoreKind; 4] = [
+pub const STORE_KINDS: [StoreKind; 6] = [
+    StoreKind::Emulated,
+    StoreKind::Decoded,
     StoreKind::Detected,
     StoreKind::Synthesized,
     StoreKind::Validated,
@@ -67,6 +80,8 @@ pub const STORE_KINDS: [StoreKind; 4] = [
 impl StoreKind {
     pub fn dir(self) -> &'static str {
         match self {
+            StoreKind::Emulated => "emulated",
+            StoreKind::Decoded => "decoded",
             StoreKind::Detected => "detected",
             StoreKind::Synthesized => "synthesized",
             StoreKind::Validated => "validated",
@@ -80,6 +95,8 @@ impl StoreKind {
             StoreKind::Synthesized => 2,
             StoreKind::Validated => 3,
             StoreKind::Scored => 4,
+            StoreKind::Emulated => 5,
+            StoreKind::Decoded => 6,
         }
     }
 }
@@ -369,80 +386,8 @@ fn decode_container(bytes: &[u8], kind: StoreKind) -> Option<&[u8]> {
 }
 
 // ---------------------------------------------------------------------------
-// Binary codec (little-endian, length-prefixed; no external deps)
+// Typed artifact codecs (on the shared `util::codec` primitives)
 // ---------------------------------------------------------------------------
-
-#[derive(Default)]
-pub(crate) struct Enc {
-    pub buf: Vec<u8>,
-}
-
-impl Enc {
-    fn u8(&mut self, v: u8) {
-        self.buf.push(v);
-    }
-    fn u32(&mut self, v: u32) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
-    }
-    fn u64(&mut self, v: u64) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
-    }
-    fn i64(&mut self, v: i64) {
-        self.u64(v as u64);
-    }
-    fn f64(&mut self, v: f64) {
-        self.u64(v.to_bits());
-    }
-    fn str(&mut self, s: &str) {
-        self.u64(s.len() as u64);
-        self.buf.extend_from_slice(s.as_bytes());
-    }
-}
-
-pub(crate) struct Dec<'a> {
-    b: &'a [u8],
-    i: usize,
-}
-
-impl<'a> Dec<'a> {
-    fn new(b: &'a [u8]) -> Dec<'a> {
-        Dec { b, i: 0 }
-    }
-    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
-        let end = self.i.checked_add(n)?;
-        let s = self.b.get(self.i..end)?;
-        self.i = end;
-        Some(s)
-    }
-    fn u8(&mut self) -> Option<u8> {
-        Some(self.take(1)?[0])
-    }
-    fn u32(&mut self) -> Option<u32> {
-        Some(u32::from_le_bytes(self.take(4)?.try_into().ok()?))
-    }
-    fn u64(&mut self) -> Option<u64> {
-        Some(u64::from_le_bytes(self.take(8)?.try_into().ok()?))
-    }
-    fn i64(&mut self) -> Option<i64> {
-        Some(self.u64()? as i64)
-    }
-    fn f64(&mut self) -> Option<f64> {
-        Some(f64::from_bits(self.u64()?))
-    }
-    fn len(&mut self) -> Option<usize> {
-        let n = self.u64()?;
-        // refuse lengths the remaining buffer cannot possibly hold — a
-        // corrupt length must not drive an OOM allocation
-        (n <= (self.b.len() - self.i) as u64).then_some(n as usize)
-    }
-    fn str(&mut self) -> Option<&'a str> {
-        let n = self.len()?;
-        std::str::from_utf8(self.take(n)?).ok()
-    }
-    fn done(&self) -> bool {
-        self.i == self.b.len()
-    }
-}
 
 fn variant_tag(v: Variant) -> u8 {
     match v {
@@ -468,40 +413,56 @@ pub fn variant_key_byte(v: Variant) -> u64 {
     variant_tag(v) as u64
 }
 
-fn enc_emu_stats(e: &mut Enc, s: &crate::emu::EmuStats) {
-    for v in [
-        s.flows_started,
-        s.flows_finished,
-        s.flows_pruned,
-        s.flows_memoized,
-        s.steps,
-        s.loads,
-        s.stores,
-        s.invalidated_loads,
-        s.uninit_reads,
-        s.barriers,
-        s.forks,
-        s.branches_decided,
-    ] {
+fn enc_emu_stats(e: &mut Enc, s: &EmuStats) {
+    for v in s.to_words() {
         e.u64(v);
     }
 }
 
-fn dec_emu_stats(d: &mut Dec) -> Option<crate::emu::EmuStats> {
-    Some(crate::emu::EmuStats {
-        flows_started: d.u64()?,
-        flows_finished: d.u64()?,
-        flows_pruned: d.u64()?,
-        flows_memoized: d.u64()?,
-        steps: d.u64()?,
-        loads: d.u64()?,
-        stores: d.u64()?,
-        invalidated_loads: d.u64()?,
-        uninit_reads: d.u64()?,
-        barriers: d.u64()?,
-        forks: d.u64()?,
-        branches_decided: d.u64()?,
+fn dec_emu_stats(d: &mut Dec) -> Option<EmuStats> {
+    let mut w = [0u64; 12];
+    for v in w.iter_mut() {
+        *v = d.u64()?;
+    }
+    Some(EmuStats::from_words(w))
+}
+
+/// `emulated/` payload: elapsed wall time of the original emulation,
+/// followed by the relocatable term-graph image.
+pub(crate) fn encode_emulated(a: &Emulated) -> Vec<u8> {
+    let mut e = Enc::default();
+    e.u64(a.elapsed.as_nanos() as u64);
+    e.buf.extend_from_slice(&crate::sym::encode_emulation(&a.result));
+    e.buf
+}
+
+/// Decode an `emulated/` payload, relocating the term graph into
+/// `session`. The caller supplies the kernel and hash the key was built
+/// from (the image itself carries no kernel).
+pub(crate) fn decode_emulated(
+    bytes: &[u8],
+    kernel: &Arc<Kernel>,
+    hash: ContentHash,
+    session: &Arc<SessionInterner>,
+) -> Option<Emulated> {
+    let mut d = Dec::new(bytes);
+    let elapsed = Duration::from_nanos(d.u64()?);
+    let result = crate::sym::decode_emulation(&bytes[d.pos()..], session)?;
+    Some(Emulated {
+        kernel: kernel.clone(),
+        hash,
+        result,
+        elapsed,
     })
+}
+
+/// `decoded/` payload: the micro-op kernel's own field image.
+pub(crate) fn encode_decoded(dk: &DecodedKernel) -> Vec<u8> {
+    dk.to_bytes()
+}
+
+pub(crate) fn decode_decoded(bytes: &[u8]) -> Option<DecodedKernel> {
+    DecodedKernel::from_bytes(bytes)
 }
 
 pub(crate) fn encode_detected(a: &Detected) -> Vec<u8> {

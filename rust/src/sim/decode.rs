@@ -31,8 +31,11 @@
 use super::machine::{int_bvop, shared_layout, width_mask};
 use super::SimError;
 use crate::emu::env::RegInterner;
+use crate::emu::memtrace::{space_from_tag, space_tag, type_from_tag, type_tag};
 use crate::ptx::ast::*;
+use crate::sym::persist::{bvop_from_tag, bvop_tag, cmp_from_tag, cmp_tag};
 use crate::sym::term::{BvOp, CmpKind};
+use crate::util::{Dec, Enc};
 
 /// A decoded operand: everything a read needs, with names resolved away.
 #[derive(Debug, Clone, Copy)]
@@ -217,6 +220,618 @@ impl DecodedKernel {
     pub fn is_empty(&self) -> bool {
         self.uops.is_empty()
     }
+
+    /// Serialize for the on-disk artifact store (`decoded/` kind). The
+    /// decoded form is a pure function of the kernel, so this is a plain
+    /// field-by-field codec on the shared [`crate::util::codec`]
+    /// primitives — no relocation needed (slots and targets are already
+    /// kernel-local indices).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut e = Enc::default();
+        e.u32(self.nregs);
+        e.u64(self.shared_size);
+        e.u64(self.param_names.len() as u64);
+        for p in &self.param_names {
+            e.str(p);
+        }
+        e.u64(self.uops.len() as u64);
+        for u in &self.uops {
+            e.u32(u.stmt);
+            match u.guard {
+                None => e.u8(0),
+                Some((slot, neg)) => {
+                    e.u8(1);
+                    e.u32(slot);
+                    e.bool(neg);
+                }
+            }
+            enc_uop(&mut e, &u.op);
+        }
+        e.buf
+    }
+
+    /// Decode a [`DecodedKernel::to_bytes`] image. Fully validated: every
+    /// register slot must be `< nregs`, every branch target `≤ #uops`,
+    /// every `ld.param` index in range, and the statement side table
+    /// strictly increasing (the executor's statement-step accounting and
+    /// flat register file index through these without further checks).
+    pub fn from_bytes(bytes: &[u8]) -> Option<DecodedKernel> {
+        let mut d = Dec::new(bytes);
+        let nregs = d.u32()?;
+        let shared_size = d.u64()?;
+        let nparams = d.len()?;
+        let mut param_names = Vec::with_capacity(nparams);
+        for _ in 0..nparams {
+            param_names.push(d.str()?.to_string());
+        }
+        let nuops = d.len()?;
+        let mut uops = Vec::with_capacity(nuops);
+        for i in 0..nuops {
+            let stmt = d.u32()?;
+            let guard = match d.u8()? {
+                0 => None,
+                1 => {
+                    let slot = d.u32()?;
+                    (slot < nregs).then_some(())?;
+                    Some((slot, d.bool()?))
+                }
+                _ => return None,
+            };
+            let op = dec_uop(&mut d)?;
+            if i > 0 {
+                let prev: &UopEntry = &uops[i - 1];
+                (stmt > prev.stmt).then_some(())?;
+            }
+            uops.push(UopEntry { stmt, guard, op });
+        }
+        let dk = DecodedKernel {
+            nregs,
+            shared_size,
+            param_names,
+            uops,
+        };
+        (d.done() && dk.validate()).then_some(dk)
+    }
+
+    /// Structural invariants the executor relies on (indexes without
+    /// bounds checks).
+    fn validate(&self) -> bool {
+        let nuops = self.uops.len() as u32;
+        let slot_ok = |s: u32| s < self.nregs;
+        let dop_ok = |o: &Dop| match o {
+            Dop::Slot(s) => slot_ok(*s),
+            Dop::Imm(_) | Dop::Special(_) => true,
+        };
+        let addr_ok = |a: &Daddr| dop_ok(&a.base);
+        let bytes_ok = |b: u32| (1..=8).contains(&b);
+        self.uops.iter().all(|u| {
+            u.guard.map(|(s, _)| slot_ok(s)).unwrap_or(true)
+                && match &u.op {
+                    Uop::Bra { target } => *target <= nuops,
+                    Uop::Ret | Uop::BarSync => true,
+                    Uop::Shfl { dst, pred_out, src, b, c, mask, .. } => {
+                        slot_ok(*dst)
+                            && pred_out.map(slot_ok).unwrap_or(true)
+                            && [src, b, c, mask].into_iter().all(dop_ok)
+                    }
+                    Uop::Activemask { dst } => slot_ok(*dst),
+                    Uop::LdParam { dst, index, .. } => {
+                        slot_ok(*dst) && (*index as usize) < self.param_names.len()
+                    }
+                    Uop::Ld { bytes, dst, addr, space, .. } => {
+                        slot_ok(*dst)
+                            && addr_ok(addr)
+                            && bytes_ok(*bytes)
+                            && *space != Space::Param
+                    }
+                    Uop::St { bytes, src, addr, space, .. } => {
+                        dop_ok(src)
+                            && addr_ok(addr)
+                            && bytes_ok(*bytes)
+                            && *space != Space::Param
+                    }
+                    Uop::Mov { dst, src, .. } => slot_ok(*dst) && dop_ok(src),
+                    Uop::Cvta { dst, src } => slot_ok(*dst) && dop_ok(src),
+                    Uop::IntBin { dst, a, b, .. }
+                    | Uop::MulWide { dst, a, b, .. }
+                    | Uop::MulHi { dst, a, b, .. }
+                    | Uop::FltBin { dst, a, b, .. }
+                    | Uop::SetpF { dst, a, b, .. }
+                    | Uop::SetpI { dst, a, b, .. } => {
+                        slot_ok(*dst) && dop_ok(a) && dop_ok(b)
+                    }
+                    Uop::Mad { dst, a, b, c, .. } | Uop::Fma { dst, a, b, c, .. } => {
+                        slot_ok(*dst) && dop_ok(a) && dop_ok(b) && dop_ok(c)
+                    }
+                    Uop::Not { dst, a, .. }
+                    | Uop::Neg { dst, a, .. }
+                    | Uop::FltUn { dst, a, .. } => slot_ok(*dst) && dop_ok(a),
+                    Uop::Selp { dst, a, b, p, .. } => {
+                        slot_ok(*dst) && dop_ok(a) && dop_ok(b) && dop_ok(p)
+                    }
+                    Uop::Cvt { dst, src, .. } => slot_ok(*dst) && dop_ok(src),
+                }
+        })
+    }
+}
+
+fn special_tag(s: Special) -> u8 {
+    match s {
+        Special::TidX => 0,
+        Special::TidY => 1,
+        Special::TidZ => 2,
+        Special::NtidX => 3,
+        Special::NtidY => 4,
+        Special::NtidZ => 5,
+        Special::CtaidX => 6,
+        Special::CtaidY => 7,
+        Special::CtaidZ => 8,
+        Special::NctaidX => 9,
+        Special::NctaidY => 10,
+        Special::NctaidZ => 11,
+        Special::LaneId => 12,
+        Special::WarpSize => 13,
+    }
+}
+
+fn special_from_tag(tag: u8) -> Option<Special> {
+    Some(match tag {
+        0 => Special::TidX,
+        1 => Special::TidY,
+        2 => Special::TidZ,
+        3 => Special::NtidX,
+        4 => Special::NtidY,
+        5 => Special::NtidZ,
+        6 => Special::CtaidX,
+        7 => Special::CtaidY,
+        8 => Special::CtaidZ,
+        9 => Special::NctaidX,
+        10 => Special::NctaidY,
+        11 => Special::NctaidZ,
+        12 => Special::LaneId,
+        13 => Special::WarpSize,
+        _ => return None,
+    })
+}
+
+fn shfl_tag(m: ShflMode) -> u8 {
+    match m {
+        ShflMode::Up => 0,
+        ShflMode::Down => 1,
+        ShflMode::Bfly => 2,
+        ShflMode::Idx => 3,
+    }
+}
+
+fn shfl_from_tag(tag: u8) -> Option<ShflMode> {
+    Some(match tag {
+        0 => ShflMode::Up,
+        1 => ShflMode::Down,
+        2 => ShflMode::Bfly,
+        3 => ShflMode::Idx,
+        _ => return None,
+    })
+}
+
+fn fltbin_tag(o: FltBinOp) -> u8 {
+    match o {
+        FltBinOp::Add => 0,
+        FltBinOp::Sub => 1,
+        FltBinOp::Mul => 2,
+        FltBinOp::Div => 3,
+        FltBinOp::Min => 4,
+        FltBinOp::Max => 5,
+    }
+}
+
+fn fltbin_from_tag(tag: u8) -> Option<FltBinOp> {
+    Some(match tag {
+        0 => FltBinOp::Add,
+        1 => FltBinOp::Sub,
+        2 => FltBinOp::Mul,
+        3 => FltBinOp::Div,
+        4 => FltBinOp::Min,
+        5 => FltBinOp::Max,
+        _ => return None,
+    })
+}
+
+fn fltun_tag(o: FltUnOp) -> u8 {
+    match o {
+        FltUnOp::Neg => 0,
+        FltUnOp::Abs => 1,
+        FltUnOp::Sqrt => 2,
+        FltUnOp::Rsqrt => 3,
+        FltUnOp::Rcp => 4,
+        FltUnOp::Sin => 5,
+        FltUnOp::Cos => 6,
+        FltUnOp::Ex2 => 7,
+        FltUnOp::Lg2 => 8,
+    }
+}
+
+fn fltun_from_tag(tag: u8) -> Option<FltUnOp> {
+    Some(match tag {
+        0 => FltUnOp::Neg,
+        1 => FltUnOp::Abs,
+        2 => FltUnOp::Sqrt,
+        3 => FltUnOp::Rsqrt,
+        4 => FltUnOp::Rcp,
+        5 => FltUnOp::Sin,
+        6 => FltUnOp::Cos,
+        7 => FltUnOp::Ex2,
+        8 => FltUnOp::Lg2,
+        _ => return None,
+    })
+}
+
+fn cmpop_tag(o: CmpOp) -> u8 {
+    match o {
+        CmpOp::Eq => 0,
+        CmpOp::Ne => 1,
+        CmpOp::Lt => 2,
+        CmpOp::Le => 3,
+        CmpOp::Gt => 4,
+        CmpOp::Ge => 5,
+    }
+}
+
+fn cmpop_from_tag(tag: u8) -> Option<CmpOp> {
+    Some(match tag {
+        0 => CmpOp::Eq,
+        1 => CmpOp::Ne,
+        2 => CmpOp::Lt,
+        3 => CmpOp::Le,
+        4 => CmpOp::Gt,
+        5 => CmpOp::Ge,
+        _ => return None,
+    })
+}
+
+fn enc_dop(e: &mut Enc, d: &Dop) {
+    match d {
+        Dop::Slot(s) => {
+            e.u8(0);
+            e.u32(*s);
+        }
+        Dop::Imm(v) => {
+            e.u8(1);
+            e.u64(*v);
+        }
+        Dop::Special(sp) => {
+            e.u8(2);
+            e.u8(special_tag(*sp));
+        }
+    }
+}
+
+fn dec_dop(d: &mut Dec) -> Option<Dop> {
+    Some(match d.u8()? {
+        0 => Dop::Slot(d.u32()?),
+        1 => Dop::Imm(d.u64()?),
+        2 => Dop::Special(special_from_tag(d.u8()?)?),
+        _ => return None,
+    })
+}
+
+fn enc_addr(e: &mut Enc, a: &Daddr) {
+    enc_dop(e, &a.base);
+    e.u64(a.offset);
+}
+
+fn dec_addr(d: &mut Dec) -> Option<Daddr> {
+    Some(Daddr {
+        base: dec_dop(d)?,
+        offset: d.u64()?,
+    })
+}
+
+fn enc_uop(e: &mut Enc, op: &Uop) {
+    match op {
+        Uop::Bra { target } => {
+            e.u8(0);
+            e.u32(*target);
+        }
+        Uop::Ret => e.u8(1),
+        Uop::BarSync => e.u8(2),
+        Uop::Shfl { mode, dst, pred_out, src, b, c, mask } => {
+            e.u8(3);
+            e.u8(shfl_tag(*mode));
+            e.u32(*dst);
+            match pred_out {
+                None => e.u8(0),
+                Some(p) => {
+                    e.u8(1);
+                    e.u32(*p);
+                }
+            }
+            for o in [src, b, c, mask] {
+                enc_dop(e, o);
+            }
+        }
+        Uop::Activemask { dst } => {
+            e.u8(4);
+            e.u32(*dst);
+        }
+        Uop::LdParam { dst, index, mask } => {
+            e.u8(5);
+            e.u32(*dst);
+            e.u32(*index);
+            e.u64(*mask);
+        }
+        Uop::Ld { space, nc, bytes, dst, addr } => {
+            e.u8(6);
+            e.u8(space_tag(*space));
+            e.bool(*nc);
+            e.u32(*bytes);
+            e.u32(*dst);
+            enc_addr(e, addr);
+        }
+        Uop::St { space, bytes, smask, src, addr } => {
+            e.u8(7);
+            e.u8(space_tag(*space));
+            e.u32(*bytes);
+            e.u64(*smask);
+            enc_dop(e, src);
+            enc_addr(e, addr);
+        }
+        Uop::Mov { dst, src, mask } => {
+            e.u8(8);
+            e.u32(*dst);
+            enc_dop(e, src);
+            e.u64(*mask);
+        }
+        Uop::Cvta { dst, src } => {
+            e.u8(9);
+            e.u32(*dst);
+            enc_dop(e, src);
+        }
+        Uop::IntBin { op, w, mask, dst, a, b } => {
+            e.u8(10);
+            e.u8(bvop_tag(*op));
+            e.u32(*w);
+            e.u64(*mask);
+            e.u32(*dst);
+            enc_dop(e, a);
+            enc_dop(e, b);
+        }
+        Uop::MulWide { signed, w, dst, a, b } => {
+            e.u8(11);
+            e.bool(*signed);
+            e.u32(*w);
+            e.u32(*dst);
+            enc_dop(e, a);
+            enc_dop(e, b);
+        }
+        Uop::MulHi { signed, w, dst, a, b } => {
+            e.u8(12);
+            e.bool(*signed);
+            e.u32(*w);
+            e.u32(*dst);
+            enc_dop(e, a);
+            enc_dop(e, b);
+        }
+        Uop::Mad { wide, signed, w, dst, a, b, c } => {
+            e.u8(13);
+            e.bool(*wide);
+            e.bool(*signed);
+            e.u32(*w);
+            e.u32(*dst);
+            enc_dop(e, a);
+            enc_dop(e, b);
+            enc_dop(e, c);
+        }
+        Uop::Not { w, dst, a } => {
+            e.u8(14);
+            e.u32(*w);
+            e.u32(*dst);
+            enc_dop(e, a);
+        }
+        Uop::Neg { w, dst, a } => {
+            e.u8(15);
+            e.u32(*w);
+            e.u32(*dst);
+            enc_dop(e, a);
+        }
+        Uop::FltBin { op, wide, dst, a, b } => {
+            e.u8(16);
+            e.u8(fltbin_tag(*op));
+            e.bool(*wide);
+            e.u32(*dst);
+            enc_dop(e, a);
+            enc_dop(e, b);
+        }
+        Uop::Fma { wide, dst, a, b, c } => {
+            e.u8(17);
+            e.bool(*wide);
+            e.u32(*dst);
+            enc_dop(e, a);
+            enc_dop(e, b);
+            enc_dop(e, c);
+        }
+        Uop::FltUn { op, wide, dst, a } => {
+            e.u8(18);
+            e.u8(fltun_tag(*op));
+            e.bool(*wide);
+            e.u32(*dst);
+            enc_dop(e, a);
+        }
+        Uop::SetpF { cmp, wide, dst, a, b } => {
+            e.u8(19);
+            e.u8(cmpop_tag(*cmp));
+            e.bool(*wide);
+            e.u32(*dst);
+            enc_dop(e, a);
+            enc_dop(e, b);
+        }
+        Uop::SetpI { kind, w, dst, a, b } => {
+            e.u8(20);
+            e.u8(cmp_tag(*kind));
+            e.u32(*w);
+            e.u32(*dst);
+            enc_dop(e, a);
+            enc_dop(e, b);
+        }
+        Uop::Selp { w, dst, a, b, p } => {
+            e.u8(21);
+            e.u32(*w);
+            e.u32(*dst);
+            enc_dop(e, a);
+            enc_dop(e, b);
+            enc_dop(e, p);
+        }
+        Uop::Cvt { dty, sty, dst, src } => {
+            e.u8(22);
+            e.u8(type_tag(*dty));
+            e.u8(type_tag(*sty));
+            e.u32(*dst);
+            enc_dop(e, src);
+        }
+    }
+}
+
+fn dec_uop(d: &mut Dec) -> Option<Uop> {
+    Some(match d.u8()? {
+        0 => Uop::Bra { target: d.u32()? },
+        1 => Uop::Ret,
+        2 => Uop::BarSync,
+        3 => {
+            let mode = shfl_from_tag(d.u8()?)?;
+            let dst = d.u32()?;
+            let pred_out = match d.u8()? {
+                0 => None,
+                1 => Some(d.u32()?),
+                _ => return None,
+            };
+            Uop::Shfl {
+                mode,
+                dst,
+                pred_out,
+                src: dec_dop(d)?,
+                b: dec_dop(d)?,
+                c: dec_dop(d)?,
+                mask: dec_dop(d)?,
+            }
+        }
+        4 => Uop::Activemask { dst: d.u32()? },
+        5 => Uop::LdParam {
+            dst: d.u32()?,
+            index: d.u32()?,
+            mask: d.u64()?,
+        },
+        6 => Uop::Ld {
+            space: space_from_tag(d.u8()?)?,
+            nc: d.bool()?,
+            bytes: d.u32()?,
+            dst: d.u32()?,
+            addr: dec_addr(d)?,
+        },
+        7 => Uop::St {
+            space: space_from_tag(d.u8()?)?,
+            bytes: d.u32()?,
+            smask: d.u64()?,
+            src: dec_dop(d)?,
+            addr: dec_addr(d)?,
+        },
+        8 => Uop::Mov {
+            dst: d.u32()?,
+            src: dec_dop(d)?,
+            mask: d.u64()?,
+        },
+        9 => Uop::Cvta {
+            dst: d.u32()?,
+            src: dec_dop(d)?,
+        },
+        10 => Uop::IntBin {
+            op: bvop_from_tag(d.u8()?)?,
+            w: d.u32()?,
+            mask: d.u64()?,
+            dst: d.u32()?,
+            a: dec_dop(d)?,
+            b: dec_dop(d)?,
+        },
+        11 => Uop::MulWide {
+            signed: d.bool()?,
+            w: d.u32()?,
+            dst: d.u32()?,
+            a: dec_dop(d)?,
+            b: dec_dop(d)?,
+        },
+        12 => Uop::MulHi {
+            signed: d.bool()?,
+            w: d.u32()?,
+            dst: d.u32()?,
+            a: dec_dop(d)?,
+            b: dec_dop(d)?,
+        },
+        13 => Uop::Mad {
+            wide: d.bool()?,
+            signed: d.bool()?,
+            w: d.u32()?,
+            dst: d.u32()?,
+            a: dec_dop(d)?,
+            b: dec_dop(d)?,
+            c: dec_dop(d)?,
+        },
+        14 => Uop::Not {
+            w: d.u32()?,
+            dst: d.u32()?,
+            a: dec_dop(d)?,
+        },
+        15 => Uop::Neg {
+            w: d.u32()?,
+            dst: d.u32()?,
+            a: dec_dop(d)?,
+        },
+        16 => Uop::FltBin {
+            op: fltbin_from_tag(d.u8()?)?,
+            wide: d.bool()?,
+            dst: d.u32()?,
+            a: dec_dop(d)?,
+            b: dec_dop(d)?,
+        },
+        17 => Uop::Fma {
+            wide: d.bool()?,
+            dst: d.u32()?,
+            a: dec_dop(d)?,
+            b: dec_dop(d)?,
+            c: dec_dop(d)?,
+        },
+        18 => Uop::FltUn {
+            op: fltun_from_tag(d.u8()?)?,
+            wide: d.bool()?,
+            dst: d.u32()?,
+            a: dec_dop(d)?,
+        },
+        19 => Uop::SetpF {
+            cmp: cmpop_from_tag(d.u8()?)?,
+            wide: d.bool()?,
+            dst: d.u32()?,
+            a: dec_dop(d)?,
+            b: dec_dop(d)?,
+        },
+        20 => Uop::SetpI {
+            kind: cmp_from_tag(d.u8()?)?,
+            w: d.u32()?,
+            dst: d.u32()?,
+            a: dec_dop(d)?,
+            b: dec_dop(d)?,
+        },
+        21 => Uop::Selp {
+            w: d.u32()?,
+            dst: d.u32()?,
+            a: dec_dop(d)?,
+            b: dec_dop(d)?,
+            p: dec_dop(d)?,
+        },
+        22 => Uop::Cvt {
+            dty: type_from_tag(d.u8()?)?,
+            sty: type_from_tag(d.u8()?)?,
+            dst: d.u32()?,
+            src: dec_dop(d)?,
+        },
+        _ => return None,
+    })
 }
 
 struct Decoder<'a> {

@@ -37,9 +37,26 @@
 //! [`super::machine::run_reference`]; the differential tests in
 //! `tests/integration_sim.rs` and the unit tests in `machine.rs` hold the
 //! two engines (serial and parallel) to that. The only intentional
-//! deviations: static name/label errors surface at decode time rather
-//! than first execution, and the `max_warp_steps` budget counts micro-ops
-//! (labels are free here, they no longer exist).
+//! deviation: static name/label errors surface at decode time rather
+//! than first execution. The `max_warp_steps` budget counts kernel-body
+//! *statements* (labels included), reconstructed from the uop→statement
+//! side table: each micro-op issue is charged the statement gap to the
+//! preceding micro-op — exactly the erased labels the issuing group
+//! stepped past. Charging at issue (not at advance) is what keeps the
+//! count identical to the reference engine when divergent lane groups
+//! merge at a label (the reference pays one label visit for the merged
+//! group; the merged group issues the following micro-op once). The two
+//! engines therefore trip the limit on the same kernels for every
+//! program in which each branch targets the first label of a label run
+//! and no label trails the last instruction — i.e. all compiler- and
+//! suite-emitted PTX; degenerate consecutive-label or trailing-label
+//! programs can differ by at most the label-run length per visit.
+//!
+//! With [`SimConfig::detect_races`] set, grid execution is forced serial
+//! and every global load probes the last-writer shadow: a block reading
+//! bytes an earlier block wrote is a hard [`SimError::CrossBlockRace`]
+//! (snapshot isolation in the parallel path hides exactly those reads,
+//! which is why the diagnostic pins the serial engine).
 
 use super::decode::{Daddr, DecodedKernel, Dop, Uop};
 use super::machine::{
@@ -103,7 +120,13 @@ pub fn run_decoded(
         });
     }
     let tpb = cfg.threads_per_block();
-    let workers = cfg.sim_threads.max(1).min(nblocks);
+    // the race diagnostic needs the serial last-writer order; snapshot
+    // isolation would hide exactly the cross-block reads it looks for
+    let workers = if cfg.detect_races {
+        1
+    } else {
+        cfg.sim_threads.max(1).min(nblocks)
+    };
 
     if workers == 1 {
         // Direct serial path: execute on the result image itself, with
@@ -371,7 +394,24 @@ impl<'a> Worker<'a> {
                 }
                 Ok(v)
             }
-            None => Ok(self.mem.load(addr, bytes)?),
+            None => {
+                let v = self.mem.load(addr, bytes)?;
+                if self.cfg.detect_races {
+                    // direct serial mode only: the shadow exists exactly
+                    // when cross-block races are possible
+                    if let Some(sh) = &self.shadow {
+                        if let Some(w) = sh.foreign_writer(addr, bytes, self.cur_block) {
+                            return Err(SimError::CrossBlockRace {
+                                addr,
+                                bytes,
+                                writer_block: w,
+                                reader_block: self.cur_block,
+                            });
+                        }
+                    }
+                }
+                Ok(v)
+            }
         }
     }
 
@@ -435,7 +475,18 @@ impl<'a> Worker<'a> {
                 }
                 continue;
             }
-            steps += 1;
+            // the step budget counts *statements*, like the reference
+            // engine: the side table gives each micro-op's statement
+            // index, and the gap to the previous micro-op's statement is
+            // exactly the labels the group advanced past (the reference
+            // engine pays one step per label visit; uop 0 additionally
+            // pays for any leading labels)
+            let entry = &dk.uops[pc as usize];
+            steps += if pc == 0 {
+                entry.stmt as u64 + 1
+            } else {
+                (entry.stmt - dk.uops[pc as usize - 1].stmt) as u64
+            };
             if steps > self.cfg.max_warp_steps {
                 return Err(SimError::StepLimit(self.cfg.max_warp_steps));
             }
@@ -449,7 +500,6 @@ impl<'a> Worker<'a> {
                 }
             }
 
-            let entry = &dk.uops[pc as usize];
             self.stats.warp_instructions += 1;
             // per-lane guard evaluation (plain register read, no
             // uninitialized-read accounting — as in the reference engine)

@@ -40,6 +40,12 @@ pub struct SimConfig {
     /// split across workers; results are bit-identical for any value).
     /// The reference engine ignores it. `1` = run on the calling thread.
     pub sim_threads: usize,
+    /// Opt-in cross-block read-after-write diagnostic: a global load of
+    /// bytes an *earlier* (launch-order) block wrote is a hard
+    /// [`SimError::CrossBlockRace`]. Serial engines only — the decoded
+    /// engine forces one worker while this is set, since snapshot
+    /// isolation hides exactly the reads this shadow is looking for.
+    pub detect_races: bool,
 }
 
 impl SimConfig {
@@ -51,6 +57,7 @@ impl SimConfig {
             record_trace: false,
             max_warp_steps: 50_000_000,
             sim_threads: 1,
+            detect_races: false,
         }
     }
 
@@ -112,6 +119,15 @@ pub enum SimError {
     /// `.shared` declaration (formerly misreported as `UnknownParam`).
     UnknownVar(String),
     StepLimit(u64),
+    /// `detect_races` diagnostic: a global load observed bytes written by
+    /// an earlier (launch-order) block — the kernel's result is
+    /// scheduling-dependent on real hardware.
+    CrossBlockRace {
+        addr: u64,
+        bytes: u32,
+        writer_block: u32,
+        reader_block: u32,
+    },
 }
 
 impl std::fmt::Display for SimError {
@@ -122,6 +138,16 @@ impl std::fmt::Display for SimError {
             SimError::UnknownParam(p) => write!(f, "unknown parameter `{p}`"),
             SimError::UnknownVar(v) => write!(f, "unknown shared variable `{v}`"),
             SimError::StepLimit(n) => write!(f, "warp exceeded {n} steps (livelock?)"),
+            SimError::CrossBlockRace {
+                addr,
+                bytes,
+                writer_block,
+                reader_block,
+            } => write!(
+                f,
+                "cross-block read-after-write: block {reader_block} loads {bytes} bytes at \
+                 {addr:#x} written by block {writer_block} (scheduling-dependent on hardware)"
+            ),
         }
     }
 }
@@ -528,7 +554,22 @@ impl<'a> Machine<'a> {
                 }
                 Ok(v)
             }
-            None => Ok(self.mem.load(addr, bytes)?),
+            None => {
+                let v = self.mem.load(addr, bytes)?;
+                if self.cfg.detect_races {
+                    if let Some(sh) = &self.written_by {
+                        if let Some(w) = sh.foreign_writer(addr, bytes, self.cur_block) {
+                            return Err(SimError::CrossBlockRace {
+                                addr,
+                                bytes,
+                                writer_block: w,
+                                reader_block: self.cur_block,
+                            });
+                        }
+                    }
+                }
+                Ok(v)
+            }
         }
     }
 
@@ -796,6 +837,17 @@ impl WriteShadow {
             *s = block;
         }
         conflict
+    }
+
+    /// The `detect_races` load-side probe: which *other* block (if any)
+    /// last wrote one of `bytes` at `addr`? `addr` must be a
+    /// bounds-checked global address (the caller just loaded through it).
+    pub(super) fn foreign_writer(&self, addr: u64, bytes: u32, block: u32) -> Option<u32> {
+        let o = (addr - GLOBAL_BASE) as usize;
+        self.slots[o..o + bytes as usize]
+            .iter()
+            .find(|&&s| s != u32::MAX && s != block)
+            .copied()
     }
 }
 
@@ -1486,6 +1538,98 @@ ret;
         let mem2 = GlobalMem::new(1 << 12);
         let cfg2 = SimConfig::new(1, 1, vec![0x1000]);
         assert!(run(&k2, &cfg2, mem2).is_err(), "store crossing the window edge");
+    }
+
+    /// The step budget counts *statements* on every engine. The loop body
+    /// revisits its label each iteration: mov(1) + 8 × [label + add +
+    /// setp + bra](4) + ret(1) = 34 statements. The exact budget passes,
+    /// one below trips — and the differential shim asserts the reference
+    /// and decoded engines agree at both boundaries (the decoded engine
+    /// used to count micro-ops, where labels are free, and tripped 8
+    /// statements later).
+    #[test]
+    fn step_limit_grazes_identically_on_both_engines() {
+        let k = parse_kernel(
+            r#"
+.visible .entry graze(.param .u64 out){
+.reg .b32 %r<4>; .reg .b64 %rd<4>; .reg .pred %p<2>;
+mov.u32 %r1, 0;
+$LOOP:
+add.s32 %r1, %r1, 1;
+setp.lt.s32 %p1, %r1, 8;
+@%p1 bra $LOOP;
+ret;
+}
+"#,
+        )
+        .unwrap();
+        let mem = GlobalMem::new(1 << 12);
+        let mut cfg = SimConfig::new(1, 1, vec![0x1000]);
+        cfg.max_warp_steps = 34;
+        run(&k, &cfg, mem.clone()).expect("exact statement budget must pass");
+        cfg.max_warp_steps = 33;
+        let err = run(&k, &cfg, mem).unwrap_err();
+        assert!(
+            matches!(err, SimError::StepLimit(33)),
+            "one below the budget must trip, got {err:?}"
+        );
+    }
+
+    /// `detect_races`: a block loading global bytes an earlier block
+    /// wrote is a hard error on every engine; the same kernel passes with
+    /// the diagnostic off, and a same-block read-after-write never trips.
+    #[test]
+    fn detect_races_flags_cross_block_raw() {
+        // every block stores out[ctaid] then reads out[0]: block 0 reads
+        // its own write (fine), block 1 reads block 0's write (race)
+        let k = parse_kernel(
+            r#"
+.visible .entry race(.param .u64 out){
+.reg .b32 %r<4>; .reg .b64 %rd<6>;
+ld.param.u64 %rd1, [out];
+cvta.to.global.u64 %rd2, %rd1;
+mov.u32 %r1, %ctaid.x;
+mul.wide.s32 %rd3, %r1, 4;
+add.s64 %rd4, %rd2, %rd3;
+st.global.b32 [%rd4], %r1;
+ld.global.b32 %r2, [%rd2];
+ret;
+}
+"#,
+        )
+        .unwrap();
+        let mem = GlobalMem::new(1 << 12);
+        let mut alloc = Allocator::new(&mem);
+        let out = alloc.alloc(64);
+        let mut cfg = SimConfig::new(2, 1, vec![out]);
+
+        // off: undetected, identical results on every engine
+        let r = run(&k, &cfg, mem.clone()).expect("diagnostic off must not fail");
+        assert_eq!(r.stats.cross_block_write_conflicts, 0);
+
+        // on: hard error naming the offending blocks (the shim asserts
+        // the reference and both decoded paths agree on failure)
+        cfg.detect_races = true;
+        let err = run(&k, &cfg, mem.clone()).unwrap_err();
+        match err {
+            SimError::CrossBlockRace {
+                writer_block,
+                reader_block,
+                bytes,
+                ..
+            } => {
+                assert_eq!((writer_block, reader_block, bytes), (0, 1, 4));
+            }
+            other => panic!("expected CrossBlockRace, got {other:?}"),
+        }
+
+        // a single-block launch of the same kernel is race-free
+        let cfg1 = {
+            let mut c = SimConfig::new(1, 1, vec![out]);
+            c.detect_races = true;
+            c
+        };
+        run(&k, &cfg1, mem).expect("same-block RAW must not trip the diagnostic");
     }
 
     #[test]

@@ -6,9 +6,14 @@
 //! shuffle-delta procedure.
 
 pub mod affine;
+pub mod persist;
 pub mod solver;
 pub mod term;
 
 pub use affine::{extract, split_on, Affine};
-pub use solver::{const_distance, may_alias, solve_delta, Assumptions, Conflict, Truth};
+pub use persist::{decode_emulation, encode_emulation, PERSIST_VERSION};
+pub use solver::{
+    const_distance, may_alias, solve_delta, Assumptions, AssumptionsImage, Conflict, FormImage,
+    Truth,
+};
 pub use term::{eval, BvOp, CmpKind, Node, SessionInterner, SymId, TermId, TermPool, UfId};

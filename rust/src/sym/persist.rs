@@ -1,0 +1,937 @@
+//! Relocatable, versioned binary codec for hash-consed term graphs — the
+//! subsystem that lets [`crate::emu::EmulationResult`]s persist across
+//! processes.
+//!
+//! Term graphs are interner-relative: a `SymId`/`UfId` is an index into
+//! the *session* interner and a `TermId` an index into the emulation's
+//! arena, so raw ids written by one process are meaningless in another.
+//! This codec emits a **self-contained image** instead:
+//!
+//! * a local name table — every symbol / UF name the reachable graph
+//!   uses, spelled out as strings;
+//! * the reachable term nodes in topological order (the arena's
+//!   interning order is topological by construction), children referenced
+//!   by *local* indices that must precede the node — acyclicity is a
+//!   construction invariant of the format, not a post-hoc check;
+//! * every root the result references: register values are not needed
+//!   (flows are finished), but memory-trace addresses/values, path
+//!   conditions (assumption atoms) and the `tid` symbol are;
+//! * an [`crate::util::Fnv128`] checksum over the whole payload.
+//!
+//! Decoding **relocates** into the loading session: names are re-interned
+//! through the current [`SessionInterner`], nodes re-hash-consed into a
+//! fresh [`TermPool`] via the smart constructors
+//! ([`TermPool::rebuild`]), so structural sharing and term identities are
+//! rebuilt — never trusted from disk. Every index is bounds-checked and
+//! any malformed byte yields `None`, which the pipeline's disk store
+//! treats exactly like a corrupt artifact: delete, count, recompute.
+
+use crate::emu::{EmuStats, EmulationResult, FlowEnd, FlowResult};
+use crate::sym::solver::{Assumptions, AssumptionsImage, FormImage};
+use crate::sym::term::{BvOp, CmpKind, Node, SessionInterner, TermId, TermPool};
+use crate::util::{Dec, Enc, Fnv128, FnvBuild, FnvMap};
+use std::collections::HashSet;
+use std::sync::Arc;
+
+/// Bump when the image layout changes. The pipeline store's own version
+/// guards the container; this one guards the term-graph encoding proper,
+/// so a future store-format bump that leaves the graph codec untouched
+/// can keep old images readable.
+pub const PERSIST_VERSION: u32 = 1;
+
+// ---------------------------------------------------------------------------
+// Stable operator tags (shared with the simulator's DecodedKernel codec)
+// ---------------------------------------------------------------------------
+
+pub(crate) fn bvop_tag(op: BvOp) -> u8 {
+    match op {
+        BvOp::Add => 0,
+        BvOp::Sub => 1,
+        BvOp::Mul => 2,
+        BvOp::UDiv => 3,
+        BvOp::SDiv => 4,
+        BvOp::URem => 5,
+        BvOp::SRem => 6,
+        BvOp::And => 7,
+        BvOp::Or => 8,
+        BvOp::Xor => 9,
+        BvOp::Shl => 10,
+        BvOp::LShr => 11,
+        BvOp::AShr => 12,
+        BvOp::UMin => 13,
+        BvOp::UMax => 14,
+        BvOp::SMin => 15,
+        BvOp::SMax => 16,
+    }
+}
+
+pub(crate) fn bvop_from_tag(tag: u8) -> Option<BvOp> {
+    Some(match tag {
+        0 => BvOp::Add,
+        1 => BvOp::Sub,
+        2 => BvOp::Mul,
+        3 => BvOp::UDiv,
+        4 => BvOp::SDiv,
+        5 => BvOp::URem,
+        6 => BvOp::SRem,
+        7 => BvOp::And,
+        8 => BvOp::Or,
+        9 => BvOp::Xor,
+        10 => BvOp::Shl,
+        11 => BvOp::LShr,
+        12 => BvOp::AShr,
+        13 => BvOp::UMin,
+        14 => BvOp::UMax,
+        15 => BvOp::SMin,
+        16 => BvOp::SMax,
+        _ => return None,
+    })
+}
+
+pub(crate) fn cmp_tag(k: CmpKind) -> u8 {
+    match k {
+        CmpKind::Eq => 0,
+        CmpKind::Ne => 1,
+        CmpKind::Ult => 2,
+        CmpKind::Ule => 3,
+        CmpKind::Ugt => 4,
+        CmpKind::Uge => 5,
+        CmpKind::Slt => 6,
+        CmpKind::Sle => 7,
+        CmpKind::Sgt => 8,
+        CmpKind::Sge => 9,
+    }
+}
+
+pub(crate) fn cmp_from_tag(tag: u8) -> Option<CmpKind> {
+    Some(match tag {
+        0 => CmpKind::Eq,
+        1 => CmpKind::Ne,
+        2 => CmpKind::Ult,
+        3 => CmpKind::Ule,
+        4 => CmpKind::Ugt,
+        5 => CmpKind::Uge,
+        6 => CmpKind::Slt,
+        7 => CmpKind::Sle,
+        8 => CmpKind::Sgt,
+        9 => CmpKind::Sge,
+        _ => return None,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Encoding: reachability + image writer
+// ---------------------------------------------------------------------------
+
+/// Collects the set of terms reachable from the registered roots.
+pub struct GraphBuilder<'p> {
+    pool: &'p TermPool,
+    /// FNV-hashed (the ids are small integers; this runs once per
+    /// reachable node on every cache-miss emulation).
+    seen: HashSet<u32, FnvBuild>,
+}
+
+impl<'p> GraphBuilder<'p> {
+    pub fn new(pool: &'p TermPool) -> GraphBuilder<'p> {
+        GraphBuilder {
+            pool,
+            seen: HashSet::default(),
+        }
+    }
+
+    /// Mark `t` and everything it references (iterative DFS — address
+    /// chains in unrolled kernels can be deep).
+    pub fn add_root(&mut self, t: TermId) {
+        let mut stack = vec![t];
+        while let Some(t) = stack.pop() {
+            if !self.seen.insert(t.0) {
+                continue;
+            }
+            match self.pool.node(t) {
+                Node::Const { .. } | Node::Sym { .. } => {}
+                Node::Uf { args, .. } => stack.extend(args.iter().copied()),
+                Node::Bin { a, b, .. } | Node::Cmp { a, b, .. } => {
+                    stack.push(*a);
+                    stack.push(*b);
+                }
+                Node::Not { a, .. }
+                | Node::SExt { a, .. }
+                | Node::ZExt { a, .. }
+                | Node::Trunc { a, .. } => stack.push(*a),
+                Node::Ite { cond, t: tt, e, .. } => {
+                    stack.push(*cond);
+                    stack.push(*tt);
+                    stack.push(*e);
+                }
+            }
+        }
+    }
+
+    /// Freeze the reachable set into an encodable image: nodes in
+    /// ascending arena order (topological), local indices assigned.
+    pub fn seal(self) -> GraphImage<'p> {
+        let mut order: Vec<u32> = self.seen.into_iter().collect();
+        order.sort_unstable();
+        let index: FnvMap<u32, u32> = order
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| (t, i as u32))
+            .collect();
+        GraphImage {
+            pool: self.pool,
+            order,
+            index,
+        }
+    }
+}
+
+/// A sealed, encodable view of a reachable term subgraph.
+pub struct GraphImage<'p> {
+    pool: &'p TermPool,
+    order: Vec<u32>,
+    index: FnvMap<u32, u32>,
+}
+
+impl GraphImage<'_> {
+    /// Local index of a registered root (panics on an unregistered term —
+    /// an internal invariant violation, not an input condition).
+    pub fn local(&self, t: TermId) -> u32 {
+        *self
+            .index
+            .get(&t.0)
+            .expect("term was not registered as a graph root")
+    }
+
+    /// Number of nodes in the image.
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    /// Write the name tables and the topologically ordered node list.
+    pub fn encode(&self, e: &mut Enc) {
+        // local name tables, in first-use order
+        let mut sym_local: FnvMap<u32, u32> = FnvMap::default();
+        let mut sym_names: Vec<&str> = Vec::new();
+        let mut uf_local: FnvMap<u32, u32> = FnvMap::default();
+        let mut uf_names: Vec<&str> = Vec::new();
+        for &t in &self.order {
+            match self.pool.node(TermId(t)) {
+                Node::Sym { sym, .. } => {
+                    sym_local.entry(sym.0).or_insert_with(|| {
+                        sym_names.push(self.pool.sym_name(*sym));
+                        (sym_names.len() - 1) as u32
+                    });
+                }
+                Node::Uf { func, .. } => {
+                    uf_local.entry(func.0).or_insert_with(|| {
+                        uf_names.push(self.pool.uf_name(*func));
+                        (uf_names.len() - 1) as u32
+                    });
+                }
+                _ => {}
+            }
+        }
+        e.u64(sym_names.len() as u64);
+        for n in &sym_names {
+            e.str(n);
+        }
+        e.u64(uf_names.len() as u64);
+        for n in &uf_names {
+            e.str(n);
+        }
+
+        e.u64(self.order.len() as u64);
+        for &t in &self.order {
+            match self.pool.node(TermId(t)) {
+                Node::Const { bits, width } => {
+                    e.u8(0);
+                    e.u64(*bits);
+                    e.u32(*width);
+                }
+                Node::Sym { sym, width } => {
+                    e.u8(1);
+                    e.u32(sym_local[&sym.0]);
+                    e.u32(*width);
+                }
+                Node::Uf { func, args, width } => {
+                    e.u8(2);
+                    e.u32(uf_local[&func.0]);
+                    e.u32(*width);
+                    e.u64(args.len() as u64);
+                    for a in args {
+                        e.u32(self.local(*a));
+                    }
+                }
+                Node::Bin { op, a, b, width } => {
+                    e.u8(3);
+                    e.u8(bvop_tag(*op));
+                    e.u32(self.local(*a));
+                    e.u32(self.local(*b));
+                    e.u32(*width);
+                }
+                Node::Not { a, width } => {
+                    e.u8(4);
+                    e.u32(self.local(*a));
+                    e.u32(*width);
+                }
+                Node::Cmp { kind, a, b } => {
+                    e.u8(5);
+                    e.u8(cmp_tag(*kind));
+                    e.u32(self.local(*a));
+                    e.u32(self.local(*b));
+                }
+                Node::Ite { cond, t: tt, e: el, width } => {
+                    e.u8(6);
+                    e.u32(self.local(*cond));
+                    e.u32(self.local(*tt));
+                    e.u32(self.local(*el));
+                    e.u32(*width);
+                }
+                Node::SExt { a, from, width } => {
+                    e.u8(7);
+                    e.u32(self.local(*a));
+                    e.u32(*from);
+                    e.u32(*width);
+                }
+                Node::ZExt { a, from, width } => {
+                    e.u8(8);
+                    e.u32(self.local(*a));
+                    e.u32(*from);
+                    e.u32(*width);
+                }
+                Node::Trunc { a, width } => {
+                    e.u8(9);
+                    e.u32(self.local(*a));
+                    e.u32(*width);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Decoding: relocation into the loading session
+// ---------------------------------------------------------------------------
+
+/// Local-index → relocated-`TermId` map produced by [`decode_graph`].
+pub struct GraphReader {
+    map: Vec<TermId>,
+}
+
+impl GraphReader {
+    /// Relocated id of local node `i` (bounds-checked).
+    pub fn term(&self, i: u32) -> Option<TermId> {
+        self.map.get(i as usize).copied()
+    }
+}
+
+/// Read one graph image, re-interning names through `pool`'s session and
+/// re-hash-consing every node into `pool`. Returns `None` on any
+/// malformed byte (unknown tag, forward/out-of-range child reference,
+/// width mismatch, bad UTF-8).
+pub fn decode_graph(d: &mut Dec, pool: &mut TermPool) -> Option<GraphReader> {
+    let nsyms = d.len()?;
+    let mut sym_names = Vec::with_capacity(nsyms);
+    for _ in 0..nsyms {
+        sym_names.push(d.str()?);
+    }
+    let nufs = d.len()?;
+    let mut uf_names = Vec::with_capacity(nufs);
+    for _ in 0..nufs {
+        uf_names.push(d.str()?);
+    }
+
+    let nnodes = d.len()?;
+    let mut map: Vec<TermId> = Vec::with_capacity(nnodes);
+    // children must precede their parent: only already-decoded locals
+    // resolve, which makes the graph acyclic by construction
+    for _ in 0..nnodes {
+        let child = |i: u32, map: &[TermId]| -> Option<TermId> { map.get(i as usize).copied() };
+        let wok = |w: u32| (1..=128).contains(&w);
+        let id = match d.u8()? {
+            0 => {
+                let bits = d.u64()?;
+                let width = d.u32()?;
+                wok(width).then(|| pool.constant(bits, width))?
+            }
+            1 => {
+                let name = *sym_names.get(d.u32()? as usize)?;
+                let width = d.u32()?;
+                wok(width).then(|| pool.symbol(name, width))?
+            }
+            2 => {
+                let name = *uf_names.get(d.u32()? as usize)?;
+                let width = d.u32()?;
+                let nargs = d.len()?;
+                let mut args = Vec::with_capacity(nargs);
+                for _ in 0..nargs {
+                    args.push(child(d.u32()?, &map)?);
+                }
+                wok(width).then(|| pool.uf(name, args, width))?
+            }
+            3 => {
+                let op = bvop_from_tag(d.u8()?)?;
+                let a = child(d.u32()?, &map)?;
+                let b = child(d.u32()?, &map)?;
+                let width = d.u32()?;
+                pool.rebuild(&Node::Bin { op, a, b, width })?
+            }
+            4 => {
+                let a = child(d.u32()?, &map)?;
+                let width = d.u32()?;
+                pool.rebuild(&Node::Not { a, width })?
+            }
+            5 => {
+                let kind = cmp_from_tag(d.u8()?)?;
+                let a = child(d.u32()?, &map)?;
+                let b = child(d.u32()?, &map)?;
+                pool.rebuild(&Node::Cmp { kind, a, b })?
+            }
+            6 => {
+                let cond = child(d.u32()?, &map)?;
+                let t = child(d.u32()?, &map)?;
+                let e = child(d.u32()?, &map)?;
+                let width = d.u32()?;
+                pool.rebuild(&Node::Ite { cond, t, e, width })?
+            }
+            7 => {
+                let a = child(d.u32()?, &map)?;
+                let from = d.u32()?;
+                let width = d.u32()?;
+                pool.rebuild(&Node::SExt { a, from, width })?
+            }
+            8 => {
+                let a = child(d.u32()?, &map)?;
+                let from = d.u32()?;
+                let width = d.u32()?;
+                pool.rebuild(&Node::ZExt { a, from, width })?
+            }
+            9 => {
+                let a = child(d.u32()?, &map)?;
+                let width = d.u32()?;
+                pool.rebuild(&Node::Trunc { a, width })?
+            }
+            _ => return None,
+        };
+        map.push(id);
+    }
+    Some(GraphReader { map })
+}
+
+// ---------------------------------------------------------------------------
+// EmulationResult codec
+// ---------------------------------------------------------------------------
+
+fn encode_assumptions(e: &mut Enc, img: &AssumptionsImage, g: &GraphImage) {
+    e.u64(img.forms.len() as u64);
+    for f in &img.forms {
+        e.u64(f.atoms.len() as u64);
+        for &(t, c) in &f.atoms {
+            e.u32(g.local(t));
+            e.i128(c);
+        }
+        for bound in [f.lo, f.hi] {
+            match bound {
+                None => e.u8(0),
+                Some(v) => {
+                    e.u8(1);
+                    e.i128(v);
+                }
+            }
+        }
+        e.u64(f.ne.len() as u64);
+        for &v in &f.ne {
+            e.i128(v);
+        }
+        e.bool(f.nonneg);
+    }
+    e.u64(img.opaque.len() as u64);
+    for &(t, v) in &img.opaque {
+        e.u32(g.local(t));
+        e.bool(v);
+    }
+}
+
+fn decode_assumptions(d: &mut Dec, g: &GraphReader) -> Option<Assumptions> {
+    let nforms = d.len()?;
+    let mut forms = Vec::with_capacity(nforms);
+    for _ in 0..nforms {
+        let natoms = d.len()?;
+        let mut atoms = Vec::with_capacity(natoms);
+        for _ in 0..natoms {
+            let t = g.term(d.u32()?)?;
+            atoms.push((t, d.i128()?));
+        }
+        let mut bounds = [None, None];
+        for b in bounds.iter_mut() {
+            *b = match d.u8()? {
+                0 => None,
+                1 => Some(d.i128()?),
+                _ => return None,
+            };
+        }
+        let nne = d.len()?;
+        let mut ne = Vec::with_capacity(nne);
+        for _ in 0..nne {
+            ne.push(d.i128()?);
+        }
+        forms.push(FormImage {
+            atoms,
+            lo: bounds[0],
+            hi: bounds[1],
+            ne,
+            nonneg: d.bool()?,
+        });
+    }
+    let nopaque = d.len()?;
+    let mut opaque = Vec::with_capacity(nopaque);
+    for _ in 0..nopaque {
+        let t = g.term(d.u32()?)?;
+        opaque.push((t, d.bool()?));
+    }
+    Some(Assumptions::from_image(AssumptionsImage { forms, opaque }))
+}
+
+/// Serialize a whole emulation result as a self-contained, relocatable
+/// image (version ∥ graph ∥ result shape ∥ `Fnv128` checksum).
+pub fn encode_emulation(r: &EmulationResult) -> Vec<u8> {
+    // snapshot the assumption sets once: the images both supply the
+    // graph roots and get encoded verbatim afterwards
+    let images: Vec<AssumptionsImage> = r.flows.iter().map(|f| f.assumptions.export()).collect();
+
+    let mut b = GraphBuilder::new(&r.pool);
+    b.add_root(r.tid_sym);
+    let mut roots = Vec::new();
+    for f in &r.flows {
+        f.trace.term_roots(&mut roots);
+    }
+    for img in &images {
+        for form in &img.forms {
+            roots.extend(form.atoms.iter().map(|&(t, _)| t));
+        }
+        roots.extend(img.opaque.iter().map(|&(t, _)| t));
+    }
+    for t in roots {
+        b.add_root(t);
+    }
+    let g = b.seal();
+
+    let mut e = Enc::default();
+    e.u32(PERSIST_VERSION);
+    g.encode(&mut e);
+    e.u32(g.local(r.tid_sym));
+    for w in r.stats.to_words() {
+        e.u64(w);
+    }
+    e.u64(r.flows.len() as u64);
+    for (f, img) in r.flows.iter().zip(&images) {
+        e.u32(f.id);
+        e.u8(f.end.tag());
+        f.trace.encode(&mut e, &mut |t| g.local(t));
+        encode_assumptions(&mut e, img, &g);
+    }
+
+    let (c0, c1) = {
+        let mut h = Fnv128::new();
+        h.write(&e.buf);
+        h.finish()
+    };
+    e.u64(c0);
+    e.u64(c1);
+    e.buf
+}
+
+/// Decode an emulation image into the *loading* session: a fresh
+/// [`TermPool`] is grown in `session`, every name re-interned, every node
+/// re-hash-consed. Any checksum/bounds/shape violation returns `None`
+/// (the caller recomputes, exactly like other corrupt artifacts).
+pub fn decode_emulation(
+    bytes: &[u8],
+    session: &Arc<SessionInterner>,
+) -> Option<EmulationResult> {
+    if bytes.len() < 16 {
+        return None;
+    }
+    let (body, tail) = bytes.split_at(bytes.len() - 16);
+    let want = {
+        let mut h = Fnv128::new();
+        h.write(body);
+        h.finish()
+    };
+    let mut td = Dec::new(tail);
+    if (td.u64()?, td.u64()?) != want {
+        return None;
+    }
+
+    let mut d = Dec::new(body);
+    if d.u32()? != PERSIST_VERSION {
+        return None;
+    }
+    let mut pool = TermPool::in_session(session.clone());
+    let g = decode_graph(&mut d, &mut pool)?;
+    let tid_sym = g.term(d.u32()?)?;
+    let mut words = [0u64; 12];
+    for w in words.iter_mut() {
+        *w = d.u64()?;
+    }
+    let stats = EmuStats::from_words(words);
+    let nflows = d.len()?;
+    let mut flows = Vec::with_capacity(nflows);
+    for _ in 0..nflows {
+        let id = d.u32()?;
+        let end = FlowEnd::from_tag(d.u8()?)?;
+        let trace = crate::emu::memtrace::MemTrace::decode(&mut d, &|i| g.term(i))?;
+        let assumptions = decode_assumptions(&mut d, &g)?;
+        flows.push(FlowResult {
+            id,
+            trace,
+            assumptions,
+            end,
+        });
+    }
+    d.done().then_some(EmulationResult {
+        pool,
+        flows,
+        tid_sym,
+        stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::emu::emulate_in_session;
+    use crate::emu::Limits;
+    use crate::ptx::parser::parse_kernel;
+    use crate::sym::term::{eval, SymId, UfId};
+    use crate::util::{check_cases, fnv64, Rng};
+
+    /// Name-keyed evaluation environment: identical values in any pool
+    /// that spells the same names, whatever the local ids are.
+    fn eval_by_name(pool: &TermPool, t: TermId, seed: u64) -> u64 {
+        let sym_val = |s: SymId| {
+            let mut r = Rng::new(seed ^ fnv64(pool.sym_name(s).as_bytes()));
+            r.next_u64()
+        };
+        let uf_val = |f: UfId, args: &[u64]| {
+            let mut h = seed ^ fnv64(pool.uf_name(f).as_bytes());
+            for &a in args {
+                h = h.rotate_left(13) ^ a.wrapping_mul(0x100000001B3);
+            }
+            h
+        };
+        eval(pool, t, &sym_val, &uf_val)
+    }
+
+    fn random_term(p: &mut TermPool, rng: &mut Rng, depth: u32, width: u32) -> TermId {
+        if depth == 0 || rng.below(5) == 0 {
+            return match rng.below(4) {
+                0 => p.constant(rng.next_u64(), width),
+                1 => p.symbol(&format!("s{}", rng.below(5)), width),
+                _ => {
+                    // UFs of arity 0..=2 over mixed-width args
+                    let arity = rng.below(3) as usize;
+                    let args = (0..arity)
+                        .map(|_| {
+                            let w = *rng.pick(&[8u32, 16, 32, 64]);
+                            p.symbol(&format!("a{}", rng.below(3)), w)
+                        })
+                        .collect();
+                    p.uf(&format!("f{}", rng.below(3)), args, width)
+                }
+            };
+        }
+        match rng.below(8) {
+            0 => {
+                let from = match width {
+                    64 => 32,
+                    32 => 16,
+                    _ => 8,
+                };
+                if from < width {
+                    let a = random_term(p, rng, depth - 1, from);
+                    return if rng.below(2) == 0 {
+                        p.sext(a, width)
+                    } else {
+                        p.zext(a, width)
+                    };
+                }
+            }
+            1 => {
+                let wider = if width < 64 { 64 } else { 128 };
+                let a = random_term(p, rng, depth - 1, wider);
+                return p.trunc(a, width);
+            }
+            2 => {
+                let w = *rng.pick(&[8u32, 16, 32, 64]);
+                let a = random_term(p, rng, depth - 1, w);
+                let b = random_term(p, rng, depth - 1, w);
+                let kind = cmp_from_tag(rng.below(10) as u8).unwrap();
+                let c = p.cmp(kind, a, b);
+                let t = random_term(p, rng, depth - 1, width);
+                let e = random_term(p, rng, depth - 1, width);
+                return p.ite(c, t, e);
+            }
+            3 => {
+                let a = random_term(p, rng, depth - 1, width);
+                return p.not(a);
+            }
+            _ => {}
+        }
+        let a = random_term(p, rng, depth - 1, width);
+        let b = random_term(p, rng, depth - 1, width);
+        let op = bvop_from_tag(rng.below(17) as u8).unwrap();
+        p.bin(op, a, b)
+    }
+
+    fn roundtrip_graph(src: &TermPool, roots: &[TermId], dst: &mut TermPool) -> Vec<TermId> {
+        let mut b = GraphBuilder::new(src);
+        for &r in roots {
+            b.add_root(r);
+        }
+        let g = b.seal();
+        let mut e = Enc::default();
+        g.encode(&mut e);
+        let locals: Vec<u32> = roots.iter().map(|&r| g.local(r)).collect();
+        let mut d = Dec::new(&e.buf);
+        let r = decode_graph(&mut d, dst).expect("decode of a fresh encoding");
+        assert!(d.done(), "trailing bytes after graph");
+        locals.iter().map(|&l| r.term(l).unwrap()).collect()
+    }
+
+    /// Round-trip over randomized graphs: eval agreement on every root,
+    /// across sessions, with the destination interner polluted so every
+    /// `SymId`/`UfId`/`TermId` is numerically different.
+    #[test]
+    fn prop_roundtrip_eval_agreement() {
+        check_cases("persist-roundtrip-eval", 200, |rng| {
+            let mut src = TermPool::new();
+            let width = *rng.pick(&[8u32, 16, 32, 64]);
+            let roots: Vec<TermId> = (0..1 + rng.below(4))
+                .map(|_| random_term(&mut src, rng, 4, width))
+                .collect();
+
+            // destination session polluted with unrelated names
+            let session = Arc::new(SessionInterner::new());
+            let mut dst = TermPool::in_session(session);
+            for i in 0..10 {
+                dst.symbol(&format!("noise{i}"), 32);
+                dst.uf(&format!("nf{i}"), vec![], 32);
+            }
+
+            let relocated = roundtrip_graph(&src, &roots, &mut dst);
+            let seed = rng.next_u64();
+            for (&r, &n) in roots.iter().zip(&relocated) {
+                assert_eq!(
+                    eval_by_name(&src, r, seed),
+                    eval_by_name(&dst, n, seed),
+                    "relocated root evaluates differently"
+                );
+                assert_eq!(src.width(r), dst.width(n), "width changed in relocation");
+            }
+        });
+    }
+
+    /// Structural sharing is rebuilt: the same root decoded twice into one
+    /// pool lands on the same `TermId`.
+    #[test]
+    fn relocation_rehashconses() {
+        let mut src = TermPool::new();
+        let x = src.symbol("x", 32);
+        let c = src.constant(7, 32);
+        let t = src.bin(BvOp::Add, x, c);
+        let u = src.uf("load", vec![t], 32);
+
+        let mut dst = TermPool::new();
+        let first = roundtrip_graph(&src, &[u, t], &mut dst);
+        let len_after_first = dst.len();
+        let second = roundtrip_graph(&src, &[u, t], &mut dst);
+        assert_eq!(first, second, "re-decoding must re-hash-cons to the same ids");
+        assert_eq!(dst.len(), len_after_first, "no duplicate nodes interned");
+    }
+
+    /// A full emulation survives the codec: encode in one session, decode
+    /// into a *different* polluted session, and compare the result shape
+    /// plus eval agreement on every memory-trace root.
+    #[test]
+    fn emulation_roundtrip_cross_session() {
+        const K: &str = r#"
+.visible .entry rt(.param .u64 out, .param .u64 a, .param .u32 n){
+.reg .b32 %r<6>; .reg .b64 %rd<8>; .reg .f32 %f<4>; .reg .pred %p<2>;
+ld.param.u64 %rd1, [out];
+ld.param.u64 %rd2, [a];
+ld.param.u32 %r5, [n];
+cvta.to.global.u64 %rd3, %rd2;
+cvta.to.global.u64 %rd4, %rd1;
+mov.u32 %r1, %tid.x;
+setp.ge.s32 %p1, %r1, %r5;
+@%p1 bra $EXIT;
+mul.wide.s32 %rd5, %r1, 4;
+add.s64 %rd6, %rd3, %rd5;
+ld.global.f32 %f1, [%rd6];
+ld.global.f32 %f2, [%rd6+4];
+add.f32 %f3, %f1, %f2;
+add.s64 %rd7, %rd4, %rd5;
+st.global.f32 [%rd7], %f3;
+$EXIT: ret;
+}
+"#;
+        let k = parse_kernel(K).unwrap();
+        let fresh = emulate_in_session(
+            &k,
+            Limits::default(),
+            Arc::new(SessionInterner::new()),
+        )
+        .unwrap();
+        let bytes = encode_emulation(&fresh);
+
+        // polluted loading session: every id is shifted
+        let session = Arc::new(SessionInterner::new());
+        {
+            let mut warm = TermPool::in_session(session.clone());
+            for i in 0..20 {
+                warm.symbol(&format!("other{i}"), 32);
+                warm.uf(&format!("of{i}"), vec![], 64);
+            }
+        }
+        let loaded = decode_emulation(&bytes, &session).expect("image decodes");
+
+        assert_eq!(loaded.flows.len(), fresh.flows.len());
+        assert_eq!(loaded.stats.to_words(), fresh.stats.to_words());
+        let seed = 0xC0FF_EE00_D15E_A5E5u64;
+        assert_eq!(
+            eval_by_name(&fresh.pool, fresh.tid_sym, seed),
+            eval_by_name(&loaded.pool, loaded.tid_sym, seed)
+        );
+        for (a, b) in fresh.flows.iter().zip(&loaded.flows) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.end, b.end);
+            assert_eq!(a.trace.loads.len(), b.trace.loads.len());
+            assert_eq!(a.trace.stores.len(), b.trace.stores.len());
+            assert_eq!(a.assumptions.fact_count(), b.assumptions.fact_count());
+            for (la, lb) in a.trace.loads.iter().zip(&b.trace.loads) {
+                assert_eq!((la.stmt, la.ty, la.space), (lb.stmt, lb.ty, lb.space));
+                assert_eq!(
+                    (la.nc, la.segment, la.guarded, la.valid),
+                    (lb.nc, lb.segment, lb.guarded, lb.valid)
+                );
+                assert_eq!(
+                    eval_by_name(&fresh.pool, la.addr, seed),
+                    eval_by_name(&loaded.pool, lb.addr, seed),
+                    "load address diverged"
+                );
+                assert_eq!(
+                    eval_by_name(&fresh.pool, la.value, seed),
+                    eval_by_name(&loaded.pool, lb.value, seed),
+                    "load value diverged"
+                );
+            }
+        }
+
+        // the downstream consumer agrees: detection over the relocated
+        // result is identical to detection over the fresh one
+        let opts = crate::shuffle::DetectOpts::default();
+        let d1 = crate::shuffle::detect(&k, &fresh, opts);
+        let d2 = crate::shuffle::detect(&k, &loaded, opts);
+        assert_eq!(d1.chosen, d2.chosen, "relocation changed detection");
+        assert_eq!(d1.total_global_loads, d2.total_global_loads);
+    }
+
+    /// Relocated assumptions answer `check` like the originals even
+    /// though every `TermId` was renumbered (key re-canonicalization).
+    #[test]
+    fn relocated_assumptions_still_decide() {
+        use crate::sym::solver::Truth;
+        let mut src = TermPool::new();
+        let x = src.symbol("x", 32);
+        let y = src.symbol("y", 32);
+        let c100 = src.constant(100, 32);
+        let lt = src.cmp(CmpKind::Slt, x, c100); // x < 100
+        let xy = src.cmp(CmpKind::Slt, x, y); // x < y
+        let mut a = Assumptions::new();
+        a.assume(&src, lt, true).unwrap();
+        a.assume(&src, xy, true).unwrap();
+
+        // relocate the atoms and the image into a pool where y interns
+        // *before* x, flipping the canonical atom order of `x - y`
+        let session = Arc::new(SessionInterner::new());
+        let mut dst = TermPool::in_session(session);
+        dst.symbol("y", 32);
+        dst.symbol("noise", 8);
+        let mut b = GraphBuilder::new(&src);
+        let img = a.export();
+        for f in &img.forms {
+            for &(t, _) in &f.atoms {
+                b.add_root(t);
+            }
+        }
+        for &(t, _) in &img.opaque {
+            b.add_root(t);
+        }
+        let g = b.seal();
+        let mut e = Enc::default();
+        g.encode(&mut e);
+        let mut enc2 = Enc::default();
+        encode_assumptions(&mut enc2, &img, &g);
+        let mut d = Dec::new(&e.buf);
+        let r = decode_graph(&mut d, &mut dst).unwrap();
+        let mut d2 = Dec::new(&enc2.buf);
+        let reloc = decode_assumptions(&mut d2, &r).unwrap();
+
+        let nx = dst.symbol("x", 32);
+        let ny = dst.symbol("y", 32);
+        let nc200 = dst.constant(200, 32);
+        let nlt200 = dst.cmp(CmpKind::Slt, nx, nc200);
+        assert_eq!(reloc.check(&dst, nlt200), Truth::True, "x < 100 ⇒ x < 200");
+        let nyx = dst.cmp(CmpKind::Sgt, ny, nx);
+        assert_eq!(reloc.check(&dst, nyx), Truth::True, "x < y ⇒ y > x");
+    }
+
+    /// Corrupt and truncated images must fail decode, never panic.
+    #[test]
+    fn corrupt_and_truncated_images_are_rejected() {
+        let k = parse_kernel(
+            r#"
+.visible .entry c(.param .u64 a){
+.reg .b32 %r<4>; .reg .b64 %rd<4>; .reg .f32 %f<2>;
+ld.param.u64 %rd1, [a];
+cvta.to.global.u64 %rd2, %rd1;
+mov.u32 %r1, %tid.x;
+mul.wide.s32 %rd3, %r1, 4;
+add.s64 %rd2, %rd2, %rd3;
+ld.global.f32 %f1, [%rd2];
+st.global.f32 [%rd2], %f1;
+ret;
+}
+"#,
+        )
+        .unwrap();
+        let r = emulate_in_session(&k, Limits::default(), Arc::new(SessionInterner::new()))
+            .unwrap();
+        let bytes = encode_emulation(&r);
+        let session = Arc::new(SessionInterner::new());
+        assert!(decode_emulation(&bytes, &session).is_some());
+
+        // every truncation fails cleanly
+        for cut in 0..bytes.len() {
+            assert!(
+                decode_emulation(&bytes[..cut], &session).is_none(),
+                "truncation at {cut} must be rejected"
+            );
+        }
+        // every single-byte flip fails cleanly (checksum) — sample to
+        // keep the test fast
+        for i in (0..bytes.len()).step_by(7) {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0xFF;
+            assert!(
+                decode_emulation(&bad, &session).is_none(),
+                "bit flip at {i} must be rejected"
+            );
+        }
+    }
+}

@@ -241,6 +241,85 @@ impl Assumptions {
     pub fn fact_count(&self) -> usize {
         self.forms.len() + self.opaque.len()
     }
+
+    /// Snapshot every recorded fact as plain data (the serialization hook
+    /// for [`crate::sym::persist`]). Atom `TermId`s in the image are
+    /// pool-relative; the codec spells them out as graph roots.
+    pub fn export(&self) -> AssumptionsImage {
+        AssumptionsImage {
+            forms: self
+                .forms
+                .iter()
+                .map(|(k, f)| FormImage {
+                    atoms: k.0.clone(),
+                    lo: f.lo,
+                    hi: f.hi,
+                    ne: f.ne.clone(),
+                    nonneg: f.nonneg,
+                })
+                .collect(),
+            opaque: self.opaque.iter().map(|(&t, &v)| (t, v)).collect(),
+        }
+    }
+
+    /// Rebuild an assumption set from an image whose atom `TermId`s have
+    /// already been relocated into the target pool.
+    ///
+    /// Relocation renumbers terms, which breaks both invariants of the
+    /// canonical [`FormKey`]: atoms sorted by id, and the first (smallest)
+    /// atom's coefficient non-negative. Each form is therefore
+    /// re-canonicalized here — atoms re-sorted, and when the leading
+    /// coefficient turned negative the whole form is negated (`g → -g`,
+    /// so `lo/hi` swap signs and places and the `ne` set negates) — so a
+    /// relocated fact set answers [`Assumptions::check`] exactly like the
+    /// original.
+    pub fn from_image(img: AssumptionsImage) -> Assumptions {
+        let mut out = Assumptions::new();
+        for mut f in img.forms {
+            f.atoms.sort_by_key(|&(t, _)| t);
+            let flip = f.atoms.first().map(|&(_, c)| c < 0).unwrap_or(false);
+            let (lo, hi, ne) = if flip {
+                for a in f.atoms.iter_mut() {
+                    a.1 = -a.1;
+                }
+                (f.hi.map(|v| -v), f.lo.map(|v| -v), f.ne.iter().map(|v| -v).collect())
+            } else {
+                (f.lo, f.hi, f.ne)
+            };
+            out.forms.insert(
+                FormKey(f.atoms),
+                FormFacts {
+                    lo,
+                    hi,
+                    ne,
+                    nonneg: f.nonneg,
+                },
+            );
+        }
+        for (t, v) in img.opaque {
+            out.opaque.insert(t, v);
+        }
+        out
+    }
+}
+
+/// Serializable snapshot of one linear-form fact (see
+/// [`Assumptions::export`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FormImage {
+    /// `(atom, coefficient)` pairs of the canonical linear form.
+    pub atoms: Vec<(TermId, i128)>,
+    pub lo: Option<i128>,
+    pub hi: Option<i128>,
+    pub ne: Vec<i128>,
+    pub nonneg: bool,
+}
+
+/// Serializable snapshot of a whole [`Assumptions`] set.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct AssumptionsImage {
+    pub forms: Vec<FormImage>,
+    pub opaque: Vec<(TermId, bool)>,
 }
 
 fn decide(facts: &FormFacts, kind: CmpKind, rhs: i128) -> Truth {

@@ -287,6 +287,79 @@ impl TermPool {
         &self.nodes[t.0 as usize]
     }
 
+    /// Ordered view of the arena: nodes in interning order, indexed by
+    /// `TermId`. The order is **topological by construction** — a node's
+    /// children are always interned (and therefore listed) before the
+    /// node itself — which is what makes single-pass serialization of a
+    /// term graph possible (see [`crate::sym::persist`]).
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    /// Rebuild hook for the persistence codec: re-intern `node` — whose
+    /// child ids must already be valid in *this* pool — through the smart
+    /// constructors, so a relocated graph is re-hash-consed and
+    /// re-simplified rather than trusted from disk. `Sym`/`Uf` nodes are
+    /// resolved through this pool's local name mirror (names interned via
+    /// [`TermPool::intern_sym`]/[`TermPool::intern_uf`] first). Returns
+    /// `None` for structurally invalid nodes (width mismatches, unknown
+    /// names) that the constructors would only `debug_assert`.
+    pub fn rebuild(&mut self, node: &Node) -> Option<TermId> {
+        let wok = |w: u32| (1..=128).contains(&w);
+        // every child id must resolve in this pool before any width lookup
+        let n = self.nodes.len() as u32;
+        let ok = |t: &TermId| t.0 < n;
+        match node {
+            Node::Const { bits, width } => wok(*width).then(|| self.constant(*bits, *width)),
+            Node::Sym { sym, width } => {
+                if !wok(*width) {
+                    return None;
+                }
+                let name = self.sym_names.get(&sym.0)?.clone();
+                Some(self.symbol(&name, *width))
+            }
+            Node::Uf { func, args, width } => {
+                if !wok(*width) || !args.iter().all(ok) {
+                    return None;
+                }
+                let name = self.uf_names.get(&func.0)?.clone();
+                Some(self.uf(&name, args.clone(), *width))
+            }
+            Node::Bin { op, a, b, width } => (ok(a)
+                && ok(b)
+                && self.width(*a) == *width
+                && self.width(*b) == *width)
+                .then(|| self.bin(*op, *a, *b)),
+            Node::Not { a, width } => {
+                (ok(a) && self.width(*a) == *width).then(|| self.not(*a))
+            }
+            Node::Cmp { kind, a, b } => (ok(a)
+                && ok(b)
+                && self.width(*a) == self.width(*b))
+                .then(|| self.cmp(*kind, *a, *b)),
+            Node::Ite { cond, t, e, width } => (ok(cond)
+                && ok(t)
+                && ok(e)
+                && self.width(*cond) == 1
+                && self.width(*t) == *width
+                && self.width(*e) == *width)
+                .then(|| self.ite(*cond, *t, *e)),
+            Node::SExt { a, from, width } => (ok(a)
+                && self.width(*a) == *from
+                && *width > *from
+                && wok(*width))
+                .then(|| self.sext(*a, *width)),
+            Node::ZExt { a, from, width } => (ok(a)
+                && self.width(*a) == *from
+                && *width > *from
+                && wok(*width))
+                .then(|| self.zext(*a, *width)),
+            Node::Trunc { a, width } => {
+                (ok(a) && *width < self.width(*a) && wok(*width)).then(|| self.trunc(*a, *width))
+            }
+        }
+    }
+
     pub fn width(&self, t: TermId) -> u32 {
         self.node(t).width()
     }

@@ -1,0 +1,161 @@
+//! Little-endian, length-prefixed binary writer/reader — the primitives
+//! every on-disk artifact codec in the crate is built from (the pipeline
+//! store's typed artifact payloads, the `sym::persist` term-graph images,
+//! the simulator's `DecodedKernel` form).
+//!
+//! The reader is *total*: every accessor returns `Option` and a corrupt
+//! or truncated buffer can only ever produce `None`, never a panic or an
+//! attacker-chosen allocation (`len` refuses counts the remaining buffer
+//! cannot possibly hold).
+
+/// Append-only little-endian writer.
+#[derive(Default)]
+pub struct Enc {
+    pub buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    pub fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn i64(&mut self, v: i64) {
+        self.u64(v as u64);
+    }
+    pub fn i128(&mut self, v: i128) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    pub fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+}
+
+/// Bounds-checked little-endian reader over a borrowed buffer.
+pub struct Dec<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(b: &'a [u8]) -> Dec<'a> {
+        Dec { b, i: 0 }
+    }
+    pub fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.i.checked_add(n)?;
+        let s = self.b.get(self.i..end)?;
+        self.i = end;
+        Some(s)
+    }
+    pub fn u8(&mut self) -> Option<u8> {
+        Some(self.take(1)?[0])
+    }
+    pub fn bool(&mut self) -> Option<bool> {
+        match self.u8()? {
+            0 => Some(false),
+            1 => Some(true),
+            _ => None,
+        }
+    }
+    pub fn u32(&mut self) -> Option<u32> {
+        Some(u32::from_le_bytes(self.take(4)?.try_into().ok()?))
+    }
+    pub fn u64(&mut self) -> Option<u64> {
+        Some(u64::from_le_bytes(self.take(8)?.try_into().ok()?))
+    }
+    pub fn i64(&mut self) -> Option<i64> {
+        Some(self.u64()? as i64)
+    }
+    pub fn i128(&mut self) -> Option<i128> {
+        Some(i128::from_le_bytes(self.take(16)?.try_into().ok()?))
+    }
+    pub fn f64(&mut self) -> Option<f64> {
+        Some(f64::from_bits(self.u64()?))
+    }
+    /// A length prefix, refused when the remaining buffer cannot possibly
+    /// hold that many items — a corrupt length must not drive an OOM
+    /// allocation through `Vec::with_capacity`.
+    pub fn len(&mut self) -> Option<usize> {
+        let n = self.u64()?;
+        (n <= (self.b.len() - self.i) as u64).then_some(n as usize)
+    }
+    pub fn str(&mut self) -> Option<&'a str> {
+        let n = self.len()?;
+        std::str::from_utf8(self.take(n)?).ok()
+    }
+    /// Bytes consumed so far.
+    pub fn pos(&self) -> usize {
+        self.i
+    }
+    pub fn done(&self) -> bool {
+        self.i == self.b.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_primitives() {
+        let mut e = Enc::default();
+        e.u8(7);
+        e.bool(true);
+        e.u32(0xDEAD_BEEF);
+        e.u64(u64::MAX - 3);
+        e.i64(-42);
+        e.i128(-(1i128 << 100));
+        e.f64(1.5);
+        e.str("hello");
+        let mut d = Dec::new(&e.buf);
+        assert_eq!(d.u8(), Some(7));
+        assert_eq!(d.bool(), Some(true));
+        assert_eq!(d.u32(), Some(0xDEAD_BEEF));
+        assert_eq!(d.u64(), Some(u64::MAX - 3));
+        assert_eq!(d.i64(), Some(-42));
+        assert_eq!(d.i128(), Some(-(1i128 << 100)));
+        assert_eq!(d.f64(), Some(1.5));
+        assert_eq!(d.str(), Some("hello"));
+        assert!(d.done());
+    }
+
+    #[test]
+    fn truncation_yields_none_not_panic() {
+        let mut e = Enc::default();
+        e.u64(123);
+        e.str("abcdef");
+        for cut in 0..e.buf.len() {
+            let mut d = Dec::new(&e.buf[..cut]);
+            // whatever sequence is attempted, it ends in None
+            let _ = d.u64().and_then(|_| d.str().map(|s| s.len()));
+            assert!(d.pos() <= cut);
+        }
+    }
+
+    #[test]
+    fn oversized_length_is_refused() {
+        let mut e = Enc::default();
+        e.u64(u64::MAX); // absurd length prefix
+        let mut d = Dec::new(&e.buf);
+        assert_eq!(d.len(), None);
+        let mut d2 = Dec::new(&e.buf);
+        assert_eq!(d2.str(), None);
+    }
+
+    #[test]
+    fn bad_bool_is_refused() {
+        let mut d = Dec::new(&[2]);
+        assert_eq!(d.bool(), None);
+    }
+}

@@ -4,8 +4,10 @@
 //! tests run on a hand-rolled xorshift generator. Failures print the seed so
 //! a shrunk case can be replayed with `Rng::new(seed)`.
 
+pub mod codec;
 pub mod rng;
 
+pub use codec::{Dec, Enc};
 pub use rng::Rng;
 
 /// FNV-1a hasher — far cheaper than SipHash for the short register-name

@@ -6,6 +6,9 @@
 
 use ptxasw::coordinator::{report, run_suite_on, BenchResult, PipelineConfig, PipelineError};
 use ptxasw::pipeline::{DiskStore, Pipeline, Stage, DEFAULT_MAX_BYTES};
+use ptxasw::ptx::parser::parse_kernel;
+use ptxasw::shuffle::DetectOpts;
+use ptxasw::sim::SimError;
 use ptxasw::suite::{by_name, Benchmark};
 use std::path::{Path, PathBuf};
 
@@ -98,14 +101,122 @@ fn warm_runs_skip_emulation_and_simulation() {
     let second = unwrap_all(run_suite_on(&p2, &bs, &cfg));
     let s2 = p2.stats();
     assert_eq!(s2.stage_count(Stage::Emulate), 0, "zero emulations on warm run");
+    assert_eq!(s2.stage_count(Stage::Decode), 0, "zero decodes on warm run");
     assert_eq!(s2.stage_count(Stage::Validate), 0, "zero simulations on warm run");
     assert_eq!(s2.stage_count(Stage::Score), 0, "zero model runs on warm run");
     assert_eq!(s2.cache.emulate_misses, 0);
+    assert_eq!(s2.cache.decode_misses, 0);
     assert_eq!(s2.cache.validate_misses, 0);
     assert_eq!(s2.cache.score_misses, 0);
     assert!(s2.cache.disk_hits() > 0, "artifacts must come from disk");
     assert!(s2.disk.hits > 0);
     assert_same_results(&first, &second);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Acceptance for the term-graph codec: a fresh process on a warmed cache
+/// dir performs **zero symbolic emulations and zero decodes** even for
+/// queries that force downstream recomputation — different detection
+/// options re-detect from the *disk-loaded* emulation, a different
+/// workload seed re-simulates from the *disk-loaded* decoded kernels —
+/// and the results are identical to computing everything fresh (the
+/// system-level eval-agreement differential).
+#[test]
+fn unseen_queries_reuse_emulated_and_decoded_artifacts() {
+    let dir = tmpdir("reloc");
+    let bs = benches();
+
+    let p1 = Pipeline::new().with_disk(DiskStore::open(&dir, DEFAULT_MAX_BYTES).unwrap());
+    unwrap_all(run_suite_on(&p1, &bs, &PipelineConfig::default()));
+    assert!(p1.stats().disk.stores > 0, "cold run must persist artifacts");
+
+    // fresh process, new detection options + new workload seed: every
+    // kernel-keyed downstream stage misses, but emulation and decoding
+    // must be served from the relocatable disk images
+    let warm_cfg = PipelineConfig {
+        seed: 43,
+        detect: DetectOpts {
+            max_abs_delta: 30,
+            ..DetectOpts::default()
+        },
+        ..PipelineConfig::default()
+    };
+    let p2 = Pipeline::new().with_disk(DiskStore::open(&dir, DEFAULT_MAX_BYTES).unwrap());
+    let from_disk = unwrap_all(run_suite_on(&p2, &bs, &warm_cfg));
+    let s2 = p2.stats();
+    assert!(s2.cache.detect_misses > 0, "new opts must re-detect");
+    assert!(s2.cache.validate_misses > 0, "new seed must re-simulate");
+    assert_eq!(s2.stage_count(Stage::Emulate), 0, "zero symbolic emulations");
+    assert_eq!(s2.stage_count(Stage::Decode), 0, "zero decodes");
+    assert!(
+        s2.cache.emulate_disk_hits >= bs.len() as u64,
+        "every emulation must come from disk (got {})",
+        s2.cache.emulate_disk_hits
+    );
+    assert!(
+        s2.cache.decode_disk_hits > 0,
+        "decoded kernels must come from disk"
+    );
+
+    // semantically identical to a cache-less computation of the same query
+    let clean = unwrap_all(run_suite_on(&Pipeline::new(), &bs, &warm_cfg));
+    assert_same_results(&clean, &from_disk);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `--detect-races` runs must neither consume nor produce `validated/`
+/// disk artifacts: a verdict simulated without the load-side shadow must
+/// not satisfy a diagnostic query.
+#[test]
+fn detect_races_bypasses_the_validated_disk_cache() {
+    // every block stores out[ctaid] then reads out[0] — a cross-block
+    // read-after-write on any multi-block grid
+    const RACY: &str = r#"
+.visible .entry racy(.param .u64 out){
+.reg .b32 %r<4>; .reg .b64 %rd<6>;
+ld.param.u64 %rd1, [out];
+cvta.to.global.u64 %rd2, %rd1;
+mov.u32 %r1, %ctaid.x;
+mul.wide.s32 %rd3, %r1, 4;
+add.s64 %rd4, %rd2, %rd3;
+st.global.b32 [%rd4], %r1;
+ld.global.b32 %r2, [%rd2];
+ret;
+}
+"#;
+    let dir = tmpdir("races");
+    let b = by_name("vecadd").unwrap();
+    let sizes = (96, 8, 1);
+    let racy = parse_kernel(RACY).unwrap();
+
+    // a normal pipeline validates the racy kernel fine and persists it
+    let p1 = Pipeline::new().with_disk(DiskStore::open(&dir, DEFAULT_MAX_BYTES).unwrap());
+    let w1 = p1.workload_art(&b, sizes, 42);
+    let parsed1 = p1.intake(racy.clone());
+    p1.validated(&parsed1.kernel, parsed1.hash, &w1, None)
+        .expect("diagnostic off: the racy kernel simulates fine");
+    assert!(p1.stats().disk.stores > 0);
+
+    // a diagnostic pipeline over the same dir must not serve the cached
+    // verdict — the race is a hard error
+    let p2 = Pipeline::new()
+        .with_disk(DiskStore::open(&dir, DEFAULT_MAX_BYTES).unwrap())
+        .with_detect_races(true);
+    let w2 = p2.workload_art(&b, sizes, 42);
+    let parsed2 = p2.intake(racy);
+    let err = p2
+        .validated(&parsed2.kernel, parsed2.hash, &w2, None)
+        .expect_err("diagnostic on: the cached verdict must not mask the race");
+    assert!(
+        matches!(err, SimError::CrossBlockRace { .. }),
+        "expected CrossBlockRace, got {err:?}"
+    );
+    // ...and the diagnostic run must not have written a validated
+    // artifact either (its only store traffic could be decode/emulate
+    // images, which were already present)
+    assert_eq!(p2.stats().disk.stores, 0, "diagnostic runs never persist verdicts");
 
     let _ = std::fs::remove_dir_all(&dir);
 }
