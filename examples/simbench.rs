@@ -1,17 +1,26 @@
 //! `simbench` — simulator throughput benchmark (warp-steps/sec).
 //!
-//! Runs every KernelGen suite benchmark through the three simulator
-//! configurations — the reference AST walker, the decoded micro-op engine
-//! serial, and the decoded engine with one worker per CPU — measuring the
-//! best-of-N wall time each, and emits `BENCH_3.json` with per-benchmark
-//! numbers and suite aggregates. The headline metric is warp-level
-//! instruction issues per second (`warp-steps/sec`); the acceptance bar
-//! for this trajectory is decoded ≥ 3× reference on the suite aggregate.
+//! Runs a benchmark family through the three simulator configurations —
+//! the reference AST walker, the decoded micro-op engine serial, and the
+//! decoded engine with one worker per CPU — measuring the best-of-N wall
+//! time each, and emits a JSON report with per-benchmark numbers and
+//! aggregates. The headline metric is warp-level instruction issues per
+//! second (`warp-steps/sec`).
+//!
+//! Families: `--family table2` (default) is the classic KernelGen suite
+//! (`BENCH_3.json`, barrier-free — the cooperative scheduler degenerates
+//! to the old serialized warp order here, so this doubles as its
+//! no-regression gate); `--family shared` is the shared-memory/barrier
+//! family opened by the cooperative scheduler (`BENCH_5.json` — every
+//! run exercises real `bar.sync` suspend/resume); `--family all` runs
+//! both.
 //!
 //! The run doubles as a correctness gate: every engine's output image is
-//! compared bit-for-bit before a timing is accepted.
+//! compared bit-for-bit before a timing is accepted, and the shared
+//! family additionally asserts barrier phases actually happened.
 //!
-//!     cargo run --release --example simbench -- [--out FILE] [--repeat N]
+//!     cargo run --release --example simbench -- [--family table2|shared|all]
+//!                                               [--out FILE] [--repeat N]
 //!                                               [--sim-threads N]
 
 use ptxasw::cli::Args;
@@ -45,7 +54,21 @@ fn best_of<T>(repeat: usize, mut f: impl FnMut() -> T) -> (f64, T) {
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
-    let out_path = args.opt("out").unwrap_or("BENCH_3.json").to_string();
+    let family = args.opt("family").unwrap_or("table2").to_string();
+    let (benches, bench_id, default_out) = match family.as_str() {
+        "table2" => (suite::suite(), "BENCH_3", "BENCH_3.json"),
+        "shared" => (suite::shared_suite(), "BENCH_5", "BENCH_5.json"),
+        "all" => {
+            let mut v = suite::suite();
+            v.extend(suite::shared_suite());
+            (v, "BENCH_3+5", "BENCH_ALL.json")
+        }
+        other => {
+            eprintln!("simbench: unknown --family `{other}` (table2|shared|all)");
+            std::process::exit(2);
+        }
+    };
+    let out_path = args.opt("out").unwrap_or(default_out).to_string();
     let repeat = args.opt_usize("repeat", 3).unwrap_or(3);
     let par_threads = args
         .opt_usize(
@@ -56,10 +79,14 @@ fn main() {
         .max(2);
 
     let mut rows = Vec::new();
-    for b in suite::suite() {
+    for b in benches {
         let (nx, ny, nz) = sim_sizes(&b);
         let w = suite::workload(&b, nx, ny, nz, 42);
         let cfg = w.cfg.clone(); // no trace: measure the pure interpreter
+        let barrier_family = matches!(
+            b.pattern,
+            suite::Pattern::TiledReduce { .. } | suite::Pattern::SharedStencil { .. }
+        );
 
         let t0 = Instant::now();
         let dk = decode(&w.kernel).expect("decode");
@@ -78,6 +105,19 @@ fn main() {
 
         check_agree(b.name, &r_ref, &r_dec, "decoded");
         check_agree(b.name, &r_ref, &r_par, "parallel");
+        if barrier_family {
+            assert!(
+                r_ref.stats.barrier_phases > 0,
+                "{}: the barrier family must cross barrier phases",
+                b.name
+            );
+        }
+        let out = r_ref.mem.read_f32s(w.out_ptr, w.out_len).expect("read output");
+        assert!(
+            out.iter().zip(&w.expected).all(|(a, e)| a.to_bits() == e.to_bits()),
+            "{}: output diverged from the CPU reference",
+            b.name
+        );
 
         rows.push(Row {
             name: b.name,
@@ -102,7 +142,8 @@ fn main() {
 
     let mut json = String::new();
     writeln!(json, "{{").unwrap();
-    writeln!(json, "  \"bench_id\": \"BENCH_3\",").unwrap();
+    writeln!(json, "  \"bench_id\": \"{bench_id}\",").unwrap();
+    writeln!(json, "  \"family\": \"{family}\",").unwrap();
     writeln!(json, "  \"unit\": \"warp-steps/sec\",").unwrap();
     writeln!(json, "  \"repeat\": {repeat},").unwrap();
     writeln!(json, "  \"parallel_threads\": {par_threads},").unwrap();
@@ -152,8 +193,11 @@ fn main() {
     writeln!(json, "  \"geomean_speedup_parallel\": {gm_par:.3}").unwrap();
     writeln!(json, "}}").unwrap();
 
-    std::fs::write(&out_path, &json).expect("write BENCH_3.json");
-    eprintln!("simbench: {} benchmarks, {total_steps} warp-steps", rows.len());
+    std::fs::write(&out_path, &json).expect("write benchmark json");
+    eprintln!(
+        "simbench [{family}]: {} benchmarks, {total_steps} warp-steps",
+        rows.len()
+    );
     eprintln!(
         "  reference {:>12.0} warp-steps/s",
         total_steps as f64 / total_ref

@@ -53,6 +53,7 @@ impl Args {
                 | "stats"
                 | "no-disk-cache"
                 | "detect-races"
+                | "shared"
         )
     }
 

@@ -155,6 +155,10 @@ pub fn sim_sizes(b: &Benchmark) -> (usize, usize, usize) {
     match &b.pattern {
         Pattern::MatMul { .. } => (48, 6, 8),
         Pattern::MatVec { .. } => (96, 1, 3),
+        // nx = thread blocks (each `block` threads wide — multi-warp, so
+        // the cooperative barrier scheduler is exercised across blocks)
+        Pattern::TiledReduce { .. } => (6, 1, 1),
+        Pattern::SharedStencil { .. } => (5, 1, 1),
         _ if b.dims == 3 => (40, 10, 8),
         _ => (96, 8, 1),
     }

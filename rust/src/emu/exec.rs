@@ -153,6 +153,7 @@ impl<'k> Emu<'k> {
                         space: *space,
                         nc: *nc,
                         segment: flow.segment,
+                        phase: flow.phase,
                         guarded: guard.is_some(),
                         valid: true,
                     });
@@ -176,6 +177,7 @@ impl<'k> Emu<'k> {
                         ty: *ty,
                         space: *space,
                         segment: flow.segment,
+                        phase: flow.phase,
                     },
                 );
                 if !killed.is_empty() {
@@ -415,7 +417,12 @@ impl<'k> Emu<'k> {
                 self.write(flow, dst, v, guard);
             }
             Op::BarSync { .. } => {
+                // phase boundary: loads/stores on the two sides must never
+                // be paired by the detector. A symbolically-guarded barrier
+                // still bumps the phase — splitting a legal pair is safe,
+                // merging across a possible barrier is not.
                 self.stats.barriers += 1;
+                flow.phase += 1;
             }
             Op::Bra { .. } | Op::Ret | Op::Exit => {
                 unreachable!("control flow handled by the driver")

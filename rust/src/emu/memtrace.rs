@@ -90,6 +90,10 @@ pub struct LoadRec {
     /// Straight-line segment id within the flow (§5.1: shuffles are only
     /// detected between loads of the same straight-line region).
     pub segment: u32,
+    /// Barrier phase id within the flow: loads separated by a `bar.sync`
+    /// must never be paired (the exchange happens through memory at the
+    /// barrier, so a shuffle across it is illegal).
+    pub phase: u32,
     /// Guard was symbolic (predicated load) — excluded from shuffle pairing.
     pub guarded: bool,
     /// Still valid (not overwritten by a later may-aliasing store).
@@ -105,6 +109,8 @@ pub struct StoreRec {
     pub ty: Type,
     pub space: Space,
     pub segment: u32,
+    /// Barrier phase id (see [`LoadRec::phase`]).
+    pub phase: u32,
 }
 
 /// The memory trace of a single execution flow.
@@ -174,6 +180,7 @@ impl MemTrace {
             e.u8(space_tag(l.space));
             e.bool(l.nc);
             e.u32(l.segment);
+            e.u32(l.phase);
             e.bool(l.guarded);
             e.bool(l.valid);
         }
@@ -185,6 +192,7 @@ impl MemTrace {
             e.u8(type_tag(s.ty));
             e.u8(space_tag(s.space));
             e.u32(s.segment);
+            e.u32(s.phase);
         }
     }
 
@@ -205,6 +213,7 @@ impl MemTrace {
                 space: space_from_tag(d.u8()?)?,
                 nc: d.bool()?,
                 segment: d.u32()?,
+                phase: d.u32()?,
                 guarded: d.bool()?,
                 valid: d.bool()?,
             });
@@ -219,6 +228,7 @@ impl MemTrace {
                 ty: type_from_tag(d.u8()?)?,
                 space: space_from_tag(d.u8()?)?,
                 segment: d.u32()?,
+                phase: d.u32()?,
             });
         }
         Some(MemTrace { loads, stores })
@@ -251,6 +261,7 @@ mod tests {
             space: Space::Global,
             nc,
             segment: 0,
+            phase: 0,
             guarded: false,
             valid: true,
         }
@@ -275,6 +286,7 @@ mod tests {
                 ty: Type::F32,
                 space: Space::Global,
                 segment: 0,
+                phase: 0,
             },
         );
         assert_eq!(killed, vec![lv]);
@@ -298,6 +310,7 @@ mod tests {
                 ty: Type::F32,
                 space: Space::Global,
                 segment: 0,
+                phase: 0,
             },
         );
         assert!(killed.is_empty());
@@ -321,6 +334,7 @@ mod tests {
                 ty: Type::F32,
                 space: Space::Global,
                 segment: 0,
+                phase: 0,
             },
         );
         assert!(killed.is_empty());
@@ -344,6 +358,7 @@ mod tests {
                 ty: Type::F32,
                 space: Space::Global,
                 segment: 0,
+                phase: 0,
             },
         );
         assert_eq!(killed.len(), 1);
@@ -365,6 +380,7 @@ mod tests {
                 ty: Type::F32,
                 space: Space::Shared,
                 segment: 0,
+                phase: 0,
             },
         );
         assert!(killed.is_empty());

@@ -137,6 +137,11 @@ pub struct Flow {
     /// Straight-line segment id; bumped at every label and branch so the
     /// detector only pairs loads that sit in the same straight-line region.
     pub segment: u32,
+    /// Barrier phase id; bumped at every `bar.sync` so the detector only
+    /// pairs loads separated by no block-wide barrier — a shuffle may not
+    /// move a value across a barrier, the warps' values are exchanged
+    /// through memory there.
+    pub phase: u32,
     /// Loop headers this flow has entered (header stmt → entry count).
     pub entered_loops: HashMap<usize, u32>,
     pub steps: u64,
@@ -258,6 +263,7 @@ impl<'k> Emu<'k> {
             trace: MemTrace::default(),
             pc: 0,
             segment: 0,
+            phase: 0,
             entered_loops: HashMap::new(),
             steps: 0,
         };

@@ -28,14 +28,20 @@ ptxasw — symbolic emulator + shuffle synthesis for NVIDIA PTX
 USAGE:
   ptxasw asm <in.ptx> [--out FILE] [--variant full|noload|nocorner|uniform]
              [--max-delta N] [--report] [--stats] [cache flags]
-  ptxasw suite [bench...] [--arch NAME] [--threads N] [--sim-threads N]
-             [--max-delta N] [--fig3 bench] [--stats] [cache flags]
+  ptxasw suite [bench...] [--shared] [--arch NAME] [--threads N]
+             [--sim-threads N] [--max-delta N] [--fig3 bench] [--stats]
+             [cache flags]
   ptxasw apps [--threads N] [--sim-threads N] [--stats] [cache flags]
   ptxasw artifacts [--dir DIR] [--run NAME]
   ptxasw help
 
   --stats           print pipeline cache hit rates (memory + disk) and
                     per-stage wall time
+  --shared          suite: also run the shared-memory/barrier benchmark
+                    family (tiledreduce, sharedstencil) — kernels that
+                    stage data through .shared and synchronize warps with
+                    bar.sync on the cooperative scheduler; both are also
+                    addressable by name
   --sim-threads N   worker threads inside each simulation (blocks of the
                     grid run in parallel; results are bit-identical for
                     any N). Default 1 — the suite already parallelizes
@@ -189,7 +195,7 @@ fn cmd_suite(args: &Args) -> Result<(), String> {
         archs,
         ..base
     };
-    let benches: Vec<_> = if args.positional.is_empty() {
+    let mut benches: Vec<_> = if args.positional.is_empty() {
         suite::suite()
     } else {
         args.positional
@@ -197,6 +203,14 @@ fn cmd_suite(args: &Args) -> Result<(), String> {
             .map(|n| suite::by_name(n).ok_or(format!("unknown benchmark `{n}`")))
             .collect::<Result<_, _>>()?
     };
+    if args.flag("shared") {
+        // append only benchmarks not already named positionally
+        for b in suite::shared_suite() {
+            if !benches.iter().any(|x| x.name == b.name) {
+                benches.push(b);
+            }
+        }
+    }
     let p = build_pipeline(args)?;
     let results = run_suite_on(&p, &benches, &cfg);
     let ok: Vec<_> = results

@@ -52,7 +52,10 @@ use std::time::{Duration, SystemTime};
 /// v2: `SimStats` grew `cross_block_write_conflicts`.
 /// v3: new `emulated/` (relocatable term-graph images) and `decoded/`
 /// (micro-op kernel) artifact kinds.
-pub const STORE_VERSION: u32 = 3;
+/// v4: `SimStats` grew the barrier counters, memory-trace records carry
+/// the barrier phase, and the decoded form carries branch statement
+/// positions (`nstmts`, `Bra::target_stmt`, `BarSync` id/cnt).
+pub const STORE_VERSION: u32 = 4;
 const MAGIC: [u8; 4] = *b"RPST";
 /// Default resident-set bound: 256 MiB.
 pub const DEFAULT_MAX_BYTES: u64 = 256 * 1024 * 1024;
@@ -565,6 +568,8 @@ pub(crate) fn encode_validated(a: &Validated) -> Vec<u8> {
         s.divergent_branches,
         s.uninit_reads,
         s.cross_block_write_conflicts,
+        s.barriers,
+        s.barrier_phases,
     ] {
         e.u64(v);
     }
@@ -606,6 +611,8 @@ pub(crate) fn decode_validated(bytes: &[u8]) -> Option<Validated> {
         divergent_branches: d.u64()?,
         uninit_reads: d.u64()?,
         cross_block_write_conflicts: d.u64()?,
+        barriers: d.u64()?,
+        barrier_phases: d.u64()?,
     };
     let nwarps = d.len()?;
     let mut trace = Vec::with_capacity(nwarps);

@@ -500,8 +500,11 @@ pub enum Op {
     },
     /// `activemask.b32 dst;`
     Activemask { dst: Reg },
-    /// `bar.sync id;`
-    BarSync { id: u32 },
+    /// `bar.sync id [, cnt];` — block-wide barrier. `cnt` is the optional
+    /// participating-thread count; the simulator accepts it only when it
+    /// names the launched block exactly (partial-block barriers are out of
+    /// scope for the cooperative scheduler).
+    BarSync { id: u32, cnt: Option<u32> },
     /// `ret;`
     Ret,
     /// `exit;` (alias of ret for kernels)

@@ -640,11 +640,36 @@ impl Parser {
                 Ok(Op::Activemask { dst })
             }
             "bar" | "barrier" => {
+                // full form: `bar.sync id [, cnt]` — the optional second
+                // operand is the participating-thread count
                 let id = match self.peek() {
                     Some(Tok::Int(_)) => self.int()? as u32,
                     _ => 0,
                 };
-                Ok(Op::BarSync { id })
+                let cnt = if self.eat(&Tok::Comma) {
+                    match self.peek() {
+                        Some(Tok::Int(_)) => {
+                            let c = self.int()?;
+                            if c <= 0 || c > 1024 || c % 32 != 0 {
+                                return Err(self.err(format!(
+                                    "bar.sync thread count {c} is not a positive \
+                                     multiple of the warp size (32) up to 1024"
+                                )));
+                            }
+                            Some(c as u32)
+                        }
+                        other => {
+                            return Err(self.err(format!(
+                                "bar.sync thread count must be an immediate \
+                                 integer, got `{other:?}` (register counts are \
+                                 unsupported)"
+                            )))
+                        }
+                    }
+                } else {
+                    None
+                };
+                Ok(Op::BarSync { id, cnt })
             }
             "ret" => Ok(Op::Ret),
             "exit" => Ok(Op::Exit),
@@ -823,5 +848,53 @@ ret;
             })
             .collect();
         assert_eq!(cvts, vec![(Type::F32, Type::S32), (Type::U64, Type::U32)]);
+    }
+
+    #[test]
+    fn bar_sync_full_form() {
+        let src = r#"
+.visible .entry k(.param .u64 a){
+.reg .b32 %r<2>;
+bar.sync 0;
+bar.sync 1, 64;
+bar.sync 2, 1024;
+ret;
+}
+"#;
+        let k = parse_kernel(src).unwrap();
+        let bars: Vec<_> = k
+            .body
+            .iter()
+            .filter_map(|s| match s {
+                Statement::Instr {
+                    op: Op::BarSync { id, cnt },
+                    ..
+                } => Some((*id, *cnt)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(bars, vec![(0, None), (1, Some(64)), (2, Some(1024))]);
+    }
+
+    #[test]
+    fn bar_sync_bad_counts_are_clear_parse_errors() {
+        const HDR: &str = ".visible .entry k(){ .reg .b32 %r<2>; ";
+        for (cnt, why) in [("48", "multiple"), ("0", "multiple"), ("2048", "multiple")] {
+            let src = format!("{HDR}bar.sync 0, {cnt}; ret; }}");
+            let err = parse(&src).unwrap_err();
+            assert!(
+                err.msg.contains("thread count") && err.msg.contains(why),
+                "cnt {cnt}: unexpected message `{}`",
+                err.msg
+            );
+        }
+        // a register count is rejected with its own message, not a stray
+        // token error further down the line
+        let err = parse(&format!("{HDR}bar.sync 0, %r1; ret; }}")).unwrap_err();
+        assert!(
+            err.msg.contains("immediate"),
+            "unexpected message `{}`",
+            err.msg
+        );
     }
 }

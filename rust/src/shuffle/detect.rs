@@ -129,6 +129,12 @@ pub fn detect(kernel: &Kernel, res: &EmulationResult, opts: DetectOpts) -> Detec
                 if a.stmt == b.stmt || a.segment != b.segment {
                     continue;
                 }
+                if a.phase != b.phase {
+                    // a `bar.sync` separates the two loads: the values are
+                    // exchanged through memory at the barrier, so covering
+                    // one load with a shuffle of the other is illegal
+                    continue;
+                }
                 if a.ty != b.ty || a.space != b.space {
                     continue;
                 }

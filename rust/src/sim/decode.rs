@@ -62,12 +62,17 @@ pub struct Daddr {
 /// `w`/`mask` fields are the pre-resolved operand widths/masks.
 #[derive(Debug, Clone)]
 pub enum Uop {
-    /// `bra` with the target resolved to a micro-op index.
-    Bra { target: u32 },
+    /// `bra` with the target resolved to a micro-op index. `target_stmt`
+    /// is the statement index of the targeted *label* — the executor's
+    /// per-lane statement positions (exact `max_warp_steps` accounting)
+    /// restart there, so a branch into the middle of a label run charges
+    /// only the labels actually traversed.
+    Bra { target: u32, target_stmt: u32 },
     /// `ret` / `exit`.
     Ret,
-    /// `bar.sync` — warps run serialized, still a no-op.
-    BarSync,
+    /// `bar.sync id [, cnt]` — suspends the warp until every warp of the
+    /// block arrives (cooperative scheduler). `cnt` 0 = no explicit count.
+    BarSync { id: u32, cnt: u32 },
     Shfl {
         mode: ShflMode,
         dst: u32,
@@ -205,6 +210,10 @@ pub struct DecodedKernel {
     pub nregs: u32,
     /// Per-block shared-memory window size in bytes.
     pub shared_size: u64,
+    /// Kernel-body statement count (labels included) — the upper bound of
+    /// the statement side table, used to charge trailing-label visits in
+    /// the executor's step accounting.
+    pub nstmts: u32,
     /// Parameter names in declaration order, for launch-time
     /// missing-value errors.
     pub param_names: Vec<String>,
@@ -230,6 +239,7 @@ impl DecodedKernel {
         let mut e = Enc::default();
         e.u32(self.nregs);
         e.u64(self.shared_size);
+        e.u32(self.nstmts);
         e.u64(self.param_names.len() as u64);
         for p in &self.param_names {
             e.str(p);
@@ -259,6 +269,7 @@ impl DecodedKernel {
         let mut d = Dec::new(bytes);
         let nregs = d.u32()?;
         let shared_size = d.u64()?;
+        let nstmts = d.u32()?;
         let nparams = d.len()?;
         let mut param_names = Vec::with_capacity(nparams);
         for _ in 0..nparams {
@@ -287,6 +298,7 @@ impl DecodedKernel {
         let dk = DecodedKernel {
             nregs,
             shared_size,
+            nstmts,
             param_names,
             uops,
         };
@@ -294,7 +306,10 @@ impl DecodedKernel {
     }
 
     /// Structural invariants the executor relies on (indexes without
-    /// bounds checks).
+    /// bounds checks). The statement side table must fit `nstmts` and
+    /// branch statement positions must not exceed the targeted micro-op's
+    /// statement — the step accounting computes `stmt - stmt_pos` gaps
+    /// without underflow checks.
     fn validate(&self) -> bool {
         let nuops = self.uops.len() as u32;
         let slot_ok = |s: u32| s < self.nregs;
@@ -304,11 +319,21 @@ impl DecodedKernel {
         };
         let addr_ok = |a: &Daddr| dop_ok(&a.base);
         let bytes_ok = |b: u32| (1..=8).contains(&b);
+        if self.uops.last().map(|u| u.stmt >= self.nstmts).unwrap_or(false) {
+            return false;
+        }
         self.uops.iter().all(|u| {
             u.guard.map(|(s, _)| slot_ok(s)).unwrap_or(true)
                 && match &u.op {
-                    Uop::Bra { target } => *target <= nuops,
-                    Uop::Ret | Uop::BarSync => true,
+                    Uop::Bra { target, target_stmt } => {
+                        let bound = if *target < nuops {
+                            self.uops[*target as usize].stmt
+                        } else {
+                            self.nstmts
+                        };
+                        *target <= nuops && *target_stmt <= bound
+                    }
+                    Uop::Ret | Uop::BarSync { .. } => true,
                     Uop::Shfl { dst, pred_out, src, b, c, mask, .. } => {
                         slot_ok(*dst)
                             && pred_out.map(slot_ok).unwrap_or(true)
@@ -528,12 +553,17 @@ fn dec_addr(d: &mut Dec) -> Option<Daddr> {
 
 fn enc_uop(e: &mut Enc, op: &Uop) {
     match op {
-        Uop::Bra { target } => {
+        Uop::Bra { target, target_stmt } => {
             e.u8(0);
             e.u32(*target);
+            e.u32(*target_stmt);
         }
         Uop::Ret => e.u8(1),
-        Uop::BarSync => e.u8(2),
+        Uop::BarSync { id, cnt } => {
+            e.u8(2);
+            e.u32(*id);
+            e.u32(*cnt);
+        }
         Uop::Shfl { mode, dst, pred_out, src, b, c, mask } => {
             e.u8(3);
             e.u8(shfl_tag(*mode));
@@ -692,9 +722,15 @@ fn enc_uop(e: &mut Enc, op: &Uop) {
 
 fn dec_uop(d: &mut Dec) -> Option<Uop> {
     Some(match d.u8()? {
-        0 => Uop::Bra { target: d.u32()? },
+        0 => Uop::Bra {
+            target: d.u32()?,
+            target_stmt: d.u32()?,
+        },
         1 => Uop::Ret,
-        2 => Uop::BarSync,
+        2 => Uop::BarSync {
+            id: d.u32()?,
+            cnt: d.u32()?,
+        },
         3 => {
             let mode = shfl_from_tag(d.u8()?)?;
             let dst = d.u32()?;
@@ -892,15 +928,22 @@ impl<'a> Decoder<'a> {
     fn op(
         &mut self,
         op: &Op,
-        branch_target: impl Fn(&str) -> Option<u32>,
+        branch_target: impl Fn(&str) -> Option<(u32, u32)>,
     ) -> Result<Uop, SimError> {
         Ok(match op {
-            Op::Bra { target, .. } => Uop::Bra {
-                target: branch_target(target)
-                    .ok_or_else(|| SimError::UnknownLabel(target.clone()))?,
-            },
+            Op::Bra { target, .. } => {
+                let (target, target_stmt) = branch_target(target)
+                    .ok_or_else(|| SimError::UnknownLabel(target.clone()))?;
+                Uop::Bra {
+                    target,
+                    target_stmt,
+                }
+            }
             Op::Ret | Op::Exit => Uop::Ret,
-            Op::BarSync { .. } => Uop::BarSync,
+            Op::BarSync { id, cnt } => Uop::BarSync {
+                id: *id,
+                cnt: cnt.unwrap_or(0),
+            },
             Op::Shfl { mode, dst, pred_out, src, b, c, mask } => Uop::Shfl {
                 mode: *mode,
                 dst: self.slot(dst),
@@ -1083,10 +1126,15 @@ pub fn decode(kernel: &Kernel) -> Result<DecodedKernel, SimError> {
     }
     stmt_to_uop.push(n); // branch past the end = retire
 
-    let mut labels: std::collections::HashMap<&str, u32> = std::collections::HashMap::new();
+    // label → (first micro-op at or after it, the label's own statement
+    // index). The statement index is where a branching lane's statement
+    // position restarts, so label runs are charged from the *targeted*
+    // label, not the run's first label.
+    let mut labels: std::collections::HashMap<&str, (u32, u32)> =
+        std::collections::HashMap::new();
     for (i, st) in kernel.body.iter().enumerate() {
         if let Statement::Label(l) = st {
-            labels.insert(l.as_str(), stmt_to_uop[i]);
+            labels.insert(l.as_str(), (stmt_to_uop[i], i as u32));
         }
     }
 
@@ -1112,6 +1160,7 @@ pub fn decode(kernel: &Kernel) -> Result<DecodedKernel, SimError> {
     Ok(DecodedKernel {
         nregs: d.regs.len() as u32,
         shared_size,
+        nstmts: kernel.body.len() as u32,
         param_names: kernel.params.iter().map(|p| p.name.clone()).collect(),
         uops,
     })
@@ -1144,11 +1193,17 @@ $EXIT: ret;
         let dk = decode(&k).unwrap();
         // 11 body statements, one of which is the `$EXIT` label
         assert_eq!(dk.uops.len(), 10);
-        // the guarded bra is uop 5 and must target the final ret (uop 9)
-        let Uop::Bra { target } = &dk.uops[5].op else {
+        // the guarded bra is uop 5 and must target the final ret (uop 9);
+        // its statement position restarts at the `$EXIT` label (stmt 9)
+        let Uop::Bra {
+            target,
+            target_stmt,
+        } = &dk.uops[5].op
+        else {
             panic!("uop 5 is {:?}", dk.uops[5].op)
         };
-        assert_eq!(*target, 9);
+        assert_eq!((*target, *target_stmt), (9, 9));
+        assert_eq!(dk.nstmts, 11);
         // the guard predicate is pre-interned, non-negated
         let (gslot, negated) = dk.uops[5].guard.expect("bra is guarded");
         assert!(!negated);

@@ -30,6 +30,18 @@
 //! as in the serial engine) and are surfaced in
 //! [`SimStats::cross_block_write_conflicts`].
 //!
+//! # Cooperative warp scheduling
+//!
+//! Within a block, warps advance in barrier-delimited *phases* (see
+//! [`super::machine`] for the semantics): the scheduler swaps each
+//! warp's struct-of-arrays state in and out of the worker's hot-loop
+//! fields (`Vec` swaps are pointer moves) and runs it until it retires
+//! or converges on a `bar.sync`, suspending and resuming at micro-op
+//! granularity. Barrier-free kernels degenerate to the old serialized
+//! warp order, so nothing changes for them; barrier violations are hard
+//! [`SimError::BarrierDivergence`] errors with the same taxonomy and
+//! schedule as the reference engine.
+//!
 //! # Fidelity
 //!
 //! Observable behaviour — final [`GlobalMem`], [`SimStats`], and the
@@ -39,18 +51,15 @@
 //! two engines (serial and parallel) to that. The only intentional
 //! deviation: static name/label errors surface at decode time rather
 //! than first execution. The `max_warp_steps` budget counts kernel-body
-//! *statements* (labels included), reconstructed from the uop→statement
-//! side table: each micro-op issue is charged the statement gap to the
-//! preceding micro-op — exactly the erased labels the issuing group
-//! stepped past. Charging at issue (not at advance) is what keeps the
-//! count identical to the reference engine when divergent lane groups
-//! merge at a label (the reference pays one label visit for the merged
-//! group; the merged group issues the following micro-op once). The two
-//! engines therefore trip the limit on the same kernels for every
-//! program in which each branch targets the first label of a label run
-//! and no label trails the last instruction — i.e. all compiler- and
-//! suite-emitted PTX; degenerate consecutive-label or trailing-label
-//! programs can differ by at most the label-run length per visit.
+//! *statements* (labels included), tracked as a per-lane statement
+//! position: a lane's position restarts at the statement after each
+//! issued instruction, or at the *targeted label* on a taken branch, and
+//! each issue charges the gap from the issuing group's earliest position
+//! to the instruction — exactly the label visits the reference engine
+//! pays, including branches into the middle of consecutive-label runs
+//! and trailing labels at body end (charged at retire). The accounting
+//! is exact for **every** program, so the two engines trip the limit on
+//! identical step counts always.
 //!
 //! With [`SimConfig::detect_races`] set, grid execution is forced serial
 //! and every global load probes the last-writer shadow: a block reading
@@ -60,9 +69,10 @@
 
 use super::decode::{Daddr, DecodedKernel, Dop, Uop};
 use super::machine::{
-    convert, f32_bin, f32_un, f64_bin, f64_un, flt_cmp, linear_to_tid, mul_full, mul_hi,
-    shared_window_offset, shfl_source_lane, special_value, width_mask, SimConfig, SimError,
-    SimResult, SimStats, WarpEvent, WriteShadow,
+    barrier_release, convert, f32_bin, f32_un, f64_bin, f64_un, flt_cmp, linear_to_tid,
+    mul_full, mul_hi, shared_window_offset, shfl_source_lane, special_value, width_mask,
+    BarrierCause, PhaseShadow, SimConfig, SimError, SimResult, SimStats, WarpEvent, WarpHalt,
+    WarpStatus, WriteShadow,
 };
 use super::memory::GlobalMem;
 use crate::coordinator::queue::WorkQueue;
@@ -137,6 +147,7 @@ pub fn run_decoded(
         wk.direct = true;
         // conflicts are impossible on a single-block grid — skip the shadow
         wk.shadow = (nblocks > 1).then(|| WriteShadow::new(&wk.mem));
+        wk.phase_shadow = cfg.detect_races.then(|| PhaseShadow::new(&wk.mem));
         let mut stats = SimStats::default();
         let mut trace = Vec::new();
         for b in 0..nblocks {
@@ -227,6 +238,8 @@ fn accumulate(dst: &mut SimStats, s: &SimStats) {
         divergent_branches,
         uninit_reads,
         cross_block_write_conflicts,
+        barriers,
+        barrier_phases,
     } = *s;
     dst.warp_instructions += warp_instructions;
     dst.thread_instructions += thread_instructions;
@@ -239,6 +252,8 @@ fn accumulate(dst: &mut SimStats, s: &SimStats) {
     dst.divergent_branches += divergent_branches;
     dst.uninit_reads += uninit_reads;
     dst.cross_block_write_conflicts += cross_block_write_conflicts;
+    dst.barriers += barriers;
+    dst.barrier_phases += barrier_phases;
 }
 
 /// Serial launch order: `bx` fastest, then `by`, then `bz`.
@@ -251,8 +266,39 @@ fn block_coord(idx: usize, grid: (u32, u32, u32)) -> (u32, u32, u32) {
     )
 }
 
+/// Suspended state of one warp of the current block. The scheduler swaps
+/// a slot into the worker's hot-loop fields for each scheduling slice
+/// (`Vec` swaps are pointer moves, the arrays are 32 elements), so the
+/// executor's inner loops are untouched by cooperative scheduling.
+struct WarpSlot {
+    regs: Vec<u64>,
+    written: Vec<u32>,
+    pc: [u32; WARP],
+    stmt_pos: [u32; WARP],
+    done: u32,
+    tids: [(u32, u32, u32); WARP],
+    steps: u64,
+    status: WarpStatus,
+}
+
+impl Default for WarpSlot {
+    fn default() -> WarpSlot {
+        WarpSlot {
+            regs: Vec::new(),
+            written: Vec::new(),
+            pc: [0; WARP],
+            stmt_pos: [0; WARP],
+            done: 0,
+            tids: [(0, 0, 0); WARP],
+            steps: 0,
+            status: WarpStatus::Finished,
+        }
+    }
+}
+
 /// One worker: a global-memory image, block-local shared scratch, and
-/// reusable struct-of-arrays warp state.
+/// reusable struct-of-arrays warp state (hot-loop fields for the warp
+/// currently scheduled; suspended warps live in `warps`).
 ///
 /// In the parallel path `mem` is a private copy kept pristine between
 /// blocks (stores are logged and undone); in the direct serial path
@@ -266,15 +312,29 @@ struct Worker<'a> {
     direct: bool,
     /// Inline last-writer shadow (direct mode, multi-block grids only).
     shadow: Option<WriteShadow>,
+    /// `detect_races` only: intra-block happens-before shadow.
+    phase_shadow: Option<PhaseShadow>,
     cur_block: u32,
+    cur_warp: u32,
+    cur_phase: u32,
     shared: Vec<u8>,
     /// Lane registers, slot-major: `regs[slot * 32 + lane]`.
     regs: Vec<u64>,
     /// Written bitmask per slot (bit = lane).
     written: Vec<u32>,
     pc: [u32; WARP],
+    /// Per-lane kernel-body *statement* position matching `pc` — the
+    /// statement the lane entered its current straight-line stretch at
+    /// (fallthrough: previous statement + 1; branch: the targeted label).
+    /// The step budget charges `uop.stmt - min(stmt_pos) + 1` per issue,
+    /// which is exactly the label visits the reference engine pays.
+    stmt_pos: [u32; WARP],
     done: u32,
     tids: [(u32, u32, u32); WARP],
+    /// Statement steps of the warp currently swapped in.
+    steps: u64,
+    /// Suspended per-warp state of the current block.
+    warps: Vec<WarpSlot>,
     log: Vec<StoreRec>,
     stats: SimStats,
     trace: Vec<Vec<WarpEvent>>,
@@ -288,19 +348,41 @@ impl<'a> Worker<'a> {
             mem,
             direct: false,
             shadow: None,
+            phase_shadow: None,
             cur_block: 0,
+            cur_warp: 0,
+            cur_phase: 0,
             shared: Vec::new(),
             regs: vec![0; dk.nregs as usize * WARP],
             written: vec![0; dk.nregs as usize],
             pc: [0; WARP],
+            stmt_pos: [0; WARP],
             done: 0,
             tids: [(0, 0, 0); WARP],
+            steps: 0,
+            warps: Vec::new(),
             log: Vec::new(),
             stats: SimStats::default(),
             trace: Vec::new(),
         }
     }
 
+    /// Exchange the worker's hot-loop warp state with slot `w`.
+    fn swap_warp(&mut self, w: usize) {
+        let mut s = std::mem::take(&mut self.warps[w]);
+        std::mem::swap(&mut self.regs, &mut s.regs);
+        std::mem::swap(&mut self.written, &mut s.written);
+        std::mem::swap(&mut self.pc, &mut s.pc);
+        std::mem::swap(&mut self.stmt_pos, &mut s.stmt_pos);
+        std::mem::swap(&mut self.done, &mut s.done);
+        std::mem::swap(&mut self.tids, &mut s.tids);
+        std::mem::swap(&mut self.steps, &mut s.steps);
+        self.warps[w] = s;
+    }
+
+    /// Run one block under the cooperative scheduler: warps advance in
+    /// warp-index order, each until it retires or converges on a block
+    /// barrier; with no barriers this is exactly serialized execution.
     fn run_block(&mut self, bidx: usize, tpb: u32) -> Result<BlockRun, SimError> {
         let ctaid = block_coord(bidx, self.cfg.grid);
         self.cur_block = bidx as u32;
@@ -312,17 +394,88 @@ impl<'a> Worker<'a> {
         self.log.clear();
         self.trace.clear();
         let record = self.cfg.record_trace && bidx == 0;
-
-        let mut result = Ok(());
-        for w in 0..tpb.div_ceil(32) {
-            self.reset_warp(w, tpb);
-            if record {
+        let nwarps = tpb.div_ceil(32) as usize;
+        let nregs = self.dk.nregs as usize;
+        while self.warps.len() < nwarps {
+            self.warps.push(WarpSlot::default());
+        }
+        for (w, slot) in self.warps.iter_mut().enumerate().take(nwarps) {
+            slot.regs.clear();
+            slot.regs.resize(nregs * WARP, 0);
+            slot.written.clear();
+            slot.written.resize(nregs, 0);
+            slot.pc = [0; WARP];
+            slot.stmt_pos = [0; WARP];
+            slot.done = 0;
+            slot.steps = 0;
+            slot.status = WarpStatus::Running;
+            for l in 0..WARP as u32 {
+                let t = w as u32 * 32 + l;
+                slot.tids[l as usize] = linear_to_tid(t, self.cfg.block);
+                if t >= tpb {
+                    slot.done |= 1 << l; // fractional warp: extra lanes inactive
+                }
+            }
+        }
+        if record {
+            for _ in 0..nwarps {
                 self.trace.push(Vec::new());
             }
-            if let Err(e) = self.run_warp(ctaid, record) {
-                result = Err(e);
-                break;
+        }
+        self.cur_phase = 0;
+        let shared_len = self.shared.len();
+        if let Some(sh) = &mut self.phase_shadow {
+            sh.begin_block(shared_len);
+        }
+
+        let mut result = Ok(());
+        'sched: loop {
+            for w in 0..nwarps {
+                if self.warps[w].status != WarpStatus::Running {
+                    continue;
+                }
+                self.cur_warp = w as u32;
+                self.swap_warp(w);
+                let halt = self.run_warp(ctaid, record, tpb);
+                self.swap_warp(w);
+                match halt {
+                    Ok(WarpHalt::Finished) => self.warps[w].status = WarpStatus::Finished,
+                    Ok(WarpHalt::Barrier { id }) => {
+                        self.warps[w].status = WarpStatus::AtBarrier(id)
+                    }
+                    Err(e) => {
+                        result = Err(e);
+                        break 'sched;
+                    }
+                }
             }
+            // no warp is runnable: all finished, or a barrier release
+            // (the validation helper is shared with the reference engine
+            // so the violation taxonomy/ordering can never drift)
+            let statuses = self.warps[..nwarps].iter().map(|s| s.status);
+            match barrier_release(statuses, self.cur_block) {
+                Ok(None) => break, // every warp retired
+                Ok(Some(_)) => {}
+                Err(e) => {
+                    result = Err(e);
+                    break 'sched;
+                }
+            }
+            // release: step every live lane past its barrier micro-op
+            for slot in self.warps[..nwarps].iter_mut() {
+                let live = !slot.done;
+                let mut m = live;
+                while m != 0 {
+                    let l = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    let stmt = self.dk.uops[slot.pc[l] as usize].stmt;
+                    slot.pc[l] += 1;
+                    slot.stmt_pos[l] = stmt + 1;
+                }
+                slot.status = WarpStatus::Running;
+            }
+            self.stats.barrier_phases += 1;
+            self.cur_phase += 1;
         }
         // snapshot isolation (parallel path only): undo in reverse so the
         // private image is the launch image again
@@ -338,20 +491,6 @@ impl<'a> Worker<'a> {
             stats: self.stats,
             trace: std::mem::take(&mut self.trace),
         })
-    }
-
-    fn reset_warp(&mut self, w: u32, tpb: u32) {
-        self.regs.fill(0);
-        self.written.fill(0);
-        self.done = 0;
-        for l in 0..WARP as u32 {
-            let t = w * 32 + l;
-            self.pc[l as usize] = 0;
-            self.tids[l as usize] = linear_to_tid(t, self.cfg.block);
-            if t >= tpb {
-                self.done |= 1 << l; // fractional warp: extra lanes inactive
-            }
-        }
     }
 
     /// Read a decoded operand for `lane`, masked with `m` (immediates are
@@ -388,6 +527,19 @@ impl<'a> Worker<'a> {
     fn load_mem(&mut self, space: Space, addr: u64, bytes: u32) -> Result<u64, SimError> {
         match shared_window_offset(self.shared.len() as u64, space, addr, bytes, "shared load")? {
             Some(o) => {
+                if let Some(sh) = &self.phase_shadow {
+                    if let Some(w) = sh.check_shared(o, bytes, self.cur_warp, self.cur_phase) {
+                        return Err(SimError::IntraBlockRace {
+                            addr,
+                            bytes,
+                            block: self.cur_block,
+                            phase: self.cur_phase,
+                            writer_warp: w,
+                            reader_warp: self.cur_warp,
+                            shared: true,
+                        });
+                    }
+                }
                 let mut v = 0u64;
                 for k in 0..bytes as usize {
                     v |= (self.shared[o + k] as u64) << (8 * k);
@@ -409,6 +561,25 @@ impl<'a> Worker<'a> {
                             });
                         }
                     }
+                    if let Some(sh) = &self.phase_shadow {
+                        if let Some(w) = sh.check_global(
+                            addr,
+                            bytes,
+                            self.cur_block,
+                            self.cur_warp,
+                            self.cur_phase,
+                        ) {
+                            return Err(SimError::IntraBlockRace {
+                                addr,
+                                bytes,
+                                block: self.cur_block,
+                                phase: self.cur_phase,
+                                writer_warp: w,
+                                reader_warp: self.cur_warp,
+                                shared: false,
+                            });
+                        }
+                    }
                 }
                 Ok(v)
             }
@@ -418,6 +589,9 @@ impl<'a> Worker<'a> {
     fn store_mem(&mut self, space: Space, addr: u64, bytes: u32, v: u64) -> Result<(), SimError> {
         match shared_window_offset(self.shared.len() as u64, space, addr, bytes, "shared store")? {
             Some(o) => {
+                if let Some(sh) = &mut self.phase_shadow {
+                    sh.note_shared(o, bytes, self.cur_warp, self.cur_phase);
+                }
                 for k in 0..bytes as usize {
                     self.shared[o + k] = (v >> (8 * k)) as u8;
                 }
@@ -433,6 +607,9 @@ impl<'a> Worker<'a> {
                             self.stats.cross_block_write_conflicts += 1;
                         }
                     }
+                    if let Some(sh) = &mut self.phase_shadow {
+                        sh.note_global(addr, bytes, self.cur_block, self.cur_warp, self.cur_phase);
+                    }
                 } else {
                     let old = self.mem.exchange(addr, bytes, v)?;
                     self.log.push(StoreRec {
@@ -447,15 +624,19 @@ impl<'a> Worker<'a> {
         }
     }
 
-    fn run_warp(&mut self, ctaid: (u32, u32, u32), record: bool) -> Result<(), SimError> {
+    fn run_warp(
+        &mut self,
+        ctaid: (u32, u32, u32),
+        record: bool,
+        tpb: u32,
+    ) -> Result<WarpHalt, SimError> {
         let dk = self.dk;
         let nuops = dk.uops.len() as u32;
-        let mut steps = 0u64;
         loop {
             // lowest-pc-first reconvergence over live lanes
             let live = !self.done;
             if live == 0 {
-                return Ok(());
+                return Ok(WarpHalt::Finished);
             }
             let mut pc = u32::MAX;
             let mut m = live;
@@ -465,39 +646,48 @@ impl<'a> Worker<'a> {
                 pc = pc.min(self.pc[l]);
             }
             if pc >= nuops {
+                // min pc past the end ⇒ every live lane is retiring.
+                // Charge the trailing-label statements the reference
+                // engine still visits (body end minus the earliest lane
+                // entry point into the trailing run).
+                let mut min_sp = u32::MAX;
                 let mut m = live;
                 while m != 0 {
                     let l = m.trailing_zeros() as usize;
                     m &= m - 1;
-                    if self.pc[l] >= nuops {
-                        self.done |= 1 << l;
-                    }
+                    min_sp = min_sp.min(self.stmt_pos[l]);
+                    self.done |= 1 << l;
+                }
+                self.steps += dk.nstmts.saturating_sub(min_sp) as u64;
+                if self.steps > self.cfg.max_warp_steps {
+                    return Err(SimError::StepLimit(self.cfg.max_warp_steps));
                 }
                 continue;
             }
-            // the step budget counts *statements*, like the reference
-            // engine: the side table gives each micro-op's statement
-            // index, and the gap to the previous micro-op's statement is
-            // exactly the labels the group advanced past (the reference
-            // engine pays one step per label visit; uop 0 additionally
-            // pays for any leading labels)
-            let entry = &dk.uops[pc as usize];
-            steps += if pc == 0 {
-                entry.stmt as u64 + 1
-            } else {
-                (entry.stmt - dk.uops[pc as usize - 1].stmt) as u64
-            };
-            if steps > self.cfg.max_warp_steps {
-                return Err(SimError::StepLimit(self.cfg.max_warp_steps));
-            }
             let mut active = 0u32;
+            let mut min_sp = u32::MAX;
             let mut m = live;
             while m != 0 {
                 let l = m.trailing_zeros() as usize;
                 m &= m - 1;
                 if self.pc[l] == pc {
                     active |= 1 << l;
+                    min_sp = min_sp.min(self.stmt_pos[l]);
                 }
+            }
+            // The step budget counts *statements*, like the reference
+            // engine: each issue is charged the instruction itself plus
+            // the labels between the issuing group's entry point into the
+            // current straight-line stretch (`stmt_pos`, maintained per
+            // lane — fallthrough: previous statement + 1; branch: the
+            // targeted label's statement) and the instruction. Merged
+            // lane groups charge from the *earliest* entry, which is
+            // exactly the label visits the reference engine pays — exact
+            // for every program, label runs and trailing labels included.
+            let entry = &dk.uops[pc as usize];
+            self.steps += (entry.stmt + 1).saturating_sub(min_sp) as u64;
+            if self.steps > self.cfg.max_warp_steps {
+                return Err(SimError::StepLimit(self.cfg.max_warp_steps));
             }
 
             self.stats.warp_instructions += 1;
@@ -534,12 +724,46 @@ impl<'a> Worker<'a> {
                     }
                     _ => 0,
                 };
-                self.trace.last_mut().unwrap().push(WarpEvent {
+                let ti = self.cur_warp as usize;
+                self.trace[ti].push(WarpEvent {
                     stmt: entry.stmt,
                     active,
                     exec,
                     addr,
                 });
+            }
+            if let Uop::BarSync { id, cnt } = entry.op {
+                // uniformly-skipped barrier (guard false on every active
+                // lane): a plain no-op, step past it
+                if exec == 0 {
+                    let stmt = entry.stmt;
+                    let mut m = active;
+                    while m != 0 {
+                        let l = m.trailing_zeros() as usize;
+                        m &= m - 1;
+                        self.pc[l] += 1;
+                        self.stmt_pos[l] = stmt + 1;
+                    }
+                    continue;
+                }
+                if cnt != 0 && cnt != tpb {
+                    return Err(SimError::BarrierDivergence {
+                        block: self.cur_block,
+                        id,
+                        cause: BarrierCause::PartialCount { cnt, tpb },
+                    });
+                }
+                if exec.count_ones() != live.count_ones() {
+                    return Err(SimError::BarrierDivergence {
+                        block: self.cur_block,
+                        id,
+                        cause: BarrierCause::Divergence,
+                    });
+                }
+                self.stats.barriers += 1;
+                // suspend WITHOUT advancing pc: the scheduler steps every
+                // live lane past the barrier at release
+                return Ok(WarpHalt::Barrier { id });
             }
             self.exec_uop(pc as usize, active, exec, ctaid)?;
         }
@@ -553,20 +777,26 @@ impl<'a> Worker<'a> {
         ctaid: (u32, u32, u32),
     ) -> Result<(), SimError> {
         let dk = self.dk;
+        let stmt = dk.uops[pc].stmt;
         let op = &dk.uops[pc].op;
         match op {
-            Uop::Bra { target } => {
+            Uop::Bra {
+                target,
+                target_stmt,
+            } => {
                 self.stats.branches += 1;
-                let (t, mut taken) = (*target, 0u32);
+                let (t, ts, mut taken) = (*target, *target_stmt, 0u32);
                 let mut m = active;
                 while m != 0 {
                     let l = m.trailing_zeros() as usize;
                     m &= m - 1;
                     if exec & (1 << l) != 0 {
                         self.pc[l] = t;
+                        self.stmt_pos[l] = ts;
                         taken += 1;
                     } else {
                         self.pc[l] += 1;
+                        self.stmt_pos[l] = stmt + 1;
                     }
                 }
                 if taken != 0 && taken != active.count_ones() {
@@ -583,6 +813,7 @@ impl<'a> Worker<'a> {
                         self.done |= 1 << l;
                     } else {
                         self.pc[l] += 1;
+                        self.stmt_pos[l] = stmt + 1;
                     }
                 }
                 return Ok(());
@@ -629,7 +860,7 @@ impl<'a> Worker<'a> {
                     self.write(i, dst, active as u64);
                 }
             }
-            Uop::BarSync => {} // warps serialized; see the reference engine
+            Uop::BarSync { .. } => unreachable!("handled by the warp scheduler"),
             _ => {
                 let mut m = exec;
                 while m != 0 {
@@ -644,6 +875,7 @@ impl<'a> Worker<'a> {
             let l = m.trailing_zeros() as usize;
             m &= m - 1;
             self.pc[l] += 1;
+            self.stmt_pos[l] = stmt + 1;
         }
         Ok(())
     }
@@ -800,7 +1032,7 @@ impl<'a> Worker<'a> {
             | Uop::Ret
             | Uop::Shfl { .. }
             | Uop::Activemask { .. }
-            | Uop::BarSync => {
+            | Uop::BarSync { .. } => {
                 unreachable!("handled at warp level")
             }
         }

@@ -16,9 +16,21 @@
 //! flat form. The two engines share the arithmetic helpers at the bottom
 //! of this file so a value can never be computed two different ways.
 //!
-//! Limitation (documented): warps of a block run serialized, so `bar.sync`
-//! is a no-op — enough for the OpenACC-style kernels evaluated here, which
-//! never communicate through shared memory.
+//! # Cooperative warp scheduling
+//!
+//! Warps of a block advance in *phases* separated by `bar.sync`: the
+//! scheduler runs warps in warp-index order, each until it retires or
+//! reaches a block-wide barrier with every live lane converged, then —
+//! once no warp is runnable — releases them all into the next phase. For
+//! barrier-free kernels this degenerates to exactly the old serialized
+//! execution (warp 0 to completion, then warp 1, …), so every observable
+//! is unchanged for the OpenACC-style kernel class; kernels that stage
+//! data through `.shared` and synchronize with `bar.sync` now execute
+//! with real exchange semantics. Violations are hard errors
+//! ([`SimError::BarrierDivergence`]): a warp retiring while siblings
+//! wait, divergent lanes reaching a barrier, mismatched barrier ids
+//! across warps, and `bar.sync id, cnt` counts that do not name the full
+//! block.
 
 use super::memory::{GlobalMem, MemError, GLOBAL_BASE, SHARED_BASE};
 use crate::emu::env::RegInterner;
@@ -100,6 +112,11 @@ pub struct SimStats {
     /// counted — identically by every engine — because such kernels are
     /// scheduling-dependent on real hardware.
     pub cross_block_write_conflicts: u64,
+    /// Warp-level `bar.sync` arrivals (one per warp per barrier executed).
+    pub barriers: u64,
+    /// Block-wide barrier releases: the number of phase boundaries the
+    /// cooperative scheduler crossed, summed over all blocks.
+    pub barrier_phases: u64,
 }
 
 #[derive(Debug)]
@@ -128,6 +145,62 @@ pub enum SimError {
         writer_block: u32,
         reader_block: u32,
     },
+    /// Cooperative barrier semantics violated inside a block (see
+    /// [`BarrierCause`] for the taxonomy). Hard error on every engine: on
+    /// real hardware these kernels deadlock or have undefined exchanges.
+    BarrierDivergence {
+        block: u32,
+        /// Barrier id of the (first) waiting warp.
+        id: u32,
+        cause: BarrierCause,
+    },
+    /// `detect_races` diagnostic: a shared/global load observed bytes a
+    /// *different warp of the same block* wrote in the *same barrier
+    /// phase* — no happens-before edge orders the write before the read,
+    /// so the exchange is scheduling-dependent on real hardware. A
+    /// missing `bar.sync` between staging and use is the classic cause.
+    IntraBlockRace {
+        addr: u64,
+        bytes: u32,
+        block: u32,
+        phase: u32,
+        writer_warp: u32,
+        reader_warp: u32,
+        /// The racing bytes live in the block's `.shared` window.
+        shared: bool,
+    },
+}
+
+/// Why a [`SimError::BarrierDivergence`] fired.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BarrierCause {
+    /// A warp ran to completion while sibling warps wait at a barrier
+    /// (the waiters can never be released — deadlock on hardware).
+    Exit,
+    /// A warp reached `bar.sync` with only part of its live lanes (the
+    /// barrier must be executed by every non-exited lane of the warp).
+    Divergence,
+    /// Two warps of one block wait at barriers with different ids.
+    IdMismatch { other: u32 },
+    /// `bar.sync id, cnt` whose thread count is not the launched block
+    /// size — partial-block barriers are outside the supported class.
+    PartialCount { cnt: u32, tpb: u32 },
+}
+
+impl std::fmt::Display for BarrierCause {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BarrierCause::Exit => write!(f, "a warp exited while others wait"),
+            BarrierCause::Divergence => write!(f, "divergent lanes reached the barrier"),
+            BarrierCause::IdMismatch { other } => {
+                write!(f, "another warp waits at barrier id {other}")
+            }
+            BarrierCause::PartialCount { cnt, tpb } => write!(
+                f,
+                "thread count {cnt} does not name the full block of {tpb} threads"
+            ),
+        }
+    }
 }
 
 impl std::fmt::Display for SimError {
@@ -147,6 +220,25 @@ impl std::fmt::Display for SimError {
                 f,
                 "cross-block read-after-write: block {reader_block} loads {bytes} bytes at \
                  {addr:#x} written by block {writer_block} (scheduling-dependent on hardware)"
+            ),
+            SimError::BarrierDivergence { block, id, cause } => write!(
+                f,
+                "barrier divergence in block {block} at bar.sync {id}: {cause}"
+            ),
+            SimError::IntraBlockRace {
+                addr,
+                bytes,
+                block,
+                phase,
+                writer_warp,
+                reader_warp,
+                shared,
+            } => write!(
+                f,
+                "intra-block race in block {block}: warp {reader_warp} loads {bytes} \
+                 {} bytes at {addr:#x} written by warp {writer_warp} in the same \
+                 barrier phase {phase} (missing bar.sync?)",
+                if *shared { "shared" } else { "global" }
             ),
         }
     }
@@ -227,6 +319,7 @@ pub fn run_reference(
     // conflicts are impossible on a single-block grid — skip the shadow
     let nblocks = cfg.grid.0 as u64 * cfg.grid.1 as u64 * cfg.grid.2 as u64;
     let written_by = (nblocks > 1).then(|| WriteShadow::new(&mem));
+    let phase_shadow = cfg.detect_races.then(|| PhaseShadow::new(&mem));
     let mut m = Machine {
         kernel,
         regs: &mut regs,
@@ -239,7 +332,10 @@ pub fn run_reference(
         trace: Vec::new(),
         cfg,
         written_by,
+        phase_shadow,
         cur_block: 0,
+        cur_warp: 0,
+        cur_phase: 0,
     };
 
     let tpb = cfg.threads_per_block();
@@ -278,10 +374,77 @@ struct Machine<'a> {
     /// Last-writer shadow for `cross_block_write_conflicts` (`None` on
     /// single-block grids, where conflicts are impossible).
     written_by: Option<WriteShadow>,
+    /// `detect_races` only: intra-block happens-before shadow (who wrote
+    /// each byte, in which warp and phase).
+    phase_shadow: Option<PhaseShadow>,
     cur_block: u32,
+    /// Warp index the scheduler is currently advancing (for the shadow).
+    cur_warp: u32,
+    /// Barrier phase the current block is in (0 before any release).
+    cur_phase: u32,
+}
+
+/// Why a warp's scheduling slice ended (shared by both engines'
+/// cooperative schedulers).
+pub(super) enum WarpHalt {
+    /// Every lane retired (`ret`/`exit` or fell off the end).
+    Finished,
+    /// All live lanes converged on `bar.sync id`; pc NOT yet advanced —
+    /// the scheduler advances it when the whole block releases.
+    Barrier { id: u32 },
+}
+
+#[derive(Clone, Copy, PartialEq)]
+pub(super) enum WarpStatus {
+    Running,
+    AtBarrier(u32),
+    Finished,
+}
+
+/// Decide a block's fate once no warp is runnable: `Ok(None)` = every
+/// warp retired (block done), `Ok(Some(id))` = all warps wait at barrier
+/// `id` (release into the next phase), `Err` = the barrier contract is
+/// violated. Shared by both engines so the error taxonomy — and which
+/// violation wins when several apply — can never drift between them.
+pub(super) fn barrier_release(
+    status: impl Iterator<Item = WarpStatus> + Clone,
+    block: u32,
+) -> Result<Option<u32>, SimError> {
+    let Some(id) = status.clone().find_map(|s| match s {
+        WarpStatus::AtBarrier(id) => Some(id),
+        _ => None,
+    }) else {
+        return Ok(None);
+    };
+    for s in status {
+        match s {
+            WarpStatus::Finished => {
+                return Err(SimError::BarrierDivergence {
+                    block,
+                    id,
+                    cause: BarrierCause::Exit,
+                })
+            }
+            WarpStatus::AtBarrier(other) if other != id => {
+                return Err(SimError::BarrierDivergence {
+                    block,
+                    id,
+                    cause: BarrierCause::IdMismatch { other },
+                })
+            }
+            _ => {}
+        }
+    }
+    Ok(Some(id))
 }
 
 impl<'a> Machine<'a> {
+    /// Run one block to completion under the cooperative scheduler: warps
+    /// advance in warp-index order, each until it retires or arrives at a
+    /// block-wide barrier; when no warp is runnable, either every warp
+    /// finished (block done) or the waiting set is validated and released
+    /// into the next phase. Barrier-free kernels therefore execute warp 0
+    /// to completion, then warp 1, … — exactly the old serialized order.
     fn run_block(
         &mut self,
         ctaid: (u32, u32, u32),
@@ -289,41 +452,80 @@ impl<'a> Machine<'a> {
         record: bool,
     ) -> Result<(), SimError> {
         let nregs = self.regs.len();
-        let warps = tpb.div_ceil(32);
-        for w in 0..warps {
-            let mut lanes: Vec<Lane> = (0..WARP as u32)
-                .map(|l| {
-                    let t = w * 32 + l;
-                    let tid = linear_to_tid(t, self.cfg.block);
-                    Lane {
-                        regs: vec![0; nregs],
-                        written: vec![false; nregs],
-                        pc: 0,
-                        done: t >= tpb, // fractional warp: extra lanes inactive
-                        tid,
-                    }
-                })
-                .collect();
-            if record {
+        let warps = tpb.div_ceil(32) as usize;
+        let mut lanes: Vec<Vec<Lane>> = (0..warps as u32)
+            .map(|w| {
+                (0..WARP as u32)
+                    .map(|l| {
+                        let t = w * 32 + l;
+                        let tid = linear_to_tid(t, self.cfg.block);
+                        Lane {
+                            regs: vec![0; nregs],
+                            written: vec![false; nregs],
+                            pc: 0,
+                            done: t >= tpb, // fractional warp: extra lanes inactive
+                            tid,
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        // one trace stream per warp, in warp order (same as serialized)
+        let tbase = self.trace.len();
+        if record {
+            for _ in 0..warps {
                 self.trace.push(Vec::new());
             }
-            self.run_warp(&mut lanes, ctaid, record)?;
         }
-        Ok(())
+        let mut status = vec![WarpStatus::Running; warps];
+        let mut steps = vec![0u64; warps];
+        self.cur_phase = 0;
+        if let Some(sh) = &mut self.phase_shadow {
+            sh.begin_block(self.shared.len());
+        }
+
+        loop {
+            for w in 0..warps {
+                if status[w] != WarpStatus::Running {
+                    continue;
+                }
+                self.cur_warp = w as u32;
+                let ti = record.then_some(tbase + w);
+                status[w] = match self.run_warp(&mut lanes[w], ctaid, ti, &mut steps[w], tpb)? {
+                    WarpHalt::Finished => WarpStatus::Finished,
+                    WarpHalt::Barrier { id } => WarpStatus::AtBarrier(id),
+                };
+            }
+            // no warp is runnable: all finished, or a barrier release
+            if barrier_release(status.iter().copied(), self.cur_block)?.is_none() {
+                return Ok(()); // every warp retired
+            }
+            // release: step every live lane past the barrier statement
+            for wl in lanes.iter_mut() {
+                for l in wl.iter_mut().filter(|l| !l.done) {
+                    l.pc += 1;
+                }
+            }
+            status.fill(WarpStatus::Running);
+            self.stats.barrier_phases += 1;
+            self.cur_phase += 1;
+        }
     }
 
+    /// Advance one warp until it retires or converges on a barrier.
     fn run_warp(
         &mut self,
         lanes: &mut [Lane],
         ctaid: (u32, u32, u32),
-        record: bool,
-    ) -> Result<(), SimError> {
+        trace_idx: Option<usize>,
+        steps: &mut u64,
+        tpb: u32,
+    ) -> Result<WarpHalt, SimError> {
         let body_len = self.kernel.body.len();
-        let mut steps = 0u64;
         loop {
             // lowest-pc-first reconvergence
             let pc = match lanes.iter().filter(|l| !l.done).map(|l| l.pc).min() {
-                None => return Ok(()),
+                None => return Ok(WarpHalt::Finished),
                 Some(p) => p,
             };
             if pc >= body_len {
@@ -332,8 +534,8 @@ impl<'a> Machine<'a> {
                 }
                 continue;
             }
-            steps += 1;
-            if steps > self.cfg.max_warp_steps {
+            *steps += 1;
+            if *steps > self.cfg.max_warp_steps {
                 return Err(SimError::StepLimit(self.cfg.max_warp_steps));
             }
             let active: Vec<usize> = lanes
@@ -369,7 +571,7 @@ impl<'a> Machine<'a> {
                         }
                     };
                     self.stats.thread_instructions += exec.len() as u64;
-                    if record {
+                    if let Some(ti) = trace_idx {
                         let exec_mask: u32 = exec.iter().fold(0, |m, &i| m | (1 << i));
                         // address of the first executing lane for memory ops
                         let addr = match op {
@@ -383,12 +585,43 @@ impl<'a> Machine<'a> {
                             }
                             _ => 0,
                         };
-                        self.trace.last_mut().unwrap().push(WarpEvent {
+                        self.trace[ti].push(WarpEvent {
                             stmt: pc as u32,
                             active: mask,
                             exec: exec_mask,
                             addr,
                         });
+                    }
+                    if let Op::BarSync { id, cnt } = op {
+                        // uniformly-skipped barrier (guard false on every
+                        // active lane): a plain no-op, step past it
+                        if exec.is_empty() {
+                            for &i in &active {
+                                lanes[i].pc += 1;
+                            }
+                            continue;
+                        }
+                        if let Some(c) = cnt {
+                            if *c != tpb {
+                                return Err(SimError::BarrierDivergence {
+                                    block: self.cur_block,
+                                    id: *id,
+                                    cause: BarrierCause::PartialCount { cnt: *c, tpb },
+                                });
+                            }
+                        }
+                        let live = lanes.iter().filter(|l| !l.done).count();
+                        if exec.len() != live {
+                            return Err(SimError::BarrierDivergence {
+                                block: self.cur_block,
+                                id: *id,
+                                cause: BarrierCause::Divergence,
+                            });
+                        }
+                        self.stats.barriers += 1;
+                        // suspend WITHOUT advancing pc: the scheduler steps
+                        // every live lane past the barrier at release
+                        return Ok(WarpHalt::Barrier { id: *id });
                     }
                     self.exec(op, lanes, &active, &exec, mask, ctaid)?;
                 }
@@ -482,7 +715,7 @@ impl<'a> Machine<'a> {
                     lanes[i].written[did] = true;
                 }
             }
-            Op::BarSync { .. } => {} // warps serialized; see module docs
+            Op::BarSync { .. } => unreachable!("handled by the warp scheduler"),
             _ => {
                 for &i in exec {
                     self.exec_lane(op, &mut lanes[i], ctaid)?;
@@ -548,6 +781,19 @@ impl<'a> Machine<'a> {
     fn load_mem(&mut self, space: Space, addr: u64, bytes: u32) -> Result<u64, SimError> {
         match shared_window_offset(self.shared.len() as u64, space, addr, bytes, "shared load")? {
             Some(o) => {
+                if let Some(sh) = &self.phase_shadow {
+                    if let Some(w) = sh.check_shared(o, bytes, self.cur_warp, self.cur_phase) {
+                        return Err(SimError::IntraBlockRace {
+                            addr,
+                            bytes,
+                            block: self.cur_block,
+                            phase: self.cur_phase,
+                            writer_warp: w,
+                            reader_warp: self.cur_warp,
+                            shared: true,
+                        });
+                    }
+                }
                 let mut v = 0u64;
                 for k in 0..bytes as usize {
                     v |= (self.shared[o + k] as u64) << (8 * k);
@@ -567,6 +813,25 @@ impl<'a> Machine<'a> {
                             });
                         }
                     }
+                    if let Some(sh) = &self.phase_shadow {
+                        if let Some(w) = sh.check_global(
+                            addr,
+                            bytes,
+                            self.cur_block,
+                            self.cur_warp,
+                            self.cur_phase,
+                        ) {
+                            return Err(SimError::IntraBlockRace {
+                                addr,
+                                bytes,
+                                block: self.cur_block,
+                                phase: self.cur_phase,
+                                writer_warp: w,
+                                reader_warp: self.cur_warp,
+                                shared: false,
+                            });
+                        }
+                    }
                 }
                 Ok(v)
             }
@@ -582,6 +847,9 @@ impl<'a> Machine<'a> {
     ) -> Result<(), SimError> {
         match shared_window_offset(self.shared.len() as u64, space, addr, bytes, "shared store")? {
             Some(o) => {
+                if let Some(sh) = &mut self.phase_shadow {
+                    sh.note_shared(o, bytes, self.cur_warp, self.cur_phase);
+                }
                 for k in 0..bytes as usize {
                     self.shared[o + k] = (v >> (8 * k)) as u8;
                 }
@@ -593,6 +861,9 @@ impl<'a> Machine<'a> {
                     if sh.note(addr, bytes, self.cur_block) {
                         self.stats.cross_block_write_conflicts += 1;
                     }
+                }
+                if let Some(sh) = &mut self.phase_shadow {
+                    sh.note_global(addr, bytes, self.cur_block, self.cur_warp, self.cur_phase);
                 }
                 Ok(())
             }
@@ -848,6 +1119,89 @@ impl WriteShadow {
             .iter()
             .find(|&&s| s != u32::MAX && s != block)
             .copied()
+    }
+}
+
+/// Intra-block happens-before shadow for the `detect_races` diagnostic,
+/// shared by both serial engines. Tracks, per byte, which (warp, phase)
+/// last wrote it; a load by a *different* warp in the *same* phase has no
+/// happens-before edge from the write (barriers are the only intra-block
+/// ordering), so it is a diagnosable race. Writes from earlier phases are
+/// ordered by the intervening `bar.sync`; same-warp accesses are ordered
+/// by program order (warp-synchronous lanes included).
+///
+/// Global bytes carry a block tag so stale entries from earlier blocks
+/// need no clearing; the shared-window shadow is reset per block.
+pub(super) struct PhaseShadow {
+    g_block: Vec<u32>,
+    g_warp: Vec<u32>,
+    g_phase: Vec<u32>,
+    s_warp: Vec<u32>,
+    s_phase: Vec<u32>,
+}
+
+impl PhaseShadow {
+    pub(super) fn new(mem: &GlobalMem) -> PhaseShadow {
+        PhaseShadow {
+            g_block: vec![u32::MAX; mem.size()],
+            g_warp: vec![0; mem.size()],
+            g_phase: vec![0; mem.size()],
+            s_warp: Vec::new(),
+            s_phase: Vec::new(),
+        }
+    }
+
+    /// Reset the shared-window shadow for a new block.
+    pub(super) fn begin_block(&mut self, shared_bytes: usize) {
+        self.s_warp.clear();
+        self.s_warp.resize(shared_bytes, u32::MAX);
+        self.s_phase.clear();
+        self.s_phase.resize(shared_bytes, 0);
+    }
+
+    pub(super) fn note_global(&mut self, addr: u64, bytes: u32, block: u32, warp: u32, phase: u32) {
+        let o = (addr - GLOBAL_BASE) as usize;
+        for k in o..o + bytes as usize {
+            self.g_block[k] = block;
+            self.g_warp[k] = warp;
+            self.g_phase[k] = phase;
+        }
+    }
+
+    /// Same-block, same-phase, different-warp writer of any of the bytes.
+    pub(super) fn check_global(
+        &self,
+        addr: u64,
+        bytes: u32,
+        block: u32,
+        warp: u32,
+        phase: u32,
+    ) -> Option<u32> {
+        let o = (addr - GLOBAL_BASE) as usize;
+        (o..o + bytes as usize).find_map(|k| {
+            (self.g_block[k] == block && self.g_warp[k] != warp && self.g_phase[k] == phase)
+                .then_some(self.g_warp[k])
+        })
+    }
+
+    pub(super) fn note_shared(&mut self, off: usize, bytes: u32, warp: u32, phase: u32) {
+        for k in off..off + bytes as usize {
+            self.s_warp[k] = warp;
+            self.s_phase[k] = phase;
+        }
+    }
+
+    pub(super) fn check_shared(
+        &self,
+        off: usize,
+        bytes: u32,
+        warp: u32,
+        phase: u32,
+    ) -> Option<u32> {
+        (off..off + bytes as usize).find_map(|k| {
+            (self.s_warp[k] != u32::MAX && self.s_warp[k] != warp && self.s_phase[k] == phase)
+                .then_some(self.s_warp[k])
+        })
     }
 }
 

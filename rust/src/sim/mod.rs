@@ -18,7 +18,9 @@ pub mod memory;
 
 pub use decode::{decode, DecodedKernel};
 pub use exec::run_decoded;
-pub use machine::{run_reference, SimConfig, SimError, SimResult, SimStats, WarpEvent};
+pub use machine::{
+    run_reference, BarrierCause, SimConfig, SimError, SimResult, SimStats, WarpEvent,
+};
 pub use memory::{Allocator, GlobalMem, MemError, GLOBAL_BASE, SHARED_BASE};
 
 use crate::ptx::ast::Kernel;

@@ -8,13 +8,14 @@
 //! registers, `ld.global.nc` for `independent`-annotated read arrays, and
 //! `fma.rn` accumulation chains.
 
-use super::spec::{Benchmark, Pattern, Tap, TapFunc};
+use super::spec::{shared_stencil_coef, Benchmark, Pattern, Tap, TapFunc};
 use crate::ptx::ast::*;
 use std::collections::BTreeMap;
 
 /// Tiny register allocator + statement buffer.
 struct B {
     body: Vec<Statement>,
+    shared: Vec<SharedDecl>,
     nr: u32,
     nrd: u32,
     nf: u32,
@@ -25,6 +26,7 @@ impl B {
     fn new() -> B {
         B {
             body: Vec::new(),
+            shared: Vec::new(),
             nr: 0,
             nrd: 0,
             nf: 0,
@@ -173,6 +175,80 @@ impl B {
         });
         d
     }
+
+    // -- shared-memory / barrier helpers ----------------------------------
+
+    /// Declare a `.shared .align 4 .b8 name[bytes]` window.
+    fn shared_decl(&mut self, name: &str, bytes: u64) {
+        self.shared.push(SharedDecl {
+            name: name.to_string(),
+            align: 4,
+            bytes,
+        });
+    }
+
+    /// `mov.u64 %rd, name` — the shared window's base address.
+    fn mov_var_u64(&mut self, name: &str) -> Reg {
+        let d = self.rd();
+        self.push(Op::Mov {
+            ty: Type::U64,
+            dst: d.clone(),
+            src: Operand::Var(name.to_string()),
+        });
+        d
+    }
+
+    fn bar_sync(&mut self, id: u32) {
+        self.push(Op::BarSync { id, cnt: None });
+    }
+
+    /// `setp.<cmp>.s32 %p, a, imm`.
+    fn setp_imm(&mut self, cmp: CmpOp, a: &Reg, imm: i64) -> Reg {
+        let d = self.p();
+        self.push(Op::Setp {
+            cmp,
+            ty: Type::S32,
+            dst: d.clone(),
+            a: Operand::Reg(a.clone()),
+            b: Operand::ImmInt(imm as i128),
+        });
+        d
+    }
+
+    fn ld_shared_f32(&mut self, guard: Option<&Reg>, addr: &Reg, byte_off: i64) -> Reg {
+        let d = self.f();
+        let op = Op::Ld {
+            space: Space::Shared,
+            nc: false,
+            ty: Type::F32,
+            dst: d.clone(),
+            addr: Address {
+                base: Operand::Reg(addr.clone()),
+                offset: byte_off,
+            },
+        };
+        match guard {
+            None => self.push(op),
+            Some(p) => self.guarded(p, op),
+        }
+        d
+    }
+
+    fn st_shared_f32(&mut self, guard: Option<&Reg>, addr: &Reg, byte_off: i64, src: &Reg) {
+        let op = Op::St {
+            space: Space::Shared,
+            ty: Type::F32,
+            addr: Address {
+                base: Operand::Reg(addr.clone()),
+                offset: byte_off,
+            },
+            src: Operand::Reg(src.clone()),
+        };
+        match guard {
+            None => self.push(op),
+            Some(p) => self.guarded(p, op),
+        }
+    }
 }
 
 /// Parameter names of a benchmark kernel, in declaration order.
@@ -203,6 +279,12 @@ pub fn param_names(b: &Benchmark) -> Vec<String> {
         Pattern::SinCos | Pattern::VecAdd => {
             v.extend(["in0".into(), "in1".into(), "nx".into(), "ny".into(), "nz".into()]);
         }
+        Pattern::TiledReduce { .. } => {
+            v.push("in0".into());
+        }
+        Pattern::SharedStencil { .. } => {
+            v.extend(["in0".into(), "nx".into()]);
+        }
     }
     v
 }
@@ -224,6 +306,10 @@ pub fn generate(bench: &Benchmark) -> Kernel {
         Pattern::VecAdd => {
             let taps = vec![Tap::new(0, 0, 0, 0, 1.0), Tap::new(1, 0, 0, 0, 1.0)];
             gen_stencil(&mut b, bench, &taps)
+        }
+        Pattern::TiledReduce { block } => gen_tiledreduce(&mut b, *block),
+        Pattern::SharedStencil { radius, block } => {
+            gen_sharedstencil(&mut b, *radius, *block)
         }
     }
 
@@ -260,9 +346,198 @@ pub fn generate(bench: &Benchmark) -> Kernel {
                 count: b.nrd + 1,
             },
         ],
-        shared: vec![],
+        shared: b.shared,
         body: b.body,
     }
+}
+
+/// Per-block tree reduction through `.shared`: every thread stages one
+/// element, then `log2(block)` guarded halving rounds with a `bar.sync`
+/// between each — the canonical shared-memory-communicating kernel. The
+/// tree is fully unrolled for the fixed `block` size (predication only,
+/// no control flow), so every warp reaches every barrier with all lanes.
+fn gen_tiledreduce(b: &mut B, block: u32) {
+    assert!(
+        block.is_power_of_two() && block % 32 == 0 && block <= 1024,
+        "tiled reduction needs a power-of-two block of whole warps"
+    );
+    b.shared_decl("sdata", block as u64 * 4);
+    let pout = b.ld_param_u64("out");
+    let out_base = b.cvta(&pout);
+    let pin = b.ld_param_u64("in0");
+    let in_base = b.cvta(&pin);
+    let tid = b.mov_special(Special::TidX);
+    let ntid = b.mov_special(Special::NtidX);
+    let cta = b.mov_special(Special::CtaidX);
+    let i = b.mad(
+        Operand::Reg(cta.clone()),
+        Operand::Reg(ntid),
+        Operand::Reg(tid.clone()),
+    );
+    // stage a[i] into sdata[tid]
+    let iaddr = b.elem_addr(&in_base, &i);
+    let v = b.ld_f32(&iaddr, 0, true);
+    let sbase = b.mov_var_u64("sdata");
+    let saddr = b.elem_addr(&sbase, &tid);
+    b.st_shared_f32(None, &saddr, 0, &v);
+    b.bar_sync(0);
+    // unrolled tree: sdata[tid] += sdata[tid + s] for tid < s
+    let mut s = block / 2;
+    while s >= 1 {
+        let p = b.setp_imm(CmpOp::Lt, &tid, s as i64);
+        let fa = b.ld_shared_f32(Some(&p), &saddr, 0);
+        let fb = b.ld_shared_f32(Some(&p), &saddr, s as i64 * 4);
+        let fc = b.f();
+        b.guarded(
+            &p,
+            Op::FltBin {
+                op: FltBinOp::Add,
+                ty: Type::F32,
+                dst: fc.clone(),
+                a: Operand::Reg(fa),
+                b: Operand::Reg(fb),
+            },
+        );
+        b.st_shared_f32(Some(&p), &saddr, 0, &fc);
+        b.bar_sync(0);
+        s /= 2;
+    }
+    // thread 0 publishes the block sum
+    let pz = b.setp_imm(CmpOp::Eq, &tid, 0);
+    let fo = b.ld_shared_f32(Some(&pz), &sbase, 0);
+    let oaddr = b.elem_addr(&out_base, &cta);
+    b.guarded(
+        &pz,
+        Op::St {
+            space: Space::Global,
+            ty: Type::F32,
+            addr: Address {
+                base: Operand::Reg(oaddr),
+                offset: 0,
+            },
+            src: Operand::Reg(fo),
+        },
+    );
+    b.push(Op::Ret);
+}
+
+/// 1D uniform stencil staged through `.shared`: the block stages its tile
+/// plus a clamped halo (predicated edge lanes), one `bar.sync`, then every
+/// thread combines `2·radius+1` shared taps with an fma chain.
+fn gen_sharedstencil(b: &mut B, radius: i64, block: u32) {
+    assert!(radius >= 1 && block % 32 == 0 && block as i64 > 2 * radius);
+    b.shared_decl("stile", (block as i64 + 2 * radius) as u64 * 4);
+    let pout = b.ld_param_u64("out");
+    let out_base = b.cvta(&pout);
+    let pin = b.ld_param_u64("in0");
+    let in_base = b.cvta(&pin);
+    let nx = b.ld_param_u32("nx");
+    let tid = b.mov_special(Special::TidX);
+    let ntid = b.mov_special(Special::NtidX);
+    let cta = b.mov_special(Special::CtaidX);
+    let i = b.mad(
+        Operand::Reg(cta),
+        Operand::Reg(ntid),
+        Operand::Reg(tid.clone()),
+    );
+    // center: stile[tid + radius] = a[i]
+    let iaddr = b.elem_addr(&in_base, &i);
+    let v = b.ld_f32(&iaddr, 0, true);
+    let sbase = b.mov_var_u64("stile");
+    let stid = b.elem_addr(&sbase, &tid);
+    b.st_shared_f32(None, &stid, radius * 4, &v);
+    // left halo (lanes tid < radius): stile[tid] = a[max(i - radius, 0)]
+    let pl = b.setp_imm(CmpOp::Lt, &tid, radius);
+    let il = b.addi(&i, -radius);
+    let il2 = b.r();
+    b.push(Op::IntBin {
+        op: IntBinOp::Max,
+        ty: Type::S32,
+        dst: il2.clone(),
+        a: Operand::Reg(il),
+        b: Operand::ImmInt(0),
+    });
+    let laddr = b.elem_addr(&in_base, &il2);
+    let fl = b.f();
+    b.guarded(
+        &pl,
+        Op::Ld {
+            space: Space::Global,
+            nc: true,
+            ty: Type::F32,
+            dst: fl.clone(),
+            addr: Address {
+                base: Operand::Reg(laddr),
+                offset: 0,
+            },
+        },
+    );
+    b.st_shared_f32(Some(&pl), &stid, 0, &fl);
+    // right halo (lanes tid ≥ block - radius):
+    // stile[tid + 2·radius] = a[min(i + radius, nx - 1)]
+    let pr = b.setp_imm(CmpOp::Ge, &tid, block as i64 - radius);
+    let ir = b.addi(&i, radius);
+    let nm1 = b.addi(&nx, -1);
+    let ir2 = b.r();
+    b.push(Op::IntBin {
+        op: IntBinOp::Min,
+        ty: Type::S32,
+        dst: ir2.clone(),
+        a: Operand::Reg(ir),
+        b: Operand::Reg(nm1),
+    });
+    let raddr = b.elem_addr(&in_base, &ir2);
+    let fr = b.f();
+    b.guarded(
+        &pr,
+        Op::Ld {
+            space: Space::Global,
+            nc: true,
+            ty: Type::F32,
+            dst: fr.clone(),
+            addr: Address {
+                base: Operand::Reg(raddr),
+                offset: 0,
+            },
+        },
+    );
+    b.st_shared_f32(Some(&pr), &stid, 2 * radius * 4, &fr);
+    b.bar_sync(0);
+    // combine the 2·radius+1 shared taps (uniform coefficients)
+    let coef = shared_stencil_coef(radius);
+    let acc = b.f();
+    b.push(Op::Mov {
+        ty: Type::F32,
+        dst: acc.clone(),
+        src: Operand::ImmF32(0),
+    });
+    for di in -radius..=radius {
+        let t = b.ld_shared_f32(None, &stid, (radius + di) * 4);
+        let nacc = b.f();
+        b.push(Op::Fma {
+            ty: Type::F32,
+            dst: nacc.clone(),
+            a: Operand::ImmF32(coef.to_bits()),
+            b: Operand::Reg(t),
+            c: Operand::Reg(acc.clone()),
+        });
+        b.push(Op::Mov {
+            ty: Type::F32,
+            dst: acc.clone(),
+            src: Operand::Reg(nacc),
+        });
+    }
+    let oaddr = b.elem_addr(&out_base, &i);
+    b.push(Op::St {
+        space: Space::Global,
+        ty: Type::F32,
+        addr: Address {
+            base: Operand::Reg(oaddr),
+            offset: 0,
+        },
+        src: Operand::Reg(acc),
+    });
+    b.push(Op::Ret);
 }
 
 /// Shared stencil scaffolding for 2D (strip-mine i loop) and 3D

@@ -37,7 +37,53 @@ pub fn suite() -> Vec<Benchmark> {
 }
 
 pub fn by_name(name: &str) -> Option<Benchmark> {
-    suite().into_iter().find(|b| b.name == name)
+    suite()
+        .into_iter()
+        .chain(shared_suite())
+        .find(|b| b.name == name)
+}
+
+/// The shared-memory-communicating benchmark family: kernels that stage
+/// data through `.shared` and synchronize warps with `bar.sync` — the
+/// class the cooperative warp scheduler opened up. Kept separate from
+/// [`suite`] (the paper's Table 2 is exactly 16 rows); reachable by name
+/// from the CLI and run by `simbench --family shared` (`BENCH_5.json`).
+pub fn shared_suite() -> Vec<Benchmark> {
+    vec![tiledreduce(), sharedstencil()]
+}
+
+fn tiledreduce() -> Benchmark {
+    Benchmark {
+        name: "tiledreduce",
+        lang: Lang::C,
+        dims: 1,
+        pattern: Pattern::TiledReduce { block: 64 },
+        divergent: false,
+        // one global load; the tree communicates through .shared, which
+        // the default detection options exclude (and the tree loads are
+        // predicated anyway)
+        expect_shuffles: 0,
+        expect_loads: 1,
+        expect_delta: None,
+    }
+}
+
+fn sharedstencil() -> Benchmark {
+    Benchmark {
+        name: "sharedstencil",
+        lang: Lang::C,
+        dims: 1,
+        pattern: Pattern::SharedStencil {
+            radius: 1,
+            block: 64,
+        },
+        divergent: false,
+        // center + two predicated halo loads; the taps read .shared
+        // across a barrier, so nothing may be shuffled
+        expect_shuffles: 0,
+        expect_loads: 3,
+        expect_delta: None,
+    }
 }
 
 fn divergence() -> Benchmark {
@@ -505,6 +551,81 @@ pub fn workload(b: &Benchmark, nx: usize, ny: usize, nz: usize, seed: u64) -> Wo
                 mem,
                 out_ptr: c,
                 out_len: nx * ny,
+                expected,
+            }
+        }
+        Pattern::TiledReduce { block } => {
+            let bs = *block as usize;
+            let nblocks = nx.max(1);
+            let total = nblocks * bs;
+            let out = alloc.alloc((nblocks * 4) as u64);
+            let a = alloc.alloc((total * 4) as u64);
+            let av = input_data(&mut rng, total);
+            mem.write_f32s(a, &av).unwrap();
+            let cfg = SimConfig::new(nblocks as u32, *block, vec![out, a]);
+            // CPU reference replays the kernel's tree exactly: round `s`
+            // does sh[t] = sh[t] + sh[t+s] for t < s (reads are disjoint
+            // from the round's writes, so sequential order is the tree)
+            let mut expected = vec![0f32; nblocks];
+            for (blk, e) in expected.iter_mut().enumerate() {
+                let mut sh: Vec<f32> = av[blk * bs..(blk + 1) * bs].to_vec();
+                let mut s = bs / 2;
+                while s >= 1 {
+                    for t in 0..s {
+                        sh[t] += sh[t + s];
+                    }
+                    s /= 2;
+                }
+                *e = sh[0];
+            }
+            Workload {
+                kernel,
+                cfg,
+                mem,
+                out_ptr: out,
+                out_len: nblocks,
+                expected,
+            }
+        }
+        Pattern::SharedStencil { radius, block } => {
+            let (r, bs) = (*radius as usize, *block as usize);
+            let nblocks = nx.max(1);
+            let total = nblocks * bs;
+            let out = alloc.alloc((total * 4) as u64);
+            let a = alloc.alloc((total * 4) as u64);
+            let av = input_data(&mut rng, total);
+            mem.write_f32s(a, &av).unwrap();
+            let cfg = SimConfig::new(nblocks as u32, *block, vec![out, a, total as u64]);
+            // CPU reference stages the tile + clamped halo like the
+            // kernel, then combines with the identical fma chain
+            let coef = crate::suite::spec::shared_stencil_coef(*radius);
+            let mut expected = vec![0f32; total];
+            for blk in 0..nblocks {
+                let mut sh = vec![0f32; bs + 2 * r];
+                for t in 0..bs {
+                    let i = blk * bs + t;
+                    sh[t + r] = av[i];
+                    if t < r {
+                        sh[t] = av[i.saturating_sub(r)];
+                    }
+                    if t >= bs - r {
+                        sh[t + 2 * r] = av[(i + r).min(total - 1)];
+                    }
+                }
+                for t in 0..bs {
+                    let mut acc = 0f32;
+                    for k in 0..=2 * r {
+                        acc = coef.mul_add(sh[t + k], acc);
+                    }
+                    expected[blk * bs + t] = acc;
+                }
+            }
+            Workload {
+                kernel,
+                cfg,
+                mem,
+                out_ptr: out,
+                out_len: total,
                 expected,
             }
         }

@@ -10,7 +10,7 @@ pub mod spec;
 pub use apps::apps;
 pub use codegen::{generate, param_names};
 pub use kernelgen::{
-    by_name, suite, workload, workload_fingerprint, Workload, WorkloadFingerprint,
-    WORKLOAD_SPEC_VERSION,
+    by_name, shared_suite, suite, workload, workload_fingerprint, Workload,
+    WorkloadFingerprint, WORKLOAD_SPEC_VERSION,
 };
-pub use spec::{irow, Benchmark, Lang, Pattern, Tap, TapFunc};
+pub use spec::{irow, shared_stencil_coef, Benchmark, Lang, Pattern, Tap, TapFunc};

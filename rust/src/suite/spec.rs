@@ -70,6 +70,22 @@ pub enum Pattern {
     SinCos,
     /// `c[i] = a[i] + b[i]`.
     VecAdd,
+    /// Per-block tree reduction communicated through `.shared` with a
+    /// `bar.sync` between every round: `out[blk] = Σ a[blk·block ..
+    /// (blk+1)·block]`. `block` is the (fixed, power-of-two, multiple of
+    /// 32) thread-block size the unrolled tree is generated for.
+    TiledReduce { block: u32 },
+    /// 1D `2·radius+1`-point uniform stencil whose tile (plus halo,
+    /// clamped at the grid edges) is staged into `.shared` by the block,
+    /// with one `bar.sync` between staging and use.
+    SharedStencil { radius: i64, block: u32 },
+}
+
+/// Tap coefficient of the shared-staged stencil (uniform averaging) —
+/// single source of truth for the code generator AND the CPU reference,
+/// so the fma chains stay bit-identical.
+pub fn shared_stencil_coef(radius: i64) -> f32 {
+    1.0f32 / (2 * radius + 1) as f32
 }
 
 /// A benchmark of the suite.
@@ -97,6 +113,7 @@ impl Benchmark {
             Pattern::MatVec { .. } => 2,
             Pattern::SinCos => 2,
             Pattern::VecAdd => 2,
+            Pattern::TiledReduce { .. } | Pattern::SharedStencil { .. } => 1,
         }
     }
 

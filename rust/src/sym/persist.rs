@@ -37,7 +37,8 @@ use std::sync::Arc;
 /// guards the container; this one guards the term-graph encoding proper,
 /// so a future store-format bump that leaves the graph codec untouched
 /// can keep old images readable.
-pub const PERSIST_VERSION: u32 = 1;
+/// v2: memory-trace records carry the barrier `phase` id.
+pub const PERSIST_VERSION: u32 = 2;
 
 // ---------------------------------------------------------------------------
 // Stable operator tags (shared with the simulator's DecodedKernel codec)

@@ -9,15 +9,17 @@
 use ptxasw::coordinator::sim_sizes;
 use ptxasw::ptx::parser::parse_kernel;
 use ptxasw::ptx::Kernel;
-use ptxasw::sim::{run, run_reference, Allocator, GlobalMem, SimConfig, SimError, SimResult};
+use ptxasw::sim::{
+    run, run_reference, Allocator, BarrierCause, GlobalMem, SimConfig, SimError, SimResult,
+};
 use ptxasw::suite;
 use ptxasw::util::check_cases;
 
-/// Run all engines (reference, decoded serial, decoded on 3 and 7
+/// Run all engines (reference, decoded serial, decoded on 2 and 8
 /// workers) and assert bit-identical results; returns the decoded result.
 fn engines_agree(k: &Kernel, cfg: &SimConfig, mem: GlobalMem) -> SimResult {
     let reference = run_reference(k, cfg, mem.clone()).expect("reference run");
-    for threads in [1usize, 3, 7] {
+    for threads in [1usize, 2, 8] {
         let mut c = cfg.clone();
         c.sim_threads = threads;
         let r = run(k, &c, mem.clone()).expect("decoded run");
@@ -26,6 +28,35 @@ fn engines_agree(k: &Kernel, cfg: &SimConfig, mem: GlobalMem) -> SimResult {
         assert_eq!(reference.trace, r.trace, "trace diverged at {threads} threads");
     }
     run(k, cfg, mem).unwrap()
+}
+
+/// Both engines (and the parallel configuration) must fail with the same
+/// barrier-divergence shape.
+fn engines_agree_on_barrier_error(k: &Kernel, cfg: &SimConfig, mem: GlobalMem) -> SimError {
+    let e_ref = run_reference(k, cfg, mem.clone()).expect_err("reference must fail");
+    for threads in [1usize, 2, 8] {
+        let mut c = cfg.clone();
+        c.sim_threads = threads;
+        let e = run(k, &c, mem.clone()).expect_err("decoded must fail");
+        match (&e_ref, &e) {
+            (
+                SimError::BarrierDivergence {
+                    block: b1,
+                    id: i1,
+                    cause: c1,
+                },
+                SimError::BarrierDivergence {
+                    block: b2,
+                    id: i2,
+                    cause: c2,
+                },
+            ) => {
+                assert_eq!((b1, i1, c1), (b2, i2, c2), "error shape diverged at {threads}");
+            }
+            other => panic!("engines disagree on the error: {other:?}"),
+        }
+    }
+    e_ref
 }
 
 /// If/else diamond: lanes 0–15 take the `bra`, 16–31 fall through, and
@@ -283,6 +314,288 @@ fn randomized_suite_workloads_differential() {
             assert_eq!(r.stats.cross_block_write_conflicts, 0, "{}", b.name);
         }
     });
+}
+
+/// Two-warp shared-memory exchange with a hand-computed phase table:
+/// every thread stages its tid into `sm[tid]`, one `bar.sync`, then reads
+/// its cross-warp partner `sm[tid ^ 32]` — warp 0 reads bytes warp 1
+/// wrote and vice versa, which is only correct under real barrier
+/// semantics (the serialized-warp model would read zeros for warp 0).
+const XCHG: &str = r#"
+.visible .entry xch(.param .u64 out){
+.reg .b32 %r<6>; .reg .b64 %rd<8>;
+.shared .align 4 .b8 sm[256];
+ld.param.u64 %rd1, [out];
+cvta.to.global.u64 %rd1, %rd1;
+mov.u32 %r1, %tid.x;
+mov.u64 %rd2, sm;
+mul.wide.s32 %rd3, %r1, 4;
+add.s64 %rd4, %rd2, %rd3;
+st.shared.b32 [%rd4], %r1;
+bar.sync 0;
+xor.b32 %r2, %r1, 32;
+mul.wide.s32 %rd5, %r2, 4;
+add.s64 %rd6, %rd2, %rd5;
+ld.shared.b32 %r3, [%rd6];
+mov.u32 %r4, %ctaid.x;
+mov.u32 %r5, %ntid.x;
+mad.lo.s32 %r4, %r4, %r5, %r1;
+mul.wide.s32 %rd7, %r4, 4;
+add.s64 %rd3, %rd1, %rd7;
+st.global.b32 [%rd3], %r3;
+ret;
+}
+"#;
+
+#[test]
+fn two_warp_shared_exchange_phase_table() {
+    let k = parse_kernel(XCHG).unwrap();
+    let mem = GlobalMem::new(1 << 12);
+    let mut alloc = Allocator::new(&mem);
+    let out = alloc.alloc(4 * 128);
+    let mut cfg = SimConfig::new(2, 64, vec![out]);
+    cfg.record_trace = true;
+    let r = engines_agree(&k, &cfg, mem);
+    let vals = r.mem.read_u32s(out, 128).unwrap();
+    for blk in 0..2u32 {
+        for t in 0..64u32 {
+            assert_eq!(
+                vals[(blk * 64 + t) as usize],
+                t ^ 32,
+                "block {blk} lane {t}: cross-warp partner value"
+            );
+        }
+    }
+    // 2 warps × 1 barrier × 2 blocks arrivals; one release per block
+    assert_eq!(r.stats.barriers, 4);
+    assert_eq!(r.stats.barrier_phases, 2);
+    // trace: both warps of block 0 recorded the bar.sync issue (stmt 7)
+    assert_eq!(r.trace.len(), 2);
+    for w in 0..2 {
+        assert!(
+            r.trace[w].iter().any(|e| e.stmt == 7 && e.exec == u32::MAX),
+            "warp {w} must trace its full-warp barrier arrival"
+        );
+    }
+}
+
+/// A warp retiring while its sibling waits at a barrier is a hard
+/// `BarrierDivergence { cause: Exit }` on every engine.
+#[test]
+fn warp_exit_while_others_wait_is_barrier_divergence() {
+    let k = parse_kernel(
+        r#"
+.visible .entry bx(.param .u64 out){
+.reg .b32 %r<4>; .reg .pred %p<2>;
+mov.u32 %r1, %tid.x;
+setp.ge.s32 %p1, %r1, 32;
+@%p1 bra $EXIT;
+bar.sync 0;
+$EXIT: ret;
+}
+"#,
+    )
+    .unwrap();
+    let cfg = SimConfig::new(1, 64, vec![0x1000]);
+    let e = engines_agree_on_barrier_error(&k, &cfg, GlobalMem::new(1 << 12));
+    match e {
+        SimError::BarrierDivergence { block, id, cause } => {
+            assert_eq!((block, id, cause), (0, 0, BarrierCause::Exit));
+        }
+        other => panic!("got {other:?}"),
+    }
+}
+
+/// Divergent lanes reaching a barrier (half the warp branched around it)
+/// is a hard `BarrierDivergence { cause: Divergence }`.
+#[test]
+fn divergent_lanes_at_barrier_is_barrier_divergence() {
+    let k = parse_kernel(
+        r#"
+.visible .entry bd(.param .u64 out){
+.reg .b32 %r<4>; .reg .pred %p<2>;
+mov.u32 %r1, %tid.x;
+setp.lt.s32 %p1, %r1, 16;
+@%p1 bra $SKIP;
+bar.sync 0;
+$SKIP: ret;
+}
+"#,
+    )
+    .unwrap();
+    let cfg = SimConfig::new(1, 32, vec![0x1000]);
+    let e = engines_agree_on_barrier_error(&k, &cfg, GlobalMem::new(1 << 12));
+    match e {
+        SimError::BarrierDivergence { cause, .. } => {
+            assert_eq!(cause, BarrierCause::Divergence);
+        }
+        other => panic!("got {other:?}"),
+    }
+}
+
+/// Warps waiting at *different* barrier ids is a hard mismatch error.
+#[test]
+fn mismatched_barrier_ids_are_barrier_divergence() {
+    let k = parse_kernel(
+        r#"
+.visible .entry bm(.param .u64 out){
+.reg .b32 %r<4>; .reg .pred %p<2>;
+mov.u32 %r1, %tid.x;
+setp.ge.s32 %p1, %r1, 32;
+@%p1 bra $B1;
+bar.sync 0;
+bra $END;
+$B1:
+bar.sync 1;
+$END: ret;
+}
+"#,
+    )
+    .unwrap();
+    let cfg = SimConfig::new(1, 64, vec![0x1000]);
+    let e = engines_agree_on_barrier_error(&k, &cfg, GlobalMem::new(1 << 12));
+    match e {
+        SimError::BarrierDivergence { cause, .. } => {
+            assert_eq!(cause, BarrierCause::IdMismatch { other: 1 });
+        }
+        other => panic!("got {other:?}"),
+    }
+}
+
+/// `bar.sync id, cnt` with a non-full-block count is rejected when the
+/// barrier executes, identically on both engines.
+#[test]
+fn partial_block_barrier_count_is_rejected() {
+    let k = parse_kernel(
+        r#"
+.visible .entry bc(.param .u64 out){
+.reg .b32 %r<4>;
+bar.sync 0, 32;
+ret;
+}
+"#,
+    )
+    .unwrap();
+    let cfg = SimConfig::new(1, 64, vec![0x1000]);
+    let e = engines_agree_on_barrier_error(&k, &cfg, GlobalMem::new(1 << 12));
+    match e {
+        SimError::BarrierDivergence { cause, .. } => {
+            assert_eq!(cause, BarrierCause::PartialCount { cnt: 32, tpb: 64 });
+        }
+        other => panic!("got {other:?}"),
+    }
+    // …and a count naming the full block is accepted
+    let cfg32 = SimConfig::new(1, 32, vec![0x1000]);
+    engines_agree(&k, &cfg32, GlobalMem::new(1 << 12));
+}
+
+/// `--detect-races`: the exchange kernel *without* its barrier is an
+/// intra-block same-phase race (warp 1 reads bytes warp 0 staged); with
+/// the barrier the phases differ and the diagnostic passes.
+#[test]
+fn intra_block_race_diagnostic() {
+    let racy = parse_kernel(&XCHG.replace("bar.sync 0;\n", "")).unwrap();
+    let sound = parse_kernel(XCHG).unwrap();
+    let mem = GlobalMem::new(1 << 12);
+    let mut alloc = Allocator::new(&mem);
+    let out = alloc.alloc(4 * 128);
+    let mut cfg = SimConfig::new(2, 64, vec![out]);
+    cfg.detect_races = true;
+
+    for (tag, r) in [
+        ("reference", run_reference(&racy, &cfg, mem.clone())),
+        ("decoded", run(&racy, &cfg, mem.clone())),
+    ] {
+        let e = r.expect_err("missing barrier must be a race");
+        match e {
+            SimError::IntraBlockRace {
+                writer_warp,
+                reader_warp,
+                phase,
+                shared,
+                ..
+            } => {
+                assert_eq!(
+                    (writer_warp, reader_warp, phase, shared),
+                    (0, 1, 0, true),
+                    "{tag}: race shape"
+                );
+            }
+            other => panic!("{tag}: expected IntraBlockRace, got {other:?}"),
+        }
+    }
+
+    // with the barrier, staging (phase 0) happens-before use (phase 1)
+    run_reference(&sound, &cfg, mem.clone()).expect("barrier orders the exchange");
+    run(&sound, &cfg, mem.clone()).expect("barrier orders the exchange");
+    // and the diagnostic changes nothing observable
+    cfg.detect_races = false;
+    engines_agree(&sound, &cfg, mem);
+}
+
+/// Randomized differential over the shared-memory benchmark family:
+/// reference vs decoded vs parallel (1/2/8 workers) bit-identical, and
+/// the baseline output matches the bit-exact CPU reference.
+#[test]
+fn randomized_shared_suite_differential() {
+    let benches = suite::shared_suite();
+    check_cases("shared-sim-differential", 6, |rng| {
+        for b in &benches {
+            let (nx, ny, nz) = sim_sizes(b);
+            let seed = rng.next_u64();
+            let w = suite::workload(b, nx, ny, nz, seed);
+            let mut cfg = w.cfg.clone();
+            cfg.record_trace = true;
+            let r = engines_agree(&w.kernel, &cfg, w.mem.clone());
+            assert!(r.stats.barriers > 0, "{}: barriers must execute", b.name);
+            assert!(r.stats.barrier_phases > 0, "{}", b.name);
+            let out = r.mem.read_f32s(w.out_ptr, w.out_len).unwrap();
+            for (i, (a, e)) in out.iter().zip(&w.expected).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    e.to_bits(),
+                    "{}[{i}] diverged from the CPU reference (seed {seed})",
+                    b.name
+                );
+            }
+        }
+    });
+}
+
+/// The `max_warp_steps` budget is exact on both engines even for the
+/// degenerate programs PR 4 documented as off-by-the-label-run: branches
+/// into the *middle* of a consecutive-label run and trailing labels.
+/// Reference count: mov(1) + first pass $A,$B,add,setp,bra (5) + three
+/// re-entries $B,add,setp,bra (4 each) + bra $END (1) + $END label (1)
+/// = 20 statements exactly.
+#[test]
+fn step_limit_exact_for_label_runs_and_trailing_labels() {
+    let k = parse_kernel(
+        r#"
+.visible .entry lbl(.param .u64 out){
+.reg .b32 %r<4>; .reg .pred %p<2>;
+mov.u32 %r1, 0;
+$A:
+$B:
+add.s32 %r1, %r1, 1;
+setp.lt.s32 %p1, %r1, 4;
+@%p1 bra $B;
+bra $END;
+$END:
+}
+"#,
+    )
+    .unwrap();
+    let mem = GlobalMem::new(1 << 12);
+    let mut cfg = SimConfig::new(1, 1, vec![0x1000]);
+    cfg.max_warp_steps = 20;
+    engines_agree(&k, &cfg, mem.clone());
+    cfg.max_warp_steps = 19;
+    let e1 = run_reference(&k, &cfg, mem.clone()).unwrap_err();
+    let e2 = run(&k, &cfg, mem.clone()).unwrap_err();
+    for e in [e1, e2] {
+        assert!(matches!(e, SimError::StepLimit(19)), "got {e:?}");
+    }
 }
 
 /// Decoding one suite kernel of each shape and replaying it with

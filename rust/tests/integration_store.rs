@@ -19,7 +19,10 @@ fn tmpdir(tag: &str) -> PathBuf {
 }
 
 fn benches() -> Vec<Benchmark> {
-    ["vecadd", "gradient"]
+    // vecadd/gradient for the classic class; tiledreduce so the
+    // shared-memory/barrier path (cooperative scheduler, phase-segmented
+    // emulation) is exercised through the full pipeline + disk store too
+    ["vecadd", "gradient", "tiledreduce"]
         .iter()
         .map(|n| by_name(n).unwrap())
         .collect()

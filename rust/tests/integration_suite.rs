@@ -12,7 +12,7 @@
 use ptxasw::emu::emulate;
 use ptxasw::shuffle::{detect, synthesize, DetectOpts, Variant};
 use ptxasw::sim::run;
-use ptxasw::suite::{apps, suite, workload, Pattern};
+use ptxasw::suite::{apps, shared_suite, suite, workload, Pattern};
 
 fn sizes_for(b: &ptxasw::suite::Benchmark) -> (usize, usize, usize) {
     match &b.pattern {
@@ -115,6 +115,95 @@ fn synthesized_variants_preserve_semantics() {
             run(&sk, &w.cfg, w.mem).unwrap_or_else(|e| panic!("{} {}: {e}", b.name, v.name()));
         }
     }
+}
+
+/// The shared-memory family (tiled reduction, shared-staged stencil)
+/// flows through the complete pipeline — generate → emulate (barrier
+/// phases segmenting the trace) → detect → synthesize → validate → score
+/// — with bit-exact simulator output and no cross-phase shuffles.
+#[test]
+fn shared_suite_full_pipeline() {
+    use ptxasw::coordinator::{run_benchmark, PipelineConfig};
+    for b in shared_suite() {
+        // static expectations: load counts, and barriers make shuffles
+        // impossible under the default options
+        let k = ptxasw::suite::generate(&b);
+        let res = emulate(&k).unwrap_or_else(|e| panic!("{}: emulation failed: {e}", b.name));
+        assert!(
+            res.stats.barriers > 0,
+            "{}: the emulator must walk the barriers",
+            b.name
+        );
+        let det = detect(&k, &res, DetectOpts::default());
+        assert_eq!(det.total_global_loads, b.expect_loads, "{}: loads", b.name);
+        assert_eq!(det.shuffle_count(), b.expect_shuffles, "{}: shuffles", b.name);
+
+        // end-to-end: emulate → detect → synthesize → validate → score
+        let r = run_benchmark(&b, &PipelineConfig::default())
+            .unwrap_or_else(|e| panic!("{}: pipeline failed: {e}", b.name));
+        assert!(
+            r.baseline.sim_stats.barriers > 0,
+            "{}: simulated barriers",
+            b.name
+        );
+        assert!(r.baseline.sim_stats.barrier_phases > 0, "{}", b.name);
+        for (v, o) in &r.variants {
+            assert_eq!(
+                o.valid,
+                Some(true),
+                "{} {}: synthesized variant must stay bit-exact",
+                b.name,
+                v.name()
+            );
+            assert!(!o.reports.is_empty(), "{}: scored", b.name);
+        }
+    }
+}
+
+/// Loads on opposite sides of a `bar.sync` must never be paired, even
+/// when they are same-segment, same-array and constant-delta — the
+/// values are exchanged through memory at the barrier.
+#[test]
+fn detection_never_pairs_loads_across_a_barrier() {
+    let k = ptxasw::ptx::parser::parse_kernel(
+        r#"
+.visible .entry xb(.param .u64 out, .param .u64 a){
+.reg .b32 %r<6>; .reg .b64 %rd<8>; .reg .f32 %f<4>;
+ld.param.u64 %rd1, [out];
+ld.param.u64 %rd2, [a];
+cvta.to.global.u64 %rd3, %rd2;
+cvta.to.global.u64 %rd4, %rd1;
+mov.u32 %r4, %tid.x;
+mul.wide.s32 %rd5, %r4, 4;
+add.s64 %rd6, %rd3, %rd5;
+ld.global.nc.f32 %f1, [%rd6];
+bar.sync 0;
+ld.global.nc.f32 %f2, [%rd6+4];
+add.f32 %f3, %f1, %f2;
+add.s64 %rd7, %rd4, %rd5;
+st.global.f32 [%rd7], %f3;
+ret;
+}
+"#,
+    )
+    .unwrap();
+    let res = emulate(&k).unwrap();
+    let det = detect(&k, &res, DetectOpts::default());
+    assert_eq!(
+        det.shuffle_count(),
+        0,
+        "a bar.sync between the loads must veto the pair: {:?}",
+        det.chosen
+    );
+    // the identical kernel without the barrier detects the N=1 shuffle
+    let k2 = ptxasw::ptx::parser::parse_kernel(
+        &ptxasw::ptx::printer::print_kernel(&k).replace("bar.sync 0;\n", ""),
+    )
+    .unwrap();
+    let res2 = emulate(&k2).unwrap();
+    let det2 = detect(&k2, &res2, DetectOpts::default());
+    assert_eq!(det2.shuffle_count(), 1);
+    assert_eq!(det2.chosen[0].delta, 1);
 }
 
 #[test]
