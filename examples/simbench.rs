@@ -1,9 +1,12 @@
 //! `simbench` — simulator throughput benchmark (warp-steps/sec).
 //!
-//! Runs a benchmark family through the three simulator configurations —
-//! the reference AST walker, the decoded micro-op engine serial, and the
-//! decoded engine with one worker per CPU — measuring the best-of-N wall
-//! time each, and emits a JSON report with per-benchmark numbers and
+//! Runs a benchmark family through the reference AST walker and the
+//! decoded micro-op engine in every execution-path configuration —
+//! scalar (per-uop per-lane, the PR 3 engine), superblock (fused
+//! straight-line runs), vector (lane-vectorized ALU kernels; inert
+//! without the `simd` cargo feature), fused (superblock + vector), and
+//! fused with one worker per CPU — measuring the best-of-N wall time
+//! each, and emits a JSON report with per-benchmark numbers and
 //! aggregates. The headline metric is warp-level instruction issues per
 //! second (`warp-steps/sec`).
 //!
@@ -13,22 +16,32 @@
 //! no-regression gate); `--family shared` is the shared-memory/barrier
 //! family opened by the cooperative scheduler (`BENCH_5.json` — every
 //! run exercises real `bar.sync` suspend/resume); `--family all` runs
-//! both.
+//! both and is the engine-matrix artifact (`BENCH_6.json`).
 //!
 //! The run doubles as a correctness gate: every engine's output image is
 //! compared bit-for-bit before a timing is accepted, and the shared
 //! family additionally asserts barrier phases actually happened.
 //!
 //!     cargo run --release --example simbench -- [--family table2|shared|all]
+//!                                               [--engine both|scalar|superblock|vector]
 //!                                               [--out FILE] [--repeat N]
 //!                                               [--sim-threads N]
 
 use ptxasw::cli::Args;
 use ptxasw::coordinator::sim_sizes;
-use ptxasw::sim::{decode, run_decoded, run_reference, SimResult};
+use ptxasw::sim::{decode, run_decoded, run_reference, SimConfig, SimResult};
 use ptxasw::suite;
 use std::fmt::Write as _;
 use std::time::Instant;
+
+/// The decoded engine's execution-path columns: (superblocks, vector).
+/// `scalar` is the PR 3 per-uop per-lane engine and the speedup baseline.
+const ENGINES: [(&str, bool, bool); 4] = [
+    ("scalar", false, false),
+    ("superblock", true, false),
+    ("vector", false, true),
+    ("fused", true, true),
+];
 
 struct Row {
     name: &'static str,
@@ -36,7 +49,9 @@ struct Row {
     blocks: u32,
     decode_us: f64,
     reference_s: f64,
-    decoded_s: f64,
+    /// Serial timing per engine column, in `ENGINES` order; `None` for
+    /// columns excluded by `--engine`.
+    engine_s: [Option<f64>; 4],
     parallel_s: f64,
 }
 
@@ -61,10 +76,25 @@ fn main() {
         "all" => {
             let mut v = suite::suite();
             v.extend(suite::shared_suite());
-            (v, "BENCH_3+5", "BENCH_ALL.json")
+            (v, "BENCH_6", "BENCH_6.json")
         }
         other => {
             eprintln!("simbench: unknown --family `{other}` (table2|shared|all)");
+            std::process::exit(2);
+        }
+    };
+    // `--engine both` (default) measures every column; a single engine
+    // name restricts the serial columns to scalar + that engine (scalar
+    // is always kept: it is the baseline every speedup is quoted against)
+    let engine = args.opt("engine").unwrap_or("both").to_string();
+    let measured: Vec<bool> = match engine.as_str() {
+        "both" | "all" | "fused" => vec![true; ENGINES.len()],
+        name if ENGINES.iter().any(|(n, ..)| *n == name) => ENGINES
+            .iter()
+            .map(|(n, ..)| *n == name || *n == "scalar")
+            .collect(),
+        other => {
+            eprintln!("simbench: unknown --engine `{other}` (both|scalar|superblock|vector)");
             std::process::exit(2);
         }
     };
@@ -92,19 +122,33 @@ fn main() {
         let dk = decode(&w.kernel).expect("decode");
         let decode_us = t0.elapsed().as_secs_f64() * 1e6;
 
-        let mut c1 = cfg.clone();
-        c1.sim_threads = 1;
-        let mut cn = cfg.clone();
-        cn.sim_threads = par_threads;
+        let engine_cfg = |superblocks: bool, vector: bool, threads: usize| -> SimConfig {
+            let mut c = cfg.clone();
+            c.sim_threads = threads;
+            c.superblocks = superblocks;
+            c.vector = vector;
+            c
+        };
+
         let (reference_s, r_ref) =
             best_of(repeat, || run_reference(&w.kernel, &cfg, w.mem.clone()).expect("reference"));
-        let (decoded_s, r_dec) =
-            best_of(repeat, || run_decoded(&dk, &c1, w.mem.clone()).expect("decoded"));
+
+        let mut engine_s = [None; 4];
+        for (i, (name, superblocks, vector)) in ENGINES.iter().enumerate() {
+            if !measured[i] {
+                continue;
+            }
+            let c = engine_cfg(*superblocks, *vector, 1);
+            let (t, r) = best_of(repeat, || run_decoded(&dk, &c, w.mem.clone()).expect(name));
+            check_agree(b.name, &r_ref, &r, name);
+            engine_s[i] = Some(t);
+        }
+
+        let cn = engine_cfg(true, true, par_threads);
         let (parallel_s, r_par) =
             best_of(repeat, || run_decoded(&dk, &cn, w.mem.clone()).expect("parallel"));
-
-        check_agree(b.name, &r_ref, &r_dec, "decoded");
         check_agree(b.name, &r_ref, &r_par, "parallel");
+
         if barrier_family {
             assert!(
                 r_ref.stats.barrier_phases > 0,
@@ -125,49 +169,72 @@ fn main() {
             blocks: cfg.grid.0 * cfg.grid.1 * cfg.grid.2,
             decode_us,
             reference_s,
-            decoded_s,
+            engine_s,
             parallel_s,
         });
     }
 
     let total_steps: u64 = rows.iter().map(|r| r.warp_steps).sum();
     let total_ref: f64 = rows.iter().map(|r| r.reference_s).sum();
-    let total_dec: f64 = rows.iter().map(|r| r.decoded_s).sum();
     let total_par: f64 = rows.iter().map(|r| r.parallel_s).sum();
+    let total_engine: Vec<Option<f64>> = (0..ENGINES.len())
+        .map(|i| {
+            measured[i].then(|| rows.iter().map(|r| r.engine_s[i].unwrap()).sum::<f64>())
+        })
+        .collect();
     let geomean = |f: &dyn Fn(&Row) -> f64| -> f64 {
         (rows.iter().map(|r| f(r).ln()).sum::<f64>() / rows.len() as f64).exp()
     };
-    let gm_dec = geomean(&|r| r.reference_s / r.decoded_s);
-    let gm_par = geomean(&|r| r.reference_s / r.parallel_s);
 
     let mut json = String::new();
     writeln!(json, "{{").unwrap();
     writeln!(json, "  \"bench_id\": \"{bench_id}\",").unwrap();
     writeln!(json, "  \"family\": \"{family}\",").unwrap();
+    writeln!(json, "  \"engine\": \"{engine}\",").unwrap();
+    writeln!(json, "  \"simd_feature\": {},", cfg!(feature = "simd")).unwrap();
     writeln!(json, "  \"unit\": \"warp-steps/sec\",").unwrap();
     writeln!(json, "  \"repeat\": {repeat},").unwrap();
     writeln!(json, "  \"parallel_threads\": {par_threads},").unwrap();
     writeln!(json, "  \"benchmarks\": [").unwrap();
     for (i, r) in rows.iter().enumerate() {
         let comma = if i + 1 == rows.len() { "" } else { "," };
-        writeln!(
+        write!(
             json,
             "    {{\"name\": \"{}\", \"warp_steps\": {}, \"blocks\": {}, \
              \"decode_us\": {:.1}, \
-             \"reference_s\": {:.6}, \"decoded_s\": {:.6}, \"parallel_s\": {:.6}, \
-             \"reference_wsps\": {:.0}, \"decoded_wsps\": {:.0}, \"parallel_wsps\": {:.0}, \
-             \"speedup_decoded\": {:.3}, \"speedup_parallel\": {:.3}}}{comma}",
+             \"reference_s\": {:.6}, \"reference_wsps\": {:.0}",
             r.name,
             r.warp_steps,
             r.blocks,
             r.decode_us,
             r.reference_s,
-            r.decoded_s,
-            r.parallel_s,
             r.warp_steps as f64 / r.reference_s,
-            r.warp_steps as f64 / r.decoded_s,
+        )
+        .unwrap();
+        for (j, (name, ..)) in ENGINES.iter().enumerate() {
+            if let Some(t) = r.engine_s[j] {
+                write!(
+                    json,
+                    ", \"{name}_s\": {:.6}, \"{name}_wsps\": {:.0}",
+                    t,
+                    r.warp_steps as f64 / t
+                )
+                .unwrap();
+            }
+        }
+        if let Some(scalar) = r.engine_s[0] {
+            for (j, (name, ..)) in ENGINES.iter().enumerate().skip(1) {
+                if let Some(t) = r.engine_s[j] {
+                    write!(json, ", \"speedup_{name}_vs_scalar\": {:.3}", scalar / t).unwrap();
+                }
+            }
+        }
+        writeln!(
+            json,
+            ", \"parallel_s\": {:.6}, \"parallel_wsps\": {:.0}, \
+             \"speedup_parallel_vs_reference\": {:.3}}}{comma}",
+            r.parallel_s,
             r.warp_steps as f64 / r.parallel_s,
-            r.reference_s / r.decoded_s,
             r.reference_s / r.parallel_s,
         )
         .unwrap();
@@ -175,21 +242,28 @@ fn main() {
     writeln!(json, "  ],").unwrap();
     writeln!(json, "  \"total_warp_steps\": {total_steps},").unwrap();
     writeln!(json, "  \"reference_wsps\": {:.0},", total_steps as f64 / total_ref).unwrap();
-    writeln!(json, "  \"decoded_wsps\": {:.0},", total_steps as f64 / total_dec).unwrap();
+    for (j, (name, ..)) in ENGINES.iter().enumerate() {
+        if let Some(t) = total_engine[j] {
+            writeln!(json, "  \"{name}_wsps\": {:.0},", total_steps as f64 / t).unwrap();
+        }
+    }
+    if let Some(scalar) = total_engine[0] {
+        for (j, (name, ..)) in ENGINES.iter().enumerate().skip(1) {
+            if let Some(t) = total_engine[j] {
+                writeln!(json, "  \"speedup_{name}_vs_scalar\": {:.3},", scalar / t).unwrap();
+                let gm = geomean(&|r| r.engine_s[0].unwrap() / r.engine_s[j].unwrap());
+                writeln!(json, "  \"geomean_speedup_{name}_vs_scalar\": {gm:.3},").unwrap();
+            }
+        }
+    }
     writeln!(json, "  \"parallel_wsps\": {:.0},", total_steps as f64 / total_par).unwrap();
-    writeln!(
-        json,
-        "  \"speedup_decoded_vs_reference\": {:.3},",
-        total_ref / total_dec
-    )
-    .unwrap();
     writeln!(
         json,
         "  \"speedup_parallel_vs_reference\": {:.3},",
         total_ref / total_par
     )
     .unwrap();
-    writeln!(json, "  \"geomean_speedup_decoded\": {gm_dec:.3},").unwrap();
+    let gm_par = geomean(&|r| r.reference_s / r.parallel_s);
     writeln!(json, "  \"geomean_speedup_parallel\": {gm_par:.3}").unwrap();
     writeln!(json, "}}").unwrap();
 
@@ -199,17 +273,24 @@ fn main() {
         rows.len()
     );
     eprintln!(
-        "  reference {:>12.0} warp-steps/s",
+        "  reference  {:>12.0} warp-steps/s",
         total_steps as f64 / total_ref
     );
+    let scalar_total = total_engine[0];
+    for (j, (name, ..)) in ENGINES.iter().enumerate() {
+        if let Some(t) = total_engine[j] {
+            let vs = match scalar_total {
+                Some(s) if j > 0 => format!("  ({:.2}x vs scalar)", s / t),
+                _ => String::new(),
+            };
+            eprintln!(
+                "  {name:<10} {:>12.0} warp-steps/s{vs}",
+                total_steps as f64 / t
+            );
+        }
+    }
     eprintln!(
-        "  decoded   {:>12.0} warp-steps/s  ({:.2}x, geomean {:.2}x)",
-        total_steps as f64 / total_dec,
-        total_ref / total_dec,
-        gm_dec
-    );
-    eprintln!(
-        "  parallel  {:>12.0} warp-steps/s  ({:.2}x, geomean {:.2}x, {par_threads} threads)",
+        "  parallel   {:>12.0} warp-steps/s  ({:.2}x vs reference, geomean {:.2}x, {par_threads} threads)",
         total_steps as f64 / total_par,
         total_ref / total_par,
         gm_par

@@ -124,6 +124,19 @@ mod tests {
     }
 
     #[test]
+    fn engine_takes_a_value() {
+        // `--engine` consumes its value and leaves surrounding
+        // positionals/flags intact (it is NOT in the bare-flag whitelist)
+        let a = parse("suite jacobi --engine scalar --stats");
+        assert_eq!(a.opt("engine"), Some("scalar"));
+        assert!(a.flag("stats"));
+        assert_eq!(a.positional, vec!["jacobi"]);
+        let b = parse("suite --engine=superblock jacobi");
+        assert_eq!(b.opt("engine"), Some("superblock"));
+        assert_eq!(b.positional, vec!["jacobi"]);
+    }
+
+    #[test]
     fn opt_usize_parses() {
         let a = parse("suite --threads 8");
         assert_eq!(a.opt_usize("threads", 1).unwrap(), 8);

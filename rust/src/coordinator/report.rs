@@ -179,6 +179,12 @@ pub fn pipeline_stats(s: &crate::pipeline::PipelineStats) -> String {
     } else {
         writeln!(out, "disk cache: disabled").unwrap();
     }
+    writeln!(
+        out,
+        "engine: {} superblocks entered, {} vector warp steps",
+        s.superblocks_entered, s.vector_warp_steps
+    )
+    .unwrap();
     writeln!(out).unwrap();
     writeln!(out, "{:<12} {:>8} {:>12} {:>12}", "stage", "runs", "total", "mean").unwrap();
     for stage in STAGES {

@@ -52,6 +52,11 @@ USAGE:
                     (cross-block read-after-write is scheduling-dependent
                     on real hardware). Diagnostic runs are never cached
                     on disk
+  --engine E        decoded-engine execution paths: fused (default; superblock
+                    fast path + lane-vectorized kernels), superblock,
+                    vector, or scalar (per-uop per-lane). Results are
+                    bit-identical for every choice; `vector` takes effect
+                    only in builds with the `simd` cargo feature
   cache flags:
   --cache-dir DIR   persist pipeline artifacts under DIR (default:
                     $RUST_PALLAS_CACHE_DIR, else ~/.cache/rust_pallas);
@@ -63,10 +68,24 @@ USAGE:
 /// unless `--no-disk-cache` is given. A missing default cache location is
 /// not an error (the disk layer is an accelerator, not a dependency); an
 /// explicit `--cache-dir` that cannot be opened is.
+fn engine_of(s: Option<&str>) -> Result<(bool, bool), String> {
+    Ok(match s.unwrap_or("fused") {
+        "fused" | "both" => (true, true),
+        "superblock" => (true, false),
+        "vector" => (false, true),
+        "scalar" => (false, false),
+        other => return Err(format!(
+            "unknown engine `{other}` (expected fused|superblock|vector|scalar)"
+        )),
+    })
+}
+
 fn build_pipeline(args: &Args) -> Result<Pipeline, String> {
+    let (superblocks, vector) = engine_of(args.opt("engine"))?;
     let p = Pipeline::new()
         .with_sim_threads(args.opt_usize("sim-threads", 1)?)
-        .with_detect_races(args.flag("detect-races"));
+        .with_detect_races(args.flag("detect-races"))
+        .with_engine(superblocks, vector);
     if args.flag("no-disk-cache") {
         return Ok(p);
     }

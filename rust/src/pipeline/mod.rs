@@ -132,6 +132,12 @@ pub struct PipelineStats {
     pub disk: DiskSnapshot,
     pub stage_nanos: [u64; STAGES.len()],
     pub stage_runs: [u64; STAGES.len()],
+    /// Decoded-engine telemetry summed over every simulation this
+    /// pipeline ran: straight-line runs taken in one scheduling slice.
+    pub superblocks_entered: u64,
+    /// Warp micro-ops dispatched through the lane-vectorized kernels
+    /// (always 0 without the `simd` feature or with `--engine` scalar).
+    pub vector_warp_steps: u64,
 }
 
 impl PipelineStats {
@@ -151,7 +157,7 @@ impl PipelineStats {
 /// fresh one per call unless handed an existing pipeline to share the
 /// cache across runs. Two pipelines (or processes) opened over the same
 /// cache directory share artifacts through the [`DiskStore`].
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Pipeline {
     session: Arc<SessionInterner>,
     limits: Limits,
@@ -174,6 +180,34 @@ pub struct Pipeline {
     /// without the shadow must never satisfy a diagnostic query, and a
     /// diagnostic result must never leak into normal runs.
     detect_races: bool,
+    /// Superblock fast path in the decoded engine (`--engine`). Not part
+    /// of any cache key: results are bit-identical either way.
+    superblocks: bool,
+    /// Lane-vectorized kernels in the decoded engine (`--engine`; inert
+    /// without the `simd` cargo feature). Not part of any cache key.
+    vector: bool,
+    /// Decoded-engine telemetry summed across this pipeline's runs.
+    superblocks_entered: AtomicU64,
+    vector_warp_steps: AtomicU64,
+}
+
+impl Default for Pipeline {
+    fn default() -> Pipeline {
+        Pipeline {
+            session: Arc::default(),
+            limits: Limits::default(),
+            cache: ArtifactCache::default(),
+            timings: StageTimings::default(),
+            store: None,
+            sim_threads: 0,
+            detect_races: false,
+            // both engine paths are on by default (bit-identical results)
+            superblocks: true,
+            vector: true,
+            superblocks_entered: AtomicU64::new(0),
+            vector_warp_steps: AtomicU64::new(0),
+        }
+    }
 }
 
 impl Pipeline {
@@ -216,6 +250,31 @@ impl Pipeline {
     /// Whether the cross-block read-after-write diagnostic is on.
     pub fn detect_races(&self) -> bool {
         self.detect_races
+    }
+
+    /// Select the decoded engine's execution paths (the CLI `--engine`
+    /// flag): the superblock fast path and the lane-vectorized kernels.
+    /// Both default to on. Results are bit-identical in every
+    /// combination (differential-tested), so neither is part of any
+    /// cache key — the flags only matter for throughput and telemetry.
+    pub fn with_engine(mut self, superblocks: bool, vector: bool) -> Pipeline {
+        self.superblocks = superblocks;
+        self.vector = vector;
+        self
+    }
+
+    /// The decoded-engine path selection as `(superblocks, vector)`.
+    pub fn engine(&self) -> (bool, bool) {
+        (self.superblocks, self.vector)
+    }
+
+    /// Fold one simulation's engine telemetry into the pipeline-wide
+    /// counters (the validate stage calls this after every run).
+    pub(crate) fn note_engine_stats(&self, s: &crate::sim::SimStats) {
+        self.superblocks_entered
+            .fetch_add(s.superblocks_entered, Ordering::Relaxed);
+        self.vector_warp_steps
+            .fetch_add(s.vector_warp_steps, Ordering::Relaxed);
     }
 
     /// Attach an on-disk artifact store; detected/synthesized/validated/
@@ -635,6 +694,8 @@ impl Pipeline {
             s.stage_nanos[i] = self.timings.nanos[i].load(Ordering::Relaxed);
             s.stage_runs[i] = self.timings.runs[i].load(Ordering::Relaxed);
         }
+        s.superblocks_entered = self.superblocks_entered.load(Ordering::Relaxed);
+        s.vector_warp_steps = self.vector_warp_steps.load(Ordering::Relaxed);
         s
     }
 }

@@ -58,7 +58,12 @@ pub fn validate(
         // diagnostic mode: serial engine + load-side race shadow (the
         // executor forces one worker itself; see `sim::exec`)
         cfg.detect_races = p.detect_races();
+        // engine path selection (`--engine`): affects throughput and the
+        // telemetry counters only — results are bit-identical, so the
+        // artifact (and its cache key) are engine-independent
+        (cfg.superblocks, cfg.vector) = p.engine();
         let r = run_decoded(&decoded, &cfg, w.mem.clone())?;
+        p.note_engine_stats(&r.stats);
         let out = r.mem.read_f32s(w.out_ptr, w.out_len)?;
         let valid = baseline_out.map(|base| {
             base.len() == out.len()

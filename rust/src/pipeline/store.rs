@@ -55,7 +55,10 @@ use std::time::{Duration, SystemTime};
 /// v4: `SimStats` grew the barrier counters, memory-trace records carry
 /// the barrier phase, and the decoded form carries branch statement
 /// positions (`nstmts`, `Bra::target_stmt`, `BarSync` id/cnt).
-pub const STORE_VERSION: u32 = 4;
+/// v5: `SimStats` grew the engine telemetry counters
+/// (`superblocks_entered`, `vector_warp_steps`) and the decoded form
+/// carries the superblock table (`sb_end`).
+pub const STORE_VERSION: u32 = 5;
 const MAGIC: [u8; 4] = *b"RPST";
 /// Default resident-set bound: 256 MiB.
 pub const DEFAULT_MAX_BYTES: u64 = 256 * 1024 * 1024;
@@ -570,6 +573,8 @@ pub(crate) fn encode_validated(a: &Validated) -> Vec<u8> {
         s.cross_block_write_conflicts,
         s.barriers,
         s.barrier_phases,
+        s.superblocks_entered,
+        s.vector_warp_steps,
     ] {
         e.u64(v);
     }
@@ -613,6 +618,8 @@ pub(crate) fn decode_validated(bytes: &[u8]) -> Option<Validated> {
         cross_block_write_conflicts: d.u64()?,
         barriers: d.u64()?,
         barrier_phases: d.u64()?,
+        superblocks_entered: d.u64()?,
+        vector_warp_steps: d.u64()?,
     };
     let nwarps = d.len()?;
     let mut trace = Vec::with_capacity(nwarps);

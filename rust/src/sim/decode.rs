@@ -218,6 +218,33 @@ pub struct DecodedKernel {
     /// missing-value errors.
     pub param_names: Vec<String>,
     pub uops: Vec<UopEntry>,
+    /// Superblock table, one entry per micro-op: `sb_end[i]` is the
+    /// exclusive end of the maximal *straight-line* run starting at `i` —
+    /// no control flow (`bra`/`ret`/`bar.sync`) anywhere in
+    /// `i..sb_end[i]`; for a control op itself `sb_end[i] == i`. Indexing
+    /// by the run's *start* means a branch into the middle of a run needs
+    /// no split: the entry at the landing uop is exactly the remaining
+    /// suffix. The executor's fast path runs a whole (possibly clamped)
+    /// run with one bulk step charge and no per-uop bookkeeping; see
+    /// `sim::exec`.
+    pub sb_end: Vec<u32>,
+}
+
+/// Compute the superblock table for a micro-op stream (decode-time; also
+/// the ground truth [`DecodedKernel::from_bytes`] revalidates a persisted
+/// table against — derived data is never trusted from disk).
+fn superblock_ends(uops: &[UopEntry]) -> Vec<u32> {
+    let mut ends = vec![0u32; uops.len()];
+    let mut end = uops.len() as u32;
+    for (i, u) in uops.iter().enumerate().rev() {
+        if matches!(u.op, Uop::Bra { .. } | Uop::Ret | Uop::BarSync { .. }) {
+            ends[i] = i as u32;
+            end = i as u32;
+        } else {
+            ends[i] = end;
+        }
+    }
+    ends
 }
 
 impl DecodedKernel {
@@ -257,6 +284,9 @@ impl DecodedKernel {
             }
             enc_uop(&mut e, &u.op);
         }
+        for &end in &self.sb_end {
+            e.u32(end);
+        }
         e.buf
     }
 
@@ -295,12 +325,17 @@ impl DecodedKernel {
             }
             uops.push(UopEntry { stmt, guard, op });
         }
+        let mut sb_end = Vec::with_capacity(nuops);
+        for _ in 0..nuops {
+            sb_end.push(d.u32()?);
+        }
         let dk = DecodedKernel {
             nregs,
             shared_size,
             nstmts,
             param_names,
             uops,
+            sb_end,
         };
         (d.done() && dk.validate()).then_some(dk)
     }
@@ -320,6 +355,12 @@ impl DecodedKernel {
         let addr_ok = |a: &Daddr| dop_ok(&a.base);
         let bytes_ok = |b: u32| (1..=8).contains(&b);
         if self.uops.last().map(|u| u.stmt >= self.nstmts).unwrap_or(false) {
+            return false;
+        }
+        // The superblock table is derived data: revalidate by exact
+        // recomputation (the fast path runs interiors with no per-uop
+        // checks, so a stale or tampered table must never load).
+        if self.sb_end != superblock_ends(&self.uops) {
             return false;
         }
         self.uops.iter().all(|u| {
@@ -1157,12 +1198,14 @@ pub fn decode(kernel: &Kernel) -> Result<DecodedKernel, SimError> {
         });
     }
 
+    let sb_end = superblock_ends(&uops);
     Ok(DecodedKernel {
         nregs: d.regs.len() as u32,
         shared_size,
         nstmts: kernel.body.len() as u32,
         param_names: kernel.params.iter().map(|p| p.name.clone()).collect(),
         uops,
+        sb_end,
     })
 }
 
@@ -1228,6 +1271,39 @@ $EXIT: ret;
             panic!()
         };
         assert_eq!((*index, *mask), (1, 0xFFFF_FFFF));
+    }
+
+    #[test]
+    fn superblock_table_splits_at_control_ops_only() {
+        let k = parse_kernel(K).unwrap();
+        let dk = decode(&k).unwrap();
+        // uop 5 is the guarded bra, uop 9 the ret; runs are [0,5) and
+        // [6,9), and every interior index points at its run's suffix end
+        assert_eq!(dk.sb_end.len(), dk.uops.len());
+        for i in 0..5 {
+            assert_eq!(dk.sb_end[i], 5, "prefix run at uop {i}");
+        }
+        assert_eq!(dk.sb_end[5], 5, "control op has an empty run");
+        for i in 6..9 {
+            assert_eq!(dk.sb_end[i], 9, "body run at uop {i}");
+        }
+        assert_eq!(dk.sb_end[9], 9, "ret has an empty run");
+    }
+
+    #[test]
+    fn codec_roundtrips_and_rejects_a_tampered_superblock_table() {
+        let k = parse_kernel(K).unwrap();
+        let dk = decode(&k).unwrap();
+        let bytes = dk.to_bytes();
+        let back = DecodedKernel::from_bytes(&bytes).expect("roundtrip");
+        assert_eq!(back.sb_end, dk.sb_end);
+        assert_eq!(back.uops.len(), dk.uops.len());
+        // the table is the trailing section: flipping its last entry must
+        // fail the recomputation check, not load a bogus fast path
+        let mut bad = bytes.clone();
+        let n = bad.len();
+        bad[n - 4] ^= 1;
+        assert!(DecodedKernel::from_bytes(&bad).is_none());
     }
 
     #[test]

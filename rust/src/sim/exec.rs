@@ -66,6 +66,40 @@
 //! bytes an earlier block wrote is a hard [`SimError::CrossBlockRace`]
 //! (snapshot isolation in the parallel path hides exactly those reads,
 //! which is why the diagnostic pins the serial engine).
+//!
+//! # Superblock fast path
+//!
+//! With [`SimConfig::superblocks`] set (the default), a warp group whose
+//! current micro-op starts a decode-time-fused straight-line run
+//! ([`DecodedKernel::sb_end`]) executes the whole run at once: the step
+//! budget is charged in bulk at entry (the telescoped sum of the per-uop
+//! charges, `last.stmt + 1 - min(stmt_pos)`, via the statement side
+//! table), and the interior skips the per-uop scheduling loop entirely —
+//! no min-pc reconvergence scans, no per-uop budget checks, no trace
+//! hooks, no per-uop `pc`/`stmt_pos` writes. The run is clamped to the
+//! earliest *other* live lane's pc, so divergent groups merge exactly
+//! where the per-uop path merges them, and a run that could trip
+//! `max_warp_steps` mid-block falls back to the per-uop path so the
+//! `StepLimit`-vs-memory-error interleaving never changes. The fast path
+//! is disabled per block while that block records a [`WarpEvent`] trace,
+//! and globally under `detect_races` — those paths need per-uop hooks.
+//! Scheduler handoff is untouched: `bar.sync` always terminates a run
+//! (barriers are control ops, so no superblock contains one), and the
+//! suspend/release protocol is exactly the per-uop path's.
+//!
+//! # Lane-vectorized kernels (`simd` feature)
+//!
+//! With the `simd` cargo feature and [`SimConfig::vector`] set, hot
+//! register-to-register micro-ops (integer/float ALU, `setp`, `selp`,
+//! moves) dispatch once per warp to full-width kernels over the
+//! struct-of-arrays state (`sim::lanes`): operands are gathered into
+//! 32-lane buffers with the same masks the scalar path uses, computed
+//! branchlessly for all lanes, and blended back under the exec mask —
+//! shapes the compiler maps onto SIMD units. The per-lane scalar path is
+//! retained verbatim as the differential oracle (and is the only path on
+//! the default stable build); uninitialized-read accounting is preserved
+//! exactly (`popcount(exec & !written)` per operand equals the scalar
+//! per-lane count).
 
 use super::decode::{Daddr, DecodedKernel, Dop, Uop};
 use super::machine::{
@@ -240,6 +274,8 @@ fn accumulate(dst: &mut SimStats, s: &SimStats) {
         cross_block_write_conflicts,
         barriers,
         barrier_phases,
+        superblocks_entered,
+        vector_warp_steps,
     } = *s;
     dst.warp_instructions += warp_instructions;
     dst.thread_instructions += thread_instructions;
@@ -254,6 +290,8 @@ fn accumulate(dst: &mut SimStats, s: &SimStats) {
     dst.cross_block_write_conflicts += cross_block_write_conflicts;
     dst.barriers += barriers;
     dst.barrier_phases += barrier_phases;
+    dst.superblocks_entered += superblocks_entered;
+    dst.vector_warp_steps += vector_warp_steps;
 }
 
 /// Serial launch order: `bx` fastest, then `by`, then `bz`.
@@ -394,6 +432,9 @@ impl<'a> Worker<'a> {
         self.log.clear();
         self.trace.clear();
         let record = self.cfg.record_trace && bidx == 0;
+        // superblock fast path needs no per-uop trace hooks or race
+        // probes; fall back to per-uop whenever either is requested
+        let fast = self.cfg.superblocks && !record && !self.cfg.detect_races;
         let nwarps = tpb.div_ceil(32) as usize;
         let nregs = self.dk.nregs as usize;
         while self.warps.len() < nwarps {
@@ -436,7 +477,7 @@ impl<'a> Worker<'a> {
                 }
                 self.cur_warp = w as u32;
                 self.swap_warp(w);
-                let halt = self.run_warp(ctaid, record, tpb);
+                let halt = self.run_warp(ctaid, record, fast, tpb);
                 self.swap_warp(w);
                 match halt {
                     Ok(WarpHalt::Finished) => self.warps[w].status = WarpStatus::Finished,
@@ -628,22 +669,33 @@ impl<'a> Worker<'a> {
         &mut self,
         ctaid: (u32, u32, u32),
         record: bool,
+        fast: bool,
         tpb: u32,
     ) -> Result<WarpHalt, SimError> {
         let dk = self.dk;
         let nuops = dk.uops.len() as u32;
         loop {
-            // lowest-pc-first reconvergence over live lanes
+            // lowest-pc-first reconvergence over live lanes; also track
+            // the second-distinct-lowest pc, which bounds how far the
+            // superblock fast path may run before another group could
+            // merge in
             let live = !self.done;
             if live == 0 {
                 return Ok(WarpHalt::Finished);
             }
             let mut pc = u32::MAX;
+            let mut next_pc = u32::MAX;
             let mut m = live;
             while m != 0 {
                 let l = m.trailing_zeros() as usize;
                 m &= m - 1;
-                pc = pc.min(self.pc[l]);
+                let p = self.pc[l];
+                if p < pc {
+                    next_pc = pc;
+                    pc = p;
+                } else if p > pc {
+                    next_pc = next_pc.min(p);
+                }
             }
             if pc >= nuops {
                 // min pc past the end ⇒ every live lane is retiring.
@@ -675,6 +727,36 @@ impl<'a> Worker<'a> {
                     min_sp = min_sp.min(self.stmt_pos[l]);
                 }
             }
+            // Superblock fast path: run the whole decode-time-fused
+            // straight-line run starting at `pc` in one scheduling slice.
+            // The run is clamped to the earliest *other* live lane's pc
+            // (no lane can merge strictly inside the clamped run, so the
+            // per-uop path would keep this exact group active throughout)
+            // and only taken when the bulk step charge — the telescoped
+            // sum of the per-uop charges; every lane at `pc` has
+            // `stmt_pos <= entry.stmt`, so no intermediate charge
+            // saturates — fits the remaining budget, keeping the
+            // StepLimit/memory-error interleaving per-uop-exact.
+            if fast {
+                let end = dk.sb_end[pc as usize].min(next_pc);
+                if end >= pc + 2 {
+                    let last_stmt = dk.uops[end as usize - 1].stmt;
+                    let bulk = (last_stmt + 1).saturating_sub(min_sp) as u64;
+                    if self.steps + bulk <= self.cfg.max_warp_steps {
+                        self.steps += bulk;
+                        self.stats.superblocks_entered += 1;
+                        self.run_superblock(pc, end, active, ctaid)?;
+                        let mut m = active;
+                        while m != 0 {
+                            let l = m.trailing_zeros() as usize;
+                            m &= m - 1;
+                            self.pc[l] = end;
+                            self.stmt_pos[l] = last_stmt + 1;
+                        }
+                        continue;
+                    }
+                }
+            }
             // The step budget counts *statements*, like the reference
             // engine: each issue is charged the instruction itself plus
             // the labels between the issuing group's entry point into the
@@ -691,24 +773,7 @@ impl<'a> Worker<'a> {
             }
 
             self.stats.warp_instructions += 1;
-            // per-lane guard evaluation (plain register read, no
-            // uninitialized-read accounting — as in the reference engine)
-            let exec = match entry.guard {
-                None => active,
-                Some((g, negated)) => {
-                    let g = g as usize;
-                    let mut e = 0u32;
-                    let mut m = active;
-                    while m != 0 {
-                        let l = m.trailing_zeros() as usize;
-                        m &= m - 1;
-                        if (self.regs[g * WARP + l] & 1 == 1) != negated {
-                            e |= 1 << l;
-                        }
-                    }
-                    e
-                }
-            };
+            let exec = self.guard_mask(entry.guard, active);
             self.stats.thread_instructions += exec.count_ones() as u64;
             if record {
                 // address of the first executing lane for memory ops
@@ -818,6 +883,79 @@ impl<'a> Worker<'a> {
                 }
                 return Ok(());
             }
+            _ => self.exec_op(pc, active, exec, ctaid)?,
+        }
+        let mut m = active;
+        while m != 0 {
+            let l = m.trailing_zeros() as usize;
+            m &= m - 1;
+            self.pc[l] += 1;
+            self.stmt_pos[l] = stmt + 1;
+        }
+        Ok(())
+    }
+
+    /// Per-lane guard evaluation (plain register read, no
+    /// uninitialized-read accounting — as in the reference engine).
+    #[inline]
+    fn guard_mask(&self, guard: Option<(u32, bool)>, active: u32) -> u32 {
+        match guard {
+            None => active,
+            Some((g, negated)) => {
+                let g = g as usize;
+                let mut e = 0u32;
+                let mut m = active;
+                while m != 0 {
+                    let l = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    if (self.regs[g * WARP + l] & 1 == 1) != negated {
+                        e |= 1 << l;
+                    }
+                }
+                e
+            }
+        }
+    }
+
+    /// Execute the fused straight-line run `start..end` for the `active`
+    /// group (every lane of which sits at `start`). The caller has
+    /// already charged the step budget in bulk and updates
+    /// `pc`/`stmt_pos` once at exit; the interior is exactly the per-uop
+    /// semantic sequence — guard, instruction counters, dispatch — minus
+    /// the scheduler's per-uop bookkeeping. Memory errors abort the whole
+    /// simulation here just as they do per-uop, and in the same order,
+    /// because the budget pre-check guaranteed no interior StepLimit.
+    fn run_superblock(
+        &mut self,
+        start: u32,
+        end: u32,
+        active: u32,
+        ctaid: (u32, u32, u32),
+    ) -> Result<(), SimError> {
+        let dk = self.dk;
+        // one slice bounds check for the whole run
+        let run = &dk.uops[start as usize..end as usize];
+        for (k, entry) in run.iter().enumerate() {
+            self.stats.warp_instructions += 1;
+            let exec = self.guard_mask(entry.guard, active);
+            self.stats.thread_instructions += exec.count_ones() as u64;
+            self.exec_op(start as usize + k, active, exec, ctaid)?;
+        }
+        Ok(())
+    }
+
+    /// Execute one non-control micro-op for the `exec` lanes — shared by
+    /// the per-uop path (via [`Self::exec_uop`]) and the superblock
+    /// interior. Does not touch `pc`/`stmt_pos`.
+    fn exec_op(
+        &mut self,
+        pc: usize,
+        active: u32,
+        exec: u32,
+        ctaid: (u32, u32, u32),
+    ) -> Result<(), SimError> {
+        let dk = self.dk;
+        match &dk.uops[pc].op {
             Uop::Shfl { mode, dst, pred_out, src, b, c, mask } => {
                 self.stats.shfls += 1;
                 let (mode, dst, pred_out) = (*mode, *dst, *pred_out);
@@ -860,8 +998,14 @@ impl<'a> Worker<'a> {
                     self.write(i, dst, active as u64);
                 }
             }
-            Uop::BarSync { .. } => unreachable!("handled by the warp scheduler"),
+            Uop::Bra { .. } | Uop::Ret | Uop::BarSync { .. } => {
+                unreachable!("control ops are handled by the warp scheduler")
+            }
             _ => {
+                #[cfg(feature = "simd")]
+                if self.cfg.vector && self.exec_wide(pc, exec, ctaid) {
+                    return Ok(());
+                }
                 let mut m = exec;
                 while m != 0 {
                     let i = m.trailing_zeros() as usize;
@@ -869,13 +1013,6 @@ impl<'a> Worker<'a> {
                     self.exec_lane(pc, i, ctaid)?;
                 }
             }
-        }
-        let mut m = active;
-        while m != 0 {
-            let l = m.trailing_zeros() as usize;
-            m &= m - 1;
-            self.pc[l] += 1;
-            self.stmt_pos[l] = stmt + 1;
         }
         Ok(())
     }
@@ -1037,5 +1174,142 @@ impl<'a> Worker<'a> {
             }
         }
         Ok(())
+    }
+}
+
+/// Lane-vectorized dispatch (`simd` feature): gather 32 lanes into a
+/// fixed buffer, run a full-width elementwise kernel from
+/// [`super::lanes`], blend results back under the exec mask. Bit-exact
+/// with the per-lane scalar path by construction: operands use the same
+/// masks, only exec lanes are written, uninitialized-read accounting is
+/// the same popcount the scalar path sums one lane at a time, and the
+/// kernels are property-tested against the shared scalar helpers.
+/// Non-exec garbage lanes are safe to compute on — every kernel is total
+/// (shifts clamped, division-by-zero defined, floats non-trapping).
+#[cfg(feature = "simd")]
+impl Worker<'_> {
+    /// Read a decoded operand for all 32 lanes, masked with `m`;
+    /// uninitialized reads are counted for `exec` lanes only (the
+    /// counter is a sum, so the total matches the scalar path's
+    /// lane-at-a-time accounting exactly).
+    fn gather(&mut self, d: Dop, m: u64, exec: u32, ctaid: (u32, u32, u32)) -> [u64; WARP] {
+        let mut out = [0u64; WARP];
+        match d {
+            Dop::Imm(v) => out = [v; WARP],
+            Dop::Slot(s) => {
+                let s = s as usize;
+                self.stats.uninit_reads += (exec & !self.written[s]).count_ones() as u64;
+                let regs = &self.regs[s * WARP..(s + 1) * WARP];
+                for (o, &r) in out.iter_mut().zip(regs) {
+                    *o = r & m;
+                }
+            }
+            Dop::Special(sp) => {
+                for (o, &t) in out.iter_mut().zip(&self.tids) {
+                    *o = special_value(sp, t, self.cfg.block, self.cfg.grid, ctaid) & m;
+                }
+            }
+        }
+        out
+    }
+
+    /// Blend `vals` into slot `dst` under the exec mask and mark the
+    /// exec lanes written — the same bits the scalar path sets one
+    /// `write` at a time.
+    fn scatter(&mut self, dst: u32, exec: u32, vals: &[u64; WARP]) {
+        let s = dst as usize;
+        let regs = &mut self.regs[s * WARP..(s + 1) * WARP];
+        for (l, (r, &v)) in regs.iter_mut().zip(vals).enumerate() {
+            if exec & (1 << l) != 0 {
+                *r = v;
+            }
+        }
+        self.written[s] |= exec;
+    }
+
+    /// Full-warp dispatch for the hot register-to-register micro-ops.
+    /// Returns `false` when the op is not wide-eligible (memory,
+    /// transcendental and convert ops keep the per-lane scalar path).
+    fn exec_wide(&mut self, pc: usize, exec: u32, ctaid: (u32, u32, u32)) -> bool {
+        use super::lanes;
+        let dk = self.dk;
+        match &dk.uops[pc].op {
+            Uop::Mov { dst, src, mask } => {
+                let v = self.gather(*src, *mask, exec, ctaid);
+                self.scatter(*dst, exec, &v);
+            }
+            Uop::Cvta { dst, src } => {
+                let v = self.gather(*src, u64::MAX, exec, ctaid);
+                self.scatter(*dst, exec, &v);
+            }
+            Uop::IntBin { op, w, mask, dst, a, b } => {
+                let av = self.gather(*a, *mask, exec, ctaid);
+                let bv = self.gather(*b, *mask, exec, ctaid);
+                self.scatter(*dst, exec, &lanes::int_bin(*op, *w, &av, &bv));
+            }
+            Uop::MulWide { signed, w, dst, a, b } => {
+                let m = width_mask(*w);
+                let av = self.gather(*a, m, exec, ctaid);
+                let bv = self.gather(*b, m, exec, ctaid);
+                self.scatter(*dst, exec, &lanes::mul_wide(*signed, *w, &av, &bv));
+            }
+            Uop::MulHi { signed, w, dst, a, b } => {
+                let m = width_mask(*w);
+                let av = self.gather(*a, m, exec, ctaid);
+                let bv = self.gather(*b, m, exec, ctaid);
+                self.scatter(*dst, exec, &lanes::mul_hi_v(*signed, *w, &av, &bv));
+            }
+            Uop::Mad { wide, signed, w, dst, a, b, c } => {
+                let m = width_mask(*w);
+                let av = self.gather(*a, m, exec, ctaid);
+                let bv = self.gather(*b, m, exec, ctaid);
+                let cm = if *wide { width_mask(*w * 2) } else { m };
+                let cv = self.gather(*c, cm, exec, ctaid);
+                self.scatter(*dst, exec, &lanes::mad(*wide, *signed, *w, &av, &bv, &cv));
+            }
+            Uop::Not { w, dst, a } => {
+                let av = self.gather(*a, width_mask(*w), exec, ctaid);
+                self.scatter(*dst, exec, &lanes::not_v(*w, &av));
+            }
+            Uop::Neg { w, dst, a } => {
+                let av = self.gather(*a, width_mask(*w), exec, ctaid);
+                self.scatter(*dst, exec, &lanes::neg_v(*w, &av));
+            }
+            Uop::FltBin { op, wide, dst, a, b } => {
+                let m = if *wide { u64::MAX } else { 0xFFFF_FFFF };
+                let av = self.gather(*a, m, exec, ctaid);
+                let bv = self.gather(*b, m, exec, ctaid);
+                self.scatter(*dst, exec, &lanes::flt_bin(*op, *wide, &av, &bv));
+            }
+            Uop::Fma { wide, dst, a, b, c } => {
+                let m = if *wide { u64::MAX } else { 0xFFFF_FFFF };
+                let av = self.gather(*a, m, exec, ctaid);
+                let bv = self.gather(*b, m, exec, ctaid);
+                let cv = self.gather(*c, m, exec, ctaid);
+                self.scatter(*dst, exec, &lanes::fma(*wide, &av, &bv, &cv));
+            }
+            Uop::SetpF { cmp, wide, dst, a, b } => {
+                let m = if *wide { u64::MAX } else { 0xFFFF_FFFF };
+                let av = self.gather(*a, m, exec, ctaid);
+                let bv = self.gather(*b, m, exec, ctaid);
+                self.scatter(*dst, exec, &lanes::setp_f(*cmp, *wide, &av, &bv));
+            }
+            Uop::SetpI { kind, w, dst, a, b } => {
+                let m = width_mask(*w);
+                let av = self.gather(*a, m, exec, ctaid);
+                let bv = self.gather(*b, m, exec, ctaid);
+                self.scatter(*dst, exec, &lanes::setp_i(*kind, *w, &av, &bv));
+            }
+            Uop::Selp { w, dst, a, b, p } => {
+                let m = width_mask(*w);
+                let av = self.gather(*a, m, exec, ctaid);
+                let bv = self.gather(*b, m, exec, ctaid);
+                let pv = self.gather(*p, 1, exec, ctaid);
+                self.scatter(*dst, exec, &lanes::selp(&av, &bv, &pv));
+            }
+            _ => return false,
+        }
+        self.stats.vector_warp_steps += 1;
+        true
     }
 }

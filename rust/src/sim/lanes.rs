@@ -1,0 +1,452 @@
+//! Full-warp elementwise kernels for the lane-vectorized executor
+//! (`simd` feature).
+//!
+//! Each kernel computes all 32 lanes of one micro-op over fixed
+//! `[u64; 32]` buffers in a single tight loop — the operator `match`
+//! happens once per warp instead of once per lane, the loop bodies are
+//! branch-free (shift counts clamped, selects instead of conditions),
+//! and the fixed trip count over contiguous buffers is the shape the
+//! compiler's auto-vectorizer maps onto SIMD units. Non-exec lanes hold
+//! garbage and are computed anyway (the caller blends under the exec
+//! mask), so every kernel must be total: division by zero is defined,
+//! shifts never exceed the type width, floats don't trap.
+//!
+//! Semantics are pinned to the scalar oracle — [`eval_bin`]/[`eval_cmp`]
+//! and the [`super::machine`] float/multiply helpers. Kernels either
+//! call those helpers per element (where the helper is already
+//! branch-light) or replicate them in clamped form; the property tests
+//! at the bottom hold every kernel to the oracle on random inputs across
+//! all widths.
+
+use super::machine::{f32_bin, f64_bin, flt_cmp, mul_full, mul_hi, width_mask};
+use crate::ptx::ast::{CmpOp, FltBinOp};
+use crate::sym::term::{eval_bin, BvOp, CmpKind};
+
+const WARP: usize = 32;
+
+/// Sign-extend the low `w` bits of `v` (matches `term::to_signed`
+/// numerically for every `w ∈ 1..=64`; i64 arithmetic suffices because
+/// no kernel widens past 64 bits here).
+#[inline]
+fn sx(v: u64, w: u32) -> i64 {
+    if w >= 64 {
+        v as i64
+    } else {
+        ((v << (64 - w)) as i64) >> (64 - w)
+    }
+}
+
+/// `w`-bit modular binary op over all lanes ([`eval_bin`] semantics).
+pub(crate) fn int_bin(op: BvOp, w: u32, a: &[u64; WARP], b: &[u64; WARP]) -> [u64; WARP] {
+    let m = width_mask(w);
+    let wu = w as u64;
+    let mut r = [0u64; WARP];
+    match op {
+        BvOp::Add => {
+            for ((r, &a), &b) in r.iter_mut().zip(a).zip(b) {
+                *r = a.wrapping_add(b) & m;
+            }
+        }
+        BvOp::Sub => {
+            for ((r, &a), &b) in r.iter_mut().zip(a).zip(b) {
+                *r = a.wrapping_sub(b) & m;
+            }
+        }
+        BvOp::Mul => {
+            for ((r, &a), &b) in r.iter_mut().zip(a).zip(b) {
+                *r = a.wrapping_mul(b) & m;
+            }
+        }
+        BvOp::And => {
+            for ((r, &a), &b) in r.iter_mut().zip(a).zip(b) {
+                *r = a & b & m;
+            }
+        }
+        BvOp::Or => {
+            for ((r, &a), &b) in r.iter_mut().zip(a).zip(b) {
+                *r = (a | b) & m;
+            }
+        }
+        BvOp::Xor => {
+            for ((r, &a), &b) in r.iter_mut().zip(a).zip(b) {
+                *r = (a ^ b) & m;
+            }
+        }
+        BvOp::Shl => {
+            // clamp keeps the shift in-range for garbage lanes; the
+            // select reproduces eval_bin's `b >= w ⇒ 0`
+            for ((r, &a), &b) in r.iter_mut().zip(a).zip(b) {
+                let b = b & m;
+                let v = ((a & m) << b.min(63)) & m;
+                *r = if b >= wu { 0 } else { v };
+            }
+        }
+        BvOp::LShr => {
+            for ((r, &a), &b) in r.iter_mut().zip(a).zip(b) {
+                let b = b & m;
+                let v = ((a & m) >> b.min(63)) & m;
+                *r = if b >= wu { 0 } else { v };
+            }
+        }
+        BvOp::AShr => {
+            for ((r, &a), &b) in r.iter_mut().zip(a).zip(b) {
+                let sh = (b & m).min(wu - 1);
+                *r = (sx(a & m, w) >> sh) as u64 & m;
+            }
+        }
+        BvOp::UMin => {
+            for ((r, &a), &b) in r.iter_mut().zip(a).zip(b) {
+                *r = (a & m).min(b & m);
+            }
+        }
+        BvOp::UMax => {
+            for ((r, &a), &b) in r.iter_mut().zip(a).zip(b) {
+                *r = (a & m).max(b & m);
+            }
+        }
+        BvOp::SMin => {
+            for ((r, &a), &b) in r.iter_mut().zip(a).zip(b) {
+                let (a, b) = (a & m, b & m);
+                *r = if sx(a, w) <= sx(b, w) { a } else { b };
+            }
+        }
+        BvOp::SMax => {
+            for ((r, &a), &b) in r.iter_mut().zip(a).zip(b) {
+                let (a, b) = (a & m, b & m);
+                *r = if sx(a, w) >= sx(b, w) { a } else { b };
+            }
+        }
+        // division has a hardware-divide per element either way; the
+        // shared scalar helper keeps the zero-divisor cases pinned
+        BvOp::UDiv | BvOp::SDiv | BvOp::URem | BvOp::SRem => {
+            for ((r, &a), &b) in r.iter_mut().zip(a).zip(b) {
+                *r = eval_bin(op, a, b, w);
+            }
+        }
+    }
+    r
+}
+
+/// `w`-bit integer comparison over all lanes (0/1 results,
+/// [`eval_cmp`] semantics).
+pub(crate) fn setp_i(kind: CmpKind, w: u32, a: &[u64; WARP], b: &[u64; WARP]) -> [u64; WARP] {
+    let m = width_mask(w);
+    let mut r = [0u64; WARP];
+    macro_rules! cmp {
+        (|$x:ident, $y:ident| $e:expr) => {
+            for ((r, &a), &b) in r.iter_mut().zip(a).zip(b) {
+                let ($x, $y) = (a & m, b & m);
+                *r = ($e) as u64;
+            }
+        };
+    }
+    match kind {
+        CmpKind::Eq => cmp!(|x, y| x == y),
+        CmpKind::Ne => cmp!(|x, y| x != y),
+        CmpKind::Ult => cmp!(|x, y| x < y),
+        CmpKind::Ule => cmp!(|x, y| x <= y),
+        CmpKind::Ugt => cmp!(|x, y| x > y),
+        CmpKind::Uge => cmp!(|x, y| x >= y),
+        CmpKind::Slt => cmp!(|x, y| sx(x, w) < sx(y, w)),
+        CmpKind::Sle => cmp!(|x, y| sx(x, w) <= sx(y, w)),
+        CmpKind::Sgt => cmp!(|x, y| sx(x, w) > sx(y, w)),
+        CmpKind::Sge => cmp!(|x, y| sx(x, w) >= sx(y, w)),
+    }
+    r
+}
+
+/// Float comparison over all lanes (0/1 results, [`flt_cmp`] semantics —
+/// f32 operands widen to f64 before comparing).
+pub(crate) fn setp_f(cmp: CmpOp, wide: bool, a: &[u64; WARP], b: &[u64; WARP]) -> [u64; WARP] {
+    let mut r = [0u64; WARP];
+    for ((r, &a), &b) in r.iter_mut().zip(a).zip(b) {
+        *r = flt_cmp(cmp, wide, a, b) as u64;
+    }
+    r
+}
+
+/// Predicated select over all lanes (`p` gathered with mask 1).
+pub(crate) fn selp(a: &[u64; WARP], b: &[u64; WARP], p: &[u64; WARP]) -> [u64; WARP] {
+    let mut r = [0u64; WARP];
+    for (((r, &a), &b), &p) in r.iter_mut().zip(a).zip(b).zip(p) {
+        *r = if p & 1 == 1 { a } else { b };
+    }
+    r
+}
+
+/// Float binary op over all lanes (bit-level [`f32_bin`]/[`f64_bin`]
+/// semantics, including the `min`/`max` NaN behaviour).
+pub(crate) fn flt_bin(op: FltBinOp, wide: bool, a: &[u64; WARP], b: &[u64; WARP]) -> [u64; WARP] {
+    let mut r = [0u64; WARP];
+    if wide {
+        for ((r, &a), &b) in r.iter_mut().zip(a).zip(b) {
+            *r = f64_bin(op, f64::from_bits(a), f64::from_bits(b)).to_bits();
+        }
+    } else {
+        for ((r, &a), &b) in r.iter_mut().zip(a).zip(b) {
+            *r = f32_bin(op, f32::from_bits(a as u32), f32::from_bits(b as u32)).to_bits() as u64;
+        }
+    }
+    r
+}
+
+/// Fused multiply-add over all lanes (`mul_add`, one rounding).
+pub(crate) fn fma(wide: bool, a: &[u64; WARP], b: &[u64; WARP], c: &[u64; WARP]) -> [u64; WARP] {
+    let mut r = [0u64; WARP];
+    if wide {
+        for (((r, &a), &b), &c) in r.iter_mut().zip(a).zip(b).zip(c) {
+            *r = f64::from_bits(a)
+                .mul_add(f64::from_bits(b), f64::from_bits(c))
+                .to_bits();
+        }
+    } else {
+        for (((r, &a), &b), &c) in r.iter_mut().zip(a).zip(b).zip(c) {
+            *r = f32::from_bits(a as u32)
+                .mul_add(f32::from_bits(b as u32), f32::from_bits(c as u32))
+                .to_bits() as u64;
+        }
+    }
+    r
+}
+
+/// `w`-bit × `w`-bit → `2w`-bit multiply over all lanes.
+pub(crate) fn mul_wide(signed: bool, w: u32, a: &[u64; WARP], b: &[u64; WARP]) -> [u64; WARP] {
+    let m2 = width_mask(w * 2);
+    let mut r = [0u64; WARP];
+    for ((r, &a), &b) in r.iter_mut().zip(a).zip(b) {
+        *r = mul_full(signed, w, a, b) & m2;
+    }
+    r
+}
+
+/// High `w` bits of the `2w`-bit product over all lanes.
+pub(crate) fn mul_hi_v(signed: bool, w: u32, a: &[u64; WARP], b: &[u64; WARP]) -> [u64; WARP] {
+    let mut r = [0u64; WARP];
+    for ((r, &a), &b) in r.iter_mut().zip(a).zip(b) {
+        *r = mul_hi(signed, w, a, b);
+    }
+    r
+}
+
+/// Multiply-add over all lanes (`wide`: `2w`-bit accumulate).
+pub(crate) fn mad(
+    wide: bool,
+    signed: bool,
+    w: u32,
+    a: &[u64; WARP],
+    b: &[u64; WARP],
+    c: &[u64; WARP],
+) -> [u64; WARP] {
+    let mut r = [0u64; WARP];
+    if wide {
+        let m2 = width_mask(w * 2);
+        for (((r, &a), &b), &c) in r.iter_mut().zip(a).zip(b).zip(c) {
+            *r = mul_full(signed, w, a, b).wrapping_add(c) & m2;
+        }
+    } else {
+        let m = width_mask(w);
+        for (((r, &a), &b), &c) in r.iter_mut().zip(a).zip(b).zip(c) {
+            *r = a.wrapping_mul(b).wrapping_add(c) & m;
+        }
+    }
+    r
+}
+
+/// `w`-bit bitwise complement over all lanes.
+pub(crate) fn not_v(w: u32, a: &[u64; WARP]) -> [u64; WARP] {
+    let m = width_mask(w);
+    let mut r = [0u64; WARP];
+    for (r, &a) in r.iter_mut().zip(a) {
+        *r = !a & m;
+    }
+    r
+}
+
+/// `w`-bit two's-complement negation over all lanes.
+pub(crate) fn neg_v(w: u32, a: &[u64; WARP]) -> [u64; WARP] {
+    let m = width_mask(w);
+    let mut r = [0u64; WARP];
+    for (r, &a) in r.iter_mut().zip(a) {
+        *r = a.wrapping_neg() & m;
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sym::term::eval_cmp;
+    use crate::util::Rng;
+
+    const WIDTHS: [u32; 6] = [1, 8, 16, 24, 32, 64];
+
+    /// Adversarial lane values: all-ones, zero, sign-boundary patterns
+    /// and raw randoms — unmasked on purpose (the kernels must mask).
+    fn lanes(rng: &mut Rng) -> [u64; WARP] {
+        let mut v = [0u64; WARP];
+        for (i, x) in v.iter_mut().enumerate() {
+            *x = match i % 4 {
+                0 => rng.next_u64(),
+                1 => u64::MAX,
+                2 => rng.next_u64() & 0x8000_0000_0000_00FF,
+                _ => rng.next_u64() % 67, // small values near shift widths
+            };
+        }
+        v
+    }
+
+    #[test]
+    fn int_bin_matches_eval_bin_for_every_op_and_width() {
+        use BvOp::*;
+        let ops = [
+            Add, Sub, Mul, UDiv, SDiv, URem, SRem, And, Or, Xor, Shl, LShr, AShr, UMin, UMax,
+            SMin, SMax,
+        ];
+        let mut rng = Rng::new(0x1a4e5);
+        for &w in &WIDTHS {
+            for &op in &ops {
+                for round in 0..16 {
+                    let (a, b) = (lanes(&mut rng), lanes(&mut rng));
+                    let r = int_bin(op, w, &a, &b);
+                    for l in 0..WARP {
+                        assert_eq!(
+                            r[l],
+                            eval_bin(op, a[l], b[l], w),
+                            "{op:?} w={w} round={round} lane={l} a={:#x} b={:#x}",
+                            a[l],
+                            b[l]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn setp_i_matches_eval_cmp_for_every_kind_and_width() {
+        use CmpKind::*;
+        let kinds = [Eq, Ne, Ult, Ule, Ugt, Uge, Slt, Sle, Sgt, Sge];
+        let mut rng = Rng::new(0x5e7b);
+        for &w in &WIDTHS {
+            for &k in &kinds {
+                for _ in 0..16 {
+                    let (mut a, b) = (lanes(&mut rng), lanes(&mut rng));
+                    // force some equal pairs so Eq/Ule/Sge get both arms
+                    a[7] = b[7];
+                    a[21] = b[21];
+                    let r = setp_i(k, w, &a, &b);
+                    for l in 0..WARP {
+                        assert_eq!(
+                            r[l],
+                            eval_cmp(k, a[l], b[l], w) as u64,
+                            "{k:?} w={w} lane={l} a={:#x} b={:#x}",
+                            a[l],
+                            b[l]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn float_kernels_match_scalar_helpers_bitwise() {
+        let mut rng = Rng::new(0xf10a7);
+        // include NaN/∞/-0.0 payloads: raw random bit patterns cover
+        // them, plus pinned specials in fixed lanes
+        for wide in [false, true] {
+            for _ in 0..16 {
+                let (mut a, mut b, c) = (lanes(&mut rng), lanes(&mut rng), lanes(&mut rng));
+                if wide {
+                    a[3] = f64::NAN.to_bits();
+                    b[5] = f64::NEG_INFINITY.to_bits();
+                    a[9] = (-0.0f64).to_bits();
+                } else {
+                    a[3] = f32::NAN.to_bits() as u64;
+                    b[5] = f32::NEG_INFINITY.to_bits() as u64;
+                    a[9] = (-0.0f32).to_bits() as u64;
+                }
+                for op in [
+                    FltBinOp::Add,
+                    FltBinOp::Sub,
+                    FltBinOp::Mul,
+                    FltBinOp::Div,
+                    FltBinOp::Min,
+                    FltBinOp::Max,
+                ] {
+                    let r = flt_bin(op, wide, &a, &b);
+                    for l in 0..WARP {
+                        let want = if wide {
+                            f64_bin(op, f64::from_bits(a[l]), f64::from_bits(b[l])).to_bits()
+                        } else {
+                            f32_bin(op, f32::from_bits(a[l] as u32), f32::from_bits(b[l] as u32))
+                                .to_bits() as u64
+                        };
+                        assert_eq!(r[l], want, "{op:?} wide={wide} lane={l}");
+                    }
+                }
+                for cmp in [CmpOp::Eq, CmpOp::Ne, CmpOp::Lt, CmpOp::Le, CmpOp::Gt, CmpOp::Ge] {
+                    let r = setp_f(cmp, wide, &a, &b);
+                    for l in 0..WARP {
+                        assert_eq!(r[l], flt_cmp(cmp, wide, a[l], b[l]) as u64);
+                    }
+                }
+                let r = fma(wide, &a, &b, &c);
+                for l in 0..WARP {
+                    let want = if wide {
+                        f64::from_bits(a[l])
+                            .mul_add(f64::from_bits(b[l]), f64::from_bits(c[l]))
+                            .to_bits()
+                    } else {
+                        f32::from_bits(a[l] as u32)
+                            .mul_add(f32::from_bits(b[l] as u32), f32::from_bits(c[l] as u32))
+                            .to_bits() as u64
+                    };
+                    assert_eq!(r[l], want, "fma wide={wide} lane={l}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multiply_select_and_unary_kernels_match_scalar_forms() {
+        let mut rng = Rng::new(0x9dc3);
+        for &w in &[8u32, 16, 24, 32] {
+            let m = width_mask(w);
+            for _ in 0..16 {
+                let (ra, rb, rc) = (lanes(&mut rng), lanes(&mut rng), lanes(&mut rng));
+                // gather pre-masks operands; mirror that here
+                let mut a = [0u64; WARP];
+                let mut b = [0u64; WARP];
+                for l in 0..WARP {
+                    a[l] = ra[l] & m;
+                    b[l] = rb[l] & m;
+                }
+                for signed in [false, true] {
+                    let rw = mul_wide(signed, w, &a, &b);
+                    let rh = mul_hi_v(signed, w, &a, &b);
+                    let rm = mad(true, signed, w, &a, &b, &rc);
+                    let rn = mad(false, signed, w, &a, &b, &rc);
+                    for l in 0..WARP {
+                        assert_eq!(rw[l], mul_full(signed, w, a[l], b[l]) & width_mask(w * 2));
+                        assert_eq!(rh[l], mul_hi(signed, w, a[l], b[l]));
+                        assert_eq!(
+                            rm[l],
+                            mul_full(signed, w, a[l], b[l]).wrapping_add(rc[l]) & width_mask(w * 2)
+                        );
+                        assert_eq!(rn[l], a[l].wrapping_mul(b[l]).wrapping_add(rc[l]) & m);
+                    }
+                }
+                let p = lanes(&mut rng);
+                let rs = selp(&a, &b, &p);
+                let rnot = not_v(w, &a);
+                let rneg = neg_v(w, &a);
+                for l in 0..WARP {
+                    assert_eq!(rs[l], if p[l] & 1 == 1 { a[l] } else { b[l] });
+                    assert_eq!(rnot[l], !a[l] & m);
+                    assert_eq!(rneg[l], a[l].wrapping_neg() & m);
+                }
+            }
+        }
+    }
+}

@@ -58,6 +58,19 @@ pub struct SimConfig {
     /// engine forces one worker while this is set, since snapshot
     /// isolation hides exactly the reads this shadow is looking for.
     pub detect_races: bool,
+    /// Decoded engine only: execute decode-time-fused straight-line
+    /// *superblocks*, skipping per-uop scheduling and step bookkeeping in
+    /// the interior. Automatically falls back to the per-uop path for any
+    /// block that records a [`WarpEvent`] trace and whenever
+    /// `detect_races` is set (see `sim::exec`). The reference engine
+    /// ignores it. Observables are bit-identical either way.
+    pub superblocks: bool,
+    /// Decoded engine only: dispatch hot ALU / `setp` / `selp` micro-ops
+    /// to the full-warp lane-vectorized kernels. Only effective when the
+    /// crate is built with the `simd` cargo feature — the default stable
+    /// build always runs the per-lane scalar path, which is also the
+    /// differential oracle. Observables are bit-identical either way.
+    pub vector: bool,
 }
 
 impl SimConfig {
@@ -70,6 +83,8 @@ impl SimConfig {
             max_warp_steps: 50_000_000,
             sim_threads: 1,
             detect_races: false,
+            superblocks: true,
+            vector: true,
         }
     }
 
@@ -92,7 +107,7 @@ pub struct WarpEvent {
     pub addr: u64,
 }
 
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, Default)]
 pub struct SimStats {
     /// Warp-level instruction issues.
     pub warp_instructions: u64,
@@ -117,7 +132,75 @@ pub struct SimStats {
     /// Block-wide barrier releases: the number of phase boundaries the
     /// cooperative scheduler crossed, summed over all blocks.
     pub barrier_phases: u64,
+    /// Engine telemetry: superblock fast-path entries in the decoded
+    /// executor (0 on the reference engine and on every per-uop fallback).
+    /// Excluded from equality — see the [`PartialEq`] impl below.
+    pub superblocks_entered: u64,
+    /// Engine telemetry: warp-level issues executed by the lane-vectorized
+    /// wide kernels (0 without the `simd` feature or with
+    /// [`SimConfig::vector`] off). Excluded from equality.
+    pub vector_warp_steps: u64,
 }
+
+/// Equality is over the *semantic* counters only. The two engine-telemetry
+/// fields (`superblocks_entered`, `vector_warp_steps`) describe which fast
+/// path executed the kernel, not what the kernel did — they differ across
+/// engine configurations by design, while the differential guarantee
+/// ("bit-identical stats on every engine, any thread count") is over
+/// everything else. The destructuring keeps this impl exhaustive: adding a
+/// `SimStats` field without deciding its equality class is a compile error.
+impl PartialEq for SimStats {
+    fn eq(&self, other: &SimStats) -> bool {
+        let SimStats {
+            warp_instructions,
+            thread_instructions,
+            global_loads,
+            nc_loads,
+            shared_loads,
+            stores,
+            shfls,
+            branches,
+            divergent_branches,
+            uninit_reads,
+            cross_block_write_conflicts,
+            barriers,
+            barrier_phases,
+            superblocks_entered: _,
+            vector_warp_steps: _,
+        } = *self;
+        (
+            warp_instructions,
+            thread_instructions,
+            global_loads,
+            nc_loads,
+            shared_loads,
+            stores,
+            shfls,
+            branches,
+            divergent_branches,
+            uninit_reads,
+            cross_block_write_conflicts,
+            barriers,
+            barrier_phases,
+        ) == (
+            other.warp_instructions,
+            other.thread_instructions,
+            other.global_loads,
+            other.nc_loads,
+            other.shared_loads,
+            other.stores,
+            other.shfls,
+            other.branches,
+            other.divergent_branches,
+            other.uninit_reads,
+            other.cross_block_write_conflicts,
+            other.barriers,
+            other.barrier_phases,
+        )
+    }
+}
+
+impl Eq for SimStats {}
 
 #[derive(Debug)]
 pub struct SimResult {

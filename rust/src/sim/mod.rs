@@ -13,6 +13,8 @@
 
 pub mod decode;
 pub mod exec;
+#[cfg(feature = "simd")]
+pub(crate) mod lanes;
 pub mod machine;
 pub mod memory;
 

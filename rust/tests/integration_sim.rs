@@ -15,45 +15,77 @@ use ptxasw::sim::{
 use ptxasw::suite;
 use ptxasw::util::check_cases;
 
-/// Run all engines (reference, decoded serial, decoded on 2 and 8
-/// workers) and assert bit-identical results; returns the decoded result.
+/// The decoded engine's path-selection matrix: (superblocks, vector).
+/// `vector` is inert without the `simd` cargo feature, but running the
+/// configuration anyway keeps the matrix identical across builds.
+const ENGINES: [(bool, bool, &str); 4] = [
+    (false, false, "scalar"),
+    (true, false, "superblock"),
+    (false, true, "vector"),
+    (true, true, "fused"),
+];
+
+/// Run all engines (reference, then every decoded path configuration on
+/// 1, 2 and 8 workers) and assert bit-identical results; returns the
+/// decoded result.
 fn engines_agree(k: &Kernel, cfg: &SimConfig, mem: GlobalMem) -> SimResult {
     let reference = run_reference(k, cfg, mem.clone()).expect("reference run");
-    for threads in [1usize, 2, 8] {
-        let mut c = cfg.clone();
-        c.sim_threads = threads;
-        let r = run(k, &c, mem.clone()).expect("decoded run");
-        assert_eq!(reference.mem, r.mem, "GlobalMem diverged at {threads} threads");
-        assert_eq!(reference.stats, r.stats, "stats diverged at {threads} threads");
-        assert_eq!(reference.trace, r.trace, "trace diverged at {threads} threads");
+    for (superblocks, vector, name) in ENGINES {
+        for threads in [1usize, 2, 8] {
+            let mut c = cfg.clone();
+            c.sim_threads = threads;
+            c.superblocks = superblocks;
+            c.vector = vector;
+            let r = run(k, &c, mem.clone()).expect("decoded run");
+            assert_eq!(
+                reference.mem, r.mem,
+                "GlobalMem diverged ({name}, {threads} threads)"
+            );
+            assert_eq!(
+                reference.stats, r.stats,
+                "stats diverged ({name}, {threads} threads)"
+            );
+            assert_eq!(
+                reference.trace, r.trace,
+                "trace diverged ({name}, {threads} threads)"
+            );
+        }
     }
     run(k, cfg, mem).unwrap()
 }
 
-/// Both engines (and the parallel configuration) must fail with the same
-/// barrier-divergence shape.
+/// Every engine configuration must fail with the same barrier-divergence
+/// shape.
 fn engines_agree_on_barrier_error(k: &Kernel, cfg: &SimConfig, mem: GlobalMem) -> SimError {
     let e_ref = run_reference(k, cfg, mem.clone()).expect_err("reference must fail");
-    for threads in [1usize, 2, 8] {
-        let mut c = cfg.clone();
-        c.sim_threads = threads;
-        let e = run(k, &c, mem.clone()).expect_err("decoded must fail");
-        match (&e_ref, &e) {
-            (
-                SimError::BarrierDivergence {
-                    block: b1,
-                    id: i1,
-                    cause: c1,
-                },
-                SimError::BarrierDivergence {
-                    block: b2,
-                    id: i2,
-                    cause: c2,
-                },
-            ) => {
-                assert_eq!((b1, i1, c1), (b2, i2, c2), "error shape diverged at {threads}");
+    for (superblocks, vector, name) in ENGINES {
+        for threads in [1usize, 2, 8] {
+            let mut c = cfg.clone();
+            c.sim_threads = threads;
+            c.superblocks = superblocks;
+            c.vector = vector;
+            let e = run(k, &c, mem.clone()).expect_err("decoded must fail");
+            match (&e_ref, &e) {
+                (
+                    SimError::BarrierDivergence {
+                        block: b1,
+                        id: i1,
+                        cause: c1,
+                    },
+                    SimError::BarrierDivergence {
+                        block: b2,
+                        id: i2,
+                        cause: c2,
+                    },
+                ) => {
+                    assert_eq!(
+                        (b1, i1, c1),
+                        (b2, i2, c2),
+                        "error shape diverged ({name}, {threads} threads)"
+                    );
+                }
+                other => panic!("engines disagree on the error: {other:?}"),
             }
-            other => panic!("engines disagree on the error: {other:?}"),
         }
     }
     e_ref
@@ -595,6 +627,137 @@ $END:
     let e2 = run(&k, &cfg, mem.clone()).unwrap_err();
     for e in [e1, e2] {
         assert!(matches!(e, SimError::StepLimit(19)), "got {e:?}");
+    }
+}
+
+/// Tracing and `--detect-races` force the per-uop path (their hooks fire
+/// per micro-op): engine telemetry shows zero superblocks and the
+/// `WarpEvent` stream is unchanged from the scalar engine. The plain
+/// fused run on the same kernel *does* take superblocks — the positive
+/// control that keeps this regression test from passing vacuously.
+#[test]
+fn tracing_and_race_detection_force_the_per_uop_path() {
+    // straight-line body: one fused run covers essentially the whole
+    // kernel (single block, so `record_trace` covers every block)
+    let k = parse_kernel(
+        r#"
+.visible .entry sl(.param .u64 out){
+.reg .b32 %r<6>; .reg .b64 %rd<4>;
+ld.param.u64 %rd1, [out];
+cvta.to.global.u64 %rd1, %rd1;
+mov.u32 %r1, %tid.x;
+mul.lo.s32 %r2, %r1, 7;
+add.s32 %r2, %r2, 3;
+xor.b32 %r2, %r2, %r1;
+mul.wide.s32 %rd2, %r1, 4;
+add.s64 %rd3, %rd1, %rd2;
+st.global.b32 [%rd3], %r2;
+ret;
+}
+"#,
+    )
+    .unwrap();
+    let mem = GlobalMem::new(1 << 12);
+    let mut alloc = Allocator::new(&mem);
+    let out = alloc.alloc(128);
+    let base = SimConfig::new(1, 32, vec![out]);
+
+    let mut scalar_cfg = base.clone();
+    scalar_cfg.record_trace = true;
+    scalar_cfg.superblocks = false;
+    scalar_cfg.vector = false;
+    let scalar = run(&k, &scalar_cfg, mem.clone()).unwrap();
+
+    // fused engine + tracing: per-uop fallback, identical trace
+    let mut traced_cfg = base.clone();
+    traced_cfg.record_trace = true;
+    let traced = run(&k, &traced_cfg, mem.clone()).unwrap();
+    assert_eq!(traced.stats.superblocks_entered, 0, "tracing must force per-uop");
+    assert_eq!(traced.trace, scalar.trace, "fallback trace must be unchanged");
+    assert_eq!(traced.mem, scalar.mem);
+    assert_eq!(traced.stats, scalar.stats);
+
+    // fused engine + race diagnostic: per-uop fallback as well
+    let mut race_cfg = base.clone();
+    race_cfg.detect_races = true;
+    let raced = run(&k, &race_cfg, mem.clone()).unwrap();
+    assert_eq!(raced.stats.superblocks_entered, 0, "detect_races must force per-uop");
+    assert_eq!(raced.mem, scalar.mem);
+
+    // positive control: no tracing, no diagnostic → superblocks taken
+    let fused = run(&k, &base, mem.clone()).unwrap();
+    assert!(
+        fused.stats.superblocks_entered > 0,
+        "plain fused run must take the fast path"
+    );
+    assert_eq!(fused.mem, scalar.mem);
+    assert_eq!(fused.stats, scalar.stats);
+}
+
+/// Step-limit parity across the engine matrix: sweep `max_warp_steps`
+/// through the whole interesting range of a label-heavy looping kernel;
+/// at every value, every decoded configuration agrees with the reference
+/// on pass vs `StepLimit` — the superblock bulk charge must never move
+/// the value at which the budget trips.
+#[test]
+fn step_limit_parity_across_engine_matrix() {
+    let k = parse_kernel(
+        r#"
+.visible .entry sw(.param .u64 out){
+.reg .b32 %r<4>; .reg .pred %p<2>;
+mov.u32 %r1, 0;
+$A:
+$B:
+add.s32 %r1, %r1, 1;
+setp.lt.s32 %p1, %r1, 4;
+@%p1 bra $B;
+bra $END;
+$END:
+}
+"#,
+    )
+    .unwrap();
+    let mem = GlobalMem::new(1 << 12);
+    for limit in 1..=22u64 {
+        let mut cfg = SimConfig::new(1, 1, vec![0x1000]);
+        cfg.max_warp_steps = limit;
+        let want = run_reference(&k, &cfg, mem.clone());
+        for (superblocks, vector, name) in ENGINES {
+            let mut c = cfg.clone();
+            c.superblocks = superblocks;
+            c.vector = vector;
+            let got = run(&k, &c, mem.clone());
+            match (&want, &got) {
+                (Ok(a), Ok(b)) => {
+                    assert_eq!(a.stats, b.stats, "limit {limit} ({name})");
+                    assert_eq!(a.mem, b.mem, "limit {limit} ({name})");
+                }
+                (Err(SimError::StepLimit(a)), Err(SimError::StepLimit(b))) => {
+                    assert_eq!(a, b, "limit {limit} ({name})");
+                }
+                other => panic!("limit {limit} ({name}): engines disagree: {other:?}"),
+            }
+        }
+    }
+}
+
+/// With the `simd` feature built in, the default (fused) engine actually
+/// dispatches through the wide kernels — the telemetry counter proves
+/// the vector path ran, and the CPU reference proves it ran correctly.
+#[cfg(feature = "simd")]
+#[test]
+fn vector_path_runs_under_the_simd_feature() {
+    let b = suite::by_name("vecadd").unwrap();
+    let (nx, ny, nz) = sim_sizes(&b);
+    let w = suite::workload(&b, nx, ny, nz, 3);
+    let r = run(&w.kernel, &w.cfg, w.mem.clone()).unwrap();
+    assert!(
+        r.stats.vector_warp_steps > 0,
+        "fused engine must use the wide kernels when the feature is on"
+    );
+    let out = r.mem.read_f32s(w.out_ptr, w.out_len).unwrap();
+    for (a, e) in out.iter().zip(&w.expected) {
+        assert_eq!(a.to_bits(), e.to_bits());
     }
 }
 
