@@ -16,7 +16,15 @@
 //! no-regression gate); `--family shared` is the shared-memory/barrier
 //! family opened by the cooperative scheduler (`BENCH_5.json` — every
 //! run exercises real `bar.sync` suspend/resume); `--family all` runs
-//! both and is the engine-matrix artifact (`BENCH_6.json`).
+//! both and is the engine-matrix artifact (`BENCH_6.json`);
+//! `--family elim` runs the shared family through the phase-liveness
+//! dead-store/barrier elimination pass and emits pre/post perf-model
+//! columns (`BENCH_7.json`). The elim run is a hard correctness gate:
+//! eliminated kernels must match the reference simulation and the CPU
+//! reference bit-for-bit, `tiledreduce`/`sharedstencil` must actually
+//! lose their staging stores and at least one `bar.sync`, the
+//! data-dependent `sharedgather` must keep both, and the post perf score
+//! must be strictly better than the pre score.
 //!
 //! The run doubles as a correctness gate: every engine's output image is
 //! compared bit-for-bit before a timing is accepted, and the shared
@@ -78,11 +86,18 @@ fn main() {
             v.extend(suite::shared_suite());
             (v, "BENCH_6", "BENCH_6.json")
         }
+        "elim" => (suite::shared_suite(), "BENCH_7", "BENCH_7.json"),
         other => {
-            eprintln!("simbench: unknown --family `{other}` (table2|shared|all)");
+            eprintln!("simbench: unknown --family `{other}` (table2|shared|all|elim)");
             std::process::exit(2);
         }
     };
+    if family == "elim" {
+        let out_path = args.opt("out").unwrap_or(default_out).to_string();
+        let repeat = args.opt_usize("repeat", 3).unwrap_or(3);
+        run_elim(benches, bench_id, &out_path, repeat);
+        return;
+    }
     // `--engine both` (default) measures every column; a single engine
     // name restricts the serial columns to scalar + that engine (scalar
     // is always kept: it is the baseline every speedup is quoted against)
@@ -301,4 +316,230 @@ fn main() {
 fn check_agree(name: &str, a: &SimResult, b: &SimResult, tag: &str) {
     assert_eq!(a.mem, b.mem, "{name}: {tag} memory image diverged");
     assert_eq!(a.stats, b.stats, "{name}: {tag} stats diverged");
+}
+
+/// `--family elim` (`BENCH_7`): run the shared family through the
+/// phase-liveness dead-store/barrier elimination pass and emit pre/post
+/// perf-model columns. Every assert here is a CI gate: a bail, a lost
+/// elimination, an output mismatch, or a non-improving perf score aborts
+/// the benchmark run.
+fn run_elim(benches: Vec<suite::Benchmark>, bench_id: &str, out_path: &str, repeat: usize) {
+    use ptxasw::emu::emulate;
+    use ptxasw::perf::{model, Stall, PASCAL, STALL_KINDS};
+    use ptxasw::shuffle::{eliminate, ElimOpts};
+
+    let sync = STALL_KINDS
+        .iter()
+        .position(|&s| s == Stall::Synchronization)
+        .unwrap();
+
+    struct ERow {
+        name: &'static str,
+        stores_deleted: usize,
+        stores_seen: usize,
+        barriers_elided: usize,
+        barriers_seen: usize,
+        forwarded_loads: u32,
+        dce_stmts: u32,
+        pre_serial: f64,
+        post_serial: f64,
+        pre_sync: f64,
+        post_sync: f64,
+        pre_s: f64,
+        post_s: f64,
+    }
+
+    let mut arch_name = "";
+    let mut rows: Vec<ERow> = Vec::new();
+    for b in benches {
+        let (nx, ny, nz) = sim_sizes(&b);
+        let w = suite::workload(&b, nx, ny, nz, 42);
+        let emu = emulate(&w.kernel).expect("emulate");
+        let opts = ElimOpts { enabled: true, block: w.cfg.block.0 };
+        let (elim, report) = eliminate(&w.kernel, &w.kernel, &emu, opts);
+        if let Some(why) = &report.bail {
+            panic!("{}: elimination pass bailed: {why}", b.name);
+        }
+
+        // Wall-clock columns (best-of-N, untraced) for both kernels.
+        let (pre_s, r_pre) =
+            best_of(repeat, || run_reference(&w.kernel, &w.cfg, w.mem.clone()).expect("pre"));
+        let (post_s, r_post) =
+            best_of(repeat, || run_reference(&elim, &w.cfg, w.mem.clone()).expect("post"));
+
+        // Correctness gate: the eliminated kernel must reproduce the
+        // original's output image bit-for-bit, and both must match the
+        // CPU reference image computed by the workload builder.
+        let pre_out = r_pre.mem.read_f32s(w.out_ptr, w.out_len).expect("pre out");
+        let post_out = r_post.mem.read_f32s(w.out_ptr, w.out_len).expect("post out");
+        assert!(
+            pre_out.iter().zip(&post_out).all(|(a, c)| a.to_bits() == c.to_bits()),
+            "{}: eliminated kernel diverged from the original",
+            b.name
+        );
+        assert!(
+            post_out.iter().zip(&w.expected).all(|(a, e)| a.to_bits() == e.to_bits()),
+            "{}: eliminated kernel diverged from the CPU reference",
+            b.name
+        );
+
+        // Traced runs feed the perf model (the Figure 3 stall columns).
+        let mut tcfg = w.cfg.clone();
+        tcfg.record_trace = true;
+        let t_pre = run_reference(&w.kernel, &tcfg, w.mem.clone()).expect("pre trace");
+        let t_post = run_reference(&elim, &tcfg, w.mem.clone()).expect("post trace");
+        let m_pre = model(&w.kernel, &t_pre.trace, &PASCAL);
+        let m_post = model(&elim, &t_post.trace, &PASCAL);
+        arch_name = m_pre.arch;
+
+        if matches!(b.pattern, suite::Pattern::SharedGather { .. }) {
+            // Adversarial column: the gather's staging store feeds a
+            // data-dependent load, so the pass must keep the store AND
+            // the barrier (unknown address => conservatively live).
+            assert_eq!(
+                report.deleted_stores(),
+                0,
+                "{}: the data-dependent gather must keep its staging store",
+                b.name
+            );
+            assert_eq!(
+                report.elided_barriers(),
+                0,
+                "{}: the data-dependent gather must keep its barrier",
+                b.name
+            );
+            assert_eq!(
+                r_post.stats.barriers, r_pre.stats.barriers,
+                "{}: barrier count changed on the adversarial kernel",
+                b.name
+            );
+        } else {
+            // tiledreduce / sharedstencil: fully-shuffled tiles must lose
+            // every staging store and at least one bar.sync, and the perf
+            // model must score the eliminated kernel strictly better.
+            assert!(
+                report.deleted_stores() > 0,
+                "{}: zero store eliminations fired on a fully-shuffled kernel",
+                b.name
+            );
+            assert!(
+                report.elided_barriers() >= 1,
+                "{}: no bar.sync was elided on a fully-shuffled kernel",
+                b.name
+            );
+            assert_eq!(
+                r_post.stats.shared_loads, 0,
+                "{}: .shared loads survived elimination",
+                b.name
+            );
+            assert!(
+                r_post.stats.barriers < r_pre.stats.barriers,
+                "{}: executed barrier count did not drop",
+                b.name
+            );
+            assert!(
+                m_post.serial_cycles < m_pre.serial_cycles,
+                "{}: perf score did not improve ({:.0} -> {:.0} serial cycles)",
+                b.name,
+                m_pre.serial_cycles,
+                m_post.serial_cycles
+            );
+            assert!(
+                m_post.stalls[sync] < m_pre.stalls[sync],
+                "{}: sync stall cycles did not drop ({:.0} -> {:.0})",
+                b.name,
+                m_pre.stalls[sync],
+                m_post.stalls[sync]
+            );
+        }
+
+        rows.push(ERow {
+            name: b.name,
+            stores_deleted: report.deleted_stores(),
+            stores_seen: report.stores.len(),
+            barriers_elided: report.elided_barriers(),
+            barriers_seen: report.barriers.len(),
+            forwarded_loads: report.forwarded_loads,
+            dce_stmts: report.dce_stmts,
+            pre_serial: m_pre.serial_cycles,
+            post_serial: m_post.serial_cycles,
+            pre_sync: m_pre.stalls[sync],
+            post_sync: m_post.stalls[sync],
+            pre_s,
+            post_s,
+        });
+    }
+
+    let total_deleted: usize = rows.iter().map(|r| r.stores_deleted).sum();
+    let total_elided: usize = rows.iter().map(|r| r.barriers_elided).sum();
+    let geomean_speedup = (rows
+        .iter()
+        .map(|r| (r.pre_serial / r.post_serial).ln())
+        .sum::<f64>()
+        / rows.len() as f64)
+        .exp();
+
+    let mut json = String::new();
+    writeln!(json, "{{").unwrap();
+    writeln!(json, "  \"bench_id\": \"{bench_id}\",").unwrap();
+    writeln!(json, "  \"family\": \"elim\",").unwrap();
+    writeln!(json, "  \"arch\": \"{arch_name}\",").unwrap();
+    writeln!(json, "  \"unit\": \"perf-model serial cycles (pre/post elimination)\",").unwrap();
+    writeln!(json, "  \"repeat\": {repeat},").unwrap();
+    writeln!(json, "  \"benchmarks\": [").unwrap();
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 == rows.len() { "" } else { "," };
+        writeln!(
+            json,
+            "    {{\"name\": \"{}\", \
+             \"stores_deleted\": {}, \"stores_seen\": {}, \
+             \"barriers_elided\": {}, \"barriers_seen\": {}, \
+             \"loads_forwarded\": {}, \"dce_stmts\": {}, \
+             \"pre_serial_cycles\": {:.1}, \"post_serial_cycles\": {:.1}, \
+             \"model_speedup\": {:.3}, \
+             \"pre_sync_stall_cycles\": {:.1}, \"post_sync_stall_cycles\": {:.1}, \
+             \"pre_reference_s\": {:.6}, \"post_reference_s\": {:.6}}}{comma}",
+            r.name,
+            r.stores_deleted,
+            r.stores_seen,
+            r.barriers_elided,
+            r.barriers_seen,
+            r.forwarded_loads,
+            r.dce_stmts,
+            r.pre_serial,
+            r.post_serial,
+            r.pre_serial / r.post_serial,
+            r.pre_sync,
+            r.post_sync,
+            r.pre_s,
+            r.post_s,
+        )
+        .unwrap();
+    }
+    writeln!(json, "  ],").unwrap();
+    writeln!(json, "  \"total_stores_deleted\": {total_deleted},").unwrap();
+    writeln!(json, "  \"total_barriers_elided\": {total_elided},").unwrap();
+    writeln!(json, "  \"geomean_model_speedup\": {geomean_speedup:.3}").unwrap();
+    writeln!(json, "}}").unwrap();
+
+    std::fs::write(out_path, &json).expect("write benchmark json");
+    eprintln!(
+        "simbench [elim]: {} benchmarks, {total_deleted} stores deleted, {total_elided} barriers elided",
+        rows.len()
+    );
+    for r in &rows {
+        eprintln!(
+            "  {:<14} {:>3} stores deleted, {:>2} barriers elided, {:>3} loads forwarded, \
+             serial {:>9.1} -> {:>9.1} cycles ({:.2}x)",
+            r.name,
+            r.stores_deleted,
+            r.barriers_elided,
+            r.forwarded_loads,
+            r.pre_serial,
+            r.post_serial,
+            r.pre_serial / r.post_serial,
+        );
+    }
+    eprintln!("  geomean model speedup {geomean_speedup:.2}x");
+    eprintln!("  wrote {out_path}");
 }

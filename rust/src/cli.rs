@@ -54,6 +54,7 @@ impl Args {
                 | "no-disk-cache"
                 | "detect-races"
                 | "shared"
+                | "no-elim"
         )
     }
 
@@ -113,6 +114,14 @@ mod tests {
         assert!(a.flag("no-disk-cache"));
         assert_eq!(a.opt("cache-dir"), Some("/tmp/x"));
         assert_eq!(a.positional, vec!["jacobi"]);
+    }
+
+    #[test]
+    fn no_elim_is_a_bare_flag() {
+        // `--no-elim` must not swallow the following positional
+        let a = parse("suite --no-elim tiledreduce");
+        assert!(a.flag("no-elim"));
+        assert_eq!(a.positional, vec!["tiledreduce"]);
     }
 
     #[test]

@@ -60,7 +60,7 @@ use crate::perf::{Arch, PerfReport};
 use crate::pipeline::{stages, Pipeline};
 use crate::ptx::ast::Kernel;
 use crate::ptx::printer::ContentHash;
-use crate::shuffle::{DetectOpts, Detection, Variant};
+use crate::shuffle::{DetectOpts, Detection, ElimOpts, Variant};
 use crate::sim::{SimError, SimStats};
 use crate::suite::{Benchmark, Pattern, WorkloadFingerprint};
 use queue::WorkQueue;
@@ -79,6 +79,11 @@ pub struct PipelineConfig {
     pub threads: usize,
     /// Workload RNG seed (simulation sizes come from [`sim_sizes`]).
     pub seed: u64,
+    /// Run the phase-liveness dead-store / barrier elimination pass after
+    /// synthesis (`--no-elim` clears it). The per-benchmark block size is
+    /// taken from the workload's launch config; the pass bails cleanly on
+    /// anything it can't prove (multi-warp blocks, rewritten bodies).
+    pub elim: bool,
 }
 
 impl Default for PipelineConfig {
@@ -91,6 +96,7 @@ impl Default for PipelineConfig {
                 .map(|n| n.get())
                 .unwrap_or(4),
             seed: 42,
+            elim: true,
         }
     }
 }
@@ -159,6 +165,7 @@ pub fn sim_sizes(b: &Benchmark) -> (usize, usize, usize) {
         // the cooperative barrier scheduler is exercised across blocks)
         Pattern::TiledReduce { .. } => (6, 1, 1),
         Pattern::SharedStencil { .. } => (5, 1, 1),
+        Pattern::SharedGather { .. } => (6, 1, 1),
         _ if b.dims == 3 => (40, 10, 8),
         _ => (96, 8, 1),
     }
@@ -361,11 +368,19 @@ impl SuiteRun<'_> {
 
         let kernel = cell.slots[0].kernel.lock().unwrap().clone().expect("baseline kernel set");
         let hash = cell.hash.lock().unwrap().expect("hash set");
+        // served from the workload cache — generated once per benchmark;
+        // its launch config supplies the block size the elimination pass
+        // proves against
+        let wl = self.p.workload_art(b, sim_sizes(b), self.cfg.seed);
+        let elim = ElimOpts {
+            enabled: self.cfg.elim,
+            block: wl.workload.cfg.block.0,
+        };
         // synthesis goes through the cache: the detection (and through it
         // the single emulation) is a guaranteed hit here
         let synth = match self
             .p
-            .synthesized_hashed(&kernel, hash, self.cfg.detect, variant)
+            .synthesized_hashed(&kernel, hash, self.cfg.detect, variant, elim)
         {
             Ok(s) => s,
             Err(e) => {
@@ -378,8 +393,6 @@ impl SuiteRun<'_> {
             .unwrap()
             .clone()
             .expect("baseline simulated");
-        // served from the workload cache — generated once per benchmark
-        let wl = self.p.workload_art(b, sim_sizes(b), self.cfg.seed);
         let v = match self
             .p
             .validated(&synth.kernel, synth.hash, &wl, Some((hash, baseline.out.as_slice())))

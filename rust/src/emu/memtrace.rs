@@ -155,6 +155,28 @@ impl MemTrace {
             .filter(|l| l.valid && !l.guarded && l.space == Space::Global)
     }
 
+    /// Every `.shared` load, in record order — including invalidated ones.
+    /// `valid` tracks store-forwarding validity for the *detector*; the
+    /// phase-liveness pass must see every shared read the kernel performs
+    /// (an invalidated load still reads the bytes a staging store wrote).
+    pub fn shared_loads(&self) -> impl Iterator<Item = &LoadRec> {
+        self.loads.iter().filter(|l| l.space == Space::Shared)
+    }
+
+    /// Every `.shared` store, in record order.
+    pub fn shared_stores(&self) -> impl Iterator<Item = &StoreRec> {
+        self.stores.iter().filter(|s| s.space == Space::Shared)
+    }
+
+    /// Highest barrier-phase id any record carries (0 for an empty trace).
+    /// The flow crossed exactly this many `bar.sync`s before its last
+    /// recorded memory access.
+    pub fn max_phase(&self) -> u32 {
+        let l = self.loads.iter().map(|l| l.phase).max().unwrap_or(0);
+        let s = self.stores.iter().map(|s| s.phase).max().unwrap_or(0);
+        l.max(s)
+    }
+
     /// Every term the trace references (serialization roots for the
     /// [`crate::sym::persist`] codec).
     pub fn term_roots(&self, out: &mut Vec<TermId>) {
@@ -362,6 +384,35 @@ mod tests {
             },
         );
         assert_eq!(killed.len(), 1);
+    }
+
+    #[test]
+    fn shared_queries_see_invalidated_records_and_phases() {
+        let mut p = TermPool::new();
+        let mut t = MemTrace::default();
+        let a = mk_addr(&mut p, "sdata", 0);
+        let mut l = load(&mut p, 0, a, false);
+        l.space = Space::Shared;
+        t.record_load(l);
+        let sv = p.constant(0, 32);
+        // aliasing shared store in a later phase invalidates the load …
+        t.record_store(
+            &p,
+            StoreRec {
+                stmt: 2,
+                addr: a,
+                value: sv,
+                ty: Type::F32,
+                space: Space::Shared,
+                segment: 0,
+                phase: 3,
+            },
+        );
+        assert!(!t.loads[0].valid);
+        // … but the phase-liveness queries still see it, plus the store.
+        assert_eq!(t.shared_loads().count(), 1);
+        assert_eq!(t.shared_stores().count(), 1);
+        assert_eq!(t.max_phase(), 3);
     }
 
     #[test]

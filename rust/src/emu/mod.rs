@@ -186,6 +186,7 @@ impl std::fmt::Display for EmuError {
 impl std::error::Error for EmuError {}
 
 /// The emulator: owns the term pool and the per-kernel static index.
+#[derive(Debug)]
 pub struct Emu<'k> {
     pub pool: TermPool,
     pub kernel: &'k Kernel,

@@ -3,6 +3,8 @@
 //! Reproduction of Matsumura et al., *A Symbolic Emulator for Shuffle
 //! Synthesis on the NVIDIA PTX Code* (CC '23). See DESIGN.md for the system
 //! inventory and the substitutions made for the GPU-less testbed.
+#![forbid(unsafe_code)]
+#![deny(missing_debug_implementations)]
 pub mod cli;
 pub mod coordinator;
 pub mod emu;

@@ -18,7 +18,7 @@ use ptxasw::coordinator::{report, run_suite_on, PipelineConfig};
 use ptxasw::perf::by_name as arch_by_name;
 use ptxasw::pipeline::{DiskStore, Pipeline};
 use ptxasw::ptx::{parse, print_module};
-use ptxasw::shuffle::{DetectOpts, Variant};
+use ptxasw::shuffle::{DetectOpts, ElimOpts, ElimReport, Variant};
 use ptxasw::suite;
 use std::path::PathBuf;
 
@@ -27,10 +27,10 @@ ptxasw — symbolic emulator + shuffle synthesis for NVIDIA PTX
 
 USAGE:
   ptxasw asm <in.ptx> [--out FILE] [--variant full|noload|nocorner|uniform]
-             [--max-delta N] [--report] [--stats] [cache flags]
+             [--max-delta N] [--no-elim] [--report] [--stats] [cache flags]
   ptxasw suite [bench...] [--shared] [--arch NAME] [--threads N]
-             [--sim-threads N] [--max-delta N] [--fig3 bench] [--stats]
-             [cache flags]
+             [--sim-threads N] [--max-delta N] [--no-elim] [--fig3 bench]
+             [--stats] [cache flags]
   ptxasw apps [--threads N] [--sim-threads N] [--stats] [cache flags]
   ptxasw artifacts [--dir DIR] [--run NAME]
   ptxasw help
@@ -42,6 +42,11 @@ USAGE:
                     stage data through .shared and synchronize warps with
                     bar.sync on the cooperative scheduler; both are also
                     addressable by name
+  --no-elim         skip the phase-liveness elimination pass that deletes
+                    dead .shared staging stores and elides bar.syncs the
+                    synthesized shuffles made redundant (the pass is on by
+                    default and proves every rewrite per-lane; --report
+                    explains each store/barrier verdict)
   --sim-threads N   worker threads inside each simulation (blocks of the
                     grid run in parallel; results are bit-identical for
                     any N). Default 1 — the suite already parallelizes
@@ -144,6 +149,32 @@ fn variant_of(s: Option<&str>) -> Result<Variant, String> {
     })
 }
 
+/// Render one kernel's elimination verdicts for `--report`.
+fn print_elim_report(name: &str, r: &ElimReport) {
+    if let Some(reason) = &r.bail {
+        eprintln!("{name}: elim: skipped ({reason})");
+        return;
+    }
+    eprintln!(
+        "{name}: elim: {} of {} .shared store(s) deleted, {} of {} bar.sync(s) \
+         elided, {} load(s) forwarded, {} dead stmt(s) swept",
+        r.deleted_stores(),
+        r.stores.len(),
+        r.elided_barriers(),
+        r.barriers.len(),
+        r.forwarded_loads,
+        r.dce_stmts,
+    );
+    for s in &r.stores {
+        let verdict = if s.deleted { "deleted" } else { "kept" };
+        eprintln!("{name}:   store @{}: {verdict} — {}", s.stmt, s.reason);
+    }
+    for b in &r.barriers {
+        let verdict = if b.elided { "elided" } else { "kept" };
+        eprintln!("{name}:   bar.sync @{}: {verdict} — {}", b.stmt, b.reason);
+    }
+}
+
 fn cmd_asm(args: &Args) -> Result<(), String> {
     let input = args
         .positional
@@ -155,6 +186,13 @@ fn cmd_asm(args: &Args) -> Result<(), String> {
     let opts = DetectOpts {
         max_abs_delta: args.opt_usize("max-delta", 31)? as i64,
         ..DetectOpts::default()
+    };
+    // asm mode has no launch config; assume the pass's own single-warp
+    // domain (the analysis re-proves everything per-lane and bails on
+    // kernels whose traces need more than 32 threads)
+    let elim = ElimOpts {
+        enabled: !args.flag("no-elim"),
+        ..ElimOpts::default()
     };
 
     let p = build_pipeline(args)?;
@@ -183,8 +221,11 @@ fn cmd_asm(args: &Args) -> Result<(), String> {
         }
         total += det.detection.shuffle_count();
         let synth = p
-            .synthesized_hashed(&parsed.kernel, parsed.hash, opts, variant)
+            .synthesized_hashed(&parsed.kernel, parsed.hash, opts, variant, elim)
             .map_err(|e| format!("{}: {e}", k.name))?;
+        if args.flag("report") {
+            print_elim_report(&k.name, &synth.elim);
+        }
         *k = (*synth.kernel).clone();
     }
     let text = print_module(&module);
@@ -212,6 +253,7 @@ fn cmd_suite(args: &Args) -> Result<(), String> {
             ..base.detect
         },
         archs,
+        elim: !args.flag("no-elim"),
         ..base
     };
     let mut benches: Vec<_> = if args.positional.is_empty() {

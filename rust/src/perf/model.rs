@@ -410,6 +410,48 @@ ret;
         assert!(fr <= 1.0 + 1e-9);
     }
 
+    /// Fig. 3-style check for the phase-liveness pass: deleting the
+    /// `.shared` staging stores and eliding the `bar.sync`s must shrink
+    /// both the synchronization-stall column and the serial cycles —
+    /// the model prices `Bar` (sync stall + shared latency) and
+    /// `LdShared` (shared latency) per trace event, so the eliminated
+    /// kernel's shorter trace scores strictly better.
+    #[test]
+    fn elimination_reduces_sync_stalls_and_serial_cycles() {
+        use crate::emu::emulate;
+        use crate::shuffle::{eliminate, ElimOpts};
+        let b = crate::suite::by_name("tiledreduce").unwrap();
+        let w = crate::suite::workload(&b, 4, 1, 1, 42);
+        let emu = emulate(&w.kernel).unwrap();
+        let opts = ElimOpts {
+            enabled: true,
+            block: w.cfg.block.0,
+        };
+        let (elim, report) = eliminate(&w.kernel, &w.kernel, &emu, opts);
+        assert!(report.changed(), "pass must fire on tiledreduce: {report:?}");
+
+        let mut cfg = w.cfg.clone();
+        cfg.record_trace = true;
+        let r0 = run(&w.kernel, &cfg, w.mem.clone()).unwrap();
+        let r1 = run(&elim, &cfg, w.mem.clone()).unwrap();
+        let m0 = model(&w.kernel, &r0.trace, &MAXWELL);
+        let m1 = model(&elim, &r1.trace, &MAXWELL);
+        let sync = Stall::Synchronization.index();
+        assert!(m0.stalls[sync] > 0.0, "baseline must pay for its barriers");
+        assert!(
+            m1.stalls[sync] < m0.stalls[sync],
+            "sync stalls must drop: {} -> {}",
+            m0.stalls[sync],
+            m1.stalls[sync]
+        );
+        assert!(
+            m1.serial_cycles < m0.serial_cycles,
+            "serial cycles must drop: {} -> {}",
+            m0.serial_cycles,
+            m1.serial_cycles
+        );
+    }
+
     #[test]
     fn memory_throttle_on_load_burst() {
         // 12 independent loads back-to-back exceed Kepler's outstanding budget

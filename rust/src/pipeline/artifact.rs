@@ -15,7 +15,7 @@
 use crate::emu::{EmuError, EmulationResult};
 use crate::ptx::ast::Kernel;
 use crate::ptx::printer::ContentHash;
-use crate::shuffle::{DetectOpts, Detection, Variant};
+use crate::shuffle::{DetectOpts, Detection, ElimOpts, ElimReport, Variant};
 use crate::sim::SimError;
 use crate::suite::{Workload, WorkloadFingerprint};
 use std::collections::HashMap;
@@ -76,7 +76,9 @@ impl Detected {
     }
 }
 
-/// Stage 4 artifact: a synthesized kernel variant.
+/// Stage 4 artifact: a synthesized kernel variant, after the
+/// phase-liveness elimination pass has run over it (the pass is an
+/// identity transform when disabled or when nothing is provable).
 #[derive(Debug)]
 pub struct Synthesized {
     pub kernel: Arc<Kernel>,
@@ -86,6 +88,9 @@ pub struct Synthesized {
     /// Content address of the synthesized kernel itself (keys the
     /// downstream `Validated`/`Scored` artifacts).
     pub hash: ContentHash,
+    /// What the dead-store / barrier elimination pass did (or why it
+    /// declined to act).
+    pub elim: ElimReport,
 }
 
 /// Which artifact family a cache event belongs to.
@@ -274,8 +279,9 @@ type PlainMap<K, T> = Mutex<HashMap<K, PlainSlot<T>>>;
 
 /// Detection key: kernel + the full [`DetectOpts`] that shaped it.
 pub type DetectKey = (ContentHash, DetectOpts);
-/// Synthesis key: detection key + variant.
-pub type SynthKey = (ContentHash, DetectOpts, Variant);
+/// Synthesis key: detection key + variant + the elimination options that
+/// shaped the post-synthesis cleanup.
+pub type SynthKey = (ContentHash, DetectOpts, Variant, ElimOpts);
 /// Validation key: kernel version + workload + (for variants) the
 /// baseline kernel whose output the bit-exactness verdict is against.
 pub type ValidateKey = (ContentHash, WorkloadFingerprint, Option<ContentHash>);

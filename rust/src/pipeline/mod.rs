@@ -46,7 +46,7 @@ use crate::perf::Arch;
 use crate::ptx::ast::Kernel;
 use crate::ptx::parser::{parse, ParseError};
 use crate::ptx::printer::{kernel_fingerprint, ContentHash};
-use crate::shuffle::{detect, synthesize, DetectOpts, Variant};
+use crate::shuffle::{detect, eliminate, synthesize, DetectOpts, ElimOpts, ElimReport, Variant};
 use crate::sim::SimError;
 use crate::suite::{Benchmark, WorkloadFingerprint};
 use crate::sym::SessionInterner;
@@ -524,23 +524,33 @@ impl Pipeline {
         out
     }
 
-    fn synth_disk_key(hash: ContentHash, opts: DetectOpts, variant: Variant) -> ContentHash {
+    fn synth_disk_key(
+        hash: ContentHash,
+        opts: DetectOpts,
+        variant: Variant,
+        elim: ElimOpts,
+    ) -> ContentHash {
         KeyBuilder::new("synthesized")
             .hash(hash)
             .opts(opts)
             .u64(store::variant_key_byte(variant))
+            .elim(elim)
             .finish()
     }
 
     /// Synthesized-variant artifact; reuses the cached detection (and
-    /// through it the single emulation).
+    /// through it the single emulation). After synthesis the
+    /// phase-liveness elimination pass ([`crate::shuffle::eliminate`])
+    /// runs with `elim` — an identity transform when disabled or when
+    /// nothing is provable; its verdicts travel in the artifact.
     pub fn synthesized(
         &self,
         kernel: &Arc<Kernel>,
         opts: DetectOpts,
         variant: Variant,
+        elim: ElimOpts,
     ) -> Result<Arc<Synthesized>, EmuError> {
-        self.synthesized_hashed(kernel, kernel_fingerprint(kernel), opts, variant)
+        self.synthesized_hashed(kernel, kernel_fingerprint(kernel), opts, variant, elim)
     }
 
     pub fn synthesized_hashed(
@@ -549,13 +559,14 @@ impl Pipeline {
         hash: ContentHash,
         opts: DetectOpts,
         variant: Variant,
+        elim: ElimOpts,
     ) -> Result<Arc<Synthesized>, EmuError> {
-        let key = (hash, opts, variant);
+        let key = (hash, opts, variant, elim);
         let slot = self.cache.synth_slot(key);
         let mut event = CacheEvent::Hit;
         let out = slot
             .get_or_init(|| {
-                let dkey = Pipeline::synth_disk_key(hash, opts, variant);
+                let dkey = Pipeline::synth_disk_key(hash, opts, variant, elim);
                 if let Some(art) =
                     self.disk_load(StoreKind::Synthesized, dkey, store::decode_synthesized)
                 {
@@ -564,14 +575,27 @@ impl Pipeline {
                 }
                 event = CacheEvent::Miss;
                 let det = self.detected_hashed(kernel, hash, opts)?;
+                // the elimination pass re-reads the source kernel's
+                // symbolic trace; served from the in-memory slot the
+                // detection above already filled (or from disk)
+                let emu = if elim.enabled {
+                    Some(self.emulated_hashed(kernel, hash)?)
+                } else {
+                    None
+                };
                 let t0 = Instant::now();
                 let synthesized = synthesize(kernel, &det.detection, variant);
+                let (final_kernel, elim_report) = match &emu {
+                    Some(emu) => eliminate(&synthesized, kernel, &emu.result, elim),
+                    None => (synthesized, ElimReport::disabled()),
+                };
                 self.timings.record(Stage::Synthesize, t0.elapsed());
                 let art = Synthesized {
-                    hash: kernel_fingerprint(&synthesized),
-                    kernel: Arc::new(synthesized),
+                    hash: kernel_fingerprint(&final_kernel),
+                    kernel: Arc::new(final_kernel),
                     variant,
                     source: hash,
+                    elim: elim_report,
                 };
                 self.disk_store(StoreKind::Synthesized, dkey, store::encode_synthesized(&art));
                 Ok(Arc::new(art))
@@ -747,11 +771,14 @@ ret;
         let k = Arc::new(parse_kernel(K).unwrap());
         let opts = DetectOpts::default();
         for v in [Variant::NoLoad, Variant::NoCorner, Variant::Full] {
-            let s = p.synthesized(&k, opts, v).unwrap();
+            let s = p.synthesized(&k, opts, v, ElimOpts::default()).unwrap();
             assert_eq!(s.variant, v);
         }
         let s = p.stats();
         assert_eq!(s.cache.emulate_misses, 1, "exactly one emulation");
+        // each synth miss re-reads the emulation for the elimination
+        // pass — from the in-memory slot detection already filled
+        assert_eq!(s.cache.emulate_hits, 3);
         assert_eq!(s.cache.detect_misses, 1, "exactly one detection");
         // each variant after the first found the detection in the cache
         assert_eq!(s.cache.detect_hits, 2);

@@ -38,7 +38,7 @@ use crate::pipeline::stages::{Scored, Validated};
 use crate::ptx::ast::Kernel;
 use crate::ptx::parser::parse_kernel;
 use crate::ptx::printer::{print_kernel, ContentHash};
-use crate::shuffle::{Candidate, DetectOpts, Detection, Variant};
+use crate::shuffle::{Candidate, DetectOpts, Detection, ElimOpts, ElimReport, Variant};
 use crate::sim::{DecodedKernel, SimStats, WarpEvent};
 use crate::sym::SessionInterner;
 use crate::util::{fnv64, Dec, Enc};
@@ -58,7 +58,10 @@ use std::time::{Duration, SystemTime};
 /// v5: `SimStats` grew the engine telemetry counters
 /// (`superblocks_entered`, `vector_warp_steps`) and the decoded form
 /// carries the superblock table (`sb_end`).
-pub const STORE_VERSION: u32 = 5;
+/// v6: `synthesized/` artifacts carry the phase-liveness [`ElimReport`]
+/// (dead-store / barrier-elision verdicts) and their disk key includes
+/// the [`ElimOpts`] fingerprint.
+pub const STORE_VERSION: u32 = 6;
 const MAGIC: [u8; 4] = *b"RPST";
 /// Default resident-set bound: 256 MiB.
 pub const DEFAULT_MAX_BYTES: u64 = 256 * 1024 * 1024;
@@ -342,6 +345,7 @@ struct Entry {
 /// [`crate::util::Fnv128`] scheme (the `kernel_fingerprint` scheme —
 /// never the process-seeded `DefaultHasher`, keys must be identical
 /// run-to-run).
+#[derive(Debug)]
 pub struct KeyBuilder(crate::util::Fnv128);
 
 impl KeyBuilder {
@@ -368,6 +372,13 @@ impl KeyBuilder {
     /// Key the full detection-options struct (exhaustive, see
     /// [`DetectOpts::key_into`]).
     pub fn opts(&mut self, o: DetectOpts) -> &mut KeyBuilder {
+        o.key_into(&mut self.0);
+        self
+    }
+
+    /// Key the full elimination-options struct (exhaustive, see
+    /// [`ElimOpts::key_into`]).
+    pub fn elim(&mut self, o: ElimOpts) -> &mut KeyBuilder {
         o.key_into(&mut self.0);
         self
     }
@@ -530,6 +541,7 @@ pub(crate) fn encode_synthesized(a: &Synthesized) -> Vec<u8> {
     e.u64(a.hash.0);
     e.u64(a.hash.1);
     e.str(&print_kernel(&a.kernel));
+    a.elim.encode(&mut e);
     e.buf
 }
 
@@ -539,11 +551,13 @@ pub(crate) fn decode_synthesized(bytes: &[u8]) -> Option<Synthesized> {
     let source = ContentHash(d.u64()?, d.u64()?);
     let hash = ContentHash(d.u64()?, d.u64()?);
     let kernel = parse_kernel(d.str()?).ok()?;
+    let elim = ElimReport::decode(&mut d)?;
     d.done().then_some(Synthesized {
         kernel: Arc::new(kernel),
         variant,
         source,
         hash,
+        elim,
     })
 }
 
@@ -793,5 +807,87 @@ mod tests {
         assert_ne!(a, c);
         let d = KeyBuilder::new("u").u64(1).hash(ContentHash(2, 3)).finish();
         assert_ne!(a, d);
+    }
+
+    #[test]
+    fn key_builder_separates_elim_opts() {
+        let base = KeyBuilder::new("s").elim(ElimOpts::default()).finish();
+        let off = KeyBuilder::new("s")
+            .elim(ElimOpts {
+                enabled: false,
+                block: 32,
+            })
+            .finish();
+        let wider = KeyBuilder::new("s")
+            .elim(ElimOpts {
+                enabled: true,
+                block: 64,
+            })
+            .finish();
+        assert_ne!(base, off);
+        assert_ne!(base, wider);
+        assert_ne!(off, wider);
+    }
+
+    #[test]
+    fn synthesized_payload_roundtrips_and_rejects_corruption() {
+        use crate::ptx::printer::kernel_fingerprint;
+        use crate::shuffle::phase_liveness::{BarrierElim, StoreElim};
+
+        let kernel = parse_kernel(
+            r#"
+.visible .entry rt(.param .u64 out){
+.reg .f32 %f<2>;
+mov.f32 %f1, 0f3F800000;
+ret;
+}
+"#,
+        )
+        .unwrap();
+        let art = Synthesized {
+            hash: kernel_fingerprint(&kernel),
+            kernel: Arc::new(kernel),
+            variant: Variant::Full,
+            source: ContentHash(11, 13),
+            elim: ElimReport {
+                bail: None,
+                stores: vec![StoreElim {
+                    stmt: 3,
+                    deleted: true,
+                    reason: "all readers forwarded".into(),
+                }],
+                barriers: vec![BarrierElim {
+                    stmt: 5,
+                    elided: false,
+                    reason: "unproven cross-lane traffic".into(),
+                }],
+                forwarded_loads: 2,
+                dce_stmts: 4,
+            },
+        };
+        let bytes = encode_synthesized(&art);
+        let back = decode_synthesized(&bytes).unwrap();
+        assert_eq!(back.variant, art.variant);
+        assert_eq!(back.source, art.source);
+        assert_eq!(back.hash, art.hash);
+        assert_eq!(back.elim, art.elim);
+
+        // every strict prefix must decode to None, never panic
+        for cut in 0..bytes.len() {
+            assert!(decode_synthesized(&bytes[..cut]).is_none(), "prefix {cut}");
+        }
+        // trailing garbage is rejected by the `done()` gate
+        let mut padded = bytes.clone();
+        padded.push(0);
+        assert!(decode_synthesized(&padded).is_none());
+        // randomized single-byte flips: decode may reject or may yield a
+        // structurally different artifact, but must never panic
+        let mut rng = crate::util::Rng::new(0x5eed);
+        for _ in 0..64 {
+            let mut evil = bytes.clone();
+            let i = rng.below(evil.len() as u64) as usize;
+            evil[i] ^= (rng.below(255) + 1) as u8;
+            let _ = decode_synthesized(&evil);
+        }
     }
 }

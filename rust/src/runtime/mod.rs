@@ -103,6 +103,16 @@ pub struct Runtime {
     specs: HashMap<String, ArtifactSpec>,
 }
 
+// Manual impl: the xla backend's client/executable handles are foreign
+// types without `Debug`.
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("artifacts", &self.specs.len())
+            .finish_non_exhaustive()
+    }
+}
+
 impl Runtime {
     /// Open the runtime over an artifact directory (reads `manifest.txt`).
     pub fn open(dir: impl AsRef<Path>) -> Result<Runtime, RuntimeError> {

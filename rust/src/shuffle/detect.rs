@@ -416,6 +416,40 @@ $EXIT: ret;
     }
 
     #[test]
+    fn barrier_after_both_loads_does_not_veto() {
+        // boundary case for the cross-phase veto: the veto fires only when
+        // a `bar.sync` sits *between* the two loads. Here the barrier comes
+        // after both, so they share a phase and the candidate must survive.
+        let k = parse_kernel(
+            r#"
+.visible .entry bafter(.param .u64 out, .param .u64 a){
+.reg .b32 %r<6>; .reg .b64 %rd<8>; .reg .f32 %f<4>;
+ld.param.u64 %rd1, [out];
+ld.param.u64 %rd2, [a];
+cvta.to.global.u64 %rd3, %rd2;
+cvta.to.global.u64 %rd4, %rd1;
+mov.u32 %r4, %tid.x;
+mul.wide.s32 %rd5, %r4, 4;
+add.s64 %rd6, %rd3, %rd5;
+ld.global.nc.f32 %f1, [%rd6];
+ld.global.nc.f32 %f2, [%rd6+4];
+bar.sync 0;
+add.f32 %f3, %f1, %f2;
+add.s64 %rd7, %rd4, %rd5;
+st.global.f32 [%rd7], %f3;
+ret;
+}
+"#,
+        )
+        .unwrap();
+        let res = emulate(&k).unwrap();
+        let det = detect(&k, &res, DetectOpts::default());
+        assert_eq!(det.total_global_loads, 2);
+        assert_eq!(det.shuffle_count(), 1, "same-phase loads must not be vetoed");
+        assert_eq!(det.chosen[0].delta, 1);
+    }
+
+    #[test]
     fn f64_loads_not_shuffled() {
         // 32-bit shuffles only (paper §2.3)
         let k = parse_kernel(

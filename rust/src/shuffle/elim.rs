@@ -1,0 +1,794 @@
+//! Driver for the phase-liveness elimination (`shuffle/phase_liveness.rs`):
+//! applies a [`Plan`] to the kernel — rewriting covered `.shared` loads
+//! into register forwarding (`mov` / `shfl.sync`), deleting dead staging
+//! stores, eliding dead `bar.sync`s — then sweeps the address-computation
+//! chains the deleted traffic alone kept alive (a backward dead-code pass
+//! over the `shuffle/liveness.rs`-style use/def sets) and prunes `.shared`
+//! windows nothing references anymore.
+//!
+//! Every decision lands in the [`ElimReport`]: one entry per store and per
+//! barrier (indices into the *pre-elimination* body), plus rewrite counts,
+//! so `--stats` can explain exactly why each was or wasn't removed.
+
+use super::phase_liveness::{
+    plan, seg_shape, CoverSeg, CoverSrc, ElimOpts, ElimReport, LoadPlan, Plan, SegShape,
+};
+use crate::emu::induction::written_reg;
+use crate::emu::EmulationResult;
+use crate::ptx::ast::{
+    Address, CmpOp, IntBinOp, Kernel, Op, Operand, Reg, RegDecl, ShflMode, Statement, Type,
+};
+use std::collections::HashMap;
+
+/// Run the elimination pass over a synthesized kernel. `source` is the
+/// kernel the emulation (`emu`) actually ran — trace statement indices are
+/// only meaningful if synthesis left the body unchanged, so any divergence
+/// is a clean bail (kernel returned as-is, reason in the report).
+pub fn eliminate(
+    kernel: &Kernel,
+    source: &Kernel,
+    emu: &EmulationResult,
+    opts: ElimOpts,
+) -> (Kernel, ElimReport) {
+    if !opts.enabled {
+        return (kernel.clone(), ElimReport::disabled());
+    }
+    if kernel.body != source.body || kernel.shared != source.shared {
+        return (
+            kernel.clone(),
+            ElimReport::bailed(
+                "synthesis rewrote the body; trace indices no longer align with it",
+            ),
+        );
+    }
+    let p = match plan(kernel, emu, opts) {
+        Ok(p) => p,
+        Err(reason) => return (kernel.clone(), ElimReport::bailed(reason)),
+    };
+    let mut report = report_from(&p);
+    if p.covered.is_empty() && p.dead_stores.is_empty() && p.elide_bars.is_empty() {
+        return (kernel.clone(), report);
+    }
+    let (mut out, forwarded) = apply(kernel, &p);
+    report.forwarded_loads = forwarded;
+    report.dce_stmts = sweep_dead_code(&mut out.body);
+    prune_shared_decls(&mut out);
+    (out, report)
+}
+
+/// Fold the plan's per-store / per-barrier verdicts into the report.
+fn report_from(p: &Plan) -> ElimReport {
+    use super::phase_liveness::{BarrierElim, StoreElim};
+    let mut stores: Vec<StoreElim> = p
+        .dead_stores
+        .iter()
+        .map(|(stmt, reason)| StoreElim {
+            stmt: *stmt,
+            deleted: true,
+            reason: reason.clone(),
+        })
+        .chain(p.kept_stores.iter().map(|(stmt, reason)| StoreElim {
+            stmt: *stmt,
+            deleted: false,
+            reason: reason.clone(),
+        }))
+        .collect();
+    stores.sort_by_key(|s| s.stmt);
+    let mut barriers: Vec<BarrierElim> = p
+        .elide_bars
+        .iter()
+        .map(|(stmt, reason)| BarrierElim {
+            stmt: *stmt,
+            elided: true,
+            reason: reason.clone(),
+        })
+        .chain(p.kept_bars.iter().map(|(stmt, reason)| BarrierElim {
+            stmt: *stmt,
+            elided: false,
+            reason: reason.clone(),
+        }))
+        .collect();
+    barriers.sort_by_key(|b| b.stmt);
+    ElimReport {
+        bail: None,
+        stores,
+        barriers,
+        forwarded_loads: 0,
+        dce_stmts: 0,
+    }
+}
+
+/// Fresh-register + statement emission state for the rewrites.
+struct Emit {
+    tid: Reg,
+    need_tid: bool,
+    nq: u32, // %zeq — predicates
+    nb: u32, // %zeb — b32 temporaries
+    nm: u32, // %zem — activemask results
+}
+
+impl Emit {
+    fn new() -> Emit {
+        Emit {
+            tid: Reg::new("%zet0"),
+            need_tid: false,
+            nq: 0,
+            nb: 0,
+            nm: 0,
+        }
+    }
+    fn pred(&mut self) -> Reg {
+        let r = Reg::new(format!("%zeq{}", self.nq));
+        self.nq += 1;
+        r
+    }
+    fn b32(&mut self) -> Reg {
+        let r = Reg::new(format!("%zeb{}", self.nb));
+        self.nb += 1;
+        r
+    }
+    fn mask(&mut self) -> Reg {
+        let r = Reg::new(format!("%zem{}", self.nm));
+        self.nm += 1;
+        r
+    }
+}
+
+/// `mov` flavour for committing a value of the load's type: float regs
+/// move as `.f32`, everything else as raw `.b32` bits.
+fn mov_ty(ty: Type) -> Type {
+    if ty == Type::F32 {
+        Type::F32
+    } else {
+        Type::B32
+    }
+}
+
+/// Predicate computation for one reader segment, or `None` when the
+/// segment needs no guard / reuses the load's own.
+enum SegPred {
+    /// Commit unguarded.
+    Open,
+    /// Commit under `@[!]reg` (the load's own guard, already computed).
+    Reuse(Reg, bool),
+    /// Commit under a fresh predicate; the given statements compute it.
+    Fresh(Reg, Vec<Statement>),
+}
+
+fn seg_pred(e: &mut Emit, lp: &LoadPlan, seg: &CoverSeg, block: u32) -> SegPred {
+    if seg.readers == lp.exec {
+        // one segment spans every executing lane: reuse the load's own
+        // guard (an unguarded load's exec is the whole block → no guard)
+        return match &lp.guard {
+            Some(g) => SegPred::Reuse(g.reg.clone(), g.negated),
+            None => SegPred::Open,
+        };
+    }
+    let shape = seg_shape(seg.readers, block).expect("plan only emits encodable segments");
+    if shape == SegShape::Full {
+        return SegPred::Open;
+    }
+    e.need_tid = true;
+    let q = e.pred();
+    let mut setup = Vec::new();
+    match shape {
+        SegShape::Full => unreachable!(),
+        SegShape::Single(k) => setup.push(Statement::instr(Op::Setp {
+            cmp: CmpOp::Eq,
+            ty: Type::S32,
+            dst: q.clone(),
+            a: Operand::Reg(e.tid.clone()),
+            b: Operand::ImmInt(k as i128),
+        })),
+        SegShape::Prefix(k) => setup.push(Statement::instr(Op::Setp {
+            cmp: CmpOp::Lt,
+            ty: Type::S32,
+            dst: q.clone(),
+            a: Operand::Reg(e.tid.clone()),
+            b: Operand::ImmInt(k as i128),
+        })),
+        SegShape::Suffix(a) => setup.push(Statement::instr(Op::Setp {
+            cmp: CmpOp::Ge,
+            ty: Type::S32,
+            dst: q.clone(),
+            a: Operand::Reg(e.tid.clone()),
+            b: Operand::ImmInt(a as i128),
+        })),
+        SegShape::Range(a, b) => {
+            // a <= t <= b  ⇔  (t - a) <u (b - a + 1)
+            let t = e.b32();
+            setup.push(Statement::instr(Op::IntBin {
+                op: IntBinOp::Sub,
+                ty: Type::S32,
+                dst: t.clone(),
+                a: Operand::Reg(e.tid.clone()),
+                b: Operand::ImmInt(a as i128),
+            }));
+            setup.push(Statement::instr(Op::Setp {
+                cmp: CmpOp::Lt,
+                ty: Type::U32,
+                dst: q.clone(),
+                a: Operand::Reg(t),
+                b: Operand::ImmInt((b - a + 1) as i128),
+            }));
+        }
+    }
+    SegPred::Fresh(q, setup)
+}
+
+/// The `shfl.sync` realizing one cross-lane segment source. Emitted
+/// *unguarded*: the simulator requires a shuffle's source lane to execute
+/// the instruction, so the shuffle runs on every lane and a guarded `mov`
+/// commits the value only where the plan proved it correct.
+fn shfl_op(src: &CoverSrc, dst: Reg, mask: Reg, block: u32) -> Op {
+    let top = block as i128 - 1;
+    let (mode, b, c) = match src {
+        CoverSrc::Shift { n, .. } if *n > 0 => (ShflMode::Down, *n as i128, top),
+        CoverSrc::Shift { n, .. } => (ShflMode::Up, -*n as i128, 0),
+        CoverSrc::Bcast { lane, .. } => (ShflMode::Idx, *lane as i128, top),
+        _ => unreachable!("register sources don't shuffle"),
+    };
+    let reg = match src {
+        CoverSrc::Shift { reg, .. } | CoverSrc::Bcast { reg, .. } => reg.clone(),
+        _ => unreachable!(),
+    };
+    Op::Shfl {
+        mode,
+        dst,
+        pred_out: None,
+        src: Operand::Reg(reg),
+        b: Operand::ImmInt(b),
+        c: Operand::ImmInt(c),
+        mask: Operand::Reg(mask),
+    }
+}
+
+/// Statements replacing one covered load.
+fn rewrite_load(e: &mut Emit, lp: &LoadPlan, block: u32) -> Vec<Statement> {
+    let mut out = Vec::new();
+    for seg in &lp.segs {
+        let pred = seg_pred(e, lp, seg, block);
+        match (&seg.src, pred) {
+            // register / immediate sources commit directly
+            (CoverSrc::Same(r), p) => {
+                let mv = Op::Mov {
+                    ty: mov_ty(lp.ty),
+                    dst: lp.dst.clone(),
+                    src: Operand::Reg(r.clone()),
+                };
+                push_committed(&mut out, mv, p);
+            }
+            (CoverSrc::Imm(v), p) => {
+                let ty = match v {
+                    Operand::ImmF32(_) => Type::F32,
+                    _ => Type::B32,
+                };
+                let mv = Op::Mov {
+                    ty,
+                    dst: lp.dst.clone(),
+                    src: v.clone(),
+                };
+                push_committed(&mut out, mv, p);
+            }
+            // cross-lane sources: open segments shuffle straight into the
+            // destination (every reader has a proven-valid source lane)
+            (src, SegPred::Open) => {
+                let m = e.mask();
+                out.push(Statement::instr(Op::Activemask { dst: m.clone() }));
+                out.push(Statement::instr(shfl_op(src, lp.dst.clone(), m, block)));
+            }
+            // guarded segments: unguarded shuffle into a temp, then a
+            // guarded b32 mov commits it on the reader lanes only
+            (src, p) => {
+                let m = e.mask();
+                out.push(Statement::instr(Op::Activemask { dst: m.clone() }));
+                let tmp = e.b32();
+                out.push(Statement::instr(shfl_op(src, tmp.clone(), m, block)));
+                let mv = Op::Mov {
+                    ty: Type::B32,
+                    dst: lp.dst.clone(),
+                    src: Operand::Reg(tmp),
+                };
+                push_committed(&mut out, mv, p);
+            }
+        }
+    }
+    out
+}
+
+fn push_committed(out: &mut Vec<Statement>, op: Op, pred: SegPred) {
+    match pred {
+        SegPred::Open => out.push(Statement::instr(op)),
+        SegPred::Reuse(r, neg) => out.push(Statement::guarded(&r.0, neg, op)),
+        SegPred::Fresh(r, setup) => {
+            out.extend(setup);
+            out.push(Statement::guarded(&r.0, false, op));
+        }
+    }
+}
+
+/// Rebuild the body: covered loads → forwarding sequences, dead stores and
+/// elided barriers dropped, everything else copied. Returns the rewritten
+/// kernel (with extended register declarations) and the forwarded count.
+fn apply(kernel: &Kernel, p: &Plan) -> (Kernel, u32) {
+    let mut e = Emit::new();
+    let mut repl: HashMap<usize, Vec<Statement>> = HashMap::new();
+    for lp in &p.covered {
+        repl.insert(lp.stmt, rewrite_load(&mut e, lp, p.block));
+    }
+    let drop: Vec<usize> = p
+        .dead_stores
+        .iter()
+        .chain(p.elide_bars.iter())
+        .map(|(i, _)| *i)
+        .collect();
+
+    let mut body = Vec::with_capacity(kernel.body.len() + 8);
+    for (i, s) in kernel.body.iter().enumerate() {
+        if drop.contains(&i) {
+            continue;
+        }
+        match repl.remove(&i) {
+            Some(seq) => body.extend(seq),
+            None => body.push(s.clone()),
+        }
+    }
+    if e.need_tid {
+        body.insert(
+            0,
+            Statement::instr(Op::Mov {
+                ty: Type::U32,
+                dst: e.tid.clone(),
+                src: Operand::Special(crate::ptx::ast::Special::TidX),
+            }),
+        );
+    }
+
+    let mut regs = kernel.regs.clone();
+    if e.need_tid {
+        regs.push(RegDecl {
+            ty: Type::B32,
+            prefix: "%zet".into(),
+            count: 1,
+        });
+    }
+    if e.nq > 0 {
+        regs.push(RegDecl {
+            ty: Type::Pred,
+            prefix: "%zeq".into(),
+            count: e.nq,
+        });
+    }
+    if e.nb > 0 {
+        regs.push(RegDecl {
+            ty: Type::B32,
+            prefix: "%zeb".into(),
+            count: e.nb,
+        });
+    }
+    if e.nm > 0 {
+        regs.push(RegDecl {
+            ty: Type::B32,
+            prefix: "%zem".into(),
+            count: e.nm,
+        });
+    }
+
+    (
+        Kernel {
+            name: kernel.name.clone(),
+            params: kernel.params.clone(),
+            regs,
+            shared: kernel.shared.clone(),
+            body,
+        },
+        p.covered.len() as u32,
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Backward dead-code sweep + shared-window pruning
+// ---------------------------------------------------------------------------
+
+/// Register names an operand reads.
+fn operand_use<'a>(o: &'a Operand, out: &mut Vec<&'a str>) {
+    if let Operand::Reg(r) = o {
+        out.push(&r.0);
+    }
+}
+
+/// Every register a statement *reads*: operands, address bases, store
+/// sources, guard predicates — and, for a guarded write, the destination
+/// itself (inactive lanes keep its old value, so the old value is live).
+fn stmt_uses<'a>(s: &'a Statement, out: &mut Vec<&'a str>) {
+    let Statement::Instr { guard, op } = s else {
+        return;
+    };
+    if let Some(g) = guard {
+        out.push(&g.reg.0);
+        if let Some(d) = written_reg(op) {
+            out.push(&d.0);
+        }
+    }
+    match op {
+        Op::Ld { addr, .. } => operand_use(&addr.base, out),
+        Op::St { addr, src, .. } => {
+            operand_use(&addr.base, out);
+            operand_use(src, out);
+        }
+        Op::Mov { src, .. } | Op::Cvta { src, .. } | Op::Cvt { src, .. } => {
+            operand_use(src, out)
+        }
+        Op::IntBin { a, b, .. } | Op::FltBin { a, b, .. } | Op::Setp { a, b, .. } => {
+            operand_use(a, out);
+            operand_use(b, out);
+        }
+        Op::Mad { a, b, c, .. } | Op::Fma { a, b, c, .. } => {
+            operand_use(a, out);
+            operand_use(b, out);
+            operand_use(c, out);
+        }
+        Op::Not { a, .. } | Op::Neg { a, .. } | Op::FltUn { a, .. } => operand_use(a, out),
+        Op::Selp { a, b, p, .. } => {
+            operand_use(a, out);
+            operand_use(b, out);
+            operand_use(p, out);
+        }
+        Op::Shfl {
+            src, b, c, mask, ..
+        } => {
+            operand_use(src, out);
+            operand_use(b, out);
+            operand_use(c, out);
+            operand_use(mask, out);
+        }
+        Op::Bra { .. }
+        | Op::Activemask { .. }
+        | Op::BarSync { .. }
+        | Op::Ret
+        | Op::Exit => {}
+    }
+}
+
+/// Is this statement a pure register definition — removable once nothing
+/// reads its destination? Memory writes, barriers and control flow are
+/// never removable here (the plan handles stores/barriers itself); loads
+/// are pure in this machine model (no faults, no side effects).
+fn removable(s: &Statement) -> bool {
+    let Statement::Instr { op, .. } = s else {
+        return false;
+    };
+    written_reg(op).is_some()
+}
+
+/// Iteratively delete pure definitions whose destination no other
+/// statement reads, until a fixpoint. Returns how many went.
+fn sweep_dead_code(body: &mut Vec<Statement>) -> u32 {
+    let mut removed = 0u32;
+    loop {
+        // use-count per register name, over the whole body
+        let mut uses: HashMap<&str, u32> = HashMap::new();
+        let mut names: Vec<&str> = Vec::new();
+        for s in body.iter() {
+            stmt_uses(s, &mut names);
+        }
+        for n in &names {
+            *uses.entry(n).or_insert(0) += 1;
+        }
+        // a statement's own reads of its destination (e.g. a guarded
+        // write's merge) must not keep it alive
+        let mut dead: Vec<usize> = Vec::new();
+        let mut own: Vec<&str> = Vec::new();
+        for (i, s) in body.iter().enumerate() {
+            if !removable(s) {
+                continue;
+            }
+            let Statement::Instr { op, .. } = s else {
+                continue;
+            };
+            let Some(d) = written_reg(op) else {
+                continue;
+            };
+            let total = uses.get(d.0.as_str()).copied().unwrap_or(0);
+            own.clear();
+            stmt_uses(s, &mut own);
+            let self_reads = own.iter().filter(|n| **n == d.0.as_str()).count() as u32;
+            if total == self_reads {
+                dead.push(i);
+            }
+        }
+        if dead.is_empty() {
+            return removed;
+        }
+        removed += dead.len() as u32;
+        let mut i = 0usize;
+        body.retain(|_| {
+            let keep = !dead.contains(&i);
+            i += 1;
+            keep
+        });
+    }
+}
+
+/// Drop `.shared` declarations no remaining operand names.
+fn prune_shared_decls(k: &mut Kernel) {
+    let mut names = Vec::new();
+    for s in &k.body {
+        let Statement::Instr { op, .. } = s else {
+            continue;
+        };
+        let mut check = |o: &Operand| {
+            if let Operand::Var(v) = o {
+                names.push(v.clone());
+            }
+        };
+        match op {
+            Op::Ld { addr, .. } => check(&addr.base),
+            Op::St { addr, src, .. } => {
+                check(&addr.base);
+                check(src);
+            }
+            Op::Mov { src, .. } | Op::Cvta { src, .. } | Op::Cvt { src, .. } => check(src),
+            Op::IntBin { a, b, .. } | Op::FltBin { a, b, .. } | Op::Setp { a, b, .. } => {
+                check(a);
+                check(b);
+            }
+            Op::Mad { a, b, c, .. } | Op::Fma { a, b, c, .. } => {
+                check(a);
+                check(b);
+                check(c);
+            }
+            Op::Not { a, .. } | Op::Neg { a, .. } | Op::FltUn { a, .. } => check(a),
+            Op::Selp { a, b, p, .. } => {
+                check(a);
+                check(b);
+                check(p);
+            }
+            Op::Shfl {
+                src, b, c, mask, ..
+            } => {
+                check(src);
+                check(b);
+                check(c);
+                check(mask);
+            }
+            _ => {}
+        }
+    }
+    k.shared.retain(|d| names.iter().any(|n| *n == d.name));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::emu::emulate;
+    use crate::ptx::parser::parse;
+    use crate::ptx::printer::print_kernel;
+    use crate::sim::{run_reference, SimConfig};
+    use crate::suite::{by_name, workload, Pattern};
+
+    fn eliminated(name: &str) -> (crate::suite::Workload, Kernel, ElimReport) {
+        let b = by_name(name).unwrap();
+        let w = workload(&b, 4, 1, 1, 42);
+        let emu = emulate(&w.kernel).unwrap();
+        let block = match &b.pattern {
+            Pattern::TiledReduce { block } => *block,
+            Pattern::SharedStencil { block, .. } => *block,
+            Pattern::SharedGather { block } => *block,
+            _ => panic!("not shared"),
+        };
+        let (k, r) = eliminate(
+            &w.kernel,
+            &w.kernel,
+            &emu,
+            ElimOpts {
+                enabled: true,
+                block,
+            },
+        );
+        (w, k, r)
+    }
+
+    fn count_op(k: &Kernel, f: impl Fn(&Op) -> bool) -> usize {
+        k.body
+            .iter()
+            .filter(|s| matches!(s, Statement::Instr { op, .. } if f(op)))
+            .count()
+    }
+
+    fn shared_stores(k: &Kernel) -> usize {
+        count_op(k, |o| {
+            matches!(
+                o,
+                Op::St {
+                    space: crate::ptx::ast::Space::Shared,
+                    ..
+                }
+            )
+        })
+    }
+
+    fn shared_loads(k: &Kernel) -> usize {
+        count_op(k, |o| {
+            matches!(
+                o,
+                Op::Ld {
+                    space: crate::ptx::ast::Space::Shared,
+                    ..
+                }
+            )
+        })
+    }
+
+    fn barriers(k: &Kernel) -> usize {
+        count_op(k, |o| matches!(o, Op::BarSync { .. }))
+    }
+
+    /// Run both the original and eliminated kernels through the reference
+    /// simulator on the same workload; outputs must agree bit-exactly.
+    fn validate_bit_exact(w: &crate::suite::Workload, k: &Kernel) {
+        let r0 = run_reference(&w.kernel, &w.cfg, w.mem.clone()).expect("original runs");
+        let r1 = run_reference(k, &w.cfg, w.mem.clone()).expect("eliminated runs");
+        let a = r0.mem.read_f32s(w.out_ptr, w.out_len).unwrap();
+        let b = r1.mem.read_f32s(w.out_ptr, w.out_len).unwrap();
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "out[{i}] diverged: {x} vs {y}"
+            );
+        }
+        // and both must still match the CPU reference
+        for (i, (x, y)) in a.iter().zip(&w.expected).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "out[{i}] vs CPU: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn tiledreduce_loses_all_stores_and_barriers() {
+        let (w, k, r) = eliminated("tiledreduce");
+        assert!(r.bail.is_none(), "{:?}", r.bail);
+        assert_eq!(shared_stores(&k), 0);
+        assert_eq!(shared_loads(&k), 0);
+        assert_eq!(barriers(&k), 0);
+        assert!(r.deleted_stores() >= 6, "stores: {:?}", r.stores);
+        assert!(r.elided_barriers() >= 5, "barriers: {:?}", r.barriers);
+        assert!(r.forwarded_loads >= 11, "forwarded: {}", r.forwarded_loads);
+        assert!(r.dce_stmts > 0, "the staging address chain must die");
+        assert!(k.shared.is_empty(), "sdata window must be pruned");
+        // still a valid, reparsable kernel
+        let text = crate::ptx::printer::print_module(&crate::ptx::ast::Module {
+            kernels: vec![k.clone()],
+        });
+        parse(&text).expect("eliminated kernel reparses");
+        validate_bit_exact(&w, &k);
+    }
+
+    #[test]
+    fn sharedstencil_loses_stores_and_barrier() {
+        let (w, k, r) = eliminated("sharedstencil");
+        assert!(r.bail.is_none(), "{:?}", r.bail);
+        assert_eq!(shared_stores(&k), 0);
+        assert_eq!(shared_loads(&k), 0);
+        assert_eq!(barriers(&k), 0);
+        assert_eq!(r.deleted_stores(), 3);
+        assert_eq!(r.elided_barriers(), 1);
+        assert_eq!(r.forwarded_loads, 3);
+        assert!(k.shared.is_empty());
+        // the shifted taps become shuffles
+        assert!(count_op(&k, |o| matches!(o, Op::Shfl { .. })) >= 2);
+        validate_bit_exact(&w, &k);
+    }
+
+    #[test]
+    fn sharedgather_keeps_staging_conservatively() {
+        let (w, k, r) = eliminated("sharedgather");
+        assert!(r.bail.is_none(), "{:?}", r.bail);
+        // the data-dependent tap pins the store and the barrier
+        assert_eq!(shared_stores(&k), 1);
+        assert_eq!(barriers(&k), 1);
+        assert_eq!(shared_loads(&k), 1, "only the tid tap forwards");
+        assert_eq!(r.deleted_stores(), 0);
+        assert_eq!(r.elided_barriers(), 0);
+        assert_eq!(r.forwarded_loads, 1);
+        assert!(!k.shared.is_empty());
+        // the kept store's reason names the blocking load
+        let kept = r.stores.iter().find(|s| !s.deleted).unwrap();
+        assert!(kept.reason.contains("kept load"), "{}", kept.reason);
+        validate_bit_exact(&w, &k);
+    }
+
+    #[test]
+    fn disabled_pass_changes_nothing() {
+        let b = by_name("tiledreduce").unwrap();
+        let w = workload(&b, 2, 1, 1, 7);
+        let emu = emulate(&w.kernel).unwrap();
+        let (k, r) = eliminate(
+            &w.kernel,
+            &w.kernel,
+            &emu,
+            ElimOpts {
+                enabled: false,
+                block: 32,
+            },
+        );
+        assert_eq!(print_kernel(&k), print_kernel(&w.kernel));
+        assert!(r.bail.is_some());
+        assert!(!r.changed());
+    }
+
+    #[test]
+    fn synth_divergence_bails_cleanly() {
+        let b = by_name("tiledreduce").unwrap();
+        let w = workload(&b, 2, 1, 1, 7);
+        let emu = emulate(&w.kernel).unwrap();
+        let mut other = w.kernel.clone();
+        other.body.push(Statement::instr(Op::Ret));
+        let (k, r) = eliminate(
+            &other,
+            &w.kernel,
+            &emu,
+            ElimOpts {
+                enabled: true,
+                block: 32,
+            },
+        );
+        assert_eq!(print_kernel(&k), print_kernel(&other));
+        assert!(r.bail.as_deref().unwrap_or("").contains("rewrote"), "{:?}", r.bail);
+    }
+
+    #[test]
+    fn dce_sweeps_chains_but_keeps_partial_writes() {
+        let mut body = vec![
+            // dead chain: %r1 -> %rd1, nothing reads %rd1
+            Statement::instr(Op::Mov {
+                ty: Type::U32,
+                dst: Reg::new("%r1"),
+                src: Operand::ImmInt(3),
+            }),
+            Statement::instr(Op::IntBin {
+                op: IntBinOp::MulWide,
+                ty: Type::S32,
+                dst: Reg::new("%rd1"),
+                a: Operand::Reg(Reg::new("%r1")),
+                b: Operand::ImmInt(4),
+            }),
+            // live: %f1 written unguarded, partially overwritten, stored
+            Statement::instr(Op::Mov {
+                ty: Type::F32,
+                dst: Reg::new("%f1"),
+                src: Operand::ImmF32(0),
+            }),
+            Statement::guarded(
+                "%p1",
+                false,
+                Op::Mov {
+                    ty: Type::F32,
+                    dst: Reg::new("%f1"),
+                    src: Operand::ImmF32(0x3F80_0000),
+                },
+            ),
+            Statement::instr(Op::St {
+                space: crate::ptx::ast::Space::Global,
+                ty: Type::F32,
+                addr: Address {
+                    base: Operand::Reg(Reg::new("%rd2")),
+                    offset: 0,
+                },
+                src: Operand::Reg(Reg::new("%f1")),
+            }),
+            Statement::instr(Op::Ret),
+        ];
+        let n = sweep_dead_code(&mut body);
+        assert_eq!(n, 2, "the %r1/%rd1 chain dies");
+        assert_eq!(body.len(), 4);
+        // the guarded partial write stays: the store reads %f1
+        assert!(body.iter().any(|s| matches!(
+            s,
+            Statement::Instr {
+                guard: Some(_),
+                ..
+            }
+        )));
+    }
+}

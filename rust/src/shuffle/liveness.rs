@@ -241,6 +241,112 @@ ret;
     }
 
     #[test]
+    fn diamond_cfg_liveness_hand_computed() {
+        // Diamond: both arms redefine %r3 from %r2, the join reads %r3.
+        //
+        //   stmt  instruction              live-in (hand-computed)
+        //   0     mov %r1, %tid.x          {rd1}
+        //   1     mov %r2, 7               {rd1, r1}
+        //   2     setp %p1, %r1 < 4        {rd1, r2, r1}
+        //   3     @%p1 bra $THEN           {rd1, r2, p1}
+        //   4     add %r3, %r2, 1          {rd1, r2}
+        //   5     bra $JOIN                {rd1, r3}
+        //   6     $THEN:                   {rd1, r2}
+        //   7     add %r3, %r2, 2          {rd1, r2}
+        //   8     $JOIN:                   {rd1, r3}
+        //   9     st [%rd1], %r3           {rd1, r3}
+        //   10    ret                      {}
+        //
+        // (%rd1 is never defined, so it is live-in everywhere it can reach.)
+        let k = parse_kernel(
+            r#"
+.visible .entry d(.param .u64 a){
+.reg .b32 %r<6>; .reg .pred %p<2>; .reg .b64 %rd<3>;
+mov.u32 %r1, %tid.x;
+mov.u32 %r2, 7;
+setp.lt.s32 %p1, %r1, 4;
+@%p1 bra $THEN;
+add.s32 %r3, %r2, 1;
+bra $JOIN;
+$THEN:
+add.s32 %r3, %r2, 2;
+$JOIN:
+st.global.b32 [%rd1], %r3;
+ret;
+}
+"#,
+        )
+        .unwrap();
+        let cfg = Cfg::build(&k);
+        let mut regs = RegInterner::from_kernel(&k);
+        let lv = Liveness::compute(&k, &cfg, &mut regs);
+        let r2 = regs.get(&Reg::new("%r2")).unwrap();
+        let r3 = regs.get(&Reg::new("%r3")).unwrap();
+        let p1 = regs.get(&Reg::new("%p1")).unwrap();
+        // %r2 flows down BOTH arms but dies at the join
+        assert!(lv.is_live_in(4, r2));
+        assert!(lv.is_live_in(7, r2));
+        assert!(!lv.is_live_in(9, r2));
+        // %r3 is born in each arm and live only from there to the store
+        assert!(!lv.is_live_in(4, r3));
+        assert!(!lv.is_live_in(7, r3));
+        assert!(lv.is_live_in(5, r3));
+        assert!(lv.is_live_in(9, r3));
+        // the branch predicate dies at the branch
+        assert!(lv.is_live_in(3, p1));
+        assert!(!lv.is_live_in(4, p1));
+        // peak pressure: {rd1, r2, r1} at stmt 2 / {rd1, r2, p1} at stmt 3
+        assert_eq!(lv.max_live(), 3);
+    }
+
+    #[test]
+    fn loop_max_live_matches_hand_computed_table() {
+        //   stmt  instruction              live-in (hand-computed fixpoint)
+        //   0     mov %r1, 0               {rd1}
+        //   1     mov %f1, 0.0             {rd1, r1}
+        //   2     $L:                      {rd1, f1, r1}
+        //   3     add %f1, %f1, %f1        {rd1, f1, r1}
+        //   4     add %r1, %r1, 1          {rd1, f1, r1}
+        //   5     setp %p1, %r1 < 10       {rd1, f1, r1}
+        //   6     @%p1 bra $L              {rd1, f1, r1, p1}
+        //   7     st [%rd1], %f1           {rd1, f1}
+        //   8     ret                      {}
+        let k = parse_kernel(
+            r#"
+.visible .entry l(.param .u64 a){
+.reg .b32 %r<4>; .reg .pred %p<2>; .reg .f32 %f<3>; .reg .b64 %rd<3>;
+mov.u32 %r1, 0;
+mov.f32 %f1, 0f00000000;
+$L:
+add.f32 %f1, %f1, %f1;
+add.s32 %r1, %r1, 1;
+setp.lt.s32 %p1, %r1, 10;
+@%p1 bra $L;
+st.global.f32 [%rd1], %f1;
+ret;
+}
+"#,
+        )
+        .unwrap();
+        let cfg = Cfg::build(&k);
+        let mut regs = RegInterner::from_kernel(&k);
+        let lv = Liveness::compute(&k, &cfg, &mut regs);
+        let r1 = regs.get(&Reg::new("%r1")).unwrap();
+        let f1 = regs.get(&Reg::new("%f1")).unwrap();
+        let p1 = regs.get(&Reg::new("%p1")).unwrap();
+        // the back edge keeps both accumulator and counter live at the header
+        assert!(lv.is_live_in(2, f1));
+        assert!(lv.is_live_in(2, r1));
+        assert!(!lv.is_live_in(2, p1));
+        // the counter dies after the branch, the accumulator reaches the store
+        assert!(!lv.is_live_in(7, r1));
+        assert!(lv.is_live_in(7, f1));
+        // peak pressure: {rd1, f1, r1, p1} flowing into the guarded branch
+        assert!(lv.is_live_in(6, p1));
+        assert_eq!(lv.max_live(), 4);
+    }
+
+    #[test]
     fn guarded_write_reads_old_value() {
         let k = parse_kernel(
             r#"

@@ -2,10 +2,14 @@
 
 pub mod cfg;
 pub mod detect;
+pub mod elim;
 pub mod liveness;
+pub mod phase_liveness;
 pub mod synth;
 
 pub use cfg::Cfg;
 pub use detect::{analyze, detect, Candidate, DetectOpts, Detection};
+pub use elim::eliminate;
 pub use liveness::Liveness;
+pub use phase_liveness::{plan, ElimOpts, ElimReport};
 pub use synth::{synthesize, Variant};

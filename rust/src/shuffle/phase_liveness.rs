@@ -1,0 +1,1255 @@
+//! Phase-level liveness of `.shared` staging traffic (ROADMAP item 1).
+//!
+//! Shuffle synthesis substitutes loads; this pass reasons about the other
+//! half of the round trip: the `.shared` stores that staged the data and
+//! the `bar.sync`s that published it. Over the barrier-segmented symbolic
+//! memory trace it proves, per shared load and per lane, *which store's
+//! register* holds the loaded value — the store→load analogue of the
+//! paper's shuffle-delta solving (`sym::solve_forward`). Loads whose every
+//! executing lane is reached by a proven writer become register traffic
+//! (`mov` / `shfl.sync`); stores no remaining load can read become dead;
+//! barriers no cross-lane memory traffic crosses become no-ops. This is
+//! the elimination ACC Saturator performs on directive-generated code
+//! (PAPERS.md, arXiv:2306.13002), rebuilt on the symbolic emulator.
+//!
+//! Soundness rules (each conservative default is "keep the code"):
+//!
+//! - The pass only runs on single-warp launches (`block ≤ 32`) of
+//!   straight-line bodies that produced exactly one symbolic flow —
+//!   everything the forwarding proof assumes (lockstep statement order,
+//!   total thread enumeration) holds by construction there.
+//! - A store or load whose lane set can't be derived from its guard
+//!   (a unique unguarded `setp` over `%tid.x` and an immediate) is
+//!   *unknown*: unknown stores poison every load they may reach, unknown
+//!   loads keep every store they may read.
+//! - An address `sym::solve_forward` can't relate is unknown unless the
+//!   accesses are provably disjoint for **every** pair of lanes.
+//! - Cross-lane forwarding is only accepted across a barrier (strictly
+//!   earlier phase). Same-phase forwarding must be same-lane and in
+//!   program order; same-phase cross-lane traffic is a race — poison.
+//! - Two different lanes writing a reader's bytes in the same last phase
+//!   is a write-write race — poison.
+//! - The staged register must reach the load untouched: any redefinition
+//!   between store and load that may execute on the source lane cancels
+//!   the match.
+//! - A barrier stays unless *no* kept store ↝ kept load pair (same state
+//!   space, possibly-overlapping, possibly-cross-lane, non-`.nc`) spans
+//!   it. Lockstep per-lane program order makes same-lane and store↔store
+//!   pairs barrier-free within one warp; anything unknown keeps the
+//!   barrier — on independent-thread-scheduling hardware cross-lane
+//!   memory traffic needs the sync even inside a warp.
+
+use crate::emu::induction::written_reg;
+use crate::emu::EmulationResult;
+use crate::ptx::ast::{
+    CmpOp, Guard, Kernel, Op, Operand, Reg, Space, Statement, Type,
+};
+use crate::sym::{solve_forward, split_on, ForwardRel, TermId, TermPool};
+use crate::util::{Dec, Enc, Fnv128};
+
+/// Elimination configuration. Part of the `Synthesized` cache key — see
+/// [`ElimOpts::key_into`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ElimOpts {
+    /// Master switch (`--no-elim` clears it).
+    pub enabled: bool,
+    /// Launched `blockDim.x`. The pass only fires for `1..=32` — one warp —
+    /// because the store→load forwarding it emits is warp-synchronous.
+    pub block: u32,
+}
+
+impl Default for ElimOpts {
+    fn default() -> ElimOpts {
+        ElimOpts {
+            enabled: true,
+            block: 32,
+        }
+    }
+}
+
+impl ElimOpts {
+    /// Feed every field into a stable 128-bit key (mirrors
+    /// [`crate::shuffle::DetectOpts::key_into`]) — exhaustive destructuring
+    /// so a future field cannot silently stay out of the disk-cache key.
+    pub fn key_into(&self, h: &mut Fnv128) {
+        let ElimOpts { enabled, block } = *self;
+        h.write_u64(enabled as u64);
+        h.write_u64(block as u64);
+    }
+}
+
+/// Why one `.shared` store was or wasn't deleted.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StoreElim {
+    /// Statement index in the *pre-elimination* body.
+    pub stmt: usize,
+    pub deleted: bool,
+    pub reason: String,
+}
+
+/// Why one `bar.sync` was or wasn't elided.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BarrierElim {
+    /// Statement index in the *pre-elimination* body.
+    pub stmt: usize,
+    pub elided: bool,
+    pub reason: String,
+}
+
+/// Machine-readable elimination record carried by the `Synthesized`
+/// artifact: one verdict per `.shared` store and per `bar.sync`, plus the
+/// rewrite counts. `--stats`/`--report` render it; the disk store encodes
+/// it with the total `util::codec` readers.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct ElimReport {
+    /// `Some(reason)` — the pass did not run; the kernel is unchanged.
+    pub bail: Option<String>,
+    /// One entry per `.shared` store statement, in body order.
+    pub stores: Vec<StoreElim>,
+    /// One entry per `bar.sync` statement, in body order.
+    pub barriers: Vec<BarrierElim>,
+    /// Shared loads rewritten into register forwarding (`mov`/`shfl.sync`).
+    pub forwarded_loads: u32,
+    /// Dead address-chain statements swept after the rewrites.
+    pub dce_stmts: u32,
+}
+
+impl ElimReport {
+    pub fn disabled() -> ElimReport {
+        ElimReport {
+            bail: Some("elimination disabled".into()),
+            ..ElimReport::default()
+        }
+    }
+
+    pub fn bailed(reason: impl Into<String>) -> ElimReport {
+        ElimReport {
+            bail: Some(reason.into()),
+            ..ElimReport::default()
+        }
+    }
+
+    pub fn deleted_stores(&self) -> usize {
+        self.stores.iter().filter(|s| s.deleted).count()
+    }
+
+    pub fn elided_barriers(&self) -> usize {
+        self.barriers.iter().filter(|b| b.elided).count()
+    }
+
+    /// Did the pass change the kernel at all?
+    pub fn changed(&self) -> bool {
+        self.forwarded_loads > 0
+            || self.dce_stmts > 0
+            || self.deleted_stores() > 0
+            || self.elided_barriers() > 0
+    }
+
+    pub(crate) fn encode(&self, e: &mut Enc) {
+        match &self.bail {
+            None => e.bool(false),
+            Some(r) => {
+                e.bool(true);
+                e.str(r);
+            }
+        }
+        e.u64(self.stores.len() as u64);
+        for s in &self.stores {
+            e.u64(s.stmt as u64);
+            e.bool(s.deleted);
+            e.str(&s.reason);
+        }
+        e.u64(self.barriers.len() as u64);
+        for b in &self.barriers {
+            e.u64(b.stmt as u64);
+            e.bool(b.elided);
+            e.str(&b.reason);
+        }
+        e.u32(self.forwarded_loads);
+        e.u32(self.dce_stmts);
+    }
+
+    /// Total decode: any malformed byte yields `None`, never a panic — the
+    /// disk store recomputes on `None` (same contract as `sym::persist`).
+    pub(crate) fn decode(d: &mut Dec) -> Option<ElimReport> {
+        let bail = if d.bool()? {
+            Some(d.str()?.to_string())
+        } else {
+            None
+        };
+        let nstores = d.len()?;
+        let mut stores = Vec::with_capacity(nstores);
+        for _ in 0..nstores {
+            stores.push(StoreElim {
+                stmt: d.u64()? as usize,
+                deleted: d.bool()?,
+                reason: d.str()?.to_string(),
+            });
+        }
+        let nbars = d.len()?;
+        let mut barriers = Vec::with_capacity(nbars);
+        for _ in 0..nbars {
+            barriers.push(BarrierElim {
+                stmt: d.u64()? as usize,
+                elided: d.bool()?,
+                reason: d.str()?.to_string(),
+            });
+        }
+        Some(ElimReport {
+            bail,
+            stores,
+            barriers,
+            forwarded_loads: d.u32()?,
+            dce_stmts: d.u32()?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The rewrite plan the analysis produces and `shuffle::elim` applies
+// ---------------------------------------------------------------------------
+
+/// Where one reader segment of a covered load gets its value from.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CoverSrc {
+    /// The staged value was an immediate — materialize it directly.
+    Imm(Operand),
+    /// Same-lane forwarding: plain register reuse.
+    Same(Reg),
+    /// `shfl.sync.{up|down}` by `|n|` lanes from the staging register.
+    Shift { reg: Reg, n: i64 },
+    /// `shfl.sync.idx` from one fixed lane.
+    Bcast { reg: Reg, lane: i64 },
+}
+
+/// One lane segment of a covered load: these readers all take their value
+/// from the same store via the same lane relation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CoverSeg {
+    /// Bitmask over lanes `0..block`.
+    pub readers: u32,
+    pub src: CoverSrc,
+}
+
+/// A shared load the pass will rewrite into register traffic.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadPlan {
+    /// Statement index of the `ld.shared` in the body.
+    pub stmt: usize,
+    pub dst: Reg,
+    pub ty: Type,
+    /// The load's own guard, if any (reused to commit full-set segments).
+    pub guard: Option<Guard>,
+    /// Executing-lane mask of the load.
+    pub exec: u32,
+    /// Disjoint segments whose union is exactly `exec`.
+    pub segs: Vec<CoverSeg>,
+}
+
+/// Everything the analysis decided; `shuffle::elim` turns it into code.
+#[derive(Debug, Clone, Default)]
+pub struct Plan {
+    pub block: u32,
+    /// Loads to rewrite, body order.
+    pub covered: Vec<LoadPlan>,
+    /// Shared loads kept, with the reason (body order).
+    pub kept_loads: Vec<(usize, String)>,
+    /// Shared stores to delete, with the reason (body order).
+    pub dead_stores: Vec<(usize, String)>,
+    /// Shared stores kept, with the reason (body order).
+    pub kept_stores: Vec<(usize, String)>,
+    /// `bar.sync` statements to elide, with the reason (body order).
+    pub elide_bars: Vec<(usize, String)>,
+    /// `bar.sync` statements kept, with the reason (body order).
+    pub kept_bars: Vec<(usize, String)>,
+}
+
+// ---------------------------------------------------------------------------
+// Static lane-set derivation
+// ---------------------------------------------------------------------------
+
+/// All-lanes mask for a block of `block` threads.
+pub(crate) fn block_mask(block: u32) -> u32 {
+    if block >= 32 {
+        u32::MAX
+    } else {
+        (1u32 << block) - 1
+    }
+}
+
+/// Register(s) a statement defines (guard-independent).
+fn stmt_defs(stmt: &Statement) -> Vec<&Reg> {
+    let Statement::Instr { op, .. } = stmt else {
+        return Vec::new();
+    };
+    let mut v = Vec::new();
+    if let Some(d) = written_reg(op) {
+        v.push(d);
+    }
+    if let Op::Shfl {
+        pred_out: Some(p), ..
+    } = op
+    {
+        v.push(p);
+    }
+    v
+}
+
+/// The unique statement index `< upto` defining `r`, if there is exactly
+/// one such definition. More than one (or zero) ⇒ `None`.
+fn unique_def_before(body: &[Statement], r: &Reg, upto: usize) -> Option<usize> {
+    let mut found = None;
+    for (i, s) in body.iter().enumerate().take(upto) {
+        if stmt_defs(s).contains(&r) {
+            if found.is_some() {
+                return None;
+            }
+            found = Some(i);
+        }
+    }
+    found
+}
+
+/// What an operand evaluates to per-lane, after chasing unguarded moves.
+#[derive(Debug, Clone, Copy)]
+enum TidVal {
+    Tid,
+    Const(i128),
+}
+
+fn resolve_tid_val(body: &[Statement], upto: usize, o: &Operand, depth: u32) -> Option<TidVal> {
+    if depth == 0 {
+        return None;
+    }
+    match o {
+        Operand::ImmInt(k) => Some(TidVal::Const(*k)),
+        Operand::Special(s) if s.name() == "%tid.x" => Some(TidVal::Tid),
+        Operand::Reg(r) => {
+            let j = unique_def_before(body, r, upto)?;
+            match &body[j] {
+                Statement::Instr {
+                    guard: None,
+                    op: Op::Mov { src, .. },
+                } => resolve_tid_val(body, j, src, depth - 1),
+                Statement::Instr {
+                    guard: None,
+                    op: Op::Cvt { dty, sty, src, .. },
+                } if dty.bits() == 32 && sty.bits() == 32 && !dty.is_float() && !sty.is_float() => {
+                    resolve_tid_val(body, j, src, depth - 1)
+                }
+                _ => None,
+            }
+        }
+        _ => None,
+    }
+}
+
+fn cmp_holds(cmp: CmpOp, ty: Type, x: i128, y: i128) -> bool {
+    if ty.is_signed() {
+        let (a, b) = (x as u32 as i32, y as u32 as i32);
+        match cmp {
+            CmpOp::Eq => a == b,
+            CmpOp::Ne => a != b,
+            CmpOp::Lt => a < b,
+            CmpOp::Le => a <= b,
+            CmpOp::Gt => a > b,
+            CmpOp::Ge => a >= b,
+        }
+    } else {
+        let (a, b) = (x as u32, y as u32);
+        match cmp {
+            CmpOp::Eq => a == b,
+            CmpOp::Ne => a != b,
+            CmpOp::Lt => a < b,
+            CmpOp::Le => a <= b,
+            CmpOp::Gt => a > b,
+            CmpOp::Ge => a >= b,
+        }
+    }
+}
+
+/// Which lanes `0..block` execute statement `i`: the full block when it is
+/// unguarded, otherwise the lane set of the guard predicate — derivable
+/// only when the guard's unique unguarded `setp` compares a value traceable
+/// to `%tid.x` (through `mov`/integer `cvt`) against a constant.
+pub(crate) fn exec_lanes(body: &[Statement], i: usize, block: u32) -> Option<u32> {
+    let Statement::Instr { guard, .. } = &body[i] else {
+        return None;
+    };
+    let Some(g) = guard else {
+        return Some(block_mask(block));
+    };
+    let j = unique_def_before(body, &g.reg, i)?;
+    let Statement::Instr {
+        guard: None,
+        op: Op::Setp { cmp, ty, a, b, .. },
+    } = &body[j]
+    else {
+        return None;
+    };
+    if ty.bits() != 32 {
+        return None;
+    }
+    let av = resolve_tid_val(body, j, a, 8)?;
+    let bv = resolve_tid_val(body, j, b, 8)?;
+    let mut m = 0u32;
+    for t in 0..block.min(32) {
+        let xv = match av {
+            TidVal::Tid => t as i128,
+            TidVal::Const(k) => k,
+        };
+        let yv = match bv {
+            TidVal::Tid => t as i128,
+            TidVal::Const(k) => k,
+        };
+        if cmp_holds(*cmp, *ty, xv, yv) {
+            m |= 1 << t;
+        }
+    }
+    Some(if g.negated {
+        !m & block_mask(block)
+    } else {
+        m
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Lane-wise store↝load relation
+// ---------------------------------------------------------------------------
+
+/// How a store's bytes relate to a load's bytes, lane-wise.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Rel {
+    /// `L(t) = S(t + n)` exactly, and no partial overlap is possible.
+    Shift(i64),
+    /// `L(·) = S(lane)` exactly, and no partial overlap is possible.
+    Bcast(i64),
+    /// No lane of the load ever touches bytes any lane of the store wrote.
+    Disjoint,
+    /// Anything else — treat as "may interfere".
+    Unknown,
+}
+
+struct Access {
+    addr: TermId,
+    bytes: u64,
+}
+
+/// Can any (load-lane, store-lane) pair produce overlapping byte ranges?
+/// Decidable only when both strides and the rest difference are constant.
+fn provably_disjoint(pool: &TermPool, st: &Access, ld: &Access, tid: TermId, block: u32) -> bool {
+    let (ss, rs) = split_on(pool, st.addr, tid);
+    let (sl, rl) = split_on(pool, ld.addr, tid);
+    let d = rl.sub(&rs);
+    if !d.is_constant() {
+        return false;
+    }
+    let c = d.constant;
+    for t_ld in 0..block as i128 {
+        for t_st in 0..block as i128 {
+            let diff = sl * t_ld - ss * t_st + c; // load byte − store byte
+            if diff > -(ld.bytes as i128) && diff < st.bytes as i128 {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Relate store and load addresses. A `Shift`/`Bcast` result guarantees
+/// exact byte-range equality per matched lane pair *and* that no other
+/// lane pair partially overlaps (stride at least the access size, equal
+/// access sizes).
+fn relate(pool: &TermPool, st: &Access, ld: &Access, tid: TermId, block: u32) -> Rel {
+    let exact = st.bytes == ld.bytes;
+    if exact {
+        if let Some(rel) = solve_forward(pool, st.addr, ld.addr, tid) {
+            let (ss, _) = split_on(pool, st.addr, tid);
+            if ss.unsigned_abs() >= st.bytes as u128 {
+                return match rel {
+                    ForwardRel::Shift(n) => Rel::Shift(n),
+                    ForwardRel::Broadcast(l) => Rel::Bcast(l),
+                };
+            }
+        }
+    }
+    if provably_disjoint(pool, st, ld, tid, block) {
+        Rel::Disjoint
+    } else {
+        Rel::Unknown
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The analysis
+// ---------------------------------------------------------------------------
+
+struct SharedSt {
+    stmt: usize,
+    addr: TermId,
+    bytes: u64,
+    phase: u32,
+    /// `None` = underivable guard: poisons everything it may reach.
+    exec: Option<u32>,
+    src: Operand,
+}
+
+struct SharedLd {
+    stmt: usize,
+    addr: TermId,
+    bytes: u64,
+    phase: u32,
+    exec: Option<u32>,
+    dst: Reg,
+    ty: Type,
+    guard: Option<Guard>,
+}
+
+/// A memory access that matters for barrier-crossing traffic.
+struct CommAccess {
+    addr: TermId,
+    bytes: u64,
+    phase: u32,
+    space: Space,
+    exec: Option<u32>,
+    stmt: usize,
+}
+
+/// Run the phase-liveness analysis. `Err(reason)` is a whole-pass bail:
+/// the kernel must be left untouched.
+pub fn plan(kernel: &Kernel, emu: &EmulationResult, opts: ElimOpts) -> Result<Plan, String> {
+    let block = opts.block;
+    if block == 0 || block > 32 {
+        return Err(format!(
+            "block size {block} is not a single warp (1..=32); forwarding is warp-synchronous"
+        ));
+    }
+    for s in &kernel.body {
+        match s {
+            Statement::Label(_) => {
+                return Err("body has labels; the pass needs a straight-line body".into())
+            }
+            Statement::Instr {
+                op: Op::Bra { .. }, ..
+            } => return Err("body has branches; the pass needs a straight-line body".into()),
+            _ => {}
+        }
+    }
+    if emu.flows.len() != 1 {
+        return Err(format!(
+            "{} symbolic flows; the pass needs exactly one",
+            emu.flows.len()
+        ));
+    }
+    let flow = &emu.flows[0];
+    let pool = &emu.pool;
+    let tid = emu.tid_sym;
+    let body = &kernel.body;
+
+    // -- collect shared accesses, one trace record per statement ----------
+    let mut st_recs: Vec<SharedSt> = Vec::new();
+    for r in flow.trace.shared_stores() {
+        let Some(Statement::Instr {
+            guard,
+            op: Op::St { src, .. },
+        }) = body.get(r.stmt)
+        else {
+            return Err(format!("trace store at stmt {} has no matching st", r.stmt));
+        };
+        if st_recs.iter().any(|s| s.stmt == r.stmt) {
+            return Err(format!("stmt {} recorded twice; not straight-line", r.stmt));
+        }
+        let exec = if guard.is_some() {
+            exec_lanes(body, r.stmt, block)
+        } else {
+            Some(block_mask(block))
+        };
+        st_recs.push(SharedSt {
+            stmt: r.stmt,
+            addr: r.addr,
+            bytes: r.ty.bytes(),
+            phase: r.phase,
+            exec,
+            src: src.clone(),
+        });
+    }
+    let mut ld_recs: Vec<SharedLd> = Vec::new();
+    for r in flow.trace.shared_loads() {
+        let Some(Statement::Instr {
+            guard,
+            op: Op::Ld { dst, ty, .. },
+        }) = body.get(r.stmt)
+        else {
+            return Err(format!("trace load at stmt {} has no matching ld", r.stmt));
+        };
+        if ld_recs.iter().any(|l| l.stmt == r.stmt) {
+            return Err(format!("stmt {} recorded twice; not straight-line", r.stmt));
+        }
+        let exec = if guard.is_some() {
+            exec_lanes(body, r.stmt, block)
+        } else {
+            Some(block_mask(block))
+        };
+        ld_recs.push(SharedLd {
+            stmt: r.stmt,
+            addr: r.addr,
+            bytes: r.ty.bytes(),
+            phase: r.phase,
+            exec,
+            dst: dst.clone(),
+            ty: *ty,
+            guard: guard.clone(),
+        });
+    }
+    st_recs.sort_by_key(|s| s.stmt);
+    ld_recs.sort_by_key(|l| l.stmt);
+
+    // -- per-load coverage ------------------------------------------------
+    let rels: Vec<Vec<Rel>> = ld_recs
+        .iter()
+        .map(|l| {
+            let la = Access {
+                addr: l.addr,
+                bytes: l.bytes,
+            };
+            st_recs
+                .iter()
+                .map(|s| {
+                    let sa = Access {
+                        addr: s.addr,
+                        bytes: s.bytes,
+                    };
+                    relate(pool, &sa, &la, tid, block)
+                })
+                .collect()
+        })
+        .collect();
+
+    let mut out = Plan {
+        block,
+        ..Plan::default()
+    };
+    // covered[i] = true → load i rewritten, no longer reads memory
+    let mut covered = vec![false; ld_recs.len()];
+
+    'loads: for (li, l) in ld_recs.iter().enumerate() {
+        if l.ty.bits() != 32 {
+            out.kept_loads
+                .push((l.stmt, format!("{}-bit load; only 32-bit forwards", l.ty.bits())));
+            continue;
+        }
+        let Some(exec) = l.exec else {
+            out.kept_loads
+                .push((l.stmt, "guard lane set underivable".into()));
+            continue;
+        };
+        if exec == 0 {
+            out.kept_loads
+                .push((l.stmt, "statically no lane executes it".into()));
+            continue;
+        }
+        // lane → (store index, source lane) of the last proven writer
+        let mut assign: Vec<Option<(usize, u32, u32, usize)>> = vec![None; 32];
+        for t in 0..block {
+            if exec >> t & 1 == 0 {
+                continue;
+            }
+            // best = (store idx, source lane, phase, stmt)
+            let mut best: Option<(usize, u32, u32, usize)> = None;
+            for (si, s) in st_recs.iter().enumerate() {
+                let src = match rels[li][si] {
+                    Rel::Disjoint => continue,
+                    Rel::Unknown => {
+                        out.kept_loads.push((
+                            l.stmt,
+                            format!("store at stmt {} may alias it unprovably", s.stmt),
+                        ));
+                        continue 'loads;
+                    }
+                    Rel::Shift(n) => {
+                        let src = t as i64 + n;
+                        if src < 0 || src >= block as i64 {
+                            continue;
+                        }
+                        src as u32
+                    }
+                    Rel::Bcast(lane) => {
+                        if lane < 0 || lane >= block as i64 {
+                            continue;
+                        }
+                        lane as u32
+                    }
+                };
+                let Some(es) = s.exec else {
+                    out.kept_loads.push((
+                        l.stmt,
+                        format!("store at stmt {} has an underivable lane set", s.stmt),
+                    ));
+                    continue 'loads;
+                };
+                if es >> src & 1 == 0 {
+                    continue; // that lane never executes the store
+                }
+                // temporal filter: the write must happen before the read
+                if s.phase > l.phase || (s.phase == l.phase && s.stmt >= l.stmt) {
+                    continue;
+                }
+                if s.phase == l.phase && src != t {
+                    out.kept_loads.push((
+                        l.stmt,
+                        format!(
+                            "cross-lane read of stmt {} within one phase (race)",
+                            s.stmt
+                        ),
+                    ));
+                    continue 'loads;
+                }
+                best = match best {
+                    None => Some((si, src, s.phase, s.stmt)),
+                    Some(b) => {
+                        if s.phase > b.2 {
+                            Some((si, src, s.phase, s.stmt))
+                        } else if s.phase == b.2 {
+                            if src != b.1 {
+                                out.kept_loads.push((
+                                    l.stmt,
+                                    format!(
+                                        "lanes {} and {} both write lane {t}'s bytes in phase {} (race)",
+                                        b.1, src, s.phase
+                                    ),
+                                ));
+                                continue 'loads;
+                            }
+                            if s.stmt > b.3 {
+                                Some((si, src, s.phase, s.stmt))
+                            } else {
+                                Some(b)
+                            }
+                        } else {
+                            Some(b)
+                        }
+                    }
+                };
+            }
+            let Some(b) = best else {
+                out.kept_loads.push((
+                    l.stmt,
+                    format!("lane {t} reads bytes no proven store wrote"),
+                ));
+                continue 'loads;
+            };
+            assign[t as usize] = Some(b);
+        }
+
+        // -- register intactness + segment grouping -----------------------
+        let mut segs: Vec<CoverSeg> = Vec::new();
+        for (si, s) in st_recs.iter().enumerate() {
+            let mut readers = 0u32;
+            let mut src_lanes = 0u32;
+            for t in 0..block {
+                if let Some((bsi, src, _, _)) = assign[t as usize] {
+                    if bsi == si {
+                        readers |= 1 << t;
+                        src_lanes |= 1 << src;
+                    }
+                }
+            }
+            if readers == 0 {
+                continue;
+            }
+            let src = match &s.src {
+                Operand::Reg(r) => {
+                    // the staged register must survive from store to load on
+                    // every source lane
+                    for (j, stj) in body
+                        .iter()
+                        .enumerate()
+                        .take(l.stmt)
+                        .skip(s.stmt + 1)
+                    {
+                        if !stmt_defs(stj).contains(&r) {
+                            continue;
+                        }
+                        let harmless = exec_lanes(body, j, block)
+                            .is_some_and(|m| m & src_lanes == 0);
+                        if !harmless {
+                            out.kept_loads.push((
+                                l.stmt,
+                                format!(
+                                    "staged register {r} is redefined at stmt {j} before the load"
+                                ),
+                            ));
+                            continue 'loads;
+                        }
+                    }
+                    match rels[li][si] {
+                        Rel::Shift(0) => CoverSrc::Same(r.clone()),
+                        Rel::Shift(n) => CoverSrc::Shift { reg: r.clone(), n },
+                        // a broadcast whose only reader is the source lane
+                        // itself is plain same-lane reuse
+                        Rel::Bcast(_) if readers == src_lanes && readers.count_ones() == 1 => {
+                            CoverSrc::Same(r.clone())
+                        }
+                        Rel::Bcast(lane) => CoverSrc::Bcast {
+                            reg: r.clone(),
+                            lane,
+                        },
+                        _ => unreachable!("matched stores have a lane relation"),
+                    }
+                }
+                Operand::ImmInt(_) | Operand::ImmF32(_) | Operand::ImmF64(_) => {
+                    CoverSrc::Imm(s.src.clone())
+                }
+                _ => {
+                    out.kept_loads.push((
+                        l.stmt,
+                        format!("store at stmt {} stages a non-register value", s.stmt),
+                    ));
+                    continue 'loads;
+                }
+            };
+            segs.push(CoverSeg { readers, src });
+        }
+        // every segment's lane set must be encodable as a predicate
+        for seg in &segs {
+            if seg_shape(seg.readers, block).is_none() {
+                out.kept_loads.push((
+                    l.stmt,
+                    "reader lanes form no contiguous range; not encodable".into(),
+                ));
+                continue 'loads;
+            }
+        }
+        covered[li] = true;
+        out.covered.push(LoadPlan {
+            stmt: l.stmt,
+            dst: l.dst.clone(),
+            ty: l.ty,
+            guard: l.guard.clone(),
+            exec,
+            segs,
+        });
+    }
+
+    // -- store deletion ---------------------------------------------------
+    for (si, s) in st_recs.iter().enumerate() {
+        let mut blocker: Option<String> = None;
+        if s.exec.is_none() {
+            blocker = Some("its lane set is underivable".into());
+        }
+        for (li, l) in ld_recs.iter().enumerate() {
+            if covered[li] || blocker.is_some() {
+                continue;
+            }
+            let reaches = match rels[li][si] {
+                Rel::Disjoint => false,
+                Rel::Unknown => true,
+                Rel::Shift(n) => {
+                    let el = l.exec.unwrap_or(block_mask(block));
+                    let es = s.exec.unwrap_or(block_mask(block));
+                    (0..block).any(|t| {
+                        el >> t & 1 == 1 && {
+                            let src = t as i64 + n;
+                            (0..block as i64).contains(&src) && es >> (src as u32) & 1 == 1
+                        }
+                    })
+                }
+                Rel::Bcast(lane) => {
+                    let el = l.exec.unwrap_or(block_mask(block));
+                    let es = s.exec.unwrap_or(block_mask(block));
+                    el != 0
+                        && (0..block as i64).contains(&lane)
+                        && es >> (lane as u32) & 1 == 1
+                }
+            };
+            if reaches {
+                blocker = Some(format!("still read by the kept load at stmt {}", l.stmt));
+            }
+        }
+        match blocker {
+            Some(why) => out.kept_stores.push((s.stmt, why)),
+            None => out.dead_stores.push((
+                s.stmt,
+                "every load of its bytes was forwarded to registers".into(),
+            )),
+        }
+    }
+
+    // -- barrier elision --------------------------------------------------
+    // Traffic that still goes through memory after the rewrite: kept
+    // shared accesses plus all global ones (`.nc` loads are read-only by
+    // contract and cannot observe any store).
+    let dead: Vec<usize> = out.dead_stores.iter().map(|(i, _)| *i).collect();
+    let mut comm_st: Vec<CommAccess> = Vec::new();
+    let mut comm_ld: Vec<CommAccess> = Vec::new();
+    for s in flow.trace.stores.iter() {
+        match s.space {
+            Space::Shared if dead.contains(&s.stmt) => continue,
+            Space::Shared | Space::Global => {}
+            _ => continue, // local is lane-private; param/const are read-only
+        }
+        comm_st.push(CommAccess {
+            addr: s.addr,
+            bytes: s.ty.bytes(),
+            phase: s.phase,
+            space: s.space,
+            exec: exec_lanes(body, s.stmt, block),
+            stmt: s.stmt,
+        });
+    }
+    for (li, l) in ld_recs.iter().enumerate() {
+        if covered[li] {
+            continue;
+        }
+        comm_ld.push(CommAccess {
+            addr: l.addr,
+            bytes: l.bytes,
+            phase: l.phase,
+            space: Space::Shared,
+            exec: l.exec,
+            stmt: l.stmt,
+        });
+    }
+    for l in flow.trace.loads.iter() {
+        if l.space != Space::Global || l.nc {
+            continue;
+        }
+        comm_ld.push(CommAccess {
+            addr: l.addr,
+            bytes: l.ty.bytes(),
+            phase: l.phase,
+            space: Space::Global,
+            exec: exec_lanes(body, l.stmt, block),
+            stmt: l.stmt,
+        });
+    }
+
+    let mut bar_k = 0u32;
+    for (i, stmt) in body.iter().enumerate() {
+        let Statement::Instr {
+            op: Op::BarSync { .. },
+            ..
+        } = stmt
+        else {
+            continue;
+        };
+        // the k-th barrier separates phase k from phase k+1
+        let k = bar_k;
+        bar_k += 1;
+        let mut crossing: Option<String> = None;
+        'pairs: for s in &comm_st {
+            if s.phase > k {
+                continue;
+            }
+            for l in &comm_ld {
+                if l.phase <= k || l.space != s.space {
+                    continue;
+                }
+                if cross_lane_traffic(pool, s, l, tid, block) {
+                    crossing = Some(format!(
+                        "store at stmt {} still publishes to the load at stmt {}",
+                        s.stmt, l.stmt
+                    ));
+                    break 'pairs;
+                }
+            }
+        }
+        match crossing {
+            Some(why) => out.kept_bars.push((i, why)),
+            None => out.elide_bars.push((
+                i,
+                "no cross-lane memory traffic crosses it".into(),
+            )),
+        }
+    }
+
+    Ok(out)
+}
+
+/// Does any lane read bytes a *different* lane stored, across this
+/// store/load pair? Same-lane traffic is ordered by lockstep program order
+/// within the single warp and needs no barrier.
+fn cross_lane_traffic(
+    pool: &TermPool,
+    s: &CommAccess,
+    l: &CommAccess,
+    tid: TermId,
+    block: u32,
+) -> bool {
+    let sa = Access {
+        addr: s.addr,
+        bytes: s.bytes,
+    };
+    let la = Access {
+        addr: l.addr,
+        bytes: l.bytes,
+    };
+    match relate(pool, &sa, &la, tid, block) {
+        Rel::Disjoint => false,
+        Rel::Unknown => true,
+        Rel::Shift(0) => false,
+        Rel::Shift(n) => {
+            let el = l.exec.unwrap_or(block_mask(block));
+            let es = s.exec.unwrap_or(block_mask(block));
+            (0..block).any(|t| {
+                el >> t & 1 == 1 && {
+                    let src = t as i64 + n;
+                    (0..block as i64).contains(&src) && es >> (src as u32) & 1 == 1
+                }
+            })
+        }
+        Rel::Bcast(lane) => {
+            if !(0..block as i64).contains(&lane) {
+                return false;
+            }
+            let el = l.exec.unwrap_or(block_mask(block));
+            let es = s.exec.unwrap_or(block_mask(block));
+            es >> (lane as u32) & 1 == 1 && el & !(1 << lane as u32) != 0
+        }
+    }
+}
+
+/// How a reader lane set can be turned into a predicate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum SegShape {
+    /// Every lane of the block.
+    Full,
+    /// Exactly one lane.
+    Single(u32),
+    /// Lanes `0..k`.
+    Prefix(u32),
+    /// Lanes `k..block`.
+    Suffix(u32),
+    /// Lanes `a..=b`, `0 < a`, `b < block-1`.
+    Range(u32, u32),
+}
+
+/// Classify a non-empty lane mask; `None` for non-contiguous sets.
+pub(crate) fn seg_shape(mask: u32, block: u32) -> Option<SegShape> {
+    if mask == 0 {
+        return None;
+    }
+    let a = mask.trailing_zeros();
+    let b = 31 - mask.leading_zeros();
+    let width = b - a + 1;
+    let contiguous = if width == 32 {
+        mask == u32::MAX
+    } else {
+        mask == ((1u32 << width) - 1) << a
+    };
+    if !contiguous {
+        return None;
+    }
+    Some(if a == 0 && b == block - 1 {
+        SegShape::Full
+    } else if a == b {
+        SegShape::Single(a)
+    } else if a == 0 {
+        SegShape::Prefix(b + 1)
+    } else if b == block - 1 {
+        SegShape::Suffix(a)
+    } else {
+        SegShape::Range(a, b)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::emu::emulate;
+    use crate::ptx::parser::parse_kernel;
+    use crate::suite::codegen::generate;
+    use crate::suite::kernelgen::by_name;
+
+    #[test]
+    fn seg_shapes() {
+        assert_eq!(seg_shape(0, 32), None);
+        assert_eq!(seg_shape(u32::MAX, 32), Some(SegShape::Full));
+        assert_eq!(seg_shape(0xFF, 8), Some(SegShape::Full));
+        assert_eq!(seg_shape(1, 32), Some(SegShape::Single(0)));
+        assert_eq!(seg_shape(0b111, 32), Some(SegShape::Prefix(3)));
+        assert_eq!(seg_shape(u32::MAX << 4, 32), Some(SegShape::Suffix(4)));
+        assert_eq!(seg_shape(0b0110, 32), Some(SegShape::Range(1, 2)));
+        assert_eq!(seg_shape(0b0101, 32), None);
+    }
+
+    #[test]
+    fn exec_lanes_from_setp_guards() {
+        let k = parse_kernel(
+            r#"
+.visible .entry g(.param .u64 out){
+.reg .b32 %r<3>; .reg .pred %p<3>; .reg .f32 %f<2>; .reg .b64 %rd<2>;
+mov.u32 %r1, %tid.x;
+setp.lt.s32 %p1, %r1, 4;
+setp.eq.s32 %p2, %r1, 7;
+@%p1 mov.f32 %f1, 0f00000000;
+@!%p2 mov.f32 %f1, 0f00000000;
+mov.f32 %f1, 0f3F800000;
+ret;
+}
+"#,
+        )
+        .unwrap();
+        assert_eq!(exec_lanes(&k.body, 3, 8), Some(0b1111));
+        assert_eq!(exec_lanes(&k.body, 4, 8), Some(0xFF & !(1 << 7)));
+        // unguarded statement: full block
+        assert_eq!(exec_lanes(&k.body, 5, 8), Some(0xFF));
+        // %f1 has several defs → a guard naming it would be underivable,
+        // but guards name predicates; check the derivation bails on a
+        // multiply-defined *predicate* instead:
+        let k2 = parse_kernel(
+            r#"
+.visible .entry g2(.param .u64 out){
+.reg .b32 %r<3>; .reg .pred %p<2>; .reg .f32 %f<2>;
+mov.u32 %r1, %tid.x;
+setp.lt.s32 %p1, %r1, 4;
+setp.gt.s32 %p1, %r1, 2;
+@%p1 mov.f32 %f1, 0f00000000;
+ret;
+}
+"#,
+        )
+        .unwrap();
+        assert_eq!(exec_lanes(&k2.body, 3, 8), None);
+    }
+
+    fn planned(name: &str) -> (crate::ptx::ast::Kernel, Plan) {
+        let b = by_name(name).unwrap();
+        let block = match &b.pattern {
+            crate::suite::Pattern::TiledReduce { block } => *block,
+            crate::suite::Pattern::SharedStencil { block, .. } => *block,
+            crate::suite::Pattern::SharedGather { block } => *block,
+            _ => panic!("not a shared benchmark"),
+        };
+        let k = generate(&b);
+        let emu = emulate(&k).unwrap();
+        let plan = plan(
+            &k,
+            &emu,
+            ElimOpts {
+                enabled: true,
+                block,
+            },
+        )
+        .unwrap();
+        (k, plan)
+    }
+
+    #[test]
+    fn tiledreduce_fully_forwards() {
+        let (k, p) = planned("tiledreduce");
+        // every shared load covered, every staging store dead
+        assert!(p.kept_loads.is_empty(), "kept: {:?}", p.kept_loads);
+        assert!(p.kept_stores.is_empty(), "kept: {:?}", p.kept_stores);
+        assert!(!p.covered.is_empty());
+        assert!(!p.dead_stores.is_empty());
+        // all barriers elide once the staging traffic is register traffic
+        assert!(p.kept_bars.is_empty(), "kept: {:?}", p.kept_bars);
+        let bars = k
+            .body
+            .iter()
+            .filter(|s| {
+                matches!(
+                    s,
+                    Statement::Instr {
+                        op: Op::BarSync { .. },
+                        ..
+                    }
+                )
+            })
+            .count();
+        assert_eq!(p.elide_bars.len(), bars);
+        assert!(bars >= 1);
+    }
+
+    #[test]
+    fn sharedstencil_covers_taps_with_halo_segments() {
+        let (_k, p) = planned("sharedstencil");
+        assert!(p.kept_loads.is_empty(), "kept: {:?}", p.kept_loads);
+        assert_eq!(p.covered.len(), 3, "three taps");
+        assert!(p.kept_stores.is_empty(), "kept: {:?}", p.kept_stores);
+        assert_eq!(p.dead_stores.len(), 3, "tile + two halo stores");
+        assert!(p.kept_bars.is_empty());
+        assert_eq!(p.elide_bars.len(), 1);
+        // the off-center taps need two segments (halo lane + shifted rest)
+        let multi = p.covered.iter().filter(|c| c.segs.len() == 2).count();
+        assert_eq!(multi, 2);
+    }
+
+    #[test]
+    fn sharedgather_keeps_store_and_barrier() {
+        let (_k, p) = planned("sharedgather");
+        // the data-dependent tap is unknown → kept, and it pins the store
+        // and the barrier; the tid tap still forwards
+        assert_eq!(p.covered.len(), 1);
+        assert_eq!(p.kept_loads.len(), 1);
+        assert!(p.dead_stores.is_empty());
+        assert_eq!(p.kept_stores.len(), 1);
+        assert!(p.elide_bars.is_empty());
+        assert_eq!(p.kept_bars.len(), 1);
+    }
+
+    #[test]
+    fn oversized_block_bails() {
+        let b = by_name("tiledreduce").unwrap();
+        let k = generate(&b);
+        let emu = emulate(&k).unwrap();
+        let err = plan(
+            &k,
+            &emu,
+            ElimOpts {
+                enabled: true,
+                block: 64,
+            },
+        )
+        .unwrap_err();
+        assert!(err.contains("warp"), "{err}");
+    }
+
+    #[test]
+    fn report_roundtrips_and_rejects_corruption() {
+        let r = ElimReport {
+            bail: None,
+            stores: vec![
+                StoreElim {
+                    stmt: 4,
+                    deleted: true,
+                    reason: "every load of its bytes was forwarded".into(),
+                },
+                StoreElim {
+                    stmt: 9,
+                    deleted: false,
+                    reason: "still read by the kept load at stmt 12".into(),
+                },
+            ],
+            barriers: vec![BarrierElim {
+                stmt: 5,
+                elided: true,
+                reason: "no cross-lane memory traffic crosses it".into(),
+            }],
+            forwarded_loads: 3,
+            dce_stmts: 7,
+        };
+        let mut e = Enc::default();
+        r.encode(&mut e);
+        let bytes = e.buf;
+        let mut d = Dec::new(&bytes);
+        let back = ElimReport::decode(&mut d).unwrap();
+        assert!(d.done());
+        assert_eq!(back, r);
+        // truncation at every prefix must fail cleanly, never panic
+        for cut in 0..bytes.len() {
+            let mut d = Dec::new(&bytes[..cut]);
+            assert!(ElimReport::decode(&mut d).is_none(), "cut at {cut}");
+        }
+        // single-byte corruption must never panic (it may still decode —
+        // flipping a count or a reason byte can yield another valid image)
+        crate::util::check_cases("elim_report_corruption", 64, |rng| {
+            let mut evil = bytes.clone();
+            let at = rng.below(evil.len() as u64) as usize;
+            evil[at] ^= (rng.below(255) + 1) as u8;
+            let mut d = Dec::new(&evil);
+            let _ = ElimReport::decode(&mut d);
+        });
+    }
+}

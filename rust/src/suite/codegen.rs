@@ -285,6 +285,9 @@ pub fn param_names(b: &Benchmark) -> Vec<String> {
         Pattern::SharedStencil { .. } => {
             v.extend(["in0".into(), "nx".into()]);
         }
+        Pattern::SharedGather { .. } => {
+            v.extend(["in0".into(), "in1".into()]);
+        }
     }
     v
 }
@@ -311,6 +314,7 @@ pub fn generate(bench: &Benchmark) -> Kernel {
         Pattern::SharedStencil { radius, block } => {
             gen_sharedstencil(&mut b, *radius, *block)
         }
+        Pattern::SharedGather { block } => gen_sharedgather(&mut b, *block),
     }
 
     let params = param_names(bench)
@@ -536,6 +540,81 @@ fn gen_sharedstencil(b: &mut B, radius: i64, block: u32) {
             offset: 0,
         },
         src: Operand::Reg(acc),
+    });
+    b.push(Op::Ret);
+}
+
+/// Data-dependent gather through `.shared`: every thread stages one
+/// element, one `bar.sync`, then reads its own slot plus the slot named by
+/// a runtime index (`in1[i] & (block-1)`). The second tap's address comes
+/// from loaded data, so no static analysis can prove who wrote it — the
+/// adversarial fixture pinning the phase-liveness pass's conservatism.
+fn gen_sharedgather(b: &mut B, block: u32) {
+    assert!(block.is_power_of_two() && block % 32 == 0);
+    b.shared_decl("sg", block as u64 * 4);
+    let pout = b.ld_param_u64("out");
+    let out_base = b.cvta(&pout);
+    let pin = b.ld_param_u64("in0");
+    let in_base = b.cvta(&pin);
+    let pix = b.ld_param_u64("in1");
+    let ix_base = b.cvta(&pix);
+    let tid = b.mov_special(Special::TidX);
+    let ntid = b.mov_special(Special::NtidX);
+    let cta = b.mov_special(Special::CtaidX);
+    let i = b.mad(
+        Operand::Reg(cta),
+        Operand::Reg(ntid),
+        Operand::Reg(tid.clone()),
+    );
+    // stage a[i] into sg[tid]
+    let iaddr = b.elem_addr(&in_base, &i);
+    let v = b.ld_f32(&iaddr, 0, true);
+    let sbase = b.mov_var_u64("sg");
+    let saddr = b.elem_addr(&sbase, &tid);
+    b.st_shared_f32(None, &saddr, 0, &v);
+    b.bar_sync(0);
+    // own slot
+    let tap0 = b.ld_shared_f32(None, &saddr, 0);
+    // data-dependent slot: sg[in1[i] & (block-1)]
+    let jaddr = b.elem_addr(&ix_base, &i);
+    let idx = b.r();
+    b.push(Op::Ld {
+        space: Space::Global,
+        nc: false,
+        ty: Type::U32,
+        dst: idx.clone(),
+        addr: Address {
+            base: Operand::Reg(jaddr),
+            offset: 0,
+        },
+    });
+    let m = b.r();
+    b.push(Op::IntBin {
+        op: IntBinOp::And,
+        ty: Type::B32,
+        dst: m.clone(),
+        a: Operand::Reg(idx),
+        b: Operand::ImmInt(block as i128 - 1),
+    });
+    let gaddr = b.elem_addr(&sbase, &m);
+    let tap1 = b.ld_shared_f32(None, &gaddr, 0);
+    let sum = b.f();
+    b.push(Op::FltBin {
+        op: FltBinOp::Add,
+        ty: Type::F32,
+        dst: sum.clone(),
+        a: Operand::Reg(tap0),
+        b: Operand::Reg(tap1),
+    });
+    let oaddr = b.elem_addr(&out_base, &i);
+    b.push(Op::St {
+        space: Space::Global,
+        ty: Type::F32,
+        addr: Address {
+            base: Operand::Reg(oaddr),
+            offset: 0,
+        },
+        src: Operand::Reg(sum),
     });
     b.push(Op::Ret);
 }

@@ -49,7 +49,7 @@ pub fn by_name(name: &str) -> Option<Benchmark> {
 /// [`suite`] (the paper's Table 2 is exactly 16 rows); reachable by name
 /// from the CLI and run by `simbench --family shared` (`BENCH_5.json`).
 pub fn shared_suite() -> Vec<Benchmark> {
-    vec![tiledreduce(), sharedstencil()]
+    vec![tiledreduce(), sharedstencil(), sharedgather()]
 }
 
 fn tiledreduce() -> Benchmark {
@@ -57,7 +57,9 @@ fn tiledreduce() -> Benchmark {
         name: "tiledreduce",
         lang: Lang::C,
         dims: 1,
-        pattern: Pattern::TiledReduce { block: 64 },
+        // single-warp blocks: the phase-liveness pass only forwards
+        // store→load traffic it can replace with warp shuffles
+        pattern: Pattern::TiledReduce { block: 32 },
         divergent: false,
         // one global load; the tree communicates through .shared, which
         // the default detection options exclude (and the tree loads are
@@ -75,13 +77,28 @@ fn sharedstencil() -> Benchmark {
         dims: 1,
         pattern: Pattern::SharedStencil {
             radius: 1,
-            block: 64,
+            block: 32,
         },
         divergent: false,
         // center + two predicated halo loads; the taps read .shared
         // across a barrier, so nothing may be shuffled
         expect_shuffles: 0,
         expect_loads: 3,
+        expect_delta: None,
+    }
+}
+
+fn sharedgather() -> Benchmark {
+    Benchmark {
+        name: "sharedgather",
+        lang: Lang::C,
+        dims: 1,
+        pattern: Pattern::SharedGather { block: 32 },
+        divergent: false,
+        // the staged value + the index array; the data-dependent tap keeps
+        // the staging store and barrier alive (adversarial for elimination)
+        expect_shuffles: 0,
+        expect_loads: 2,
         expect_delta: None,
     }
 }
@@ -618,6 +635,36 @@ pub fn workload(b: &Benchmark, nx: usize, ny: usize, nz: usize, seed: u64) -> Wo
                         acc = coef.mul_add(sh[t + k], acc);
                     }
                     expected[blk * bs + t] = acc;
+                }
+            }
+            Workload {
+                kernel,
+                cfg,
+                mem,
+                out_ptr: out,
+                out_len: total,
+                expected,
+            }
+        }
+        Pattern::SharedGather { block } => {
+            let bs = *block as usize;
+            let nblocks = nx.max(1);
+            let total = nblocks * bs;
+            let out = alloc.alloc((total * 4) as u64);
+            let a = alloc.alloc((total * 4) as u64);
+            let ip = alloc.alloc((total * 4) as u64);
+            let av = input_data(&mut rng, total);
+            mem.write_f32s(a, &av).unwrap();
+            let iv: Vec<u32> = (0..total).map(|_| rng.next_u32()).collect();
+            mem.write_u32s(ip, &iv).unwrap();
+            let cfg = SimConfig::new(nblocks as u32, *block, vec![out, a, ip]);
+            // out[i] = tile[t] + tile[idx[i] & (bs-1)] over the block's tile
+            let mut expected = vec![0f32; total];
+            for blk in 0..nblocks {
+                for t in 0..bs {
+                    let i = blk * bs + t;
+                    let j = (iv[i] as usize) & (bs - 1);
+                    expected[i] = av[i] + av[blk * bs + j];
                 }
             }
             Workload {

@@ -79,6 +79,12 @@ pub enum Pattern {
     /// clamped at the grid edges) is staged into `.shared` by the block,
     /// with one `bar.sync` between staging and use.
     SharedStencil { radius: i64, block: u32 },
+    /// Data-dependent gather through `.shared`: each thread stages one
+    /// element, then reads its own slot *and* a slot picked by a runtime
+    /// index array (`in1[i] & (block-1)`). The second tap's address is
+    /// unknowable statically — the adversarial case for the phase-liveness
+    /// pass, which must keep the staging store and the barrier.
+    SharedGather { block: u32 },
 }
 
 /// Tap coefficient of the shared-staged stencil (uniform averaging) —
@@ -114,6 +120,7 @@ impl Benchmark {
             Pattern::SinCos => 2,
             Pattern::VecAdd => 2,
             Pattern::TiledReduce { .. } | Pattern::SharedStencil { .. } => 1,
+            Pattern::SharedGather { .. } => 2,
         }
     }
 

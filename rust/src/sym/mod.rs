@@ -13,7 +13,7 @@ pub mod term;
 pub use affine::{extract, split_on, Affine};
 pub use persist::{decode_emulation, encode_emulation, PERSIST_VERSION};
 pub use solver::{
-    const_distance, may_alias, solve_delta, Assumptions, AssumptionsImage, Conflict, FormImage,
-    Truth,
+    const_distance, may_alias, solve_delta, solve_forward, Assumptions, AssumptionsImage,
+    Conflict, FormImage, ForwardRel, Truth,
 };
 pub use term::{eval, BvOp, CmpKind, Node, SessionInterner, SymId, TermId, TermPool, UfId};

@@ -125,6 +125,7 @@ pub(crate) fn cmp_from_tag(tag: u8) -> Option<CmpKind> {
 // ---------------------------------------------------------------------------
 
 /// Collects the set of terms reachable from the registered roots.
+#[derive(Debug)]
 pub struct GraphBuilder<'p> {
     pool: &'p TermPool,
     /// FNV-hashed (the ids are small integers; this runs once per
@@ -187,6 +188,7 @@ impl<'p> GraphBuilder<'p> {
 }
 
 /// A sealed, encodable view of a reachable term subgraph.
+#[derive(Debug)]
 pub struct GraphImage<'p> {
     pool: &'p TermPool,
     order: Vec<u32>,
@@ -319,6 +321,7 @@ impl GraphImage<'_> {
 // ---------------------------------------------------------------------------
 
 /// Local-index → relocated-`TermId` map produced by [`decode_graph`].
+#[derive(Debug)]
 pub struct GraphReader {
     map: Vec<TermId>,
 }

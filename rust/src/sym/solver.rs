@@ -476,6 +476,68 @@ pub fn solve_delta(
     }
 }
 
+/// How a staged `.shared` store's value reaches a later load, lane-wise.
+///
+/// `solve_forward` relates a *store* address `S(tid)` to a *load* address
+/// `L(tid)`: which thread's store wrote the byte each thread loads. This is
+/// the store→load analogue of [`solve_delta`] and drives the dead-store
+/// elimination pass (`shuffle::phase_liveness`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ForwardRel {
+    /// `L(t) = S(t + n)`: thread `t` loads the byte thread `t + n` stored.
+    /// `n = 0` means every thread reads back its own store.
+    Shift(i64),
+    /// The load address is thread-invariant and equals `S(t)` for exactly
+    /// one thread `t` (`0 ≤ t ≤ 31`): every loading thread reads the byte
+    /// thread `t` stored.
+    Broadcast(i64),
+}
+
+/// Relate a store address to a load address lane-wise: find how the value
+/// staged by `store_addr` flows to `load_addr` across threads.
+///
+/// Writes both addresses as `stride·tid + rest`. Equal non-zero strides
+/// with a constant, stride-divisible rest difference `d` give
+/// `Shift(d / stride)` (bounded to ±31, one warp). A thread-invariant load
+/// address over a strided store gives `Broadcast(d / stride)` when the
+/// source lane lands in `0..=31`. Anything else — mismatched strides,
+/// symbolic rest difference, out-of-warp distance — is `None`, which
+/// callers must treat as "unknown ⇒ may interfere".
+pub fn solve_forward(
+    pool: &TermPool,
+    store_addr: TermId,
+    load_addr: TermId,
+    tid_atom: TermId,
+) -> Option<ForwardRel> {
+    let (ss, rs) = split_on(pool, store_addr, tid_atom);
+    let (sl, rl) = split_on(pool, load_addr, tid_atom);
+    let d = rl.sub(&rs);
+    if !d.is_constant() {
+        return None;
+    }
+    if ss != 0 && ss == sl {
+        if d.constant % ss != 0 {
+            return None;
+        }
+        let n = d.constant / ss;
+        if (-31..=31).contains(&n) {
+            return Some(ForwardRel::Shift(n as i64));
+        }
+        return None;
+    }
+    if ss != 0 && sl == 0 {
+        if d.constant % ss != 0 {
+            return None;
+        }
+        let t = d.constant / ss;
+        if (0..=31).contains(&t) {
+            return Some(ForwardRel::Broadcast(t as i64));
+        }
+        return None;
+    }
+    None
+}
+
 /// Byte distance `B - A` when it is constant (used for overlap checks and
 /// alias analysis). `None` when the difference is symbolic.
 pub fn const_distance(pool: &TermPool, a_addr: TermId, b_addr: TermId) -> Option<i128> {
@@ -663,6 +725,78 @@ mod tests {
         assert_eq!(a.check(&p, eq), Truth::True);
         a.invalidate_atoms(&[l]);
         assert_eq!(a.check(&p, eq), Truth::Unknown);
+    }
+
+    #[test]
+    fn solve_forward_shift() {
+        let mut p = TermPool::new();
+        let tid = p.symbol("tid.x", 32);
+        let base = p.symbol("base", 64);
+        let st = addr(&mut p, base, tid, 4, 0);
+        let ld0 = addr(&mut p, base, tid, 4, 0);
+        let ld_up = addr(&mut p, base, tid, 4, 16);
+        let ld_dn = addr(&mut p, base, tid, 4, -4);
+        // same address: every thread reads back its own store
+        assert_eq!(solve_forward(&p, st, ld0, tid), Some(ForwardRel::Shift(0)));
+        // load 4 elements ahead: thread t reads thread t+4's store
+        assert_eq!(solve_forward(&p, st, ld_up, tid), Some(ForwardRel::Shift(4)));
+        // load 1 element behind: thread t reads thread t-1's store
+        assert_eq!(solve_forward(&p, st, ld_dn, tid), Some(ForwardRel::Shift(-1)));
+    }
+
+    #[test]
+    fn solve_forward_broadcast() {
+        let mut p = TermPool::new();
+        let tid = p.symbol("tid.x", 32);
+        let base = p.symbol("base", 64);
+        let st = addr(&mut p, base, tid, 4, 0);
+        // thread-invariant load of element 0 → broadcast from thread 0
+        let c0 = p.constant(0, 64);
+        let ld0 = p.bin(BvOp::Add, base, c0);
+        assert_eq!(
+            solve_forward(&p, st, ld0, tid),
+            Some(ForwardRel::Broadcast(0))
+        );
+        // element 5 → thread 5
+        let c20 = p.constant(20, 64);
+        let ld5 = p.bin(BvOp::Add, base, c20);
+        assert_eq!(
+            solve_forward(&p, st, ld5, tid),
+            Some(ForwardRel::Broadcast(5))
+        );
+        // element 40 is outside the warp
+        let c160 = p.constant(160, 64);
+        let ld40 = p.bin(BvOp::Add, base, c160);
+        assert_eq!(solve_forward(&p, st, ld40, tid), None);
+    }
+
+    #[test]
+    fn solve_forward_rejects_unknowns() {
+        let mut p = TermPool::new();
+        let tid = p.symbol("tid.x", 32);
+        let base = p.symbol("base", 64);
+        let other = p.symbol("other", 64);
+        let j = p.symbol("j", 32);
+        let st = addr(&mut p, base, tid, 4, 0);
+        // mismatched stride
+        let ld8 = addr(&mut p, base, tid, 8, 0);
+        assert_eq!(solve_forward(&p, st, ld8, tid), None);
+        // symbolic rest difference (different base objects)
+        let ldo = addr(&mut p, other, tid, 4, 0);
+        assert_eq!(solve_forward(&p, st, ldo, tid), None);
+        // data-dependent index: rest difference is symbolic
+        let ldj = addr(&mut p, base, j, 4, 0);
+        assert_eq!(solve_forward(&p, st, ldj, tid), None);
+        // out-of-warp shift
+        let ld_far = addr(&mut p, base, tid, 4, 4 * 32);
+        assert_eq!(solve_forward(&p, st, ld_far, tid), None);
+        // unaligned offset
+        let ld_mis = addr(&mut p, base, tid, 4, 2);
+        assert_eq!(solve_forward(&p, st, ld_mis, tid), None);
+        // tid-invariant store never forwards
+        let stj = addr(&mut p, base, j, 4, 0);
+        let ld = addr(&mut p, base, tid, 4, 0);
+        assert_eq!(solve_forward(&p, stj, ld, tid), None);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! cannot possibly hold).
 
 /// Append-only little-endian writer.
-#[derive(Default)]
+#[derive(Debug, Default)]
 pub struct Enc {
     pub buf: Vec<u8>,
 }
@@ -43,6 +43,7 @@ impl Enc {
 }
 
 /// Bounds-checked little-endian reader over a borrowed buffer.
+#[derive(Debug)]
 pub struct Dec<'a> {
     b: &'a [u8],
     i: usize,

@@ -13,7 +13,7 @@ pub use rng::Rng;
 /// FNV-1a hasher — far cheaper than SipHash for the short register-name
 /// keys on the simulator/emulator hot paths (no DoS concern: inputs are
 /// our own PTX).
-#[derive(Default, Clone)]
+#[derive(Debug, Default, Clone)]
 pub struct Fnv(u64);
 
 impl std::hash::Hasher for Fnv {
