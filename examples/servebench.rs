@@ -1,0 +1,223 @@
+//! `servebench` — serve-mode throughput + poisoned-batch probe (BENCH_8).
+//!
+//! Drives an in-process [`ServeSession`] (the same object `ptxasw serve`
+//! wraps around stdin or a socket) through the full suite as JSON-lines
+//! request batches and records `BENCH_8.json`:
+//!
+//! 1. **cold vs warm throughput** — the batch against a fresh cache dir,
+//!    then again from a fresh session over the warmed dir (the stand-in
+//!    for a second process); the warm pass must report disk hits;
+//! 2. **poisoned batch** — parse-error, flow-blowup and panicking
+//!    requests interleaved with healthy kernels. The run **hard-fails**
+//!    unless every healthy kernel's rewritten PTX is bit-exact with a
+//!    clean serial run and every pathological request produced its typed
+//!    error record (`ParseError` / `EmuError` / `Panicked`) — one bad
+//!    request must cost exactly one response, never the session.
+//!
+//!     cargo run --release --example servebench -- [--out FILE]
+
+use ptxasw::cli::Args;
+use ptxasw::pipeline::{DiskStore, Pipeline, ServeOpts, ServeSession, DEFAULT_MAX_BYTES};
+use ptxasw::ptx::{ast::Module, print_module};
+use ptxasw::shuffle::{DetectOpts, ElimOpts, Variant};
+use ptxasw::suite;
+use ptxasw::util::Json;
+use std::fmt::Write as _;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One flow-explosion kernel: `bits` tid-dependent branches whose sides
+/// leave distinct accumulator values, so 2^bits distinct environments
+/// defeat memoization. 13 bits = 8192 flows — over even the default wide
+/// budget (4096): a guaranteed typed `EmuError` after the widen retry.
+fn blowup_ptx(bits: usize) -> String {
+    let mut body = String::new();
+    for i in 0..bits {
+        body.push_str(&format!(
+            "and.b32 %r10, %r1, {};\nsetp.eq.s32 %p{p}, %r10, 0;\n\
+             @%p{p} bra $S{i};\nadd.s32 %r2, %r2, {};\n$S{i}:\n",
+            1u32 << i,
+            100 + i,
+            p = i + 1,
+        ));
+    }
+    format!(
+        ".version 7.6\n.target sm_70\n.address_size 64\n\
+         .visible .entry forky(.param .u64 out){{\n\
+         .reg .pred %p<{}>; .reg .b32 %r<12>; .reg .b64 %rd<3>;\n\
+         ld.param.u64 %rd1, [out];\ncvta.to.global.u64 %rd2, %rd1;\n\
+         mov.u32 %r1, %tid.x;\nmov.u32 %r2, 0;\n{body}\
+         st.global.u32 [%rd2], %r2;\nret;\n}}\n",
+        bits + 2,
+    )
+}
+
+fn asm_req(id: u64, ptx: &str) -> String {
+    Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("cmd", Json::str("asm")),
+        ("ptx", Json::str(ptx)),
+    ])
+    .render()
+}
+
+fn run_batch(session: &mut ServeSession, lines: &[String]) -> Vec<Json> {
+    let mut out = Vec::new();
+    session
+        .serve(std::io::Cursor::new(lines.join("\n")), &mut out)
+        .expect("in-memory serve IO");
+    String::from_utf8(out)
+        .unwrap()
+        .lines()
+        .map(|l| Json::parse(l).expect("valid response line"))
+        .collect()
+}
+
+/// The serial ground truth: what `ptxasw asm` (defaults) prints for `src`.
+fn expected_asm(src: &str) -> String {
+    let p = Pipeline::new();
+    let mut module = ptxasw::ptx::parse(src).unwrap();
+    let opts = DetectOpts {
+        max_abs_delta: 31,
+        ..DetectOpts::default()
+    };
+    let elim = ElimOpts {
+        enabled: true,
+        block: 32,
+    };
+    for k in module.kernels.iter_mut() {
+        let parsed = p.intake(k.clone());
+        let s = p
+            .synthesized_hashed(&parsed.kernel, parsed.hash, opts, Variant::Full, elim)
+            .unwrap();
+        *k = (*s.kernel).clone();
+    }
+    print_module(&module)
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
+    let out_path = args.opt("out").unwrap_or("BENCH_8.json").to_string();
+
+    let dir = std::env::temp_dir().join(format!("ptxasw-servebench-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // every suite kernel as PTX text — the request corpus
+    let sources: Vec<String> = suite::suite()
+        .iter()
+        .map(|b| print_module(&Module::single(suite::generate(b))))
+        .collect();
+    let batch: Vec<String> = sources
+        .iter()
+        .enumerate()
+        .map(|(i, s)| asm_req(i as u64, s))
+        .collect();
+
+    // -- 1. cold vs warm batch throughput ----------------------------------
+    let store = Arc::new(DiskStore::open(&dir, DEFAULT_MAX_BYTES).unwrap());
+    let mut cold = ServeSession::new(ServeOpts::default(), Some(store));
+    let t0 = Instant::now();
+    let cold_rs = run_batch(&mut cold, &batch);
+    let cold_s = t0.elapsed().as_secs_f64();
+    assert!(
+        cold_rs.iter().all(|r| r.get("ok").unwrap().as_bool() == Some(true)),
+        "every suite kernel must serve cleanly"
+    );
+
+    let store2 = Arc::new(DiskStore::open(&dir, DEFAULT_MAX_BYTES).unwrap());
+    let mut warm = ServeSession::new(ServeOpts::default(), Some(store2));
+    let t0 = Instant::now();
+    let warm_rs = run_batch(&mut warm, &batch);
+    let warm_s = t0.elapsed().as_secs_f64();
+    let warm_hits = warm.pipeline().stats().disk.hits;
+    assert!(warm_hits > 0, "the warm session must be served from disk");
+    for (c, w) in cold_rs.iter().zip(&warm_rs) {
+        assert_eq!(
+            c.get("ptx").unwrap().as_str(),
+            w.get("ptx").unwrap().as_str(),
+            "warm response diverged from cold"
+        );
+    }
+
+    // -- 2. poisoned batch --------------------------------------------------
+    let healthy: Vec<&String> = sources.iter().take(4).collect();
+    let expect: Vec<String> = healthy.iter().map(|s| expected_asm(s)).collect();
+    let blow = blowup_ptx(13);
+    let lines = vec![
+        asm_req(0, healthy[0]),
+        r#"{"id":100,"cmd":"asm","ptx":"this is not ptx at all"}"#.to_string(),
+        asm_req(1, healthy[1]),
+        asm_req(200, &blow),
+        asm_req(2, healthy[2]),
+        r#"{"id":300,"cmd":"__panic"}"#.to_string(),
+        asm_req(3, healthy[3]),
+    ];
+    let store3 = Arc::new(DiskStore::open(&dir, DEFAULT_MAX_BYTES).unwrap());
+    let mut poisoned = ServeSession::new(
+        ServeOpts {
+            allow_test_faults: true,
+            ..ServeOpts::default()
+        },
+        Some(store3),
+    );
+    let rs = run_batch(&mut poisoned, &lines);
+    assert_eq!(rs.len(), lines.len(), "one response per request, always");
+
+    let kind_of = |r: &Json| {
+        r.get("error")
+            .and_then(|e| e.get("kind"))
+            .and_then(|k| k.as_str())
+            .map(str::to_string)
+    };
+    // the hard gate: pathological requests degrade to typed records...
+    assert_eq!(kind_of(&rs[1]).as_deref(), Some("ParseError"), "{:?}", rs[1]);
+    assert_eq!(kind_of(&rs[3]).as_deref(), Some("EmuError"), "{:?}", rs[3]);
+    assert_eq!(kind_of(&rs[5]).as_deref(), Some("Panicked"), "{:?}", rs[5]);
+    // ...while every healthy kernel — before and after the panic — is
+    // bit-exact with the clean serial run
+    for (hi, ri) in [(0usize, 0usize), (1, 2), (2, 4), (3, 6)] {
+        assert_eq!(
+            rs[ri].get("ptx").and_then(|p| p.as_str()),
+            Some(expect[hi].as_str()),
+            "healthy kernel {hi} diverged from the serial run in the poisoned batch"
+        );
+    }
+    let pstats = poisoned.stats();
+    assert_eq!(pstats.panicked, 1);
+    assert_eq!(pstats.errors, 3);
+    assert_eq!(pstats.ok, 4);
+
+    // -- report -------------------------------------------------------------
+    let n = batch.len() as f64;
+    let mut j = String::new();
+    writeln!(j, "{{").unwrap();
+    writeln!(j, "  \"bench\": \"servebench\",").unwrap();
+    writeln!(j, "  \"kernels\": {},", batch.len()).unwrap();
+    writeln!(j, "  \"cold_batch_s\": {cold_s:.6},").unwrap();
+    writeln!(j, "  \"warm_batch_s\": {warm_s:.6},").unwrap();
+    writeln!(j, "  \"cold_req_per_s\": {:.2},", n / cold_s.max(1e-9)).unwrap();
+    writeln!(j, "  \"warm_req_per_s\": {:.2},", n / warm_s.max(1e-9)).unwrap();
+    writeln!(j, "  \"warm_disk_hits\": {warm_hits},").unwrap();
+    writeln!(j, "  \"poisoned\": {{").unwrap();
+    writeln!(j, "    \"requests\": {},", pstats.requests).unwrap();
+    writeln!(j, "    \"ok\": {},", pstats.ok).unwrap();
+    writeln!(j, "    \"errors\": {},", pstats.errors).unwrap();
+    writeln!(j, "    \"panicked\": {},", pstats.panicked).unwrap();
+    writeln!(j, "    \"widened\": {},", pstats.widened).unwrap();
+    writeln!(j, "    \"healthy_bit_exact\": true").unwrap();
+    writeln!(j, "  }}").unwrap();
+    writeln!(j, "}}").unwrap();
+
+    std::fs::write(&out_path, &j).expect("write BENCH_8.json");
+    eprintln!(
+        "servebench: {} kernels — cold {:.3}s, warm {:.3}s ({} disk hits); \
+         poisoned batch: {} ok / {} typed errors, all healthy bit-exact -> {out_path}",
+        batch.len(),
+        cold_s,
+        warm_s,
+        warm_hits,
+        pstats.ok,
+        pstats.errors,
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -55,6 +55,9 @@ impl Args {
                 | "detect-races"
                 | "shared"
                 | "no-elim"
+                | "verify"
+                | "heal"
+                | "test-faults"
         )
     }
 
@@ -143,6 +146,28 @@ mod tests {
         let b = parse("suite --engine=superblock jacobi");
         assert_eq!(b.opt("engine"), Some("superblock"));
         assert_eq!(b.positional, vec!["jacobi"]);
+    }
+
+    #[test]
+    fn store_verify_and_heal_are_bare_flags() {
+        // `store --verify --heal` must not swallow a following path
+        let a = parse("store --verify --heal --cache-dir /tmp/x");
+        assert!(a.flag("verify"));
+        assert!(a.flag("heal"));
+        assert_eq!(a.opt("cache-dir"), Some("/tmp/x"));
+    }
+
+    #[test]
+    fn serve_options_parse() {
+        let a = parse("serve --deadline-ms 500 --test-faults --socket /tmp/s.sock");
+        assert_eq!(a.opt_usize("deadline-ms", 0).unwrap(), 500);
+        assert!(a.flag("test-faults"));
+        assert_eq!(a.opt("socket"), Some("/tmp/s.sock"));
+        // asm's --block takes a value
+        let b = parse("asm in.ptx --block 32 --report");
+        assert_eq!(b.opt_usize("block", 32).unwrap(), 32);
+        assert!(b.flag("report"));
+        assert_eq!(b.positional, vec!["in.ptx"]);
     }
 
     #[test]

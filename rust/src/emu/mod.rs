@@ -39,6 +39,25 @@ impl Default for Limits {
     }
 }
 
+impl Limits {
+    /// Fold every field into a disk-key hash. Exhaustive destructuring on
+    /// purpose: a new limit field must fail to compile here rather than
+    /// silently let two budgets share a cache entry (a tighter budget can
+    /// change which flows finish, so emulations — and everything derived
+    /// from them — keyed without the limits would poison readers running
+    /// under different limits on a shared cache dir).
+    pub fn key_into(&self, h: &mut crate::util::Fnv128) {
+        let Limits {
+            max_flows,
+            max_steps_per_flow,
+            max_total_steps,
+        } = *self;
+        h.write_u64(max_flows as u64);
+        h.write_u64(max_steps_per_flow);
+        h.write_u64(max_total_steps);
+    }
+}
+
 /// Diagnostic counters.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct EmuStats {

@@ -6,6 +6,10 @@
 //!                              paper's drop-in `ptxas` hook)
 //!   suite [names...]           run the KernelGen pipeline → Table 2 + Fig 2/3
 //!   apps                       §8.5 application kernels (|N| ≤ 1)
+//!   serve                      long-running JSON-lines analysis daemon on a
+//!                              persistent pipeline (stdin or --socket)
+//!   store                      inspect / verify / heal the on-disk artifact
+//!                              store shared by every mode
 //!   artifacts [--run name]     list or execute AOT artifacts via PJRT
 //!   help
 //!
@@ -16,24 +20,48 @@
 use ptxasw::cli::Args;
 use ptxasw::coordinator::{report, run_suite_on, PipelineConfig};
 use ptxasw::perf::by_name as arch_by_name;
-use ptxasw::pipeline::{DiskStore, Pipeline};
+use ptxasw::pipeline::{DiskStore, Pipeline, ServeOpts, ServeSession};
 use ptxasw::ptx::{parse, print_module};
 use ptxasw::shuffle::{DetectOpts, ElimOpts, ElimReport, Variant};
 use ptxasw::suite;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 const HELP: &str = "\
 ptxasw — symbolic emulator + shuffle synthesis for NVIDIA PTX
 
 USAGE:
   ptxasw asm <in.ptx> [--out FILE] [--variant full|noload|nocorner|uniform]
-             [--max-delta N] [--no-elim] [--report] [--stats] [cache flags]
+             [--max-delta N] [--block N] [--no-elim] [--report] [--stats]
+             [cache flags]
   ptxasw suite [bench...] [--shared] [--arch NAME] [--threads N]
              [--sim-threads N] [--max-delta N] [--no-elim] [--fig3 bench]
              [--stats] [cache flags]
   ptxasw apps [--threads N] [--sim-threads N] [--stats] [cache flags]
+  ptxasw serve [--socket PATH] [--deadline-ms N] [--sim-threads N]
+             [--test-faults] [--stats] [cache flags]
+  ptxasw store [--verify] [--heal] [cache flags]
   ptxasw artifacts [--dir DIR] [--run NAME]
   ptxasw help
+
+  --block N         asm: launched blockDim.x the elimination pass may
+                    assume (default 32). The pass itself only fires for a
+                    single warp (1..=32) — a larger N makes it bail with
+                    an explicit per-kernel reason under --report, because
+                    its store→load forwarding is warp-synchronous
+  serve flags:
+  --socket PATH     listen on a Unix socket instead of stdin/stdout
+                    (connections served sequentially on one warm session)
+  --deadline-ms N   default per-request deadline (a request's own
+                    `deadline_ms` field overrides it; 0 = immediate
+                    timeout, used by the tests)
+  --test-faults     honor the `__panic` test command so the per-request
+                    isolation path can be exercised end-to-end
+  store flags:
+  --verify          decode every artifact on disk; exit nonzero if any
+                    entry is corrupt (unless --heal removes it)
+  --heal            with --verify: delete undecodable artifacts (they are
+                    recomputed on demand — never served)
 
   --stats           print pipeline cache hit rates (memory + disk) and
                     per-stage wall time
@@ -85,30 +113,37 @@ fn engine_of(s: Option<&str>) -> Result<(bool, bool), String> {
     })
 }
 
-fn build_pipeline(args: &Args) -> Result<Pipeline, String> {
-    let (superblocks, vector) = engine_of(args.opt("engine"))?;
-    let p = Pipeline::new()
-        .with_sim_threads(args.opt_usize("sim-threads", 1)?)
-        .with_detect_races(args.flag("detect-races"))
-        .with_engine(superblocks, vector);
+fn open_store(args: &Args) -> Result<Option<Arc<DiskStore>>, String> {
     if args.flag("no-disk-cache") {
-        return Ok(p);
+        return Ok(None);
     }
     let explicit = args.opt("cache-dir").map(PathBuf::from);
     let dir = match explicit.clone().or_else(ptxasw::pipeline::default_dir) {
         Some(d) => d,
-        None => return Ok(p),
+        None => return Ok(None),
     };
     match DiskStore::open_default(&dir) {
-        Ok(store) => Ok(p.with_disk(store)),
+        Ok(store) => Ok(Some(Arc::new(store))),
         Err(e) if explicit.is_some() => Err(format!("--cache-dir {}: {e}", dir.display())),
         Err(e) => {
             eprintln!(
                 "warning: disk cache disabled ({}: {e})",
                 dir.display()
             );
-            Ok(p)
+            Ok(None)
         }
+    }
+}
+
+fn build_pipeline(args: &Args) -> Result<Pipeline, String> {
+    let (superblocks, vector) = engine_of(args.opt("engine"))?;
+    let p = Pipeline::new()
+        .with_sim_threads(args.opt_usize("sim-threads", 1)?)
+        .with_detect_races(args.flag("detect-races"))
+        .with_engine(superblocks, vector);
+    match open_store(args)? {
+        Some(store) => Ok(p.with_disk_shared(store)),
+        None => Ok(p),
     }
 }
 
@@ -124,6 +159,8 @@ fn main() {
         "asm" => cmd_asm(&args),
         "suite" => cmd_suite(&args),
         "apps" => cmd_apps(&args),
+        "serve" => cmd_serve(&args),
+        "store" => cmd_store(&args),
         "artifacts" => cmd_artifacts(&args),
         "" | "help" => {
             println!("{HELP}");
@@ -187,12 +224,18 @@ fn cmd_asm(args: &Args) -> Result<(), String> {
         max_abs_delta: args.opt_usize("max-delta", 31)? as i64,
         ..DetectOpts::default()
     };
-    // asm mode has no launch config; assume the pass's own single-warp
-    // domain (the analysis re-proves everything per-lane and bails on
-    // kernels whose traces need more than 32 threads)
+    // asm mode has no launch config; --block N states the caller's
+    // blockDim.x assumption explicitly (default: the pass's own
+    // single-warp domain). The pass only fires for 1..=32 — a wider
+    // block makes it bail per-kernel with an explicit reason (visible
+    // under --report) because its forwarding is warp-synchronous.
+    let block = args.opt_usize("block", 32)?;
+    if block == 0 || block > 1024 {
+        return Err(format!("--block {block}: out of range (1..=1024)"));
+    }
     let elim = ElimOpts {
         enabled: !args.flag("no-elim"),
-        ..ElimOpts::default()
+        block: block as u32,
     };
 
     let p = build_pipeline(args)?;
@@ -316,6 +359,87 @@ fn cmd_apps(args: &Args) -> Result<(), String> {
     println!("{}", report::figure2(&ok, &cfg.archs, &cfg.variants));
     if args.flag("stats") {
         println!("{}", report::pipeline_stats(&p.stats()));
+    }
+    Ok(())
+}
+
+/// Long-running analysis daemon: JSON-lines over stdin/stdout or a Unix
+/// socket, one persistent warm session, per-request fault isolation.
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let (superblocks, vector) = engine_of(args.opt("engine"))?;
+    let opts = ServeOpts {
+        deadline_ms: match args.opt("deadline-ms") {
+            None => None,
+            Some(_) => Some(args.opt_usize("deadline-ms", 0)? as u64),
+        },
+        allow_test_faults: args.flag("test-faults"),
+        sim_threads: args.opt_usize("sim-threads", 1)?,
+        engine: (superblocks, vector),
+        ..ServeOpts::default()
+    };
+    let mut session = ServeSession::new(opts, open_store(args)?);
+    match args.opt("socket") {
+        #[cfg(unix)]
+        Some(path) => {
+            ptxasw::pipeline::serve::serve_unix(&mut session, std::path::Path::new(path))
+                .map_err(|e| format!("serve: {e}"))?;
+        }
+        #[cfg(not(unix))]
+        Some(_) => return Err("serve: --socket requires a Unix platform".into()),
+        None => {
+            let stdin = std::io::stdin();
+            let stdout = std::io::stdout();
+            session
+                .serve(stdin.lock(), stdout.lock())
+                .map_err(|e| format!("serve: {e}"))?;
+        }
+    }
+    if args.flag("stats") {
+        eprintln!("{}", report::pipeline_stats(&session.pipeline().stats()));
+    }
+    Ok(())
+}
+
+/// Inspect / verify / heal the shared on-disk artifact store.
+fn cmd_store(args: &Args) -> Result<(), String> {
+    let store = open_store(args)?.ok_or(
+        "store: no cache directory (give --cache-dir, or set RUST_PALLAS_CACHE_DIR; \
+         --no-disk-cache is meaningless here)",
+    )?;
+    let snap = store.snapshot();
+    println!(
+        "store: generation {} · resident {} bytes (bound {}) · {} stale tmp file(s) swept",
+        snap.generation,
+        snap.resident_bytes,
+        store.max_bytes(),
+        snap.swept_tmp,
+    );
+    if !args.flag("verify") {
+        return Ok(());
+    }
+    let heal = args.flag("heal");
+    let check = store.verify(heal);
+    for kc in &check.kinds {
+        println!(
+            "  {:<12} {:>5} artifact(s) {:>10} bytes  {} bad",
+            kc.kind.dir(),
+            kc.count,
+            kc.bytes,
+            kc.bad,
+        );
+    }
+    println!(
+        "store: verified {} bytes total · {} bad · {} healed",
+        check.total_bytes, check.bad, check.healed
+    );
+    for p in &check.bad_paths {
+        eprintln!("store:   bad: {}", p.display());
+    }
+    if check.bad > 0 && check.healed < check.bad {
+        return Err(format!(
+            "store: {} undecodable artifact(s) on disk (re-run with --heal to remove)",
+            check.bad
+        ));
     }
     Ok(())
 }

@@ -31,6 +31,7 @@
 //! suite report.
 
 pub mod artifact;
+pub mod serve;
 pub mod stages;
 pub mod store;
 
@@ -38,8 +39,12 @@ pub use artifact::{
     ArtifactCache, ArtifactKind, CacheEvent, CacheSnapshot, Detected, Emulated, Parsed,
     Synthesized, WorkloadArt,
 };
+pub use serve::{ServeOpts, ServeSession, ServeStats};
 pub use stages::{score, validate, Scored, Validated};
-pub use store::{default_dir, DiskSnapshot, DiskStore, KeyBuilder, StoreKind, DEFAULT_MAX_BYTES};
+pub use store::{
+    default_dir, DiskSnapshot, DiskStore, KeyBuilder, KindCheck, Manifest, StoreCheck, StoreKind,
+    DEFAULT_MAX_BYTES, STORE_KINDS,
+};
 
 use crate::emu::{emulate_in_session, EmuError, Limits};
 use crate::perf::Arch;
@@ -279,14 +284,31 @@ impl Pipeline {
 
     /// Attach an on-disk artifact store; detected/synthesized/validated/
     /// scored artifacts persist across pipelines and processes.
-    pub fn with_disk(mut self, store: DiskStore) -> Pipeline {
-        self.store = Some(Arc::new(store));
+    pub fn with_disk(self, store: DiskStore) -> Pipeline {
+        self.with_disk_shared(Arc::new(store))
+    }
+
+    /// Attach an *already shared* disk store — serve mode runs a tight-
+    /// and a wide-limits pipeline over one store (one set of counters,
+    /// one eviction lock holder per process).
+    pub fn with_disk_shared(mut self, store: Arc<DiskStore>) -> Pipeline {
+        self.store = Some(store);
         self
     }
 
     /// The attached disk store, if any.
     pub fn disk(&self) -> Option<&DiskStore> {
         self.store.as_deref()
+    }
+
+    /// The attached disk store as a shareable handle, if any.
+    pub fn disk_shared(&self) -> Option<Arc<DiskStore>> {
+        self.store.clone()
+    }
+
+    /// The emulation limits this pipeline runs (and keys artifacts) under.
+    pub fn limits(&self) -> Limits {
+        self.limits
     }
 
     /// The interner session every emulation of this pipeline shares.
@@ -424,12 +446,7 @@ impl Pipeline {
     /// different limits must not exchange results (a tighter limit can
     /// change which flows finish).
     fn emulate_disk_key(hash: ContentHash, limits: Limits) -> ContentHash {
-        KeyBuilder::new("emulated")
-            .hash(hash)
-            .u64(limits.max_flows as u64)
-            .u64(limits.max_steps_per_flow)
-            .u64(limits.max_total_steps)
-            .finish()
+        KeyBuilder::new("emulated").hash(hash).limits(limits).finish()
     }
 
     /// Emulation artifact when the caller already knows the content hash.
@@ -473,8 +490,16 @@ impl Pipeline {
         out
     }
 
-    fn detect_disk_key(hash: ContentHash, opts: DetectOpts) -> ContentHash {
-        KeyBuilder::new("detected").hash(hash).opts(opts).finish()
+    /// Detection/synthesis disk keys carry the emulation limits too: both
+    /// are derived from the emulation, so a result computed under a tight
+    /// budget must never satisfy a reader running a wider one (serve mode
+    /// deliberately runs both over one cache dir).
+    fn detect_disk_key(hash: ContentHash, opts: DetectOpts, limits: Limits) -> ContentHash {
+        KeyBuilder::new("detected")
+            .hash(hash)
+            .opts(opts)
+            .limits(limits)
+            .finish()
     }
 
     /// Detection artifact; consumes the cached [`Emulated`] artifact —
@@ -499,7 +524,7 @@ impl Pipeline {
         let mut event = CacheEvent::Hit;
         let out = slot
             .get_or_init(|| {
-                let dkey = Pipeline::detect_disk_key(hash, opts);
+                let dkey = Pipeline::detect_disk_key(hash, opts, self.limits);
                 if let Some(art) = self.disk_load(StoreKind::Detected, dkey, store::decode_detected)
                 {
                     event = CacheEvent::DiskHit;
@@ -529,12 +554,14 @@ impl Pipeline {
         opts: DetectOpts,
         variant: Variant,
         elim: ElimOpts,
+        limits: Limits,
     ) -> ContentHash {
         KeyBuilder::new("synthesized")
             .hash(hash)
             .opts(opts)
             .u64(store::variant_key_byte(variant))
             .elim(elim)
+            .limits(limits)
             .finish()
     }
 
@@ -566,7 +593,7 @@ impl Pipeline {
         let mut event = CacheEvent::Hit;
         let out = slot
             .get_or_init(|| {
-                let dkey = Pipeline::synth_disk_key(hash, opts, variant, elim);
+                let dkey = Pipeline::synth_disk_key(hash, opts, variant, elim, self.limits);
                 if let Some(art) =
                     self.disk_load(StoreKind::Synthesized, dkey, store::decode_synthesized)
                 {

@@ -1,0 +1,838 @@
+//! `serve` mode: a long-running analysis daemon on one persistent
+//! [`Pipeline`] session.
+//!
+//! The paper's tool is invoked once per compile; production traffic (the
+//! ACC-Saturator / JACC deployments ROADMAP item 2 describes) is a warm
+//! fleet of daemons fed batches of kernels by many concurrent compiler
+//! invocations. This module is that tier: JSON-lines requests over stdin
+//! or a Unix socket (framing hand-rolled on [`crate::util::json`] — the
+//! crate stays zero-dep), multiplexed onto persistent pipelines over one
+//! shared [`DiskStore`].
+//!
+//! **Isolation.** One adversarial kernel must degrade to an error record
+//! while the rest of the batch streams results:
+//!
+//! - every request runs under `catch_unwind`; a panic yields a `Panicked`
+//!   record and the session *rebuilds* its pipelines (the old in-memory
+//!   caches and interner may hold poisoned locks — the disk store, which
+//!   is poison-tolerant by construction, carries the warm state across),
+//! - analysis runs **tight-limits-first**: a cheap emulation budget
+//!   catches step-limit blowups in milliseconds; only a request whose
+//!   tight run errored or truncated flows is retried once on the
+//!   wide-limits pipeline (`widened: true` in the response),
+//! - a per-request **deadline** is checked cooperatively at kernel
+//!   boundaries; past it the request fails with `Timeout` (a
+//!   `deadline_ms` of 0 times out deterministically — the tests pin
+//!   that),
+//! - every failure is a typed record from the taxonomy
+//!   `ParseError | EmuError | SimError | Timeout | Panicked | BadRequest`
+//!   so callers can machine-route retries.
+//!
+//! ## Protocol
+//!
+//! One JSON object per line in, one per line out (`id` echoed verbatim):
+//!
+//! ```text
+//! → {"id":1,"cmd":"asm","ptx":".visible .entry k(...){...}",
+//!    "variant":"full","max_delta":31,"block":32,"elim":true,
+//!    "deadline_ms":2000}
+//! ← {"id":1,"ok":true,"widened":false,"cmd":"asm",
+//!    "kernels":[{"name":"k","shuffles":2,"elim_deleted_stores":0,
+//!    "elim_elided_barriers":0}],"ptx":"..."}
+//!
+//! → {"id":2,"cmd":"bench","bench":"vecadd"}
+//! ← {"id":2,"ok":true,"cmd":"bench","bench":"vecadd","shuffles":2,
+//!    "variants":[{"variant":"noload","valid":true}, ...]}
+//!
+//! → {"id":3,"cmd":"asm","ptx":"not ptx at all"}
+//! ← {"id":3,"ok":false,"error":{"kind":"ParseError","message":"..."}}
+//!
+//! → {"cmd":"ping"}          ← {"id":null,"ok":true,"cmd":"pong"}
+//! → {"cmd":"stats"}         ← serve + disk counters
+//! → {"cmd":"shutdown"}      ← {"ok":true,"cmd":"shutdown"} and exit 0
+//! ```
+
+use crate::coordinator::{run_benchmark_on, PipelineConfig, PipelineError};
+use crate::emu::{FlowEnd, Limits};
+use crate::pipeline::{DiskStore, Pipeline};
+use crate::ptx::{parse, print_module};
+use crate::shuffle::{DetectOpts, ElimOpts, Variant};
+use crate::util::Json;
+use std::io::{BufRead, Write};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Tight first-pass emulation budget: two orders of magnitude under the
+/// defaults — enough for every suite kernel, cheap enough that a blowup
+/// kernel fails in milliseconds instead of pinning the daemon.
+pub fn tight_limits() -> Limits {
+    Limits {
+        max_flows: 512,
+        max_steps_per_flow: 20_000,
+        max_total_steps: 500_000,
+    }
+}
+
+/// Serve-session configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOpts {
+    /// First-pass emulation budget (see [`tight_limits`]).
+    pub tight: Limits,
+    /// Retry budget for requests the tight pass errored or truncated.
+    pub wide: Limits,
+    /// Default per-request deadline; `None` = no deadline. A request's
+    /// own `deadline_ms` field overrides this.
+    pub deadline_ms: Option<u64>,
+    /// Honor the `__panic` test command (CLI `--test-faults`). Off in
+    /// production: a panic can then only come from a real bug, but the
+    /// isolation path stays testable end-to-end.
+    pub allow_test_faults: bool,
+    /// Worker threads per simulation (`Pipeline::with_sim_threads`).
+    pub sim_threads: usize,
+    /// Decoded-engine paths (`Pipeline::with_engine`).
+    pub engine: (bool, bool),
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts {
+            tight: tight_limits(),
+            wide: Limits::default(),
+            deadline_ms: None,
+            allow_test_faults: false,
+            sim_threads: 1,
+            engine: (true, true),
+        }
+    }
+}
+
+/// Serve-loop counters (also exposed over the `stats` command).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub ok: u64,
+    pub errors: u64,
+    /// Requests retried on the wide-limits pipeline.
+    pub widened: u64,
+    /// Requests that panicked (each one rebuilt the pipelines).
+    pub panicked: u64,
+}
+
+/// Typed failure record — the `error.kind` strings of the protocol.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeErrorKind {
+    ParseError,
+    EmuError,
+    SimError,
+    Timeout,
+    Panicked,
+    BadRequest,
+}
+
+impl ServeErrorKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServeErrorKind::ParseError => "ParseError",
+            ServeErrorKind::EmuError => "EmuError",
+            ServeErrorKind::SimError => "SimError",
+            ServeErrorKind::Timeout => "Timeout",
+            ServeErrorKind::Panicked => "Panicked",
+            ServeErrorKind::BadRequest => "BadRequest",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct ServeError {
+    kind: ServeErrorKind,
+    message: String,
+}
+
+impl ServeError {
+    fn new(kind: ServeErrorKind, message: impl Into<String>) -> ServeError {
+        ServeError {
+            kind,
+            message: message.into(),
+        }
+    }
+}
+
+/// One long-lived serving session: a tight- and a wide-limits [`Pipeline`]
+/// over one optional shared [`DiskStore`].
+#[derive(Debug)]
+pub struct ServeSession {
+    opts: ServeOpts,
+    store: Option<Arc<DiskStore>>,
+    tight: Pipeline,
+    wide: Pipeline,
+    stats: ServeStats,
+}
+
+impl ServeSession {
+    pub fn new(opts: ServeOpts, store: Option<Arc<DiskStore>>) -> ServeSession {
+        let tight = build_pipeline(&opts, opts.tight, &store);
+        let wide = build_pipeline(&opts, opts.wide, &store);
+        ServeSession {
+            opts,
+            store,
+            tight,
+            wide,
+            stats: ServeStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        self.stats
+    }
+
+    /// The wide-limits pipeline (its counters cover the common path).
+    pub fn pipeline(&self) -> &Pipeline {
+        &self.wide
+    }
+
+    /// Discard both pipelines after a panic: their in-memory caches and
+    /// interner may hold poisoned locks mid-update. The shared disk store
+    /// survives (its own locks are poison-tolerant), so warm artifacts
+    /// carry across the rebuild.
+    fn rebuild(&mut self) {
+        self.tight = build_pipeline(&self.opts, self.opts.tight, &self.store);
+        self.wide = build_pipeline(&self.opts, self.opts.wide, &self.store);
+    }
+
+    /// Serve one connection: read JSON-lines from `reader`, stream one
+    /// response line per request to `writer` (flushed per line). Returns
+    /// `true` when a `shutdown` command ended the session (the socket
+    /// accept-loop uses this to stop listening).
+    pub fn serve(
+        &mut self,
+        reader: impl BufRead,
+        mut writer: impl Write,
+    ) -> std::io::Result<bool> {
+        for line in reader.lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            self.stats.requests += 1;
+            let (response, shutdown) = self.handle_line(&line);
+            writer.write_all(response.render().as_bytes())?;
+            writer.write_all(b"\n")?;
+            writer.flush()?;
+            if shutdown {
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+
+    /// Process one request line; never panics (panics inside become
+    /// `Panicked` records and rebuild the session's pipelines).
+    fn handle_line(&mut self, line: &str) -> (Json, bool) {
+        let Some(req) = Json::parse(line) else {
+            self.stats.errors += 1;
+            return (
+                error_response(
+                    Json::Null,
+                    &ServeError::new(ServeErrorKind::BadRequest, "request is not valid JSON"),
+                ),
+                false,
+            );
+        };
+        let id = req.get("id").cloned().unwrap_or(Json::Null);
+        let cmd = req
+            .get("cmd")
+            .and_then(|c| c.as_str())
+            .unwrap_or("")
+            .to_string();
+        if cmd == "shutdown" {
+            self.stats.ok += 1;
+            return (
+                Json::obj(vec![
+                    ("id", id),
+                    ("ok", Json::Bool(true)),
+                    ("cmd", Json::str("shutdown")),
+                ]),
+                true,
+            );
+        }
+
+        let outcome = catch_unwind(AssertUnwindSafe(|| self.dispatch(&cmd, &req)));
+        let response = match outcome {
+            Ok(Ok((mut fields, widened))) => {
+                self.stats.ok += 1;
+                if widened {
+                    self.stats.widened += 1;
+                }
+                let mut kvs = vec![("id".to_string(), id)];
+                kvs.push(("ok".to_string(), Json::Bool(true)));
+                kvs.push(("widened".to_string(), Json::Bool(widened)));
+                match &mut fields {
+                    Json::Obj(inner) => kvs.append(inner),
+                    other => kvs.push(("result".to_string(), other.clone())),
+                }
+                Json::Obj(kvs)
+            }
+            Ok(Err(e)) => {
+                self.stats.errors += 1;
+                error_response(id, &e)
+            }
+            Err(panic) => {
+                self.stats.errors += 1;
+                self.stats.panicked += 1;
+                self.rebuild();
+                let msg = panic
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| panic.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "panic with non-string payload".into());
+                error_response(
+                    id,
+                    &ServeError::new(
+                        ServeErrorKind::Panicked,
+                        format!("request panicked (pipelines rebuilt): {msg}"),
+                    ),
+                )
+            }
+        };
+        (response, false)
+    }
+
+    /// Route a command. Returns the response body (merged into the
+    /// envelope) plus whether the wide retry ran.
+    fn dispatch(&mut self, cmd: &str, req: &Json) -> Result<(Json, bool), ServeError> {
+        let deadline = req
+            .get("deadline_ms")
+            .and_then(|d| d.as_u64())
+            .or(self.opts.deadline_ms)
+            .map(Deadline::after_ms);
+        match cmd {
+            "ping" => Ok((Json::obj(vec![("cmd", Json::str("pong"))]), false)),
+            "stats" => Ok((self.stats_body(), false)),
+            "asm" => self.handle_asm(req, deadline.as_ref()),
+            "bench" => self.handle_bench(req, deadline.as_ref()).map(|j| (j, false)),
+            "__panic" if self.opts.allow_test_faults => {
+                panic!("injected test panic (--test-faults)")
+            }
+            "" => Err(ServeError::new(
+                ServeErrorKind::BadRequest,
+                "missing `cmd` field",
+            )),
+            other => Err(ServeError::new(
+                ServeErrorKind::BadRequest,
+                format!("unknown cmd `{other}`"),
+            )),
+        }
+    }
+
+    fn stats_body(&self) -> Json {
+        let s = self.stats;
+        let disk = self.wide.stats().disk;
+        Json::obj(vec![
+            ("cmd", Json::str("stats")),
+            ("requests", Json::num(s.requests as f64)),
+            ("ok_count", Json::num(s.ok as f64)),
+            ("errors", Json::num(s.errors as f64)),
+            ("widened", Json::num(s.widened as f64)),
+            ("panicked", Json::num(s.panicked as f64)),
+            ("disk_hits", Json::num(disk.hits as f64)),
+            ("disk_stores", Json::num(disk.stores as f64)),
+            ("disk_resident_bytes", Json::num(disk.resident_bytes as f64)),
+        ])
+    }
+
+    /// The `asm` command: tight-limits first, one widened retry when the
+    /// tight pass errors out or truncates flows.
+    fn handle_asm(
+        &self,
+        req: &Json,
+        deadline: Option<&Deadline>,
+    ) -> Result<(Json, bool), ServeError> {
+        match asm_on(&self.tight, req, deadline) {
+            Ok(body) => Ok((body, false)),
+            // a tight-budget blowup or truncation is exactly what the
+            // wide retry exists for; anything else is final
+            Err(e)
+                if e.kind == ServeErrorKind::EmuError
+                    && deadline.map(|d| !d.passed()).unwrap_or(true) =>
+            {
+                asm_on(&self.wide, req, deadline).map(|body| (body, true))
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// The `bench` command: run one named suite benchmark end-to-end on
+    /// the wide pipeline (detection → synthesis → validation → scoring).
+    fn handle_bench(
+        &self,
+        req: &Json,
+        deadline: Option<&Deadline>,
+    ) -> Result<Json, ServeError> {
+        check_deadline(deadline)?;
+        let name = req
+            .get("bench")
+            .and_then(|b| b.as_str())
+            .ok_or_else(|| {
+                ServeError::new(ServeErrorKind::BadRequest, "bench: missing `bench` field")
+            })?;
+        let bench = crate::suite::by_name(name)
+            .or_else(|| {
+                crate::suite::shared_suite()
+                    .into_iter()
+                    .find(|b| b.name == name)
+            })
+            .ok_or_else(|| {
+                ServeError::new(
+                    ServeErrorKind::BadRequest,
+                    format!("unknown benchmark `{name}`"),
+                )
+            })?;
+        let cfg = PipelineConfig {
+            threads: 1,
+            ..PipelineConfig::default()
+        };
+        let r = run_benchmark_on(&self.wide, &bench, &cfg).map_err(|e| match e {
+            PipelineError::Emu(n, err) => {
+                ServeError::new(ServeErrorKind::EmuError, format!("{n}: {err}"))
+            }
+            PipelineError::Sim(n, err) => {
+                ServeError::new(ServeErrorKind::SimError, format!("{n}: {err}"))
+            }
+        })?;
+        let variants = r
+            .variants
+            .iter()
+            .map(|(v, o)| {
+                Json::obj(vec![
+                    ("variant", Json::str(variant_key(*v))),
+                    (
+                        "valid",
+                        o.valid.map(Json::Bool).unwrap_or(Json::Null),
+                    ),
+                ])
+            })
+            .collect();
+        Ok(Json::obj(vec![
+            ("cmd", Json::str("bench")),
+            ("bench", Json::str(name)),
+            ("shuffles", Json::num(r.detection.shuffle_count() as f64)),
+            ("variants", Json::Arr(variants)),
+        ]))
+    }
+}
+
+/// Protocol-stable variant keys — the same strings the `asm` request's
+/// `variant` field accepts (the display names `Variant::name` renders in
+/// reports are not part of the wire protocol).
+fn variant_key(v: Variant) -> &'static str {
+    match v {
+        Variant::Full => "full",
+        Variant::NoLoad => "noload",
+        Variant::NoCorner => "nocorner",
+        Variant::UniformBranch => "uniform",
+    }
+}
+
+fn build_pipeline(
+    opts: &ServeOpts,
+    limits: Limits,
+    store: &Option<Arc<DiskStore>>,
+) -> Pipeline {
+    let mut p = Pipeline::with_limits(limits)
+        .with_sim_threads(opts.sim_threads)
+        .with_engine(opts.engine.0, opts.engine.1);
+    if let Some(s) = store {
+        p = p.with_disk_shared(s.clone());
+    }
+    p
+}
+
+/// Cooperative per-request deadline, checked at kernel boundaries.
+#[derive(Debug)]
+struct Deadline {
+    at: Instant,
+    /// A zero-millisecond deadline must trip *deterministically* (the
+    /// tests rely on it), not race `Instant::now` resolution.
+    zero: bool,
+}
+
+impl Deadline {
+    fn after_ms(ms: u64) -> Deadline {
+        // clamp to a day: Instant + huge Duration panics on overflow, and
+        // an adversarial request must not get to pick the panic path
+        Deadline {
+            at: Instant::now() + Duration::from_millis(ms.min(86_400_000)),
+            zero: ms == 0,
+        }
+    }
+
+    fn passed(&self) -> bool {
+        self.zero || Instant::now() >= self.at
+    }
+}
+
+fn check_deadline(deadline: Option<&Deadline>) -> Result<(), ServeError> {
+    match deadline {
+        Some(d) if d.passed() => Err(ServeError::new(
+            ServeErrorKind::Timeout,
+            "request deadline exceeded",
+        )),
+        _ => Ok(()),
+    }
+}
+
+/// Run the `asm` request on one pipeline. Errors with `EmuError` both on
+/// a hard emulation error *and* on per-flow truncation (`FlowEnd::
+/// StepLimit` ends a flow silently — results computed from a truncated
+/// trace are valid but incomplete, so the tight pass treats them as
+/// retry-worthy rather than serving them).
+fn asm_on(
+    p: &Pipeline,
+    req: &Json,
+    deadline: Option<&Deadline>,
+) -> Result<Json, ServeError> {
+    check_deadline(deadline)?;
+    let src = req
+        .get("ptx")
+        .and_then(|s| s.as_str())
+        .ok_or_else(|| ServeError::new(ServeErrorKind::BadRequest, "asm: missing `ptx` field"))?;
+    let variant = match req.get("variant").and_then(|v| v.as_str()).unwrap_or("full") {
+        "full" => Variant::Full,
+        "noload" => Variant::NoLoad,
+        "nocorner" => Variant::NoCorner,
+        "uniform" => Variant::UniformBranch,
+        other => {
+            return Err(ServeError::new(
+                ServeErrorKind::BadRequest,
+                format!("unknown variant `{other}`"),
+            ))
+        }
+    };
+    let opts = DetectOpts {
+        max_abs_delta: req
+            .get("max_delta")
+            .and_then(|d| d.as_u64())
+            .unwrap_or(31) as i64,
+        ..DetectOpts::default()
+    };
+    let block = req.get("block").and_then(|b| b.as_u64()).unwrap_or(32) as u32;
+    if block == 0 || block > 1024 {
+        return Err(ServeError::new(
+            ServeErrorKind::BadRequest,
+            format!("block size {block} out of range (1..=1024)"),
+        ));
+    }
+    let elim = ElimOpts {
+        enabled: req
+            .get("elim")
+            .and_then(|e| e.as_bool())
+            .unwrap_or(true),
+        block,
+    };
+
+    let mut module =
+        parse(src).map_err(|e| ServeError::new(ServeErrorKind::ParseError, e.to_string()))?;
+    let mut kernels = Vec::new();
+    for k in module.kernels.iter_mut() {
+        check_deadline(deadline)?;
+        let parsed = p.intake(k.clone());
+        let det = p
+            .detected_hashed(&parsed.kernel, parsed.hash, opts)
+            .map_err(|e| {
+                ServeError::new(ServeErrorKind::EmuError, format!("{}: {e}", k.name))
+            })?;
+        // the emulation is in cache now (the detection consumed it);
+        // check for silent per-flow truncation
+        let emu = p.emulated_hashed(&parsed.kernel, parsed.hash).map_err(|e| {
+            ServeError::new(ServeErrorKind::EmuError, format!("{}: {e}", k.name))
+        })?;
+        if emu
+            .result
+            .flows
+            .iter()
+            .any(|f| f.end == FlowEnd::StepLimit)
+        {
+            return Err(ServeError::new(
+                ServeErrorKind::EmuError,
+                format!("{}: emulation truncated by the step budget", k.name),
+            ));
+        }
+        let synth = p
+            .synthesized_hashed(&parsed.kernel, parsed.hash, opts, variant, elim)
+            .map_err(|e| {
+                ServeError::new(ServeErrorKind::EmuError, format!("{}: {e}", k.name))
+            })?;
+        kernels.push(Json::obj(vec![
+            ("name", Json::str(k.name.clone())),
+            (
+                "shuffles",
+                Json::num(det.detection.shuffle_count() as f64),
+            ),
+            (
+                "elim_deleted_stores",
+                Json::num(synth.elim.deleted_stores() as f64),
+            ),
+            (
+                "elim_elided_barriers",
+                Json::num(synth.elim.elided_barriers() as f64),
+            ),
+        ]));
+        *k = (*synth.kernel).clone();
+    }
+    check_deadline(deadline)?;
+    Ok(Json::obj(vec![
+        ("cmd", Json::str("asm")),
+        ("kernels", Json::Arr(kernels)),
+        ("ptx", Json::str(print_module(&module))),
+    ]))
+}
+
+fn error_response(id: Json, e: &ServeError) -> Json {
+    Json::obj(vec![
+        ("id", id),
+        ("ok", Json::Bool(false)),
+        (
+            "error",
+            Json::obj(vec![
+                ("kind", Json::str(e.kind.name())),
+                ("message", Json::str(e.message.clone())),
+            ]),
+        ),
+    ])
+}
+
+/// Accept loop over a Unix socket: connections are served sequentially on
+/// one session (one cache, one pair of pipelines); a `shutdown` command
+/// on any connection stops the listener. The socket file is replaced if
+/// it already exists.
+#[cfg(unix)]
+pub fn serve_unix(session: &mut ServeSession, path: &std::path::Path) -> std::io::Result<()> {
+    use std::os::unix::net::UnixListener;
+    let _ = std::fs::remove_file(path);
+    let listener = UnixListener::bind(path)?;
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let reader = std::io::BufReader::new(stream.try_clone()?);
+        let shutdown = session.serve(reader, &stream)?;
+        if shutdown {
+            break;
+        }
+    }
+    let _ = std::fs::remove_file(path);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const K: &str = r#"
+.version 7.6
+.target sm_70
+.address_size 64
+.visible .entry servek(.param .u64 out, .param .u64 a){
+.reg .b32 %r<6>; .reg .b64 %rd<8>; .reg .f32 %f<6>;
+ld.param.u64 %rd1, [out];
+ld.param.u64 %rd2, [a];
+cvta.to.global.u64 %rd3, %rd2;
+cvta.to.global.u64 %rd4, %rd1;
+mov.u32 %r4, %tid.x;
+mul.wide.s32 %rd5, %r4, 4;
+add.s64 %rd6, %rd3, %rd5;
+ld.global.nc.f32 %f1, [%rd6];
+ld.global.nc.f32 %f2, [%rd6+4];
+add.f32 %f4, %f1, %f2;
+add.s64 %rd7, %rd4, %rd5;
+st.global.f32 [%rd7], %f4;
+ret;
+}
+"#;
+
+    fn run_lines(session: &mut ServeSession, lines: &[String]) -> Vec<Json> {
+        let input = lines.join("\n");
+        let mut out = Vec::new();
+        session
+            .serve(std::io::Cursor::new(input), &mut out)
+            .unwrap();
+        String::from_utf8(out)
+            .unwrap()
+            .lines()
+            .map(|l| Json::parse(l).expect("every response line is valid JSON"))
+            .collect()
+    }
+
+    fn asm_req(id: u64, ptx: &str) -> String {
+        Json::obj(vec![
+            ("id", Json::num(id as f64)),
+            ("cmd", Json::str("asm")),
+            ("ptx", Json::str(ptx)),
+        ])
+        .render()
+    }
+
+    #[test]
+    fn healthy_request_roundtrips_and_streams_ptx() {
+        let mut s = ServeSession::new(ServeOpts::default(), None);
+        let responses = run_lines(&mut s, &[asm_req(1, K)]);
+        assert_eq!(responses.len(), 1);
+        let r = &responses[0];
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(r.get("id").unwrap().as_u64(), Some(1));
+        let kernels = r.get("kernels").unwrap().as_arr().unwrap();
+        assert_eq!(kernels[0].get("name").unwrap().as_str(), Some("servek"));
+        assert!(kernels[0].get("shuffles").unwrap().as_u64().unwrap() >= 1);
+        assert!(r.get("ptx").unwrap().as_str().unwrap().contains("shfl.sync"));
+    }
+
+    #[test]
+    fn poisoned_batch_degrades_per_request_not_per_session() {
+        let mut s = ServeSession::new(
+            ServeOpts {
+                allow_test_faults: true,
+                ..ServeOpts::default()
+            },
+            None,
+        );
+        let lines = vec![
+            asm_req(1, K),
+            r#"{"id":2,"cmd":"asm","ptx":"this is not ptx"}"#.to_string(),
+            "this is not even json".to_string(),
+            r#"{"id":4,"cmd":"__panic"}"#.to_string(),
+            asm_req(5, K),
+        ];
+        let responses = run_lines(&mut s, &lines);
+        assert_eq!(responses.len(), 5);
+        let kind = |i: usize| {
+            responses[i]
+                .get("error")
+                .and_then(|e| e.get("kind"))
+                .and_then(|k| k.as_str())
+                .map(str::to_string)
+        };
+        assert_eq!(responses[0].get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(kind(1).as_deref(), Some("ParseError"));
+        assert_eq!(kind(2).as_deref(), Some("BadRequest"));
+        assert_eq!(kind(3).as_deref(), Some("Panicked"));
+        // the kernel after the panic still succeeds, bit-identically
+        assert_eq!(responses[4].get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            responses[4].get("ptx").unwrap().as_str(),
+            responses[0].get("ptx").unwrap().as_str(),
+            "post-panic result must match the pre-panic one"
+        );
+        let stats = s.stats();
+        assert_eq!(stats.requests, 5);
+        assert_eq!(stats.panicked, 1);
+        assert_eq!(stats.errors, 3);
+    }
+
+    #[test]
+    fn zero_deadline_times_out_deterministically() {
+        let mut s = ServeSession::new(ServeOpts::default(), None);
+        let req = Json::obj(vec![
+            ("id", Json::num(9.0)),
+            ("cmd", Json::str("asm")),
+            ("ptx", Json::str(K)),
+            ("deadline_ms", Json::num(0.0)),
+        ])
+        .render();
+        let responses = run_lines(&mut s, &[req]);
+        assert_eq!(
+            responses[0]
+                .get("error")
+                .and_then(|e| e.get("kind"))
+                .and_then(|k| k.as_str()),
+            Some("Timeout")
+        );
+    }
+
+    /// `bits` tid-dependent branches, each adding a distinct constant to
+    /// the accumulator on its taken side: every one of the 2^bits paths
+    /// carries a distinct register environment, so neither loop
+    /// abstraction nor label memoization collapses the explosion — the
+    /// flow count is the real cost.
+    fn forky(bits: usize) -> String {
+        let mut body = String::new();
+        for i in 0..bits {
+            body.push_str(&format!(
+                "and.b32 %r10, %r1, {};\nsetp.eq.s32 %p{p}, %r10, 0;\n\
+                 @%p{p} bra $S{i};\nadd.s32 %r2, %r2, {};\n$S{i}:\n",
+                1u32 << i,
+                100 + i,
+                p = i + 1,
+            ));
+        }
+        format!(
+            ".version 7.6\n.target sm_70\n.address_size 64\n\
+             .visible .entry forky(.param .u64 out){{\n\
+             .reg .pred %p<{}>; .reg .b32 %r<12>; .reg .b64 %rd<3>;\n\
+             ld.param.u64 %rd1, [out];\ncvta.to.global.u64 %rd2, %rd1;\n\
+             mov.u32 %r1, %tid.x;\nmov.u32 %r2, 0;\n{body}\
+             st.global.u32 [%rd2], %r2;\nret;\n}}\n",
+            bits + 2,
+        )
+    }
+
+    #[test]
+    fn flow_blowup_widens_once_then_reports_emu_error() {
+        // 2^10 = 1024 flows: over the tight budget (512) and over this
+        // session's deliberately small "wide" budget too — the request
+        // must retry once, then fail with a typed EmuError
+        let mut s = ServeSession::new(
+            ServeOpts {
+                wide: Limits {
+                    max_flows: 64,
+                    max_steps_per_flow: 50_000,
+                    max_total_steps: 2_000_000,
+                },
+                ..ServeOpts::default()
+            },
+            None,
+        );
+        let responses = run_lines(&mut s, &[asm_req(1, &forky(10))]);
+        assert_eq!(
+            responses[0]
+                .get("error")
+                .and_then(|e| e.get("kind"))
+                .and_then(|k| k.as_str()),
+            Some("EmuError"),
+            "flow-blowup kernel must yield a typed EmuError, got {:?}",
+            responses[0]
+        );
+        assert_eq!(s.stats().errors, 1);
+    }
+
+    #[test]
+    fn tight_overflow_with_wide_headroom_widens_and_succeeds() {
+        // 1024 flows: over tight (512), comfortably under the default
+        // wide budget (4096) — the retry must succeed and be flagged
+        let mut s = ServeSession::new(ServeOpts::default(), None);
+        let responses = run_lines(&mut s, &[asm_req(1, &forky(10))]);
+        assert_eq!(
+            responses[0].get("ok").unwrap().as_bool(),
+            Some(true),
+            "got {:?}",
+            responses[0]
+        );
+        assert_eq!(responses[0].get("widened").unwrap().as_bool(), Some(true));
+        assert_eq!(s.stats().widened, 1);
+    }
+
+    #[test]
+    fn ping_stats_shutdown_protocol() {
+        let mut s = ServeSession::new(ServeOpts::default(), None);
+        let lines = vec![
+            r#"{"cmd":"ping"}"#.to_string(),
+            r#"{"cmd":"stats"}"#.to_string(),
+            r#"{"id":"bye","cmd":"shutdown"}"#.to_string(),
+            // anything after shutdown is not processed
+            asm_req(99, K),
+        ];
+        let responses = run_lines(&mut s, &lines);
+        assert_eq!(responses.len(), 3, "shutdown stops the loop");
+        assert_eq!(responses[0].get("cmd").unwrap().as_str(), Some("pong"));
+        assert!(responses[1].get("requests").unwrap().as_u64().unwrap() >= 2);
+        assert_eq!(responses[2].get("id").unwrap().as_str(), Some("bye"));
+    }
+}

@@ -10,8 +10,10 @@
 //! Layout (one file per artifact, under a format-version directory):
 //!
 //! ```text
-//! <cache-dir>/v1/<kind>/<32-hex-key>.art   artifact (header + payload)
-//! <cache-dir>/v1/<kind>/<32-hex-key>.lru   empty touch marker (last use)
+//! <cache-dir>/v7/<kind>/<32-hex-key>.art   artifact (header + payload)
+//! <cache-dir>/v7/<kind>/<32-hex-key>.lru   empty touch marker (last use)
+//! <cache-dir>/v7/manifest                  generation manifest (see below)
+//! <cache-dir>/v7/.evict.lock               cross-process eviction lock
 //! ```
 //!
 //! `<kind>` is one of `emulated`, `decoded`, `detected`, `synthesized`,
@@ -30,6 +32,31 @@
 //! The store is LRU size-bounded: after each write the store evicts
 //! least-recently-used artifacts (by touch-marker mtime) until the
 //! resident set fits `max_bytes`.
+//!
+//! **Fault model.** Every filesystem operation routes through the
+//! [`crate::util::Vfs`] seam, so the fault-injection suites
+//! (`tests/fault_store.rs`) can drive the whole pipeline through torn
+//! writes, crash-point truncation, simulated ENOSPC, and flat IO errors.
+//! The invariant under any injected failure: the store degrades to
+//! recompute with bit-exact results — never a panic, never an
+//! accepted-corrupt artifact, and a later no-fault run heals the dir
+//! (stale temp files are swept on `open`, corrupt entries are deleted on
+//! load or by [`DiskStore::verify`]).
+//!
+//! **Cross-process coordination.** N processes on one cache dir behave
+//! like one. Writers already coordinate through atomic tmp+rename (last
+//! writer of a content-addressed key wins with identical bytes). Evictors
+//! coordinate through `.evict.lock` — acquired with `O_EXCL` carrying
+//! `pid ∥ unix-millis`, with stale-lock takeover after
+//! [`STALE_LOCK_MS`] — so at most one process pays the eviction scan and
+//! the rest skip (counted in [`DiskSnapshot::lock_skips`]). Each
+//! completed eviction bumps the `manifest` generation (tmp+rename, so
+//! the bump is atomic); writers that observe a foreign generation — or
+//! every [`RESYNC_EVERY`]th store — resynchronize their resident-bytes
+//! counter from a directory scan instead of trusting local increments
+//! (counted in [`DiskSnapshot::resyncs`]). A file evicted under a
+//! concurrent reader just recomputes; a file already deleted by a racing
+//! evictor is treated as evicted, not as an error.
 
 use crate::emu::EmuStats;
 use crate::perf::PerfReport;
@@ -41,11 +68,12 @@ use crate::ptx::printer::{print_kernel, ContentHash};
 use crate::shuffle::{Candidate, DetectOpts, Detection, ElimOpts, ElimReport, Variant};
 use crate::sim::{DecodedKernel, SimStats, WarpEvent};
 use crate::sym::SessionInterner;
+use crate::util::vfs::{RealFs, Vfs};
 use crate::util::{fnv64, Dec, Enc};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, SystemTime};
+use std::time::{Duration, SystemTime, UNIX_EPOCH};
 
 /// Bump when the artifact encoding changes; old `v<N>` trees are simply
 /// ignored (and eventually reclaimed by the user, not by us).
@@ -61,10 +89,23 @@ use std::time::{Duration, SystemTime};
 /// v6: `synthesized/` artifacts carry the phase-liveness [`ElimReport`]
 /// (dead-store / barrier-elision verdicts) and their disk key includes
 /// the [`ElimOpts`] fingerprint.
-pub const STORE_VERSION: u32 = 6;
+/// v7: `detected/` and `synthesized/` disk keys include the emulation
+/// [`crate::emu::Limits`] fingerprint (serve mode runs tight and wide
+/// budgets over one cache dir; a detection computed under a tight budget
+/// must never satisfy a default-budget reader), and the version root
+/// gains the generation `manifest` + `.evict.lock` coordination files.
+pub const STORE_VERSION: u32 = 7;
 const MAGIC: [u8; 4] = *b"RPST";
+/// Generation-manifest magic (distinct from artifact files on purpose).
+const MANIFEST_MAGIC: [u8; 4] = *b"RPMF";
 /// Default resident-set bound: 256 MiB.
 pub const DEFAULT_MAX_BYTES: u64 = 256 * 1024 * 1024;
+/// An eviction lock older than this is presumed abandoned (holder
+/// crashed mid-eviction) and taken over.
+pub const STALE_LOCK_MS: u64 = 30_000;
+/// Resynchronize the resident-bytes counter from a directory scan every
+/// this-many stores, even when no foreign manifest generation is seen.
+const RESYNC_EVERY: u64 = 32;
 
 /// Artifact families the store persists.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -122,6 +163,14 @@ pub struct DiskSnapshot {
     /// Corrupt / truncated / undecodable files discarded on load.
     pub corrupt: u64,
     pub resident_bytes: u64,
+    /// Last manifest generation this store observed (0 = none yet).
+    pub generation: u64,
+    /// Evictions skipped because another process held `.evict.lock`.
+    pub lock_skips: u64,
+    /// Resident-counter resynchronizations from a directory scan.
+    pub resyncs: u64,
+    /// Stale temp files swept at `open` (crash debris from prior runs).
+    pub swept_tmp: u64,
 }
 
 /// The persistent artifact store. One per cache directory; safe to share
@@ -129,6 +178,7 @@ pub struct DiskSnapshot {
 /// renames, and a file evicted under a concurrent reader just recomputes).
 #[derive(Debug)]
 pub struct DiskStore {
+    vfs: Arc<dyn Vfs>,
     root: PathBuf,
     max_bytes: u64,
     evict_lock: Mutex<()>,
@@ -138,6 +188,11 @@ pub struct DiskStore {
     evictions: AtomicU64,
     corrupt: AtomicU64,
     resident: AtomicU64,
+    /// Manifest generation last seen (0 until a manifest is observed).
+    last_gen: AtomicU64,
+    lock_skips: AtomicU64,
+    resyncs: AtomicU64,
+    swept_tmp: AtomicU64,
 }
 
 /// The default cache directory: `$RUST_PALLAS_CACHE_DIR`, else
@@ -151,13 +206,24 @@ pub fn default_dir() -> Option<PathBuf> {
 
 impl DiskStore {
     /// Open (creating if needed) a store rooted at `dir`, bounded to
-    /// `max_bytes` of resident artifacts.
+    /// `max_bytes` of resident artifacts, on the real filesystem.
     pub fn open(dir: &Path, max_bytes: u64) -> std::io::Result<DiskStore> {
+        DiskStore::open_on(Arc::new(RealFs), dir, max_bytes)
+    }
+
+    /// Open on an explicit [`Vfs`] — the seam the fault-injection suites
+    /// use to drive the store through every IO failure class.
+    pub fn open_on(
+        vfs: Arc<dyn Vfs>,
+        dir: &Path,
+        max_bytes: u64,
+    ) -> std::io::Result<DiskStore> {
         let root = dir.join(format!("v{STORE_VERSION}"));
         for kind in STORE_KINDS {
-            std::fs::create_dir_all(root.join(kind.dir()))?;
+            vfs.create_dir_all(&root.join(kind.dir()))?;
         }
         let store = DiskStore {
+            vfs,
             root,
             max_bytes,
             evict_lock: Mutex::new(()),
@@ -167,7 +233,15 @@ impl DiskStore {
             evictions: AtomicU64::new(0),
             corrupt: AtomicU64::new(0),
             resident: AtomicU64::new(0),
+            last_gen: AtomicU64::new(0),
+            lock_skips: AtomicU64::new(0),
+            resyncs: AtomicU64::new(0),
+            swept_tmp: AtomicU64::new(0),
         };
+        store.sweep_tmp();
+        if let Some(m) = store.read_manifest() {
+            store.last_gen.store(m.generation, Ordering::Relaxed);
+        }
         store.resident.store(store.scan().iter().map(|e| e.size).sum(), Ordering::Relaxed);
         Ok(store)
     }
@@ -175,6 +249,11 @@ impl DiskStore {
     /// Open with the default size bound.
     pub fn open_default(dir: &Path) -> std::io::Result<DiskStore> {
         DiskStore::open(dir, DEFAULT_MAX_BYTES)
+    }
+
+    /// The configured resident-set bound.
+    pub fn max_bytes(&self) -> u64 {
+        self.max_bytes
     }
 
     pub fn snapshot(&self) -> DiskSnapshot {
@@ -186,6 +265,34 @@ impl DiskStore {
             evictions: self.evictions.load(Ordering::Relaxed),
             corrupt: self.corrupt.load(Ordering::Relaxed),
             resident_bytes: self.resident.load(Ordering::Relaxed),
+            generation: self.last_gen.load(Ordering::Relaxed),
+            lock_skips: self.lock_skips.load(Ordering::Relaxed),
+            resyncs: self.resyncs.load(Ordering::Relaxed),
+            swept_tmp: self.swept_tmp.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Delete temp files abandoned by crashed writers (`<key>.tmp<pid>-<n>`
+    /// never renamed into place). Run once at `open`; failures are
+    /// harmless — the debris is retried next open.
+    fn sweep_tmp(&self) {
+        let dirs = STORE_KINDS
+            .iter()
+            .map(|k| self.root.join(k.dir()))
+            .chain(std::iter::once(self.root.clone()));
+        for dir in dirs {
+            let Ok(entries) = self.vfs.read_dir(&dir) else {
+                continue;
+            };
+            for (path, _) in entries {
+                let is_tmp = path
+                    .extension()
+                    .and_then(|x| x.to_str())
+                    .is_some_and(|x| x.starts_with("tmp"));
+                if is_tmp && self.vfs.remove_file(&path).is_ok() {
+                    self.swept_tmp.fetch_add(1, Ordering::Relaxed);
+                }
+            }
         }
     }
 
@@ -211,7 +318,7 @@ impl DiskStore {
         decode: impl FnOnce(&[u8]) -> Option<T>,
     ) -> Option<T> {
         let path = self.art_path(kind, key);
-        let bytes = match std::fs::read(&path) {
+        let bytes = match self.vfs.read(&path) {
             Ok(b) => b,
             Err(_) => {
                 self.misses.fetch_add(1, Ordering::Relaxed);
@@ -223,14 +330,14 @@ impl DiskStore {
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 // bump the LRU clock; failure is harmless (falls back to
                 // the artifact's own mtime)
-                let _ = std::fs::File::create(path.with_extension("lru"));
+                let _ = self.vfs.touch(&path.with_extension("lru"));
                 Some(artifact)
             }
             None => {
                 self.corrupt.fetch_add(1, Ordering::Relaxed);
                 self.misses.fetch_add(1, Ordering::Relaxed);
-                let _ = std::fs::remove_file(&path);
-                let _ = std::fs::remove_file(path.with_extension("lru"));
+                let _ = self.vfs.remove_file(&path);
+                let _ = self.vfs.remove_file(&path.with_extension("lru"));
                 None
             }
         }
@@ -256,40 +363,62 @@ impl DiskStore {
             std::process::id(),
             TMP_NONCE.fetch_add(1, Ordering::Relaxed)
         ));
-        let old = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
-        if std::fs::write(&tmp, &bytes).is_ok() && std::fs::rename(&tmp, &path).is_ok() {
-            self.stores.fetch_add(1, Ordering::Relaxed);
+        let old = self.vfs.metadata(&path).map(|m| m.len).unwrap_or(0);
+        if self.vfs.write(&tmp, &bytes).is_ok() && self.vfs.rename(&tmp, &path).is_ok() {
+            let n = self.stores.fetch_add(1, Ordering::Relaxed) + 1;
             let new = bytes.len() as u64;
             if new >= old {
                 self.resident.fetch_add(new - old, Ordering::Relaxed);
             } else {
                 self.resident.fetch_sub(old - new, Ordering::Relaxed);
             }
+            self.maybe_resync(n);
             self.evict_to_limit();
         } else {
-            let _ = std::fs::remove_file(&tmp);
+            let _ = self.vfs.remove_file(&tmp);
         }
     }
 
-    /// All resident artifacts with size and last-use time.
+    /// Resynchronize the resident counter from a directory scan when a
+    /// foreign process bumped the manifest generation (its evictions are
+    /// invisible to our local increments) — or unconditionally every
+    /// [`RESYNC_EVERY`]th store, catching drift even when evictors crash
+    /// before publishing a generation.
+    fn maybe_resync(&self, nth_store: u64) {
+        let seen = self.read_manifest().map(|m| m.generation).unwrap_or(0);
+        let last = self.last_gen.load(Ordering::Relaxed);
+        if seen == last && nth_store % RESYNC_EVERY != 0 {
+            return;
+        }
+        self.last_gen.store(seen, Ordering::Relaxed);
+        let total = self.scan().iter().map(|e| e.size).sum();
+        self.resident.store(total, Ordering::Relaxed);
+        self.resyncs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// All resident artifacts with size and last-use time. Hardened
+    /// against a dir being mutated underneath it: an unreadable kind dir
+    /// is skipped, entries whose metadata cannot be read are dropped by
+    /// the [`Vfs`] (a file deleted mid-scan was never resident), and a
+    /// missing/corrupt `.lru` marker falls back to the artifact's own
+    /// mtime. Nothing here is an error.
     fn scan(&self) -> Vec<Entry> {
         let mut out = Vec::new();
         for kind in STORE_KINDS {
             let dir = self.root.join(kind.dir());
-            let Ok(rd) = std::fs::read_dir(&dir) else { continue };
-            for e in rd.flatten() {
-                let path = e.path();
+            let Ok(entries) = self.vfs.read_dir(&dir) else { continue };
+            for (path, meta) in entries {
                 if path.extension().and_then(|x| x.to_str()) != Some("art") {
                     continue;
                 }
-                let Ok(meta) = e.metadata() else { continue };
-                let touched = std::fs::metadata(path.with_extension("lru"))
-                    .and_then(|m| m.modified())
-                    .or_else(|_| meta.modified())
-                    .unwrap_or(SystemTime::UNIX_EPOCH);
+                let touched = self
+                    .vfs
+                    .metadata(&path.with_extension("lru"))
+                    .map(|m| m.modified)
+                    .unwrap_or(meta.modified);
                 out.push(Entry {
                     path,
-                    size: meta.len(),
+                    size: meta.len,
                     touched,
                 });
             }
@@ -300,16 +429,27 @@ impl DiskStore {
     /// Remove least-recently-used artifacts until the resident set fits
     /// `max_bytes`, overshooting down to a 90% low-water mark so a cache
     /// sitting at its bound does not pay a full directory scan on every
-    /// subsequent write. The counter is only ever *decremented* by what
-    /// was actually removed — overwriting it with a scan total would
-    /// clobber concurrent `store()` increments and leave the bound
-    /// violated.
-    fn evict_to_limit(&self) {
+    /// subsequent write. In-process evictors serialize on `evict_lock`
+    /// (poison-tolerant: a panicking pipeline thread must not wedge
+    /// eviction forever); cross-process evictors serialize on
+    /// `.evict.lock` — when another live process holds it we *skip* this
+    /// round (it is doing the work) rather than double-scan. The counter
+    /// is only ever decremented by what this process actually removed;
+    /// foreign evictions reach us through the manifest-generation resync
+    /// in `store()`.
+    pub fn evict_to_limit(&self) {
         if self.resident.load(Ordering::Relaxed) <= self.max_bytes {
             return;
         }
         let low_water = self.max_bytes - self.max_bytes / 10;
-        let _guard = self.evict_lock.lock().unwrap();
+        let _guard = self
+            .evict_lock
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        if !self.acquire_process_lock() {
+            self.lock_skips.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
         let mut entries = self.scan();
         let mut total: u64 = entries.iter().map(|e| e.size).sum();
         entries.sort_by(|a, b| a.touched.cmp(&b.touched).then(a.path.cmp(&b.path)));
@@ -317,18 +457,236 @@ impl DiskStore {
             if total <= low_water {
                 break;
             }
-            if std::fs::remove_file(&e.path).is_ok() {
-                let _ = std::fs::remove_file(e.path.with_extension("lru"));
-                total -= e.size;
-                let _ = self
-                    .resident
-                    .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
-                        Some(v.saturating_sub(e.size))
-                    });
-                self.evictions.fetch_add(1, Ordering::Relaxed);
+            match self.vfs.remove_file(&e.path) {
+                Ok(()) => {
+                    let _ = self.vfs.remove_file(&e.path.with_extension("lru"));
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                // a racing evictor got there first — the bytes are gone
+                // either way, so account for them, but it was not *our*
+                // eviction
+                Err(err) if err.kind() == std::io::ErrorKind::NotFound => {}
+                // transient failure (injected or real): leave the entry
+                // for the next round
+                Err(_) => continue,
+            }
+            total -= e.size;
+            let _ = self
+                .resident
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                    Some(v.saturating_sub(e.size))
+                });
+        }
+        self.publish_manifest(&self.scan());
+        self.release_process_lock();
+    }
+
+    // -- cross-process coordination ----------------------------------------
+
+    fn lock_path(&self) -> PathBuf {
+        self.root.join(".evict.lock")
+    }
+
+    fn manifest_path(&self) -> PathBuf {
+        self.root.join("manifest")
+    }
+
+    /// Try to take `.evict.lock` (exclusive create of `pid ∥ unix-millis`).
+    /// An existing lock that is unparseable or older than [`STALE_LOCK_MS`]
+    /// is presumed abandoned by a crashed holder: it is removed and the
+    /// acquisition retried once. Returns `false` when another live process
+    /// holds the lock (or IO keeps failing) — the caller skips eviction.
+    fn acquire_process_lock(&self) -> bool {
+        let mut payload = Vec::with_capacity(16);
+        payload.extend_from_slice(&(std::process::id() as u64).to_le_bytes());
+        payload.extend_from_slice(&unix_millis().to_le_bytes());
+        for attempt in 0..2 {
+            match self.vfs.create_new(&self.lock_path(), &payload) {
+                Ok(()) => return true,
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists && attempt == 0 => {
+                    let stale = match self.vfs.read(&self.lock_path()) {
+                        Ok(bytes) if bytes.len() == 16 => {
+                            let ts =
+                                u64::from_le_bytes(bytes[8..16].try_into().unwrap_or([0; 8]));
+                            unix_millis().saturating_sub(ts) > STALE_LOCK_MS
+                        }
+                        // vanished → retry will race cleanly; garbage → stale
+                        Err(_) => true,
+                        Ok(_) => true,
+                    };
+                    if stale {
+                        let _ = self.vfs.remove_file(&self.lock_path());
+                        // fall through to the second create_new attempt
+                    } else {
+                        return false;
+                    }
+                }
+                Err(_) => return false,
             }
         }
+        false
     }
+
+    fn release_process_lock(&self) {
+        let _ = self.vfs.remove_file(&self.lock_path());
+    }
+
+    /// Write the generation manifest (tmp+rename, like artifacts): the
+    /// incremented generation plus a per-kind count/bytes summary. Racing
+    /// bumps may coalesce generations — harmless, the number only needs
+    /// to *change* for foreign processes to resync.
+    fn publish_manifest(&self, entries: &[Entry]) {
+        let generation = self.read_manifest().map(|m| m.generation).unwrap_or(0) + 1;
+        let mut e = Enc::default();
+        e.u64(generation);
+        for kind in STORE_KINDS {
+            let dir = self.root.join(kind.dir());
+            let in_kind = entries.iter().filter(|x| x.path.starts_with(&dir));
+            e.u64(in_kind.clone().count() as u64);
+            e.u64(in_kind.map(|x| x.size).sum());
+        }
+        let mut bytes = Vec::with_capacity(e.buf.len() + 12);
+        bytes.extend_from_slice(&MANIFEST_MAGIC);
+        bytes.extend_from_slice(&e.buf);
+        bytes.extend_from_slice(&fnv64(&e.buf).to_le_bytes());
+        let tmp = self.manifest_path().with_extension(format!(
+            "tmp{}",
+            std::process::id()
+        ));
+        if self.vfs.write(&tmp, &bytes).is_ok()
+            && self.vfs.rename(&tmp, &self.manifest_path()).is_ok()
+        {
+            self.last_gen.store(generation, Ordering::Relaxed);
+        } else {
+            let _ = self.vfs.remove_file(&tmp);
+        }
+    }
+
+    /// Read and verify the manifest; any corruption reads as "no
+    /// manifest" (the store never trusts it for more than a resync hint).
+    fn read_manifest(&self) -> Option<Manifest> {
+        let bytes = self.vfs.read(&self.manifest_path()).ok()?;
+        if bytes.len() < 12 || bytes[0..4] != MANIFEST_MAGIC {
+            return None;
+        }
+        let payload = &bytes[4..bytes.len() - 8];
+        let want = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().ok()?);
+        if fnv64(payload) != want {
+            return None;
+        }
+        let mut d = Dec::new(payload);
+        let generation = d.u64()?;
+        let mut kinds = [(0u64, 0u64); STORE_KINDS.len()];
+        for slot in kinds.iter_mut() {
+            *slot = (d.u64()?, d.u64()?);
+        }
+        d.done().then_some(Manifest { generation, kinds })
+    }
+
+    // -- verification ------------------------------------------------------
+
+    /// Walk every resident artifact and check it end-to-end: container
+    /// (magic, version, kind tag, checksum) *and* typed payload decode —
+    /// the exact gauntlet a load would run. With `heal`, entries that
+    /// fail are deleted (with their `.lru` markers) so the next run
+    /// recomputes them. The store's own counters are not touched: this
+    /// is an audit, not a load path.
+    pub fn verify(&self, heal: bool) -> StoreCheck {
+        let mut check = StoreCheck::default();
+        for kind in STORE_KINDS {
+            let mut kc = KindCheck {
+                kind,
+                count: 0,
+                bytes: 0,
+                bad: 0,
+            };
+            let dir = self.root.join(kind.dir());
+            let entries = self.vfs.read_dir(&dir).unwrap_or_default();
+            for (path, meta) in entries {
+                if path.extension().and_then(|x| x.to_str()) != Some("art") {
+                    continue;
+                }
+                kc.count += 1;
+                kc.bytes += meta.len;
+                let ok = self
+                    .vfs
+                    .read(&path)
+                    .ok()
+                    .and_then(|bytes| {
+                        decode_container(&bytes, kind).map(|p| p.to_vec())
+                    })
+                    .map(|payload| payload_decodes(kind, &payload))
+                    .unwrap_or(false);
+                if !ok {
+                    kc.bad += 1;
+                    check.bad_paths.push(path.clone());
+                    if heal {
+                        if self.vfs.remove_file(&path).is_ok() {
+                            check.healed += 1;
+                        }
+                        let _ = self.vfs.remove_file(&path.with_extension("lru"));
+                    }
+                }
+            }
+            check.total_bytes += kc.bytes;
+            check.bad += kc.bad;
+            check.kinds.push(kc);
+        }
+        check
+    }
+}
+
+fn unix_millis() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// Can this payload be decoded by its kind's typed codec? The emulated
+/// image needs no kernel to *structurally* validate — it relocates into a
+/// throwaway session.
+fn payload_decodes(kind: StoreKind, payload: &[u8]) -> bool {
+    match kind {
+        StoreKind::Emulated => {
+            let mut d = Dec::new(payload);
+            let Some(_elapsed) = d.u64() else { return false };
+            let session = Arc::new(SessionInterner::new());
+            crate::sym::decode_emulation(&payload[d.pos()..], &session).is_some()
+        }
+        StoreKind::Decoded => decode_decoded(payload).is_some(),
+        StoreKind::Detected => decode_detected(payload).is_some(),
+        StoreKind::Synthesized => decode_synthesized(payload).is_some(),
+        StoreKind::Validated => decode_validated(payload).is_some(),
+        StoreKind::Scored => decode_scored(payload).is_some(),
+    }
+}
+
+/// Result of a [`DiskStore::verify`] audit.
+#[derive(Debug, Default, Clone)]
+pub struct StoreCheck {
+    pub kinds: Vec<KindCheck>,
+    pub total_bytes: u64,
+    pub bad: u64,
+    pub healed: u64,
+    pub bad_paths: Vec<PathBuf>,
+}
+
+/// Per-kind slice of a [`StoreCheck`].
+#[derive(Debug, Clone, Copy)]
+pub struct KindCheck {
+    pub kind: StoreKind,
+    pub count: u64,
+    pub bytes: u64,
+    pub bad: u64,
+}
+
+/// Decoded generation manifest.
+#[derive(Debug, Clone, Copy)]
+pub struct Manifest {
+    pub generation: u64,
+    /// Per-kind `(count, bytes)` in [`STORE_KINDS`] order.
+    pub kinds: [(u64, u64); STORE_KINDS.len()],
 }
 
 struct Entry {
@@ -380,6 +738,13 @@ impl KeyBuilder {
     /// [`ElimOpts::key_into`]).
     pub fn elim(&mut self, o: ElimOpts) -> &mut KeyBuilder {
         o.key_into(&mut self.0);
+        self
+    }
+
+    /// Key the full emulation-limits struct (exhaustive, see
+    /// [`crate::emu::Limits::key_into`]).
+    pub fn limits(&mut self, l: crate::emu::Limits) -> &mut KeyBuilder {
+        l.key_into(&mut self.0);
         self
     }
 
@@ -795,6 +1160,103 @@ mod tests {
         assert!(s.load(StoreKind::Validated, ContentHash(1, 0)).is_some());
         assert!(s.load(StoreKind::Validated, ContentHash(2, 0)).is_none());
         assert!(s.load(StoreKind::Validated, ContentHash(3, 0)).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn eviction_publishes_a_manifest_generation_and_foreign_stores_resync() {
+        let dir = tmp("manifest");
+        let s = DiskStore::open(&dir, 2400).unwrap();
+        assert!(s.read_manifest().is_none(), "fresh store has no manifest");
+        let payload = vec![0u8; 1000];
+        for i in 0..4 {
+            s.store(StoreKind::Validated, ContentHash(i, 0), &payload);
+        }
+        let m = s.read_manifest().expect("eviction must publish a manifest");
+        assert!(m.generation >= 1);
+        assert_eq!(s.snapshot().generation, m.generation);
+
+        // a second store over the same dir opens at that generation and
+        // its resident counter matches a fresh scan
+        let s2 = DiskStore::open(&dir, 2400).unwrap();
+        assert_eq!(s2.snapshot().generation, m.generation);
+        let total: u64 = s2.scan().iter().map(|e| e.size).sum();
+        assert_eq!(s2.snapshot().resident_bytes, total);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn live_foreign_lock_skips_eviction_and_stale_lock_is_taken_over() {
+        let dir = tmp("lock");
+        let s = DiskStore::open(&dir, 2400).unwrap();
+        let payload = vec![0u8; 1000];
+        s.store(StoreKind::Validated, ContentHash(1, 0), &payload);
+        s.store(StoreKind::Validated, ContentHash(2, 0), &payload);
+
+        // a live foreign holder: fresh timestamp, different pid
+        let mut lock = Vec::new();
+        lock.extend_from_slice(&999_999u64.to_le_bytes());
+        lock.extend_from_slice(&super::unix_millis().to_le_bytes());
+        std::fs::write(s.lock_path(), &lock).unwrap();
+        s.store(StoreKind::Validated, ContentHash(3, 0), &payload);
+        assert!(s.snapshot().lock_skips >= 1, "live lock must skip eviction");
+        assert_eq!(s.snapshot().evictions, 0);
+
+        // age the lock past the stale bound: the next evictor takes over
+        let mut stale = Vec::new();
+        stale.extend_from_slice(&999_999u64.to_le_bytes());
+        stale.extend_from_slice(
+            &super::unix_millis()
+                .saturating_sub(super::STALE_LOCK_MS + 1000)
+                .to_le_bytes(),
+        );
+        std::fs::write(s.lock_path(), &stale).unwrap();
+        s.store(StoreKind::Validated, ContentHash(4, 0), &payload);
+        assert!(s.snapshot().evictions >= 1, "stale lock must be taken over");
+        assert!(!s.lock_path().exists(), "lock released after eviction");
+
+        // garbage lock contents are treated as stale, not trusted
+        std::fs::write(s.lock_path(), b"not-a-lock").unwrap();
+        assert!(s.acquire_process_lock());
+        s.release_process_lock();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn open_sweeps_abandoned_temp_files() {
+        let dir = tmp("sweep");
+        {
+            let s = DiskStore::open(&dir, 1 << 20).unwrap();
+            s.store(StoreKind::Scored, ContentHash(1, 1), b"keep");
+        }
+        let kind_dir = dir.join(format!("v{STORE_VERSION}")).join("scored");
+        std::fs::write(kind_dir.join("deadbeef.tmp123-0"), b"debris").unwrap();
+        let s = DiskStore::open(&dir, 1 << 20).unwrap();
+        assert_eq!(s.snapshot().swept_tmp, 1);
+        assert!(!kind_dir.join("deadbeef.tmp123-0").exists());
+        assert_eq!(s.load(StoreKind::Scored, ContentHash(1, 1)).unwrap(), b"keep");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn verify_flags_and_heals_undecodable_payloads() {
+        let dir = tmp("verify");
+        let s = DiskStore::open(&dir, 1 << 20).unwrap();
+        // a container-valid but typed-undecodable payload (random bytes
+        // are not a Scored image)
+        s.store(StoreKind::Scored, ContentHash(1, 0), b"not a scored image");
+        let check = s.verify(false);
+        assert_eq!(check.bad, 1);
+        assert_eq!(check.healed, 0);
+        assert!(s.load(StoreKind::Scored, ContentHash(1, 0)).is_some(), "audit must not delete");
+
+        let check = s.verify(true);
+        assert_eq!((check.bad, check.healed), (1, 1));
+        assert!(s.verify(false).bad == 0, "healed store is coherent");
+        assert!(
+            !s.art_path(StoreKind::Scored, ContentHash(1, 0)).exists(),
+            "healing removes the entry"
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -620,6 +620,17 @@ impl Module {
     pub fn kernel(&self, name: &str) -> Option<&Kernel> {
         self.kernels.iter().find(|k| k.name == name)
     }
+
+    /// Wrap one kernel in a minimal module (the printer needs the
+    /// module-level directives).
+    pub fn single(kernel: Kernel) -> Module {
+        Module {
+            version: (7, 6),
+            target: "sm_70".to_string(),
+            address_size: 64,
+            kernels: vec![kernel],
+        }
+    }
 }
 
 #[cfg(test)]

@@ -657,9 +657,8 @@ mod tests {
         assert!(r.dce_stmts > 0, "the staging address chain must die");
         assert!(k.shared.is_empty(), "sdata window must be pruned");
         // still a valid, reparsable kernel
-        let text = crate::ptx::printer::print_module(&crate::ptx::ast::Module {
-            kernels: vec![k.clone()],
-        });
+        let text =
+            crate::ptx::printer::print_module(&crate::ptx::ast::Module::single(k.clone()));
         parse(&text).expect("eliminated kernel reparses");
         validate_bit_exact(&w, &k);
     }

@@ -1,0 +1,379 @@
+//! Minimal JSON value, parser, and renderer — the wire format of the
+//! `serve` mode's JSON-lines protocol (`pipeline/serve.rs`).
+//!
+//! Same philosophy as [`crate::util::codec`]: the crate is zero-dep, so the
+//! codec is hand-rolled, and the parser is *total* — any byte sequence
+//! yields `Some(Json)` or `None`, never a panic, and nesting depth is
+//! bounded so an adversarial request line cannot blow the stack. The
+//! subset is deliberate: numbers are `f64` (every integer the protocol
+//! carries fits in 53 bits), no `\uXXXX` surrogate-pair pedantry beyond
+//! BMP decoding, and object keys keep insertion order (responses render
+//! deterministically, which the tests and `BENCH_8.json` rely on).
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+/// Nesting deeper than this is refused, not recursed into.
+const MAX_DEPTH: usize = 64;
+
+impl Json {
+    /// Parse one JSON document; trailing non-whitespace makes it `None`.
+    pub fn parse(s: &str) -> Option<Json> {
+        let b = s.as_bytes();
+        let mut i = 0;
+        let v = parse_value(b, &mut i, 0)?;
+        skip_ws(b, &mut i);
+        (i == b.len()).then_some(v)
+    }
+
+    /// Render to a compact JSON string (keys in insertion order).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(n) => render_num(*n, out),
+            Json::Str(s) => render_str(s, out),
+            Json::Arr(xs) => {
+                out.push('[');
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(kvs) => {
+                out.push('{');
+                for (i, (k, v)) in kvs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    render_str(k, out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    // -- accessors ---------------------------------------------------------
+
+    /// Object field lookup (first match).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(kvs) => kvs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// Numbers that are exactly representable non-negative integers.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= 2f64.powi(53) => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(xs) => Some(xs),
+            _ => None,
+        }
+    }
+
+    // -- construction helpers ---------------------------------------------
+
+    pub fn obj(kvs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(kvs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    pub fn num(n: impl Into<f64>) -> Json {
+        Json::Num(n.into())
+    }
+}
+
+fn render_num(n: f64, out: &mut String) {
+    if !n.is_finite() {
+        out.push_str("null"); // JSON has no NaN/Inf
+    } else if n.fract() == 0.0 && n.abs() < 2f64.powi(53) {
+        out.push_str(&format!("{}", n as i64));
+    } else {
+        out.push_str(&format!("{n}"));
+    }
+}
+
+fn render_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn skip_ws(b: &[u8], i: &mut usize) {
+    while *i < b.len() && matches!(b[*i], b' ' | b'\t' | b'\n' | b'\r') {
+        *i += 1;
+    }
+}
+
+fn eat(b: &[u8], i: &mut usize, lit: &[u8]) -> Option<()> {
+    if b.len() - *i >= lit.len() && &b[*i..*i + lit.len()] == lit {
+        *i += lit.len();
+        Some(())
+    } else {
+        None
+    }
+}
+
+fn parse_value(b: &[u8], i: &mut usize, depth: usize) -> Option<Json> {
+    if depth > MAX_DEPTH {
+        return None;
+    }
+    skip_ws(b, i);
+    match *b.get(*i)? {
+        b'n' => eat(b, i, b"null").map(|_| Json::Null),
+        b't' => eat(b, i, b"true").map(|_| Json::Bool(true)),
+        b'f' => eat(b, i, b"false").map(|_| Json::Bool(false)),
+        b'"' => parse_string(b, i).map(Json::Str),
+        b'[' => {
+            *i += 1;
+            let mut xs = Vec::new();
+            skip_ws(b, i);
+            if b.get(*i) == Some(&b']') {
+                *i += 1;
+                return Some(Json::Arr(xs));
+            }
+            loop {
+                xs.push(parse_value(b, i, depth + 1)?);
+                skip_ws(b, i);
+                match *b.get(*i)? {
+                    b',' => *i += 1,
+                    b']' => {
+                        *i += 1;
+                        return Some(Json::Arr(xs));
+                    }
+                    _ => return None,
+                }
+            }
+        }
+        b'{' => {
+            *i += 1;
+            let mut kvs = Vec::new();
+            skip_ws(b, i);
+            if b.get(*i) == Some(&b'}') {
+                *i += 1;
+                return Some(Json::Obj(kvs));
+            }
+            loop {
+                skip_ws(b, i);
+                if *b.get(*i)? != b'"' {
+                    return None;
+                }
+                let k = parse_string(b, i)?;
+                skip_ws(b, i);
+                if *b.get(*i)? != b':' {
+                    return None;
+                }
+                *i += 1;
+                kvs.push((k, parse_value(b, i, depth + 1)?));
+                skip_ws(b, i);
+                match *b.get(*i)? {
+                    b',' => *i += 1,
+                    b'}' => {
+                        *i += 1;
+                        return Some(Json::Obj(kvs));
+                    }
+                    _ => return None,
+                }
+            }
+        }
+        b'-' | b'0'..=b'9' => parse_number(b, i),
+        _ => None,
+    }
+}
+
+fn parse_string(b: &[u8], i: &mut usize) -> Option<String> {
+    // caller guarantees b[*i] == b'"'
+    *i += 1;
+    let mut out = String::new();
+    loop {
+        match *b.get(*i)? {
+            b'"' => {
+                *i += 1;
+                return Some(out);
+            }
+            b'\\' => {
+                *i += 1;
+                match *b.get(*i)? {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'u' => {
+                        let hex = b.get(*i + 1..*i + 5)?;
+                        let code =
+                            u32::from_str_radix(std::str::from_utf8(hex).ok()?, 16).ok()?;
+                        // BMP only; unpaired surrogates become U+FFFD
+                        out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                        *i += 4;
+                    }
+                    _ => return None,
+                }
+                *i += 1;
+            }
+            c if c < 0x20 => return None, // raw control char
+            _ => {
+                // copy one UTF-8 scalar; the input is a &str so bytes are valid
+                let start = *i;
+                *i += 1;
+                while *i < b.len() && b[*i] & 0xC0 == 0x80 {
+                    *i += 1;
+                }
+                out.push_str(std::str::from_utf8(&b[start..*i]).ok()?);
+            }
+        }
+    }
+}
+
+fn parse_number(b: &[u8], i: &mut usize) -> Option<Json> {
+    let start = *i;
+    if b.get(*i) == Some(&b'-') {
+        *i += 1;
+    }
+    while matches!(b.get(*i), Some(b'0'..=b'9')) {
+        *i += 1;
+    }
+    if b.get(*i) == Some(&b'.') {
+        *i += 1;
+        while matches!(b.get(*i), Some(b'0'..=b'9')) {
+            *i += 1;
+        }
+    }
+    if matches!(b.get(*i), Some(b'e' | b'E')) {
+        *i += 1;
+        if matches!(b.get(*i), Some(b'+' | b'-')) {
+            *i += 1;
+        }
+        while matches!(b.get(*i), Some(b'0'..=b'9')) {
+            *i += 1;
+        }
+    }
+    let s = std::str::from_utf8(&b[start..*i]).ok()?;
+    let n: f64 = s.parse().ok()?;
+    n.is_finite().then_some(Json::Num(n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrips_a_request_shaped_document() {
+        let src = r#"{"id":7,"cmd":"asm","ptx":"line1\nline2","block":32,"elim":true,"extra":[1,2.5,-3,null,false]}"#;
+        let v = Json::parse(src).unwrap();
+        assert_eq!(v.get("id").unwrap().as_u64(), Some(7));
+        assert_eq!(v.get("cmd").unwrap().as_str(), Some("asm"));
+        assert_eq!(v.get("ptx").unwrap().as_str(), Some("line1\nline2"));
+        assert_eq!(v.get("elim").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("extra").unwrap().as_arr().unwrap().len(), 5);
+        // render→parse is a fixpoint
+        assert_eq!(Json::parse(&v.render()), Some(v));
+    }
+
+    #[test]
+    fn escapes_survive_the_roundtrip() {
+        let s = "quote\" backslash\\ newline\n tab\t unicode\u{1F600} ctrl\u{1}";
+        let rendered = Json::str(s).render();
+        assert_eq!(Json::parse(&rendered).unwrap().as_str(), Some(s));
+        // \uXXXX decoding
+        assert_eq!(
+            Json::parse(r#""\u0041\u00e9""#).unwrap().as_str(),
+            Some("Aé")
+        );
+    }
+
+    #[test]
+    fn garbage_is_refused_not_panicked() {
+        for bad in [
+            "", "{", "}", "[1,", "{\"a\"}", "{\"a\":}", "tru", "nul", "01x",
+            "\"unterminated", "{\"a\":1}trailing", "[1 2]", "\"\\q\"", "nan",
+            "1e999", "--1", "\u{7}",
+        ] {
+            assert_eq!(Json::parse(bad), None, "input {bad:?} must be refused");
+        }
+    }
+
+    #[test]
+    fn depth_is_bounded() {
+        let deep = "[".repeat(1000) + &"]".repeat(1000);
+        assert_eq!(Json::parse(&deep), None, "1000 levels exceeds MAX_DEPTH");
+        let ok = "[".repeat(32) + &"]".repeat(32);
+        assert!(Json::parse(&ok).is_some());
+    }
+
+    #[test]
+    fn numbers_render_integers_without_exponent() {
+        assert_eq!(Json::num(123u32).render(), "123");
+        assert_eq!(Json::Num(1.5).render(), "1.5");
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+        assert_eq!(Json::parse("123").unwrap().as_u64(), Some(123));
+        assert_eq!(Json::parse("-1").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("1.25").unwrap().as_f64(), Some(1.25));
+    }
+}

@@ -5,10 +5,14 @@
 //! a shrunk case can be replayed with `Rng::new(seed)`.
 
 pub mod codec;
+pub mod json;
 pub mod rng;
+pub mod vfs;
 
 pub use codec::{Dec, Enc};
+pub use json::Json;
 pub use rng::Rng;
+pub use vfs::{FaultFs, FaultKind, FaultOp, FaultRule, RealFs, Vfs};
 
 /// FNV-1a hasher — far cheaper than SipHash for the short register-name
 /// keys on the simulator/emulator hot paths (no DoS concern: inputs are

@@ -1,0 +1,533 @@
+//! Filesystem seam for the artifact store — a small trait every
+//! [`crate::pipeline::DiskStore`] filesystem operation routes through,
+//! with a real implementation and a deterministic fault-injecting one.
+//!
+//! The disk layer's contract is "an accelerator, never a correctness
+//! dependency": any IO failure must degrade to recompute with bit-exact
+//! results, never a panic, never an accepted-corrupt artifact. That
+//! invariant is only worth stating if it can be *driven*: [`FaultFs`]
+//! wraps any [`Vfs`] and injects failures on a deterministic, seeded
+//! schedule — flat errors (a simulated `ENOSPC`), torn writes that
+//! persist a prefix and then report failure, and crash-point writes that
+//! persist a prefix and report *success* (the aftermath of a process
+//! dying between the data syscalls and the rename reaching disk). The
+//! fault-injection property suites (`tests/fault_store.rs`) run the whole
+//! pipeline through every class.
+//!
+//! Everything here is `std`-only and the trait is object-safe on purpose:
+//! the store holds an `Arc<dyn Vfs>` so tests swap the seam without a
+//! type parameter spreading through the pipeline.
+
+use crate::util::Rng;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::SystemTime;
+
+/// The slice of `std::fs::Metadata` the store consumes.
+#[derive(Debug, Clone, Copy)]
+pub struct FileMeta {
+    pub len: u64,
+    pub modified: SystemTime,
+}
+
+/// The filesystem operations the artifact store performs. Implementations
+/// must be thread-safe; paths are always absolute (the store roots them).
+pub trait Vfs: std::fmt::Debug + Send + Sync {
+    /// Whole-file read.
+    fn read(&self, p: &Path) -> io::Result<Vec<u8>>;
+    /// Whole-file write (create or truncate).
+    fn write(&self, p: &Path, bytes: &[u8]) -> io::Result<()>;
+    /// Exclusive create (`O_EXCL`): fails with `AlreadyExists` when the
+    /// path is taken — the primitive the cross-process lock is built on.
+    fn create_new(&self, p: &Path, bytes: &[u8]) -> io::Result<()>;
+    /// Create-or-truncate an empty file (the `.lru` touch markers — only
+    /// the mtime matters).
+    fn touch(&self, p: &Path) -> io::Result<()>;
+    /// Atomic rename within one directory.
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()>;
+    fn remove_file(&self, p: &Path) -> io::Result<()>;
+    fn create_dir_all(&self, p: &Path) -> io::Result<()>;
+    fn metadata(&self, p: &Path) -> io::Result<FileMeta>;
+    /// The *files* directly under `p` (directories are skipped), each
+    /// with its metadata. Entries whose metadata cannot be read are
+    /// silently dropped — a file deleted between the directory read and
+    /// the stat is indistinguishable from one that was never there.
+    fn read_dir(&self, p: &Path) -> io::Result<Vec<(PathBuf, FileMeta)>>;
+}
+
+// ---------------------------------------------------------------------------
+// Real implementation
+// ---------------------------------------------------------------------------
+
+/// `std::fs`-backed implementation — the production seam.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RealFs;
+
+impl Vfs for RealFs {
+    fn read(&self, p: &Path) -> io::Result<Vec<u8>> {
+        std::fs::read(p)
+    }
+
+    fn write(&self, p: &Path, bytes: &[u8]) -> io::Result<()> {
+        std::fs::write(p, bytes)
+    }
+
+    fn create_new(&self, p: &Path, bytes: &[u8]) -> io::Result<()> {
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new()
+            .write(true)
+            .create_new(true)
+            .open(p)?;
+        f.write_all(bytes)
+    }
+
+    fn touch(&self, p: &Path) -> io::Result<()> {
+        std::fs::File::create(p).map(|_| ())
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
+        std::fs::rename(from, to)
+    }
+
+    fn remove_file(&self, p: &Path) -> io::Result<()> {
+        std::fs::remove_file(p)
+    }
+
+    fn create_dir_all(&self, p: &Path) -> io::Result<()> {
+        std::fs::create_dir_all(p)
+    }
+
+    fn metadata(&self, p: &Path) -> io::Result<FileMeta> {
+        let m = std::fs::metadata(p)?;
+        Ok(FileMeta {
+            len: m.len(),
+            modified: m.modified().unwrap_or(SystemTime::UNIX_EPOCH),
+        })
+    }
+
+    fn read_dir(&self, p: &Path) -> io::Result<Vec<(PathBuf, FileMeta)>> {
+        let mut out = Vec::new();
+        for e in std::fs::read_dir(p)?.flatten() {
+            let Ok(m) = e.metadata() else { continue };
+            if !m.is_file() {
+                continue;
+            }
+            out.push((
+                e.path(),
+                FileMeta {
+                    len: m.len(),
+                    modified: m.modified().unwrap_or(SystemTime::UNIX_EPOCH),
+                },
+            ));
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fault injection
+// ---------------------------------------------------------------------------
+
+/// Operation classes faults are scheduled against (one call counter per
+/// class, so "fail the 3rd rename" is independent of how many reads
+/// happened first).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultOp {
+    Read,
+    Write,
+    CreateNew,
+    Touch,
+    Rename,
+    Remove,
+    CreateDirAll,
+    Metadata,
+    ReadDir,
+}
+
+pub const FAULT_OPS: [FaultOp; 9] = [
+    FaultOp::Read,
+    FaultOp::Write,
+    FaultOp::CreateNew,
+    FaultOp::Touch,
+    FaultOp::Rename,
+    FaultOp::Remove,
+    FaultOp::CreateDirAll,
+    FaultOp::Metadata,
+    FaultOp::ReadDir,
+];
+
+impl FaultOp {
+    fn index(self) -> usize {
+        match self {
+            FaultOp::Read => 0,
+            FaultOp::Write => 1,
+            FaultOp::CreateNew => 2,
+            FaultOp::Touch => 3,
+            FaultOp::Rename => 4,
+            FaultOp::Remove => 5,
+            FaultOp::CreateDirAll => 6,
+            FaultOp::Metadata => 7,
+            FaultOp::ReadDir => 8,
+        }
+    }
+}
+
+/// What an injected fault does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Plain failure: the operation reports an error and (for writes)
+    /// leaves no bytes behind.
+    Error,
+    /// Simulated `ENOSPC`: like [`FaultKind::Error`] but with the
+    /// out-of-space message the logs would show in production.
+    Enospc,
+    /// Torn write: the first `K` bytes reach the file, then the call
+    /// reports failure (short write / interrupted syscall). Only
+    /// meaningful on `Write`/`CreateNew`; behaves like `Error` elsewhere.
+    Torn(usize),
+    /// Crash-point write: the first `K` bytes reach the file and the call
+    /// reports **success** — the aftermath of a crash (or a non-atomic
+    /// filesystem) between the data write and its durability. The caller
+    /// proceeds to rename a truncated file into place; the store's
+    /// checksums must catch it on the next load. Only meaningful on
+    /// `Write`/`CreateNew`; behaves like a silent no-op elsewhere.
+    Crash(usize),
+}
+
+/// One scheduled fault: fire on the `nth` call (0-based) of `op`'s class.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultRule {
+    pub op: FaultOp,
+    pub nth: u64,
+    pub kind: FaultKind,
+}
+
+#[derive(Debug)]
+struct FaultState {
+    rules: Vec<FaultRule>,
+    /// Deterministic random mode: every armed call faults with
+    /// probability `1/rate` under this seeded stream.
+    random: Option<(Rng, u64)>,
+    armed: bool,
+}
+
+/// A [`Vfs`] decorator that injects faults on a deterministic schedule —
+/// explicit [`FaultRule`]s, a seeded random mode, or both. Starts
+/// *disarmed* so the store under test can be constructed cleanly; call
+/// [`FaultFs::arm`] once the plan is set.
+#[derive(Debug)]
+pub struct FaultFs {
+    inner: std::sync::Arc<dyn Vfs>,
+    state: Mutex<FaultState>,
+    seen: [AtomicU64; FAULT_OPS.len()],
+    injected: AtomicU64,
+}
+
+impl FaultFs {
+    pub fn new(inner: std::sync::Arc<dyn Vfs>) -> std::sync::Arc<FaultFs> {
+        std::sync::Arc::new(FaultFs {
+            inner,
+            state: Mutex::new(FaultState {
+                rules: Vec::new(),
+                random: None,
+                armed: false,
+            }),
+            seen: Default::default(),
+            injected: AtomicU64::new(0),
+        })
+    }
+
+    /// Wrap the real filesystem.
+    pub fn real() -> std::sync::Arc<FaultFs> {
+        FaultFs::new(std::sync::Arc::new(RealFs))
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, FaultState> {
+        // a panicking pipeline thread must not wedge the seam
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Schedule explicit faults. Cumulative with earlier rules.
+    pub fn push_rules(&self, rules: &[FaultRule]) {
+        self.lock().rules.extend_from_slice(rules);
+    }
+
+    /// Enable the seeded random mode: while armed, every operation faults
+    /// with probability `1/rate`, with the fault kind drawn from the same
+    /// stream (deterministic for a given seed and call sequence).
+    pub fn randomize(&self, seed: u64, rate: u64) {
+        self.lock().random = Some((Rng::new(seed), rate.max(1)));
+    }
+
+    /// Arm or disarm the injector (counters keep running either way).
+    pub fn arm(&self, on: bool) {
+        self.lock().armed = on;
+    }
+
+    /// Total faults injected so far.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Calls seen for one op class.
+    pub fn seen(&self, op: FaultOp) -> u64 {
+        self.seen[op.index()].load(Ordering::Relaxed)
+    }
+
+    /// Decide whether the current call (op class, call index `n`) faults.
+    fn decide(&self, op: FaultOp) -> Option<FaultKind> {
+        let n = self.seen[op.index()].fetch_add(1, Ordering::Relaxed);
+        let mut st = self.lock();
+        if !st.armed {
+            return None;
+        }
+        if let Some(i) = st
+            .rules
+            .iter()
+            .position(|r| r.op == op && r.nth == n)
+        {
+            let kind = st.rules.remove(i).kind;
+            drop(st);
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            return Some(kind);
+        }
+        if let Some((rng, rate)) = &mut st.random {
+            if rng.below(*rate) == 0 {
+                let kind = match rng.below(4) {
+                    0 => FaultKind::Error,
+                    1 => FaultKind::Enospc,
+                    2 => FaultKind::Torn(rng.below(64) as usize),
+                    _ => FaultKind::Crash(rng.below(64) as usize),
+                };
+                drop(st);
+                self.injected.fetch_add(1, Ordering::Relaxed);
+                return Some(kind);
+            }
+        }
+        None
+    }
+
+    fn fail(kind: FaultKind) -> io::Error {
+        match kind {
+            FaultKind::Enospc => io::Error::new(
+                io::ErrorKind::Other,
+                "injected fault: no space left on device (ENOSPC)",
+            ),
+            _ => io::Error::new(io::ErrorKind::Other, "injected fault"),
+        }
+    }
+
+    /// Apply a fault to a write-shaped op: persist a prefix for
+    /// `Torn`/`Crash`, then report failure (or fake success for `Crash`).
+    fn faulted_write(
+        &self,
+        p: &Path,
+        bytes: &[u8],
+        kind: FaultKind,
+        exclusive: bool,
+    ) -> io::Result<()> {
+        match kind {
+            FaultKind::Error | FaultKind::Enospc => Err(Self::fail(kind)),
+            FaultKind::Torn(k) | FaultKind::Crash(k) => {
+                let k = k.min(bytes.len());
+                let res = if exclusive {
+                    self.inner.create_new(p, &bytes[..k])
+                } else {
+                    self.inner.write(p, &bytes[..k])
+                };
+                match kind {
+                    FaultKind::Crash(_) => res, // partial bytes, reported OK
+                    _ => res.and(Err(Self::fail(kind))),
+                }
+            }
+        }
+    }
+}
+
+impl Vfs for FaultFs {
+    fn read(&self, p: &Path) -> io::Result<Vec<u8>> {
+        match self.decide(FaultOp::Read) {
+            Some(k) => Err(Self::fail(k)),
+            None => self.inner.read(p),
+        }
+    }
+
+    fn write(&self, p: &Path, bytes: &[u8]) -> io::Result<()> {
+        match self.decide(FaultOp::Write) {
+            Some(k) => self.faulted_write(p, bytes, k, false),
+            None => self.inner.write(p, bytes),
+        }
+    }
+
+    fn create_new(&self, p: &Path, bytes: &[u8]) -> io::Result<()> {
+        match self.decide(FaultOp::CreateNew) {
+            Some(k) => self.faulted_write(p, bytes, k, true),
+            None => self.inner.create_new(p, bytes),
+        }
+    }
+
+    fn touch(&self, p: &Path) -> io::Result<()> {
+        match self.decide(FaultOp::Touch) {
+            Some(k) => Err(Self::fail(k)),
+            None => self.inner.touch(p),
+        }
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
+        match self.decide(FaultOp::Rename) {
+            Some(k) => Err(Self::fail(k)),
+            None => self.inner.rename(from, to),
+        }
+    }
+
+    fn remove_file(&self, p: &Path) -> io::Result<()> {
+        match self.decide(FaultOp::Remove) {
+            Some(k) => Err(Self::fail(k)),
+            None => self.inner.remove_file(p),
+        }
+    }
+
+    fn create_dir_all(&self, p: &Path) -> io::Result<()> {
+        match self.decide(FaultOp::CreateDirAll) {
+            Some(k) => Err(Self::fail(k)),
+            None => self.inner.create_dir_all(p),
+        }
+    }
+
+    fn metadata(&self, p: &Path) -> io::Result<FileMeta> {
+        match self.decide(FaultOp::Metadata) {
+            Some(k) => Err(Self::fail(k)),
+            None => self.inner.metadata(p),
+        }
+    }
+
+    fn read_dir(&self, p: &Path) -> io::Result<Vec<(PathBuf, FileMeta)>> {
+        match self.decide(FaultOp::ReadDir) {
+            Some(k) => Err(Self::fail(k)),
+            None => self.inner.read_dir(p),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ptxasw-vfs-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn realfs_roundtrip_and_listing() {
+        let d = tmp("real");
+        let fs = RealFs;
+        let f = d.join("a.bin");
+        fs.write(&f, b"hello").unwrap();
+        assert_eq!(fs.read(&f).unwrap(), b"hello");
+        assert_eq!(fs.metadata(&f).unwrap().len, 5);
+        // subdirectories are not listed as files
+        fs.create_dir_all(&d.join("sub")).unwrap();
+        let listed = fs.read_dir(&d).unwrap();
+        assert_eq!(listed.len(), 1);
+        assert_eq!(listed[0].0, f);
+        // exclusive create refuses an existing path
+        assert_eq!(
+            fs.create_new(&f, b"x").unwrap_err().kind(),
+            io::ErrorKind::AlreadyExists
+        );
+        fs.rename(&f, &d.join("b.bin")).unwrap();
+        assert!(fs.read(&f).is_err());
+        fs.remove_file(&d.join("b.bin")).unwrap();
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn fault_rules_fire_on_the_nth_call_only() {
+        let d = tmp("nth");
+        let fs = FaultFs::real();
+        fs.push_rules(&[FaultRule {
+            op: FaultOp::Write,
+            nth: 1,
+            kind: FaultKind::Enospc,
+        }]);
+        fs.arm(true);
+        let f = d.join("x");
+        fs.write(&f, b"first").unwrap(); // call 0: clean
+        let err = fs.write(&f, b"second").unwrap_err(); // call 1: faulted
+        assert!(err.to_string().contains("ENOSPC"));
+        fs.write(&f, b"third").unwrap(); // rule is one-shot
+        assert_eq!(fs.injected(), 1);
+        assert_eq!(fs.seen(FaultOp::Write), 3);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn torn_write_persists_prefix_and_reports_failure() {
+        let d = tmp("torn");
+        let fs = FaultFs::real();
+        fs.push_rules(&[FaultRule {
+            op: FaultOp::Write,
+            nth: 0,
+            kind: FaultKind::Torn(3),
+        }]);
+        fs.arm(true);
+        let f = d.join("x");
+        assert!(fs.write(&f, b"payload").is_err());
+        assert_eq!(std::fs::read(&f).unwrap(), b"pay", "prefix must persist");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn crash_write_persists_prefix_and_reports_success() {
+        let d = tmp("crash");
+        let fs = FaultFs::real();
+        fs.push_rules(&[FaultRule {
+            op: FaultOp::Write,
+            nth: 0,
+            kind: FaultKind::Crash(4),
+        }]);
+        fs.arm(true);
+        let f = d.join("x");
+        fs.write(&f, b"payload").unwrap(); // lies about success
+        assert_eq!(std::fs::read(&f).unwrap(), b"payl", "truncated file left behind");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn disarmed_injector_is_transparent_and_random_mode_is_deterministic() {
+        let d = tmp("rand");
+        let fs = FaultFs::real();
+        fs.randomize(0x5eed, 3);
+        let f = d.join("x");
+        // disarmed: no faults regardless of the schedule
+        for _ in 0..16 {
+            fs.write(&f, b"ok").unwrap();
+        }
+        assert_eq!(fs.injected(), 0);
+
+        // armed: the same seed and call sequence faults identically
+        let run = |seed: u64| {
+            let fs = FaultFs::real();
+            fs.randomize(seed, 3);
+            fs.arm(true);
+            let mut pattern = Vec::new();
+            for i in 0..64 {
+                let p = d.join(format!("r{i}"));
+                pattern.push(fs.write(&p, b"abcdefgh").is_ok());
+            }
+            pattern
+        };
+        assert_eq!(run(7), run(7), "same seed, same fault schedule");
+        assert!(
+            run(7).iter().any(|ok| !ok),
+            "rate 3 over 64 calls must fault at least once"
+        );
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

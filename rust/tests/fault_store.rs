@@ -1,0 +1,258 @@
+//! Fault-injection property suite for the disk store (ISSUE PR 8).
+//!
+//! Every filesystem operation the store performs is routed through the
+//! [`Vfs`] seam, so these tests drive the whole pipeline through every
+//! injected failure class — failed opens/reads/writes/renames/deletes,
+//! short (torn) writes, simulated ENOSPC, crash-point truncation — and
+//! assert the invariants the store guarantees:
+//!
+//! 1. any failure degrades to recompute with **bit-exact** results,
+//! 2. never a panic,
+//! 3. never a poisoned cache entry (a later load returns the stored
+//!    bytes exactly or nothing at all),
+//! 4. a subsequent no-fault run heals the directory.
+
+use ptxasw::coordinator::{run_suite_on, BenchResult, PipelineConfig, PipelineError};
+use ptxasw::pipeline::{DiskStore, KeyBuilder, Pipeline, StoreKind, STORE_KINDS};
+use ptxasw::ptx::ContentHash;
+use ptxasw::suite::{by_name, Benchmark};
+use ptxasw::util::{FaultFs, FaultKind, FaultOp, FaultRule, RealFs, Vfs};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("ptxasw-fault-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn key(n: u64) -> ContentHash {
+    KeyBuilder::new("fault-suite").u64(n).finish()
+}
+
+fn payload(n: u64, len: usize) -> Vec<u8> {
+    let mut rng = ptxasw::util::Rng::new(n.wrapping_mul(0x9E37_79B9) | 1);
+    (0..len).map(|_| rng.below(256) as u8).collect()
+}
+
+const FAULT_KINDS: [FaultKind; 6] = [
+    FaultKind::Error,
+    FaultKind::Enospc,
+    FaultKind::Torn(3),
+    FaultKind::Torn(21),
+    FaultKind::Crash(3),
+    FaultKind::Crash(21),
+];
+
+/// The exhaustive grid: for every store kind, every VFS operation class
+/// and every fault flavor, one injected fault mid-traffic must leave the
+/// store serving exact bytes or nothing — and a clean retry must fully
+/// recover.
+#[test]
+fn every_fault_class_degrades_to_exact_or_recompute_for_every_kind() {
+    let root = tmpdir("grid");
+    let mut case = 0u64;
+    for kind in STORE_KINDS {
+        for op in ptxasw::util::vfs::FAULT_OPS {
+            for fk in FAULT_KINDS {
+                case += 1;
+                let dir = root.join(format!("case-{case}"));
+                let fs = FaultFs::new(Arc::new(RealFs));
+                let vfs: Arc<dyn Vfs> = fs.clone();
+                let store = DiskStore::open_on(vfs, &dir, 1 << 20).unwrap();
+
+                // seed one clean entry, then inject exactly one fault
+                let (a, b) = (payload(case, 600), payload(case + 1000, 600));
+                store.store(kind, key(1), &a);
+                fs.push_rules(&[FaultRule { op, nth: 0, kind: fk }]);
+                fs.arm(true);
+
+                // traffic that exercises every op class at least once
+                store.store(kind, key(2), &b);
+                let l1 = store.load(kind, key(1));
+                let l2 = store.load(kind, key(2));
+                store.evict_to_limit();
+                assert!(
+                    l1.is_none() || l1.as_deref() == Some(a.as_slice()),
+                    "case {case} ({kind:?} {op:?} {fk:?}): load(1) returned wrong bytes"
+                );
+                assert!(
+                    l2.is_none() || l2.as_deref() == Some(b.as_slice()),
+                    "case {case} ({kind:?} {op:?} {fk:?}): load(2) returned wrong bytes"
+                );
+
+                // the fault is one-shot; a clean retry must fully recover
+                fs.arm(false);
+                store.store(kind, key(2), &b);
+                assert_eq!(
+                    store.load(kind, key(2)).as_deref(),
+                    Some(b.as_slice()),
+                    "case {case} ({kind:?} {op:?} {fk:?}): clean re-store must heal"
+                );
+            }
+        }
+    }
+    assert!(case > 0);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Crash-point truncation specifically: a write that *reports success*
+/// but persisted a prefix (the rename landed a truncated file) must be
+/// detected on load, discarded, and counted — never served.
+#[test]
+fn crash_truncated_artifacts_are_discarded_on_load_and_swept_heals() {
+    let dir = tmpdir("crash");
+    let fs = FaultFs::new(Arc::new(RealFs));
+    let vfs: Arc<dyn Vfs> = fs.clone();
+    let store = DiskStore::open_on(vfs, &dir, 1 << 20).unwrap();
+
+    let p = payload(7, 900);
+    for (i, k) in [3usize, 40, 200].iter().enumerate() {
+        let id = 10 + i as u64;
+        fs.push_rules(&[FaultRule {
+            op: FaultOp::Write,
+            nth: 0,
+            kind: FaultKind::Crash(*k),
+        }]);
+        fs.arm(true);
+        store.store(StoreKind::Scored, key(id), &p);
+        fs.arm(false);
+        assert_eq!(
+            store.load(StoreKind::Scored, key(id)),
+            None,
+            "crash at byte {k}: the truncated file must never be served"
+        );
+    }
+    assert!(store.snapshot().corrupt >= 3, "each truncation is counted");
+
+    // a clean rerun stores and serves normally over the same dir
+    store.store(StoreKind::Scored, key(10), &p);
+    assert_eq!(store.load(StoreKind::Scored, key(10)).as_deref(), Some(p.as_slice()));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// -- whole-pipeline property ------------------------------------------------
+
+fn benches() -> Vec<Benchmark> {
+    // one classic and one shared-memory benchmark: together their suite
+    // runs persist all six artifact kinds
+    ["vecadd", "tiledreduce"]
+        .iter()
+        .map(|n| by_name(n).unwrap())
+        .collect()
+}
+
+fn unwrap_all(results: Vec<Result<BenchResult, PipelineError>>) -> Vec<BenchResult> {
+    results
+        .into_iter()
+        .map(|r| r.unwrap_or_else(|e| panic!("benchmark failed under faults: {e}")))
+        .collect()
+}
+
+fn assert_same_results(a: &[BenchResult], b: &[BenchResult]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.name, y.name);
+        assert_eq!(x.detection.chosen, y.detection.chosen);
+        assert_eq!(x.baseline.valid, y.baseline.valid);
+        for ((xv, xo), (yv, yo)) in x.variants.iter().zip(&y.variants) {
+            assert_eq!(xv, yv);
+            assert_eq!(xo.valid, yo.valid, "{}: validity diverged", x.name);
+            for (xr, yr) in xo.reports.iter().zip(&yo.reports) {
+                assert_eq!(
+                    xr.effective_cycles.to_bits(),
+                    yr.effective_cycles.to_bits(),
+                    "{}: modelled cycles diverged under faults",
+                    x.name
+                );
+            }
+        }
+    }
+}
+
+/// The headline property: a full pipeline run under seeded random fault
+/// injection produces results bit-exact with a cache-less run, panics
+/// never, and the battered cache directory is healed by `verify(heal)` —
+/// afterwards a clean run over it agrees again and the store audits
+/// clean.
+#[test]
+fn randomized_fault_runs_are_bit_exact_and_the_dir_heals() {
+    let cfg = PipelineConfig {
+        threads: 1,
+        ..PipelineConfig::default()
+    };
+    let bs = benches();
+    let clean = unwrap_all(run_suite_on(&Pipeline::new(), &bs, &cfg));
+
+    for seed in [1u64, 7, 23] {
+        let dir = tmpdir(&format!("rand-{seed}"));
+        let fs = FaultFs::new(Arc::new(RealFs));
+        let vfs: Arc<dyn Vfs> = fs.clone();
+        // open clean (an injector firing during mkdir would just fail
+        // open, which is the CLI's warning path, not this property)
+        let store = DiskStore::open_on(vfs, &dir, 1 << 22).unwrap();
+        fs.randomize(seed, 6);
+        fs.arm(true);
+
+        let p = Pipeline::new().with_disk(store);
+        let faulted = unwrap_all(run_suite_on(&p, &bs, &cfg));
+        assert_same_results(&clean, &faulted);
+        assert!(
+            fs.injected() > 0,
+            "seed {seed}: the run must actually have seen faults (tune the rate)"
+        );
+        fs.arm(false);
+
+        // heal pass: every surviving artifact decodes or is removed
+        let store2 = DiskStore::open(&dir, 1 << 22).unwrap();
+        store2.verify(true);
+        let audit = store2.verify(false);
+        assert_eq!(
+            audit.bad, 0,
+            "seed {seed}: the healed dir must audit clean, found {:?}",
+            audit.bad_paths
+        );
+
+        // and a clean run over the healed dir agrees with the baseline
+        let p2 = Pipeline::new().with_disk(store2);
+        let healed = unwrap_all(run_suite_on(&p2, &bs, &cfg));
+        assert_same_results(&clean, &healed);
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// ENOSPC mid-run is survivable: every write fails, nothing persists,
+/// results still come out bit-exact (the store is an accelerator, not a
+/// dependency).
+#[test]
+fn enospc_on_every_write_still_computes_exact_results() {
+    let cfg = PipelineConfig {
+        threads: 1,
+        ..PipelineConfig::default()
+    };
+    let bs = benches();
+    let clean = unwrap_all(run_suite_on(&Pipeline::new(), &bs, &cfg));
+
+    let dir = tmpdir("enospc");
+    let fs = FaultFs::new(Arc::new(RealFs));
+    let vfs: Arc<dyn Vfs> = fs.clone();
+    let store = DiskStore::open_on(vfs, &dir, 1 << 22).unwrap();
+    // exhaust the "disk" for the whole run: every write from now on fails
+    let rules: Vec<FaultRule> = (0..10_000)
+        .map(|n| FaultRule {
+            op: FaultOp::Write,
+            nth: n,
+            kind: FaultKind::Enospc,
+        })
+        .collect();
+    fs.push_rules(&rules);
+    fs.arm(true);
+    let p = Pipeline::new().with_disk(store);
+    let out = unwrap_all(run_suite_on(&p, &bs, &cfg));
+    assert_same_results(&clean, &out);
+    assert!(fs.injected() > 0, "the run writes artifacts, so faults must fire");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

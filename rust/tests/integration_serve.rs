@@ -1,0 +1,209 @@
+//! End-to-end `serve` mode: a poisoned batch (parse errors, malformed
+//! JSON, injected panics, flow blowups) degrades per-request while every
+//! healthy kernel's rewritten PTX stays bit-exact with a direct pipeline
+//! run — warm or cold, with or without a shared disk store.
+
+use ptxasw::pipeline::{DiskStore, Pipeline, ServeOpts, ServeSession, DEFAULT_MAX_BYTES};
+use ptxasw::ptx::{parse, print_module};
+use ptxasw::shuffle::{DetectOpts, ElimOpts, Variant};
+use ptxasw::util::Json;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const STENCIL: &str = r#"
+.version 7.6
+.target sm_70
+.address_size 64
+.visible .entry stencil3(.param .u64 out, .param .u64 a){
+.reg .b32 %r<6>; .reg .b64 %rd<8>; .reg .f32 %f<6>;
+ld.param.u64 %rd1, [out];
+ld.param.u64 %rd2, [a];
+cvta.to.global.u64 %rd3, %rd2;
+cvta.to.global.u64 %rd4, %rd1;
+mov.u32 %r4, %tid.x;
+mul.wide.s32 %rd5, %r4, 4;
+add.s64 %rd6, %rd3, %rd5;
+ld.global.nc.f32 %f1, [%rd6];
+ld.global.nc.f32 %f2, [%rd6+4];
+ld.global.nc.f32 %f3, [%rd6+8];
+add.f32 %f4, %f1, %f2;
+add.f32 %f5, %f4, %f3;
+add.s64 %rd7, %rd4, %rd5;
+st.global.f32 [%rd7], %f5;
+ret;
+}
+"#;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("ptxasw-serve-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// What `ptxasw asm` (defaults) would print for `src` — the serial
+/// ground truth the served responses must match byte-for-byte.
+fn expected_asm(src: &str) -> String {
+    let p = Pipeline::new();
+    let mut module = parse(src).unwrap();
+    let opts = DetectOpts {
+        max_abs_delta: 31,
+        ..DetectOpts::default()
+    };
+    let elim = ElimOpts {
+        enabled: true,
+        block: 32,
+    };
+    for k in module.kernels.iter_mut() {
+        let parsed = p.intake(k.clone());
+        let s = p
+            .synthesized_hashed(&parsed.kernel, parsed.hash, opts, Variant::Full, elim)
+            .unwrap();
+        *k = (*s.kernel).clone();
+    }
+    print_module(&module)
+}
+
+fn run_session(session: &mut ServeSession, lines: &[String]) -> Vec<Json> {
+    let input = lines.join("\n");
+    let mut out = Vec::new();
+    session
+        .serve(std::io::Cursor::new(input), &mut out)
+        .expect("in-memory serve IO cannot fail");
+    String::from_utf8(out)
+        .unwrap()
+        .lines()
+        .map(|l| Json::parse(l).expect("response lines are valid JSON"))
+        .collect()
+}
+
+fn asm_req(id: u64, ptx: &str) -> String {
+    Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("cmd", Json::str("asm")),
+        ("ptx", Json::str(ptx)),
+    ])
+    .render()
+}
+
+fn err_kind(r: &Json) -> Option<&str> {
+    r.get("error")?.get("kind")?.as_str()
+}
+
+/// The acceptance batch: adversarial requests interleaved with healthy
+/// ones; every healthy result bit-exact with the serial ground truth,
+/// every failure a typed record, the session alive throughout.
+#[test]
+fn poisoned_batch_serves_healthy_kernels_bit_exactly() {
+    let expected = expected_asm(STENCIL);
+    let mut s = ServeSession::new(
+        ServeOpts {
+            allow_test_faults: true,
+            ..ServeOpts::default()
+        },
+        None,
+    );
+    let lines = vec![
+        asm_req(1, STENCIL),
+        r#"{"id":2,"cmd":"asm","ptx":"garbage that is not ptx"}"#.to_string(),
+        r#"{"id":3,"cmd":"__panic"}"#.to_string(),
+        "{not json".to_string(),
+        r#"{"id":5,"cmd":"asm","ptx":".version 7.6","deadline_ms":0}"#.to_string(),
+        r#"{"id":6,"cmd":"nonsense"}"#.to_string(),
+        asm_req(7, STENCIL),
+    ];
+    let rs = run_session(&mut s, &lines);
+    assert_eq!(rs.len(), 7, "one response line per request line");
+
+    assert_eq!(rs[0].get("ptx").unwrap().as_str(), Some(expected.as_str()));
+    assert_eq!(err_kind(&rs[1]), Some("ParseError"));
+    assert_eq!(err_kind(&rs[2]), Some("Panicked"));
+    assert_eq!(err_kind(&rs[3]), Some("BadRequest"));
+    assert_eq!(err_kind(&rs[4]), Some("Timeout"));
+    assert_eq!(err_kind(&rs[5]), Some("BadRequest"));
+    // after a panic (pipelines rebuilt) the same kernel still comes out
+    // bit-identical
+    assert_eq!(rs[6].get("ptx").unwrap().as_str(), Some(expected.as_str()));
+
+    let stats = s.stats();
+    assert_eq!(stats.requests, 7);
+    assert_eq!(stats.ok, 2);
+    assert_eq!(stats.errors, 5);
+    assert_eq!(stats.panicked, 1);
+    // ids echo verbatim, including across error records
+    assert_eq!(rs[4].get("id").unwrap().as_u64(), Some(5));
+    assert_eq!(rs[3].get("id"), Some(&Json::Null));
+}
+
+/// Serve sessions sharing a cache directory behave like one process: the
+/// second session's identical request is served from disk (zero
+/// emulations) and bit-exact.
+#[test]
+fn serve_sessions_share_the_disk_store() {
+    let dir = tmpdir("warm");
+    let expected = expected_asm(STENCIL);
+
+    let store = Arc::new(DiskStore::open(&dir, DEFAULT_MAX_BYTES).unwrap());
+    let mut s1 = ServeSession::new(ServeOpts::default(), Some(store));
+    let r1 = run_session(&mut s1, &[asm_req(1, STENCIL)]);
+    assert_eq!(r1[0].get("ptx").unwrap().as_str(), Some(expected.as_str()));
+    assert!(
+        s1.pipeline().stats().disk.stores > 0,
+        "the cold session must persist artifacts"
+    );
+
+    // a fresh session over a fresh store handle — the stand-in for a
+    // second process on the same cache dir
+    let store2 = Arc::new(DiskStore::open(&dir, DEFAULT_MAX_BYTES).unwrap());
+    let mut s2 = ServeSession::new(ServeOpts::default(), Some(store2));
+    let r2 = run_session(&mut s2, &[asm_req(1, STENCIL)]);
+    assert_eq!(r2[0].get("ptx").unwrap().as_str(), Some(expected.as_str()));
+    let stats = s2.pipeline().stats();
+    assert!(stats.disk.hits > 0, "the warm session must hit the disk store");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The `bench` command runs a full suite benchmark (detect → synthesize →
+/// validate) on the persistent session and reports per-variant validity.
+#[test]
+fn bench_command_reports_variant_validity() {
+    let mut s = ServeSession::new(ServeOpts::default(), None);
+    let lines = vec![
+        r#"{"id":1,"cmd":"bench","bench":"vecadd"}"#.to_string(),
+        r#"{"id":2,"cmd":"bench","bench":"no-such-bench"}"#.to_string(),
+    ];
+    let rs = run_session(&mut s, &lines);
+    assert_eq!(rs[0].get("ok").unwrap().as_bool(), Some(true));
+    assert!(rs[0].get("shuffles").unwrap().as_u64().unwrap() >= 1);
+    let variants = rs[0].get("variants").unwrap().as_arr().unwrap();
+    let valid_of = |name: &str| {
+        variants
+            .iter()
+            .find(|v| v.get("variant").unwrap().as_str() == Some(name))
+            .unwrap()
+            .get("valid")
+            .unwrap()
+            .as_bool()
+    };
+    assert_eq!(valid_of("full"), Some(true), "paper variant validates");
+    assert_eq!(valid_of("noload"), Some(false), "ablation must fail validation");
+    assert_eq!(err_kind(&rs[1]), Some("BadRequest"));
+}
+
+/// Shared-memory benchmarks (cooperative scheduler, bar.sync) are
+/// addressable through serve too — the session multiplexes both kernel
+/// families onto one warm pipeline.
+#[test]
+fn bench_command_covers_shared_memory_kernels() {
+    let mut s = ServeSession::new(ServeOpts::default(), None);
+    let rs = run_session(
+        &mut s,
+        &[r#"{"id":1,"cmd":"bench","bench":"tiledreduce"}"#.to_string()],
+    );
+    assert_eq!(
+        rs[0].get("ok").unwrap().as_bool(),
+        Some(true),
+        "got {:?}",
+        rs[0]
+    );
+}

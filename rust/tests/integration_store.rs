@@ -288,6 +288,144 @@ fn eviction_keeps_store_within_bound() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Cross-process coordination (stood in by independent `DiskStore`
+/// handles over one directory): two writers — racing each other on a
+/// shared key range — and two evictors running concurrently must never
+/// panic, never serve wrong bytes, and leave a coherent store a final
+/// eviction pass brings under its bound.
+#[test]
+fn concurrent_writers_and_evictors_keep_the_store_coherent() {
+    use ptxasw::pipeline::{KeyBuilder, StoreKind};
+    let dir = tmpdir("mp");
+    let bound: u64 = 48 * 1024;
+    let payload = |id: u64| -> Vec<u8> {
+        let mut rng = ptxasw::util::Rng::new(id | 1);
+        (0..1024).map(|_| rng.below(256) as u8).collect()
+    };
+    let key = |id: u64| KeyBuilder::new("mp-test").u64(id).finish();
+    // seed the dir so every later open scans a non-empty store
+    DiskStore::open(&dir, bound)
+        .unwrap()
+        .store(StoreKind::Scored, key(0), &payload(0));
+
+    std::thread::scope(|s| {
+        // two writers: distinct ranges plus a shared racing range whose
+        // payloads are identical by construction (any winner is right)
+        for w in 0..2u64 {
+            let dir = dir.clone();
+            s.spawn(move || {
+                let store = DiskStore::open(&dir, bound).unwrap();
+                for i in 0..120u64 {
+                    let id = if i % 3 == 0 { 5000 + i } else { w * 10_000 + i };
+                    store.store(StoreKind::Scored, key(id), &payload(id));
+                    // read-back of an id some other actor may be evicting
+                    if let Some(bytes) = store.load(StoreKind::Scored, key(5000 + i - i % 3)) {
+                        assert_eq!(bytes, payload(5000 + i - i % 3), "poisoned read");
+                    }
+                }
+            });
+        }
+        // two evictors: fresh handles (their open-time scan seeds the
+        // resident counter) aggressively evicting while writers run
+        for _ in 0..2 {
+            let dir = dir.clone();
+            s.spawn(move || {
+                for _ in 0..15 {
+                    let store = DiskStore::open(&dir, bound).unwrap();
+                    store.evict_to_limit();
+                }
+            });
+        }
+    });
+
+    // the dust settles: one more handle, one more eviction pass
+    let store = DiskStore::open(&dir, bound).unwrap();
+    store.evict_to_limit();
+    let total: u64 = art_files(&dir)
+        .iter()
+        .map(|f| std::fs::metadata(f).map(|m| m.len()).unwrap_or(0))
+        .sum();
+    assert!(
+        total <= bound,
+        "store incoherent after concurrent traffic: {total} resident bytes > {bound}"
+    );
+    let snap = store.snapshot();
+    assert!(
+        snap.generation >= 1,
+        "evictions must have published manifest generations"
+    );
+    // every surviving artifact still round-trips exactly
+    for id in (0..120u64).flat_map(|i| [5000 + i, i, 10_000 + i]) {
+        if let Some(bytes) = store.load(StoreKind::Scored, key(id)) {
+            assert_eq!(bytes, payload(id), "artifact {id} corrupted by the race");
+        }
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Eviction-scan hardening: corrupt/truncated `.lru` markers, orphaned
+/// markers whose artifact vanished, and stray files in the kind dirs must
+/// all be tolerated — eviction still converges under the bound and loads
+/// stay exact-or-recompute.
+#[test]
+fn eviction_tolerates_mangled_lru_markers_and_vanished_files() {
+    use ptxasw::pipeline::{KeyBuilder, StoreKind};
+    let dir = tmpdir("lru");
+    let bound: u64 = 8 * 1024;
+    let payload = |id: u64| -> Vec<u8> {
+        let mut rng = ptxasw::util::Rng::new(id | 1);
+        (0..700).map(|_| rng.below(256) as u8).collect()
+    };
+    let key = |id: u64| KeyBuilder::new("lru-test").u64(id).finish();
+
+    let store = DiskStore::open(&dir, bound).unwrap();
+    for id in 0..24u64 {
+        store.store(StoreKind::Scored, key(id), &payload(id));
+    }
+
+    // mangle the bookkeeping: garbage in every .lru marker, one artifact
+    // deleted out from under its marker, a stray unparseable file
+    let mut lru_files = Vec::new();
+    let mut stack = vec![dir.clone()];
+    while let Some(d) = stack.pop() {
+        let Ok(rd) = std::fs::read_dir(&d) else { continue };
+        for e in rd.flatten() {
+            let p = e.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().and_then(|x| x.to_str()) == Some("lru") {
+                lru_files.push(p);
+            }
+        }
+    }
+    assert!(!lru_files.is_empty(), "stores must have left touch markers");
+    for (i, f) in lru_files.iter().enumerate() {
+        std::fs::write(f, if i % 2 == 0 { &b"garbage"[..] } else { &b""[..] }).unwrap();
+    }
+    if let Some(orphan) = art_files(&dir).first() {
+        std::fs::remove_file(orphan).unwrap();
+    }
+    std::fs::write(dir.join("v7").join("scored").join("stray.bin"), b"noise").unwrap();
+
+    // a fresh handle over the battered dir: open scans, eviction
+    // converges, loads stay exact-or-recompute
+    let store2 = DiskStore::open(&dir, bound).unwrap();
+    store2.evict_to_limit();
+    let total: u64 = art_files(&dir)
+        .iter()
+        .map(|f| std::fs::metadata(f).map(|m| m.len()).unwrap_or(0))
+        .sum();
+    assert!(total <= bound, "{total} resident bytes > bound {bound}");
+    for id in 0..24u64 {
+        if let Some(bytes) = store2.load(StoreKind::Scored, key(id)) {
+            assert_eq!(bytes, payload(id), "artifact {id} served wrong bytes");
+        }
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// CI smoke test: when `RUST_PALLAS_CACHE_DIR` points at a cache
 /// directory, run the suite against it. A first (cold) invocation seeds
 /// the store; a second invocation of this same test — CI's second
