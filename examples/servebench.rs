@@ -1,8 +1,9 @@
-//! `servebench` — serve-mode throughput + poisoned-batch probe (BENCH_8).
+//! `servebench` — serve-mode throughput + poisoned-batch + tracing-cost
+//! probe (BENCH_9).
 //!
 //! Drives an in-process [`ServeSession`] (the same object `ptxasw serve`
 //! wraps around stdin or a socket) through the full suite as JSON-lines
-//! request batches and records `BENCH_8.json`:
+//! request batches and records `BENCH_9.json`:
 //!
 //! 1. **cold vs warm throughput** — the batch against a fresh cache dir,
 //!    then again from a fresh session over the warmed dir (the stand-in
@@ -12,11 +13,17 @@
 //!    unless every healthy kernel's rewritten PTX is bit-exact with a
 //!    clean serial run and every pathological request produced its typed
 //!    error record (`ParseError` / `EmuError` / `Panicked`) — one bad
-//!    request must cost exactly one response, never the session.
+//!    request must cost exactly one response, never the session;
+//! 3. **tracing cost** — the disabled-tracer cost per span site is
+//!    measured directly and projected onto a warm request's span count;
+//!    the run **hard-fails** if that overhead exceeds 2% of a warm
+//!    request, and if a `"trace": true` request is not bit-exact with
+//!    its untraced twin.
 //!
 //!     cargo run --release --example servebench -- [--out FILE]
 
 use ptxasw::cli::Args;
+use ptxasw::obs::Tracer;
 use ptxasw::pipeline::{DiskStore, Pipeline, ServeOpts, ServeSession, DEFAULT_MAX_BYTES};
 use ptxasw::ptx::{ast::Module, print_module};
 use ptxasw::shuffle::{DetectOpts, ElimOpts, Variant};
@@ -95,9 +102,29 @@ fn expected_asm(src: &str) -> String {
     print_module(&module)
 }
 
+/// Best-of-3 cost of one *disabled* span site: `begin()` + `span()` with
+/// a lazy arg thunk, which the contract says must cost one relaxed atomic
+/// load each and never evaluate the thunk.
+fn disabled_ns_per_span() -> f64 {
+    let t = Tracer::disabled();
+    const ITERS: u64 = 2_000_000;
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        for i in 0..ITERS {
+            let s = t.begin();
+            std::hint::black_box(i);
+            t.span("bench", "bench.noop", s, Vec::new);
+        }
+        best = best.min(t0.elapsed().as_nanos() as f64 / ITERS as f64);
+    }
+    assert!(t.is_empty(), "a disabled tracer must record nothing");
+    best
+}
+
 fn main() {
     let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
-    let out_path = args.opt("out").unwrap_or("BENCH_8.json").to_string();
+    let out_path = args.opt("out").unwrap_or("BENCH_9.json").to_string();
 
     let dir = std::env::temp_dir().join(format!("ptxasw-servebench-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
@@ -187,6 +214,42 @@ fn main() {
     assert_eq!(pstats.errors, 3);
     assert_eq!(pstats.ok, 4);
 
+    // -- 3. tracing cost ----------------------------------------------------
+    // (a) a traced request over the warmed dir is bit-exact with its
+    // untraced twin and reports its span events + trace id
+    let store4 = Arc::new(DiskStore::open(&dir, DEFAULT_MAX_BYTES).unwrap());
+    let mut traced = ServeSession::new(ServeOpts::default(), Some(store4));
+    let treq = Json::obj(vec![
+        ("id", Json::num(0.0)),
+        ("cmd", Json::str("asm")),
+        ("ptx", Json::str(sources[0].as_str())),
+        ("trace", Json::Bool(true)),
+    ])
+    .render();
+    let trs = run_batch(&mut traced, &[treq]);
+    assert_eq!(
+        trs[0].get("ptx").and_then(|p| p.as_str()),
+        warm_rs[0].get("ptx").and_then(|p| p.as_str()),
+        "a traced request must be bit-exact with its untraced twin"
+    );
+    let spans_per_req = trs[0]
+        .get("trace")
+        .and_then(|t| t.as_arr())
+        .map(|a| a.len())
+        .expect("traced response carries its span events");
+    assert!(spans_per_req >= 1, "at least the serve.request span");
+
+    // (b) the disabled-tracer overhead projected onto a warm request must
+    // stay under 2% — the hard regression gate for the span plumbing
+    let disabled_ns = disabled_ns_per_span();
+    let warm_req_ns = warm_s.max(1e-9) * 1e9 / batch.len() as f64;
+    let traced_overhead_pct = spans_per_req as f64 * disabled_ns / warm_req_ns * 100.0;
+    assert!(
+        traced_overhead_pct < 2.0,
+        "tracing-disabled overhead {traced_overhead_pct:.4}% of a warm request \
+         ({spans_per_req} spans x {disabled_ns:.1}ns vs {warm_req_ns:.0}ns) breaches the 2% gate"
+    );
+
     // -- report -------------------------------------------------------------
     let n = batch.len() as f64;
     let mut j = String::new();
@@ -205,19 +268,29 @@ fn main() {
     writeln!(j, "    \"panicked\": {},", pstats.panicked).unwrap();
     writeln!(j, "    \"widened\": {},", pstats.widened).unwrap();
     writeln!(j, "    \"healthy_bit_exact\": true").unwrap();
+    writeln!(j, "  }},").unwrap();
+    writeln!(j, "  \"tracing\": {{").unwrap();
+    writeln!(j, "    \"disabled_ns_per_span\": {disabled_ns:.3},").unwrap();
+    writeln!(j, "    \"spans_per_warm_request\": {spans_per_req},").unwrap();
+    writeln!(j, "    \"warm_request_ns\": {warm_req_ns:.0},").unwrap();
+    writeln!(j, "    \"traced_overhead_pct\": {traced_overhead_pct:.5},").unwrap();
+    writeln!(j, "    \"traced_matches_untraced\": true").unwrap();
     writeln!(j, "  }}").unwrap();
     writeln!(j, "}}").unwrap();
 
-    std::fs::write(&out_path, &j).expect("write BENCH_8.json");
+    std::fs::write(&out_path, &j).expect("write BENCH_9.json");
     eprintln!(
         "servebench: {} kernels — cold {:.3}s, warm {:.3}s ({} disk hits); \
-         poisoned batch: {} ok / {} typed errors, all healthy bit-exact -> {out_path}",
+         poisoned batch: {} ok / {} typed errors, all healthy bit-exact; \
+         tracing: {:.1}ns/span disabled, {:.4}% of a warm request -> {out_path}",
         batch.len(),
         cold_s,
         warm_s,
         warm_hits,
         pstats.ok,
         pstats.errors,
+        disabled_ns,
+        traced_overhead_pct,
     );
     let _ = std::fs::remove_dir_all(&dir);
 }

@@ -75,8 +75,47 @@ fn best_of<T>(repeat: usize, mut f: impl FnMut() -> T) -> (f64, T) {
     (best, out.unwrap())
 }
 
+/// The tracing contract's cost gate: a *disabled* tracer's span site is
+/// one relaxed atomic load (plus a dead `SpanStart`), so it must stay far
+/// cheaper than an enabled site that reads the clock twice and takes the
+/// ring lock. Run on every simbench invocation so an accidental always-on
+/// cost in the hot pipeline plumbing shows up as a hard benchmark failure.
+fn assert_disabled_tracer_is_free() {
+    use ptxasw::obs::Tracer;
+    const ITERS: u64 = 2_000_000;
+    let ns_per_span = |t: &Tracer| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            for i in 0..ITERS {
+                let s = t.begin();
+                std::hint::black_box(i);
+                t.span("bench", "bench.noop", s, Vec::new);
+            }
+            best = best.min(t0.elapsed().as_nanos() as f64 / ITERS as f64);
+        }
+        best
+    };
+    let off = Tracer::disabled();
+    let disabled_ns = ns_per_span(&off);
+    assert!(off.is_empty(), "a disabled tracer must record nothing");
+    let on = Tracer::with_capacity(1024);
+    let enabled_ns = ns_per_span(&on);
+    assert!(
+        disabled_ns < 250.0,
+        "disabled span site costs {disabled_ns:.1}ns (gate: 250ns)"
+    );
+    assert!(
+        disabled_ns * 4.0 < enabled_ns,
+        "disabled span site ({disabled_ns:.1}ns) must be far cheaper than \
+         an enabled one ({enabled_ns:.1}ns)"
+    );
+    eprintln!("simbench: tracer span site {disabled_ns:.1}ns disabled / {enabled_ns:.1}ns enabled");
+}
+
 fn main() {
     let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
+    assert_disabled_tracer_is_free();
     let family = args.opt("family").unwrap_or("table2").to_string();
     let (benches, bench_id, default_out) = match family.as_str() {
         "table2" => (suite::suite(), "BENCH_3", "BENCH_3.json"),

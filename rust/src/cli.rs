@@ -58,6 +58,7 @@ impl Args {
                 | "verify"
                 | "heal"
                 | "test-faults"
+                | "json"
         )
     }
 
@@ -168,6 +169,21 @@ mod tests {
         assert_eq!(b.opt_usize("block", 32).unwrap(), 32);
         assert!(b.flag("report"));
         assert_eq!(b.positional, vec!["in.ptx"]);
+    }
+
+    #[test]
+    fn json_is_a_bare_flag() {
+        // `metrics --json` must not swallow a following cache-dir path
+        let a = parse("metrics --json --cache-dir /tmp/x");
+        assert!(a.flag("json"));
+        assert_eq!(a.opt("cache-dir"), Some("/tmp/x"));
+    }
+
+    #[test]
+    fn trace_out_takes_a_value() {
+        let a = parse("suite --trace-out trace.json jacobi");
+        assert_eq!(a.opt("trace-out"), Some("trace.json"));
+        assert_eq!(a.positional, vec!["jacobi"]);
     }
 
     #[test]

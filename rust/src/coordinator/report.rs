@@ -205,6 +205,8 @@ pub fn pipeline_stats(s: &crate::pipeline::PipelineStats) -> String {
         )
         .unwrap();
     }
+    writeln!(out).unwrap();
+    out.push_str(&crate::pipeline::metrics_snapshot(s).render_table());
     out
 }
 

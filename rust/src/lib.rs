@@ -8,6 +8,7 @@
 pub mod cli;
 pub mod coordinator;
 pub mod emu;
+pub mod obs;
 pub mod perf;
 pub mod pipeline;
 pub mod ptx;

@@ -8,6 +8,8 @@
 //!   apps                       §8.5 application kernels (|N| ≤ 1)
 //!   serve                      long-running JSON-lines analysis daemon on a
 //!                              persistent pipeline (stdin or --socket)
+//!   metrics [--json]           the unified metrics registry (counters +
+//!                              latency histograms) as a table or JSON
 //!   store                      inspect / verify / heal the on-disk artifact
 //!                              store shared by every mode
 //!   artifacts [--run name]     list or execute AOT artifacts via PJRT
@@ -19,6 +21,7 @@
 
 use ptxasw::cli::Args;
 use ptxasw::coordinator::{report, run_suite_on, PipelineConfig};
+use ptxasw::obs::Tracer;
 use ptxasw::perf::by_name as arch_by_name;
 use ptxasw::pipeline::{DiskStore, Pipeline, ServeOpts, ServeSession};
 use ptxasw::ptx::{parse, print_module};
@@ -33,13 +36,15 @@ ptxasw — symbolic emulator + shuffle synthesis for NVIDIA PTX
 USAGE:
   ptxasw asm <in.ptx> [--out FILE] [--variant full|noload|nocorner|uniform]
              [--max-delta N] [--block N] [--no-elim] [--report] [--stats]
-             [cache flags]
+             [--trace-out FILE] [cache flags]
   ptxasw suite [bench...] [--shared] [--arch NAME] [--threads N]
              [--sim-threads N] [--max-delta N] [--no-elim] [--fig3 bench]
-             [--stats] [cache flags]
-  ptxasw apps [--threads N] [--sim-threads N] [--stats] [cache flags]
+             [--stats] [--trace-out FILE] [cache flags]
+  ptxasw apps [--threads N] [--sim-threads N] [--stats] [--trace-out FILE]
+             [cache flags]
   ptxasw serve [--socket PATH] [--deadline-ms N] [--sim-threads N]
-             [--test-faults] [--stats] [cache flags]
+             [--test-faults] [--stats] [--trace-out FILE] [cache flags]
+  ptxasw metrics [--json] [cache flags]
   ptxasw store [--verify] [--heal] [cache flags]
   ptxasw artifacts [--dir DIR] [--run NAME]
   ptxasw help
@@ -63,8 +68,15 @@ USAGE:
   --heal            with --verify: delete undecodable artifacts (they are
                     recomputed on demand — never served)
 
-  --stats           print pipeline cache hit rates (memory + disk) and
-                    per-stage wall time
+  --stats           print pipeline cache hit rates (memory + disk),
+                    per-stage wall time and the unified metrics table
+  --trace-out FILE  record structured spans for every pipeline stage, cache
+                    event, store op and elimination verdict, and write them
+                    as Chrome trace-event JSON (open in ui.perfetto.dev);
+                    tracing never changes results. In serve mode a request
+                    can instead ask per-request with `\"trace\": true`
+  --json            metrics: print the versioned MetricsSnapshot as JSON
+                    instead of the human table
   --shared          suite: also run the shared-memory/barrier benchmark
                     family (tiledreduce, sharedstencil) — kernels that
                     stage data through .shared and synchronize warps with
@@ -113,7 +125,7 @@ fn engine_of(s: Option<&str>) -> Result<(bool, bool), String> {
     })
 }
 
-fn open_store(args: &Args) -> Result<Option<Arc<DiskStore>>, String> {
+fn open_store(args: &Args, tracer: &Arc<Tracer>) -> Result<Option<Arc<DiskStore>>, String> {
     if args.flag("no-disk-cache") {
         return Ok(None);
     }
@@ -123,7 +135,10 @@ fn open_store(args: &Args) -> Result<Option<Arc<DiskStore>>, String> {
         None => return Ok(None),
     };
     match DiskStore::open_default(&dir) {
-        Ok(store) => Ok(Some(Arc::new(store))),
+        Ok(mut store) => {
+            store.set_tracer(tracer.clone());
+            Ok(Some(Arc::new(store)))
+        }
         Err(e) if explicit.is_some() => Err(format!("--cache-dir {}: {e}", dir.display())),
         Err(e) => {
             eprintln!(
@@ -135,13 +150,38 @@ fn open_store(args: &Args) -> Result<Option<Arc<DiskStore>>, String> {
     }
 }
 
-fn build_pipeline(args: &Args) -> Result<Pipeline, String> {
+/// The session span tracer: recording iff `--trace-out FILE` was given
+/// (the Chrome-format export is written there when the command finishes).
+fn make_tracer(args: &Args) -> Arc<Tracer> {
+    Arc::new(if args.opt("trace-out").is_some() {
+        Tracer::enabled()
+    } else {
+        Tracer::disabled()
+    })
+}
+
+/// Export the recorded spans as a Chrome trace-event file (`--trace-out`).
+fn write_trace(args: &Args, tracer: &Tracer) -> Result<(), String> {
+    let Some(path) = args.opt("trace-out") else {
+        return Ok(());
+    };
+    std::fs::write(path, tracer.export_chrome().render())
+        .map_err(|e| format!("--trace-out {path}: {e}"))?;
+    eprintln!(
+        "ptxasw: wrote {} trace event(s) to {path} (open in ui.perfetto.dev)",
+        tracer.len()
+    );
+    Ok(())
+}
+
+fn build_pipeline(args: &Args, tracer: &Arc<Tracer>) -> Result<Pipeline, String> {
     let (superblocks, vector) = engine_of(args.opt("engine"))?;
     let p = Pipeline::new()
         .with_sim_threads(args.opt_usize("sim-threads", 1)?)
         .with_detect_races(args.flag("detect-races"))
-        .with_engine(superblocks, vector);
-    match open_store(args)? {
+        .with_engine(superblocks, vector)
+        .with_tracer(tracer.clone());
+    match open_store(args, tracer)? {
         Some(store) => Ok(p.with_disk_shared(store)),
         None => Ok(p),
     }
@@ -160,6 +200,7 @@ fn main() {
         "suite" => cmd_suite(&args),
         "apps" => cmd_apps(&args),
         "serve" => cmd_serve(&args),
+        "metrics" => cmd_metrics(&args),
         "store" => cmd_store(&args),
         "artifacts" => cmd_artifacts(&args),
         "" | "help" => {
@@ -238,7 +279,8 @@ fn cmd_asm(args: &Args) -> Result<(), String> {
         block: block as u32,
     };
 
-    let p = build_pipeline(args)?;
+    let tracer = make_tracer(args);
+    let p = build_pipeline(args, &tracer)?;
     let mut total = 0;
     for k in module.kernels.iter_mut() {
         // identical kernels in one module share emulation via the cache
@@ -280,6 +322,7 @@ fn cmd_asm(args: &Args) -> Result<(), String> {
     if args.flag("stats") {
         eprintln!("{}", report::pipeline_stats(&p.stats()));
     }
+    write_trace(args, &tracer)?;
     Ok(())
 }
 
@@ -315,7 +358,8 @@ fn cmd_suite(args: &Args) -> Result<(), String> {
             }
         }
     }
-    let p = build_pipeline(args)?;
+    let tracer = make_tracer(args);
+    let p = build_pipeline(args, &tracer)?;
     let results = run_suite_on(&p, &benches, &cfg);
     let ok: Vec<_> = results
         .iter()
@@ -334,6 +378,7 @@ fn cmd_suite(args: &Args) -> Result<(), String> {
     if args.flag("stats") {
         println!("{}", report::pipeline_stats(&p.stats()));
     }
+    write_trace(args, &tracer)?;
     Ok(())
 }
 
@@ -349,7 +394,8 @@ fn cmd_apps(args: &Args) -> Result<(), String> {
         ..base
     };
     let benches = suite::apps();
-    let p = build_pipeline(args)?;
+    let tracer = make_tracer(args);
+    let p = build_pipeline(args, &tracer)?;
     let results = run_suite_on(&p, &benches, &cfg);
     let ok: Vec<_> = results
         .iter()
@@ -360,6 +406,7 @@ fn cmd_apps(args: &Args) -> Result<(), String> {
     if args.flag("stats") {
         println!("{}", report::pipeline_stats(&p.stats()));
     }
+    write_trace(args, &tracer)?;
     Ok(())
 }
 
@@ -377,7 +424,8 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         engine: (superblocks, vector),
         ..ServeOpts::default()
     };
-    let mut session = ServeSession::new(opts, open_store(args)?);
+    let tracer = make_tracer(args);
+    let mut session = ServeSession::with_tracer(opts, open_store(args, &tracer)?, tracer.clone());
     match args.opt("socket") {
         #[cfg(unix)]
         Some(path) => {
@@ -397,12 +445,28 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     if args.flag("stats") {
         eprintln!("{}", report::pipeline_stats(&session.pipeline().stats()));
     }
+    write_trace(args, &tracer)?;
+    Ok(())
+}
+
+/// Print the unified metrics snapshot for a fresh session pipeline. Run
+/// counters start at zero here — the live signal is the disk-store gauges
+/// (residency, generation, coordination churn) shared across processes.
+fn cmd_metrics(args: &Args) -> Result<(), String> {
+    let tracer = make_tracer(args);
+    let p = build_pipeline(args, &tracer)?;
+    let m = p.metrics();
+    if args.flag("json") {
+        println!("{}", m.to_json().render());
+    } else {
+        print!("{}", m.render_table());
+    }
     Ok(())
 }
 
 /// Inspect / verify / heal the shared on-disk artifact store.
 fn cmd_store(args: &Args) -> Result<(), String> {
-    let store = open_store(args)?.ok_or(
+    let store = open_store(args, &make_tracer(args))?.ok_or(
         "store: no cache directory (give --cache-dir, or set RUST_PALLAS_CACHE_DIR; \
          --no-disk-cache is meaningless here)",
     )?;

@@ -1,0 +1,382 @@
+//! Unified metrics registry: named monotonic counters + fixed-bucket
+//! latency histograms.
+//!
+//! The pipeline keeps its specialized stat structs (`CacheSnapshot`,
+//! `DiskSnapshot`, `ServeStats`, `SimStats`, `StageTimings`) — dozens of
+//! tests pin their exact semantics. [`MetricsSnapshot`] is the *unifying
+//! view*: a flat, versioned list of `(stable dotted name, value)` pairs
+//! collected from those structs at read time, so every surface (`--stats`,
+//! the serve `metrics` request, `ptxasw metrics --json`) reports the same
+//! names with the same meanings.
+//!
+//! Histograms use one fixed geometric bucket layout
+//! ([`HIST_BOUNDS_NANOS`], ~4x steps from 1µs to 16s plus an overflow
+//! bucket) so snapshots from different sources merge bucket-by-bucket.
+//! Recording is lock-free (relaxed atomic adds); snapshots are
+//! monotone-consistent, not cross-bucket-atomic — fine for telemetry.
+
+use crate::util::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Version stamp carried by every [`MetricsSnapshot`] (bump when a stable
+/// name changes meaning or disappears; adding names is compatible).
+pub const METRICS_VERSION: u32 = 1;
+
+/// Bucket count: [`HIST_BOUNDS_NANOS`] upper bounds + one overflow bucket.
+pub const HIST_BUCKETS: usize = 14;
+
+/// Inclusive upper bounds (nanoseconds) of the first 13 buckets: ~4x
+/// geometric from 1µs to 16s. Observations above the last bound land in
+/// the overflow bucket.
+pub const HIST_BOUNDS_NANOS: [u64; HIST_BUCKETS - 1] = [
+    1_000,
+    4_000,
+    16_000,
+    64_000,
+    256_000,
+    1_000_000,
+    4_000_000,
+    16_000_000,
+    64_000_000,
+    256_000_000,
+    1_000_000_000,
+    4_000_000_000,
+    16_000_000_000,
+];
+
+/// Index of the bucket an observation of `nanos` falls into.
+fn bucket_index(nanos: u64) -> usize {
+    HIST_BOUNDS_NANOS
+        .iter()
+        .position(|&b| nanos <= b)
+        .unwrap_or(HIST_BUCKETS - 1)
+}
+
+/// Live fixed-bucket latency histogram (lock-free recording).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum_nanos: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_nanos: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Record one observation.
+    pub fn observe(&self, d: Duration) {
+        let nanos = u64::try_from(d.as_nanos()).unwrap_or(u64::MAX);
+        self.buckets[bucket_index(nanos)].fetch_add(1, Ordering::Relaxed);
+        self.sum_nanos.fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    /// A point-in-time copy of the counts.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let buckets = std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed));
+        let mut s = HistSnapshot {
+            buckets,
+            count: 0,
+            sum_nanos: self.sum_nanos.load(Ordering::Relaxed),
+        };
+        s.count = s.buckets.iter().sum();
+        s
+    }
+}
+
+/// Frozen histogram counts (the mergeable, serializable form).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HistSnapshot {
+    /// Per-bucket observation counts, [`HIST_BOUNDS_NANOS`] layout.
+    pub buckets: [u64; HIST_BUCKETS],
+    /// Total observations (sum of `buckets`).
+    pub count: u64,
+    /// Sum of all observed durations, nanoseconds (saturating).
+    pub sum_nanos: u64,
+}
+
+impl HistSnapshot {
+    pub fn mean_nanos(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.sum_nanos / self.count
+        }
+    }
+
+    /// Upper bound (nanoseconds) of the bucket containing the `q`-quantile
+    /// observation (0.0..=1.0). Returns 0 for an empty histogram and
+    /// `u64::MAX` when the quantile lands in the overflow bucket — it is a
+    /// bucket *bound*, not an interpolated value.
+    pub fn quantile_bound_nanos(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return HIST_BOUNDS_NANOS.get(i).copied().unwrap_or(u64::MAX);
+            }
+        }
+        u64::MAX
+    }
+
+    /// Bucket-wise sum of two snapshots (same fixed layout).
+    pub fn merged(&self, other: &HistSnapshot) -> HistSnapshot {
+        let mut out = *self;
+        for (b, o) in out.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += o;
+        }
+        out.count += other.count;
+        out.sum_nanos = out.sum_nanos.saturating_add(other.sum_nanos);
+        out
+    }
+}
+
+/// The unified, versioned metrics view: ordered `(stable name, value)`
+/// lists, collected from the pipeline's stat structs at read time.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub version: u32,
+    pub counters: Vec<(String, u64)>,
+    pub histograms: Vec<(String, HistSnapshot)>,
+}
+
+impl MetricsSnapshot {
+    pub fn new() -> MetricsSnapshot {
+        MetricsSnapshot {
+            version: METRICS_VERSION,
+            counters: Vec::new(),
+            histograms: Vec::new(),
+        }
+    }
+
+    /// Append a named monotonic counter.
+    pub fn counter(&mut self, name: impl Into<String>, value: u64) {
+        self.counters.push((name.into(), value));
+    }
+
+    /// Append a named latency histogram.
+    pub fn histogram(&mut self, name: impl Into<String>, h: HistSnapshot) {
+        self.histograms.push((name.into(), h));
+    }
+
+    /// Look up a counter by its stable name.
+    pub fn get(&self, name: &str) -> Option<u64> {
+        self.counters
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|&(_, v)| v)
+    }
+
+    /// Look up a histogram by its stable name.
+    pub fn get_hist(&self, name: &str) -> Option<&HistSnapshot> {
+        self.histograms
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, h)| h)
+    }
+
+    /// Render as the machine-readable JSON document served by the `metrics`
+    /// request and `ptxasw metrics --json`.
+    pub fn to_json(&self) -> Json {
+        let counters = self
+            .counters
+            .iter()
+            .map(|(n, v)| (n.clone(), Json::num(*v as f64)))
+            .collect();
+        let histograms = self
+            .histograms
+            .iter()
+            .map(|(n, h)| {
+                let buckets = h.buckets.iter().map(|&c| Json::num(c as f64)).collect();
+                (
+                    n.clone(),
+                    Json::Obj(vec![
+                        ("count".to_string(), Json::num(h.count as f64)),
+                        ("sum_nanos".to_string(), Json::num(h.sum_nanos as f64)),
+                        ("mean_nanos".to_string(), Json::num(h.mean_nanos() as f64)),
+                        ("buckets".to_string(), Json::Arr(buckets)),
+                    ]),
+                )
+            })
+            .collect();
+        let bounds = HIST_BOUNDS_NANOS
+            .iter()
+            .map(|&b| Json::num(b as f64))
+            .collect();
+        Json::Obj(vec![
+            (
+                "metrics_version".to_string(),
+                Json::num(self.version as f64),
+            ),
+            ("bucket_bounds_nanos".to_string(), Json::Arr(bounds)),
+            ("counters".to_string(), Json::Obj(counters)),
+            ("histograms".to_string(), Json::Obj(histograms)),
+        ])
+    }
+
+    /// Render as the human table appended to `--stats` output.
+    pub fn render_table(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(out, "metrics (v{})", self.version);
+        let width = self
+            .counters
+            .iter()
+            .map(|(n, _)| n.len())
+            .max()
+            .unwrap_or(0)
+            .max(8);
+        for (name, v) in &self.counters {
+            let _ = writeln!(out, "  {name:<width$}  {v}");
+        }
+        if !self.histograms.is_empty() {
+            let _ = writeln!(out, "  latency histograms (count / mean / p50 / p99)");
+            for (name, h) in &self.histograms {
+                let _ = writeln!(
+                    out,
+                    "  {name:<width$}  {} / {} / {} / {}",
+                    h.count,
+                    fmt_nanos(h.mean_nanos()),
+                    fmt_nanos(h.quantile_bound_nanos(0.5)),
+                    fmt_nanos(h.quantile_bound_nanos(0.99)),
+                );
+            }
+        }
+        out
+    }
+}
+
+/// Human-scale duration formatting for the metrics table; `u64::MAX`
+/// marks the overflow bucket.
+fn fmt_nanos(nanos: u64) -> String {
+    if nanos == u64::MAX {
+        return ">16s".to_string();
+    }
+    if nanos >= 1_000_000_000 {
+        format!("{:.2}s", nanos as f64 / 1e9)
+    } else if nanos >= 1_000_000 {
+        format!("{:.2}ms", nanos as f64 / 1e6)
+    } else if nanos >= 1_000 {
+        format!("{:.2}us", nanos as f64 / 1e3)
+    } else {
+        format!("{nanos}ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_matches_bounds() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1_000), 0);
+        assert_eq!(bucket_index(1_001), 1);
+        assert_eq!(bucket_index(16_000_000_000), HIST_BUCKETS - 2);
+        assert_eq!(bucket_index(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn observe_and_snapshot() {
+        let h = Histogram::new();
+        h.observe(Duration::from_micros(1)); // bucket 0
+        h.observe(Duration::from_micros(2)); // bucket 1
+        h.observe(Duration::from_secs(20)); // overflow bucket
+        let s = h.snapshot();
+        assert_eq!(s.count, 3);
+        assert_eq!(s.buckets[0], 1);
+        assert_eq!(s.buckets[1], 1);
+        assert_eq!(s.buckets[HIST_BUCKETS - 1], 1);
+        assert_eq!(s.sum_nanos, 1_000 + 2_000 + 20_000_000_000);
+    }
+
+    #[test]
+    fn quantile_bounds() {
+        let empty = HistSnapshot::default();
+        assert_eq!(empty.quantile_bound_nanos(0.5), 0);
+
+        let h = Histogram::new();
+        for _ in 0..99 {
+            h.observe(Duration::from_nanos(500)); // bucket 0: <= 1µs
+        }
+        h.observe(Duration::from_secs(20)); // overflow
+        let s = h.snapshot();
+        assert_eq!(s.quantile_bound_nanos(0.5), 1_000);
+        assert_eq!(s.quantile_bound_nanos(0.99), 1_000);
+        assert_eq!(s.quantile_bound_nanos(1.0), u64::MAX);
+    }
+
+    #[test]
+    fn merged_sums_bucketwise() {
+        let a = Histogram::new();
+        a.observe(Duration::from_micros(1));
+        let b = Histogram::new();
+        b.observe(Duration::from_micros(1));
+        b.observe(Duration::from_millis(2));
+        let m = a.snapshot().merged(&b.snapshot());
+        assert_eq!(m.count, 3);
+        assert_eq!(m.buckets[0], 2);
+        assert_eq!(m.sum_nanos, 1_000 + 1_000 + 2_000_000);
+    }
+
+    #[test]
+    fn snapshot_json_round_trips() {
+        let mut m = MetricsSnapshot::new();
+        m.counter("cache.emulate.hits", 3);
+        m.counter("serve.requests", 10);
+        let h = Histogram::new();
+        h.observe(Duration::from_micros(50));
+        m.histogram("stage.emulate.latency", h.snapshot());
+
+        let doc = Json::parse(&m.to_json().render()).expect("valid JSON");
+        assert_eq!(
+            doc.get("metrics_version").and_then(Json::as_u64),
+            Some(u64::from(METRICS_VERSION))
+        );
+        let counters = doc.get("counters").unwrap();
+        assert_eq!(
+            counters.get("cache.emulate.hits").and_then(Json::as_u64),
+            Some(3)
+        );
+        let hist = doc
+            .get("histograms")
+            .and_then(|h| h.get("stage.emulate.latency"))
+            .unwrap();
+        assert_eq!(hist.get("count").and_then(Json::as_u64), Some(1));
+        assert_eq!(
+            hist.get("buckets").and_then(Json::as_arr).map(Vec::len),
+            Some(HIST_BUCKETS)
+        );
+        let bounds = doc.get("bucket_bounds_nanos").and_then(Json::as_arr).unwrap();
+        assert_eq!(bounds.len(), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn lookups_and_table() {
+        let mut m = MetricsSnapshot::new();
+        m.counter("a.b", 1);
+        let h = Histogram::new();
+        h.observe(Duration::from_secs(20));
+        m.histogram("a.lat", h.snapshot());
+        assert_eq!(m.get("a.b"), Some(1));
+        assert_eq!(m.get("missing"), None);
+        assert_eq!(m.get_hist("a.lat").map(|h| h.count), Some(1));
+        let table = m.render_table();
+        assert!(table.contains("a.b"));
+        assert!(table.contains(">16s"), "overflow bucket prints >16s: {table}");
+    }
+}

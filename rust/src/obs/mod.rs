@@ -1,0 +1,27 @@
+//! Observability: structured span tracing + the unified metrics registry.
+//!
+//! Two zero-dependency halves:
+//!
+//! - [`trace`] — a lock-cheap, ring-buffered [`Tracer`] recording typed
+//!   spans and instants across every pipeline layer (stage execution,
+//!   artifact cache provenance, emulator budgets, simulator engine
+//!   selection, elimination verdicts, store ops, serve requests),
+//!   exportable as Chrome trace-event JSON (Perfetto-loadable) via
+//!   `--trace-out` or per-request `"trace": true` in serve mode.
+//! - [`metrics`] — named monotonic counters + fixed-bucket latency
+//!   histograms folding the pipeline's specialized stat structs into one
+//!   versioned [`MetricsSnapshot`], surfaced by `--stats`, the serve
+//!   `metrics` request, and `ptxasw metrics --json`.
+//!
+//! Contract: a *disabled* tracer costs one relaxed atomic load per span
+//! (pinned by the `simbench`/`servebench` CI gates), and tracing —
+//! enabled or not — never changes pipeline results (pinned by the
+//! traced-vs-untraced differential in `tests/integration_obs.rs`).
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{
+    HistSnapshot, Histogram, MetricsSnapshot, HIST_BOUNDS_NANOS, HIST_BUCKETS, METRICS_VERSION,
+};
+pub use trace::{thread_tid, ArgVal, SpanStart, TraceEvent, TracePhase, Tracer, DEFAULT_CAPACITY};

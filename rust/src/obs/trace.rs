@@ -1,0 +1,444 @@
+//! Ring-buffered span tracer with Chrome trace-event export.
+//!
+//! The [`Tracer`] records typed events — complete spans (`X`) with
+//! microsecond timestamps and durations, and instants (`i`) — into a
+//! bounded ring. The design goals, in order:
+//!
+//! 1. **A disabled tracer costs one relaxed atomic load per span.**
+//!    [`Tracer::begin`] returns `SpanStart(None)` without touching the
+//!    clock, [`Tracer::span`] early-returns on it, and argument closures
+//!    are `FnOnce` thunks that are never invoked while disabled. The
+//!    `simbench`/`servebench` CI gates pin this.
+//! 2. **Tracing never changes results.** The tracer only observes: all
+//!    state lives behind its own mutex and atomics, and nothing in the
+//!    pipeline reads it back. The traced-vs-untraced differential in
+//!    `tests/integration_obs.rs` pins bit-identical artifacts.
+//! 3. **Bounded memory.** The ring holds [`DEFAULT_CAPACITY`] events;
+//!    overflow drops the *oldest* event and counts it in
+//!    [`Tracer::dropped`], which the Chrome export reports.
+//!
+//! Export is the Chrome trace-event JSON format (`{"traceEvents": [...]}`),
+//! loadable at `ui.perfetto.dev` or `chrome://tracing`, rendered through
+//! the zero-dep [`Json`] codec.
+
+use crate::util::Json;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Default ring capacity (events). A full suite run emits a few hundred
+/// spans; serve sessions recycle the ring per request via [`Tracer::mark`].
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+/// Chrome trace-event phase of a recorded event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TracePhase {
+    /// A complete span (`"ph": "X"`) with a start timestamp and duration.
+    Complete,
+    /// A zero-duration instant (`"ph": "i"`, thread-scoped).
+    Instant,
+}
+
+/// A typed span argument value, rendered into the event's `args` object.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArgVal {
+    U64(u64),
+    F64(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl ArgVal {
+    fn to_json(&self) -> Json {
+        match self {
+            // u64 counters can exceed f64's exact-integer range in
+            // pathological cases; the codec's `as_u64` guards reads.
+            ArgVal::U64(n) => Json::num(*n as f64),
+            ArgVal::F64(x) => Json::num(*x),
+            ArgVal::Bool(b) => Json::Bool(*b),
+            ArgVal::Str(s) => Json::str(s.clone()),
+        }
+    }
+}
+
+/// One recorded event. Names and categories are `&'static str` so that
+/// recording allocates only for argument payloads.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Event name, e.g. `"stage.emulate"` (see the README span taxonomy).
+    pub name: &'static str,
+    /// Category, e.g. `"stage"`, `"store"`, `"serve"`.
+    pub cat: &'static str,
+    pub phase: TracePhase,
+    /// Microseconds since the tracer's epoch.
+    pub ts_micros: u64,
+    /// Span duration in microseconds (0 for instants).
+    pub dur_micros: u64,
+    /// Stable per-thread id (see [`thread_tid`]).
+    pub tid: u64,
+    pub args: Vec<(&'static str, ArgVal)>,
+}
+
+impl TraceEvent {
+    /// Render as one Chrome trace-event object.
+    pub fn to_json(&self) -> Json {
+        let mut kvs = vec![
+            ("name".to_string(), Json::str(self.name)),
+            ("cat".to_string(), Json::str(self.cat)),
+            (
+                "ph".to_string(),
+                Json::str(match self.phase {
+                    TracePhase::Complete => "X",
+                    TracePhase::Instant => "i",
+                }),
+            ),
+            ("ts".to_string(), Json::num(self.ts_micros as f64)),
+        ];
+        match self.phase {
+            TracePhase::Complete => {
+                kvs.push(("dur".to_string(), Json::num(self.dur_micros as f64)));
+            }
+            TracePhase::Instant => {
+                // thread-scoped instant: renders as a tick, not a global line
+                kvs.push(("s".to_string(), Json::str("t")));
+            }
+        }
+        kvs.push(("pid".to_string(), Json::num(1.0)));
+        kvs.push(("tid".to_string(), Json::num(self.tid as f64)));
+        if !self.args.is_empty() {
+            let args = self
+                .args
+                .iter()
+                .map(|(k, v)| ((*k).to_string(), v.to_json()))
+                .collect();
+            kvs.push(("args".to_string(), Json::Obj(args)));
+        }
+        Json::Obj(kvs)
+    }
+}
+
+/// Opaque token from [`Tracer::begin`]: `None` while the tracer is
+/// disabled, so no span ever reads the clock for free.
+#[derive(Debug, Clone, Copy)]
+#[must_use = "pass the start token back to Tracer::span to record the span"]
+pub struct SpanStart(Option<Instant>);
+
+/// Bounded event ring with a monotone base counter, so consumers can
+/// address events by global sequence number across overflow.
+#[derive(Debug)]
+struct Ring {
+    cap: usize,
+    buf: VecDeque<TraceEvent>,
+    /// Global sequence number of `buf[0]`.
+    base: u64,
+}
+
+/// Lock-cheap span recorder. See the module docs for the contract.
+#[derive(Debug)]
+pub struct Tracer {
+    on: AtomicBool,
+    epoch: Instant,
+    dropped: AtomicU64,
+    ring: Mutex<Ring>,
+}
+
+impl Tracer {
+    fn with_state(enabled: bool, cap: usize) -> Tracer {
+        Tracer {
+            on: AtomicBool::new(enabled),
+            epoch: Instant::now(),
+            dropped: AtomicU64::new(0),
+            ring: Mutex::new(Ring {
+                cap: cap.max(1),
+                buf: VecDeque::new(),
+                base: 0,
+            }),
+        }
+    }
+
+    /// A tracer that records nothing until [`Tracer::set_enabled`] flips it.
+    pub fn disabled() -> Tracer {
+        Tracer::with_state(false, DEFAULT_CAPACITY)
+    }
+
+    /// A recording tracer with the default ring capacity.
+    pub fn enabled() -> Tracer {
+        Tracer::with_state(true, DEFAULT_CAPACITY)
+    }
+
+    /// A recording tracer with an explicit ring capacity (min 1).
+    pub fn with_capacity(cap: usize) -> Tracer {
+        Tracer::with_state(true, cap)
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.on.load(Ordering::Relaxed)
+    }
+
+    /// Flip recording at runtime (serve mode enables per `"trace": true`
+    /// request without rebuilding the pipeline).
+    pub fn set_enabled(&self, enabled: bool) {
+        self.on.store(enabled, Ordering::Relaxed);
+    }
+
+    /// Start a span. The entire disabled-path cost is one relaxed load.
+    pub fn begin(&self) -> SpanStart {
+        if self.is_enabled() {
+            SpanStart(Some(Instant::now()))
+        } else {
+            SpanStart(None)
+        }
+    }
+
+    /// Record a complete span started at `start`. `args` is evaluated only
+    /// if the span is actually recorded. A span begun while enabled is
+    /// still recorded if the tracer was disabled in between — the start
+    /// token, not the current flag, is the record/skip decision, so serve
+    /// request spans survive their own per-request disable.
+    pub fn span(
+        &self,
+        cat: &'static str,
+        name: &'static str,
+        start: SpanStart,
+        args: impl FnOnce() -> Vec<(&'static str, ArgVal)>,
+    ) {
+        let Some(t0) = start.0 else { return };
+        // `duration_since` saturates to zero if the epoch races ahead.
+        let ts_micros = t0.duration_since(self.epoch).as_micros() as u64;
+        let dur_micros = t0.elapsed().as_micros() as u64;
+        self.push(TraceEvent {
+            name,
+            cat,
+            phase: TracePhase::Complete,
+            ts_micros,
+            dur_micros,
+            tid: thread_tid(),
+            args: args(),
+        });
+    }
+
+    /// Record a zero-duration instant. `args` is evaluated only while
+    /// enabled.
+    pub fn instant(
+        &self,
+        cat: &'static str,
+        name: &'static str,
+        args: impl FnOnce() -> Vec<(&'static str, ArgVal)>,
+    ) {
+        if !self.is_enabled() {
+            return;
+        }
+        let ts_micros = self.epoch.elapsed().as_micros() as u64;
+        self.push(TraceEvent {
+            name,
+            cat,
+            phase: TracePhase::Instant,
+            ts_micros,
+            dur_micros: 0,
+            tid: thread_tid(),
+            args: args(),
+        });
+    }
+
+    fn push(&self, ev: TraceEvent) {
+        let mut ring = self.ring.lock().unwrap();
+        if ring.buf.len() >= ring.cap {
+            ring.buf.pop_front();
+            ring.base += 1;
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.buf.push_back(ev);
+    }
+
+    /// Current global sequence watermark: events recorded after this call
+    /// have sequence numbers `>= mark()`. Feed back to
+    /// [`Tracer::events_since`] to extract a request's events.
+    pub fn mark(&self) -> u64 {
+        let ring = self.ring.lock().unwrap();
+        ring.base + ring.buf.len() as u64
+    }
+
+    /// Events with global sequence `>= mark`, oldest first. Events evicted
+    /// by ring overflow are simply absent.
+    pub fn events_since(&self, mark: u64) -> Vec<TraceEvent> {
+        let ring = self.ring.lock().unwrap();
+        let skip = mark.saturating_sub(ring.base) as usize;
+        ring.buf.iter().skip(skip).cloned().collect()
+    }
+
+    /// All buffered events, oldest first.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.events_since(0)
+    }
+
+    /// Number of events currently buffered.
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events lost to ring overflow since creation/`clear`.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Drop all buffered events and reset the drop counter. The global
+    /// sequence keeps advancing (marks stay valid).
+    pub fn clear(&self) {
+        let mut ring = self.ring.lock().unwrap();
+        let n = ring.buf.len() as u64;
+        ring.base += n;
+        ring.buf.clear();
+        self.dropped.store(0, Ordering::Relaxed);
+    }
+
+    /// Render everything buffered as a Chrome trace-event JSON document
+    /// (Perfetto-loadable).
+    pub fn export_chrome(&self) -> Json {
+        let events = self.events().iter().map(TraceEvent::to_json).collect();
+        Json::Obj(vec![
+            ("traceEvents".to_string(), Json::Arr(events)),
+            ("displayTimeUnit".to_string(), Json::str("ms")),
+            (
+                "otherData".to_string(),
+                Json::Obj(vec![
+                    ("tool".to_string(), Json::str("ptxasw")),
+                    (
+                        "dropped_events".to_string(),
+                        Json::num(self.dropped() as f64),
+                    ),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Stable small integer id for the calling thread. Chrome trace `tid`s
+/// only need to be consistent within one export; a process-wide counter
+/// handed out on first use per thread is cheap and deterministic enough.
+pub fn thread_tid() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static TID: u64 = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    TID.with(|t| *t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_records_nothing_and_skips_arg_closures() {
+        let t = Tracer::disabled();
+        let mut evaluated = false;
+        let s = t.begin();
+        t.span("x", "x.span", s, || {
+            evaluated = true;
+            vec![]
+        });
+        t.instant("x", "x.instant", || {
+            evaluated = true;
+            vec![]
+        });
+        assert!(!evaluated, "arg closures must not run while disabled");
+        assert!(t.is_empty());
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn enabled_records_spans_and_instants() {
+        let t = Tracer::enabled();
+        let s = t.begin();
+        t.span("stage", "stage.parse", s, || {
+            vec![("key", ArgVal::Str("abc".into()))]
+        });
+        t.instant("store", "store.load", || vec![("outcome", ArgVal::U64(1))]);
+        let evs = t.events();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].name, "stage.parse");
+        assert_eq!(evs[0].phase, TracePhase::Complete);
+        assert_eq!(evs[1].phase, TracePhase::Instant);
+        assert!(evs[1].ts_micros >= evs[0].ts_micros);
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts() {
+        let t = Tracer::with_capacity(4);
+        for _ in 0..10 {
+            t.instant("x", "x.tick", Vec::new);
+        }
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.dropped(), 6);
+        // the survivors are the newest four: global sequence 6..10
+        assert_eq!(t.mark(), 10);
+        assert_eq!(t.events_since(6).len(), 4);
+        assert_eq!(t.events_since(9).len(), 1);
+    }
+
+    #[test]
+    fn mark_and_events_since_slice_per_request() {
+        let t = Tracer::enabled();
+        t.instant("x", "x.before", Vec::new);
+        let m = t.mark();
+        t.instant("x", "x.after", Vec::new);
+        let evs = t.events_since(m);
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].name, "x.after");
+        t.clear();
+        assert!(t.is_empty());
+        assert!(t.mark() >= m, "marks survive clear");
+    }
+
+    #[test]
+    fn chrome_export_round_trips_through_the_codec() {
+        let t = Tracer::enabled();
+        let s = t.begin();
+        t.span("stage", "stage.emulate", s, || {
+            vec![("flows", ArgVal::U64(7)), ("ok", ArgVal::Bool(true))]
+        });
+        t.instant("sim", "sim.engine", || {
+            vec![("fallback", ArgVal::Str("none".into()))]
+        });
+        let doc = Json::parse(&t.export_chrome().render()).expect("valid JSON");
+        let evs = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert_eq!(evs.len(), 2);
+        let x = &evs[0];
+        assert_eq!(x.get("ph").and_then(Json::as_str), Some("X"));
+        assert!(x.get("dur").is_some(), "complete events carry a duration");
+        assert_eq!(
+            x.get("args").and_then(|a| a.get("flows")).and_then(Json::as_u64),
+            Some(7)
+        );
+        let i = &evs[1];
+        assert_eq!(i.get("ph").and_then(Json::as_str), Some("i"));
+        assert_eq!(i.get("s").and_then(Json::as_str), Some("t"));
+        assert!(i.get("dur").is_none(), "instants carry no duration");
+    }
+
+    #[test]
+    fn set_enabled_flips_recording_at_runtime() {
+        let t = Tracer::disabled();
+        t.instant("x", "x.off", Vec::new);
+        t.set_enabled(true);
+        t.instant("x", "x.on", Vec::new);
+        t.set_enabled(false);
+        t.instant("x", "x.off2", Vec::new);
+        let evs = t.events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].name, "x.on");
+    }
+
+    #[test]
+    fn span_begun_while_enabled_survives_disable() {
+        let t = Tracer::enabled();
+        let s = t.begin();
+        t.set_enabled(false);
+        t.span("serve", "serve.request", s, Vec::new);
+        assert_eq!(t.len(), 1, "the start token decides, not the flag");
+    }
+}

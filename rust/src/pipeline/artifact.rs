@@ -105,6 +105,22 @@ pub enum ArtifactKind {
     Scored,
 }
 
+impl ArtifactKind {
+    /// The family's instant-event name in the trace taxonomy
+    /// (`artifact.<family>`).
+    pub fn span_name(self) -> &'static str {
+        match self {
+            ArtifactKind::Workload => "artifact.workload",
+            ArtifactKind::Decoded => "artifact.decoded",
+            ArtifactKind::Emulated => "artifact.emulated",
+            ArtifactKind::Detected => "artifact.detected",
+            ArtifactKind::Synthesized => "artifact.synthesized",
+            ArtifactKind::Validated => "artifact.validated",
+            ArtifactKind::Scored => "artifact.scored",
+        }
+    }
+}
+
 /// How a cache lookup was served.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CacheEvent {
@@ -114,6 +130,17 @@ pub enum CacheEvent {
     DiskHit,
     /// Computed fresh.
     Miss,
+}
+
+impl CacheEvent {
+    /// Stable provenance label used in trace event args.
+    pub fn name(self) -> &'static str {
+        match self {
+            CacheEvent::Hit => "hit",
+            CacheEvent::DiskHit => "disk_hit",
+            CacheEvent::Miss => "miss",
+        }
+    }
 }
 
 /// Monotonic hit/disk-hit/miss counters, one triple per artifact family.
@@ -223,6 +250,31 @@ pub struct CacheSnapshot {
 }
 
 impl CacheSnapshot {
+    /// Field-wise sum of another snapshot into this one (serve mode folds
+    /// its tight + wide pipelines into one report).
+    pub fn absorb(&mut self, o: &CacheSnapshot) {
+        self.workload_hits += o.workload_hits;
+        self.workload_misses += o.workload_misses;
+        self.decode_hits += o.decode_hits;
+        self.decode_disk_hits += o.decode_disk_hits;
+        self.decode_misses += o.decode_misses;
+        self.emulate_hits += o.emulate_hits;
+        self.emulate_disk_hits += o.emulate_disk_hits;
+        self.emulate_misses += o.emulate_misses;
+        self.detect_hits += o.detect_hits;
+        self.detect_disk_hits += o.detect_disk_hits;
+        self.detect_misses += o.detect_misses;
+        self.synth_hits += o.synth_hits;
+        self.synth_disk_hits += o.synth_disk_hits;
+        self.synth_misses += o.synth_misses;
+        self.validate_hits += o.validate_hits;
+        self.validate_disk_hits += o.validate_disk_hits;
+        self.validate_misses += o.validate_misses;
+        self.score_hits += o.score_hits;
+        self.score_disk_hits += o.score_disk_hits;
+        self.score_misses += o.score_misses;
+    }
+
     /// In-memory hits across every family.
     pub fn hits(&self) -> u64 {
         self.workload_hits

@@ -46,7 +46,8 @@ pub use store::{
     DEFAULT_MAX_BYTES, STORE_KINDS,
 };
 
-use crate::emu::{emulate_in_session, EmuError, Limits};
+use crate::emu::{emulate_in_session, EmuError, FlowEnd, Limits};
+use crate::obs::{ArgVal, HistSnapshot, Histogram, MetricsSnapshot, Tracer};
 use crate::perf::Arch;
 use crate::ptx::ast::Kernel;
 use crate::ptx::parser::{parse, ParseError};
@@ -113,13 +114,29 @@ impl Stage {
             Stage::Score => 7,
         }
     }
+
+    /// The stage's span name in the trace taxonomy (`stage.<name>`).
+    pub fn span_name(self) -> &'static str {
+        match self {
+            Stage::Parse => "stage.parse",
+            Stage::Workload => "stage.workload",
+            Stage::Decode => "stage.decode",
+            Stage::Emulate => "stage.emulate",
+            Stage::Detect => "stage.detect",
+            Stage::Synthesize => "stage.synthesize",
+            Stage::Validate => "stage.validate",
+            Stage::Score => "stage.score",
+        }
+    }
 }
 
-/// Accumulated wall time and invocation counts per stage.
+/// Accumulated wall time, invocation counts and latency distribution per
+/// stage.
 #[derive(Debug, Default)]
 struct StageTimings {
     nanos: [AtomicU64; STAGES.len()],
     runs: [AtomicU64; STAGES.len()],
+    hist: [Histogram; STAGES.len()],
 }
 
 impl StageTimings {
@@ -127,6 +144,7 @@ impl StageTimings {
         let i = stage.index();
         self.nanos[i].fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
         self.runs[i].fetch_add(1, Ordering::Relaxed);
+        self.hist[i].observe(elapsed);
     }
 }
 
@@ -137,6 +155,9 @@ pub struct PipelineStats {
     pub disk: DiskSnapshot,
     pub stage_nanos: [u64; STAGES.len()],
     pub stage_runs: [u64; STAGES.len()],
+    /// Per-stage latency distributions (same fixed bucket layout as the
+    /// metrics registry, so snapshots merge bucket-by-bucket).
+    pub stage_hist: [HistSnapshot; STAGES.len()],
     /// Decoded-engine telemetry summed over every simulation this
     /// pipeline ran: straight-line runs taken in one scheduling slice.
     pub superblocks_entered: u64,
@@ -153,6 +174,76 @@ impl PipelineStats {
     pub fn stage_count(&self, stage: Stage) -> u64 {
         self.stage_runs[stage.index()]
     }
+
+    /// Fold another pipeline's counters into this snapshot (serve mode
+    /// reports its tight + wide pipelines as one). The `disk` snapshot is
+    /// deliberately *not* summed: the pipelines being folded share one
+    /// [`DiskStore`], so its counters appear identically in both
+    /// snapshots and summing would double-count.
+    pub fn absorb(&mut self, o: &PipelineStats) {
+        self.cache.absorb(&o.cache);
+        for i in 0..STAGES.len() {
+            self.stage_nanos[i] += o.stage_nanos[i];
+            self.stage_runs[i] += o.stage_runs[i];
+            self.stage_hist[i] = self.stage_hist[i].merged(&o.stage_hist[i]);
+        }
+        self.superblocks_entered += o.superblocks_entered;
+        self.vector_warp_steps += o.vector_warp_steps;
+    }
+}
+
+/// Collect a [`PipelineStats`] snapshot into the unified metrics registry
+/// view: stable dotted names, one versioned [`MetricsSnapshot`]. This is
+/// the single place the five specialized stat structs are folded together,
+/// shared by `--stats`, the serve `metrics` request and `ptxasw metrics`.
+pub fn metrics_snapshot(s: &PipelineStats) -> MetricsSnapshot {
+    let mut m = MetricsSnapshot::new();
+    let c = &s.cache;
+    let families: [(&str, u64, u64, u64); 7] = [
+        ("workload", c.workload_hits, 0, c.workload_misses),
+        ("decode", c.decode_hits, c.decode_disk_hits, c.decode_misses),
+        ("emulate", c.emulate_hits, c.emulate_disk_hits, c.emulate_misses),
+        ("detect", c.detect_hits, c.detect_disk_hits, c.detect_misses),
+        ("synthesize", c.synth_hits, c.synth_disk_hits, c.synth_misses),
+        (
+            "validate",
+            c.validate_hits,
+            c.validate_disk_hits,
+            c.validate_misses,
+        ),
+        ("score", c.score_hits, c.score_disk_hits, c.score_misses),
+    ];
+    for (name, hits, disk_hits, misses) in families {
+        m.counter(format!("cache.{name}.hits"), hits);
+        m.counter(format!("cache.{name}.disk_hits"), disk_hits);
+        m.counter(format!("cache.{name}.misses"), misses);
+    }
+    for stage in STAGES {
+        let i = stage.index();
+        m.counter(format!("stage.{}.runs", stage.name()), s.stage_runs[i]);
+        m.counter(format!("stage.{}.nanos", stage.name()), s.stage_nanos[i]);
+    }
+    m.counter("engine.superblocks_entered", s.superblocks_entered);
+    m.counter("engine.vector_warp_steps", s.vector_warp_steps);
+    let d = &s.disk;
+    m.counter("store.enabled", u64::from(d.enabled));
+    m.counter("store.hits", d.hits);
+    m.counter("store.misses", d.misses);
+    m.counter("store.stores", d.stores);
+    m.counter("store.evictions", d.evictions);
+    m.counter("store.corrupt", d.corrupt);
+    m.counter("store.resident_bytes", d.resident_bytes);
+    m.counter("store.generation", d.generation);
+    m.counter("store.lock_skips", d.lock_skips);
+    m.counter("store.resyncs", d.resyncs);
+    m.counter("store.swept_tmp", d.swept_tmp);
+    for stage in STAGES {
+        m.histogram(
+            format!("stage.{}.latency", stage.name()),
+            s.stage_hist[stage.index()],
+        );
+    }
+    m
 }
 
 /// The pass manager: shared interner session + artifact cache + counters,
@@ -194,6 +285,9 @@ pub struct Pipeline {
     /// Decoded-engine telemetry summed across this pipeline's runs.
     superblocks_entered: AtomicU64,
     vector_warp_steps: AtomicU64,
+    /// Span recorder threaded through every stage. Disabled by default —
+    /// one relaxed atomic load per span site; see [`crate::obs`].
+    tracer: Arc<Tracer>,
 }
 
 impl Default for Pipeline {
@@ -211,6 +305,7 @@ impl Default for Pipeline {
             vector: true,
             superblocks_entered: AtomicU64::new(0),
             vector_warp_steps: AtomicU64::new(0),
+            tracer: Arc::new(Tracer::disabled()),
         }
     }
 }
@@ -282,6 +377,23 @@ impl Pipeline {
             .fetch_add(s.vector_warp_steps, Ordering::Relaxed);
     }
 
+    /// Attach a span tracer (shared, so serve mode and the attached
+    /// [`DiskStore`] can record into the same ring).
+    pub fn with_tracer(mut self, tracer: Arc<Tracer>) -> Pipeline {
+        self.tracer = tracer;
+        self
+    }
+
+    /// The span tracer every stage of this pipeline records into.
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    /// The tracer as a shareable handle.
+    pub fn tracer_shared(&self) -> Arc<Tracer> {
+        self.tracer.clone()
+    }
+
     /// Attach an on-disk artifact store; detected/synthesized/validated/
     /// scored artifacts persist across pipelines and processes.
     pub fn with_disk(self, store: DiskStore) -> Pipeline {
@@ -321,12 +433,26 @@ impl Pipeline {
         &self.cache
     }
 
-    /// Time a closure against a stage's wall-time counters.
+    /// Time a closure against a stage's wall-time counters and record a
+    /// `stage.<name>` span.
     pub fn time<T>(&self, stage: Stage, f: impl FnOnce() -> T) -> T {
+        let span = self.tracer.begin();
         let t0 = Instant::now();
         let out = f();
         self.timings.record(stage, t0.elapsed());
+        self.tracer.span("stage", stage.span_name(), span, Vec::new);
         out
+    }
+
+    /// Record an artifact cache lookup's provenance (hit / disk_hit /
+    /// miss) as an instant event.
+    fn trace_artifact(&self, kind: ArtifactKind, key: ContentHash, event: CacheEvent) {
+        self.tracer.instant("artifact", kind.span_name(), || {
+            vec![
+                ("key", ArgVal::Str(key.to_string())),
+                ("provenance", ArgVal::Str(event.name().to_string())),
+            ]
+        });
     }
 
     fn disk_load<T>(
@@ -396,6 +522,13 @@ impl Pipeline {
             })
             .clone();
         self.cache.counters.record(ArtifactKind::Workload, event);
+        self.tracer
+            .instant("artifact", ArtifactKind::Workload.span_name(), || {
+                vec![
+                    ("key", ArgVal::Str(fingerprint.to_string())),
+                    ("provenance", ArgVal::Str(event.name().to_string())),
+                ]
+            });
         out
     }
 
@@ -433,6 +566,7 @@ impl Pipeline {
             })
             .clone();
         self.cache.counters.record(ArtifactKind::Decoded, event);
+        self.trace_artifact(ArtifactKind::Decoded, hash, event);
         out
     }
 
@@ -472,10 +606,47 @@ impl Pipeline {
                     return Ok(Arc::new(art));
                 }
                 event = CacheEvent::Miss;
+                let span = self.tracer.begin();
                 let t0 = Instant::now();
-                let result = emulate_in_session(kernel, self.limits, self.session.clone())?;
+                let result = match emulate_in_session(kernel, self.limits, self.session.clone()) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        // budget exhaustion is the span worth having:
+                        // record which limit the kernel ran into
+                        self.tracer.span("stage", "stage.emulate", span, || {
+                            vec![
+                                ("key", ArgVal::Str(hash.to_string())),
+                                ("error", ArgVal::Str(e.to_string())),
+                                ("max_flows", ArgVal::U64(self.limits.max_flows as u64)),
+                                ("max_total_steps", ArgVal::U64(self.limits.max_total_steps)),
+                            ]
+                        });
+                        return Err(e);
+                    }
+                };
                 let elapsed = t0.elapsed();
                 self.timings.record(Stage::Emulate, elapsed);
+                let (flows_started, flows_finished, steps) = (
+                    result.stats.flows_started,
+                    result.stats.flows_finished,
+                    result.stats.steps,
+                );
+                let truncated = result
+                    .flows
+                    .iter()
+                    .filter(|f| f.end == FlowEnd::StepLimit)
+                    .count() as u64;
+                self.tracer.span("stage", "stage.emulate", span, || {
+                    vec![
+                        ("key", ArgVal::Str(hash.to_string())),
+                        ("flows_started", ArgVal::U64(flows_started)),
+                        ("flows_finished", ArgVal::U64(flows_finished)),
+                        ("steps", ArgVal::U64(steps)),
+                        ("truncated_flows", ArgVal::U64(truncated)),
+                        ("max_flows", ArgVal::U64(self.limits.max_flows as u64)),
+                        ("max_total_steps", ArgVal::U64(self.limits.max_total_steps)),
+                    ]
+                });
                 let art = Emulated {
                     kernel: kernel.clone(),
                     hash,
@@ -487,6 +658,7 @@ impl Pipeline {
             })
             .clone();
         self.cache.counters.record(ArtifactKind::Emulated, event);
+        self.trace_artifact(ArtifactKind::Emulated, hash, event);
         out
     }
 
@@ -532,10 +704,22 @@ impl Pipeline {
                 }
                 event = CacheEvent::Miss;
                 let emu = self.emulated_hashed(kernel, hash)?;
+                let span = self.tracer.begin();
                 let t0 = Instant::now();
                 let detection = detect(kernel, &emu.result, opts);
                 let elapsed = t0.elapsed();
                 self.timings.record(Stage::Detect, elapsed);
+                let (chosen, total_loads) = (
+                    detection.chosen.len() as u64,
+                    detection.total_global_loads as u64,
+                );
+                self.tracer.span("stage", "stage.detect", span, || {
+                    vec![
+                        ("key", ArgVal::Str(hash.to_string())),
+                        ("shuffles_chosen", ArgVal::U64(chosen)),
+                        ("total_global_loads", ArgVal::U64(total_loads)),
+                    ]
+                });
                 let art = Detected {
                     detection,
                     elapsed,
@@ -546,6 +730,7 @@ impl Pipeline {
             })
             .clone();
         self.cache.counters.record(ArtifactKind::Detected, event);
+        self.trace_artifact(ArtifactKind::Detected, hash, event);
         out
     }
 
@@ -610,6 +795,7 @@ impl Pipeline {
                 } else {
                     None
                 };
+                let span = self.tracer.begin();
                 let t0 = Instant::now();
                 let synthesized = synthesize(kernel, &det.detection, variant);
                 let (final_kernel, elim_report) = match &emu {
@@ -617,6 +803,19 @@ impl Pipeline {
                     None => (synthesized, ElimReport::disabled()),
                 };
                 self.timings.record(Stage::Synthesize, t0.elapsed());
+                let (deleted, elided) = (
+                    elim_report.deleted_stores() as u64,
+                    elim_report.elided_barriers() as u64,
+                );
+                self.tracer.span("stage", "stage.synthesize", span, || {
+                    vec![
+                        ("key", ArgVal::Str(hash.to_string())),
+                        ("variant", ArgVal::Str(variant.name().to_string())),
+                        ("elim_deleted_stores", ArgVal::U64(deleted)),
+                        ("elim_elided_barriers", ArgVal::U64(elided)),
+                    ]
+                });
+                crate::shuffle::elim::trace_report(&self.tracer, hash, &elim_report);
                 let art = Synthesized {
                     hash: kernel_fingerprint(&final_kernel),
                     kernel: Arc::new(final_kernel),
@@ -631,6 +830,7 @@ impl Pipeline {
         self.cache
             .counters
             .record(ArtifactKind::Synthesized, event);
+        self.trace_artifact(ArtifactKind::Synthesized, hash, event);
         out
     }
 
@@ -687,6 +887,7 @@ impl Pipeline {
             })
             .clone();
         self.cache.counters.record(ArtifactKind::Validated, event);
+        self.trace_artifact(ArtifactKind::Validated, hash, event);
         out
     }
 
@@ -726,6 +927,7 @@ impl Pipeline {
             })
             .clone();
         self.cache.counters.record(ArtifactKind::Scored, event);
+        self.trace_artifact(ArtifactKind::Scored, hash, event);
         out
     }
 
@@ -744,10 +946,20 @@ impl Pipeline {
             let i = stage.index();
             s.stage_nanos[i] = self.timings.nanos[i].load(Ordering::Relaxed);
             s.stage_runs[i] = self.timings.runs[i].load(Ordering::Relaxed);
+            s.stage_hist[i] = self.timings.hist[i].snapshot();
         }
         s.superblocks_entered = self.superblocks_entered.load(Ordering::Relaxed);
         s.vector_warp_steps = self.vector_warp_steps.load(Ordering::Relaxed);
         s
+    }
+
+    /// The unified metrics view of this pipeline (see [`metrics_snapshot`])
+    /// plus the tracer's own gauges.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let mut m = metrics_snapshot(&self.stats());
+        m.counter("trace.events", self.tracer.len() as u64);
+        m.counter("trace.dropped", self.tracer.dropped());
+        m
     }
 }
 

@@ -54,7 +54,8 @@
 
 use crate::coordinator::{run_benchmark_on, PipelineConfig, PipelineError};
 use crate::emu::{FlowEnd, Limits};
-use crate::pipeline::{DiskStore, Pipeline};
+use crate::obs::{ArgVal, Histogram, Tracer};
+use crate::pipeline::{metrics_snapshot, DiskStore, Pipeline};
 use crate::ptx::{parse, print_module};
 use crate::shuffle::{DetectOpts, ElimOpts, Variant};
 use crate::util::Json;
@@ -167,18 +168,37 @@ pub struct ServeSession {
     tight: Pipeline,
     wide: Pipeline,
     stats: ServeStats,
+    /// Span recorder shared by both pipelines (and, when the caller wired
+    /// it, the disk store). Disabled until a request asks for tracing via
+    /// `"trace": true` — its request id becomes the trace id echoed back.
+    tracer: Arc<Tracer>,
+    /// End-to-end request latency (dispatch + retry), all commands.
+    request_hist: Histogram,
 }
 
 impl ServeSession {
     pub fn new(opts: ServeOpts, store: Option<Arc<DiskStore>>) -> ServeSession {
-        let tight = build_pipeline(&opts, opts.tight, &store);
-        let wide = build_pipeline(&opts, opts.wide, &store);
+        ServeSession::with_tracer(opts, store, Arc::new(Tracer::disabled()))
+    }
+
+    /// A session recording into an explicit shared tracer (the CLI hands
+    /// the same handle to the [`DiskStore`], so `store.*` events land in
+    /// per-request traces too).
+    pub fn with_tracer(
+        opts: ServeOpts,
+        store: Option<Arc<DiskStore>>,
+        tracer: Arc<Tracer>,
+    ) -> ServeSession {
+        let tight = build_pipeline(&opts, opts.tight, &store, &tracer);
+        let wide = build_pipeline(&opts, opts.wide, &store, &tracer);
         ServeSession {
             opts,
             store,
             tight,
             wide,
             stats: ServeStats::default(),
+            tracer,
+            request_hist: Histogram::new(),
         }
     }
 
@@ -191,13 +211,18 @@ impl ServeSession {
         &self.wide
     }
 
+    /// The session's span tracer.
+    pub fn tracer(&self) -> &Arc<Tracer> {
+        &self.tracer
+    }
+
     /// Discard both pipelines after a panic: their in-memory caches and
     /// interner may hold poisoned locks mid-update. The shared disk store
     /// survives (its own locks are poison-tolerant), so warm artifacts
     /// carry across the rebuild.
     fn rebuild(&mut self) {
-        self.tight = build_pipeline(&self.opts, self.opts.tight, &self.store);
-        self.wide = build_pipeline(&self.opts, self.opts.wide, &self.store);
+        self.tight = build_pipeline(&self.opts, self.opts.tight, &self.store, &self.tracer);
+        self.wide = build_pipeline(&self.opts, self.opts.wide, &self.store, &self.tracer);
     }
 
     /// Serve one connection: read JSON-lines from `reader`, stream one
@@ -257,8 +282,41 @@ impl ServeSession {
             );
         }
 
+        // Per-request tracing: `"trace": true` flips the shared tracer on
+        // for the duration of this request (no pipeline rebuild) and the
+        // events recorded past `mark` ride back on the response, keyed by
+        // the request id as the trace id.
+        let want_trace = req.get("trace").and_then(|t| t.as_bool()).unwrap_or(false);
+        let was_enabled = self.tracer.is_enabled();
+        if want_trace {
+            self.tracer.set_enabled(true);
+        }
+        let mark = self.tracer.mark();
+        let trace_id = want_trace.then(|| id.clone());
+        let span = self.tracer.begin();
+        let t0 = Instant::now();
+
         let outcome = catch_unwind(AssertUnwindSafe(|| self.dispatch(&cmd, &req)));
-        let response = match outcome {
+        self.request_hist.observe(t0.elapsed());
+        let (ok, widened, err_kind) = match &outcome {
+            Ok(Ok((_, w))) => (true, *w, None),
+            Ok(Err(e)) => (false, false, Some(e.kind.name())),
+            Err(_) => (false, false, Some(ServeErrorKind::Panicked.name())),
+        };
+        self.tracer.span("serve", "serve.request", span, || {
+            vec![
+                ("id", ArgVal::Str(id.render())),
+                ("cmd", ArgVal::Str(cmd.clone())),
+                ("ok", ArgVal::Bool(ok)),
+                ("widened", ArgVal::Bool(widened)),
+                (
+                    "error_kind",
+                    ArgVal::Str(err_kind.unwrap_or("none").to_string()),
+                ),
+            ]
+        });
+
+        let mut response = match outcome {
             Ok(Ok((mut fields, widened))) => {
                 self.stats.ok += 1;
                 if widened {
@@ -295,6 +353,24 @@ impl ServeSession {
                 )
             }
         };
+        if want_trace {
+            let events: Vec<Json> = self
+                .tracer
+                .events_since(mark)
+                .iter()
+                .map(crate::obs::TraceEvent::to_json)
+                .collect();
+            if !was_enabled {
+                self.tracer.set_enabled(false);
+            }
+            if let Json::Obj(kvs) = &mut response {
+                kvs.push((
+                    "trace_id".to_string(),
+                    trace_id.unwrap_or(Json::Null),
+                ));
+                kvs.push(("trace".to_string(), Json::Arr(events)));
+            }
+        }
         (response, false)
     }
 
@@ -309,6 +385,7 @@ impl ServeSession {
         match cmd {
             "ping" => Ok((Json::obj(vec![("cmd", Json::str("pong"))]), false)),
             "stats" => Ok((self.stats_body(), false)),
+            "metrics" => Ok((self.metrics_body(), false)),
             "asm" => self.handle_asm(req, deadline.as_ref()),
             "bench" => self.handle_bench(req, deadline.as_ref()).map(|j| (j, false)),
             "__panic" if self.opts.allow_test_faults => {
@@ -338,7 +415,37 @@ impl ServeSession {
             ("disk_hits", Json::num(disk.hits as f64)),
             ("disk_stores", Json::num(disk.stores as f64)),
             ("disk_resident_bytes", Json::num(disk.resident_bytes as f64)),
+            // store-coordination churn a fleet operator watches without
+            // shelling into the cache dir
+            ("disk_evictions", Json::num(disk.evictions as f64)),
+            ("disk_generation", Json::num(disk.generation as f64)),
+            ("disk_lock_skips", Json::num(disk.lock_skips as f64)),
+            ("disk_resyncs", Json::num(disk.resyncs as f64)),
+            ("disk_swept_tmp", Json::num(disk.swept_tmp as f64)),
         ])
+    }
+
+    /// The `metrics` command: the unified [`crate::obs::MetricsSnapshot`]
+    /// over both pipelines (tight + wide folded; the shared disk store
+    /// counted once) plus the serve-loop counters and request latency.
+    fn metrics_body(&self) -> Json {
+        let mut stats = self.wide.stats();
+        stats.absorb(&self.tight.stats());
+        let mut m = metrics_snapshot(&stats);
+        let s = self.stats;
+        m.counter("serve.requests", s.requests);
+        m.counter("serve.ok", s.ok);
+        m.counter("serve.errors", s.errors);
+        m.counter("serve.widened", s.widened);
+        m.counter("serve.panicked", s.panicked);
+        m.counter("trace.events", self.tracer.len() as u64);
+        m.counter("trace.dropped", self.tracer.dropped());
+        m.histogram("serve.request.latency", self.request_hist.snapshot());
+        let mut body = m.to_json();
+        if let Json::Obj(kvs) = &mut body {
+            kvs.insert(0, ("cmd".to_string(), Json::str("metrics")));
+        }
+        body
     }
 
     /// The `asm` command: tight-limits first, one widened retry when the
@@ -438,10 +545,12 @@ fn build_pipeline(
     opts: &ServeOpts,
     limits: Limits,
     store: &Option<Arc<DiskStore>>,
+    tracer: &Arc<Tracer>,
 ) -> Pipeline {
     let mut p = Pipeline::with_limits(limits)
         .with_sim_threads(opts.sim_threads)
-        .with_engine(opts.engine.0, opts.engine.1);
+        .with_engine(opts.engine.0, opts.engine.1)
+        .with_tracer(tracer.clone());
     if let Some(s) = store {
         p = p.with_disk_shared(s.clone());
     }
@@ -834,5 +943,79 @@ ret;
         assert_eq!(responses[0].get("cmd").unwrap().as_str(), Some("pong"));
         assert!(responses[1].get("requests").unwrap().as_u64().unwrap() >= 2);
         assert_eq!(responses[2].get("id").unwrap().as_str(), Some("bye"));
+    }
+
+    #[test]
+    fn stats_surfaces_disk_coordination_fields() {
+        let mut s = ServeSession::new(ServeOpts::default(), None);
+        let responses = run_lines(&mut s, &[r#"{"cmd":"stats"}"#.to_string()]);
+        let r = &responses[0];
+        // no disk store attached: the gauges exist and read zero
+        for field in [
+            "disk_evictions",
+            "disk_generation",
+            "disk_lock_skips",
+            "disk_resyncs",
+            "disk_swept_tmp",
+        ] {
+            assert_eq!(r.get(field).and_then(Json::as_u64), Some(0), "{field}");
+        }
+    }
+
+    #[test]
+    fn metrics_command_returns_the_unified_snapshot() {
+        let mut s = ServeSession::new(ServeOpts::default(), None);
+        let lines = vec![asm_req(1, K), r#"{"id":2,"cmd":"metrics"}"#.to_string()];
+        let responses = run_lines(&mut s, &lines);
+        let m = &responses[1];
+        assert_eq!(m.get("cmd").unwrap().as_str(), Some("metrics"));
+        assert_eq!(m.get("metrics_version").and_then(Json::as_u64), Some(1));
+        let counters = m.get("counters").expect("counters object");
+        // the asm request ran emulation + detection through the pipelines
+        assert_eq!(counters.get("serve.requests").and_then(Json::as_u64), Some(2));
+        assert_eq!(counters.get("serve.ok").and_then(Json::as_u64), Some(1));
+        assert!(counters.get("cache.emulate.misses").and_then(Json::as_u64).unwrap() >= 1);
+        let hists = m.get("histograms").expect("histograms object");
+        let lat = hists.get("serve.request.latency").expect("request latency");
+        assert!(lat.get("count").and_then(Json::as_u64).unwrap() >= 1);
+    }
+
+    #[test]
+    fn per_request_trace_rides_back_on_the_response() {
+        let mut s = ServeSession::new(ServeOpts::default(), None);
+        let traced = Json::obj(vec![
+            ("id", Json::str("req-7")),
+            ("cmd", Json::str("asm")),
+            ("ptx", Json::str(K)),
+            ("trace", Json::Bool(true)),
+        ])
+        .render();
+        let lines = vec![asm_req(1, K), traced, asm_req(3, K)];
+        let responses = run_lines(&mut s, &lines);
+        // untraced requests carry no trace keys
+        assert!(responses[0].get("trace").is_none());
+        assert!(responses[2].get("trace").is_none());
+        let r = &responses[1];
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        // the request id is echoed as the trace id
+        assert_eq!(
+            r.get("trace_id").unwrap().as_str(),
+            Some("req-7"),
+            "got {:?}",
+            r.get("trace_id")
+        );
+        let events = r.get("trace").unwrap().as_arr().unwrap();
+        assert!(!events.is_empty(), "traced request returns span events");
+        // the request-level span is present and marks this id + cmd
+        let req_span = events
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("serve.request"))
+            .expect("serve.request span in the per-request trace");
+        assert_eq!(req_span.get("ph").unwrap().as_str(), Some("X"));
+        let args = req_span.get("args").expect("span args");
+        assert_eq!(args.get("cmd").unwrap().as_str(), Some("asm"));
+        assert_eq!(args.get("ok").unwrap().as_bool(), Some(true));
+        // the session tracer is disabled again after the traced request
+        assert!(!s.tracer().is_enabled());
     }
 }

@@ -64,6 +64,27 @@ pub fn validate(
         (cfg.superblocks, cfg.vector) = p.engine();
         let r = run_decoded(&decoded, &cfg, w.mem.clone())?;
         p.note_engine_stats(&r.stats);
+        // record which engine paths this simulation actually ran with,
+        // and why the superblock fast path would fall back per-uop
+        p.tracer().instant("sim", "sim.engine", || {
+            use crate::obs::ArgVal;
+            vec![
+                ("key", ArgVal::Str(hash.to_string())),
+                ("superblocks", ArgVal::Bool(cfg.superblocks)),
+                ("vector", ArgVal::Bool(cfg.vector)),
+                ("sim_threads", ArgVal::U64(cfg.sim_threads as u64)),
+                (
+                    "fallback",
+                    ArgVal::Str(
+                        crate::sim::exec::engine_fallback_reason(&cfg)
+                            .unwrap_or("none")
+                            .to_string(),
+                    ),
+                ),
+                ("superblocks_entered", ArgVal::U64(r.stats.superblocks_entered)),
+                ("vector_warp_steps", ArgVal::U64(r.stats.vector_warp_steps)),
+            ]
+        });
         let out = r.mem.read_f32s(w.out_ptr, w.out_len)?;
         let valid = baseline_out.map(|base| {
             base.len() == out.len()

@@ -59,6 +59,7 @@
 //! evictor is treated as evicted, not as an error.
 
 use crate::emu::EmuStats;
+use crate::obs::{ArgVal, Tracer};
 use crate::perf::PerfReport;
 use crate::pipeline::artifact::{Detected, Emulated, Synthesized};
 use crate::pipeline::stages::{Scored, Validated};
@@ -193,6 +194,11 @@ pub struct DiskStore {
     lock_skips: AtomicU64,
     resyncs: AtomicU64,
     swept_tmp: AtomicU64,
+    /// Span recorder for store ops (`store.*` in the trace taxonomy).
+    /// Disabled by default; [`DiskStore::set_tracer`] attaches a shared
+    /// one before the store is wrapped in an `Arc`. Sits above the [`Vfs`]
+    /// seam, so fault-injection tests observe spans for injected failures.
+    tracer: Arc<Tracer>,
 }
 
 /// The default cache directory: `$RUST_PALLAS_CACHE_DIR`, else
@@ -237,6 +243,7 @@ impl DiskStore {
             lock_skips: AtomicU64::new(0),
             resyncs: AtomicU64::new(0),
             swept_tmp: AtomicU64::new(0),
+            tracer: Arc::new(Tracer::disabled()),
         };
         store.sweep_tmp();
         if let Some(m) = store.read_manifest() {
@@ -254,6 +261,28 @@ impl DiskStore {
     /// The configured resident-set bound.
     pub fn max_bytes(&self) -> u64 {
         self.max_bytes
+    }
+
+    /// Attach a shared span tracer (call before wrapping in an `Arc`).
+    pub fn set_tracer(&mut self, tracer: Arc<Tracer>) {
+        self.tracer = tracer;
+    }
+
+    /// Record one store operation's outcome as an instant event.
+    fn trace_op(
+        &self,
+        name: &'static str,
+        kind: StoreKind,
+        key: ContentHash,
+        outcome: &'static str,
+    ) {
+        self.tracer.instant("store", name, || {
+            vec![
+                ("kind", ArgVal::Str(kind.dir().to_string())),
+                ("key", ArgVal::Str(key.to_string())),
+                ("outcome", ArgVal::Str(outcome.to_string())),
+            ]
+        });
     }
 
     pub fn snapshot(&self) -> DiskSnapshot {
@@ -322,6 +351,7 @@ impl DiskStore {
             Ok(b) => b,
             Err(_) => {
                 self.misses.fetch_add(1, Ordering::Relaxed);
+                self.trace_op("store.load", kind, key, "miss");
                 return None;
             }
         };
@@ -331,6 +361,7 @@ impl DiskStore {
                 // bump the LRU clock; failure is harmless (falls back to
                 // the artifact's own mtime)
                 let _ = self.vfs.touch(&path.with_extension("lru"));
+                self.trace_op("store.load", kind, key, "hit");
                 Some(artifact)
             }
             None => {
@@ -338,6 +369,7 @@ impl DiskStore {
                 self.misses.fetch_add(1, Ordering::Relaxed);
                 let _ = self.vfs.remove_file(&path);
                 let _ = self.vfs.remove_file(&path.with_extension("lru"));
+                self.trace_op("store.load", kind, key, "corrupt");
                 None
             }
         }
@@ -372,10 +404,12 @@ impl DiskStore {
             } else {
                 self.resident.fetch_sub(old - new, Ordering::Relaxed);
             }
+            self.trace_op("store.store", kind, key, "stored");
             self.maybe_resync(n);
             self.evict_to_limit();
         } else {
             let _ = self.vfs.remove_file(&tmp);
+            self.trace_op("store.store", kind, key, "failed");
         }
     }
 
@@ -394,6 +428,12 @@ impl DiskStore {
         let total = self.scan().iter().map(|e| e.size).sum();
         self.resident.store(total, Ordering::Relaxed);
         self.resyncs.fetch_add(1, Ordering::Relaxed);
+        self.tracer.instant("store", "store.resync", || {
+            vec![
+                ("generation", ArgVal::U64(seen)),
+                ("resident_bytes", ArgVal::U64(total)),
+            ]
+        });
     }
 
     /// All resident artifacts with size and last-use time. Hardened
@@ -448,8 +488,11 @@ impl DiskStore {
             .unwrap_or_else(|e| e.into_inner());
         if !self.acquire_process_lock() {
             self.lock_skips.fetch_add(1, Ordering::Relaxed);
+            self.tracer.instant("store", "store.lock_skip", Vec::new);
             return;
         }
+        let span = self.tracer.begin();
+        let mut removed: u64 = 0;
         let mut entries = self.scan();
         let mut total: u64 = entries.iter().map(|e| e.size).sum();
         entries.sort_by(|a, b| a.touched.cmp(&b.touched).then(a.path.cmp(&b.path)));
@@ -461,6 +504,7 @@ impl DiskStore {
                 Ok(()) => {
                     let _ = self.vfs.remove_file(&e.path.with_extension("lru"));
                     self.evictions.fetch_add(1, Ordering::Relaxed);
+                    removed += 1;
                 }
                 // a racing evictor got there first — the bytes are gone
                 // either way, so account for them, but it was not *our*
@@ -479,6 +523,12 @@ impl DiskStore {
         }
         self.publish_manifest(&self.scan());
         self.release_process_lock();
+        self.tracer.span("store", "store.evict", span, || {
+            vec![
+                ("evicted", ArgVal::U64(removed)),
+                ("resident_bytes", ArgVal::U64(total)),
+            ]
+        });
     }
 
     // -- cross-process coordination ----------------------------------------

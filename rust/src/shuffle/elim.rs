@@ -56,6 +56,59 @@ pub fn eliminate(
     (out, report)
 }
 
+/// Emit one trace instant per store / barrier verdict plus a summary,
+/// lifted from an [`ElimReport`] (`elim.store` / `elim.barrier` /
+/// `elim.summary` in the span taxonomy). `source` is the content hash of
+/// the kernel the report is about. A disabled tracer costs one atomic
+/// load here.
+pub fn trace_report(
+    tracer: &crate::obs::Tracer,
+    source: crate::ptx::printer::ContentHash,
+    r: &ElimReport,
+) {
+    use crate::obs::ArgVal;
+    if !tracer.is_enabled() {
+        return;
+    }
+    for s in &r.stores {
+        tracer.instant("elim", "elim.store", || {
+            vec![
+                ("key", ArgVal::Str(source.to_string())),
+                ("stmt", ArgVal::U64(s.stmt as u64)),
+                (
+                    "verdict",
+                    ArgVal::Str(if s.deleted { "deleted" } else { "kept" }.to_string()),
+                ),
+                ("reason", ArgVal::Str(s.reason.clone())),
+            ]
+        });
+    }
+    for b in &r.barriers {
+        tracer.instant("elim", "elim.barrier", || {
+            vec![
+                ("key", ArgVal::Str(source.to_string())),
+                ("stmt", ArgVal::U64(b.stmt as u64)),
+                (
+                    "verdict",
+                    ArgVal::Str(if b.elided { "elided" } else { "kept" }.to_string()),
+                ),
+                ("reason", ArgVal::Str(b.reason.clone())),
+            ]
+        });
+    }
+    tracer.instant("elim", "elim.summary", || {
+        vec![
+            ("key", ArgVal::Str(source.to_string())),
+            ("forwarded_loads", ArgVal::U64(u64::from(r.forwarded_loads))),
+            ("dce_stmts", ArgVal::U64(u64::from(r.dce_stmts))),
+            (
+                "bail",
+                ArgVal::Str(r.bail.clone().unwrap_or_else(|| "none".to_string())),
+            ),
+        ]
+    });
+}
+
 /// Fold the plan's per-store / per-barrier verdicts into the report.
 fn report_from(p: &Plan) -> ElimReport {
     use super::phase_liveness::{BarrierElim, StoreElim};

@@ -136,6 +136,24 @@ struct BlockRun {
 /// A block's result slot, filled by whichever worker ran it.
 type BlockSlot = Mutex<Option<Result<BlockRun, SimError>>>;
 
+/// Why the superblock fast path would fall back to per-uop execution for
+/// a run under `cfg` — `None` when the fast path is eligible. Mirrors the
+/// per-block gate in the executor (`fast = superblocks && !record &&
+/// !detect_races`; trace recording only covers block (0,0,0), so
+/// `"trace-hooks-block0"` means *that block* runs per-uop while the rest
+/// of the grid stays fast). Exposed for the `sim.engine` trace event.
+pub fn engine_fallback_reason(cfg: &SimConfig) -> Option<&'static str> {
+    if !cfg.superblocks {
+        Some("superblocks-disabled")
+    } else if cfg.detect_races {
+        Some("race-shadow")
+    } else if cfg.record_trace {
+        Some("trace-hooks-block0")
+    } else {
+        None
+    }
+}
+
 /// Run a decoded kernel over the whole grid.
 ///
 /// `cfg.sim_threads` workers execute contiguous block ranges; results are

@@ -1605,6 +1605,63 @@ mod tests {
         r_dec
     }
 
+    /// Pins *exactly* which fields the manual [`PartialEq`] on `SimStats`
+    /// excludes: the two engine-telemetry counters and nothing else. If a
+    /// semantic counter ever slips into the excluded set, the loop below
+    /// fails; if telemetry starts breaking equality, the first assertion
+    /// fails.
+    #[test]
+    fn simstats_equality_excludes_exactly_the_engine_telemetry() {
+        let base = SimStats {
+            warp_instructions: 1,
+            thread_instructions: 2,
+            global_loads: 3,
+            nc_loads: 4,
+            shared_loads: 5,
+            stores: 6,
+            shfls: 7,
+            branches: 8,
+            divergent_branches: 9,
+            uninit_reads: 10,
+            cross_block_write_conflicts: 11,
+            barriers: 12,
+            barrier_phases: 13,
+            superblocks_entered: 14,
+            vector_warp_steps: 15,
+        };
+
+        // telemetry-only differences must NOT break equality
+        let mut telemetry = base;
+        telemetry.superblocks_entered += 100;
+        telemetry.vector_warp_steps += 100;
+        assert_eq!(base, telemetry, "engine telemetry must be excluded");
+
+        // every semantic counter MUST break equality when bumped
+        type Bump = (&'static str, fn(&mut SimStats));
+        let bumps: [Bump; 13] = [
+            ("warp_instructions", |s| s.warp_instructions += 1),
+            ("thread_instructions", |s| s.thread_instructions += 1),
+            ("global_loads", |s| s.global_loads += 1),
+            ("nc_loads", |s| s.nc_loads += 1),
+            ("shared_loads", |s| s.shared_loads += 1),
+            ("stores", |s| s.stores += 1),
+            ("shfls", |s| s.shfls += 1),
+            ("branches", |s| s.branches += 1),
+            ("divergent_branches", |s| s.divergent_branches += 1),
+            ("uninit_reads", |s| s.uninit_reads += 1),
+            ("cross_block_write_conflicts", |s| {
+                s.cross_block_write_conflicts += 1;
+            }),
+            ("barriers", |s| s.barriers += 1),
+            ("barrier_phases", |s| s.barrier_phases += 1),
+        ];
+        for (name, bump) in bumps {
+            let mut changed = base;
+            bump(&mut changed);
+            assert_ne!(base, changed, "{name} must participate in equality");
+        }
+    }
+
     /// c[i] = a[i] + b[i] over one block of 64 threads.
     #[test]
     fn vecadd_runs() {

@@ -1,0 +1,219 @@
+//! Observability integration (ISSUE PR 9).
+//!
+//! Pins the two contracts the tracing subsystem makes:
+//!
+//! 1. **Tracing never changes results.** A traced suite run produces
+//!    bit-identical artifacts (printed PTX, simulator stats, modelled
+//!    cycles) to an untraced run of the same benchmarks.
+//! 2. **The export is Perfetto-loadable.** Every event in the Chrome
+//!    trace-event document is well-formed: `ph` is `X` or `i`, a `dur`
+//!    field appears exactly on complete events, and the whole document
+//!    round-trips through the zero-dep JSON codec.
+//!
+//! Plus: spans cover every pipeline stage, store operations emit spans
+//! through the [`Vfs`] seam (including injected-fault outcomes), and a
+//! disabled tracer records nothing across a full run.
+
+use ptxasw::coordinator::{run_suite_on, BenchResult, PipelineConfig, PipelineError};
+use ptxasw::obs::{ArgVal, TracePhase, Tracer, METRICS_VERSION};
+use ptxasw::pipeline::{DiskStore, KeyBuilder, Pipeline, STAGES, STORE_KINDS};
+use ptxasw::ptx::printer::print_kernel;
+use ptxasw::suite::{by_name, shared_suite, suite, Benchmark};
+use ptxasw::util::{FaultFs, FaultKind, FaultOp, FaultRule, Json, RealFs, Vfs};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("ptxasw-obs-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn full_suite() -> Vec<Benchmark> {
+    suite().into_iter().chain(shared_suite()).collect()
+}
+
+fn unwrap_all(results: Vec<Result<BenchResult, PipelineError>>) -> Vec<BenchResult> {
+    results
+        .into_iter()
+        .map(|r| r.unwrap_or_else(|e| panic!("benchmark failed: {e}")))
+        .collect()
+}
+
+/// Bit-exact equality over everything a run produces: detection, the
+/// synthesized kernel text, simulator stats, validity and modelled cycles.
+fn assert_identical(a: &[BenchResult], b: &[BenchResult]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.name, y.name);
+        assert_eq!(x.detection.chosen, y.detection.chosen, "{}", x.name);
+        let (px, py) = (print_kernel(&x.kernel), print_kernel(&y.kernel));
+        assert_eq!(px, py, "{}: synthesized PTX diverged under tracing", x.name);
+        assert_eq!(x.baseline.sim_stats, y.baseline.sim_stats, "{}", x.name);
+        assert_eq!(x.baseline.valid, y.baseline.valid);
+        for ((xv, xo), (yv, yo)) in x.variants.iter().zip(&y.variants) {
+            assert_eq!(xv, yv);
+            assert_eq!(xo.sim_stats, yo.sim_stats, "{} {}", x.name, xv.name());
+            assert_eq!(xo.valid, yo.valid, "{} {}", x.name, xv.name());
+            for (xr, yr) in xo.reports.iter().zip(&yo.reports) {
+                let (cx, cy) = (xr.effective_cycles, yr.effective_cycles);
+                assert_eq!(cx.to_bits(), cy.to_bits(), "{}: cycles diverged", x.name);
+            }
+        }
+    }
+}
+
+/// The tentpole differential: an enabled tracer observes the entire suite
+/// (classic + shared families) without perturbing a single artifact bit,
+/// and the recorded spans cover every one of the eight pipeline stages.
+#[test]
+fn tracing_never_changes_results_and_spans_cover_every_stage() {
+    let benches = full_suite();
+    let cfg = PipelineConfig::default();
+
+    let plain = Pipeline::new();
+    let untraced = unwrap_all(run_suite_on(&plain, &benches, &cfg));
+    let purity = plain.tracer().is_empty();
+    assert!(purity, "a disabled tracer must record nothing over a full run");
+
+    let tracer = Arc::new(Tracer::enabled());
+    let traced_p = Pipeline::new().with_tracer(tracer.clone());
+    let traced = unwrap_all(run_suite_on(&traced_p, &benches, &cfg));
+
+    assert_identical(&untraced, &traced);
+
+    let events = tracer.events();
+    assert!(!events.is_empty());
+    assert_eq!(tracer.dropped(), 0, "default ring must hold a suite run");
+    for stage in STAGES {
+        let covered = events
+            .iter()
+            .any(|e| e.name == stage.span_name() && e.phase == TracePhase::Complete);
+        assert!(covered, "missing a complete span for {}", stage.span_name());
+    }
+    // the engine-selection decision is recorded per simulation, and the
+    // cache-provenance instants ride along with their artifact family
+    let names: Vec<&str> = events.iter().map(|e| e.name).collect();
+    assert!(names.contains(&"sim.engine"), "{names:?}");
+    assert!(names.contains(&"artifact.emulated"), "{names:?}");
+    assert!(names.contains(&"artifact.workload"), "{names:?}");
+}
+
+/// The Chrome export is structurally valid for Perfetto: parseable by the
+/// same codec that wrote it, `traceEvents` non-empty, every event carries
+/// name/cat/ph/ts/pid/tid, `ph ∈ {X, i}`, and `dur` appears iff `ph == X`.
+#[test]
+fn chrome_export_is_perfetto_valid() {
+    let tracer = Arc::new(Tracer::enabled());
+    let p = Pipeline::new().with_tracer(tracer.clone());
+    let b = by_name("gradient").unwrap();
+    let cfg = PipelineConfig::default();
+    unwrap_all(run_suite_on(&p, std::slice::from_ref(&b), &cfg));
+
+    let rendered = tracer.export_chrome().render();
+    let doc = Json::parse(&rendered).expect("export must be valid JSON");
+    let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+    assert!(!events.is_empty());
+    for e in events {
+        assert!(e.get("name").and_then(Json::as_str).is_some(), "{e:?}");
+        assert!(e.get("cat").and_then(Json::as_str).is_some(), "{e:?}");
+        assert!(e.get("ts").is_some(), "{e:?}");
+        assert_eq!(e.get("pid").and_then(Json::as_u64), Some(1), "{e:?}");
+        assert!(e.get("tid").and_then(Json::as_u64).is_some(), "{e:?}");
+        let ph = e.get("ph").and_then(Json::as_str).expect("ph");
+        match ph {
+            "X" => assert!(e.get("dur").is_some(), "X without dur: {e:?}"),
+            "i" => {
+                assert!(e.get("dur").is_none(), "instant with dur: {e:?}");
+                assert_eq!(e.get("s").and_then(Json::as_str), Some("t"), "{e:?}");
+            }
+            other => panic!("unexpected phase {other:?}: {e:?}"),
+        }
+    }
+    let other = doc.get("otherData").expect("otherData");
+    assert_eq!(other.get("dropped_events").and_then(Json::as_u64), Some(0));
+}
+
+/// Store operations emit provenance spans through the [`Vfs`] seam — so
+/// injected IO faults surface as `failed`/`miss` outcomes in the trace,
+/// exactly where the fault-injection suite drives them.
+#[test]
+fn store_ops_emit_spans_through_the_vfs_seam() {
+    let dir = tmpdir("store");
+    let fs = FaultFs::new(Arc::new(RealFs));
+    let vfs: Arc<dyn Vfs> = fs.clone();
+    let tracer = Arc::new(Tracer::enabled());
+    let mut store = DiskStore::open_on(vfs, &dir, 1 << 20).unwrap();
+    store.set_tracer(tracer.clone());
+    let kind = STORE_KINDS[0];
+    let key = |n: u64| KeyBuilder::new("obs-store").u64(n).finish();
+
+    store.store(kind, key(1), b"payload-one");
+    assert!(store.load(kind, key(1)).is_some());
+    assert!(store.load(kind, key(2)).is_none());
+
+    // one injected write failure: the store degrades and the span says so
+    fs.push_rules(&[FaultRule {
+        op: FaultOp::Write,
+        nth: 0,
+        kind: FaultKind::Error,
+    }]);
+    fs.arm(true);
+    store.store(kind, key(3), b"payload-three");
+    fs.arm(false);
+
+    store.evict_to_limit();
+
+    let events = tracer.events();
+    let outcomes: Vec<(&str, String)> = events
+        .iter()
+        .map(|e| {
+            let outcome = e.args.iter().find_map(|(k, v)| match v {
+                ArgVal::Str(s) if *k == "outcome" => Some(s.clone()),
+                _ => None,
+            });
+            (e.name, outcome.unwrap_or_default())
+        })
+        .collect();
+    let has = |name: &str, outcome: &str| outcomes.iter().any(|(n, o)| *n == name && o == outcome);
+    assert!(has("store.store", "stored"), "{outcomes:?}");
+    assert!(has("store.load", "hit"), "{outcomes:?}");
+    assert!(has("store.load", "miss"), "{outcomes:?}");
+    assert!(has("store.store", "failed"), "{outcomes:?}");
+    let evicted = events
+        .iter()
+        .any(|e| e.name == "store.evict" && e.phase == TracePhase::Complete);
+    assert!(evicted, "eviction sweep records a complete span");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The unified metrics snapshot folds the cache, stage, engine and store
+/// stat families into one versioned registry with stable dotted names.
+#[test]
+fn metrics_snapshot_unifies_the_stat_families() {
+    let p = Pipeline::new();
+    let b = by_name("vecadd").unwrap();
+    let cfg = PipelineConfig::default();
+    unwrap_all(run_suite_on(&p, std::slice::from_ref(&b), &cfg));
+
+    let m = p.metrics();
+    assert_eq!(m.version, METRICS_VERSION);
+    assert!(m.get("cache.emulate.misses").unwrap() >= 1);
+    assert!(m.get("stage.emulate.runs").unwrap() >= 1);
+    assert!(m.get("stage.validate.runs").unwrap() >= 1);
+    assert_eq!(m.get("store.enabled"), Some(0), "no disk store attached");
+    assert_eq!(m.get("trace.dropped"), Some(0));
+    let lat = m.get_hist("stage.emulate.latency").expect("stage histogram");
+    assert!(lat.count >= 1);
+    let runs = m.get("stage.emulate.runs").unwrap();
+    assert_eq!(lat.count, runs, "histogram count mirrors the run counter");
+
+    // both render paths carry the registry
+    let table = m.render_table();
+    assert!(table.contains("cache.emulate.misses"), "{table}");
+    assert!(table.contains("stage.emulate.latency"), "{table}");
+    let doc = Json::parse(&m.to_json().render()).expect("metrics JSON parses");
+    assert_eq!(doc.get("metrics_version").and_then(Json::as_u64), Some(1));
+    let counters = doc.get("counters").expect("counters object");
+    assert!(counters.get("stage.emulate.runs").is_some());
+}
