@@ -1,30 +1,42 @@
-//! `servebench` — serve-mode throughput + poisoned-batch + tracing-cost
-//! probe (BENCH_9).
+//! `servebench` — serve-mode throughput + concurrency + resume +
+//! tracing-cost probe (BENCH_10).
 //!
-//! Drives an in-process [`ServeSession`] (the same object `ptxasw serve`
+//! Drives in-process [`ServeSession`]s (the same object `ptxasw serve`
 //! wraps around stdin or a socket) through the full suite as JSON-lines
-//! request batches and records `BENCH_9.json`:
+//! request batches and records `BENCH_10.json`:
 //!
 //! 1. **cold vs warm throughput** — the batch against a fresh cache dir,
 //!    then again from a fresh session over the warmed dir (the stand-in
 //!    for a second process); the warm pass must report disk hits;
-//! 2. **poisoned batch** — parse-error, flow-blowup and panicking
+//! 2. **requests/sec vs threads** — the warm batch through
+//!    [`serve_pooled`] at `--serve-threads 1` and `4`. The run
+//!    **hard-fails** unless the pooled output is byte-identical to the
+//!    serial run and the 4-thread warm throughput is strictly above
+//!    serial;
+//! 3. **widened-retry resume** — a flow-blowup kernel that trips the
+//!    tight budget and fits the wide one, once over a store (the wide
+//!    retry must *resume* the tight run's persisted frontier image) and
+//!    once without (the cold-retry baseline latency column);
+//! 4. **poisoned batch** — parse-error, flow-blowup and panicking
 //!    requests interleaved with healthy kernels. The run **hard-fails**
 //!    unless every healthy kernel's rewritten PTX is bit-exact with a
 //!    clean serial run and every pathological request produced its typed
-//!    error record (`ParseError` / `EmuError` / `Panicked`) — one bad
-//!    request must cost exactly one response, never the session;
-//! 3. **tracing cost** — the disabled-tracer cost per span site is
+//!    error record (`ParseError` / `EmuError` / `Panicked`);
+//! 5. **tracing cost** — the disabled-tracer cost per span site is
 //!    measured directly and projected onto a warm request's span count;
 //!    the run **hard-fails** if that overhead exceeds 2% of a warm
-//!    request, and if a `"trace": true` request is not bit-exact with
-//!    its untraced twin.
+//!    request, if a `"trace": true` request is not bit-exact with its
+//!    untraced twin, or if `--trace-sample` perturbs response bytes;
+//! 6. **index audit** — after all of the above churned the store, its
+//!    sharded index must agree with a full `verify` directory walk.
 //!
 //!     cargo run --release --example servebench -- [--out FILE]
 
 use ptxasw::cli::Args;
 use ptxasw::obs::Tracer;
-use ptxasw::pipeline::{DiskStore, Pipeline, ServeOpts, ServeSession, DEFAULT_MAX_BYTES};
+use ptxasw::pipeline::{
+    serve_pooled, DiskStore, Pipeline, ServeOpts, ServeSession, DEFAULT_MAX_BYTES,
+};
 use ptxasw::ptx::{ast::Module, print_module};
 use ptxasw::shuffle::{DetectOpts, ElimOpts, Variant};
 use ptxasw::suite;
@@ -37,6 +49,7 @@ use std::time::Instant;
 /// leave distinct accumulator values, so 2^bits distinct environments
 /// defeat memoization. 13 bits = 8192 flows — over even the default wide
 /// budget (4096): a guaranteed typed `EmuError` after the widen retry.
+/// 10 bits = 1024 flows — over tight (512), under wide: the resume path.
 fn blowup_ptx(bits: usize) -> String {
     let mut body = String::new();
     for i in 0..bits {
@@ -68,16 +81,31 @@ fn asm_req(id: u64, ptx: &str) -> String {
     .render()
 }
 
-fn run_batch(session: &mut ServeSession, lines: &[String]) -> Vec<Json> {
+/// Serve a batch through the pooled entry point (`threads == 1` is the
+/// serial loop) and return the raw response bytes plus parsed lines.
+fn run_pooled(
+    session: &mut ServeSession,
+    lines: &[String],
+    threads: usize,
+) -> (String, Vec<Json>) {
     let mut out = Vec::new();
-    session
-        .serve(std::io::Cursor::new(lines.join("\n")), &mut out)
-        .expect("in-memory serve IO");
-    String::from_utf8(out)
-        .unwrap()
+    serve_pooled(
+        session,
+        std::io::Cursor::new(lines.join("\n")),
+        &mut out,
+        threads,
+    )
+    .expect("in-memory serve IO");
+    let raw = String::from_utf8(out).unwrap();
+    let parsed = raw
         .lines()
         .map(|l| Json::parse(l).expect("valid response line"))
-        .collect()
+        .collect();
+    (raw, parsed)
+}
+
+fn run_batch(session: &mut ServeSession, lines: &[String]) -> Vec<Json> {
+    run_pooled(session, lines, 1).1
 }
 
 /// The serial ground truth: what `ptxasw asm` (defaults) prints for `src`.
@@ -124,7 +152,7 @@ fn disabled_ns_per_span() -> f64 {
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
-    let out_path = args.opt("out").unwrap_or("BENCH_9.json").to_string();
+    let out_path = args.opt("out").unwrap_or("BENCH_10.json").to_string();
 
     let dir = std::env::temp_dir().join(format!("ptxasw-servebench-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
@@ -166,7 +194,78 @@ fn main() {
         );
     }
 
-    // -- 2. poisoned batch --------------------------------------------------
+    // -- 2. requests/sec vs --serve-threads --------------------------------
+    // the warm batch, repeated with distinct ids so the multiplexed run
+    // has enough work to overlap; serial (threads=1) output is the
+    // byte-exactness ground truth for the pooled runs
+    let big: Vec<String> = (0..3)
+        .flat_map(|rep| {
+            sources
+                .iter()
+                .enumerate()
+                .map(move |(i, s)| asm_req((rep * 1000 + i) as u64, s))
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    let mut rps = Vec::new();
+    let mut serial_bytes = String::new();
+    for &threads in &[1usize, 4] {
+        let st = Arc::new(DiskStore::open(&dir, DEFAULT_MAX_BYTES).unwrap());
+        let mut s = ServeSession::new(ServeOpts::default(), Some(st));
+        let t0 = Instant::now();
+        let (raw, rs) = run_pooled(&mut s, &big, threads);
+        let dt = t0.elapsed().as_secs_f64();
+        assert!(
+            rs.iter().all(|r| r.get("ok").unwrap().as_bool() == Some(true)),
+            "warm pooled batch must serve cleanly at {threads} thread(s)"
+        );
+        if threads == 1 {
+            serial_bytes = raw;
+        } else {
+            assert_eq!(
+                raw, serial_bytes,
+                "pooled responses at {threads} threads must be byte-identical \
+                 to the serial run"
+            );
+        }
+        rps.push((threads, big.len() as f64 / dt.max(1e-9), dt));
+    }
+    let (serial_rps, pooled_rps) = (rps[0].1, rps[1].1);
+    assert!(
+        pooled_rps > serial_rps,
+        "4-thread warm throughput ({pooled_rps:.1} req/s) must be strictly \
+         above serial ({serial_rps:.1} req/s)"
+    );
+
+    // -- 3. widened-retry latency: frontier resume vs cold re-emulation ----
+    let resume_src = blowup_ptx(10); // 1024 flows: over tight, under wide
+    let rdir = std::env::temp_dir().join(format!("ptxasw-servebench-resume-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&rdir);
+    let rstore = Arc::new(DiskStore::open(&rdir, DEFAULT_MAX_BYTES).unwrap());
+    let mut with_store = ServeSession::new(ServeOpts::default(), Some(rstore));
+    let t0 = Instant::now();
+    let rr = run_batch(&mut with_store, &[asm_req(0, &resume_src)]);
+    let widened_resume_s = t0.elapsed().as_secs_f64();
+    assert_eq!(rr[0].get("widened").and_then(Json::as_bool), Some(true));
+    let frontier_resumes = with_store.pipeline().stats().frontier_resumes;
+    assert_eq!(
+        frontier_resumes, 1,
+        "the wide retry over a store must resume the tight frontier image"
+    );
+
+    let mut no_store = ServeSession::new(ServeOpts::default(), None);
+    let t0 = Instant::now();
+    let cr = run_batch(&mut no_store, &[asm_req(0, &resume_src)]);
+    let widened_cold_s = t0.elapsed().as_secs_f64();
+    assert_eq!(cr[0].get("widened").and_then(Json::as_bool), Some(true));
+    assert_eq!(
+        cr[0].get("ptx").and_then(|p| p.as_str()),
+        rr[0].get("ptx").and_then(|p| p.as_str()),
+        "resumed retry must produce the cold retry's exact PTX"
+    );
+    let _ = std::fs::remove_dir_all(&rdir);
+
+    // -- 4. poisoned batch --------------------------------------------------
     let healthy: Vec<&String> = sources.iter().take(4).collect();
     let expect: Vec<String> = healthy.iter().map(|s| expected_asm(s)).collect();
     let blow = blowup_ptx(13);
@@ -214,7 +313,31 @@ fn main() {
     assert_eq!(pstats.errors, 3);
     assert_eq!(pstats.ok, 4);
 
-    // -- 3. tracing cost ----------------------------------------------------
+    // and the same poison under 4-way multiplexing stays byte-identical
+    let store3b = Arc::new(DiskStore::open(&dir, DEFAULT_MAX_BYTES).unwrap());
+    let mut poisoned_pooled = ServeSession::new(
+        ServeOpts {
+            allow_test_faults: true,
+            ..ServeOpts::default()
+        },
+        Some(store3b),
+    );
+    let store3c = Arc::new(DiskStore::open(&dir, DEFAULT_MAX_BYTES).unwrap());
+    let mut poisoned_serial = ServeSession::new(
+        ServeOpts {
+            allow_test_faults: true,
+            ..ServeOpts::default()
+        },
+        Some(store3c),
+    );
+    let (praw_serial, _) = run_pooled(&mut poisoned_serial, &lines, 1);
+    let (praw_pooled, _) = run_pooled(&mut poisoned_pooled, &lines, 4);
+    assert_eq!(
+        praw_pooled, praw_serial,
+        "poisoned pooled batch must be byte-identical to the serial run"
+    );
+
+    // -- 5. tracing cost ----------------------------------------------------
     // (a) a traced request over the warmed dir is bit-exact with its
     // untraced twin and reports its span events + trace id
     let store4 = Arc::new(DiskStore::open(&dir, DEFAULT_MAX_BYTES).unwrap());
@@ -239,7 +362,31 @@ fn main() {
         .expect("traced response carries its span events");
     assert!(spans_per_req >= 1, "at least the serve.request span");
 
-    // (b) the disabled-tracer overhead projected onto a warm request must
+    // (b) span sampling records into the ring but never touches the wire
+    let store5 = Arc::new(DiskStore::open(&dir, DEFAULT_MAX_BYTES).unwrap());
+    let mut sampled = ServeSession::new(
+        ServeOpts {
+            trace_sample: 1,
+            ..ServeOpts::default()
+        },
+        Some(store5),
+    );
+    let srs = run_batch(&mut sampled, &[asm_req(0, &sources[0])]);
+    assert!(
+        srs[0].get("trace").is_none() && srs[0].get("trace_id").is_none(),
+        "--trace-sample must not attach spans to responses"
+    );
+    assert_eq!(
+        srs[0].get("ptx").and_then(|p| p.as_str()),
+        warm_rs[0].get("ptx").and_then(|p| p.as_str()),
+        "a sampled request must be bit-exact with an unsampled one"
+    );
+    assert!(
+        !sampled.tracer().is_empty(),
+        "the sampled request's spans must land in the session ring"
+    );
+
+    // (c) the disabled-tracer overhead projected onto a warm request must
     // stay under 2% — the hard regression gate for the span plumbing
     let disabled_ns = disabled_ns_per_span();
     let warm_req_ns = warm_s.max(1e-9) * 1e9 / batch.len() as f64;
@@ -248,6 +395,18 @@ fn main() {
         traced_overhead_pct < 2.0,
         "tracing-disabled overhead {traced_overhead_pct:.4}% of a warm request \
          ({spans_per_req} spans x {disabled_ns:.1}ns vs {warm_req_ns:.0}ns) breaches the 2% gate"
+    );
+
+    // -- 6. index audit ------------------------------------------------------
+    // after every session above churned the store, the O(changed) sharded
+    // index must still agree with the ground truth of a full verify walk
+    let audit = DiskStore::open(&dir, DEFAULT_MAX_BYTES).unwrap();
+    let check = audit.verify(false);
+    assert_eq!(check.bad, 0, "no artifact may decode-fail: {:?}", check.bad_paths);
+    assert!(
+        check.index_mismatch.is_empty(),
+        "sharded index disagrees with the verify scan: {:?}",
+        check.index_mismatch
     );
 
     // -- report -------------------------------------------------------------
@@ -261,6 +420,24 @@ fn main() {
     writeln!(j, "  \"cold_req_per_s\": {:.2},", n / cold_s.max(1e-9)).unwrap();
     writeln!(j, "  \"warm_req_per_s\": {:.2},", n / warm_s.max(1e-9)).unwrap();
     writeln!(j, "  \"warm_disk_hits\": {warm_hits},").unwrap();
+    writeln!(j, "  \"threads\": [").unwrap();
+    for (i, (t, r, dt)) in rps.iter().enumerate() {
+        let comma = if i + 1 < rps.len() { "," } else { "" };
+        writeln!(
+            j,
+            "    {{\"serve_threads\": {t}, \"warm_req_per_s\": {r:.2}, \
+             \"warm_batch_s\": {dt:.6}}}{comma}"
+        )
+        .unwrap();
+    }
+    writeln!(j, "  ],").unwrap();
+    writeln!(j, "  \"pooled_speedup\": {:.3},", pooled_rps / serial_rps).unwrap();
+    writeln!(j, "  \"pooled_bit_exact\": true,").unwrap();
+    writeln!(j, "  \"widened_retry\": {{").unwrap();
+    writeln!(j, "    \"resume_s\": {widened_resume_s:.6},").unwrap();
+    writeln!(j, "    \"cold_s\": {widened_cold_s:.6},").unwrap();
+    writeln!(j, "    \"frontier_resumes\": {frontier_resumes}").unwrap();
+    writeln!(j, "  }},").unwrap();
     writeln!(j, "  \"poisoned\": {{").unwrap();
     writeln!(j, "    \"requests\": {},", pstats.requests).unwrap();
     writeln!(j, "    \"ok\": {},", pstats.ok).unwrap();
@@ -275,18 +452,23 @@ fn main() {
     writeln!(j, "    \"warm_request_ns\": {warm_req_ns:.0},").unwrap();
     writeln!(j, "    \"traced_overhead_pct\": {traced_overhead_pct:.5},").unwrap();
     writeln!(j, "    \"traced_matches_untraced\": true").unwrap();
-    writeln!(j, "  }}").unwrap();
+    writeln!(j, "  }},").unwrap();
+    writeln!(j, "  \"index_agrees\": true").unwrap();
     writeln!(j, "}}").unwrap();
 
-    std::fs::write(&out_path, &j).expect("write BENCH_9.json");
+    std::fs::write(&out_path, &j).expect("write BENCH_10.json");
     eprintln!(
         "servebench: {} kernels — cold {:.3}s, warm {:.3}s ({} disk hits); \
-         poisoned batch: {} ok / {} typed errors, all healthy bit-exact; \
-         tracing: {:.1}ns/span disabled, {:.4}% of a warm request -> {out_path}",
+         pooled x{:.2} at 4 threads, bit-exact; widened retry {:.3}s resumed \
+         vs {:.3}s cold; poisoned batch: {} ok / {} typed errors; tracing: \
+         {:.1}ns/span disabled, {:.4}% of a warm request; index agrees -> {out_path}",
         batch.len(),
         cold_s,
         warm_s,
         warm_hits,
+        pooled_rps / serial_rps,
+        widened_resume_s,
+        widened_cold_s,
         pstats.ok,
         pstats.errors,
         disabled_ns,

@@ -172,6 +172,16 @@ mod tests {
     }
 
     #[test]
+    fn serve_concurrency_options_parse() {
+        // `--serve-threads` and `--trace-sample` take values and leave
+        // neighbors intact
+        let a = parse("serve --serve-threads 4 --trace-sample 16 --socket /tmp/s.sock");
+        assert_eq!(a.opt_usize("serve-threads", 1).unwrap(), 4);
+        assert_eq!(a.opt_usize("trace-sample", 0).unwrap(), 16);
+        assert_eq!(a.opt("socket"), Some("/tmp/s.sock"));
+    }
+
+    #[test]
     fn json_is_a_bare_flag() {
         // `metrics --json` must not swallow a following cache-dir path
         let a = parse("metrics --json --cache-dir /tmp/x");

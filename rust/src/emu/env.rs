@@ -5,7 +5,7 @@
 //! (paper §4.2 "duplicating the register environment") is a memcpy.
 
 use crate::ptx::ast::{Address, Kernel, Op, Operand, Reg, Statement};
-use crate::sym::TermId;
+use crate::sym::{TermId, TermPool};
 use crate::util::FnvMap;
 
 /// Dense register index for one kernel.
@@ -166,12 +166,16 @@ impl RegEnv {
         self.vals[i as usize] = Some(v);
     }
 
-    /// FNV-1a over the value ids — used for path memoization (§4.2).
-    pub fn fingerprint(&self) -> u64 {
+    /// FNV-1a over the values' *structural* fingerprints ([`TermPool::fp`])
+    /// — used for path memoization (§4.2). Structural rather than id-based
+    /// so the memo table survives the persistence codec's relocation: a
+    /// resumed emulation in a fresh pool computes the same keys the tight
+    /// run computed, whatever the local `TermId`s are.
+    pub fn fingerprint(&self, pool: &TermPool) -> u64 {
         let mut h: u64 = 0xcbf2_9ce4_8422_2325;
         for v in &self.vals {
             let x = match v {
-                Some(t) => t.0 as u64 + 1,
+                Some(t) => pool.fp(*t) | 1,
                 None => 0,
             };
             h ^= x;
@@ -214,13 +218,41 @@ $DONE: ret;
 
     #[test]
     fn env_fingerprint_changes_with_values() {
+        let mut p = TermPool::new();
+        let t = p.symbol("x", 32);
         let mut e = RegEnv::new(4);
-        let f0 = e.fingerprint();
-        e.set(2, TermId(7));
-        let f1 = e.fingerprint();
+        let f0 = e.fingerprint(&p);
+        e.set(2, t);
+        let f1 = e.fingerprint(&p);
         assert_ne!(f0, f1);
         let mut e2 = RegEnv::new(4);
-        e2.set(2, TermId(7));
-        assert_eq!(e2.fingerprint(), f1);
+        e2.set(2, t);
+        assert_eq!(e2.fingerprint(&p), f1);
+    }
+
+    #[test]
+    fn env_fingerprint_is_pool_relocation_stable() {
+        // the same environment built in two pools with shifted ids must
+        // fingerprint identically — the property the resumable emulation
+        // image's memo table relies on
+        let mut p1 = TermPool::new();
+        let a1 = p1.symbol("a", 32);
+        let c1 = p1.constant(3, 32);
+        let v1 = p1.bin(crate::sym::BvOp::Add, a1, c1);
+        let mut e1 = RegEnv::new(3);
+        e1.set(0, a1);
+        e1.set(2, v1);
+
+        let mut p2 = TermPool::new();
+        p2.symbol("noise", 64); // shift ids
+        let a2 = p2.symbol("a", 32);
+        let c2 = p2.constant(3, 32);
+        let v2 = p2.bin(crate::sym::BvOp::Add, a2, c2);
+        let mut e2 = RegEnv::new(3);
+        e2.set(0, a2);
+        e2.set(2, v2);
+
+        assert_ne!(a1, a2, "ids should actually differ across the pools");
+        assert_eq!(e1.fingerprint(&p1), e2.fingerprint(&p2));
     }
 }

@@ -13,6 +13,7 @@ pub mod exec;
 pub mod induction;
 pub mod memtrace;
 
+use crate::obs::{ArgVal, Tracer};
 use crate::ptx::ast::{Kernel, Op, Statement};
 use crate::sym::{Assumptions, SessionInterner, TermId, TermPool, Truth};
 use env::{RegEnv, RegInterner};
@@ -204,6 +205,61 @@ impl std::fmt::Display for EmuError {
 
 impl std::error::Error for EmuError {}
 
+/// The frontier of an emulation stopped by a *global* budget trip (flow
+/// limit or total-step limit): everything a wider retry needs to resume
+/// exploration exactly where the tight run stopped, instead of
+/// re-emulating flow zero. Because the limits only decide *when to stop*
+/// — never *what to explore* — the tight run's prefix is bit-identical
+/// to a wider run's prefix, so a resumed run reproduces the wider run's
+/// result exactly. (A per-flow step truncation breaks that equivalence —
+/// the tight run keeps going on *other* flows where the wide run would
+/// have continued the truncated one — so truncated runs never capture a
+/// frontier; see [`EmuOutcome::Failed`].)
+#[derive(Debug)]
+pub struct PartialEmulation {
+    pub pool: TermPool,
+    pub tid_sym: TermId,
+    pub stats: EmuStats,
+    /// The budgets the run stopped under. A resume must be wider-or-equal
+    /// on every axis ([`resume_outcome`] verifies this).
+    pub limits: Limits,
+    /// Flows finished before the budget tripped.
+    pub done: Vec<FlowResult>,
+    /// The worklist at the stop point, in LIFO order (last entry is the
+    /// next to execute — including the flow that was in hand when the
+    /// budget tripped, pushed back at a statement boundary).
+    pub pending: Vec<Flow>,
+    /// Memo keys as (pc, structural env fingerprint), sorted. Structural
+    /// ([`TermPool::fp`]) so the keys survive relocation into the
+    /// resuming process's pool.
+    pub memo: Vec<(usize, u64)>,
+    pub next_flow_id: u32,
+    /// The budget error the tight caller observes.
+    pub error: EmuError,
+}
+
+/// Outcome of a frontier-capturing emulation.
+#[derive(Debug)]
+pub enum EmuOutcome {
+    Complete(EmulationResult),
+    /// Stopped by a global budget with a resumable frontier.
+    Partial(Box<PartialEmulation>),
+    /// Failed without a resumable frontier (unknown label, or a budget
+    /// trip after a per-flow truncation already diverged the prefix).
+    Failed(EmuError),
+}
+
+impl EmuOutcome {
+    /// Collapse to the classic result shape (frontier dropped).
+    pub fn into_result(self) -> Result<EmulationResult, EmuError> {
+        match self {
+            EmuOutcome::Complete(r) => Ok(r),
+            EmuOutcome::Partial(p) => Err(p.error),
+            EmuOutcome::Failed(e) => Err(e),
+        }
+    }
+}
+
 /// The emulator: owns the term pool and the per-kernel static index.
 #[derive(Debug)]
 pub struct Emu<'k> {
@@ -216,6 +272,9 @@ pub struct Emu<'k> {
     limits: Limits,
     memo: HashSet<(usize, u64)>,
     next_flow_id: u32,
+    /// Fork instants (`emu.fork`) land here when present, so a budget
+    /// blowup shows *where* the fork explosion started.
+    tracer: Option<Arc<Tracer>>,
 }
 
 /// Emulate a kernel with default limits (private, single-use session).
@@ -235,10 +294,23 @@ pub fn emulate_in_session(
     limits: Limits,
     session: Arc<SessionInterner>,
 ) -> Result<EmulationResult, EmuError> {
+    emulate_outcome(kernel, limits, session, None).into_result()
+}
+
+/// Frontier-capturing emulation: like [`emulate_in_session`] but a global
+/// budget trip yields the resumable [`PartialEmulation`] instead of a bare
+/// error, and flow forks are recorded as `emu.fork` instants on `tracer`.
+pub fn emulate_outcome(
+    kernel: &Kernel,
+    limits: Limits,
+    session: Arc<SessionInterner>,
+    tracer: Option<Arc<Tracer>>,
+) -> EmuOutcome {
     let mut pool = TermPool::in_session(session);
     let mut regs = RegInterner::from_kernel(kernel);
     let index = KernelIndex::build(kernel, &mut regs);
     let tid_sym = pool.symbol("tid.x", 32);
+    let nregs = regs.len();
     let mut emu = Emu {
         pool,
         kernel,
@@ -249,14 +321,105 @@ pub fn emulate_in_session(
         limits,
         memo: HashSet::new(),
         next_flow_id: 0,
+        tracer,
     };
-    let flows = emu.run()?;
-    Ok(EmulationResult {
-        pool: emu.pool,
-        flows,
+    let id = emu.new_flow_id();
+    let first = Flow {
+        id,
+        env: RegEnv::new(nregs),
+        assumptions: Assumptions::new(),
+        trace: MemTrace::default(),
+        pc: 0,
+        segment: 0,
+        phase: 0,
+        entered_loops: HashMap::new(),
+        steps: 0,
+    };
+    let out = emu.run_from(vec![first], Vec::new());
+    outcome_of(emu, out)
+}
+
+/// Continue a budget-stopped exploration under wider limits. The seed's
+/// pool/flows may come straight from a decoded disk image — every memo
+/// key is structural, so relocation into a fresh pool is transparent.
+/// Limits that are narrower than the seed's on any axis yield
+/// `Failed(seed.error)` (the frontier state would be unreachable under
+/// them); callers fall back to a cold emulation.
+pub fn resume_outcome(
+    kernel: &Kernel,
+    limits: Limits,
+    part: PartialEmulation,
+    tracer: Option<Arc<Tracer>>,
+) -> EmuOutcome {
+    let old = part.limits;
+    if limits.max_flows < old.max_flows
+        || limits.max_steps_per_flow < old.max_steps_per_flow
+        || limits.max_total_steps < old.max_total_steps
+    {
+        return EmuOutcome::Failed(part.error);
+    }
+    let mut pool = part.pool;
+    let mut regs = RegInterner::from_kernel(kernel);
+    let index = KernelIndex::build(kernel, &mut regs);
+    // hash-conses onto the image's relocated tid symbol
+    let tid_sym = pool.symbol("tid.x", 32);
+    let mut emu = Emu {
+        pool,
+        kernel,
+        regs,
+        index,
         tid_sym,
-        stats: emu.stats,
-    })
+        stats: part.stats,
+        limits,
+        memo: part.memo.into_iter().collect(),
+        next_flow_id: part.next_flow_id,
+        tracer,
+    };
+    let out = emu.run_from(part.pending, part.done);
+    outcome_of(emu, out)
+}
+
+/// Stop state of [`Emu::run_from`].
+enum RunOutcome {
+    Done(Vec<FlowResult>),
+    Budget {
+        work: Vec<Flow>,
+        done: Vec<FlowResult>,
+        error: EmuError,
+    },
+    Fatal(EmuError),
+}
+
+fn outcome_of(emu: Emu, out: RunOutcome) -> EmuOutcome {
+    match out {
+        RunOutcome::Done(flows) => EmuOutcome::Complete(EmulationResult {
+            pool: emu.pool,
+            flows,
+            tid_sym: emu.tid_sym,
+            stats: emu.stats,
+        }),
+        RunOutcome::Fatal(e) => EmuOutcome::Failed(e),
+        RunOutcome::Budget { work, done, error } => {
+            if done.iter().any(|f| f.end == FlowEnd::StepLimit) {
+                // a truncated flow means the tight prefix already diverged
+                // from what a wider run would have executed: not resumable
+                return EmuOutcome::Failed(error);
+            }
+            let mut memo: Vec<(usize, u64)> = emu.memo.into_iter().collect();
+            memo.sort_unstable();
+            EmuOutcome::Partial(Box::new(PartialEmulation {
+                pool: emu.pool,
+                tid_sym: emu.tid_sym,
+                stats: emu.stats,
+                limits: emu.limits,
+                done,
+                pending: work,
+                memo,
+                next_flow_id: emu.next_flow_id,
+                error,
+            }))
+        }
+    }
 }
 
 enum Step {
@@ -274,44 +437,55 @@ impl<'k> Emu<'k> {
         id
     }
 
-    fn run(&mut self) -> Result<Vec<FlowResult>, EmuError> {
-        let id = self.new_flow_id();
-        let first = Flow {
-            id,
-            env: RegEnv::new(self.regs.len()),
-            assumptions: Assumptions::new(),
-            trace: MemTrace::default(),
-            pc: 0,
-            segment: 0,
-            phase: 0,
-            entered_loops: HashMap::new(),
-            steps: 0,
-        };
-        let mut work = vec![first];
-        let mut done = Vec::new();
-
+    /// Drive the worklist to completion or a budget stop. `work`/`done`
+    /// may be freshly seeded (one initial flow) or a resumed frontier —
+    /// the loop itself cannot tell the difference, which is exactly the
+    /// resume-equivalence argument: budget checks happen only at
+    /// statement boundaries, so the frontier state *is* the wider run's
+    /// mid-state.
+    fn run_from(&mut self, mut work: Vec<Flow>, mut done: Vec<FlowResult>) -> RunOutcome {
         while let Some(mut flow) = work.pop() {
             if work.len() + done.len() > self.limits.max_flows {
-                return Err(EmuError::FlowLimit(self.limits.max_flows));
+                let error = EmuError::FlowLimit(self.limits.max_flows);
+                work.push(flow); // back at the LIFO top for the resume
+                return RunOutcome::Budget { work, done, error };
             }
             let end = loop {
                 if flow.steps >= self.limits.max_steps_per_flow {
                     break FlowEnd::StepLimit;
                 }
                 if self.stats.steps >= self.limits.max_total_steps {
-                    return Err(EmuError::StepLimit);
+                    work.push(flow); // statement boundary: state is clean
+                    return RunOutcome::Budget {
+                        work,
+                        done,
+                        error: EmuError::StepLimit,
+                    };
                 }
                 flow.steps += 1;
                 self.stats.steps += 1;
-                match self.step(&mut flow)? {
-                    Step::Continue => flow.pc += 1,
-                    Step::Jump(t) => {
+                match self.step(&mut flow) {
+                    Err(e) => return RunOutcome::Fatal(e),
+                    Ok(Step::Continue) => flow.pc += 1,
+                    Ok(Step::Jump(t)) => {
                         flow.segment += 1;
                         flow.pc = t;
                     }
-                    Step::End(e) => break e,
-                    Step::Fork { pred, target } => {
+                    Ok(Step::End(e)) => break e,
+                    Ok(Step::Fork { pred, target }) => {
                         self.stats.forks += 1;
+                        if let Some(tr) = &self.tracer {
+                            let (pc, fid) = (flow.pc as u64, flow.id as u64);
+                            let (depth, forks) = (work.len() as u64, self.stats.forks);
+                            tr.instant("emu", "emu.fork", || {
+                                vec![
+                                    ("pc", ArgVal::U64(pc)),
+                                    ("flow", ArgVal::U64(fid)),
+                                    ("work_depth", ArgVal::U64(depth)),
+                                    ("forks", ArgVal::U64(forks)),
+                                ]
+                            });
+                        }
                         // not-taken side continues in `flow`
                         let mut taken = flow.clone();
                         taken.id = self.new_flow_id();
@@ -354,7 +528,7 @@ impl<'k> Emu<'k> {
                 end,
             });
         }
-        Ok(done)
+        RunOutcome::Done(done)
     }
 
     fn reenters_loop(&self, flow: &Flow, target: usize) -> bool {
@@ -377,7 +551,8 @@ impl<'k> Emu<'k> {
                     self.abstract_loop(flow, &info, gen);
                 }
                 // memoization of identical environments at block entry
-                let key = (flow.pc, flow.env.fingerprint());
+                // (structural fingerprint: stable across image relocation)
+                let key = (flow.pc, flow.env.fingerprint(&self.pool));
                 if !self.memo.insert(key) {
                     self.stats.flows_memoized += 1;
                     return Ok(Step::End(FlowEnd::Memoized));
@@ -674,6 +849,128 @@ ret;
         .unwrap();
         let r = emulate(&k).unwrap();
         assert_eq!(r.flows.len(), 1, "predication must not fork");
+    }
+
+    /// 2^bits realizable flows: each bit forks on a distinct predicate
+    /// and accumulates a distinct constant, defeating memoization.
+    fn forky(bits: usize) -> String {
+        let mut body = String::new();
+        for i in 0..bits {
+            body.push_str(&format!(
+                "and.b32 %r10, %r1, {};\nsetp.eq.s32 %p{p}, %r10, 0;\n\
+                 @%p{p} bra $S{i};\nadd.s32 %r2, %r2, {};\n$S{i}:\n",
+                1u32 << i,
+                100 + i,
+                p = i + 1,
+            ));
+        }
+        format!(
+            ".visible .entry forky(.param .u64 out){{\n\
+             .reg .pred %p<{}>; .reg .b32 %r<12>; .reg .b64 %rd<3>;\n\
+             ld.param.u64 %rd1, [out];\ncvta.to.global.u64 %rd2, %rd1;\n\
+             mov.u32 %r1, %tid.x;\nmov.u32 %r2, 0;\n{body}\
+             st.global.u32 [%rd2], %r2;\nret;\n}}\n",
+            bits + 2,
+        )
+    }
+
+    fn wide_limits() -> Limits {
+        Limits {
+            max_flows: 4096,
+            max_steps_per_flow: 200_000,
+            max_total_steps: 20_000_000,
+        }
+    }
+
+    /// The tentpole resume contract: a frontier captured at the tight
+    /// flow limit, resumed under wide limits, reproduces the cold wide
+    /// run *exactly* (same flows, same order, same stats) while
+    /// re-exploring strictly fewer flows than the cold retry does.
+    #[test]
+    fn resume_from_flow_limit_matches_cold_wide_exactly() {
+        let k = parse_kernel(&forky(6)).unwrap(); // 64 flows
+        let tight = Limits {
+            max_flows: 8,
+            ..wide_limits()
+        };
+        let part = match emulate_outcome(&k, tight, Arc::new(SessionInterner::new()), None) {
+            EmuOutcome::Partial(p) => *p,
+            other => panic!("expected a resumable frontier, got {other:?}"),
+        };
+        assert!(matches!(part.error, EmuError::FlowLimit(8)));
+        assert!(!part.pending.is_empty(), "frontier carries pending flows");
+        let seeded_started = part.stats.flows_started;
+        assert!(seeded_started > 0);
+
+        let resumed = match resume_outcome(&k, wide_limits(), part, None) {
+            EmuOutcome::Complete(r) => r,
+            other => panic!("resume should complete, got {other:?}"),
+        };
+        let cold = emulate_in_session(&k, wide_limits(), Arc::new(SessionInterner::new()))
+            .unwrap();
+
+        assert_eq!(resumed.stats.to_words(), cold.stats.to_words());
+        assert_eq!(resumed.flows.len(), cold.flows.len());
+        assert_eq!(resumed.flows.len(), 64);
+        for (a, b) in resumed.flows.iter().zip(&cold.flows) {
+            assert_eq!(a.id, b.id, "flow order/ids must match the cold run");
+            assert_eq!(a.end, b.end);
+            assert_eq!(a.trace.loads.len(), b.trace.loads.len());
+            assert_eq!(a.trace.stores.len(), b.trace.stores.len());
+            assert_eq!(a.assumptions.fact_count(), b.assumptions.fact_count());
+        }
+        // the acceptance criterion: the resumed retry re-emulates strictly
+        // fewer flows than a cold retry starts from scratch
+        let re_emulated = resumed.stats.flows_started - seeded_started;
+        assert!(
+            re_emulated < cold.stats.flows_started,
+            "resume must re-explore fewer flows ({re_emulated} vs {})",
+            cold.stats.flows_started
+        );
+    }
+
+    /// Narrower-than-seed limits refuse to resume (the frontier state is
+    /// unreachable under them); a step-budget stop is resumable too.
+    #[test]
+    fn resume_guards_and_step_budget_frontier() {
+        let k = parse_kernel(&forky(5)).unwrap();
+        let tight = Limits {
+            max_flows: 4,
+            ..wide_limits()
+        };
+        let part = match emulate_outcome(&k, tight, Arc::new(SessionInterner::new()), None) {
+            EmuOutcome::Partial(p) => *p,
+            other => panic!("expected partial, got {other:?}"),
+        };
+        let narrower = Limits {
+            max_flows: 2,
+            ..wide_limits()
+        };
+        assert!(matches!(
+            resume_outcome(&k, narrower, part, None),
+            EmuOutcome::Failed(EmuError::FlowLimit(4))
+        ));
+
+        // total-step budget stop also captures a frontier
+        let steppy = Limits {
+            max_total_steps: 40,
+            ..wide_limits()
+        };
+        let part = match emulate_outcome(&k, steppy, Arc::new(SessionInterner::new()), None) {
+            EmuOutcome::Partial(p) => *p,
+            other => panic!("expected step-budget partial, got {other:?}"),
+        };
+        assert!(matches!(part.error, EmuError::StepLimit));
+        let resumed = resume_outcome(&k, wide_limits(), part, None);
+        let cold = emulate_in_session(&k, wide_limits(), Arc::new(SessionInterner::new()))
+            .unwrap();
+        match resumed {
+            EmuOutcome::Complete(r) => {
+                assert_eq!(r.stats.to_words(), cold.stats.to_words());
+                assert_eq!(r.flows.len(), cold.flows.len());
+            }
+            other => panic!("resume should complete, got {other:?}"),
+        }
     }
 
     #[test]

@@ -42,8 +42,9 @@ USAGE:
              [--stats] [--trace-out FILE] [cache flags]
   ptxasw apps [--threads N] [--sim-threads N] [--stats] [--trace-out FILE]
              [cache flags]
-  ptxasw serve [--socket PATH] [--deadline-ms N] [--sim-threads N]
-             [--test-faults] [--stats] [--trace-out FILE] [cache flags]
+  ptxasw serve [--socket PATH] [--serve-threads N] [--deadline-ms N]
+             [--sim-threads N] [--trace-sample N] [--test-faults] [--stats]
+             [--trace-out FILE] [cache flags]
   ptxasw metrics [--json] [cache flags]
   ptxasw store [--verify] [--heal] [cache flags]
   ptxasw artifacts [--dir DIR] [--run NAME]
@@ -55,11 +56,20 @@ USAGE:
                     an explicit per-kernel reason under --report, because
                     its store→load forwarding is warp-synchronous
   serve flags:
-  --socket PATH     listen on a Unix socket instead of stdin/stdout
-                    (connections served sequentially on one warm session)
+  --socket PATH     listen on a Unix socket instead of stdin/stdout; each
+                    connection gets its own worker session (own pipelines,
+                    own trace session id) over the shared disk store, so
+                    clients are served concurrently
+  --serve-threads N stdin batch mode: fan the request batch across N
+                    worker sessions on a work-stealing queue. Responses
+                    come back in input order and healthy output is
+                    byte-identical to a serial run (default 1)
   --deadline-ms N   default per-request deadline (a request's own
                     `deadline_ms` field overrides it; 0 = immediate
                     timeout, used by the tests)
+  --trace-sample N  record spans for every Nth request into the session
+                    ring (exported via --trace-out) without attaching
+                    them to responses; 0 = off
   --test-faults     honor the `__panic` test command so the per-request
                     isolation path can be exercised end-to-end
   store flags:
@@ -422,6 +432,8 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         allow_test_faults: args.flag("test-faults"),
         sim_threads: args.opt_usize("sim-threads", 1)?,
         engine: (superblocks, vector),
+        serve_threads: args.opt_usize("serve-threads", 1)?,
+        trace_sample: args.opt_usize("trace-sample", 0)? as u64,
         ..ServeOpts::default()
     };
     let tracer = make_tracer(args);
@@ -437,9 +449,13 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         None => {
             let stdin = std::io::stdin();
             let stdout = std::io::stdout();
-            session
-                .serve(stdin.lock(), stdout.lock())
-                .map_err(|e| format!("serve: {e}"))?;
+            ptxasw::pipeline::serve_pooled(
+                &mut session,
+                stdin.lock(),
+                stdout.lock(),
+                opts.serve_threads,
+            )
+            .map_err(|e| format!("serve: {e}"))?;
         }
     }
     if args.flag("stats") {
@@ -496,6 +512,15 @@ fn cmd_store(args: &Args) -> Result<(), String> {
         "store: verified {} bytes total · {} bad · {} healed",
         check.total_bytes, check.bad, check.healed
     );
+    // CI gate: the O(changed) sharded index must agree with the ground
+    // truth the full directory walk just computed
+    if check.index_mismatch.is_empty() {
+        println!("store: index agrees with the scan");
+    } else {
+        for m in &check.index_mismatch {
+            eprintln!("store:   index drift: {m}");
+        }
+    }
     for p in &check.bad_paths {
         eprintln!("store:   bad: {}", p.display());
     }
@@ -503,6 +528,12 @@ fn cmd_store(args: &Args) -> Result<(), String> {
         return Err(format!(
             "store: {} undecodable artifact(s) on disk (re-run with --heal to remove)",
             check.bad
+        ));
+    }
+    if !check.index_mismatch.is_empty() {
+        return Err(format!(
+            "store: sharded index disagrees with the directory scan ({} kind(s))",
+            check.index_mismatch.len()
         ));
     }
     Ok(())

@@ -81,6 +81,15 @@ impl Histogram {
         self.sum_nanos.fetch_add(nanos, Ordering::Relaxed);
     }
 
+    /// Fold a frozen snapshot's counts into this live histogram (serve
+    /// workers merge their request-latency counts into the parent).
+    pub fn absorb(&self, s: &HistSnapshot) {
+        for (b, v) in self.buckets.iter().zip(s.buckets.iter()) {
+            b.fetch_add(*v, Ordering::Relaxed);
+        }
+        self.sum_nanos.fetch_add(s.sum_nanos, Ordering::Relaxed);
+    }
+
     /// A point-in-time copy of the counts.
     pub fn snapshot(&self) -> HistSnapshot {
         let buckets = std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed));

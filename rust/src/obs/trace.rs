@@ -77,6 +77,10 @@ pub struct TraceEvent {
     pub dur_micros: u64,
     /// Stable per-thread id (see [`thread_tid`]).
     pub tid: u64,
+    /// Logical session id, rendered as the Chrome `pid`: concurrent serve
+    /// workers record into child tracers with distinct ids, so a merged
+    /// export keeps every session's spans on its own process lane.
+    pub session: u64,
     pub args: Vec<(&'static str, ArgVal)>,
 }
 
@@ -104,7 +108,7 @@ impl TraceEvent {
                 kvs.push(("s".to_string(), Json::str("t")));
             }
         }
-        kvs.push(("pid".to_string(), Json::num(1.0)));
+        kvs.push(("pid".to_string(), Json::num(self.session as f64)));
         kvs.push(("tid".to_string(), Json::num(self.tid as f64)));
         if !self.args.is_empty() {
             let args = self
@@ -140,6 +144,9 @@ pub struct Tracer {
     on: AtomicBool,
     epoch: Instant,
     dropped: AtomicU64,
+    /// Stamped into every event (the Chrome `pid`). `1` by default; serve
+    /// workers get distinct ids via [`Tracer::child`].
+    session: AtomicU64,
     ring: Mutex<Ring>,
 }
 
@@ -149,6 +156,7 @@ impl Tracer {
             on: AtomicBool::new(enabled),
             epoch: Instant::now(),
             dropped: AtomicU64::new(0),
+            session: AtomicU64::new(1),
             ring: Mutex::new(Ring {
                 cap: cap.max(1),
                 buf: VecDeque::new(),
@@ -214,6 +222,7 @@ impl Tracer {
             ts_micros,
             dur_micros,
             tid: thread_tid(),
+            session: self.session.load(Ordering::Relaxed),
             args: args(),
         });
     }
@@ -237,8 +246,44 @@ impl Tracer {
             ts_micros,
             dur_micros: 0,
             tid: thread_tid(),
+            session: self.session.load(Ordering::Relaxed),
             args: args(),
         });
+    }
+
+    /// This tracer's logical session id (the Chrome `pid` of its events).
+    pub fn session(&self) -> u64 {
+        self.session.load(Ordering::Relaxed)
+    }
+
+    /// Re-label future events with a session id.
+    pub fn set_session(&self, id: u64) {
+        self.session.store(id, Ordering::Relaxed);
+    }
+
+    /// A tracer for one concurrent worker: its own ring, a distinct
+    /// session id, the parent's enabled state and capacity — and the
+    /// parent's *epoch*, so a merged export ([`Tracer::absorb`]) puts
+    /// every session on one aligned timeline.
+    pub fn child(&self, session: u64) -> Tracer {
+        let cap = self.ring.lock().unwrap().cap;
+        let t = Tracer::with_state(self.is_enabled(), cap);
+        Tracer {
+            epoch: self.epoch,
+            session: AtomicU64::new(session),
+            ..t
+        }
+    }
+
+    /// Append another tracer's buffered events into this ring (concurrent
+    /// serve merges worker tracers into the parent before `--trace-out`
+    /// export). Events keep their own session ids; timestamps align when
+    /// the other tracer came from [`Tracer::child`].
+    pub fn absorb(&self, other: &Tracer) {
+        for ev in other.events() {
+            self.push(ev);
+        }
+        self.dropped.fetch_add(other.dropped(), Ordering::Relaxed);
     }
 
     fn push(&self, ev: TraceEvent) {
@@ -431,6 +476,26 @@ mod tests {
         let evs = t.events();
         assert_eq!(evs.len(), 1);
         assert_eq!(evs[0].name, "x.on");
+    }
+
+    #[test]
+    fn session_ids_stamp_events_and_children_merge_cleanly() {
+        let t = Tracer::enabled();
+        t.instant("x", "x.parent", Vec::new);
+        let c = t.child(7);
+        assert!(c.is_enabled(), "children inherit the enabled state");
+        assert_eq!(c.session(), 7);
+        c.instant("x", "x.child", Vec::new);
+        t.absorb(&c);
+        let evs = t.events();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].session, 1);
+        assert_eq!(evs[1].session, 7);
+        // the export keeps the lanes apart via pid and stays codec-valid
+        let doc = Json::parse(&t.export_chrome().render()).unwrap();
+        let arr = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert_eq!(arr[0].get("pid").and_then(Json::as_u64), Some(1));
+        assert_eq!(arr[1].get("pid").and_then(Json::as_u64), Some(7));
     }
 
     #[test]

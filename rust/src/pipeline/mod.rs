@@ -39,14 +39,14 @@ pub use artifact::{
     ArtifactCache, ArtifactKind, CacheEvent, CacheSnapshot, Detected, Emulated, Parsed,
     Synthesized, WorkloadArt,
 };
-pub use serve::{ServeOpts, ServeSession, ServeStats};
+pub use serve::{serve_pooled, ServeOpts, ServeSession, ServeStats};
 pub use stages::{score, validate, Scored, Validated};
 pub use store::{
     default_dir, DiskSnapshot, DiskStore, KeyBuilder, KindCheck, Manifest, StoreCheck, StoreKind,
     DEFAULT_MAX_BYTES, STORE_KINDS,
 };
 
-use crate::emu::{emulate_in_session, EmuError, FlowEnd, Limits};
+use crate::emu::{emulate_outcome, resume_outcome, EmuError, EmuOutcome, FlowEnd, Limits};
 use crate::obs::{ArgVal, HistSnapshot, Histogram, MetricsSnapshot, Tracer};
 use crate::perf::Arch;
 use crate::ptx::ast::Kernel;
@@ -164,6 +164,13 @@ pub struct PipelineStats {
     /// Warp micro-ops dispatched through the lane-vectorized kernels
     /// (always 0 without the `simd` feature or with `--engine` scalar).
     pub vector_warp_steps: u64,
+    /// Budget-tripped emulations that left a resumable frontier image in
+    /// the disk store.
+    pub frontier_stores: u64,
+    /// Emulations completed by *resuming* a tighter run's frontier image
+    /// instead of re-emulating from flow zero (serve mode's widened
+    /// retry path).
+    pub frontier_resumes: u64,
 }
 
 impl PipelineStats {
@@ -189,6 +196,8 @@ impl PipelineStats {
         }
         self.superblocks_entered += o.superblocks_entered;
         self.vector_warp_steps += o.vector_warp_steps;
+        self.frontier_stores += o.frontier_stores;
+        self.frontier_resumes += o.frontier_resumes;
     }
 }
 
@@ -225,6 +234,8 @@ pub fn metrics_snapshot(s: &PipelineStats) -> MetricsSnapshot {
     }
     m.counter("engine.superblocks_entered", s.superblocks_entered);
     m.counter("engine.vector_warp_steps", s.vector_warp_steps);
+    m.counter("emulate.frontier_stores", s.frontier_stores);
+    m.counter("emulate.frontier_resumes", s.frontier_resumes);
     let d = &s.disk;
     m.counter("store.enabled", u64::from(d.enabled));
     m.counter("store.hits", d.hits);
@@ -237,6 +248,7 @@ pub fn metrics_snapshot(s: &PipelineStats) -> MetricsSnapshot {
     m.counter("store.lock_skips", d.lock_skips);
     m.counter("store.resyncs", d.resyncs);
     m.counter("store.swept_tmp", d.swept_tmp);
+    m.counter("store.index_rebuilds", d.index_rebuilds);
     for stage in STAGES {
         m.histogram(
             format!("stage.{}.latency", stage.name()),
@@ -282,9 +294,16 @@ pub struct Pipeline {
     /// Lane-vectorized kernels in the decoded engine (`--engine`; inert
     /// without the `simd` cargo feature). Not part of any cache key.
     vector: bool,
+    /// The limits of a *tighter* pipeline whose frontier images this one
+    /// may resume from ([`Pipeline::with_resume_from`]). `None` = cold
+    /// re-emulation on every budget-tripped retry.
+    resume_from: Option<Limits>,
     /// Decoded-engine telemetry summed across this pipeline's runs.
     superblocks_entered: AtomicU64,
     vector_warp_steps: AtomicU64,
+    /// Frontier images written (budget trips) and consumed (resumes).
+    frontier_stores: AtomicU64,
+    frontier_resumes: AtomicU64,
     /// Span recorder threaded through every stage. Disabled by default —
     /// one relaxed atomic load per span site; see [`crate::obs`].
     tracer: Arc<Tracer>,
@@ -303,8 +322,11 @@ impl Default for Pipeline {
             // both engine paths are on by default (bit-identical results)
             superblocks: true,
             vector: true,
+            resume_from: None,
             superblocks_entered: AtomicU64::new(0),
             vector_warp_steps: AtomicU64::new(0),
+            frontier_stores: AtomicU64::new(0),
+            frontier_resumes: AtomicU64::new(0),
             tracer: Arc::new(Tracer::disabled()),
         }
     }
@@ -366,6 +388,22 @@ impl Pipeline {
     /// The decoded-engine path selection as `(superblocks, vector)`.
     pub fn engine(&self) -> (bool, bool) {
         (self.superblocks, self.vector)
+    }
+
+    /// Resume budget-tripped emulations from the frontier images a
+    /// *tighter* pipeline left in the shared disk store (serve mode's
+    /// widened retry: the tight pass persists its exploration frontier;
+    /// this pipeline picks up the worklist there instead of re-emulating
+    /// from flow zero). `tight` must be dominated by this pipeline's own
+    /// limits on every axis or the frontier is ignored.
+    pub fn with_resume_from(mut self, tight: Limits) -> Pipeline {
+        self.resume_from = Some(tight);
+        self
+    }
+
+    /// The tight-limits key family this pipeline resumes from, if any.
+    pub fn resume_from(&self) -> Option<Limits> {
+        self.resume_from
     }
 
     /// Fold one simulation's engine telemetry into the pipeline-wide
@@ -583,6 +621,41 @@ impl Pipeline {
         KeyBuilder::new("emulated").hash(hash).limits(limits).finish()
     }
 
+    /// Disk key of the resumable frontier a budget-tripped emulation
+    /// leaves behind: the kernel fingerprint plus the limits that ran
+    /// out. A separate key family from complete images so a wider reader
+    /// can probe for a tight run's frontier without colliding with its
+    /// own results.
+    fn frontier_disk_key(hash: ContentHash, limits: Limits) -> ContentHash {
+        KeyBuilder::new("emulated.frontier")
+            .hash(hash)
+            .limits(limits)
+            .finish()
+    }
+
+    /// Load a tighter run's frontier image for this kernel, if resume is
+    /// configured, the store holds one, and this pipeline's limits
+    /// dominate the tight ones on every axis (a narrower "resume" could
+    /// not reproduce the serial result and is never attempted).
+    fn load_frontier(
+        &self,
+        kernel: &Arc<Kernel>,
+        hash: ContentHash,
+    ) -> Option<crate::emu::PartialEmulation> {
+        let tight = self.resume_from?;
+        if self.limits.max_flows < tight.max_flows
+            || self.limits.max_steps_per_flow < tight.max_steps_per_flow
+            || self.limits.max_total_steps < tight.max_total_steps
+        {
+            return None;
+        }
+        let key = Pipeline::frontier_disk_key(hash, tight);
+        let nregs = crate::emu::env::RegInterner::from_kernel(kernel).len();
+        self.disk_load(StoreKind::Emulated, key, |b| {
+            store::decode_frontier(b, &self.session, Some(nregs)).map(|(_, p)| p)
+        })
+    }
+
     /// Emulation artifact when the caller already knows the content hash.
     /// The hash must be `kernel_fingerprint(kernel)`. Served in order
     /// from the in-memory slot, the disk store's `emulated/` kind (the
@@ -608,15 +681,59 @@ impl Pipeline {
                 event = CacheEvent::Miss;
                 let span = self.tracer.begin();
                 let t0 = Instant::now();
-                let result = match emulate_in_session(kernel, self.limits, self.session.clone()) {
-                    Ok(r) => r,
-                    Err(e) => {
+                // a tighter run may have left a resumable frontier: pick
+                // the exploration up at its worklist instead of
+                // re-emulating from flow zero
+                let frontier = self.load_frontier(kernel, hash);
+                let resumed = frontier.is_some();
+                let outcome = match frontier {
+                    Some(part) => {
+                        resume_outcome(kernel, self.limits, part, Some(self.tracer.clone()))
+                    }
+                    None => emulate_outcome(
+                        kernel,
+                        self.limits,
+                        self.session.clone(),
+                        Some(self.tracer.clone()),
+                    ),
+                };
+                let elapsed = t0.elapsed();
+                let result = match outcome {
+                    EmuOutcome::Complete(r) => {
+                        if resumed {
+                            self.frontier_resumes.fetch_add(1, Ordering::Relaxed);
+                        }
+                        r
+                    }
+                    EmuOutcome::Partial(part) => {
+                        // leave the frontier behind so a wider retry can
+                        // resume where this budget ran out
+                        self.frontier_stores.fetch_add(1, Ordering::Relaxed);
+                        self.disk_store(
+                            StoreKind::Emulated,
+                            Pipeline::frontier_disk_key(hash, self.limits),
+                            store::encode_frontier(elapsed, &part),
+                        );
+                        let e = part.error;
                         // budget exhaustion is the span worth having:
                         // record which limit the kernel ran into
                         self.tracer.span("stage", "stage.emulate", span, || {
                             vec![
                                 ("key", ArgVal::Str(hash.to_string())),
                                 ("error", ArgVal::Str(e.to_string())),
+                                ("resumed", ArgVal::U64(u64::from(resumed))),
+                                ("max_flows", ArgVal::U64(self.limits.max_flows as u64)),
+                                ("max_total_steps", ArgVal::U64(self.limits.max_total_steps)),
+                            ]
+                        });
+                        return Err(e);
+                    }
+                    EmuOutcome::Failed(e) => {
+                        self.tracer.span("stage", "stage.emulate", span, || {
+                            vec![
+                                ("key", ArgVal::Str(hash.to_string())),
+                                ("error", ArgVal::Str(e.to_string())),
+                                ("resumed", ArgVal::U64(u64::from(resumed))),
                                 ("max_flows", ArgVal::U64(self.limits.max_flows as u64)),
                                 ("max_total_steps", ArgVal::U64(self.limits.max_total_steps)),
                             ]
@@ -624,7 +741,6 @@ impl Pipeline {
                         return Err(e);
                     }
                 };
-                let elapsed = t0.elapsed();
                 self.timings.record(Stage::Emulate, elapsed);
                 let (flows_started, flows_finished, steps) = (
                     result.stats.flows_started,
@@ -643,6 +759,7 @@ impl Pipeline {
                         ("flows_finished", ArgVal::U64(flows_finished)),
                         ("steps", ArgVal::U64(steps)),
                         ("truncated_flows", ArgVal::U64(truncated)),
+                        ("resumed", ArgVal::U64(u64::from(resumed))),
                         ("max_flows", ArgVal::U64(self.limits.max_flows as u64)),
                         ("max_total_steps", ArgVal::U64(self.limits.max_total_steps)),
                     ]
@@ -950,6 +1067,8 @@ impl Pipeline {
         }
         s.superblocks_entered = self.superblocks_entered.load(Ordering::Relaxed);
         s.vector_warp_steps = self.vector_warp_steps.load(Ordering::Relaxed);
+        s.frontier_stores = self.frontier_stores.load(Ordering::Relaxed);
+        s.frontier_resumes = self.frontier_resumes.load(Ordering::Relaxed);
         s
     }
 
@@ -1064,6 +1183,76 @@ ret;
         assert_eq!(s.workload_misses, 2);
         assert_eq!(s.workload_hits, 1);
         assert_eq!(s.stage_count(Stage::Workload), 2);
+    }
+
+    #[test]
+    fn widened_pipeline_resumes_a_tight_runs_frontier_image() {
+        // four flows of fan-out: a tight 2-flow budget trips mid-way
+        let forky = r#"
+.visible .entry fk(.param .u64 out){
+.reg .b32 %r<8>; .reg .b64 %rd<4>; .reg .pred %p<4>;
+ld.param.u64 %rd1, [out];
+cvta.to.global.u64 %rd2, %rd1;
+mov.u32 %r1, %tid.x;
+and.b32 %r2, %r1, 1;
+setp.eq.s32 %p1, %r2, 0;
+@%p1 bra $A;
+add.s32 %r1, %r1, 7;
+$A:
+and.b32 %r3, %r1, 2;
+setp.eq.s32 %p2, %r3, 0;
+@%p2 bra $B;
+add.s32 %r1, %r1, 9;
+$B:
+st.global.u32 [%rd2], %r1;
+ret;
+}
+"#;
+        let dir = std::env::temp_dir().join(format!(
+            "ptxasw-pipe-resume-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = Arc::new(DiskStore::open(&dir, 1 << 20).unwrap());
+        let k = Arc::new(parse_kernel(forky).unwrap());
+
+        let tight = Limits {
+            max_flows: 2,
+            ..Limits::default()
+        };
+        let tp = Pipeline::with_limits(tight).with_disk_shared(store.clone());
+        let err = tp.emulated(&k).unwrap_err();
+        assert!(matches!(err, EmuError::FlowLimit(2)), "{err:?}");
+        assert_eq!(tp.stats().frontier_stores, 1, "trip must persist a frontier");
+
+        // the widened pipeline resumes the image instead of re-emulating
+        let wp = Pipeline::with_limits(Limits::default())
+            .with_disk_shared(store.clone())
+            .with_resume_from(tight);
+        let warm = wp.emulated(&k).unwrap();
+        assert_eq!(
+            wp.stats().frontier_resumes,
+            1,
+            "wide retry must resume the tight frontier, not start cold"
+        );
+
+        // and the resumed artifact is indistinguishable from a cold run
+        let cold = Pipeline::with_limits(Limits::default()).emulated(&k).unwrap();
+        assert_eq!(warm.result.stats.to_words(), cold.result.stats.to_words());
+        assert_eq!(warm.result.flows.len(), cold.result.flows.len());
+        for (a, b) in warm.result.flows.iter().zip(&cold.result.flows) {
+            assert_eq!((a.id, a.end), (b.id, b.end));
+            assert_eq!(a.trace.loads.len(), b.trace.loads.len());
+            assert_eq!(a.trace.stores.len(), b.trace.stores.len());
+        }
+
+        // a pipeline with *no* resume configured starts cold and still
+        // agrees (fresh store-less pipeline, fresh session)
+        let np = Pipeline::with_limits(Limits::default());
+        let n = np.emulated(&k).unwrap();
+        assert_eq!(np.stats().frontier_resumes, 0);
+        assert_eq!(n.result.stats.to_words(), cold.result.stats.to_words());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

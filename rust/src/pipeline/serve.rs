@@ -52,6 +52,7 @@
 //! → {"cmd":"shutdown"}      ← {"ok":true,"cmd":"shutdown"} and exit 0
 //! ```
 
+use crate::coordinator::queue::WorkQueue;
 use crate::coordinator::{run_benchmark_on, PipelineConfig, PipelineError};
 use crate::emu::{FlowEnd, Limits};
 use crate::obs::{ArgVal, Histogram, Tracer};
@@ -61,7 +62,7 @@ use crate::shuffle::{DetectOpts, ElimOpts, Variant};
 use crate::util::Json;
 use std::io::{BufRead, Write};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Tight first-pass emulation budget: two orders of magnitude under the
@@ -93,6 +94,15 @@ pub struct ServeOpts {
     pub sim_threads: usize,
     /// Decoded-engine paths (`Pipeline::with_engine`).
     pub engine: (bool, bool),
+    /// Worker threads for batch (stdin) serving: [`serve_pooled`] fans
+    /// the request batch across this many per-worker sessions over the
+    /// shared disk store. `1` keeps the serial path.
+    pub serve_threads: usize,
+    /// Span-sample every Nth request even without `"trace": true`
+    /// (`0` = off). Sampled spans stay in the session ring for export;
+    /// they never ride back on responses, so sampling cannot perturb
+    /// the wire bytes.
+    pub trace_sample: u64,
 }
 
 impl Default for ServeOpts {
@@ -104,6 +114,8 @@ impl Default for ServeOpts {
             allow_test_faults: false,
             sim_threads: 1,
             engine: (true, true),
+            serve_threads: 1,
+            trace_sample: 0,
         }
     }
 }
@@ -118,6 +130,18 @@ pub struct ServeStats {
     pub widened: u64,
     /// Requests that panicked (each one rebuilt the pipelines).
     pub panicked: u64,
+}
+
+impl ServeStats {
+    /// Fold a worker session's counters into this one (the pooled and
+    /// socket paths merge per-worker stats back into the root session).
+    pub fn absorb(&mut self, o: &ServeStats) {
+        self.requests += o.requests;
+        self.ok += o.ok;
+        self.errors += o.errors;
+        self.widened += o.widened;
+        self.panicked += o.panicked;
+    }
 }
 
 /// Typed failure record — the `error.kind` strings of the protocol.
@@ -189,8 +213,12 @@ impl ServeSession {
         store: Option<Arc<DiskStore>>,
         tracer: Arc<Tracer>,
     ) -> ServeSession {
+        // the wide retry pipeline resumes widened requests from the
+        // frontier image the tight pass persisted at its budget trip —
+        // flow zero is never re-emulated on the retry path
         let tight = build_pipeline(&opts, opts.tight, &store, &tracer);
-        let wide = build_pipeline(&opts, opts.wide, &store, &tracer);
+        let wide =
+            build_pipeline(&opts, opts.wide, &store, &tracer).with_resume_from(opts.tight);
         ServeSession {
             opts,
             store,
@@ -222,7 +250,8 @@ impl ServeSession {
     /// carry across the rebuild.
     fn rebuild(&mut self) {
         self.tight = build_pipeline(&self.opts, self.opts.tight, &self.store, &self.tracer);
-        self.wide = build_pipeline(&self.opts, self.opts.wide, &self.store, &self.tracer);
+        self.wide = build_pipeline(&self.opts, self.opts.wide, &self.store, &self.tracer)
+            .with_resume_from(self.opts.tight);
     }
 
     /// Serve one connection: read JSON-lines from `reader`, stream one
@@ -287,8 +316,15 @@ impl ServeSession {
         // events recorded past `mark` ride back on the response, keyed by
         // the request id as the trace id.
         let want_trace = req.get("trace").and_then(|t| t.as_bool()).unwrap_or(false);
+        // `--trace-sample N` records every Nth request's spans into the
+        // session ring (for `--trace-out` export) without attaching them
+        // to the response — the wire bytes stay identical to an
+        // unsampled run.
+        let sampled = !want_trace
+            && self.opts.trace_sample > 0
+            && self.stats.requests % self.opts.trace_sample == 0;
         let was_enabled = self.tracer.is_enabled();
-        if want_trace {
+        if want_trace || sampled {
             self.tracer.set_enabled(true);
         }
         let mark = self.tracer.mark();
@@ -370,6 +406,8 @@ impl ServeSession {
                 ));
                 kvs.push(("trace".to_string(), Json::Arr(events)));
             }
+        } else if sampled && !was_enabled {
+            self.tracer.set_enabled(false);
         }
         (response, false)
     }
@@ -711,25 +749,160 @@ fn error_response(id: Json, e: &ServeError) -> Json {
     ])
 }
 
-/// Accept loop over a Unix socket: connections are served sequentially on
-/// one session (one cache, one pair of pipelines); a `shutdown` command
-/// on any connection stops the listener. The socket file is replaced if
-/// it already exists.
-#[cfg(unix)]
-pub fn serve_unix(session: &mut ServeSession, path: &std::path::Path) -> std::io::Result<()> {
-    use std::os::unix::net::UnixListener;
-    let _ = std::fs::remove_file(path);
-    let listener = UnixListener::bind(path)?;
-    for stream in listener.incoming() {
-        let stream = stream?;
-        let reader = std::io::BufReader::new(stream.try_clone()?);
-        let shutdown = session.serve(reader, &stream)?;
-        if shutdown {
+/// Serve one batch of request lines across a pool of worker sessions.
+///
+/// `threads <= 1` delegates to the serial [`ServeSession::serve`] loop.
+/// Otherwise the batch is read up front (truncated after the first
+/// `shutdown` line — serial semantics), the line indices are dispatched
+/// onto a work-stealing [`WorkQueue`], and each worker processes
+/// requests on its **own** `ServeSession` (own pipelines, own interner,
+/// own child tracer) over the root session's shared disk store. Per-
+/// request isolation is untouched: a worker panic degrades to a
+/// `Panicked` record and rebuilds only that worker's pipelines.
+///
+/// Responses are written in **input order**, so healthy output is
+/// byte-identical to a serial run of the same batch. Worker stats,
+/// latency histograms, and trace rings are folded back into `session`
+/// before returning.
+pub fn serve_pooled(
+    session: &mut ServeSession,
+    reader: impl BufRead,
+    mut writer: impl Write,
+    threads: usize,
+) -> std::io::Result<bool> {
+    if threads <= 1 {
+        return session.serve(reader, writer);
+    }
+    let mut lines = Vec::new();
+    let mut saw_shutdown = false;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let is_shutdown = Json::parse(&line)
+            .map(|j| j.get("cmd").and_then(|c| c.as_str()) == Some("shutdown"))
+            .unwrap_or(false);
+        lines.push(line);
+        if is_shutdown {
+            // nothing after a shutdown line is processed — exactly the
+            // serial loop's contract
+            saw_shutdown = true;
             break;
         }
     }
+
+    let slots: Vec<Mutex<Option<Json>>> = lines.iter().map(|_| Mutex::new(None)).collect();
+    let queue = WorkQueue::new(threads);
+    for i in 0..lines.len() {
+        queue.push(i);
+    }
+    let merged = Mutex::new(ServeStats::default());
+    let merged_hist = Histogram::new();
+    let opts = session.opts;
+    std::thread::scope(|scope| {
+        for w in 0..threads {
+            let queue = &queue;
+            let slots = &slots;
+            let lines = &lines;
+            let merged = &merged;
+            let merged_hist = &merged_hist;
+            let parent = &session.tracer;
+            let store = session.store.clone();
+            scope.spawn(move || {
+                // worker session ids start at 2; the root session keeps
+                // pid 1 in merged Perfetto exports
+                let tracer = Arc::new(parent.child(w as u64 + 2));
+                let mut ws = ServeSession::with_tracer(opts, store, tracer.clone());
+                while let Some(i) = queue.pop(w) {
+                    ws.stats.requests += 1;
+                    let (response, _) = ws.handle_line(&lines[i]);
+                    *slots[i].lock().unwrap() = Some(response);
+                    queue.retire();
+                }
+                parent.absorb(&tracer);
+                merged.lock().unwrap().absorb(&ws.stats);
+                merged_hist.absorb(&ws.request_hist.snapshot());
+            });
+        }
+    });
+    session.stats.absorb(&merged.into_inner().unwrap());
+    session.request_hist.absorb(&merged_hist.snapshot());
+
+    for slot in &slots {
+        if let Some(response) = slot.lock().unwrap().take() {
+            writer.write_all(response.render().as_bytes())?;
+            writer.write_all(b"\n")?;
+            writer.flush()?;
+        }
+    }
+    Ok(saw_shutdown)
+}
+
+/// Accept loop over a Unix socket: each connection is served **con-
+/// currently** on its own worker session (own pipelines, own child
+/// tracer with a distinct session id) over the root session's shared
+/// disk store, so one slow or adversarial client cannot stall the
+/// others. A `shutdown` command on any connection stops the listener
+/// after in-flight connections drain. The socket file is replaced if it
+/// already exists. Worker stats and trace rings fold back into
+/// `session` before returning.
+#[cfg(unix)]
+pub fn serve_unix(session: &mut ServeSession, path: &std::path::Path) -> std::io::Result<()> {
+    use std::os::unix::net::UnixListener;
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
     let _ = std::fs::remove_file(path);
-    Ok(())
+    let listener = UnixListener::bind(path)?;
+    // nonblocking accept: the loop can observe the shutdown flag set by
+    // a worker thread instead of parking in accept(2) forever
+    listener.set_nonblocking(true)?;
+    let shutdown = AtomicBool::new(false);
+    let next_sid = AtomicU64::new(2);
+    let merged = Mutex::new(ServeStats::default());
+    let merged_hist = Histogram::new();
+    let opts = session.opts;
+    let result = std::thread::scope(|scope| -> std::io::Result<()> {
+        loop {
+            if shutdown.load(Ordering::SeqCst) {
+                return Ok(());
+            }
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let sid = next_sid.fetch_add(1, Ordering::Relaxed);
+                    let store = session.store.clone();
+                    let parent = &session.tracer;
+                    let shutdown = &shutdown;
+                    let merged = &merged;
+                    let merged_hist = &merged_hist;
+                    scope.spawn(move || {
+                        // accepted streams must block: the per-line
+                        // reader loop owns this connection's pacing
+                        let _ = stream.set_nonblocking(false);
+                        let tracer = Arc::new(parent.child(sid));
+                        let mut ws = ServeSession::with_tracer(opts, store, tracer.clone());
+                        if let Ok(rs) = stream.try_clone() {
+                            // a broken connection ends its own worker
+                            // only; the listener keeps serving
+                            if let Ok(true) = ws.serve(std::io::BufReader::new(rs), &stream) {
+                                shutdown.store(true, Ordering::SeqCst);
+                            }
+                        }
+                        parent.absorb(&tracer);
+                        merged.lock().unwrap().absorb(&ws.stats);
+                        merged_hist.absorb(&ws.request_hist.snapshot());
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    });
+    session.stats.absorb(&merged.into_inner().unwrap());
+    session.request_hist.absorb(&merged_hist.snapshot());
+    let _ = std::fs::remove_file(path);
+    result
 }
 
 #[cfg(test)]
@@ -1016,6 +1189,131 @@ ret;
         assert_eq!(args.get("cmd").unwrap().as_str(), Some("asm"));
         assert_eq!(args.get("ok").unwrap().as_bool(), Some(true));
         // the session tracer is disabled again after the traced request
+        assert!(!s.tracer().is_enabled());
+    }
+
+    #[test]
+    fn widened_retry_resumes_from_the_tight_frontier_over_the_store() {
+        let dir = std::env::temp_dir().join(format!(
+            "ptxasw-serve-resume-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = Arc::new(DiskStore::open(&dir, 1 << 30).unwrap());
+        let mut s = ServeSession::new(ServeOpts::default(), Some(store));
+        // 1024 flows: trips the tight budget (512), fits wide (4096)
+        let responses = run_lines(&mut s, &[asm_req(1, &forky(10))]);
+        assert_eq!(
+            responses[0].get("ok").unwrap().as_bool(),
+            Some(true),
+            "got {:?}",
+            responses[0]
+        );
+        assert_eq!(responses[0].get("widened").unwrap().as_bool(), Some(true));
+        // the tight pass persisted its budget-trip frontier image...
+        assert_eq!(s.tight.stats().frontier_stores, 1);
+        // ...and the wide retry resumed it instead of re-emulating the
+        // tight run's finished flows
+        assert_eq!(s.wide.stats().frontier_resumes, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pooled_batch_matches_serial_run_byte_for_byte() {
+        // a poisoned batch — parse error, garbage framing, injected
+        // panic, flow blowup — interleaved with healthy kernels: the
+        // pooled run must emit the exact bytes of the serial run
+        let opts = ServeOpts {
+            allow_test_faults: true,
+            ..ServeOpts::default()
+        };
+        let lines = vec![
+            asm_req(1, K),
+            r#"{"id":2,"cmd":"asm","ptx":"this is not ptx"}"#.to_string(),
+            "this is not even json".to_string(),
+            r#"{"id":4,"cmd":"__panic"}"#.to_string(),
+            asm_req(5, &forky(10)),
+            asm_req(6, K),
+        ];
+        let input = lines.join("\n");
+        let mut serial = ServeSession::new(opts, None);
+        let mut serial_out = Vec::new();
+        serial
+            .serve(std::io::Cursor::new(input.clone()), &mut serial_out)
+            .unwrap();
+        let mut pooled = ServeSession::new(opts, None);
+        let mut pooled_out = Vec::new();
+        let shutdown =
+            serve_pooled(&mut pooled, std::io::Cursor::new(input), &mut pooled_out, 3).unwrap();
+        assert!(!shutdown);
+        assert_eq!(
+            String::from_utf8(pooled_out).unwrap(),
+            String::from_utf8(serial_out).unwrap(),
+            "pooled responses must be byte-identical to the serial run"
+        );
+        // worker counters folded back into the root session
+        let s = pooled.stats();
+        assert_eq!(s.requests, 6);
+        assert_eq!(s.panicked, 1);
+        assert_eq!(s.widened, 1);
+        assert_eq!(s.errors, 3);
+    }
+
+    #[test]
+    fn pooled_shutdown_truncates_like_the_serial_loop() {
+        let mut s = ServeSession::new(ServeOpts::default(), None);
+        let lines = vec![
+            r#"{"cmd":"ping"}"#.to_string(),
+            r#"{"id":"bye","cmd":"shutdown"}"#.to_string(),
+            asm_req(99, K),
+        ];
+        let mut out = Vec::new();
+        let shutdown = serve_pooled(
+            &mut s,
+            std::io::Cursor::new(lines.join("\n")),
+            &mut out,
+            2,
+        )
+        .unwrap();
+        assert!(shutdown, "the shutdown line must surface to the caller");
+        let responses: Vec<Json> = String::from_utf8(out)
+            .unwrap()
+            .lines()
+            .map(|l| Json::parse(l).unwrap())
+            .collect();
+        assert_eq!(responses.len(), 2, "nothing after shutdown is processed");
+        assert_eq!(responses[0].get("cmd").unwrap().as_str(), Some("pong"));
+        assert_eq!(responses[1].get("id").unwrap().as_str(), Some("bye"));
+    }
+
+    #[test]
+    fn trace_sampling_records_spans_without_touching_responses() {
+        let mut s = ServeSession::new(
+            ServeOpts {
+                trace_sample: 2,
+                ..ServeOpts::default()
+            },
+            None,
+        );
+        let lines = vec![asm_req(1, K), asm_req(2, K), asm_req(3, K), asm_req(4, K)];
+        let responses = run_lines(&mut s, &lines);
+        for r in &responses {
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+            assert!(
+                r.get("trace").is_none() && r.get("trace_id").is_none(),
+                "sampled spans never ride back on responses"
+            );
+        }
+        // requests 2 and 4 hit the sample gate: their serve.request
+        // spans sit in the session ring for --trace-out export
+        let spans: Vec<_> = s
+            .tracer()
+            .events()
+            .into_iter()
+            .filter(|e| e.name == "serve.request")
+            .collect();
+        assert_eq!(spans.len(), 2, "every 2nd of 4 requests is sampled");
+        // and the tracer is back off between requests
         assert!(!s.tracer().is_enabled());
     }
 }

@@ -10,10 +10,11 @@
 //! Layout (one file per artifact, under a format-version directory):
 //!
 //! ```text
-//! <cache-dir>/v7/<kind>/<32-hex-key>.art   artifact (header + payload)
-//! <cache-dir>/v7/<kind>/<32-hex-key>.lru   empty touch marker (last use)
-//! <cache-dir>/v7/manifest                  generation manifest (see below)
-//! <cache-dir>/v7/.evict.lock               cross-process eviction lock
+//! <cache-dir>/v8/<kind>/<32-hex-key>.art   artifact (header + payload)
+//! <cache-dir>/v8/<kind>/<32-hex-key>.lru   empty touch marker (last use)
+//! <cache-dir>/v8/<kind>/.index             sharded per-kind index (see below)
+//! <cache-dir>/v8/manifest                  generation manifest (see below)
+//! <cache-dir>/v8/.evict.lock               cross-process eviction lock
 //! ```
 //!
 //! `<kind>` is one of `emulated`, `decoded`, `detected`, `synthesized`,
@@ -57,6 +58,22 @@
 //! (counted in [`DiskSnapshot::resyncs`]). A file evicted under a
 //! concurrent reader just recomputes; a file already deleted by a racing
 //! evictor is treated as evicted, not as an error.
+//!
+//! **Sharded index.** Every kind dir carries a `.index` file (`RPIX` ∥
+//! store version ∥ manifest generation ∥ count ∥ byte total ∥ entries ∥
+//! `fnv64`) mirroring the in-memory entry table the store maintains as it
+//! writes. A clean open whose index generations all match the manifest
+//! seeds the resident counter and the eviction candidate set from those
+//! files — and every subsequent store/evict updates the index
+//! incrementally, so the steady-state write path performs **zero
+//! directory scans**: eviction and `snapshot()` are O(changed) rather
+//! than O(entries). Any mismatch (foreign generation, missing/corrupt
+//! index, every [`RESYNC_EVERY`]th store) falls back to one full scan
+//! that rebuilds the index (counted in [`DiskSnapshot::index_rebuilds`]).
+//! The index is advisory exactly like the resident counter: foreign
+//! writers this process has not observed yet surface at the next rebuild,
+//! and [`DiskStore::verify`] cross-checks the index against a raw
+//! directory walk (the CI gate).
 
 use crate::emu::EmuStats;
 use crate::obs::{ArgVal, Tracer};
@@ -95,10 +112,16 @@ use std::time::{Duration, SystemTime, UNIX_EPOCH};
 /// budgets over one cache dir; a detection computed under a tight budget
 /// must never satisfy a default-budget reader), and the version root
 /// gains the generation `manifest` + `.evict.lock` coordination files.
-pub const STORE_VERSION: u32 = 7;
+/// v8: the `emulated/` kind additionally stores resumable *frontier*
+/// images (persist-v3 partial emulations under `emulated.frontier` keys),
+/// and every kind dir gains a sharded `.index` file so eviction and
+/// resync are O(changed) instead of O(entries).
+pub const STORE_VERSION: u32 = 8;
 const MAGIC: [u8; 4] = *b"RPST";
 /// Generation-manifest magic (distinct from artifact files on purpose).
 const MANIFEST_MAGIC: [u8; 4] = *b"RPMF";
+/// Sharded per-kind index magic.
+const INDEX_MAGIC: [u8; 4] = *b"RPIX";
 /// Default resident-set bound: 256 MiB.
 pub const DEFAULT_MAX_BYTES: u64 = 256 * 1024 * 1024;
 /// An eviction lock older than this is presumed abandoned (holder
@@ -172,6 +195,9 @@ pub struct DiskSnapshot {
     pub resyncs: u64,
     /// Stale temp files swept at `open` (crash debris from prior runs).
     pub swept_tmp: u64,
+    /// Sharded-index rebuilds from a full directory scan (open mismatch,
+    /// foreign generation, or the periodic resync).
+    pub index_rebuilds: u64,
 }
 
 /// The persistent artifact store. One per cache directory; safe to share
@@ -194,11 +220,63 @@ pub struct DiskStore {
     lock_skips: AtomicU64,
     resyncs: AtomicU64,
     swept_tmp: AtomicU64,
+    index_rebuilds: AtomicU64,
+    /// In-memory mirror of the per-kind `.index` files: every resident
+    /// artifact's size and last-use clock, keyed by file stem. Updated on
+    /// every store/load/evict this process performs; rebuilt from a scan
+    /// only on a generation mismatch or the periodic resync.
+    index: Mutex<IndexState>,
     /// Span recorder for store ops (`store.*` in the trace taxonomy).
     /// Disabled by default; [`DiskStore::set_tracer`] attaches a shared
     /// one before the store is wrapped in an `Arc`. Sits above the [`Vfs`]
     /// seam, so fault-injection tests observe spans for injected failures.
     tracer: Arc<Tracer>,
+}
+
+/// One indexed artifact: container size on disk plus the last-use clock
+/// (unix millis — what the `.lru` markers encode as mtimes).
+#[derive(Debug, Clone, Copy)]
+struct IdxEntry {
+    size: u64,
+    touched_ms: u64,
+}
+
+/// In-memory sharded index: one entry table per kind, keyed by the
+/// artifact's file stem (the 32-hex key).
+#[derive(Debug, Default)]
+struct IndexState {
+    kinds: [crate::util::FnvMap<String, IdxEntry>; STORE_KINDS.len()],
+}
+
+impl IndexState {
+    fn kind(&self, k: StoreKind) -> &crate::util::FnvMap<String, IdxEntry> {
+        &self.kinds[k.tag() as usize - 1]
+    }
+
+    fn kind_mut(&mut self, k: StoreKind) -> &mut crate::util::FnvMap<String, IdxEntry> {
+        &mut self.kinds[k.tag() as usize - 1]
+    }
+
+    /// Per-kind `(count, bytes)` in [`STORE_KINDS`] order — the manifest
+    /// summary, computed without touching the directory.
+    fn totals(&self) -> [(u64, u64); STORE_KINDS.len()] {
+        let mut out = [(0u64, 0u64); STORE_KINDS.len()];
+        for (slot, kind) in out.iter_mut().zip(STORE_KINDS) {
+            let m = self.kind(kind);
+            *slot = (m.len() as u64, m.values().map(|e| e.size).sum());
+        }
+        out
+    }
+
+    fn total_bytes(&self) -> u64 {
+        self.totals().iter().map(|&(_, b)| b).sum()
+    }
+}
+
+fn millis_of(t: SystemTime) -> u64 {
+    t.duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
 }
 
 /// The default cache directory: `$RUST_PALLAS_CACHE_DIR`, else
@@ -243,13 +321,21 @@ impl DiskStore {
             lock_skips: AtomicU64::new(0),
             resyncs: AtomicU64::new(0),
             swept_tmp: AtomicU64::new(0),
+            index_rebuilds: AtomicU64::new(0),
+            index: Mutex::new(IndexState::default()),
             tracer: Arc::new(Tracer::disabled()),
         };
         store.sweep_tmp();
-        if let Some(m) = store.read_manifest() {
-            store.last_gen.store(m.generation, Ordering::Relaxed);
+        let generation = store.read_manifest().map(|m| m.generation).unwrap_or(0);
+        store.last_gen.store(generation, Ordering::Relaxed);
+        match store.load_index_files(generation) {
+            Some(seeded) => {
+                let total = seeded.total_bytes();
+                *store.index_lock() = seeded;
+                store.resident.store(total, Ordering::Relaxed);
+            }
+            None => store.rebuild_index(),
         }
-        store.resident.store(store.scan().iter().map(|e| e.size).sum(), Ordering::Relaxed);
         Ok(store)
     }
 
@@ -298,6 +384,7 @@ impl DiskStore {
             lock_skips: self.lock_skips.load(Ordering::Relaxed),
             resyncs: self.resyncs.load(Ordering::Relaxed),
             swept_tmp: self.swept_tmp.load(Ordering::Relaxed),
+            index_rebuilds: self.index_rebuilds.load(Ordering::Relaxed),
         }
     }
 
@@ -327,6 +414,149 @@ impl DiskStore {
 
     fn art_path(&self, kind: StoreKind, key: ContentHash) -> PathBuf {
         self.root.join(kind.dir()).join(format!("{key}.art"))
+    }
+
+    // -- sharded per-kind index --------------------------------------------
+
+    fn index_lock(&self) -> std::sync::MutexGuard<'_, IndexState> {
+        // a panicking pipeline thread must not wedge the index
+        self.index.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn index_path(&self, kind: StoreKind) -> PathBuf {
+        self.root.join(kind.dir()).join(".index")
+    }
+
+    /// Try to seed the whole index from the per-kind `.index` files. All
+    /// six must parse and carry `generation` — any missing, corrupt or
+    /// foreign-generation shard invalidates the lot (the caller rescans).
+    fn load_index_files(&self, generation: u64) -> Option<IndexState> {
+        let mut state = IndexState::default();
+        for kind in STORE_KINDS {
+            let bytes = self.vfs.read(&self.index_path(kind)).ok()?;
+            if bytes.len() < 12 || bytes[0..4] != INDEX_MAGIC {
+                return None;
+            }
+            let payload = &bytes[4..bytes.len() - 8];
+            let want = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().ok()?);
+            if fnv64(payload) != want {
+                return None;
+            }
+            let mut d = Dec::new(payload);
+            if d.u32()? != STORE_VERSION || d.u64()? != generation {
+                return None;
+            }
+            let count = d.len()?;
+            let claimed_bytes = d.u64()?;
+            let map = state.kind_mut(kind);
+            for _ in 0..count {
+                let stem = d.str()?.to_string();
+                let size = d.u64()?;
+                let touched_ms = d.u64()?;
+                map.insert(stem, IdxEntry { size, touched_ms });
+            }
+            if !d.done()
+                || map.len() != count
+                || map.values().map(|e| e.size).sum::<u64>() != claimed_bytes
+            {
+                return None;
+            }
+        }
+        Some(state)
+    }
+
+    /// Write one kind's `.index` shard (tmp+rename; failures swallowed —
+    /// a stale shard is detected by the generation/total check and
+    /// rebuilt, exactly like a stale resident counter).
+    fn write_kind_index(&self, kind: StoreKind, state: &IndexState, generation: u64) {
+        let map = state.kind(kind);
+        let mut stems: Vec<&String> = map.keys().collect();
+        stems.sort_unstable(); // deterministic bytes
+        let mut e = Enc::default();
+        e.u32(STORE_VERSION);
+        e.u64(generation);
+        e.u64(map.len() as u64);
+        e.u64(map.values().map(|x| x.size).sum());
+        for stem in stems {
+            let entry = map[stem];
+            e.str(stem);
+            e.u64(entry.size);
+            e.u64(entry.touched_ms);
+        }
+        let mut bytes = Vec::with_capacity(e.buf.len() + 12);
+        bytes.extend_from_slice(&INDEX_MAGIC);
+        bytes.extend_from_slice(&e.buf);
+        bytes.extend_from_slice(&fnv64(&e.buf).to_le_bytes());
+        let path = self.index_path(kind);
+        let tmp = path.with_extension(format!("tmp{}", std::process::id()));
+        if !(self.vfs.write(&tmp, &bytes).is_ok() && self.vfs.rename(&tmp, &path).is_ok()) {
+            let _ = self.vfs.remove_file(&tmp);
+        }
+    }
+
+    /// Rebuild the whole index from one directory scan, reset the
+    /// resident counter from it, and persist every shard. The only
+    /// O(entries) path left — taken at open/resync mismatches, never on
+    /// the steady-state store/evict path.
+    fn rebuild_index(&self) {
+        let entries = self.scan();
+        let generation = self.last_gen.load(Ordering::Relaxed);
+        let mut state = IndexState::default();
+        for e in &entries {
+            let Some(stem) = e.path.file_stem().and_then(|s| s.to_str()) else {
+                continue;
+            };
+            let Some(kind) = STORE_KINDS
+                .into_iter()
+                .find(|k| e.path.parent() == Some(&self.root.join(k.dir())))
+            else {
+                continue;
+            };
+            state.kind_mut(kind).insert(
+                stem.to_string(),
+                IdxEntry {
+                    size: e.size,
+                    touched_ms: millis_of(e.touched),
+                },
+            );
+        }
+        let total = state.total_bytes();
+        for kind in STORE_KINDS {
+            self.write_kind_index(kind, &state, generation);
+        }
+        *self.index_lock() = state;
+        self.resident.store(total, Ordering::Relaxed);
+        self.index_rebuilds.fetch_add(1, Ordering::Relaxed);
+        self.tracer.instant("store", "store.index_rebuild", || {
+            vec![("resident_bytes", ArgVal::U64(total))]
+        });
+    }
+
+    /// Upsert one artifact into the index and persist its kind shard.
+    fn index_record_store(&self, kind: StoreKind, key: ContentHash, size: u64) {
+        let generation = self.last_gen.load(Ordering::Relaxed);
+        let mut state = self.index_lock();
+        state
+            .kind_mut(kind)
+            .insert(key.to_string(), IdxEntry { size, touched_ms: unix_millis() });
+        self.write_kind_index(kind, &state, generation);
+    }
+
+    /// Bump an artifact's last-use clock (in-memory only — the durable
+    /// recency signal is the `.lru` marker, which a rebuild scan reads).
+    fn index_record_touch(&self, kind: StoreKind, key: ContentHash) {
+        if let Some(e) = self.index_lock().kind_mut(kind).get_mut(&key.to_string()) {
+            e.touched_ms = unix_millis();
+        }
+    }
+
+    /// Drop one artifact from the index and persist its kind shard.
+    fn index_record_remove(&self, kind: StoreKind, stem: &str) {
+        let generation = self.last_gen.load(Ordering::Relaxed);
+        let mut state = self.index_lock();
+        if state.kind_mut(kind).remove(stem).is_some() {
+            self.write_kind_index(kind, &state, generation);
+        }
     }
 
     /// Load and verify an artifact's payload. Any malformed file is
@@ -361,6 +591,7 @@ impl DiskStore {
                 // bump the LRU clock; failure is harmless (falls back to
                 // the artifact's own mtime)
                 let _ = self.vfs.touch(&path.with_extension("lru"));
+                self.index_record_touch(kind, key);
                 self.trace_op("store.load", kind, key, "hit");
                 Some(artifact)
             }
@@ -369,6 +600,7 @@ impl DiskStore {
                 self.misses.fetch_add(1, Ordering::Relaxed);
                 let _ = self.vfs.remove_file(&path);
                 let _ = self.vfs.remove_file(&path.with_extension("lru"));
+                self.index_record_remove(kind, &key.to_string());
                 self.trace_op("store.load", kind, key, "corrupt");
                 None
             }
@@ -404,6 +636,7 @@ impl DiskStore {
             } else {
                 self.resident.fetch_sub(old - new, Ordering::Relaxed);
             }
+            self.index_record_store(kind, key, new);
             self.trace_op("store.store", kind, key, "stored");
             self.maybe_resync(n);
             self.evict_to_limit();
@@ -413,11 +646,13 @@ impl DiskStore {
         }
     }
 
-    /// Resynchronize the resident counter from a directory scan when a
-    /// foreign process bumped the manifest generation (its evictions are
-    /// invisible to our local increments) — or unconditionally every
-    /// [`RESYNC_EVERY`]th store, catching drift even when evictors crash
-    /// before publishing a generation.
+    /// Resynchronize the resident counter *and the sharded index* from a
+    /// directory scan when a foreign process bumped the manifest
+    /// generation (its stores/evictions are invisible to our local
+    /// increments) — or unconditionally every [`RESYNC_EVERY`]th store,
+    /// catching drift even when evictors crash before publishing a
+    /// generation. The steady-state store path (same generation, off the
+    /// period) costs one manifest read and no scan.
     fn maybe_resync(&self, nth_store: u64) {
         let seen = self.read_manifest().map(|m| m.generation).unwrap_or(0);
         let last = self.last_gen.load(Ordering::Relaxed);
@@ -425,8 +660,8 @@ impl DiskStore {
             return;
         }
         self.last_gen.store(seen, Ordering::Relaxed);
-        let total = self.scan().iter().map(|e| e.size).sum();
-        self.resident.store(total, Ordering::Relaxed);
+        self.rebuild_index();
+        let total = self.resident.load(Ordering::Relaxed);
         self.resyncs.fetch_add(1, Ordering::Relaxed);
         self.tracer.instant("store", "store.resync", || {
             vec![
@@ -468,12 +703,14 @@ impl DiskStore {
 
     /// Remove least-recently-used artifacts until the resident set fits
     /// `max_bytes`, overshooting down to a 90% low-water mark so a cache
-    /// sitting at its bound does not pay a full directory scan on every
-    /// subsequent write. In-process evictors serialize on `evict_lock`
-    /// (poison-tolerant: a panicking pipeline thread must not wedge
-    /// eviction forever); cross-process evictors serialize on
+    /// sitting at its bound does not evict on every subsequent write.
+    /// Victims come from the **in-memory sharded index** — the whole round
+    /// performs no directory scan, only the removals themselves, so
+    /// eviction is O(changed). In-process evictors serialize on
+    /// `evict_lock` (poison-tolerant: a panicking pipeline thread must not
+    /// wedge eviction forever); cross-process evictors serialize on
     /// `.evict.lock` — when another live process holds it we *skip* this
-    /// round (it is doing the work) rather than double-scan. The counter
+    /// round (it is doing the work) rather than double-evict. The counter
     /// is only ever decremented by what this process actually removed;
     /// foreign evictions reach us through the manifest-generation resync
     /// in `store()`.
@@ -493,16 +730,32 @@ impl DiskStore {
         }
         let span = self.tracer.begin();
         let mut removed: u64 = 0;
-        let mut entries = self.scan();
-        let mut total: u64 = entries.iter().map(|e| e.size).sum();
-        entries.sort_by(|a, b| a.touched.cmp(&b.touched).then(a.path.cmp(&b.path)));
-        for e in entries {
+        let mut victims: Vec<(StoreKind, String, IdxEntry)> = {
+            let state = self.index_lock();
+            STORE_KINDS
+                .into_iter()
+                .flat_map(|k| {
+                    state
+                        .kind(k)
+                        .iter()
+                        .map(move |(stem, &e)| (k, stem.clone(), e))
+                })
+                .collect()
+        };
+        let mut total: u64 = victims.iter().map(|v| v.2.size).sum();
+        victims.sort_by(|a, b| {
+            a.2.touched_ms
+                .cmp(&b.2.touched_ms)
+                .then_with(|| (a.0.dir(), &a.1).cmp(&(b.0.dir(), &b.1)))
+        });
+        for (kind, stem, entry) in victims {
             if total <= low_water {
                 break;
             }
-            match self.vfs.remove_file(&e.path) {
+            let path = self.root.join(kind.dir()).join(format!("{stem}.art"));
+            match self.vfs.remove_file(&path) {
                 Ok(()) => {
-                    let _ = self.vfs.remove_file(&e.path.with_extension("lru"));
+                    let _ = self.vfs.remove_file(&path.with_extension("lru"));
                     self.evictions.fetch_add(1, Ordering::Relaxed);
                     removed += 1;
                 }
@@ -514,14 +767,25 @@ impl DiskStore {
                 // for the next round
                 Err(_) => continue,
             }
-            total -= e.size;
+            total -= entry.size;
+            self.index_lock().kind_mut(kind).remove(&stem);
             let _ = self
                 .resident
                 .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
-                    Some(v.saturating_sub(e.size))
+                    Some(v.saturating_sub(entry.size))
                 });
         }
-        self.publish_manifest(&self.scan());
+        // publish the manifest from the index totals and persist every
+        // shard at the new generation — O(kinds), no scan
+        let totals = self.index_lock().totals();
+        self.publish_manifest(totals);
+        let generation = self.last_gen.load(Ordering::Relaxed);
+        {
+            let state = self.index_lock();
+            for kind in STORE_KINDS {
+                self.write_kind_index(kind, &state, generation);
+            }
+        }
         self.release_process_lock();
         self.tracer.span("store", "store.evict", span, || {
             vec![
@@ -582,18 +846,17 @@ impl DiskStore {
     }
 
     /// Write the generation manifest (tmp+rename, like artifacts): the
-    /// incremented generation plus a per-kind count/bytes summary. Racing
-    /// bumps may coalesce generations — harmless, the number only needs
-    /// to *change* for foreign processes to resync.
-    fn publish_manifest(&self, entries: &[Entry]) {
+    /// incremented generation plus a per-kind count/bytes summary (from
+    /// the sharded index — no directory walk). Racing bumps may coalesce
+    /// generations — harmless, the number only needs to *change* for
+    /// foreign processes to resync.
+    fn publish_manifest(&self, kinds: [(u64, u64); STORE_KINDS.len()]) {
         let generation = self.read_manifest().map(|m| m.generation).unwrap_or(0) + 1;
         let mut e = Enc::default();
         e.u64(generation);
-        for kind in STORE_KINDS {
-            let dir = self.root.join(kind.dir());
-            let in_kind = entries.iter().filter(|x| x.path.starts_with(&dir));
-            e.u64(in_kind.clone().count() as u64);
-            e.u64(in_kind.map(|x| x.size).sum());
+        for (count, bytes) in kinds {
+            e.u64(count);
+            e.u64(bytes);
         }
         let mut bytes = Vec::with_capacity(e.buf.len() + 12);
         bytes.extend_from_slice(&MANIFEST_MAGIC);
@@ -638,9 +901,13 @@ impl DiskStore {
     /// Walk every resident artifact and check it end-to-end: container
     /// (magic, version, kind tag, checksum) *and* typed payload decode —
     /// the exact gauntlet a load would run. With `heal`, entries that
-    /// fail are deleted (with their `.lru` markers) so the next run
-    /// recomputes them. The store's own counters are not touched: this
-    /// is an audit, not a load path.
+    /// fail are deleted (with their `.lru` markers and index entries) so
+    /// the next run recomputes them. The walk also cross-checks the
+    /// sharded index against what the directory actually holds
+    /// ([`StoreCheck::index_mismatch`] — the CI gate that the O(changed)
+    /// bookkeeping never drifts from the ground truth without being
+    /// caught). The store's own counters are not touched: this is an
+    /// audit, not a load path.
     pub fn verify(&self, heal: bool) -> StoreCheck {
         let mut check = StoreCheck::default();
         for kind in STORE_KINDS {
@@ -673,10 +940,30 @@ impl DiskStore {
                     if heal {
                         if self.vfs.remove_file(&path).is_ok() {
                             check.healed += 1;
+                            kc.count -= 1;
+                            kc.bytes -= meta.len;
                         }
                         let _ = self.vfs.remove_file(&path.with_extension("lru"));
+                        if let Some(stem) = path.file_stem().and_then(|s| s.to_str()) {
+                            self.index_record_remove(kind, stem);
+                        }
                     }
                 }
+            }
+            let (icount, ibytes) = {
+                let state = self.index_lock();
+                let m = state.kind(kind);
+                (m.len() as u64, m.values().map(|e| e.size).sum::<u64>())
+            };
+            if (icount, ibytes) != (kc.count, kc.bytes) {
+                check.index_mismatch.push(format!(
+                    "{}: index says {} entries / {} bytes, directory holds {} / {}",
+                    kind.dir(),
+                    icount,
+                    ibytes,
+                    kc.count,
+                    kc.bytes
+                ));
             }
             check.total_bytes += kc.bytes;
             check.bad += kc.bad;
@@ -699,10 +986,14 @@ fn unix_millis() -> u64 {
 fn payload_decodes(kind: StoreKind, payload: &[u8]) -> bool {
     match kind {
         StoreKind::Emulated => {
+            // both image forms share the kind: complete results and
+            // resumable frontier images (tight-budget partials)
             let mut d = Dec::new(payload);
             let Some(_elapsed) = d.u64() else { return false };
+            let image = &payload[d.pos()..];
             let session = Arc::new(SessionInterner::new());
-            crate::sym::decode_emulation(&payload[d.pos()..], &session).is_some()
+            crate::sym::decode_emulation(image, &session).is_some()
+                || crate::sym::decode_partial_emulation(image, &session, None).is_some()
         }
         StoreKind::Decoded => decode_decoded(payload).is_some(),
         StoreKind::Detected => decode_detected(payload).is_some(),
@@ -720,6 +1011,9 @@ pub struct StoreCheck {
     pub bad: u64,
     pub healed: u64,
     pub bad_paths: Vec<PathBuf>,
+    /// Kinds whose sharded index disagrees with the directory walk
+    /// (human-readable descriptions; empty = the index is coherent).
+    pub index_mismatch: Vec<String>,
 }
 
 /// Per-kind slice of a [`StoreCheck`].
@@ -886,6 +1180,33 @@ pub(crate) fn decode_emulated(
         result,
         elapsed,
     })
+}
+
+/// Frontier payload (`emulated/` kind, `emulated.frontier` key family):
+/// the nanoseconds the tight run spent before tripping its budget,
+/// followed by the resumable partial-emulation image. The elapsed prefix
+/// keeps the container shape identical to a complete emulated artifact.
+pub(crate) fn encode_frontier(elapsed: Duration, part: &crate::emu::PartialEmulation) -> Vec<u8> {
+    let mut e = Enc::default();
+    e.u64(elapsed.as_nanos() as u64);
+    e.buf
+        .extend_from_slice(&crate::sym::encode_partial_emulation(part));
+    e.buf
+}
+
+/// Decode a frontier payload into `session`, validating the register
+/// environment width against `nregs` (pass `None` for a structural-only
+/// check with no kernel in hand). Returns the tight run's elapsed time
+/// and the resumable image.
+pub(crate) fn decode_frontier(
+    bytes: &[u8],
+    session: &Arc<SessionInterner>,
+    nregs: Option<usize>,
+) -> Option<(Duration, crate::emu::PartialEmulation)> {
+    let mut d = Dec::new(bytes);
+    let elapsed = Duration::from_nanos(d.u64()?);
+    let part = crate::sym::decode_partial_emulation(&bytes[d.pos()..], session, nregs)?;
+    Some((elapsed, part))
 }
 
 /// `decoded/` payload: the micro-op kernel's own field image.
@@ -1232,6 +1553,148 @@ mod tests {
         assert_eq!(s2.snapshot().generation, m.generation);
         let total: u64 = s2.scan().iter().map(|e| e.size).sum();
         assert_eq!(s2.snapshot().resident_bytes, total);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn store_and_evict_perform_no_directory_rescan() {
+        use crate::util::vfs::{FaultFs, FaultOp};
+        let dir = tmp("ochanged");
+        let fs = FaultFs::real();
+        let s = DiskStore::open_on(fs.clone(), &dir, 2400).unwrap();
+        let payload = vec![0u8; 1000];
+        s.store(StoreKind::Validated, ContentHash(1, 0), &payload);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        s.store(StoreKind::Validated, ContentHash(2, 0), &payload);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+
+        // acceptance pin: a store that trips the bound must pick its
+        // victims from the sharded index — zero `read_dir` calls across
+        // the store *and* the eviction round it triggers (O(changed),
+        // not O(entries))
+        let before = fs.seen(FaultOp::ReadDir);
+        s.store(StoreKind::Validated, ContentHash(3, 0), &payload);
+        assert!(s.snapshot().evictions >= 1, "bound must force an eviction");
+        assert_eq!(
+            fs.seen(FaultOp::ReadDir) - before,
+            0,
+            "store+evict must not rescan any directory"
+        );
+        assert_eq!(s.snapshot().index_rebuilds, 1, "only the cold open scans");
+
+        // and the index the eviction maintained agrees with the ground
+        // truth a full verify walk computes
+        let check = s.verify(false);
+        assert!(check.index_mismatch.is_empty(), "{:?}", check.index_mismatch);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn warm_open_seeds_from_index_shards_and_drift_forces_rebuild() {
+        let dir = tmp("seed");
+        let resident = {
+            let s = DiskStore::open(&dir, 1 << 20).unwrap();
+            s.store(StoreKind::Validated, ContentHash(1, 0), b"alpha");
+            s.store(StoreKind::Scored, ContentHash(2, 0), b"beta-beta");
+            s.snapshot().resident_bytes
+        };
+
+        // clean reopen: the shards carry the whole picture — no rescan
+        let s = DiskStore::open(&dir, 1 << 20).unwrap();
+        assert_eq!(s.snapshot().index_rebuilds, 0, "seeded open must not scan");
+        assert_eq!(s.snapshot().resident_bytes, resident);
+        assert!(s.verify(false).index_mismatch.is_empty());
+
+        // a corrupt shard invalidates the lot: the next open rebuilds
+        let shard = s.index_path(StoreKind::Scored);
+        let mut bytes = std::fs::read(&shard).unwrap();
+        let n = bytes.len();
+        bytes[n - 3] ^= 0xFF;
+        std::fs::write(&shard, &bytes).unwrap();
+        let s2 = DiskStore::open(&dir, 1 << 20).unwrap();
+        assert_eq!(s2.snapshot().index_rebuilds, 1, "drifted shard must rescan");
+        assert_eq!(s2.snapshot().resident_bytes, resident);
+        assert!(s2.verify(false).index_mismatch.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn verify_reports_index_drift_and_resync_heals_it() {
+        let dir = tmp("drift");
+        let s = DiskStore::open(&dir, 1 << 20).unwrap();
+        s.store(StoreKind::Validated, ContentHash(1, 0), b"payload");
+        assert!(s.verify(false).index_mismatch.is_empty());
+
+        // simulate a foreign process deleting an artifact behind our back
+        let path = s.art_path(StoreKind::Validated, ContentHash(1, 0));
+        std::fs::remove_file(&path).unwrap();
+        let check = s.verify(false);
+        assert_eq!(check.index_mismatch.len(), 1, "{:?}", check.index_mismatch);
+        assert!(check.index_mismatch[0].contains("validated"));
+
+        // a rebuild (the resync path) restores coherence
+        s.rebuild_index();
+        assert!(s.verify(false).index_mismatch.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn frontier_payloads_coexist_with_complete_images_in_the_emulated_kind() {
+        use crate::emu::{emulate_outcome, EmuOutcome, Limits};
+        use crate::ptx::parser::parse_kernel;
+        let src = r#"
+.visible .entry fr(.param .u64 out){
+.reg .b32 %r<8>; .reg .b64 %rd<4>; .reg .pred %p<4>;
+ld.param.u64 %rd1, [out];
+cvta.to.global.u64 %rd2, %rd1;
+mov.u32 %r1, %tid.x;
+and.b32 %r2, %r1, 1;
+setp.eq.s32 %p1, %r2, 0;
+@%p1 bra $A;
+add.s32 %r1, %r1, 7;
+$A:
+and.b32 %r3, %r1, 2;
+setp.eq.s32 %p2, %r3, 0;
+@%p2 bra $B;
+add.s32 %r1, %r1, 9;
+$B:
+st.global.u32 [%rd2], %r1;
+ret;
+}
+"#;
+        let kernel = Arc::new(parse_kernel(src).unwrap());
+        let session = Arc::new(SessionInterner::new());
+        let tight = Limits {
+            max_flows: 2,
+            ..Limits::default()
+        };
+        let EmuOutcome::Partial(part) =
+            emulate_outcome(&kernel, tight, session.clone(), None)
+        else {
+            panic!("tight budget must trip mid-exploration");
+        };
+        let elapsed = Duration::from_nanos(12345);
+        let payload = encode_frontier(elapsed, &part);
+
+        // the store accepts it under the emulated kind and verify's typed
+        // audit recognizes it as well-formed
+        let dir = tmp("frontier");
+        let s = DiskStore::open(&dir, 1 << 20).unwrap();
+        let key = KeyBuilder::new("emulated.frontier")
+            .hash(ContentHash(5, 6))
+            .limits(tight)
+            .finish();
+        s.store(StoreKind::Emulated, key, &payload);
+        let check = s.verify(false);
+        assert_eq!(check.bad, 0, "frontier image must pass the typed audit");
+
+        // and it round-trips through the frontier decoder
+        let loaded = s.load(StoreKind::Emulated, key).unwrap();
+        let fresh = Arc::new(SessionInterner::new());
+        let (got_elapsed, got) = decode_frontier(&loaded, &fresh, None).unwrap();
+        assert_eq!(got_elapsed, elapsed);
+        assert_eq!(got.pending.len(), part.pending.len());
+        assert!(decode_frontier(&loaded, &fresh, Some(999)).is_none());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -11,7 +11,10 @@ pub mod solver;
 pub mod term;
 
 pub use affine::{extract, split_on, Affine};
-pub use persist::{decode_emulation, encode_emulation, PERSIST_VERSION};
+pub use persist::{
+    decode_emulation, decode_partial_emulation, encode_emulation, encode_partial_emulation,
+    PERSIST_VERSION,
+};
 pub use solver::{
     const_distance, may_alias, solve_delta, solve_forward, Assumptions, AssumptionsImage,
     Conflict, FormImage, ForwardRel, Truth,

@@ -26,11 +26,15 @@
 //! any malformed byte yields `None`, which the pipeline's disk store
 //! treats exactly like a corrupt artifact: delete, count, recompute.
 
-use crate::emu::{EmuStats, EmulationResult, FlowEnd, FlowResult};
+use crate::emu::{
+    EmuError, EmuStats, EmulationResult, Flow, FlowEnd, FlowResult, Limits, PartialEmulation,
+};
+use crate::emu::env::RegEnv;
+use crate::emu::memtrace::MemTrace;
 use crate::sym::solver::{Assumptions, AssumptionsImage, FormImage};
 use crate::sym::term::{BvOp, CmpKind, Node, SessionInterner, TermId, TermPool};
 use crate::util::{Dec, Enc, Fnv128, FnvBuild, FnvMap};
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
 
 /// Bump when the image layout changes. The pipeline store's own version
@@ -38,7 +42,16 @@ use std::sync::Arc;
 /// so a future store-format bump that leaves the graph codec untouched
 /// can keep old images readable.
 /// v2: memory-trace records carry the barrier `phase` id.
-pub const PERSIST_VERSION: u32 = 2;
+/// v3: a completeness tag follows the version — complete images keep the
+///     v2 body; *partial* images additionally carry the budget-stopped
+///     frontier (pending flows with live register environments, the
+///     structural memo table, the stop limits and error) so a widened
+///     retry resumes exploration instead of re-emulating flow zero.
+pub const PERSIST_VERSION: u32 = 3;
+
+/// Completeness tags (byte after the version word).
+const TAG_COMPLETE: u8 = 0;
+const TAG_PARTIAL: u8 = 1;
 
 // ---------------------------------------------------------------------------
 // Stable operator tags (shared with the simulator's DecodedKernel codec)
@@ -526,6 +539,7 @@ pub fn encode_emulation(r: &EmulationResult) -> Vec<u8> {
 
     let mut e = Enc::default();
     e.u32(PERSIST_VERSION);
+    e.u8(TAG_COMPLETE);
     g.encode(&mut e);
     e.u32(g.local(r.tid_sym));
     for w in r.stats.to_words() {
@@ -538,7 +552,11 @@ pub fn encode_emulation(r: &EmulationResult) -> Vec<u8> {
         f.trace.encode(&mut e, &mut |t| g.local(t));
         encode_assumptions(&mut e, img, &g);
     }
+    seal_checksum(e)
+}
 
+/// Append the `Fnv128` trailer and hand back the finished image bytes.
+fn seal_checksum(mut e: Enc) -> Vec<u8> {
     let (c0, c1) = {
         let mut h = Fnv128::new();
         h.write(&e.buf);
@@ -549,14 +567,9 @@ pub fn encode_emulation(r: &EmulationResult) -> Vec<u8> {
     e.buf
 }
 
-/// Decode an emulation image into the *loading* session: a fresh
-/// [`TermPool`] is grown in `session`, every name re-interned, every node
-/// re-hash-consed. Any checksum/bounds/shape violation returns `None`
-/// (the caller recomputes, exactly like other corrupt artifacts).
-pub fn decode_emulation(
-    bytes: &[u8],
-    session: &Arc<SessionInterner>,
-) -> Option<EmulationResult> {
+/// Verify the `Fnv128` trailer and the version word, returning a decoder
+/// over the body (positioned after the version) plus the completeness tag.
+fn open_image(bytes: &[u8]) -> Option<(Dec<'_>, u8)> {
     if bytes.len() < 16 {
         return None;
     }
@@ -570,9 +583,24 @@ pub fn decode_emulation(
     if (td.u64()?, td.u64()?) != want {
         return None;
     }
-
     let mut d = Dec::new(body);
     if d.u32()? != PERSIST_VERSION {
+        return None;
+    }
+    let tag = d.u8()?;
+    Some((d, tag))
+}
+
+/// Decode an emulation image into the *loading* session: a fresh
+/// [`TermPool`] is grown in `session`, every name re-interned, every node
+/// re-hash-consed. Any checksum/bounds/shape violation returns `None`
+/// (the caller recomputes, exactly like other corrupt artifacts).
+pub fn decode_emulation(
+    bytes: &[u8],
+    session: &Arc<SessionInterner>,
+) -> Option<EmulationResult> {
+    let (mut d, tag) = open_image(bytes)?;
+    if tag != TAG_COMPLETE {
         return None;
     }
     let mut pool = TermPool::in_session(session.clone());
@@ -602,6 +630,231 @@ pub fn decode_emulation(
         flows,
         tid_sym,
         stats,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// PartialEmulation codec (resumable frontier images)
+// ---------------------------------------------------------------------------
+
+fn encode_error(e: &mut Enc, err: &EmuError) {
+    match err {
+        EmuError::FlowLimit(n) => {
+            e.u8(0);
+            e.u64(*n as u64);
+        }
+        EmuError::StepLimit => e.u8(1),
+        EmuError::UnknownLabel(l) => {
+            e.u8(2);
+            e.str(l);
+        }
+    }
+}
+
+fn decode_error(d: &mut Dec) -> Option<EmuError> {
+    Some(match d.u8()? {
+        0 => EmuError::FlowLimit(usize::try_from(d.u64()?).ok()?),
+        1 => EmuError::StepLimit,
+        2 => EmuError::UnknownLabel(d.str()?.to_string()),
+        _ => return None,
+    })
+}
+
+/// Serialize a budget-stopped frontier as a self-contained, relocatable
+/// image. Layout: version ∥ `TAG_PARTIAL` ∥ graph ∥ tid ∥ stats ∥ limits ∥
+/// error ∥ done flows ∥ pending flows (with live register environments) ∥
+/// memo table ∥ next flow id ∥ `Fnv128` checksum.
+pub fn encode_partial_emulation(p: &PartialEmulation) -> Vec<u8> {
+    let done_images: Vec<AssumptionsImage> =
+        p.done.iter().map(|f| f.assumptions.export()).collect();
+    let pending_images: Vec<AssumptionsImage> =
+        p.pending.iter().map(|f| f.assumptions.export()).collect();
+
+    let mut b = GraphBuilder::new(&p.pool);
+    b.add_root(p.tid_sym);
+    let mut roots = Vec::new();
+    for f in &p.done {
+        f.trace.term_roots(&mut roots);
+    }
+    for f in &p.pending {
+        f.trace.term_roots(&mut roots);
+        roots.extend(f.env.vals.iter().flatten().copied());
+    }
+    for img in done_images.iter().chain(&pending_images) {
+        for form in &img.forms {
+            roots.extend(form.atoms.iter().map(|&(t, _)| t));
+        }
+        roots.extend(img.opaque.iter().map(|&(t, _)| t));
+    }
+    for t in roots {
+        b.add_root(t);
+    }
+    let g = b.seal();
+
+    let mut e = Enc::default();
+    e.u32(PERSIST_VERSION);
+    e.u8(TAG_PARTIAL);
+    g.encode(&mut e);
+    e.u32(g.local(p.tid_sym));
+    for w in p.stats.to_words() {
+        e.u64(w);
+    }
+    e.u64(p.limits.max_flows as u64);
+    e.u64(p.limits.max_steps_per_flow);
+    e.u64(p.limits.max_total_steps);
+    encode_error(&mut e, &p.error);
+
+    e.u64(p.done.len() as u64);
+    for (f, img) in p.done.iter().zip(&done_images) {
+        e.u32(f.id);
+        e.u8(f.end.tag());
+        f.trace.encode(&mut e, &mut |t| g.local(t));
+        encode_assumptions(&mut e, img, &g);
+    }
+
+    e.u64(p.pending.len() as u64);
+    for (f, img) in p.pending.iter().zip(&pending_images) {
+        e.u32(f.id);
+        e.u64(f.pc as u64);
+        e.u32(f.segment);
+        e.u32(f.phase);
+        e.u64(f.steps);
+        // entered_loops sorted by header so the bytes are deterministic
+        let mut loops: Vec<(usize, u32)> =
+            f.entered_loops.iter().map(|(&h, &c)| (h, c)).collect();
+        loops.sort_unstable();
+        e.u64(loops.len() as u64);
+        for (header, count) in loops {
+            e.u64(header as u64);
+            e.u32(count);
+        }
+        e.u64(f.env.vals.len() as u64);
+        for v in &f.env.vals {
+            match v {
+                None => e.u8(0),
+                Some(t) => {
+                    e.u8(1);
+                    e.u32(g.local(*t));
+                }
+            }
+        }
+        f.trace.encode(&mut e, &mut |t| g.local(t));
+        encode_assumptions(&mut e, img, &g);
+    }
+
+    e.u64(p.memo.len() as u64);
+    for &(pc, fp) in &p.memo {
+        e.u64(pc as u64);
+        e.u64(fp);
+    }
+    e.u32(p.next_flow_id);
+    seal_checksum(e)
+}
+
+/// Decode a frontier image into the *loading* session. `nregs` is the
+/// register count of the kernel the caller is about to resume
+/// ([`crate::emu::env::RegInterner::from_kernel`] is deterministic per
+/// kernel, so slot indices are stable cross-process); any environment
+/// whose length disagrees fails the decode — the image belongs to a
+/// different kernel than the key promised. Pass `None` for a purely
+/// structural check (the store's verify audit has no kernel in hand).
+pub fn decode_partial_emulation(
+    bytes: &[u8],
+    session: &Arc<SessionInterner>,
+    nregs: Option<usize>,
+) -> Option<PartialEmulation> {
+    let (mut d, tag) = open_image(bytes)?;
+    if tag != TAG_PARTIAL {
+        return None;
+    }
+    let mut pool = TermPool::in_session(session.clone());
+    let g = decode_graph(&mut d, &mut pool)?;
+    let tid_sym = g.term(d.u32()?)?;
+    let mut words = [0u64; 12];
+    for w in words.iter_mut() {
+        *w = d.u64()?;
+    }
+    let stats = EmuStats::from_words(words);
+    let limits = Limits {
+        max_flows: usize::try_from(d.u64()?).ok()?,
+        max_steps_per_flow: d.u64()?,
+        max_total_steps: d.u64()?,
+    };
+    let error = decode_error(&mut d)?;
+
+    let ndone = d.len()?;
+    let mut done = Vec::with_capacity(ndone);
+    for _ in 0..ndone {
+        let id = d.u32()?;
+        let end = FlowEnd::from_tag(d.u8()?)?;
+        let trace = MemTrace::decode(&mut d, &|i| g.term(i))?;
+        let assumptions = decode_assumptions(&mut d, &g)?;
+        done.push(FlowResult {
+            id,
+            trace,
+            assumptions,
+            end,
+        });
+    }
+
+    let npending = d.len()?;
+    let mut pending = Vec::with_capacity(npending);
+    for _ in 0..npending {
+        let id = d.u32()?;
+        let pc = usize::try_from(d.u64()?).ok()?;
+        let segment = d.u32()?;
+        let phase = d.u32()?;
+        let steps = d.u64()?;
+        let nloops = d.len()?;
+        let mut entered_loops = HashMap::with_capacity(nloops);
+        for _ in 0..nloops {
+            let header = usize::try_from(d.u64()?).ok()?;
+            entered_loops.insert(header, d.u32()?);
+        }
+        let nvals = d.len()?;
+        if nregs.is_some_and(|n| nvals != n) {
+            return None;
+        }
+        let mut env = RegEnv::new(nvals);
+        for slot in env.vals.iter_mut() {
+            *slot = match d.u8()? {
+                0 => None,
+                1 => Some(g.term(d.u32()?)?),
+                _ => return None,
+            };
+        }
+        let trace = MemTrace::decode(&mut d, &|i| g.term(i))?;
+        let assumptions = decode_assumptions(&mut d, &g)?;
+        pending.push(Flow {
+            id,
+            env,
+            assumptions,
+            trace,
+            pc,
+            segment,
+            phase,
+            entered_loops,
+            steps,
+        });
+    }
+
+    let nmemo = d.len()?;
+    let mut memo = Vec::with_capacity(nmemo);
+    for _ in 0..nmemo {
+        let pc = usize::try_from(d.u64()?).ok()?;
+        memo.push((pc, d.u64()?));
+    }
+    let next_flow_id = d.u32()?;
+    d.done().then_some(PartialEmulation {
+        pool,
+        tid_sym,
+        stats,
+        limits,
+        done,
+        pending,
+        memo,
+        next_flow_id,
+        error,
     })
 }
 
@@ -893,6 +1146,140 @@ $EXIT: ret;
         assert_eq!(reloc.check(&dst, nlt200), Truth::True, "x < 100 ⇒ x < 200");
         let nyx = dst.cmp(CmpKind::Sgt, ny, nx);
         assert_eq!(reloc.check(&dst, nyx), Truth::True, "x < y ⇒ y > x");
+    }
+
+    /// Kernel with `bits` independent tid-bit branches → `2^bits` flows.
+    fn forky_src(bits: u32) -> String {
+        let mut body = String::new();
+        for i in 0..bits {
+            body.push_str(&format!(
+                "and.b32 %r10, %r1, {};\nsetp.eq.s32 %p{}, %r10, 0;\n@%p{} bra $S{};\nadd.s32 %r2, %r2, {};\n$S{}:\n",
+                1u32 << i,
+                i + 1,
+                i + 1,
+                i,
+                100 + i,
+                i
+            ));
+        }
+        format!(
+            r#"
+.visible .entry forky(.param .u64 out){{
+.reg .b32 %r<12>; .reg .b64 %rd<4>; .reg .pred %p<8>;
+ld.param.u64 %rd1, [out];
+cvta.to.global.u64 %rd2, %rd1;
+mov.u32 %r1, %tid.x;
+mov.u32 %r2, 0;
+{body}st.global.u32 [%rd2], %r2;
+ret;
+}}
+"#
+        )
+    }
+
+    /// A frontier image round-trips into a polluted session and resumes to
+    /// the exact cold-wide result — the cross-process resume path the
+    /// pipeline's widened retry uses.
+    #[test]
+    fn partial_roundtrip_resumes_to_cold_wide_result() {
+        use crate::emu::env::RegInterner;
+        use crate::emu::{emulate_outcome, resume_outcome, EmuOutcome};
+
+        let k = parse_kernel(&forky_src(3)).unwrap();
+        let tight = Limits {
+            max_flows: 2,
+            ..Limits::default()
+        };
+        let part = match emulate_outcome(&k, tight, Arc::new(SessionInterner::new()), None) {
+            EmuOutcome::Partial(p) => *p,
+            other => panic!("expected a partial outcome, got {other:?}"),
+        };
+        assert!(matches!(part.error, EmuError::FlowLimit(2)));
+        let bytes = encode_partial_emulation(&part);
+
+        // polluted loading session: every id is shifted
+        let session = Arc::new(SessionInterner::new());
+        {
+            let mut warm = TermPool::in_session(session.clone());
+            for i in 0..15 {
+                warm.symbol(&format!("p{i}"), 32);
+                warm.uf(&format!("pf{i}"), vec![], 64);
+            }
+        }
+        let nregs = RegInterner::from_kernel(&k).len();
+        let loaded =
+            decode_partial_emulation(&bytes, &session, Some(nregs)).expect("image decodes");
+        assert_eq!(loaded.pending.len(), part.pending.len());
+        assert_eq!(loaded.memo, part.memo, "structural memo keys relocate verbatim");
+        assert_eq!(loaded.next_flow_id, part.next_flow_id);
+        assert_eq!(loaded.limits.max_flows, 2);
+
+        let resumed = match resume_outcome(&k, Limits::default(), loaded, None) {
+            EmuOutcome::Complete(r) => r,
+            other => panic!("resume should complete, got {other:?}"),
+        };
+        let cold = emulate_in_session(&k, Limits::default(), Arc::new(SessionInterner::new()))
+            .unwrap();
+        assert_eq!(resumed.stats.to_words(), cold.stats.to_words());
+        assert_eq!(resumed.flows.len(), cold.flows.len());
+        for (a, b) in resumed.flows.iter().zip(&cold.flows) {
+            assert_eq!((a.id, a.end), (b.id, b.end));
+            assert_eq!(a.trace.loads.len(), b.trace.loads.len());
+            assert_eq!(a.trace.stores.len(), b.trace.stores.len());
+            assert_eq!(a.assumptions.fact_count(), b.assumptions.fact_count());
+        }
+
+        // a register-count mismatch means the image is for another kernel;
+        // the structural (kernel-less) check still accepts it
+        assert!(decode_partial_emulation(&bytes, &session, Some(nregs + 1)).is_none());
+        assert!(nregs > 1 && decode_partial_emulation(&bytes, &session, Some(0)).is_none());
+        assert!(decode_partial_emulation(&bytes, &session, None).is_some());
+    }
+
+    /// The completeness tag keeps the two image forms apart: a complete
+    /// image never decodes as a frontier and vice versa.
+    #[test]
+    fn completeness_tag_separates_image_forms() {
+        use crate::emu::env::RegInterner;
+        use crate::emu::{emulate_outcome, EmuOutcome};
+
+        let k = parse_kernel(&forky_src(2)).unwrap();
+        let nregs = RegInterner::from_kernel(&k).len();
+        let session = Arc::new(SessionInterner::new());
+
+        let complete =
+            emulate_in_session(&k, Limits::default(), Arc::new(SessionInterner::new())).unwrap();
+        let cbytes = encode_emulation(&complete);
+        assert!(decode_emulation(&cbytes, &session).is_some());
+        assert!(decode_partial_emulation(&cbytes, &session, Some(nregs)).is_none());
+
+        let tight = Limits {
+            max_flows: 2,
+            ..Limits::default()
+        };
+        let part = match emulate_outcome(&k, tight, Arc::new(SessionInterner::new()), None) {
+            EmuOutcome::Partial(p) => *p,
+            other => panic!("expected a partial outcome, got {other:?}"),
+        };
+        let pbytes = encode_partial_emulation(&part);
+        assert!(decode_partial_emulation(&pbytes, &session, Some(nregs)).is_some());
+        assert!(decode_emulation(&pbytes, &session).is_none());
+
+        // corruption resistance mirrors the complete-image guarantee
+        for cut in (0..pbytes.len()).step_by(11) {
+            assert!(
+                decode_partial_emulation(&pbytes[..cut], &session, Some(nregs)).is_none(),
+                "truncation at {cut} must be rejected"
+            );
+        }
+        for i in (0..pbytes.len()).step_by(13) {
+            let mut bad = pbytes.clone();
+            bad[i] ^= 0xFF;
+            assert!(
+                decode_partial_emulation(&bad, &session, Some(nregs)).is_none(),
+                "bit flip at {i} must be rejected"
+            );
+        }
     }
 
     /// Corrupt and truncated images must fail decode, never panic.

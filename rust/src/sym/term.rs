@@ -136,6 +136,19 @@ fn mask(width: u32) -> u64 {
     }
 }
 
+/// One FNV-1a step over a u64 word.
+fn fnv_word(h: u64, x: u64) -> u64 {
+    (h ^ x).wrapping_mul(0x1000_0000_01b3)
+}
+
+/// FNV-1a over a name, with a terminator so adjacent strings can't merge.
+fn fnv_str(mut h: u64, s: &str) -> u64 {
+    for &b in s.as_bytes() {
+        h = fnv_word(h, b as u64 + 1);
+    }
+    fnv_word(h, 0x1F)
+}
+
 /// Sign-extend a `width`-bit value stored in a u64 to i128.
 pub fn to_signed(bits: u64, width: u32) -> i128 {
     let m = mask(width);
@@ -237,6 +250,10 @@ impl SessionInterner {
 #[derive(Debug)]
 pub struct TermPool {
     nodes: Vec<Node>,
+    /// Structural fingerprint per node, parallel to `nodes` (see
+    /// [`TermPool::fp`]); filled once at intern time from the children's
+    /// cached fingerprints, so lookup is O(1).
+    fps: Vec<u64>,
     index: HashMap<Node, TermId>,
     session: Arc<SessionInterner>,
     sym_names: FnvMap<u32, Arc<str>>,
@@ -261,6 +278,7 @@ impl TermPool {
     pub fn in_session(session: Arc<SessionInterner>) -> TermPool {
         TermPool {
             nodes: Vec::new(),
+            fps: Vec::new(),
             index: HashMap::new(),
             session,
             sym_names: FnvMap::default(),
@@ -402,10 +420,78 @@ impl TermPool {
         if let Some(&t) = self.index.get(&node) {
             return t;
         }
+        let fp = self.node_fp(&node);
         let t = TermId(self.nodes.len() as u32);
         self.nodes.push(node.clone());
+        self.fps.push(fp);
         self.index.insert(node, t);
         t
+    }
+
+    /// Structural fingerprint of `t`: a hash over the node's shape and the
+    /// *names* of the symbols/UFs it reaches — never over raw `TermId`s or
+    /// interner ids — so two pools that build the same expression, in any
+    /// intern order and in any process, agree on the fingerprint. This is
+    /// what makes environment fingerprints (path memoization keys) stable
+    /// across the persistence codec's relocation, which a resumable
+    /// emulation image depends on.
+    pub fn fp(&self, t: TermId) -> u64 {
+        self.fps[t.0 as usize]
+    }
+
+    /// Fingerprint of a node about to be interned: children are already
+    /// interned (construction is bottom-up), so their fingerprints are
+    /// cached. Names must be in the local mirrors — `symbol`/`uf` intern
+    /// the name before the node, so this holds by construction.
+    fn node_fp(&self, node: &Node) -> u64 {
+        let h = 0xcbf2_9ce4_8422_2325u64;
+        match node {
+            Node::Const { bits, width } => {
+                fnv_word(fnv_word(fnv_word(h, 0), *bits), *width as u64)
+            }
+            Node::Sym { sym, width } => {
+                fnv_word(fnv_str(fnv_word(h, 1), self.sym_name(*sym)), *width as u64)
+            }
+            Node::Uf { func, args, width } => {
+                let mut h = fnv_str(fnv_word(h, 2), self.uf_name(*func));
+                h = fnv_word(h, args.len() as u64);
+                for &a in args {
+                    h = fnv_word(h, self.fp(a));
+                }
+                fnv_word(h, *width as u64)
+            }
+            Node::Bin { op, a, b, width } => {
+                let mut h = fnv_word(fnv_word(h, 3), *op as u64);
+                h = fnv_word(h, self.fp(*a));
+                h = fnv_word(h, self.fp(*b));
+                fnv_word(h, *width as u64)
+            }
+            Node::Not { a, width } => {
+                fnv_word(fnv_word(fnv_word(h, 4), self.fp(*a)), *width as u64)
+            }
+            Node::Cmp { kind, a, b } => {
+                let mut h = fnv_word(fnv_word(h, 5), *kind as u64);
+                h = fnv_word(h, self.fp(*a));
+                fnv_word(h, self.fp(*b))
+            }
+            Node::Ite { cond, t, e, width } => {
+                let mut h = fnv_word(fnv_word(h, 6), self.fp(*cond));
+                h = fnv_word(h, self.fp(*t));
+                h = fnv_word(h, self.fp(*e));
+                fnv_word(h, *width as u64)
+            }
+            Node::SExt { a, from, width } => {
+                let h = fnv_word(fnv_word(h, 7), self.fp(*a));
+                fnv_word(fnv_word(h, *from as u64), *width as u64)
+            }
+            Node::ZExt { a, from, width } => {
+                let h = fnv_word(fnv_word(h, 8), self.fp(*a));
+                fnv_word(fnv_word(h, *from as u64), *width as u64)
+            }
+            Node::Trunc { a, width } => {
+                fnv_word(fnv_word(fnv_word(h, 9), self.fp(*a)), *width as u64)
+            }
+        }
     }
 
     // ---- smart constructors -------------------------------------------------
@@ -1057,6 +1143,36 @@ mod tests {
                 (a as u128 * b as u128) & (m as u128)
             );
         });
+    }
+
+    #[test]
+    fn structural_fingerprints_survive_relocation() {
+        // same expression in two pools with different intern orders (so
+        // every TermId/SymId/UfId differs) must fingerprint identically
+        let mut p1 = TermPool::new();
+        let x1 = p1.symbol("x", 32);
+        let c1 = p1.constant(5, 32);
+        let s1 = p1.bin(BvOp::Add, x1, c1);
+        let u1 = p1.uf("load", vec![s1], 32);
+
+        let mut p2 = TermPool::new();
+        p2.symbol("noise", 8); // shift every id
+        p2.uf("other", vec![], 64);
+        let c2 = p2.constant(5, 32);
+        let x2 = p2.symbol("x", 32);
+        let s2 = p2.bin(BvOp::Add, x2, c2);
+        let u2 = p2.uf("load", vec![s2], 32);
+
+        assert_ne!((x1, u1), (x2, u2), "ids should actually differ");
+        assert_eq!(p1.fp(x1), p2.fp(x2));
+        assert_eq!(p1.fp(s1), p2.fp(s2));
+        assert_eq!(p1.fp(u1), p2.fp(u2));
+        // different structure ⇒ different fingerprint (with overwhelming
+        // probability; these concrete cases are pinned)
+        assert_ne!(p1.fp(x1), p1.fp(s1));
+        assert_ne!(p1.fp(s1), p1.fp(u1));
+        let y1 = p1.symbol("y", 32);
+        assert_ne!(p1.fp(x1), p1.fp(y1), "name participates in the fp");
     }
 
     #[test]

@@ -190,6 +190,231 @@ fn bench_command_reports_variant_validity() {
     assert_eq!(err_kind(&rs[1]), Some("BadRequest"));
 }
 
+/// A flow-explosion kernel: `bits` tid-dependent branches with distinct
+/// accumulator values per path, so 2^bits environments defeat
+/// memoization. 10 bits = 1024 flows — over the tight serve budget
+/// (512), under the default wide one (4096): the widen/resume path.
+fn forky(bits: usize) -> String {
+    let mut body = String::new();
+    for i in 0..bits {
+        body.push_str(&format!(
+            "and.b32 %r10, %r1, {};\nsetp.eq.s32 %p{p}, %r10, 0;\n\
+             @%p{p} bra $S{i};\nadd.s32 %r2, %r2, {};\n$S{i}:\n",
+            1u32 << i,
+            100 + i,
+            p = i + 1,
+        ));
+    }
+    format!(
+        ".version 7.6\n.target sm_70\n.address_size 64\n\
+         .visible .entry forky(.param .u64 out){{\n\
+         .reg .pred %p<{}>; .reg .b32 %r<12>; .reg .b64 %rd<3>;\n\
+         ld.param.u64 %rd1, [out];\ncvta.to.global.u64 %rd2, %rd1;\n\
+         mov.u32 %r1, %tid.x;\nmov.u32 %r2, 0;\n{body}\
+         st.global.u32 [%rd2], %r2;\nret;\n}}\n",
+        bits + 2,
+    )
+}
+
+/// N concurrent socket connections, each streaming a seeded-random
+/// poisoned batch — garbage PTX, `__panic`, a fork explosion, a
+/// zero-deadline request — interleaved with healthy kernels. Every
+/// connection's full response stream must be byte-identical to a serial
+/// run of the same batch, cold and warm, and the per-connection worker
+/// stats must fold back into the root session.
+#[cfg(unix)]
+#[test]
+fn concurrent_socket_connections_isolate_poison_and_stay_bit_exact() {
+    use ptxasw::util::Rng;
+    use std::io::{Read as _, Write as _};
+    use std::os::unix::net::UnixStream;
+
+    let dir = tmpdir("sockrace");
+    let opts = ServeOpts {
+        allow_test_faults: true,
+        ..ServeOpts::default()
+    };
+
+    let zero_deadline = Json::obj(vec![
+        ("id", Json::num(93.0)),
+        ("cmd", Json::str("asm")),
+        ("ptx", Json::str(STENCIL)),
+        ("deadline_ms", Json::num(0.0)),
+    ])
+    .render();
+    let poison = [
+        r#"{"id":90,"cmd":"asm","ptx":"garbage that is not ptx"}"#.to_string(),
+        r#"{"id":91,"cmd":"__panic"}"#.to_string(),
+        asm_req(92, &forky(10)),
+        zero_deadline,
+    ];
+    let mut rng = Rng::new(0xC0FFEE);
+    let batches: Vec<Vec<String>> = (0..4u64)
+        .map(|c| {
+            let mut lines = vec![asm_req(c * 10, STENCIL)];
+            let mut pool: Vec<String> = poison.to_vec();
+            while !pool.is_empty() {
+                let i = rng.below(pool.len() as u64) as usize;
+                lines.push(pool.remove(i));
+                lines.push(asm_req(c * 10 + lines.len() as u64, STENCIL));
+            }
+            lines
+        })
+        .collect();
+
+    // serial ground truth per batch: a fresh session, no store
+    let expected: Vec<String> = batches
+        .iter()
+        .map(|lines| {
+            let mut s = ServeSession::new(opts, None);
+            let mut out = Vec::new();
+            s.serve(std::io::Cursor::new(lines.join("\n")), &mut out)
+                .unwrap();
+            String::from_utf8(out).unwrap()
+        })
+        .collect();
+
+    // cold phase over an empty cache dir, warm phase over the same dir
+    for phase in ["cold", "warm"] {
+        let sock = std::env::temp_dir().join(format!(
+            "ptxasw-sockrace-{phase}-{}.sock",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&sock);
+        let store = Arc::new(DiskStore::open(&dir, DEFAULT_MAX_BYTES).unwrap());
+        let mut session = ServeSession::new(opts, Some(store));
+        let spath = sock.clone();
+        let server = std::thread::spawn(move || {
+            ptxasw::pipeline::serve::serve_unix(&mut session, &spath).unwrap();
+            session
+        });
+        for _ in 0..500 {
+            if sock.exists() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+
+        let got: Vec<String> = std::thread::scope(|scope| {
+            let handles: Vec<_> = batches
+                .iter()
+                .map(|lines| {
+                    let sock = sock.clone();
+                    scope.spawn(move || {
+                        let mut stream = UnixStream::connect(&sock).expect("connect");
+                        stream.write_all(lines.join("\n").as_bytes()).unwrap();
+                        stream.write_all(b"\n").unwrap();
+                        stream.shutdown(std::net::Shutdown::Write).unwrap();
+                        let mut buf = String::new();
+                        stream.read_to_string(&mut buf).unwrap();
+                        buf
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (c, (g, e)) in got.iter().zip(&expected).enumerate() {
+            assert_eq!(
+                g, e,
+                "{phase}: connection {c}'s responses diverged from its serial run"
+            );
+        }
+
+        // stop the listener and fold the workers' stats back
+        let mut bye = UnixStream::connect(&sock).unwrap();
+        bye.write_all(b"{\"cmd\":\"shutdown\"}\n").unwrap();
+        bye.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut resp = String::new();
+        bye.read_to_string(&mut resp).unwrap();
+        assert!(resp.contains("shutdown"), "{phase}: got {resp:?}");
+        let session = server.join().unwrap();
+        let stats = session.stats();
+        let total: u64 = batches.iter().map(|b| b.len() as u64).sum::<u64>() + 1;
+        assert_eq!(
+            stats.requests, total,
+            "{phase}: every worker's counters fold into the root session"
+        );
+        assert_eq!(
+            stats.panicked, 4,
+            "{phase}: one injected panic per connection"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Two store handles over one directory (the stand-in for two serve
+/// processes) racing stores and evictions while the Vfs seam injects
+/// removal and touch-marker failures. Both handles must stay usable and
+/// a clean reopen must see a coherent store whose rebuilt index agrees
+/// with the ground-truth directory walk.
+#[test]
+fn faulted_eviction_race_between_two_sessions_keeps_the_store_coherent() {
+    use ptxasw::pipeline::{KeyBuilder, StoreKind};
+    use ptxasw::util::{FaultFs, FaultKind, FaultOp, FaultRule};
+
+    let dir = tmpdir("evictrace");
+    let fs = FaultFs::real();
+    // the bound admits ~13 of the 900-byte artifacts, so the two writers
+    // below trip evictions constantly; every few removals/touches fail
+    let rules: Vec<FaultRule> = (0..40)
+        .map(|i| FaultRule {
+            op: FaultOp::Remove,
+            nth: i * 5,
+            kind: FaultKind::Error,
+        })
+        .chain((0..40).map(|i| FaultRule {
+            op: FaultOp::Touch,
+            nth: i * 7,
+            kind: FaultKind::Error,
+        }))
+        .collect();
+    let a = Arc::new(DiskStore::open_on(fs.clone(), &dir, 12_000).unwrap());
+    let b = Arc::new(DiskStore::open_on(fs.clone(), &dir, 12_000).unwrap());
+    fs.push_rules(&rules);
+    fs.arm(true);
+    std::thread::scope(|s| {
+        for (t, store) in [(0u64, &a), (1, &b)] {
+            s.spawn(move || {
+                for i in 0..50u64 {
+                    let key = KeyBuilder::new("evict-race").u64(t).u64(i).finish();
+                    let payload = vec![(i % 251) as u8; 900];
+                    store.store(StoreKind::Validated, key, &payload);
+                }
+            });
+        }
+    });
+    fs.arm(false);
+    assert!(fs.injected() > 0, "the race must actually have been faulted");
+
+    // both handles remain usable after the storm...
+    let k = KeyBuilder::new("evict-race").u64(99).u64(99).finish();
+    a.store(StoreKind::Validated, k, b"alive");
+    assert_eq!(
+        b.load(StoreKind::Validated, k).as_deref(),
+        Some(&b"alive"[..]),
+        "a store written by one session must be readable by the other"
+    );
+
+    // ...and a clean reopen heals any index drift the faulted removals
+    // left behind: the rebuilt index agrees with the full scan
+    let clean = DiskStore::open(&dir, 1 << 20).unwrap();
+    let check = clean.verify(false);
+    assert!(
+        check.index_mismatch.is_empty(),
+        "index must agree with the directory walk after the race: {:?}",
+        check.index_mismatch
+    );
+    // ~92k bytes were written against a 12k bound; eviction must have
+    // kept running through the faults (cross-handle index drift between
+    // resyncs allows a modest overshoot, never an unbounded one)
+    assert!(
+        check.total_bytes <= 24_000,
+        "eviction kept running through the faults (resident {} bytes)",
+        check.total_bytes
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Shared-memory benchmarks (cooperative scheduler, bar.sync) are
 /// addressable through serve too — the session multiplexes both kernel
 /// families onto one warm pipeline.
